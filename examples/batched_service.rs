@@ -1,0 +1,106 @@
+//! End-to-end driver (DESIGN.md §4, experiment E2E): the coordinator
+//! serving a realistic trace of small-GEMM requests through real PJRT
+//! artifacts, reporting throughput, latency percentiles and numerical
+//! error — the full L3 -> runtime -> (AOT L2/L1) stack under load.
+//!
+//! The workload is the paper's §IV-B scenario: many independent 16x16
+//! multiplications (spectral-element style) arriving as a Poisson stream,
+//! plus a sprinkle of large GEMMs, exactly the mix the router/batcher
+//! are built for.
+//!
+//! Run: `make artifacts && cargo run --release --example batched_service`
+//! (results recorded in EXPERIMENTS.md §E2E)
+
+use std::time::{Duration, Instant};
+
+use tensoremu::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, GemmRequest};
+use tensoremu::coordinator::request::ServedBy;
+use tensoremu::gemm::mixed_gemm;
+use tensoremu::workload::{uniform_matrix, RequestTrace, Rng, TraceSpec};
+
+fn main() -> anyhow::Result<()> {
+    let requests: usize = std::env::var("E2E_REQUESTS").ok().and_then(|s| s.parse().ok()).unwrap_or(4000);
+    let rate: f64 = std::env::var("E2E_RATE").ok().and_then(|s| s.parse().ok()).unwrap_or(20_000.0);
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_millis(1) },
+        ..Default::default()
+    })?;
+
+    // trace: 98% 16x16 tile GEMMs, 2% 512x512
+    let mut rng = Rng::new(7);
+    let spec = TraceSpec {
+        rate,
+        count: requests,
+        tile: 16,
+        large_fraction: 0.02,
+        large_n: 512,
+        scale: 1.0,
+    };
+    let trace = RequestTrace::generate(&mut rng, spec);
+    print!("warming artifact caches... ");
+    let tw = Instant::now();
+    coord.warmup()?;
+    println!("done in {:.2?}", tw.elapsed());
+    println!(
+        "E2E: {} requests, Poisson ~{:.0} req/s, {:.1}% large ({}x{})",
+        requests,
+        trace.observed_rate(),
+        spec.large_fraction * 100.0,
+        spec.large_n,
+        spec.large_n
+    );
+
+    // generate inputs up front so generation time doesn't pollute serving
+    let mut inputs = Vec::with_capacity(requests);
+    for ev in &trace.events {
+        inputs.push((
+            uniform_matrix(&mut rng, ev.n, ev.n, -1.0, 1.0),
+            uniform_matrix(&mut rng, ev.n, ev.n, -1.0, 1.0),
+        ));
+    }
+
+    // replay with arrival pacing
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(requests);
+    for (ev, (a, b)) in trace.events.iter().zip(&inputs) {
+        if let Some(sleep) = Duration::from_secs_f64(ev.at).checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        rxs.push(coord.submit(GemmRequest::new(0, a.clone(), b.clone())));
+    }
+
+    // collect + spot-check numerics on a sample
+    let mut ok = 0usize;
+    let mut batched = 0usize;
+    let mut max_err = 0f32;
+    for (i, (rx, (a, b))) in rxs.into_iter().zip(&inputs).enumerate() {
+        let resp = rx.recv()??;
+        ok += 1;
+        if resp.served_by == ServedBy::BatchedTensorCore {
+            batched += 1;
+        }
+        if i % 97 == 0 {
+            let want = mixed_gemm(a, b, None, 1.0, 0.0);
+            max_err = max_err.max(resp.c.max_norm_diff(&want));
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics().snapshot();
+
+    println!("\n--- E2E report ---");
+    println!("served        : {ok}/{requests} in {wall:.2?}");
+    println!("throughput    : {:.0} responses/s", ok as f64 / wall.as_secs_f64());
+    println!("batched       : {batched} requests over {} flushes (avg {:.0}/flush)",
+             snap.flushes, batched as f64 / snap.flushes.max(1) as f64);
+    println!("latency       : p50 {:?}  p99 {:?}  max {:?}", snap.p50, snap.p99, snap.max);
+    println!("pad overhead  : {} zero slots", snap.padded_slots);
+    println!("spot-check err: ||e||_max = {max_err:.3e} vs rust emulation (must be ~1e-6)");
+    println!("metrics       : {}", snap.report());
+
+    anyhow::ensure!(ok == requests, "dropped requests");
+    anyhow::ensure!(max_err < 1e-4, "numerical mismatch on the serving path");
+    println!("\nE2E OK");
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! The paper's §V/§VII-B precision study end-to-end on real executions:
+//! error growth with N (Fig. 8), the input-range effect (the ±16
+//! example), and the cost/precision trade-off summary (Fig. 9's story),
+//! all through the PJRT error-probe artifacts.
+//!
+//! Run: `make artifacts && cargo run --release --example precision_refinement`
+
+use tensoremu::figures::{ablations, fig8};
+use tensoremu::precision::bounds::{mixed_gemm_error_bound, mixed_gemm_error_rms_estimate};
+use tensoremu::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let mut engine = Engine::discover()?;
+
+    // Fig. 8 on real executions
+    let f8 = fig8::compute(&mut engine, 3, -1.0, 1.0, 1234)?;
+    println!("{}", fig8::render(&f8));
+
+    // measured vs analytic error model: the measurement must sit between
+    // the RMS estimate and the worst-case bound at every size
+    println!("error-model check (U[-1,1), no refinement):");
+    println!("{:>6} {:>14} {:>14} {:>14}", "N", "rms estimate", "measured", "worst case");
+    for row in f8.rows.iter().filter(|r| !r.extrapolated) {
+        let rms = mixed_gemm_error_rms_estimate(row.n, row.n, 1.0);
+        let wc = mixed_gemm_error_bound(row.n, 1.0);
+        println!("{:>6} {:>14.3e} {:>14.3e} {:>14.3e}", row.n, rms, row.none, wc);
+        anyhow::ensure!(row.none <= wc, "measurement above the worst-case bound!");
+        anyhow::ensure!(row.none >= rms * 0.1, "measurement implausibly small");
+    }
+
+    // the ±16 input-range study (the 35x headline)
+    println!();
+    println!("{}", ablations::input_range_study(&mut engine, 99)?);
+
+    // pipeline variants (fused vs pipelined vs f16 hand-off)
+    println!("{}", ablations::pipeline_study(&mut engine, 99)?);
+
+    println!("precision_refinement OK");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Quickstart: the three layers in one page.
+//!
+//! 1. L1/L2 were AOT-compiled by `make artifacts` (JAX + Pallas -> HLO
+//!    text); 2. this binary loads the artifact through PJRT and runs a
+//!    mixed-precision GEMM; 3. the result is checked against the crate's
+//!    bit-exact Tensor Core emulation and the refinement levels are
+//!    demonstrated.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use tensoremu::gemm::{dgemm_naive, mixed_gemm};
+use tensoremu::precision::{refine_gemm, RefineMode};
+use tensoremu::runtime::{Engine, TensorData};
+use tensoremu::workload::{uniform_matrix, Rng};
+
+fn main() -> anyhow::Result<()> {
+    // --- load + execute an AOT artifact (no Python on this path)
+    let mut engine = Engine::discover()?;
+    println!("PJRT platform: {}", engine.platform());
+
+    let n = 256;
+    let mut rng = Rng::new(2024);
+    let a = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+
+    let artifact = engine.manifest().gemm("mixed", n).unwrap().name.clone();
+    println!("running artifact {artifact} ({n}x{n} mixed-precision GEMM)...");
+    let c = engine
+        .run(&artifact, &[TensorData::from_matrix(&a), TensorData::from_matrix(&b)])?
+        .into_matrix()?;
+
+    // --- cross-check against the bit-exact Rust emulation
+    let emulated = mixed_gemm(&a, &b, None, 1.0, 0.0);
+    println!(
+        "artifact vs rust emulation: ||diff||_max = {:.3e}",
+        c.max_norm_diff(&emulated)
+    );
+
+    // --- the paper's precision story in three lines
+    let truth = dgemm_naive(&a, &b);
+    for mode in RefineMode::ALL {
+        let err = refine_gemm(&a, &b, mode).max_norm_diff(&truth);
+        println!(
+            "{:<10} ({} Tensor-Core GEMM{}): ||e||_max = {:.3e}",
+            mode.to_string(),
+            mode.gemm_count(),
+            if mode.gemm_count() > 1 { "s" } else { " " },
+            err
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

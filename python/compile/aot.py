@@ -1,0 +1,98 @@
+"""AOT pipeline: lower every L2 variant to HLO *text* + manifest.json.
+
+HLO text (NOT ``lowered.compile().serialize()`` and NOT a serialized
+HloModuleProto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids, which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Usage (from python/):  python -m compile.aot --outdir ../artifacts [--large]
+
+Incremental: a variant is re-lowered only if its HLO file is missing or
+any compile-path source is newer (Makefile handles the coarse check; we
+also skip per-file here so partial rebuilds are cheap).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_variant(v: model.Variant) -> str:
+    return to_hlo_text(jax.jit(v.fn).lower(*v.example_args))
+
+
+def build(outdir: str, large: bool = False, force: bool = False,
+          only: str | None = None) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    variants = model.default_variants(large=large)
+    if only:
+        variants = [v for v in variants if only in v.name]
+        if not variants:
+            raise SystemExit(f"--only {only!r} matched no variants")
+
+    manifest = {"version": 1, "generated_unix": int(time.time()),
+                "artifacts": []}
+    for v in variants:
+        path = os.path.join(outdir, f"{v.name}.hlo.txt")
+        entry = dict(v.meta)
+        entry["name"] = v.name
+        entry["file"] = os.path.basename(path)
+        manifest["artifacts"].append(entry)
+        if not force and os.path.exists(path) and os.path.getsize(path) > 0:
+            print(f"  [skip] {v.name}")
+            continue
+        t0 = time.time()
+        text = lower_variant(v)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [lower] {v.name}: {len(text)} chars in {time.time()-t0:.1f}s")
+
+    mpath = os.path.join(outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main(argv: list[str] | None = None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--outdir", default="../artifacts")
+    p.add_argument("--out", default=None,
+                   help="also touch this path (Makefile stamp compat)")
+    p.add_argument("--large", action="store_true",
+                   help="include the N=4096 artifacts (slow to execute)")
+    p.add_argument("--force", action="store_true", help="re-lower everything")
+    p.add_argument("--only", default=None,
+                   help="substring filter on variant names")
+    args = p.parse_args(argv)
+    build(args.outdir, large=args.large, force=args.force, only=args.only)
+    if args.out:
+        # Makefile uses artifacts/model.hlo.txt as its stamp; keep it valid
+        # by pointing it at the smallest gemm artifact.
+        src = os.path.join(args.outdir, "gemm_mixed_n64_pallas.hlo.txt")
+        if os.path.exists(src) and os.path.abspath(src) != os.path.abspath(args.out):
+            with open(src) as fsrc, open(args.out, "w") as fdst:
+                fdst.write(fsrc.read())
+
+
+if __name__ == "__main__":
+    main()

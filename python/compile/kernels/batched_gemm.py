@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: batched small-matrix mixed-precision GEMM.
+
+The paper (§IV-B, §VI) hand-writes a batched 16x16 GEMM on top of WMMA
+because cuBLAS had no Tensor-Core batched GEMM at the time: one warp per
+16x16 multiply, 512 threads/block => 16 multiplies per thread block.
+
+Pallas rethink: the grid iterates over *groups* of matrices; each grid
+cell owns a (group, 16, 16) block — the analog of one thread block's 16
+warps — and performs the whole group's MMAs from VMEM.  Tiles are f16 in,
+f32 accumulate (see kernels/ref.py for the exactness argument).
+
+Matrices are square ``tile`` x ``tile`` (16 in the paper; parameterized so
+the spectral-element workloads in rust/src/workload/spectral.rs can use
+8..32).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 16 matrices per grid cell = the paper's 512-thread block (16 warps).
+DEFAULT_GROUP = 16
+
+
+def _batched_kernel(a_ref, b_ref, o_ref):
+    """One grid step: o[g] = f32(a[g]) @ f32(b[g]) for g in the group."""
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    # Batched MMA over the leading (group) axis; f32 accumulate.
+    o_ref[...] = jax.lax.dot_general(
+        a, b,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _validate(batch: int, group: int) -> None:
+    if batch % group:
+        raise ValueError(f"batch {batch} must be divisible by group {group}")
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def batched_wmma_gemm(a_half: jnp.ndarray, b_half: jnp.ndarray, *,
+                      group: int = DEFAULT_GROUP) -> jnp.ndarray:
+    """(batch, t, t) f16 x (batch, t, t) f16 -> (batch, t, t) f32."""
+    batch, t, t2 = a_half.shape
+    assert t == t2 and a_half.shape == b_half.shape
+    assert a_half.dtype == jnp.float16 and b_half.dtype == jnp.float16
+    _validate(batch, group)
+
+    return pl.pallas_call(
+        _batched_kernel,
+        grid=(batch // group,),
+        in_specs=[
+            pl.BlockSpec((group, t, t), lambda i: (i, 0, 0)),
+            pl.BlockSpec((group, t, t), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((group, t, t), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, t, t), jnp.float32),
+        interpret=True,
+    )(a_half, b_half)
+
+
+def batched_wmma_gemm_f32in(a: jnp.ndarray, b: jnp.ndarray, *,
+                            group: int = DEFAULT_GROUP) -> jnp.ndarray:
+    """Paper protocol wrapper: f32 inputs rounded to f16 in-graph."""
+    return batched_wmma_gemm(a.astype(jnp.float16), b.astype(jnp.float16),
+                             group=group)

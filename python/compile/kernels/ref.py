@@ -1,0 +1,145 @@
+"""Pure-jnp correctness oracles for the Tensor Core emulation kernels.
+
+These are the ground-truth definitions of every numerical contract in the
+library; the Pallas kernels (wmma_gemm.py, batched_gemm.py) and the Rust
+CPU emulation (rust/src/gemm/mixed.rs, rust/src/tcemu/) are all tested
+against these functions.
+
+The key numerical fact (DESIGN.md §1): an f16*f16 product is exactly
+representable in f32 (11-bit significands -> <=22-bit product), and the
+NVIDIA Tensor Core accumulates those exact products in f32.  Hence
+``round_f16(A) x round_f16(B)`` with f32 accumulation is bit-equivalent to
+the hardware MMA up to accumulation order, and the emulation below *is*
+the Tensor Core semantics, not an approximation of it.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def round_to_half(x: jnp.ndarray) -> jnp.ndarray:
+    """f32 -> f16 with IEEE round-to-nearest-even (the rounding the paper's
+    protocol applies to A and B before the Tensor Core GEMM)."""
+    return x.astype(jnp.float16)
+
+
+def residual(x: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 1 of the paper: R = x_single - x_half, held in half precision.
+
+    For inputs in the paper's ranges (U[-1,1], U[-16,16]) the residual is
+    exactly representable in f16 (the rounding error of a value with a
+    10-bit significand is below half an ulp, which itself fits in f16's
+    range); tests quantify the double-rounding leak outside those ranges.
+    """
+    return (x - x.astype(jnp.float16).astype(jnp.float32)).astype(jnp.float16)
+
+
+def tensor_core_gemm(a_half: jnp.ndarray, b_half: jnp.ndarray,
+                     c: jnp.ndarray | None = None,
+                     alpha: float = 1.0, beta: float = 1.0) -> jnp.ndarray:
+    """Mixed-precision GEMM with Tensor Core semantics.
+
+    ``C = alpha * (A_h x B_h) + beta * C`` where A_h, B_h are f16 and the
+    multiply-accumulate runs in f32.  Inputs must already be f16 (use
+    round_to_half); output is f32.
+    """
+    assert a_half.dtype == jnp.float16 and b_half.dtype == jnp.float16
+    prod = jnp.matmul(a_half.astype(jnp.float32), b_half.astype(jnp.float32))
+    if c is None:
+        return alpha * prod
+    return alpha * prod + beta * c.astype(jnp.float32)
+
+
+def mixed_gemm(a: jnp.ndarray, b: jnp.ndarray,
+               c: jnp.ndarray | None = None,
+               alpha: float = 1.0, beta: float = 1.0) -> jnp.ndarray:
+    """The paper's measurement protocol: f32 inputs, rounded to f16 in-graph,
+    then Tensor Core GEMM (rounding time excluded from the paper's timing;
+    here it is simply part of the graph)."""
+    return tensor_core_gemm(round_to_half(a), round_to_half(b), c, alpha, beta)
+
+
+def sgemm(a: jnp.ndarray, b: jnp.ndarray,
+          c: jnp.ndarray | None = None,
+          alpha: float = 1.0, beta: float = 1.0) -> jnp.ndarray:
+    """Full single-precision baseline (the paper's CUDA-core sgemm)."""
+    prod = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    if c is None:
+        return alpha * prod
+    return alpha * prod + beta * c
+
+
+def refine_a_gemm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 2: A_single B_half ~= R_A B_h + A_h B_h  (2 Tensor Core GEMMs)."""
+    a_h, b_h = round_to_half(a), round_to_half(b)
+    r_a = residual(a)
+    return tensor_core_gemm(r_a, b_h) + tensor_core_gemm(a_h, b_h)
+
+
+def refine_ab_gemm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 3: A B ~= R_A R_B + A_h R_B + R_A B_h + A_h B_h  (4 TC GEMMs)."""
+    a_h, b_h = round_to_half(a), round_to_half(b)
+    r_a, r_b = residual(a), residual(b)
+    return (tensor_core_gemm(r_a, r_b)
+            + tensor_core_gemm(a_h, r_b)
+            + tensor_core_gemm(r_a, b_h)
+            + tensor_core_gemm(a_h, b_h))
+
+
+def refine_a_gemm_paper(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 2 as the paper's Fig. 5 pipeline actually ran it: 'the result of
+    a GEMM is used as half precision input for the next GEMM' — i.e. every
+    chained cuBLAS GEMM writes C in *half* precision (CUDA_R_16F output),
+    including the last one.  The f16 output floor — half an ulp at the
+    magnitude of C's entries — is what limits the measured gain to ~30%
+    (R_A) and ~10x (R_A+R_B) at N=8192 in Figs. 8-9; the exact-f32-chaining
+    variants above are the 'optimized versions are possible' the paper
+    alludes to (§VII-B).
+
+    We model the hand-off as f16 on every *intermediate* C (the text is
+    explicit that GEMM results re-enter as half-precision input) with the
+    final GEMM writing f32; the paper's ±16/N=4096 datapoint (8.32 -> 0.24
+    after refinement) rules out an f16 *final* output, whose rounding floor
+    alone would be ~8 there.  EXPERIMENTS.md §F8 quantifies how our
+    improvement factors compare with the paper's under this model."""
+    a_h, b_h = round_to_half(a), round_to_half(b)
+    r_a = residual(a)
+    c = tensor_core_gemm(r_a, b_h).astype(jnp.float16)
+    return tensor_core_gemm(a_h, b_h, c=c)
+
+
+def refine_ab_gemm_paper(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 3 via four pipelined GEMMs with f16 hand-off (Fig. 5); see
+    refine_a_gemm_paper for the hand-off model."""
+    a_h, b_h = round_to_half(a), round_to_half(b)
+    r_a, r_b = residual(a), residual(b)
+    c = tensor_core_gemm(r_a, r_b).astype(jnp.float16)
+    c = tensor_core_gemm(a_h, r_b, c=c).astype(jnp.float16)
+    c = tensor_core_gemm(r_a, b_h, c=c).astype(jnp.float16)
+    return tensor_core_gemm(a_h, b_h, c=c)
+
+
+def batched_tensor_core_gemm(a_half: jnp.ndarray, b_half: jnp.ndarray) -> jnp.ndarray:
+    """Batched 16x16 (or any square tile) mixed-precision GEMM.
+
+    a_half, b_half: (batch, n, n) f16; returns (batch, n, n) f32.  This is
+    the oracle for the paper's hand-written batched WMMA GEMM (§IV-B).
+    """
+    assert a_half.dtype == jnp.float16 and b_half.dtype == jnp.float16
+    return jnp.einsum(
+        "bij,bjk->bik",
+        a_half.astype(jnp.float32),
+        b_half.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def batched_mixed_gemm(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """f32-in batched mixed GEMM (rounding in-graph)."""
+    return batched_tensor_core_gemm(round_to_half(a), round_to_half(b))
+
+
+def max_norm_error(c_test: jnp.ndarray, c_ref: jnp.ndarray) -> jnp.ndarray:
+    """The paper's figure of merit for precision: ||e||_Max = max |e_ij|."""
+    return jnp.max(jnp.abs(c_test.astype(jnp.float32) - c_ref.astype(jnp.float32)))

@@ -1,0 +1,126 @@
+"""L1: precision-refinement kernels (paper §V, Eqs. 1-3, Fig. 5).
+
+The refinement decomposes a single-precision GEMM into Tensor-Core GEMMs
+on the rounded halves plus residual halves:
+
+    R_A = A_f32 - f16(A_f32)                      (Eq. 1, held in f16)
+    A B ~= R_A B_h + A_h B_h                      (Eq. 2, 2 GEMMs)
+    A B ~= R_A R_B + A_h R_B + R_A B_h + A_h B_h  (Eq. 3, 4 GEMMs)
+
+Two implementations are provided:
+
+* ``refine_*_pipelined`` — the paper's Fig. 5 structure: independent GEMM
+  calls whose f32 partial results are summed afterwards.  This mirrors the
+  author's "quick implementation based on four cuBLAS function calls" and
+  is what the cost measurements in Fig. 9 time.
+* ``refine_ab_fused``  — a fused Pallas kernel performing all four block
+  products per grid step against one f32 accumulator.  This is the
+  "optimized versions of such techniques are possible" extension the paper
+  points at (§VII-B): one pass over the data, 4x the MMA work, no
+  intermediate C traffic.  Bench A4 (ablation `pipeline`) quantifies it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .wmma_gemm import DEFAULT_BM, DEFAULT_BN, DEFAULT_BK, _validate, wmma_gemm
+
+
+def split_residual(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """f32 -> (x_half, r) with x ~= f32(x_half) + f32(r); both f16 (Eq. 1)."""
+    x_half = x.astype(jnp.float16)
+    r = (x - x_half.astype(jnp.float32)).astype(jnp.float16)
+    return x_half, r
+
+
+def refine_a_pipelined(a: jnp.ndarray, b: jnp.ndarray, *,
+                       bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                       bk: int = DEFAULT_BK) -> jnp.ndarray:
+    """Eq. 2 with two pipelined Pallas WMMA GEMMs (Fig. 5, truncated)."""
+    a_h, r_a = split_residual(a)
+    b_h = b.astype(jnp.float16)
+    return (wmma_gemm(r_a, b_h, bm=bm, bn=bn, bk=bk)
+            + wmma_gemm(a_h, b_h, bm=bm, bn=bn, bk=bk))
+
+
+def refine_ab_pipelined(a: jnp.ndarray, b: jnp.ndarray, *,
+                        bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                        bk: int = DEFAULT_BK) -> jnp.ndarray:
+    """Eq. 3 with four pipelined Pallas WMMA GEMMs (Fig. 5)."""
+    a_h, r_a = split_residual(a)
+    b_h, r_b = split_residual(b)
+    g = functools.partial(wmma_gemm, bm=bm, bn=bn, bk=bk)
+    return g(r_a, r_b) + g(a_h, r_b) + g(r_a, b_h) + g(a_h, b_h)
+
+
+def _fused_refine_kernel(ah_ref, ra_ref, bh_ref, rb_ref, o_ref, acc_ref):
+    """One (i, j, k) step of the fused Eq. 3 kernel: the accumulator takes
+    all four block products before moving to the next K panel."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ah = ah_ref[...].astype(jnp.float32)
+    ra = ra_ref[...].astype(jnp.float32)
+    bh = bh_ref[...].astype(jnp.float32)
+    rb = rb_ref[...].astype(jnp.float32)
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    acc_ref[...] += dot(ra, rb) + dot(ah, rb) + dot(ra, bh) + dot(ah, bh)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def refine_ab_fused(a: jnp.ndarray, b: jnp.ndarray, *,
+                    bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                    bk: int = DEFAULT_BK) -> jnp.ndarray:
+    """Fused Eq. 3: one grid pass, four MMAs per step, one accumulator."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    _validate(m, n, k, bm, bn, bk)
+    a_h, r_a = split_residual(a)
+    b_h, r_b = split_residual(b)
+
+    a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    return pl.pallas_call(
+        _fused_refine_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[a_spec, a_spec, b_spec, b_spec],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pl.MemorySpace.ANY((bm, bn), jnp.float32)],
+        interpret=True,
+    )(a_h, r_a, b_h, r_b)
+
+
+def error_vs_refinement(a: jnp.ndarray, b: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    """Convenience oracle used by tests and the AOT error-probe artifact:
+    max-norm error of each refinement level against full sgemm.
+
+    The ``*_paper`` entries chain the pipelined GEMMs through f16 hand-off
+    exactly as the paper's Fig. 5 implementation did (see ref.py); they are
+    the quantities Figs. 8-9 plot.  The exact-f32 entries are the optimized
+    variant the paper leaves as future work.
+    """
+    c_single = ref.sgemm(a, b)
+    return {
+        "none": ref.max_norm_error(ref.mixed_gemm(a, b), c_single),
+        "refine_a": ref.max_norm_error(ref.refine_a_gemm(a, b), c_single),
+        "refine_ab": ref.max_norm_error(ref.refine_ab_gemm(a, b), c_single),
+        "refine_a_paper": ref.max_norm_error(
+            ref.refine_a_gemm_paper(a, b), c_single),
+        "refine_ab_paper": ref.max_norm_error(
+            ref.refine_ab_gemm_paper(a, b), c_single),
+    }

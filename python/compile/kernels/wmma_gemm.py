@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: tiled mixed-precision GEMM with Tensor Core semantics.
+
+This is the TPU-side rethink of the paper's CUDA 9 WMMA tiled GEMM
+(Listing 1 + §IV-A "Tiled Matrix Multiply with CUDA 9 WMMA"):
+
+  CUDA concept                      Pallas concept (here)
+  --------------------------------  -------------------------------------
+  warp owns a 16x16x16 MMA          grid cell owns a (bm, bn) output block
+  accumulator fragment (f32 regs)   f32 VMEM scratch accumulator
+  load_matrix_sync (global->frag)   BlockSpec index_map (HBM->VMEM)
+  K-loop software pipeline          grid dimension 2 over K blocks
+  store_matrix_sync                 o_ref[...] writeback at last K step
+  mma_sync(Cf32, Af16, Bf16, Cf32)  astype(f32) dot on f16 blocks + f32 +=
+
+Mixed precision contract: inputs arrive f16 (the L2 model rounds f32->f16
+in-graph); products are taken after .astype(f32), which is *exact* for
+f16 values (22-bit products fit f32), and accumulation is f32 — the same
+contract as wmma::mma_sync.  See kernels/ref.py for why this is
+bit-equivalent to the hardware up to accumulation order.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md); real-TPU perf is estimated
+from VMEM footprint + MXU utilization in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# WMMA's native fragment shape; the default block shapes are multiples of it,
+# mirroring how a CUDA thread block covers a C tile with several warps.
+FRAGMENT = 16
+
+# Default block shapes.  (bm, bn) is the C tile a "thread block" owns; bk is
+# the K-panel staged per grid step.  Chosen by the block-shape study in
+# EXPERIMENTS.md §Perf: VMEM footprint = (bm*bk + bk*bn)*2B + bm*bn*4B.
+DEFAULT_BM = 64
+DEFAULT_BN = 64
+DEFAULT_BK = 32
+
+
+def _mma_kernel(a_ref, b_ref, o_ref, acc_ref):
+    """One (i, j, k) grid step: acc += f32(A_blk) @ f32(B_blk).
+
+    a_ref: (bm, bk) f16 VMEM block, b_ref: (bk, bn) f16 VMEM block,
+    o_ref: (bm, bn) f32 output block, acc_ref: (bm, bn) f32 VMEM scratch.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero_acc():  # wmma::fill_fragment(Cmat, 0.0f)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # wmma::mma_sync: exact f16 products, f32 accumulate.
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _store():  # wmma::store_matrix_sync
+        o_ref[...] = acc_ref[...]
+
+
+def _validate(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> None:
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"matrix dims ({m},{n},{k}) must be divisible by block "
+            f"shape ({bm},{bn},{bk})")
+    if bm % FRAGMENT or bn % FRAGMENT or bk % FRAGMENT:
+        raise ValueError(
+            f"block shape ({bm},{bn},{bk}) must be a multiple of the "
+            f"{FRAGMENT}x{FRAGMENT} WMMA fragment")
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def wmma_gemm(a_half: jnp.ndarray, b_half: jnp.ndarray, *,
+              bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+              bk: int = DEFAULT_BK) -> jnp.ndarray:
+    """Tiled mixed-precision GEMM: (m,k) f16 x (k,n) f16 -> (m,n) f32."""
+    m, k = a_half.shape
+    k2, n = b_half.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert a_half.dtype == jnp.float16 and b_half.dtype == jnp.float16
+    _validate(m, n, k, bm, bn, bk)
+
+    return pl.pallas_call(
+        _mma_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pl.MemorySpace.ANY((bm, bn), jnp.float32)],
+        interpret=True,
+    )(a_half, b_half)
+
+
+def wmma_gemm_f32in(a: jnp.ndarray, b: jnp.ndarray, *,
+                    bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                    bk: int = DEFAULT_BK) -> jnp.ndarray:
+    """Paper protocol wrapper: f32 inputs rounded to f16 in-graph, then the
+    Pallas WMMA GEMM.  This is what the L2 model lowers for the 'pallas'
+    kernel mode."""
+    return wmma_gemm(a.astype(jnp.float16), b.astype(jnp.float16),
+                     bm=bm, bn=bn, bk=bk)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int) -> int:
+    """Estimated VMEM bytes held live per grid step: A panel + B panel in
+    f16, accumulator in f32 (double-buffered inputs would 2x the panels;
+    we report the single-buffered floor).  Used by the §Perf block study
+    and mirrored by rust/src/sim/kernels.rs."""
+    return (bm * bk + bk * bn) * 2 + bm * bn * 4
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int,
+                             mxu: int = 128) -> float:
+    """Fraction of an (mxu x mxu) systolic pass kept busy by one block step.
+
+    A (bm, bk) x (bk, bn) block matmul maps to ceil(bm/mxu)*ceil(bn/mxu)*
+    ceil(bk/mxu) MXU passes; utilization is the filled fraction of those
+    passes.  This is the structural estimate DESIGN.md §Perf records (no
+    TPU wallclock is available under interpret=True)."""
+    import math
+    passes = (math.ceil(bm / mxu) * math.ceil(bn / mxu) * math.ceil(bk / mxu))
+    return (bm * bn * bk) / (passes * mxu * mxu * mxu)

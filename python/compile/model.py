@@ -1,0 +1,169 @@
+"""L2: JAX compute graphs for every artifact the Rust runtime executes.
+
+Each *variant* is a jax function over f32 inputs (rounding to f16 happens
+in-graph, matching the paper's protocol where rounding is untimed) that
+calls the L1 kernels.  ``build_variant`` returns (fn, example_args) pairs
+that aot.py lowers to HLO text.
+
+Kernel modes
+------------
+``pallas``  — the L1 Pallas kernel (interpret=True) lowered into the HLO.
+              Used for sizes where the interpreter-grid overhead is sane
+              (N <= PALLAS_MAX_N, batch <= PALLAS_MAX_BATCH).
+``xla``     — the semantically identical pure-XLA emulation from ref.py.
+              pytest (python/tests/test_kernel.py) proves pallas == xla ==
+              ref to accumulation-order tolerance, so large-N artifacts
+              may use this mode without changing any reproduced number.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import refine as refine_k
+from .kernels import wmma_gemm as wmma_k
+from .kernels import batched_gemm as batched_k
+
+# Above these, pallas interpret-mode grids dominate runtime; switch to the
+# proven-equivalent XLA emulation (DESIGN.md §2).
+PALLAS_MAX_N = 512
+PALLAS_MAX_BATCH = 1024
+
+GEMM_OPS = ("sgemm", "mixed", "refine_a", "refine_ab")
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One AOT artifact: a named jax function plus its example inputs."""
+    name: str
+    fn: Callable
+    example_args: tuple
+    meta: dict
+
+
+def _spec(*shape: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _gemm_fn(op: str, kernel: str) -> Callable:
+    """Square-GEMM variant body; returns a 1-tuple (rust unwraps to_tuple1)."""
+    if op == "sgemm":
+        return lambda a, b: (ref.sgemm(a, b),)
+    if op == "mixed":
+        if kernel == "pallas":
+            return lambda a, b: (wmma_k.wmma_gemm_f32in(a, b),)
+        return lambda a, b: (ref.mixed_gemm(a, b),)
+    if op == "refine_a":
+        if kernel == "pallas":
+            return lambda a, b: (refine_k.refine_a_pipelined(a, b),)
+        return lambda a, b: (ref.refine_a_gemm(a, b),)
+    if op == "refine_ab":
+        if kernel == "pallas":
+            return lambda a, b: (refine_k.refine_ab_pipelined(a, b),)
+        return lambda a, b: (ref.refine_ab_gemm(a, b),)
+    raise ValueError(f"unknown gemm op {op!r}")
+
+
+def gemm_variant(op: str, n: int, kernel: str | None = None) -> Variant:
+    """C = op(A, B) for square f32 A, B of size n."""
+    if kernel is None:
+        kernel = "pallas" if n <= PALLAS_MAX_N else "xla"
+    if kernel == "pallas" and (n % wmma_k.DEFAULT_BM or n % wmma_k.DEFAULT_BK):
+        raise ValueError(f"n={n} not divisible by pallas block shape")
+    return Variant(
+        name=f"gemm_{op}_n{n}_{kernel}",
+        fn=_gemm_fn(op, kernel),
+        example_args=(_spec(n, n), _spec(n, n)),
+        meta={"kind": "gemm", "op": op, "n": n, "kernel": kernel,
+              "inputs": [[n, n], [n, n]], "outputs": [[n, n]]},
+    )
+
+
+def batched_variant(batch: int, tile: int = 16,
+                    kernel: str | None = None) -> Variant:
+    """Batched tile x tile mixed GEMM over a fixed batch size."""
+    if kernel is None:
+        kernel = "pallas" if batch <= PALLAS_MAX_BATCH else "xla"
+    if kernel == "pallas":
+        fn = lambda a, b: (batched_k.batched_wmma_gemm_f32in(a, b),)
+    else:
+        fn = lambda a, b: (ref.batched_mixed_gemm(a, b),)
+    return Variant(
+        name=f"batched_mixed_b{batch}_t{tile}_{kernel}",
+        fn=fn,
+        example_args=(_spec(batch, tile, tile), _spec(batch, tile, tile)),
+        meta={"kind": "batched", "op": "mixed", "batch": batch, "tile": tile,
+              "kernel": kernel,
+              "inputs": [[batch, tile, tile]] * 2,
+              "outputs": [[batch, tile, tile]]},
+    )
+
+
+def errprobe_variant(n: int) -> Variant:
+    """Fig. 8 probe: one graph returning five scalar max-norm errors
+    (none / refine_a / refine_ab exact-f32 / refine_a / refine_ab with the
+    paper's Fig. 5 f16 pipeline hand-off) vs full sgemm, so the Rust
+    harness moves only 5 floats per trial instead of whole matrices."""
+    def fn(a, b):
+        c_single = ref.sgemm(a, b)
+        e = [ref.max_norm_error(ref.mixed_gemm(a, b), c_single),
+             ref.max_norm_error(ref.refine_a_gemm(a, b), c_single),
+             ref.max_norm_error(ref.refine_ab_gemm(a, b), c_single),
+             ref.max_norm_error(ref.refine_a_gemm_paper(a, b), c_single),
+             ref.max_norm_error(ref.refine_ab_gemm_paper(a, b), c_single)]
+        return (jnp.stack(e),)
+    return Variant(
+        name=f"errprobe_n{n}",
+        fn=fn,
+        example_args=(_spec(n, n), _spec(n, n)),
+        meta={"kind": "errprobe", "n": n,
+              "inputs": [[n, n], [n, n]], "outputs": [[5]]},
+    )
+
+
+def fused_refine_variant(n: int) -> Variant:
+    """Ablation A4: the fused Eq. 3 Pallas kernel (one-pass refinement)."""
+    return Variant(
+        name=f"gemm_refine_ab_fused_n{n}_pallas",
+        fn=lambda a, b: (refine_k.refine_ab_fused(a, b),),
+        example_args=(_spec(n, n), _spec(n, n)),
+        meta={"kind": "gemm", "op": "refine_ab_fused", "n": n,
+              "kernel": "pallas",
+              "inputs": [[n, n], [n, n]], "outputs": [[n, n]]},
+    )
+
+
+# ---------------------------------------------------------------------------
+# The default artifact set `make artifacts` builds (DESIGN.md §4).
+
+GEMM_SIZES = (64, 128, 256, 512, 1024, 2048)
+GEMM_SIZES_LARGE = (4096,)          # --large only: minutes of CPU time
+BATCH_SIZES = (64, 256, 1024, 4096, 16384)
+ERRPROBE_SIZES = (128, 256, 512, 1024, 2048)
+FUSED_SIZES = (256,)
+
+
+def default_variants(large: bool = False) -> list[Variant]:
+    out: list[Variant] = []
+    sizes = GEMM_SIZES + (GEMM_SIZES_LARGE if large else ())
+    for n in sizes:
+        for op in GEMM_OPS:
+            # the fast XLA lowering for every size (what serving uses;
+            # interpret-mode pallas costs ~30x per grid step on CPU PJRT)
+            out.append(gemm_variant(op, n, kernel="xla"))
+            # the pallas lowering where the grid stays sane, for the
+            # cross-layer correctness tests ("sgemm" has no pallas path)
+            if op != "sgemm" and n <= PALLAS_MAX_N:
+                out.append(gemm_variant(op, n, kernel="pallas"))
+    for b in BATCH_SIZES:
+        out.append(batched_variant(b))
+    for n in ERRPROBE_SIZES:
+        out.append(errprobe_variant(n))
+    for n in FUSED_SIZES:
+        out.append(fused_refine_variant(n))
+    return out

@@ -1,0 +1,7 @@
+"""pytest rootdir marker; makes `compile` importable when running from
+python/ (Makefile does `cd python && pytest tests/ -q`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,89 @@
+"""Batched WMMA GEMM Pallas kernel vs oracle (paper §IV-B)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.batched_gemm import (
+    DEFAULT_GROUP,
+    batched_wmma_gemm,
+    batched_wmma_gemm_f32in,
+)
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _rand(key, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape,
+                              jnp.float32, lo, hi)
+
+
+class TestBatchedBasic:
+    def test_matches_ref_16x16(self):
+        a = _rand(0, (64, 16, 16)).astype(jnp.float16)
+        b = _rand(1, (64, 16, 16)).astype(jnp.float16)
+        got = batched_wmma_gemm(a, b)
+        want = ref.batched_tensor_core_gemm(a, b)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_group_is_paper_thread_block(self):
+        # 512 threads/block = 16 warps = 16 matrices per block (§VI)
+        assert DEFAULT_GROUP == 16
+
+    def test_single_group(self):
+        a = _rand(2, (16, 16, 16)).astype(jnp.float16)
+        b = _rand(3, (16, 16, 16)).astype(jnp.float16)
+        got = batched_wmma_gemm(a, b)
+        want = ref.batched_tensor_core_gemm(a, b)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_f32in_wrapper(self):
+        a, b = _rand(4, (32, 16, 16)), _rand(5, (32, 16, 16))
+        got = batched_wmma_gemm_f32in(a, b)
+        want = ref.batched_mixed_gemm(a, b)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_independent_batch_entries(self):
+        # batch entry i must only depend on inputs at i: zero one entry out
+        a = _rand(6, (32, 16, 16)).astype(jnp.float16)
+        b = _rand(7, (32, 16, 16)).astype(jnp.float16)
+        full = np.asarray(batched_wmma_gemm(a, b))
+        a0 = a.at[5].set(0.0)
+        zeroed = np.asarray(batched_wmma_gemm(a0, b))
+        assert np.all(zeroed[5] == 0.0)
+        np.testing.assert_array_equal(np.delete(zeroed, 5, 0),
+                                      np.delete(full, 5, 0))
+
+    def test_rejects_bad_group(self):
+        a = jnp.zeros((24, 16, 16), jnp.float16)
+        with pytest.raises(ValueError, match="divisible"):
+            batched_wmma_gemm(a, a)
+
+    def test_output_dtype(self):
+        a = jnp.zeros((16, 16, 16), jnp.float16)
+        assert batched_wmma_gemm(a, a).dtype == jnp.float32
+
+
+@hypothesis.settings(max_examples=15, deadline=None)
+@hypothesis.given(
+    groups=st.integers(1, 8),
+    tile=st.sampled_from([8, 16, 24, 32]),
+    group=st.sampled_from([4, 8, 16]),
+    lo_hi=st.sampled_from([(-1.0, 1.0), (-16.0, 16.0)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_batched_sweep(groups, tile, group, lo_hi, seed):
+    """Property sweep over batch size, tile size (spectral-element range
+    8..32) and grouping: pallas == ref."""
+    batch = groups * group
+    lo, hi = lo_hi
+    a = _rand(seed, (batch, tile, tile), lo, hi).astype(jnp.float16)
+    b = _rand(seed + 1, (batch, tile, tile), lo, hi).astype(jnp.float16)
+    got = batched_wmma_gemm(a, b, group=group)
+    want = ref.batched_tensor_core_gemm(a, b)
+    scale = max(1.0, abs(hi)) ** 2 * tile
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6 * scale)

@@ -1,0 +1,150 @@
+"""Pallas WMMA GEMM kernel vs the pure-jnp oracle — the CORE correctness
+signal of the L1 layer (DESIGN.md S10).
+
+Includes the hypothesis sweep over shapes/block-shapes required by the
+repro spec: any (m, n, k) divisible by the fragment, any legal block
+shape, inputs from the paper's ranges, must match ref.py to
+accumulation-order tolerance.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.wmma_gemm import (
+    FRAGMENT,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+    wmma_gemm,
+    wmma_gemm_f32in,
+)
+
+# Accumulation-order tolerance: products are exact, so pallas-vs-ref
+# differences come only from the order of f32 additions over K.
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _rand(key, shape, lo=-1.0, hi=1.0, dtype=jnp.float32):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, dtype, lo, hi)
+
+
+class TestWmmaGemmBasic:
+    def test_matches_ref_square(self):
+        a = _rand(0, (128, 128)).astype(jnp.float16)
+        b = _rand(1, (128, 128)).astype(jnp.float16)
+        got = wmma_gemm(a, b)
+        want = ref.tensor_core_gemm(a, b)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_matches_ref_rectangular(self):
+        a = _rand(2, (64, 192)).astype(jnp.float16)
+        b = _rand(3, (192, 128)).astype(jnp.float16)
+        got = wmma_gemm(a, b, bm=64, bn=64, bk=32)
+        want = ref.tensor_core_gemm(a, b)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_output_is_f32(self):
+        a = _rand(4, (64, 64)).astype(jnp.float16)
+        got = wmma_gemm(a, a)
+        assert got.dtype == jnp.float32
+
+    def test_f32in_wrapper_rounds_inputs(self):
+        a, b = _rand(5, (64, 64)), _rand(6, (64, 64))
+        got = wmma_gemm_f32in(a, b)
+        want = ref.mixed_gemm(a, b)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_identity(self):
+        eye = jnp.eye(64, dtype=jnp.float16)
+        a = _rand(7, (64, 64)).astype(jnp.float16)
+        np.testing.assert_allclose(wmma_gemm(a, eye),
+                                   a.astype(jnp.float32), **TOL)
+
+    def test_zeros(self):
+        z = jnp.zeros((64, 64), jnp.float16)
+        a = _rand(8, (64, 64)).astype(jnp.float16)
+        assert float(jnp.max(jnp.abs(wmma_gemm(a, z)))) == 0.0
+
+    def test_exact_small_integers(self):
+        # Integer-valued f16 inputs with small K: every product and sum is
+        # exact in f32, so the kernel must be bit-identical to the f64 result.
+        rng = np.random.default_rng(9)
+        a = rng.integers(-8, 8, (32, 32)).astype(np.float16)
+        b = rng.integers(-8, 8, (32, 32)).astype(np.float16)
+        got = np.asarray(wmma_gemm(jnp.asarray(a), jnp.asarray(b),
+                                   bm=16, bn=16, bk=16))
+        want = a.astype(np.float64) @ b.astype(np.float64)
+        np.testing.assert_array_equal(got.astype(np.float64), want)
+
+
+class TestWmmaGemmValidation:
+    def test_rejects_indivisible_dims(self):
+        a = jnp.zeros((65, 64), jnp.float16)
+        b = jnp.zeros((64, 64), jnp.float16)
+        with pytest.raises(ValueError, match="divisible"):
+            wmma_gemm(a, b)
+
+    def test_rejects_non_fragment_block(self):
+        a = jnp.zeros((96, 96), jnp.float16)
+        with pytest.raises(ValueError, match="fragment"):
+            wmma_gemm(a, a, bm=24, bn=24, bk=16)
+
+    def test_fragment_is_16(self):
+        # the WMMA warp tile the whole library is built around
+        assert FRAGMENT == 16
+
+
+class TestBlockShapeEstimates:
+    def test_vmem_footprint_formula(self):
+        # (64*32 + 32*64)*2B + 64*64*4B = 8192 + 16384
+        assert vmem_footprint_bytes(64, 64, 32) == 24576
+
+    def test_vmem_monotone_in_block(self):
+        assert (vmem_footprint_bytes(128, 128, 32)
+                > vmem_footprint_bytes(64, 64, 32))
+
+    def test_mxu_full_tiles(self):
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+
+    def test_mxu_partial_tiles_penalized(self):
+        assert mxu_utilization_estimate(64, 64, 32) < 0.5
+
+
+@hypothesis.settings(max_examples=20, deadline=None)
+@hypothesis.given(
+    mi=st.integers(1, 4), ni=st.integers(1, 4), ki=st.integers(1, 6),
+    bm_i=st.sampled_from([1, 2]), bk_i=st.sampled_from([1, 2]),
+    lo_hi=st.sampled_from([(-1.0, 1.0), (-16.0, 16.0), (0.0, 4.0)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shape_sweep(mi, ni, ki, bm_i, bk_i, lo_hi, seed):
+    """Property: for any fragment-divisible shape, legal block shape and
+    paper-range inputs, pallas == ref to accumulation-order tolerance."""
+    bm, bn, bk = 16 * bm_i, 16 * bm_i, 16 * bk_i
+    m, n, k = bm * mi, bn * ni, bk * ki
+    lo, hi = lo_hi
+    a = _rand(seed, (m, k), lo, hi).astype(jnp.float16)
+    b = _rand(seed + 1, (k, n), lo, hi).astype(jnp.float16)
+    got = wmma_gemm(a, b, bm=bm, bn=bn, bk=bk)
+    want = ref.tensor_core_gemm(a, b)
+    scale = max(1.0, abs(hi)) ** 2 * k
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6 * scale)
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_mixed_error_bounded(seed):
+    """The mixed-precision error against sgemm is bounded by the analytic
+    input-rounding bound: ||e||_max <= k * (eps_half * max|a|) * max|b| * 2
+    (each entry of the product of rounded matrices differs by at most the
+    sum of k cross terms)."""
+    k = 128
+    a, b = _rand(seed, (64, k)), _rand(seed + 1, (k, 64))
+    err = float(ref.max_norm_error(ref.mixed_gemm(a, b), ref.sgemm(a, b)))
+    eps_half = 2.0 ** -11  # half ulp of f16 for values in [-1, 1]... per §V
+    bound = 2.0 * k * eps_half + k * eps_half * eps_half
+    assert err <= bound

@@ -1,0 +1,129 @@
+"""L2 model variants + AOT lowering: shapes, manifest integrity, and the
+HLO-text round-trip contract the Rust runtime depends on."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def _rand(key, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape,
+                              jnp.float32, lo, hi)
+
+
+class TestVariants:
+    def test_gemm_variant_names_unique(self):
+        names = [v.name for v in model.default_variants()]
+        assert len(names) == len(set(names))
+
+    def test_gemm_ops_all_present(self):
+        variants = model.default_variants()
+        for op in model.GEMM_OPS:
+            assert any(v.meta.get("op") == op and v.meta["kind"] == "gemm"
+                       for v in variants)
+
+    def test_kernel_mode_cutover(self):
+        small = model.gemm_variant("mixed", 256)
+        large = model.gemm_variant("mixed", 2048)
+        assert small.meta["kernel"] == "pallas"
+        assert large.meta["kernel"] == "xla"
+
+    def test_pallas_and_xla_modes_agree(self):
+        """The cutover is sound only if both modes compute the same thing."""
+        n = 128
+        a, b = _rand(0, (n, n)), _rand(1, (n, n))
+        for op in model.GEMM_OPS:
+            vp = model.gemm_variant(op, n, kernel="pallas")
+            vx = model.gemm_variant(op, n, kernel="xla")
+            got_p = np.asarray(vp.fn(a, b)[0])
+            got_x = np.asarray(vx.fn(a, b)[0])
+            np.testing.assert_allclose(got_p, got_x, rtol=1e-5, atol=1e-5,
+                                       err_msg=f"op={op}")
+
+    def test_batched_modes_agree(self):
+        a, b = _rand(2, (64, 16, 16)), _rand(3, (64, 16, 16))
+        vp = model.batched_variant(64, kernel="pallas")
+        vx = model.batched_variant(64, kernel="xla")
+        np.testing.assert_allclose(np.asarray(vp.fn(a, b)[0]),
+                                   np.asarray(vx.fn(a, b)[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_errprobe_outputs_five_scalars(self):
+        v = model.errprobe_variant(128)
+        a, b = _rand(4, (128, 128)), _rand(5, (128, 128))
+        out = v.fn(a, b)[0]
+        assert out.shape == (5,)
+        e_none, e_a, e_ab, e_a_paper, e_ab_paper = [float(x) for x in out]
+        assert e_none > e_a > e_ab > 0.0
+        # paper-pipeline variants sit between no-refinement and exact
+        assert e_none > e_ab_paper >= e_ab
+        assert e_none > e_a_paper
+
+    def test_variant_meta_shapes_match_example_args(self):
+        for v in model.default_variants():
+            ins = v.meta["inputs"]
+            assert len(ins) == len(v.example_args)
+            for shape, spec in zip(ins, v.example_args):
+                assert tuple(shape) == tuple(spec.shape)
+
+    def test_fused_refine_matches_ref(self):
+        v = model.fused_refine_variant(256)
+        a, b = _rand(6, (256, 256)), _rand(7, (256, 256))
+        got = np.asarray(v.fn(a, b)[0])
+        want = np.asarray(ref.refine_ab_gemm(a, b))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_bad_pallas_size(self):
+        with pytest.raises(ValueError, match="divisible"):
+            model.gemm_variant("mixed", 96, kernel="pallas")
+
+
+class TestAotLowering:
+    def test_hlo_text_roundtrip_shape(self):
+        """Lowered text must contain an ENTRY computation and the tuple
+        return the Rust side unwraps."""
+        v = model.gemm_variant("mixed", 64, kernel="pallas")
+        text = aot.lower_variant(v)
+        assert "ENTRY" in text
+        assert "f32[64,64]" in text
+
+    def test_sgemm_lowering_small(self):
+        v = model.gemm_variant("sgemm", 64, kernel="xla")
+        text = aot.lower_variant(v)
+        assert "dot" in text
+
+    def test_build_writes_manifest_and_artifacts(self):
+        with tempfile.TemporaryDirectory() as d:
+            man = aot.build(d, only="gemm_sgemm_n64")
+            assert len(man["artifacts"]) == 1
+            entry = man["artifacts"][0]
+            assert os.path.exists(os.path.join(d, entry["file"]))
+            with open(os.path.join(d, "manifest.json")) as f:
+                on_disk = json.load(f)
+            assert on_disk["artifacts"][0]["name"] == entry["name"]
+
+    def test_build_incremental_skip(self, capsys):
+        with tempfile.TemporaryDirectory() as d:
+            aot.build(d, only="gemm_sgemm_n64")
+            capsys.readouterr()
+            aot.build(d, only="gemm_sgemm_n64")
+            out = capsys.readouterr().out
+            assert "[skip]" in out
+
+    def test_build_only_no_match(self):
+        with tempfile.TemporaryDirectory() as d:
+            with pytest.raises(SystemExit):
+                aot.build(d, only="nonexistent_variant_xyz")
+
+    def test_manifest_covers_every_fig8_size(self):
+        names = {v.name for v in model.default_variants()}
+        for n in model.ERRPROBE_SIZES:
+            assert f"errprobe_n{n}" in names

@@ -1,0 +1,155 @@
+"""Precision-refinement kernels (paper §V, Eqs. 1-3) — correctness and the
+paper's qualitative error claims at build time."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+from compile.kernels.refine import (
+    error_vs_refinement,
+    refine_a_pipelined,
+    refine_ab_fused,
+    refine_ab_pipelined,
+    split_residual,
+)
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _rand(key, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape,
+                              jnp.float32, lo, hi)
+
+
+class TestResidualSplit:
+    def test_residual_exact_unit_range(self):
+        """For U[-1,1] inputs, x == f32(x_h) + f32(r) exactly (Eq. 1 note)."""
+        x = _rand(0, (256, 256))
+        x_h, r = split_residual(x)
+        recon = x_h.astype(jnp.float32) + r.astype(jnp.float32)
+        np.testing.assert_array_equal(np.asarray(recon), np.asarray(x))
+
+    def test_residual_exact_pm16(self):
+        x = _rand(1, (256, 256), -16.0, 16.0)
+        x_h, r = split_residual(x)
+        recon = x_h.astype(jnp.float32) + r.astype(jnp.float32)
+        np.testing.assert_array_equal(np.asarray(recon), np.asarray(x))
+
+    def test_residual_smaller_than_ulp(self):
+        x = _rand(2, (128, 128))
+        _, r = split_residual(x)
+        # |residual| <= half an ulp of f16 at |x|<2, i.e. 2^-11
+        assert float(jnp.max(jnp.abs(r))) <= 2.0 ** -11
+
+    def test_residual_double_rounding_leak_large_range(self):
+        """Outside the paper's ranges the f16 residual may itself round;
+        quantify that the leak stays below an f16 ulp of the residual."""
+        x = _rand(3, (128, 128), -30000.0, 30000.0)
+        x_h, r = split_residual(x)
+        leak = jnp.abs(x - (x_h.astype(jnp.float32) + r.astype(jnp.float32)))
+        # residual magnitude <= 8 at |x|<=32768; its own rounding <= 2^-8ish
+        assert float(jnp.max(leak)) <= 2.0 ** -7
+
+    def test_matches_ref_residual(self):
+        x = _rand(4, (64, 64))
+        _, r = split_residual(x)
+        np.testing.assert_array_equal(np.asarray(r),
+                                      np.asarray(ref.residual(x)))
+
+
+class TestRefinementKernels:
+    def test_refine_a_pipelined_matches_ref(self):
+        a, b = _rand(5, (128, 128)), _rand(6, (128, 128))
+        got = refine_a_pipelined(a, b, bm=64, bn=64, bk=32)
+        want = ref.refine_a_gemm(a, b)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_refine_ab_pipelined_matches_ref(self):
+        a, b = _rand(7, (128, 128)), _rand(8, (128, 128))
+        got = refine_ab_pipelined(a, b, bm=64, bn=64, bk=32)
+        want = ref.refine_ab_gemm(a, b)
+        np.testing.assert_allclose(got, want, **TOL)
+
+    def test_refine_ab_fused_matches_pipelined(self):
+        a, b = _rand(9, (128, 128)), _rand(10, (128, 128))
+        fused = refine_ab_fused(a, b, bm=64, bn=64, bk=32)
+        want = ref.refine_ab_gemm(a, b)
+        np.testing.assert_allclose(fused, want, **TOL)
+
+
+class TestPaperErrorClaims:
+    """The paper's qualitative precision findings, asserted at build time.
+    Exact magnitudes are input-dependent; we assert the *ordering* and the
+    order-of-magnitude factors (§VII-B)."""
+
+    def test_refinement_strictly_improves(self):
+        a, b = _rand(11, (512, 512)), _rand(12, (512, 512))
+        e = {k: float(v) for k, v in error_vs_refinement(a, b).items()}
+        assert e["none"] > e["refine_a"] > e["refine_ab"] > 0.0
+
+    def test_paper_pipeline_refine_ab_at_least_paper_factor(self):
+        """'the error is decreased by a factor of ten for N=8,192': the
+        paper's 10x is a *lower* bound set by their unoptimized pipeline
+        (§VII-B 'there is room for a large performance improvement' and the
+        hand-off model in ref.py).  Our pipeline must beat 5x and the exact
+        chaining must do at least as well as the f16 hand-off."""
+        a, b = _rand(13, (512, 512)), _rand(14, (512, 512))
+        e = error_vs_refinement(a, b)
+        factor = float(e["none"]) / float(e["refine_ab_paper"])
+        assert factor >= 5.0
+        assert float(e["refine_ab"]) <= float(e["refine_ab_paper"]) * (1 + 1e-6)
+
+    def test_paper_pipeline_refine_a_modest(self):
+        """'~30% decrease of the error' for R_A-only refinement: the gain
+        is modest because B's rounding error remains (§VII-B) — this cap is
+        algorithmic, not implementation: assert the band [10%, 70%]."""
+        a, b = _rand(15, (512, 512)), _rand(16, (512, 512))
+        e = error_vs_refinement(a, b)
+        improvement = 1.0 - float(e["refine_a_paper"]) / float(e["none"])
+        assert 0.10 <= improvement <= 0.70
+
+    def test_error_grows_with_n(self):
+        errs = []
+        for i, n in enumerate((128, 256, 512)):
+            a, b = _rand(20 + i, (n, n)), _rand(40 + i, (n, n))
+            errs.append(float(error_vs_refinement(a, b)["none"]))
+        assert errs[0] < errs[1] < errs[2]
+
+    def test_pm16_error_much_larger(self):
+        # §VII-B: A,B in ±16 at N=4096 gives ||e|| = 8.32 vs ~0.05 for ±1.
+        n = 512
+        a1, b1 = _rand(50, (n, n)), _rand(51, (n, n))
+        a16, b16 = _rand(52, (n, n), -16, 16), _rand(53, (n, n), -16, 16)
+        e1 = float(ref.max_norm_error(ref.mixed_gemm(a1, b1),
+                                      ref.sgemm(a1, b1)))
+        e16 = float(ref.max_norm_error(ref.mixed_gemm(a16, b16),
+                                       ref.sgemm(a16, b16)))
+        assert e16 > 50 * e1  # 16^2 = 256x in exact scaling
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(
+    n=st.sampled_from([64, 128, 256]),
+    lo_hi=st.sampled_from([(-1.0, 1.0), (-16.0, 16.0), (-0.25, 0.25)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_refinement_ordering(n, lo_hi, seed):
+    """Property: refinement never makes the error meaningfully worse, for
+    any size and input range (the monotonicity that justifies the
+    coordinator's precision policy).
+
+    refine_a gets a 15% statistical allowance: it removes A's rounding
+    error but can shift *which entry* attains the max norm, so a single
+    draw may come out a hair worse even though the distribution improves
+    (B's error remains).  refine_ab removes both inputs' errors and must
+    always be far below both.
+    """
+    lo, hi = lo_hi
+    a, b = _rand(seed, (n, n), lo, hi), _rand(seed + 1, (n, n), lo, hi)
+    e = {k: float(v) for k, v in error_vs_refinement(a, b).items()}
+    assert e["refine_a"] <= e["none"] * 1.15
+    assert e["refine_ab"] <= e["refine_a"] * 0.5
+    assert e["refine_ab"] <= e["none"] * 0.5

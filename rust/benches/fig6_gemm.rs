@@ -1,0 +1,44 @@
+//! Bench target for Fig. 6: regenerates the GEMM Tflops/s-vs-N table
+//! from the Volta model and, as the host-side measured counterpart,
+//! times the Rust emulation backends (wmma-tiled vs cutlass-tiled vs
+//! cpu-blocked sgemm) on a small N so the *relative* shape of the
+//! interface survey is also exercised with real code.
+//!
+//! Run: `cargo bench --bench fig6_gemm`
+
+use tensoremu::figures::fig6;
+use tensoremu::gemm::sgemm_blocked;
+use tensoremu::interfaces::{wmma_tiled_gemm, CutlassGemm, TilePolicy};
+use tensoremu::sim::VoltaConfig;
+use tensoremu::util::bench::bench;
+use tensoremu::workload::{uniform_matrix, Rng};
+
+fn main() {
+    // device-model regeneration (the actual Fig. 6 series)
+    let cfg = VoltaConfig::tesla_v100_pdc();
+    println!("{}", fig6::render(&fig6::compute(&cfg)));
+
+    // host-side emulation micro-bench (structure only; absolute numbers
+    // are CPU emulation, not device performance)
+    let n = 128;
+    let mut rng = Rng::new(1);
+    let a = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+    let flops = 2.0 * (n as f64).powi(3);
+
+    let r = bench("emu/sgemm_blocked_128", 20, || {
+        std::hint::black_box(sgemm_blocked(&a, &b, None, 1.0, 0.0));
+    });
+    println!("{}  ({:.2} Gflop/s)", r.report(), r.harmonic_mean_rate(flops) / 1e9);
+
+    let r = bench("emu/wmma_tiled_128", 10, || {
+        std::hint::black_box(wmma_tiled_gemm(&a, &b));
+    });
+    println!("{}  ({:.2} Gflop/s)", r.report(), r.harmonic_mean_rate(flops) / 1e9);
+
+    let cutlass = CutlassGemm::new(TilePolicy::DEFAULT);
+    let r = bench("emu/cutlass_tiled_128", 10, || {
+        std::hint::black_box(cutlass.run(&a, &b));
+    });
+    println!("{}  ({:.2} Gflop/s)", r.report(), r.harmonic_mean_rate(flops) / 1e9);
+}

@@ -1,0 +1,58 @@
+//! Bench target for Fig. 7: regenerates the batched-GEMM table from the
+//! Volta model, then measures the *real* batched path end-to-end: the
+//! batched WMMA artifact through PJRT vs per-request execution — the
+//! measured analog of the paper's batched-vs-unbatched comparison.
+//!
+//! Run: `cargo bench --bench fig7_batched`  (needs `make artifacts`)
+
+use tensoremu::figures::fig7;
+use tensoremu::runtime::{Engine, TensorData};
+use tensoremu::sim::VoltaConfig;
+use tensoremu::util::bench::bench;
+use tensoremu::workload::{uniform_batch, Rng};
+
+fn main() {
+    let cfg = VoltaConfig::tesla_v100_pdc();
+    println!("{}", fig7::render(&fig7::compute(&cfg)));
+
+    let Ok(mut engine) = Engine::discover() else {
+        eprintln!("artifacts not found; run `make artifacts` for the measured half");
+        return;
+    };
+
+    // measured: batched artifact vs one-by-one execution of the same work
+    let mut rng = Rng::new(2);
+    for &batch in &[64usize, 256, 1024] {
+        let a = uniform_batch(&mut rng, batch, 16, -1.0, 1.0);
+        let b = uniform_batch(&mut rng, batch, 16, -1.0, 1.0);
+        let ta = TensorData::from_batch(&a).unwrap();
+        let tb = TensorData::from_batch(&b).unwrap();
+        let meta = engine.manifest().batched_at_least(batch, 16).unwrap();
+        let name = meta.name.clone();
+        let flops = batch as f64 * 2.0 * 16f64.powi(3);
+
+        let r = bench(&format!("pjrt/batched_b{batch}"), 10, || {
+            std::hint::black_box(engine.run(&name, &[ta.clone(), tb.clone()]).unwrap());
+        });
+        println!("{}  ({:.2} Gflop/s)", r.report(), r.harmonic_mean_rate(flops) / 1e9);
+    }
+
+    // under-filled baseline: four calls of the smallest batched artifact
+    // (padded mostly with zeros) vs one full call — the measured value of
+    // aggregation
+    if let Some(meta) = engine.manifest().batched_at_least(1, 16) {
+        let cap = meta.batch.unwrap();
+        let name = meta.name.clone();
+        let mut rng = Rng::new(3);
+        let a = uniform_batch(&mut rng, cap, 16, -1.0, 1.0);
+        let b = uniform_batch(&mut rng, cap, 16, -1.0, 1.0);
+        let ta = TensorData::from_batch(&a).unwrap();
+        let tb = TensorData::from_batch(&b).unwrap();
+        let r = bench(&format!("pjrt/underfilled_b{cap}_x4_calls"), 10, || {
+            for _ in 0..4 {
+                std::hint::black_box(engine.run(&name, &[ta.clone(), tb.clone()]).unwrap());
+            }
+        });
+        println!("{}  (4 dispatches = the unbatched-serving baseline)", r.report());
+    }
+}

@@ -1,0 +1,30 @@
+//! Bench target for Fig. 8: measures the precision figure through real
+//! PJRT executions of the error-probe artifacts (plus the time each
+//! probe takes, since the probes run all five GEMM variants in-graph).
+//!
+//! Run: `cargo bench --bench fig8_precision`  (needs `make artifacts`)
+
+use tensoremu::figures::fig8;
+use tensoremu::runtime::{Engine, TensorData};
+use tensoremu::util::bench::bench_config;
+use tensoremu::workload::{uniform_matrix, Rng};
+
+fn main() {
+    let mut engine = Engine::discover().expect("run `make artifacts` first");
+
+    let trials = std::env::var("FIG8_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let f = fig8::compute(&mut engine, trials, -1.0, 1.0, 42).unwrap();
+    println!("{}", fig8::render(&f));
+
+    // probe execution timing per size (one warm run already happened)
+    let sizes = engine.manifest().errprobe_sizes();
+    let mut rng = Rng::new(9);
+    for n in sizes {
+        let a = TensorData::from_matrix(&uniform_matrix(&mut rng, n, n, -1.0, 1.0));
+        let b = TensorData::from_matrix(&uniform_matrix(&mut rng, n, n, -1.0, 1.0));
+        let r = bench_config(&format!("pjrt/errprobe_n{n}"), 5, 10, 30_000, || {
+            std::hint::black_box(engine.run_errprobe(n, &a, &b).unwrap());
+        });
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,40 @@
+//! Bench target for Fig. 9: the cost/precision scatter — measured errors
+//! (PJRT error probes) x modeled device times, plus the *measured* cost
+//! factors of the refinement pipeline on real artifacts (one GEMM vs the
+//! 2-GEMM and 4-GEMM refined variants at the same size).
+//!
+//! Run: `cargo bench --bench fig9_tradeoff`  (needs `make artifacts`)
+
+use tensoremu::figures::fig9;
+use tensoremu::runtime::{Engine, TensorData};
+use tensoremu::sim::VoltaConfig;
+use tensoremu::util::bench::bench_config;
+use tensoremu::workload::{uniform_matrix, Rng};
+
+fn main() {
+    let mut engine = Engine::discover().expect("run `make artifacts` first");
+    let cfg = VoltaConfig::tesla_v100_pdc();
+    let trials = std::env::var("FIG9_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let f = fig9::compute(&mut engine, &cfg, trials, 42).unwrap();
+    println!("{}", fig9::render(&f));
+
+    // measured cost factors of the refinement pipeline on real artifacts
+    let n = 512;
+    let mut rng = Rng::new(5);
+    let a = TensorData::from_matrix(&uniform_matrix(&mut rng, n, n, -1.0, 1.0));
+    let b = TensorData::from_matrix(&uniform_matrix(&mut rng, n, n, -1.0, 1.0));
+    let mut means = Vec::new();
+    for op in ["mixed", "refine_a", "refine_ab"] {
+        let name = engine.manifest().gemm(op, n).unwrap().name.clone();
+        let r = bench_config(&format!("pjrt/{op}_n{n}"), 8, 50, 30_000, || {
+            std::hint::black_box(engine.run(&name, &[a.clone(), b.clone()]).unwrap());
+        });
+        println!("{}", r.report());
+        means.push((op, r.mean().as_secs_f64()));
+    }
+    let base = means[0].1;
+    println!("\nmeasured cost factors vs one mixed GEMM @ N={n} (paper: 2.25x / ~5x):");
+    for (op, m) in &means {
+        println!("  {op:<10} {:.2}x", m / base);
+    }
+}

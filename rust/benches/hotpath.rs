@@ -1,0 +1,68 @@
+//! Hot-path benchmarks for the §Perf optimization pass (EXPERIMENTS.md):
+//! the L3 components that sit on the request path, measured in isolation
+//! so the coordinator overhead can be compared against artifact
+//! execution time.
+//!
+//! Run: `cargo bench --bench hotpath`  (needs `make artifacts`)
+
+use std::time::Duration;
+
+use tensoremu::coordinator::{Batcher, BatcherConfig, GemmRequest, PrecisionPolicy, Router};
+use tensoremu::gemm::Matrix;
+use tensoremu::runtime::{Engine, Manifest, TensorData};
+use tensoremu::util::bench::{bench, bench_config};
+use tensoremu::workload::{uniform_matrix, Rng};
+
+fn main() {
+    let manifest = Manifest::discover().expect("run `make artifacts` first");
+
+    // -- router: requests/second it can classify
+    let router = Router::new(manifest.clone(), 16, PrecisionPolicy::default());
+    let mut rng = Rng::new(1);
+    let reqs: Vec<GemmRequest> = (0..256)
+        .map(|i| {
+            let n = [16usize, 64, 256][i % 3];
+            GemmRequest::new(i as u64, uniform_matrix(&mut rng, n, n, -1.0, 1.0),
+                             uniform_matrix(&mut rng, n, n, -1.0, 1.0))
+        })
+        .collect();
+    let r = bench("l3/router_route_256req", 200, || {
+        for req in &reqs {
+            std::hint::black_box(router.route(req));
+        }
+    });
+    println!("{}  ({:.0} routes/s)", r.report(), 256.0 / r.mean().as_secs_f64());
+
+    // -- batcher: enqueue + flush cycle
+    let r = bench("l3/batcher_push_flush_1024", 100, || {
+        let mut b = Batcher::new(
+            16,
+            BatcherConfig { max_batch: 1024, max_wait: Duration::from_secs(1) },
+        );
+        for i in 0..1024u64 {
+            b.push(GemmRequest::new(i, Matrix::eye(16), Matrix::eye(16)));
+        }
+        std::hint::black_box(b.flush(|n| n).unwrap());
+    });
+    println!("{}  ({:.0} req/s through the batcher)", r.report(),
+             1024.0 / r.mean().as_secs_f64());
+
+    // -- tensor conversion: Matrix -> TensorData -> literal-ready bytes
+    let ms: Vec<Matrix> = (0..256).map(|_| uniform_matrix(&mut rng, 16, 16, -1.0, 1.0)).collect();
+    let r = bench("l3/tensor_from_batch_256x16x16", 500, || {
+        std::hint::black_box(TensorData::from_batch(&ms).unwrap());
+    });
+    println!("{}", r.report());
+
+    // -- PJRT execution reference point (what the overhead competes with)
+    let mut engine = Engine::discover().unwrap();
+    let a = TensorData::from_batch(&ms).unwrap();
+    let name = engine.manifest().batched_at_least(256, 16).unwrap().name.clone();
+    let r = bench_config("pjrt/batched_b256_reference", 20, 100, 20_000, || {
+        std::hint::black_box(engine.run(&name, &[a.clone(), a.clone()]).unwrap());
+    });
+    println!("{}", r.report());
+
+    println!("\ntarget (DESIGN.md §Perf): router+batcher+conversion must stay well under");
+    println!("the PJRT execution time above — L3 is not allowed to be the bottleneck.");
+}

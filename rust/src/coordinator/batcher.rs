@@ -1,0 +1,206 @@
+//! Dynamic batcher for tile-sized GEMM requests (the serving-side
+//! equivalent of the paper's hand-written batched WMMA kernel, §IV-B).
+//!
+//! Requests accumulate in a queue; a flush happens when the queue
+//! reaches the largest batched artifact's capacity or the oldest request
+//! has waited `max_wait`.  Flushed batches are padded with zero matrices
+//! up to the smallest artifact batch >= the queue length (zeros are
+//! numerically inert and keep the artifact set small: fixed shapes are
+//! the price of AOT compilation).
+
+use std::time::{Duration, Instant};
+
+use crate::gemm::Matrix;
+
+use super::request::{GemmRequest, RequestId};
+
+/// Batcher tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush as soon as this many requests are queued (set to the
+    /// largest batched artifact's capacity).
+    pub max_batch: usize,
+    /// Flush when the oldest queued request is older than this.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 1024, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// One queued entry.
+struct Pending {
+    id: RequestId,
+    a: Matrix,
+    b: Matrix,
+    enqueued: Instant,
+}
+
+/// A flushed batch ready for the batched artifact.
+pub struct FlushedBatch {
+    /// Request ids in batch order (the first `ids.len()` entries of the
+    /// padded batch are real).
+    pub ids: Vec<RequestId>,
+    /// Enqueue timestamps, for queue-delay accounting.
+    pub enqueued: Vec<Instant>,
+    /// A-side matrices, padded to `padded_len` with zeros.
+    pub a: Vec<Matrix>,
+    /// B-side matrices, padded likewise.
+    pub b: Vec<Matrix>,
+}
+
+impl FlushedBatch {
+    pub fn real_len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn padded_len(&self) -> usize {
+        self.a.len()
+    }
+}
+
+/// The dynamic batcher.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    tile: usize,
+    queue: Vec<Pending>,
+}
+
+impl Batcher {
+    pub fn new(tile: usize, cfg: BatcherConfig) -> Batcher {
+        Batcher { cfg, tile, queue: Vec::new() }
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Tile edge this batcher groups.
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Enqueue a tile-sized request.  Panics if the shape is wrong (the
+    /// router guarantees it).
+    pub fn push(&mut self, req: GemmRequest) {
+        assert_eq!(req.square_n(), Some(self.tile), "batcher got a non-tile request");
+        self.queue.push(Pending { id: req.id, a: req.a, b: req.b, enqueued: Instant::now() });
+    }
+
+    /// Should the queue flush now?
+    pub fn should_flush(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        self.queue.len() >= self.cfg.max_batch
+            || now.duration_since(self.queue[0].enqueued) >= self.cfg.max_wait
+    }
+
+    /// Time until the age-based flush fires (None if queue is empty).
+    pub fn time_to_flush(&self, now: Instant) -> Option<Duration> {
+        let oldest = self.queue.first()?.enqueued;
+        Some(self.cfg.max_wait.saturating_sub(now.duration_since(oldest)))
+    }
+
+    /// Flush up to `max_batch` requests, padding to `pad_to(len)` (the
+    /// caller maps the real length to an artifact capacity).
+    pub fn flush(&mut self, pad_to: impl Fn(usize) -> usize) -> Option<FlushedBatch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let take = self.queue.len().min(self.cfg.max_batch);
+        let drained: Vec<Pending> = self.queue.drain(..take).collect();
+        let padded = pad_to(drained.len()).max(drained.len());
+        let mut ids = Vec::with_capacity(drained.len());
+        let mut enqueued = Vec::with_capacity(drained.len());
+        let mut a = Vec::with_capacity(padded);
+        let mut b = Vec::with_capacity(padded);
+        for p in drained {
+            ids.push(p.id);
+            enqueued.push(p.enqueued);
+            a.push(p.a);
+            b.push(p.b);
+        }
+        while a.len() < padded {
+            a.push(Matrix::zeros(self.tile, self.tile));
+            b.push(Matrix::zeros(self.tile, self.tile));
+        }
+        Some(FlushedBatch { ids, enqueued, a, b })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: RequestId) -> GemmRequest {
+        GemmRequest::new(id, Matrix::eye(16), Matrix::eye(16))
+    }
+
+    fn batcher(max_batch: usize, max_wait_ms: u64) -> Batcher {
+        Batcher::new(
+            16,
+            BatcherConfig { max_batch, max_wait: Duration::from_millis(max_wait_ms) },
+        )
+    }
+
+    #[test]
+    fn flushes_at_capacity() {
+        let mut b = batcher(4, 1000);
+        for i in 0..3 {
+            b.push(req(i));
+        }
+        assert!(!b.should_flush(Instant::now()));
+        b.push(req(3));
+        assert!(b.should_flush(Instant::now()));
+    }
+
+    #[test]
+    fn flushes_on_age() {
+        let mut b = batcher(1000, 0);
+        b.push(req(0));
+        assert!(b.should_flush(Instant::now()));
+    }
+
+    #[test]
+    fn empty_never_flushes() {
+        let b = batcher(1, 0);
+        assert!(!b.should_flush(Instant::now()));
+        assert!(b.time_to_flush(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn padding_behaviour() {
+        let mut b = batcher(100, 0);
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        let f = b.flush(|n| n.next_power_of_two().max(8)).unwrap();
+        assert_eq!(f.real_len(), 5);
+        assert_eq!(f.padded_len(), 8);
+        // padding is zeros
+        assert_eq!(f.a[7], Matrix::zeros(16, 16));
+        assert_eq!(f.ids, vec![0, 1, 2, 3, 4]);
+        assert_eq!(b.queue_len(), 0);
+    }
+
+    #[test]
+    fn flush_respects_max_batch() {
+        let mut b = batcher(3, 0);
+        for i in 0..7 {
+            b.push(req(i));
+        }
+        let f = b.flush(|n| n).unwrap();
+        assert_eq!(f.real_len(), 3);
+        assert_eq!(b.queue_len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-tile")]
+    fn rejects_wrong_tile() {
+        let mut b = batcher(4, 1);
+        b.push(GemmRequest::new(0, Matrix::zeros(8, 8), Matrix::zeros(8, 8)));
+    }
+}

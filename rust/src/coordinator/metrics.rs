@@ -1,0 +1,156 @@
+//! Service metrics: counters + latency accounting, lock-free on the hot
+//! path (atomics), with an explicit snapshot type for reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    requests: AtomicU64,
+    responses: AtomicU64,
+    batched: AtomicU64,
+    direct: AtomicU64,
+    fallback: AtomicU64,
+    flushes: AtomicU64,
+    padded_slots: AtomicU64,
+    errors: AtomicU64,
+    /// end-to-end latencies in nanoseconds (guarded; sampled at response)
+    latencies_ns: Mutex<Vec<u64>>,
+}
+
+/// Point-in-time view.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub responses: u64,
+    pub batched: u64,
+    pub direct: u64,
+    pub fallback: u64,
+    pub flushes: u64,
+    pub padded_slots: u64,
+    pub errors: u64,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
+impl Metrics {
+    pub fn on_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_response(&self, latency: Duration, served_batched: bool) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        if served_batched {
+            self.batched.fetch_add(1, Ordering::Relaxed);
+        }
+        self.latencies_ns.lock().unwrap().push(latency.as_nanos() as u64);
+    }
+
+    pub fn on_direct(&self) {
+        self.direct.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_fallback(&self) {
+        self.fallback.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_flush(&self, real: usize, padded: usize) {
+        self.flushes.fetch_add(1, Ordering::Relaxed);
+        self.padded_slots.fetch_add((padded - real) as u64, Ordering::Relaxed);
+    }
+
+    pub fn on_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lat = self.latencies_ns.lock().unwrap().clone();
+        lat.sort_unstable();
+        let pick = |p: f64| -> Duration {
+            if lat.is_empty() {
+                return Duration::ZERO;
+            }
+            let idx = ((p * (lat.len() - 1) as f64).round() as usize).min(lat.len() - 1);
+            Duration::from_nanos(lat[idx])
+        };
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            batched: self.batched.load(Ordering::Relaxed),
+            direct: self.direct.load(Ordering::Relaxed),
+            fallback: self.fallback.load(Ordering::Relaxed),
+            flushes: self.flushes.load(Ordering::Relaxed),
+            padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            p50: pick(0.50),
+            p99: pick(0.99),
+            max: pick(1.0),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// One-line service report.
+    pub fn report(&self) -> String {
+        format!(
+            "req={} resp={} batched={} direct={} fallback={} flushes={} pad={} err={} \
+             p50={:?} p99={:?} max={:?}",
+            self.requests,
+            self.responses,
+            self.batched,
+            self.direct,
+            self.fallback,
+            self.flushes,
+            self.padded_slots,
+            self.errors,
+            self.p50,
+            self.p99,
+            self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.on_request();
+        m.on_request();
+        m.on_response(Duration::from_millis(2), true);
+        m.on_response(Duration::from_millis(4), false);
+        m.on_flush(5, 8);
+        m.on_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.responses, 2);
+        assert_eq!(s.batched, 1);
+        assert_eq!(s.flushes, 1);
+        assert_eq!(s.padded_slots, 3);
+        assert_eq!(s.errors, 1);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Metrics::default();
+        for i in 1..=100u64 {
+            m.on_response(Duration::from_millis(i), false);
+        }
+        let s = m.snapshot();
+        assert!(s.p50 <= s.p99);
+        assert!(s.p99 <= s.max);
+        assert_eq!(s.max, Duration::from_millis(100));
+    }
+
+    #[test]
+    fn empty_latency_percentiles_zero() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.p50, Duration::ZERO);
+        assert!(!s.report().is_empty());
+    }
+}

@@ -1,0 +1,35 @@
+//! S9 — the GEMM-serving coordinator: the paper's findings operationalized
+//! as a service.
+//!
+//! The paper's systems story has two operational consequences:
+//!
+//! 1. **Batched small GEMMs win big on Tensor Cores** (§IV-B, Fig. 7) —
+//!    but cuBLAS couldn't batch on Tensor Cores at the time, so you had
+//!    to *aggregate requests yourself*.  [`batcher`] is that aggregation
+//!    as a serving component: a dynamic batcher that groups tile-sized
+//!    GEMM requests and dispatches them to the batched WMMA artifact.
+//! 2. **Precision is a dial, not a constant** (§V, Fig. 9) — the
+//!    refinement level trades error for GEMM count.  [`policy`] picks the
+//!    cheapest [`crate::precision::RefineMode`] that satisfies each
+//!    request's error budget, using the analytic bounds from
+//!    [`crate::precision::bounds`].
+//!
+//! [`router`] classifies requests (tile-batchable vs large vs unservable
+//! -> CPU fallback), [`service`] wires router + batcher + policy over the
+//! PJRT [`crate::runtime::executor`] with a threaded event loop (the
+//! offline image has no async runtime — see Cargo.toml), and [`metrics`]
+//! counts everything.
+
+pub mod batcher;
+pub mod metrics;
+pub mod policy;
+pub mod request;
+pub mod router;
+pub mod service;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use policy::{PolicyConfig, PrecisionPolicy};
+pub use request::{GemmRequest, GemmResponse, RequestId};
+pub use router::{Route, Router};
+pub use service::{Coordinator, CoordinatorConfig};

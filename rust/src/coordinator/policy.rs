@@ -1,0 +1,156 @@
+//! Precision policy: pick the cheapest refinement mode whose predicted
+//! error meets the request's budget (the paper's Fig. 9 trade-off turned
+//! into an admission rule: "depending on the precision requirement of an
+//! application, the developer can choose to perform refinement on one or
+//! both matrices at the expense of additional computation time and
+//! memory", §V).
+
+use crate::precision::bounds::{mixed_gemm_error_rms_estimate, refined_gemm_error_bound};
+use crate::precision::RefineMode;
+
+use super::request::GemmRequest;
+
+/// Which error model drives the policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorModel {
+    /// Deterministic worst-case bounds (conservative: refines earlier).
+    WorstCase,
+    /// RMS estimate for iid uniform inputs (the paper's input protocol),
+    /// scaled by a safety factor.
+    Rms,
+}
+
+/// Policy configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyConfig {
+    pub model: ErrorModel,
+    /// Safety multiplier on the RMS estimate (>= 1).
+    pub rms_safety: f32,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig { model: ErrorModel::Rms, rms_safety: 3.0 }
+    }
+}
+
+/// The policy object.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrecisionPolicy {
+    cfg: PolicyConfig,
+}
+
+impl PrecisionPolicy {
+    pub fn new(cfg: PolicyConfig) -> PrecisionPolicy {
+        PrecisionPolicy { cfg }
+    }
+
+    /// Predicted ‖e‖_Max of serving a k-deep GEMM with entries in
+    /// U[-scale, scale] at the given mode.
+    pub fn predicted_error(&self, k: usize, m_out: usize, scale: f32, mode: RefineMode) -> f32 {
+        match self.cfg.model {
+            ErrorModel::WorstCase => refined_gemm_error_bound(k, scale, mode),
+            ErrorModel::Rms => {
+                // RMS estimate for the unrefined part; refined modes get
+                // the same structural reduction as the analytic bounds.
+                let base = mixed_gemm_error_rms_estimate(k, m_out, scale) * self.cfg.rms_safety;
+                let ratio = refined_gemm_error_bound(k, scale, mode)
+                    / refined_gemm_error_bound(k, scale, RefineMode::None);
+                base * ratio.max(1e-9)
+            }
+        }
+    }
+
+    /// Choose the cheapest mode meeting the request's budget; requests
+    /// with an explicit mode keep it; no budget means no refinement.
+    pub fn choose(&self, req: &GemmRequest) -> RefineMode {
+        if let Some(mode) = req.mode {
+            return mode;
+        }
+        let Some(budget) = req.error_budget else {
+            return RefineMode::None;
+        };
+        let k = req.a.cols();
+        let m_out = req.a.rows().max(req.b.cols());
+        for mode in RefineMode::ALL {
+            if self.predicted_error(k, m_out, req.scale, mode) <= budget {
+                return mode;
+            }
+        }
+        // even RefineAB misses the budget: serve the best we have
+        RefineMode::RefineAB
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::Matrix;
+
+    fn req(n: usize, budget: Option<f32>, scale: f32) -> GemmRequest {
+        let mut r = GemmRequest::new(0, Matrix::zeros(n, n), Matrix::zeros(n, n)).with_scale(scale);
+        r.error_budget = budget;
+        r
+    }
+
+    #[test]
+    fn explicit_mode_wins() {
+        let p = PrecisionPolicy::default();
+        let r = req(256, Some(1e-9), 1.0).with_mode(RefineMode::None);
+        assert_eq!(p.choose(&r), RefineMode::None);
+    }
+
+    #[test]
+    fn no_budget_means_cheapest() {
+        let p = PrecisionPolicy::default();
+        assert_eq!(p.choose(&req(256, None, 1.0)), RefineMode::None);
+    }
+
+    #[test]
+    fn loose_budget_no_refinement() {
+        let p = PrecisionPolicy::default();
+        assert_eq!(p.choose(&req(256, Some(10.0), 1.0)), RefineMode::None);
+    }
+
+    #[test]
+    fn tight_budget_escalates() {
+        let p = PrecisionPolicy::default();
+        let loose = p.choose(&req(1024, Some(1.0), 1.0));
+        let tight = p.choose(&req(1024, Some(1e-4), 1.0));
+        let tighter = p.choose(&req(1024, Some(1e-7), 1.0));
+        assert_eq!(loose, RefineMode::None);
+        assert!(tight != RefineMode::None);
+        assert_eq!(tighter, RefineMode::RefineAB);
+    }
+
+    #[test]
+    fn larger_scale_refines_earlier() {
+        // ±16 inputs have ~256x the error (§VII-B): the same budget that
+        // needs no refinement at ±1 needs refinement at ±16
+        let p = PrecisionPolicy::default();
+        let budget = Some(0.15);
+        assert_eq!(p.choose(&req(1024, budget, 1.0)), RefineMode::None);
+        assert_ne!(p.choose(&req(1024, budget, 16.0)), RefineMode::None);
+    }
+
+    #[test]
+    fn predicted_error_ordering() {
+        let p = PrecisionPolicy::default();
+        let e0 = p.predicted_error(1024, 1024, 1.0, RefineMode::None);
+        let e1 = p.predicted_error(1024, 1024, 1.0, RefineMode::RefineA);
+        let e2 = p.predicted_error(1024, 1024, 1.0, RefineMode::RefineAB);
+        assert!(e0 > e1 && e1 > e2);
+    }
+
+    #[test]
+    fn worst_case_model_more_conservative() {
+        let rms = PrecisionPolicy::default();
+        let wc = PrecisionPolicy::new(PolicyConfig { model: ErrorModel::WorstCase, rms_safety: 1.0 });
+        let budget = Some(0.05);
+        // worst-case refines at a budget the RMS model still accepts
+        let r = req(2048, budget, 1.0);
+        let m_rms = rms.choose(&r);
+        let m_wc = wc.choose(&r);
+        assert!(m_wc.gemm_count() >= m_rms.gemm_count());
+    }
+}

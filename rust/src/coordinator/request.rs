@@ -1,0 +1,101 @@
+//! Request/response types of the GEMM service.
+
+use std::time::Duration;
+
+use crate::gemm::Matrix;
+use crate::precision::RefineMode;
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// A GEMM request: C = A x B on the emulated Tensor Cores.
+#[derive(Clone, Debug)]
+pub struct GemmRequest {
+    pub id: RequestId,
+    pub a: Matrix,
+    pub b: Matrix,
+    /// Explicit refinement mode; `None` lets the precision policy choose.
+    pub mode: Option<RefineMode>,
+    /// Max acceptable ‖e‖_Max vs the f32 result.  `None` = cheapest mode.
+    pub error_budget: Option<f32>,
+    /// Magnitude hint for the policy's error model: entries are in
+    /// U[-scale, scale] (defaults to 1.0, the paper's protocol).
+    pub scale: f32,
+}
+
+impl GemmRequest {
+    pub fn new(id: RequestId, a: Matrix, b: Matrix) -> GemmRequest {
+        GemmRequest { id, a, b, mode: None, error_budget: None, scale: 1.0 }
+    }
+
+    pub fn with_mode(mut self, mode: RefineMode) -> Self {
+        self.mode = Some(mode);
+        self
+    }
+
+    pub fn with_error_budget(mut self, budget: f32) -> Self {
+        self.error_budget = Some(budget);
+        self
+    }
+
+    pub fn with_scale(mut self, scale: f32) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    /// Square edge if the request is square, else None.
+    pub fn square_n(&self) -> Option<usize> {
+        let (m, k) = self.a.shape();
+        let (k2, n) = self.b.shape();
+        (m == k && k == k2 && k2 == n).then_some(n)
+    }
+}
+
+/// How the request was ultimately served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServedBy {
+    /// Batched Tensor-Core artifact (the WMMA batcher path).
+    BatchedTensorCore,
+    /// Dedicated GEMM artifact.
+    TensorCore,
+    /// Host CPU fallback (no artifact fits the shape).
+    CpuFallback,
+}
+
+/// The service's answer.
+#[derive(Clone, Debug)]
+pub struct GemmResponse {
+    pub id: RequestId,
+    pub c: Matrix,
+    /// Refinement mode actually applied.
+    pub mode: RefineMode,
+    pub served_by: ServedBy,
+    /// Time spent queued (incl. batching delay).
+    pub queued: Duration,
+    /// Execution time of the artifact call this request rode on.
+    pub exec: Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_detection() {
+        let r = GemmRequest::new(1, Matrix::zeros(16, 16), Matrix::zeros(16, 16));
+        assert_eq!(r.square_n(), Some(16));
+        let r = GemmRequest::new(2, Matrix::zeros(16, 32), Matrix::zeros(32, 16));
+        assert_eq!(r.square_n(), None);
+    }
+
+    #[test]
+    fn builder_chains() {
+        let r = GemmRequest::new(3, Matrix::zeros(4, 4), Matrix::zeros(4, 4))
+            .with_mode(RefineMode::RefineAB)
+            .with_error_budget(1e-3)
+            .with_scale(16.0);
+        assert_eq!(r.mode, Some(RefineMode::RefineAB));
+        assert_eq!(r.error_budget, Some(1e-3));
+        assert_eq!(r.scale, 16.0);
+    }
+}

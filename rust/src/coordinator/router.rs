@@ -1,0 +1,129 @@
+//! Request routing: classify each GEMM request onto the serving path
+//! that Fig. 6/7 says is fastest for its shape.
+//!
+//! * tile-sized square requests (== the batched artifact's tile, no
+//!   refinement) -> the dynamic batcher (Fig. 7: batched WMMA wins
+//!   2.5-12x over per-call serving);
+//! * square requests matching a dedicated artifact -> direct Tensor-Core
+//!   execution at the mode the policy picked;
+//! * everything else -> CPU fallback through the cuBLAS-style interface
+//!   (correct, slow, counted by metrics — a real deployment would AOT
+//!   more shapes).
+
+use crate::precision::RefineMode;
+use crate::runtime::Manifest;
+
+use super::policy::PrecisionPolicy;
+use super::request::GemmRequest;
+
+/// Where a request should execute.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Join the dynamic batch for `tile`-sized multiplications.
+    Batch { tile: usize },
+    /// Run the named artifact directly.
+    Direct { artifact: String, mode: RefineMode },
+    /// No artifact fits: emulate on the host.
+    CpuFallback { mode: RefineMode },
+}
+
+/// The router: manifest-driven request classification.
+#[derive(Clone, Debug)]
+pub struct Router {
+    tile: usize,
+    policy: PrecisionPolicy,
+    manifest: Manifest,
+}
+
+impl Router {
+    /// `tile` is the batched-GEMM edge (16 in the paper).
+    pub fn new(manifest: Manifest, tile: usize, policy: PrecisionPolicy) -> Router {
+        Router { tile, policy, manifest }
+    }
+
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Classify one request.
+    pub fn route(&self, req: &GemmRequest) -> Route {
+        let mode = self.policy.choose(req);
+        if let Some(n) = req.square_n() {
+            // tile-sized unrefined requests ride the batcher
+            if n == self.tile
+                && mode == RefineMode::None
+                && self.manifest.batched_max(self.tile).is_some()
+            {
+                return Route::Batch { tile: self.tile };
+            }
+            if let Some(meta) = self.manifest.gemm_for_mode(mode, n) {
+                return Route::Direct { artifact: meta.name.clone(), mode };
+            }
+        }
+        Route::CpuFallback { mode }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::PrecisionPolicy;
+    use crate::gemm::Matrix;
+
+    fn router() -> Option<Router> {
+        // integration-style: uses the real manifest when built
+        let manifest = Manifest::discover().ok()?;
+        Some(Router::new(manifest, 16, PrecisionPolicy::default()))
+    }
+
+    #[test]
+    fn tile_requests_batch() {
+        let Some(r) = router() else { return };
+        let req = GemmRequest::new(1, Matrix::zeros(16, 16), Matrix::zeros(16, 16));
+        assert_eq!(r.route(&req), Route::Batch { tile: 16 });
+    }
+
+    #[test]
+    fn refined_tile_requests_do_not_batch() {
+        let Some(r) = router() else { return };
+        let req = GemmRequest::new(2, Matrix::zeros(16, 16), Matrix::zeros(16, 16))
+            .with_mode(RefineMode::RefineAB);
+        assert!(!matches!(r.route(&req), Route::Batch { .. }));
+    }
+
+    #[test]
+    fn large_square_goes_direct() {
+        let Some(r) = router() else { return };
+        let req = GemmRequest::new(3, Matrix::zeros(256, 256), Matrix::zeros(256, 256));
+        match r.route(&req) {
+            Route::Direct { artifact, mode } => {
+                assert!(artifact.contains("mixed"), "artifact {artifact}");
+                assert_eq!(mode, RefineMode::None);
+            }
+            other => panic!("expected direct, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn odd_shapes_fall_back() {
+        let Some(r) = router() else { return };
+        let req = GemmRequest::new(4, Matrix::zeros(100, 100), Matrix::zeros(100, 100));
+        assert!(matches!(r.route(&req), Route::CpuFallback { .. }));
+        let req = GemmRequest::new(5, Matrix::zeros(64, 128), Matrix::zeros(128, 64));
+        assert!(matches!(r.route(&req), Route::CpuFallback { .. }));
+    }
+
+    #[test]
+    fn budget_changes_route_to_refined_artifact() {
+        let Some(r) = router() else { return };
+        let req = GemmRequest::new(6, Matrix::zeros(512, 512), Matrix::zeros(512, 512))
+            .with_error_budget(1e-7);
+        match r.route(&req) {
+            Route::Direct { artifact, mode } => {
+                assert_eq!(mode, RefineMode::RefineAB);
+                assert!(artifact.contains("refine_ab"), "artifact {artifact}");
+            }
+            other => panic!("expected refined direct, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,411 @@
+//! The coordinator service: a threaded event loop wiring router, dynamic
+//! batcher, precision policy and the PJRT executor into a GEMM server.
+//!
+//! Architecture (no async runtime in the offline image — Cargo.toml):
+//!
+//! ```text
+//!  clients --Submission--> [dispatcher thread] --route--+--> batcher --flush--+
+//!                                                       |                     v
+//!                                                       |        [worker thread per job]
+//!                                                       +--direct/fallback--> |
+//!                                                                             v
+//!                                                        [pjrt-executor thread (Engine)]
+//! ```
+//!
+//! The dispatcher never blocks on execution: direct jobs and batch
+//! flushes run on short-lived worker threads that submit to the executor
+//! thread and deliver responses; the dispatcher keeps batching while
+//! earlier work executes.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::gemm::Matrix;
+use crate::interfaces::{CublasHandle, GemmAlgo, MathMode};
+use crate::precision::RefineMode;
+use crate::runtime::{ExecutorHandle, ExecutorServer, Manifest, TensorData};
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::policy::{PolicyConfig, PrecisionPolicy};
+use super::request::{GemmRequest, GemmResponse, RequestId, ServedBy};
+use super::router::{Route, Router};
+
+/// Coordinator tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// Batched tile edge (16 = the paper's batched GEMM).
+    pub tile: usize,
+    pub batcher: BatcherConfig,
+    pub policy: PolicyConfig,
+    /// Run large (direct) GEMMs on their own PJRT engine so they never
+    /// head-of-line-block the batched tile lane (§Perf iteration 2: with
+    /// one shared engine, 2% large requests drove batch p50 from ~80 ms
+    /// to ~600 ms).  Costs one extra engine (compiled-executable cache).
+    pub dedicated_direct_lane: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            tile: 16,
+            batcher: BatcherConfig::default(),
+            policy: PolicyConfig::default(),
+            dedicated_direct_lane: true,
+        }
+    }
+}
+
+struct Submission {
+    req: GemmRequest,
+    submitted: Instant,
+    reply: Sender<Result<GemmResponse>>,
+}
+
+enum Event {
+    Submit(Submission),
+    Shutdown,
+}
+
+/// The running service.
+pub struct Coordinator {
+    events: Sender<Event>,
+    dispatcher: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    // keep the executor threads alive for the service's lifetime
+    _executor: ExecutorServer,
+    _direct_executor: Option<ExecutorServer>,
+}
+
+impl Coordinator {
+    /// Start over the discovered artifacts directory.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        let executor = ExecutorServer::discover()?;
+        Coordinator::start_with(cfg, executor)
+    }
+
+    /// Start over an explicit executor (tests inject their own manifest).
+    pub fn start_with(cfg: CoordinatorConfig, executor: ExecutorServer) -> Result<Coordinator> {
+        let manifest = executor.manifest().clone();
+        let handle = executor.handle();
+        // second engine for the direct lane so large GEMMs don't block
+        // the batched lane (see CoordinatorConfig::dedicated_direct_lane)
+        let direct_executor = if cfg.dedicated_direct_lane {
+            Some(ExecutorServer::start(manifest.clone())?)
+        } else {
+            None
+        };
+        let direct_handle = direct_executor.as_ref().map(|e| e.handle()).unwrap_or_else(|| handle.clone());
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = channel::<Event>();
+        let m2 = metrics.clone();
+        let dispatcher = std::thread::Builder::new()
+            .name("coordinator".into())
+            .spawn(move || dispatcher_loop(cfg, manifest, handle, direct_handle, m2, rx))
+            .context("spawning dispatcher")?;
+        Ok(Coordinator {
+            events: tx,
+            dispatcher: Some(dispatcher),
+            metrics,
+            next_id: AtomicU64::new(1),
+            _executor: executor,
+            _direct_executor: direct_executor,
+        })
+    }
+
+    /// Submit a request; returns the response channel.
+    pub fn submit(&self, mut req: GemmRequest) -> Receiver<Result<GemmResponse>> {
+        if req.id == 0 {
+            req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        }
+        self.metrics.on_request();
+        let (tx, rx) = channel();
+        let sub = Submission { req, submitted: Instant::now(), reply: tx };
+        // a failed send means shutdown: the receiver will see a closed
+        // channel and surface an error on recv
+        let _ = self.events.send(Event::Submit(sub));
+        rx
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn gemm(&self, a: Matrix, b: Matrix) -> Result<GemmResponse> {
+        let req = GemmRequest::new(0, a, b);
+        self.submit(req).recv().context("coordinator gone")?
+    }
+
+    /// Blocking convenience with full request control.
+    pub fn gemm_with(&self, req: GemmRequest) -> Result<GemmResponse> {
+        self.submit(req).recv().context("coordinator gone")?
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Pre-compile the artifacts the service will dispatch to (batched
+    /// tiles on the batch lane, mixed GEMMs on the direct lane), so no
+    /// request pays a first-use PJRT compilation (§Perf iteration 3:
+    /// lazy compiles of ~100 ms each landed mid-serving and stretched
+    /// the E2E p50 by ~3x).  Blocking; call before taking traffic.
+    pub fn warmup(&self) -> Result<()> {
+        let manifest = self._executor.manifest().clone();
+        let batch_lane = self._executor.handle();
+        for a in &manifest.artifacts {
+            use crate::runtime::ArtifactKind;
+            match a.kind {
+                ArtifactKind::Batched => batch_lane.warm(&a.name)?,
+                ArtifactKind::Gemm if a.kernel.as_deref() == Some("xla") => {
+                    if let Some(d) = &self._direct_executor {
+                        d.handle().warm(&a.name)?;
+                    } else {
+                        batch_lane.warm(&a.name)?;
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Graceful shutdown: drains the queue, stops the threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        let _ = self.events.send(Event::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+struct PendingReply {
+    reply: Sender<Result<GemmResponse>>,
+    submitted: Instant,
+}
+
+fn dispatcher_loop(
+    cfg: CoordinatorConfig,
+    manifest: Manifest,
+    executor: ExecutorHandle,
+    direct_executor: ExecutorHandle,
+    metrics: Arc<Metrics>,
+    rx: Receiver<Event>,
+) {
+    let router = Router::new(manifest.clone(), cfg.tile, PrecisionPolicy::new(cfg.policy));
+    let mut batcher = Batcher::new(cfg.tile, effective_batcher_cfg(cfg, &manifest));
+    let mut pending: HashMap<RequestId, PendingReply> = HashMap::new();
+    let mut shutting_down = false;
+
+    loop {
+        // flush if due, then wait for the next event or the flush deadline
+        let now = Instant::now();
+        if batcher.should_flush(now) {
+            flush_batch(&mut batcher, &manifest, &executor, &metrics, &mut pending);
+            continue;
+        }
+        if shutting_down && batcher.queue_len() == 0 {
+            break;
+        }
+        let timeout = batcher
+            .time_to_flush(now)
+            .unwrap_or(Duration::from_millis(50))
+            .min(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(Event::Submit(sub)) => {
+                dispatch_one(sub, &router, &mut batcher, &direct_executor, &metrics, &mut pending);
+            }
+            Ok(Event::Shutdown) => shutting_down = true,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => shutting_down = true,
+        }
+    }
+}
+
+/// Cap the batcher's flush size at the largest batched artifact.
+fn effective_batcher_cfg(cfg: CoordinatorConfig, manifest: &Manifest) -> BatcherConfig {
+    let cap = manifest
+        .batched_max(cfg.tile)
+        .and_then(|m| m.batch)
+        .unwrap_or(cfg.batcher.max_batch);
+    BatcherConfig { max_batch: cfg.batcher.max_batch.min(cap), ..cfg.batcher }
+}
+
+fn dispatch_one(
+    sub: Submission,
+    router: &Router,
+    batcher: &mut Batcher,
+    executor: &ExecutorHandle,
+    metrics: &Arc<Metrics>,
+    pending: &mut HashMap<RequestId, PendingReply>,
+) {
+    match router.route(&sub.req) {
+        Route::Batch { .. } => {
+            pending.insert(
+                sub.req.id,
+                PendingReply { reply: sub.reply, submitted: sub.submitted },
+            );
+            batcher.push(sub.req);
+        }
+        Route::Direct { artifact, mode } => {
+            metrics.on_direct();
+            let executor = executor.clone();
+            let metrics = metrics.clone();
+            std::thread::spawn(move || {
+                let queued = sub.submitted.elapsed();
+                let t0 = Instant::now();
+                let result = executor
+                    .run(
+                        &artifact,
+                        vec![TensorData::from_matrix(&sub.req.a), TensorData::from_matrix(&sub.req.b)],
+                    )
+                    .and_then(TensorData::into_matrix)
+                    .map(|c| GemmResponse {
+                        id: sub.req.id,
+                        c,
+                        mode,
+                        served_by: ServedBy::TensorCore,
+                        queued,
+                        exec: t0.elapsed(),
+                    });
+                finish(result, &sub.reply, &metrics, sub.submitted, false);
+            });
+        }
+        Route::CpuFallback { mode } => {
+            metrics.on_fallback();
+            let metrics = metrics.clone();
+            std::thread::spawn(move || {
+                let queued = sub.submitted.elapsed();
+                let t0 = Instant::now();
+                let mut h = CublasHandle::new();
+                h.set_math_mode(MathMode::TensorOp);
+                let algo = match mode {
+                    RefineMode::None => GemmAlgo::Default,
+                    RefineMode::RefineA => GemmAlgo::RefinedTensorOpA,
+                    RefineMode::RefineAB => GemmAlgo::RefinedTensorOpAB,
+                };
+                let result = h
+                    .gemm_ex(&sub.req.a, &sub.req.b, None, 1.0, 0.0, algo)
+                    .map_err(|e| anyhow::anyhow!("cpu fallback: {e}"))
+                    .map(|c| GemmResponse {
+                        id: sub.req.id,
+                        c,
+                        mode,
+                        served_by: ServedBy::CpuFallback,
+                        queued,
+                        exec: t0.elapsed(),
+                    });
+                finish(result, &sub.reply, &metrics, sub.submitted, false);
+            });
+        }
+    }
+}
+
+fn flush_batch(
+    batcher: &mut Batcher,
+    manifest: &Manifest,
+    executor: &ExecutorHandle,
+    metrics: &Arc<Metrics>,
+    pending: &mut HashMap<RequestId, PendingReply>,
+) {
+    let tile = batcher.tile();
+    let pad_to = |len: usize| -> usize {
+        manifest
+            .batched_at_least(len, tile)
+            .and_then(|m| m.batch)
+            .unwrap_or(len)
+    };
+    let Some(flushed) = batcher.flush(pad_to) else { return };
+    metrics.on_flush(flushed.real_len(), flushed.padded_len());
+
+    let Some(meta) = manifest.batched_at_least(flushed.padded_len(), tile) else {
+        // no artifact large enough even after padding — fail the batch
+        for id in &flushed.ids {
+            if let Some(p) = pending.remove(id) {
+                let _ = p.reply.send(Err(anyhow::anyhow!(
+                    "no batched artifact for {} requests",
+                    flushed.padded_len()
+                )));
+                metrics.on_error();
+            }
+        }
+        return;
+    };
+    let artifact = meta.name.clone();
+    let executor = executor.clone();
+    let metrics = metrics.clone();
+    let replies: Vec<(RequestId, Instant, Option<PendingReply>)> = flushed
+        .ids
+        .iter()
+        .zip(&flushed.enqueued)
+        .map(|(id, enq)| (*id, *enq, pending.remove(id)))
+        .collect();
+    let a = flushed.a;
+    let b = flushed.b;
+    std::thread::spawn(move || {
+        let t0 = Instant::now();
+        let result = TensorData::from_batch(&a)
+            .and_then(|ta| Ok((ta, TensorData::from_batch(&b)?)))
+            .and_then(|(ta, tb)| executor.run(&artifact, vec![ta, tb]))
+            .and_then(TensorData::into_batch);
+        let exec = t0.elapsed();
+        match result {
+            Ok(outs) => {
+                for (i, (id, enq, reply)) in replies.into_iter().enumerate() {
+                    if let Some(p) = reply {
+                        let resp = GemmResponse {
+                            id,
+                            c: outs[i].clone(),
+                            mode: RefineMode::None,
+                            served_by: ServedBy::BatchedTensorCore,
+                            queued: t0.duration_since(enq),
+                            exec,
+                        };
+                        finish(Ok(resp), &p.reply, &metrics, p.submitted, true);
+                    }
+                }
+            }
+            Err(e) => {
+                for (_, _, reply) in replies {
+                    if let Some(p) = reply {
+                        let _ = p.reply.send(Err(anyhow::anyhow!("batch failed: {e:#}")));
+                        metrics.on_error();
+                    }
+                }
+            }
+        }
+    });
+}
+
+fn finish(
+    result: Result<GemmResponse>,
+    reply: &Sender<Result<GemmResponse>>,
+    metrics: &Arc<Metrics>,
+    submitted: Instant,
+    batched: bool,
+) {
+    match result {
+        Ok(resp) => {
+            metrics.on_response(submitted.elapsed(), batched);
+            let _ = reply.send(Ok(resp));
+        }
+        Err(e) => {
+            metrics.on_error();
+            let _ = reply.send(Err(e));
+        }
+    }
+}

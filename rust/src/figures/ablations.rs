@@ -1,0 +1,195 @@
+//! Ablations A1-A4 (DESIGN.md §4): the design-choice studies the paper
+//! describes in prose, regenerated as tables.
+
+use anyhow::Result;
+
+use crate::gemm::{dgemm_naive, hgemm, mixed_gemm};
+use crate::precision::kahan::hgemm_kahan;
+use crate::runtime::{Engine, TensorData};
+use crate::sim::kernels::{cublas_tc_time, cutlass_time, naive_wmma_time, shared_wmma_time};
+use crate::sim::{Cluster, VoltaConfig};
+use crate::workload::{uniform_matrix, Rng};
+
+/// A1 — CUTLASS tile-policy sweep: who wins at each N (the paper "tested
+/// different tiling techniques ... and report the timing of the set-up
+/// with higher performance").
+pub fn tiling_sweep(cfg: &VoltaConfig) -> String {
+    let tiles: [(usize, usize); 4] = [(64, 64), (128, 64), (128, 128), (256, 128)];
+    let sizes = [1024usize, 4096, 8192, 16384];
+    let rows: Vec<Vec<String>> = sizes
+        .iter()
+        .map(|&n| {
+            let mut cells = vec![n.to_string()];
+            let mut best = (0.0f64, "");
+            for &(bm, bn) in &tiles {
+                let t = cutlass_time(cfg, n, Some((bm, bn))).tflops();
+                cells.push(format!("{t:.1}"));
+                let label = match (bm, bn) {
+                    (64, 64) => "64x64",
+                    (128, 64) => "128x64",
+                    (128, 128) => "128x128",
+                    _ => "256x128",
+                };
+                if t > best.0 {
+                    best = (t, label);
+                }
+            }
+            cells.push(best.1.to_string());
+            cells
+        })
+        .collect();
+    super::render_table(
+        "A1: CUTLASS tile-policy sweep (Tflops/s per policy)",
+        &["N", "64x64", "128x64", "128x128", "256x128", "best"],
+        &rows,
+    )
+}
+
+/// A2 — shared-memory staging: naive vs shared-memory WMMA across N
+/// (§VII-A's "about five times higher", shown in full).
+pub fn shared_memory_study(cfg: &VoltaConfig) -> String {
+    let rows: Vec<Vec<String>> = [1024usize, 2048, 4096, 8192, 16384]
+        .iter()
+        .map(|&n| {
+            let naive = naive_wmma_time(cfg, n).tflops();
+            let shared = shared_wmma_time(cfg, n).tflops();
+            vec![
+                n.to_string(),
+                format!("{naive:.1}"),
+                format!("{shared:.1}"),
+                format!("{:.1}x", shared / naive),
+            ]
+        })
+        .collect();
+    super::render_table(
+        "A2: WMMA shared-memory staging (Tflops/s)",
+        &["N", "naive", "shared-mem", "gain"],
+        &rows,
+    )
+}
+
+/// A3 — input-range study: error vs U[-r, r] at each refinement level
+/// (the §VII-B ±16 example generalized), real execution.
+pub fn input_range_study(engine: &mut Engine, seed: u64) -> Result<String> {
+    let n = *engine.manifest().errprobe_sizes().last().unwrap_or(&512);
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::new();
+    for r in [1.0f32, 4.0, 16.0] {
+        let a = TensorData::from_matrix(&uniform_matrix(&mut rng, n, n, -r, r));
+        let b = TensorData::from_matrix(&uniform_matrix(&mut rng, n, n, -r, r));
+        let e = engine.run_errprobe(n, &a, &b)?;
+        rows.push(vec![
+            format!("±{r}"),
+            format!("{:.3e}", e[0]),
+            format!("{:.3e}", e[1]),
+            format!("{:.3e}", e[2]),
+            format!("{:.0}x", e[0] / e[2]),
+        ]);
+    }
+    let mut out = super::render_table(
+        &format!("A3: input-range study @ N={n} (measured)"),
+        &["range", "none", "R_A", "R_A+R_B", "factor"],
+        &rows,
+    );
+    out.push_str("paper: ±16 @ N=4096: 8.32 -> 0.24 (35x)\n");
+    Ok(out)
+}
+
+/// A4 — refinement pipeline: exact-f32 chaining vs the paper's f16
+/// hand-off vs the fused one-pass kernel, error side (real execution of
+/// the fused artifact vs the probes).
+pub fn pipeline_study(engine: &mut Engine, seed: u64) -> Result<String> {
+    let n = 256; // the fused artifact's size
+    let mut rng = Rng::new(seed);
+    let a_m = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+    let b_m = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+    let a = TensorData::from_matrix(&a_m);
+    let b = TensorData::from_matrix(&b_m);
+    let e = engine.run_errprobe(n, &a, &b)?;
+    // fused kernel result vs the f64 truth
+    let fused_name = format!("gemm_refine_ab_fused_n{n}_pallas");
+    let fused = engine.run(&fused_name, &[a, b])?.into_matrix()?;
+    let truth = dgemm_naive(&a_m, &b_m);
+    let e_fused = fused.max_norm_diff(&truth);
+    let rows = vec![
+        vec!["none (1 GEMM)".into(), format!("{:.3e}", e[0]), "1.0x".into()],
+        vec!["R_A+R_B paper pipeline (4 GEMMs, f16 hand-off)".into(), format!("{:.3e}", e[4]), "5.0x".into()],
+        vec!["R_A+R_B exact chaining (4 GEMMs, f32)".into(), format!("{:.3e}", e[2]), "5.0x".into()],
+        vec!["R_A+R_B fused one-pass Pallas kernel".into(), format!("{e_fused:.3e}"), "~4.0x".into()],
+    ];
+    let mut out = super::render_table(
+        &format!("A4: refinement pipeline variants @ N={n} (measured error vs f64)"),
+        &["variant", "||e||_Max", "cost"],
+        &rows,
+    );
+    out.push_str(
+        "paper: 'optimized versions of such techniques are possible' — the fused kernel\n\
+         removes the pipeline's intermediate traffic and the f16 hand-off loss\n",
+    );
+    Ok(out)
+}
+
+/// Kahan extension (§V cites compensated summation as the alternative to
+/// f32 accumulation): hgemm / hgemm+Kahan / Tensor-Core-style mixed, CPU
+/// emulation.
+pub fn kahan_study(seed: u64) -> String {
+    let n = 256;
+    let mut rng = Rng::new(seed);
+    let a = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+    let truth = dgemm_naive(&a, &b);
+    let rows = vec![
+        vec![
+            "hgemm (all f16)".to_string(),
+            format!("{:.3e}", hgemm(&a, &b).max_norm_diff(&truth)),
+            "1x adds".into(),
+        ],
+        vec![
+            "hgemm + Kahan (f16 compensated)".to_string(),
+            format!("{:.3e}", hgemm_kahan(&a, &b).max_norm_diff(&truth)),
+            "4x adds".into(),
+        ],
+        vec![
+            "Tensor Core mixed (f32 accumulate)".to_string(),
+            format!("{:.3e}", mixed_gemm(&a, &b, None, 1.0, 0.0).max_norm_diff(&truth)),
+            "1x adds".into(),
+        ],
+    ];
+    super::render_table(
+        &format!("Kahan ablation @ N={n}: why the HW accumulates in f32 (§V)"),
+        &["accumulation", "||e||_Max", "cost"],
+        &rows,
+    )
+}
+
+/// Cluster projection (§I's DGX-1 / Summit aspirations as numbers):
+/// aggregate peaks and the strong-scaling efficiency of one node.
+pub fn cluster_study() -> String {
+    let mut rows = Vec::new();
+    for (name, c) in [("DGX-1 (8x V100)", Cluster::dgx1()), ("Summit (4600x 6 V100)", Cluster::summit())] {
+        rows.push(vec![
+            name.to_string(),
+            format!("{}", c.total_gpus()),
+            format!("{:.2e}", c.total_tensor_cores() as f64),
+            format!("{:.2}", c.tc_peak_flops() / 1e15),
+        ]);
+    }
+    let mut out = super::render_table(
+        "Cluster projections (paper \u{a7}I)",
+        &["system", "GPUs", "tensor cores", "TC peak (Pflops/s)"],
+        &rows,
+    );
+    let dgx = Cluster::dgx1();
+    for n in [4096usize, 8192, 16384] {
+        let (t, eff) = dgx.node_gemm_time(n);
+        let single = cublas_tc_time(&dgx.gpu, n).time_s();
+        out.push_str(&format!(
+            "DGX-1 strong scaling N={n}: 1 GPU {:.1} ms -> 8 GPUs {:.1} ms (eff {:.0}%)\n",
+            single * 1e3,
+            t * 1e3,
+            eff * 100.0
+        ));
+    }
+    out.push_str("paper \u{a7}I: DGX-1 ~1 Pflops/s mixed precision; Summit ~18M tensor cores\n");
+    out
+}

@@ -1,0 +1,111 @@
+//! Fig. 6 — GEMM performance with and without Tensor Cores, varying N.
+//!
+//! Series: sgemm, hgemm (CUDA cores, the paper's white bars); naive
+//! WMMA, CUTLASS, cuBLAS (Tensor Cores, grey bars); plus the theoretical
+//! peak line at 112.7 Tflops/s.  Regenerated from the Volta performance
+//! model ([`crate::sim`]) — see DESIGN.md's substitution table.
+
+use crate::sim::{GemmImpl, VoltaConfig};
+
+/// The matrix sizes the figure sweeps.
+pub const SIZES: [usize; 5] = [1024, 2048, 4096, 8192, 16384];
+
+/// One bar group: performance of every implementation at one N.
+#[derive(Clone, Debug)]
+pub struct Fig6Row {
+    pub n: usize,
+    /// (implementation, achieved Tflops/s, binding resource)
+    pub series: Vec<(GemmImpl, f64, &'static str)>,
+}
+
+/// The whole figure.
+#[derive(Clone, Debug)]
+pub struct Fig6 {
+    pub rows: Vec<Fig6Row>,
+    pub peak_tflops: f64,
+}
+
+/// Compute the figure from the device model.
+pub fn compute(cfg: &VoltaConfig) -> Fig6 {
+    let rows = SIZES
+        .iter()
+        .map(|&n| Fig6Row {
+            n,
+            series: GemmImpl::FIG6
+                .iter()
+                .map(|imp| {
+                    let t = imp.time(cfg, n);
+                    (*imp, t.tflops(), t.bound_by())
+                })
+                .collect(),
+        })
+        .collect();
+    Fig6 { rows, peak_tflops: cfg.tc_peak_flops() / 1e12 }
+}
+
+/// Render the figure as the paper's table of series.
+pub fn render(fig: &Fig6) -> String {
+    let header: Vec<&str> = std::iter::once("N")
+        .chain(GemmImpl::FIG6.iter().map(|i| i.label()))
+        .collect();
+    let rows: Vec<Vec<String>> = fig
+        .rows
+        .iter()
+        .map(|r| {
+            std::iter::once(r.n.to_string())
+                .chain(r.series.iter().map(|(_, t, _)| format!("{t:.1}")))
+                .collect()
+        })
+        .collect();
+    let mut out = super::render_table(
+        &format!(
+            "Fig. 6: GEMM Tflops/s vs N (peak line {:.1} Tflops/s)",
+            fig.peak_tflops
+        ),
+        &header,
+        &rows,
+    );
+    out.push_str(
+        "paper: cuBLAS-TC max 83 Tflops/s @ N=8192 (74% of peak); ~6x sgemm, ~3x hgemm;\n\
+         naive WMMA <= sgemm; CUTLASS overtakes cuBLAS at N=16384\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_has_all_series_at_all_sizes() {
+        let f = compute(&VoltaConfig::tesla_v100_pdc());
+        assert_eq!(f.rows.len(), SIZES.len());
+        for r in &f.rows {
+            assert_eq!(r.series.len(), 5);
+            for (_, t, _) in &r.series {
+                assert!(*t > 0.0 && *t < f.peak_tflops);
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_core_series_dominate_at_large_n() {
+        let f = compute(&VoltaConfig::tesla_v100_pdc());
+        let big = &f.rows[3]; // N = 8192
+        let get = |imp: GemmImpl| {
+            big.series.iter().find(|(i, _, _)| *i == imp).unwrap().1
+        };
+        assert!(get(GemmImpl::CublasTensorOp) > get(GemmImpl::Hgemm));
+        assert!(get(GemmImpl::Cutlass) > get(GemmImpl::Hgemm));
+        assert!(get(GemmImpl::Hgemm) > get(GemmImpl::Sgemm));
+    }
+
+    #[test]
+    fn render_contains_every_size() {
+        let f = compute(&VoltaConfig::tesla_v100_pdc());
+        let s = render(&f);
+        for n in SIZES {
+            assert!(s.contains(&n.to_string()));
+        }
+    }
+}

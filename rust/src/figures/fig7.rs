@@ -1,0 +1,101 @@
+//! Fig. 7 — batched 16x16 GEMM performance vs batch size: cuBLAS batched
+//! sgemm (CUDA cores) vs the hand-written batched WMMA kernel (Tensor
+//! Cores), with the sgemm OOM cliff above 131,072 multiplications.
+
+use crate::sim::kernels::{batched_sgemm_time, batched_wmma_time};
+use crate::sim::{fits_memory, VoltaConfig};
+
+/// Batch sizes on the figure's x axis.
+pub const BATCH_SIZES: [usize; 8] =
+    [4096, 8192, 16384, 32768, 65536, 131072, 262144, 524288];
+
+/// Tile edge (the paper uses 16x16 only).
+pub const TILE: usize = 16;
+
+#[derive(Clone, Debug)]
+pub struct Fig7Row {
+    pub batch: usize,
+    /// cuBLAS batched sgemm Tflops/s; None = out of memory (the cliff).
+    pub sgemm_tflops: Option<f64>,
+    /// WMMA batched Tflops/s.
+    pub wmma_tflops: f64,
+    /// speedup (None where sgemm OOMs).
+    pub speedup: Option<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig7 {
+    pub rows: Vec<Fig7Row>,
+}
+
+pub fn compute(cfg: &VoltaConfig) -> Fig7 {
+    let rows = BATCH_SIZES
+        .iter()
+        .map(|&batch| {
+            let wmma = batched_wmma_time(cfg, batch, TILE).tflops();
+            let sgemm = fits_memory(cfg, batch, TILE)
+                .then(|| batched_sgemm_time(cfg, batch, TILE).tflops());
+            Fig7Row { batch, sgemm_tflops: sgemm, wmma_tflops: wmma, speedup: sgemm.map(|s| wmma / s) }
+        })
+        .collect();
+    Fig7 { rows }
+}
+
+pub fn render(fig: &Fig7) -> String {
+    let rows: Vec<Vec<String>> = fig
+        .rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.batch.to_string(),
+                r.sgemm_tflops.map_or("OOM".into(), |t| format!("{t:.2}")),
+                format!("{:.2}", r.wmma_tflops),
+                r.speedup.map_or("-".into(), |s| format!("{s:.1}x")),
+            ]
+        })
+        .collect();
+    let mut out = super::render_table(
+        "Fig. 7: batched 16x16 GEMM Tflops/s vs batch size",
+        &["batch", "cuBLAS batched sgemm", "WMMA batched (TC)", "speedup"],
+        &rows,
+    );
+    out.push_str(
+        "paper: WMMA peak 4 Tflops/s @ 262144; speedup 2.5x-12x; sgemm OOM > 131072\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oom_cliff_is_where_the_paper_says() {
+        let f = compute(&VoltaConfig::tesla_v100_pdc());
+        let by_batch = |b: usize| f.rows.iter().find(|r| r.batch == b).unwrap();
+        assert!(by_batch(131072).sgemm_tflops.is_some());
+        assert!(by_batch(262144).sgemm_tflops.is_none());
+    }
+
+    #[test]
+    fn speedups_within_paper_band() {
+        let f = compute(&VoltaConfig::tesla_v100_pdc());
+        for r in f.rows.iter().filter(|r| r.speedup.is_some()) {
+            let s = r.speedup.unwrap();
+            assert!((1.8..16.0).contains(&s), "batch {}: speedup {s}", r.batch);
+        }
+    }
+
+    #[test]
+    fn wmma_peak_near_4() {
+        let f = compute(&VoltaConfig::tesla_v100_pdc());
+        let peak = f.rows.iter().map(|r| r.wmma_tflops).fold(0.0, f64::max);
+        assert!((3.2..4.8).contains(&peak), "peak {peak}");
+    }
+
+    #[test]
+    fn render_marks_oom() {
+        let f = compute(&VoltaConfig::tesla_v100_pdc());
+        assert!(render(&f).contains("OOM"));
+    }
+}

@@ -1,0 +1,71 @@
+//! S11 — the figure/bench harness: one module per evaluation artifact of
+//! the paper (DESIGN.md §4 experiment index).
+//!
+//! * [`fig6`] — GEMM Tflops/s vs N, five series (simulator).
+//! * [`fig7`] — batched 16x16 GEMM vs batch size, two series + OOM cliff
+//!   (simulator).
+//! * [`fig8`] — ‖e‖_Max vs N for the three refinement levels (real
+//!   execution through the PJRT error-probe artifacts, plus analytic
+//!   extrapolation to the paper's N=8192).
+//! * [`fig9`] — runtime-vs-error scatter (simulator timing x measured
+//!   errors).
+//! * [`headline`] — the §VII text numbers as one table.
+//! * [`ablations`] — A1 tiling sweep, A2 shared-memory, A3 input range,
+//!   A4 refinement pipeline (fused vs pipelined).
+//!
+//! Every module returns plain row structs and renders the same series
+//! the paper plots, with the paper's reference values alongside where
+//! the text states them.
+
+pub mod ablations;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod headline;
+
+/// Render helper: a fixed-width table.
+pub fn render_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("== {title} ==\n"));
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let head: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&head, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn render_table_aligns() {
+        let t = super::render_table(
+            "T",
+            &["a", "bbbb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(t.contains("== T =="));
+        assert!(t.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,85 @@
+//! Batched small-matrix GEMMs (paper §IV-B): many independent tile x tile
+//! products, the Nek5000 / FMM-FFT workload shape.
+
+use super::{mixed::mixed_gemm, naive::sgemm_naive, Matrix};
+
+/// Batched sgemm: out[i] = a[i] x b[i] in full f32 (the paper's
+/// `cublasSgemmBatched` baseline).
+pub fn batched_sgemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
+    assert_eq!(a.len(), b.len(), "batch length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(a, b)| sgemm_naive(a, b, None, 1.0, 0.0))
+        .collect()
+}
+
+/// Batched Tensor-Core-semantics GEMM: the paper's hand-written batched
+/// WMMA kernel (f16 inputs, f32 accumulate).
+pub fn batched_mixed_gemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
+    assert_eq!(a.len(), b.len(), "batch length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(a, b)| mixed_gemm(a, b, None, 1.0, 0.0))
+        .collect()
+}
+
+/// Batched CUDA-core hgemm (all-f16 arithmetic) for the precision
+/// comparison benches.
+pub fn batched_hgemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
+    assert_eq!(a.len(), b.len(), "batch length mismatch");
+    a.iter().zip(b).map(|(a, b)| super::mixed::hgemm(a, b)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(n: usize, count: usize, seed: u64) -> Vec<Matrix> {
+        let mut s = seed.max(1);
+        (0..count)
+            .map(|_| {
+                Matrix::from_fn(n, n, |_, _| {
+                    s ^= s << 13;
+                    s ^= s >> 7;
+                    s ^= s << 17;
+                    ((s >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batched_matches_loop_of_singles() {
+        let a = batch(16, 8, 1);
+        let b = batch(16, 8, 2);
+        let got = batched_mixed_gemm(&a, &b);
+        for ((ga, aa), bb) in got.iter().zip(&a).zip(&b) {
+            let single = mixed_gemm(aa, bb, None, 1.0, 0.0);
+            assert_eq!(ga, &single);
+        }
+    }
+
+    #[test]
+    fn entries_independent() {
+        let a = batch(16, 4, 3);
+        let b = batch(16, 4, 4);
+        let full = batched_sgemm(&a, &b);
+        let mut a2 = a.clone();
+        a2[1] = Matrix::zeros(16, 16);
+        let partial = batched_sgemm(&a2, &b);
+        assert_eq!(partial[1], Matrix::zeros(16, 16));
+        assert_eq!(partial[0], full[0]);
+        assert_eq!(partial[3], full[3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch length mismatch")]
+    fn length_checked() {
+        batched_sgemm(&batch(4, 2, 5), &batch(4, 3, 6));
+    }
+
+    #[test]
+    fn empty_batch() {
+        assert!(batched_sgemm(&[], &[]).is_empty());
+    }
+}

@@ -1,0 +1,160 @@
+//! Mixed-precision and half-precision CPU GEMMs — the CPU-side images of
+//! the paper's two device paths:
+//!
+//! * [`mixed_gemm`]  — *Tensor Core semantics* (Fig. 3): inputs rounded to
+//!   f16, products exact, accumulation in f32.
+//! * [`hgemm`]       — *CUDA-core half semantics*: every multiply AND
+//!   every accumulate rounds to f16 (what `cublasHgemm` does on FP16
+//!   units).  The numerical gap between these two is the paper's central
+//!   precision argument.
+
+use crate::halfprec::{f16_to_f32, f32_to_f16, half_add, half_mul, Half};
+
+use super::Matrix;
+
+/// Tensor-Core-semantics GEMM: C = alpha*(f16(A) x f16(B)) + beta*C with
+/// f32 accumulation.  Row-major, result f32.
+pub fn mixed_gemm(a: &Matrix, b: &Matrix, c: Option<&Matrix>, alpha: f32, beta: f32) -> Matrix {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "inner dimension mismatch");
+
+    // Round inputs once (the paper's untimed conversion step).
+    let ah: Vec<f32> = a.as_slice().iter().map(|&x| f16_to_f32(f32_to_f16(x))).collect();
+    let bh: Vec<f32> = b.as_slice().iter().map(|&x| f16_to_f32(f32_to_f16(x))).collect();
+
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32; // the FP32 accumulator fragment
+            for p in 0..k {
+                // f16 x f16 product is exact in f32
+                acc += ah[i * k + p] * bh[p * n + j];
+            }
+            out[(i, j)] = alpha * acc + beta * c.map_or(0.0, |c| c[(i, j)]);
+        }
+    }
+    out
+}
+
+/// Tensor-Core GEMM continuing an existing f32 accumulator matrix (used
+/// by the exact-chaining refinement): C += f16(A) x f16(B).
+pub fn mixed_gemm_accumulate(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let prod = mixed_gemm(a, b, None, 1.0, 0.0);
+    for (o, p) in c.as_mut_slice().iter_mut().zip(prod.as_slice()) {
+        *o += p;
+    }
+}
+
+/// CUDA-core hgemm: all arithmetic in binary16 (multiply rounds, every
+/// accumulate rounds).  Result returned widened to f32 for uniformity.
+pub fn hgemm(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "inner dimension mismatch");
+
+    let ah: Vec<Half> = a.as_slice().iter().map(|&x| f32_to_f16(x)).collect();
+    let bh: Vec<Half> = b.as_slice().iter().map(|&x| f32_to_f16(x)).collect();
+
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = Half::ZERO;
+            for p in 0..k {
+                acc = half_add(acc, half_mul(ah[i * k + p], bh[p * n + j]));
+            }
+            out[(i, j)] = acc.to_f32();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::naive::{dgemm_naive, sgemm_naive};
+    use super::*;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64, scale: f32) -> Matrix {
+        let mut s = seed.max(1);
+        Matrix::from_fn(rows, cols, |_, _| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (((s >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0) * scale
+        })
+    }
+
+    #[test]
+    fn mixed_equals_sgemm_on_f16_exact_inputs() {
+        // integer inputs |x| <= 8 are exactly representable in f16; with
+        // k=16 all sums stay exact, so mixed == sgemm bitwise.
+        let a = Matrix::from_fn(16, 16, |i, j| ((i * 3 + j) % 9) as f32 - 4.0);
+        let b = Matrix::from_fn(16, 16, |i, j| ((i + 5 * j) % 7) as f32 - 3.0);
+        let got = mixed_gemm(&a, &b, None, 1.0, 0.0);
+        let want = sgemm_naive(&a, &b, None, 1.0, 0.0);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn mixed_error_is_input_rounding_only() {
+        // error vs f64 truth must be within the analytic input-rounding
+        // bound 2*k*2^-12 + k*2^-24 (unit-range inputs)
+        let k = 64;
+        let a = rand_matrix(32, k, 11, 1.0);
+        let b = rand_matrix(k, 32, 12, 1.0);
+        let got = mixed_gemm(&a, &b, None, 1.0, 0.0);
+        let truth = dgemm_naive(&a, &b);
+        let bound = 2.0 * k as f32 * 2f32.powi(-12) + k as f32 * 2f32.powi(-24);
+        assert!(got.max_norm_diff(&truth) <= bound);
+    }
+
+    #[test]
+    fn hgemm_worse_than_mixed() {
+        // the paper's motivation for f32 accumulation: hgemm loses
+        // precision in the accumulator, mixed does not
+        let n = 128;
+        let a = rand_matrix(n, n, 21, 1.0);
+        let b = rand_matrix(n, n, 22, 1.0);
+        let truth = dgemm_naive(&a, &b);
+        let e_mixed = mixed_gemm(&a, &b, None, 1.0, 0.0).max_norm_diff(&truth);
+        let e_half = hgemm(&a, &b).max_norm_diff(&truth);
+        assert!(e_half > 2.0 * e_mixed, "hgemm {e_half} vs mixed {e_mixed}");
+    }
+
+    #[test]
+    fn hgemm_absorption_effect() {
+        // accumulating 1.0 N times in f16 saturates near 2048 (ulp=2 above
+        // 2048 absorbs the +1) — the §V absorption pathology
+        let n = 4096;
+        let a = Matrix::from_fn(1, n, |_, _| 1.0);
+        let b = Matrix::from_fn(n, 1, |_, _| 1.0);
+        let h = hgemm(&a, &b);
+        assert!(h[(0, 0)] <= 2048.0, "f16 accumulator saturates: {}", h[(0, 0)]);
+        let m = mixed_gemm(&a, &b, None, 1.0, 0.0);
+        assert_eq!(m[(0, 0)], n as f32); // f32 accumulator is exact here
+    }
+
+    #[test]
+    fn accumulate_variant_chains() {
+        let a = rand_matrix(8, 8, 31, 1.0);
+        let b = rand_matrix(8, 8, 32, 1.0);
+        let mut c = mixed_gemm(&a, &b, None, 1.0, 0.0);
+        mixed_gemm_accumulate(&a, &b, &mut c);
+        let twice = mixed_gemm(&a, &b, None, 2.0, 0.0);
+        assert!(c.max_norm_diff(&twice) < 1e-5);
+    }
+
+    #[test]
+    fn beta_accumulates_prior_c() {
+        let a = rand_matrix(8, 8, 41, 1.0);
+        let b = rand_matrix(8, 8, 42, 1.0);
+        let c0 = rand_matrix(8, 8, 43, 1.0);
+        let got = mixed_gemm(&a, &b, Some(&c0), 1.0, 1.0);
+        let prod = mixed_gemm(&a, &b, None, 1.0, 0.0);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((got[(i, j)] - (prod[(i, j)] + c0[(i, j)])).abs() < 1e-6);
+            }
+        }
+    }
+}

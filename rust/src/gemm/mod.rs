@@ -1,0 +1,19 @@
+//! S2 — CPU reference GEMM substrate.
+//!
+//! These kernels are the *numerical oracles* on the Rust side: everything
+//! the runtime executes through PJRT and everything `tcemu` computes is
+//! cross-checked against them in tests, and they double as the
+//! single-precision baselines (the paper's CUDA-core sgemm/hgemm) for the
+//! error studies.
+
+mod batched;
+mod blocked;
+mod matrix;
+mod mixed;
+mod naive;
+
+pub use batched::{batched_hgemm, batched_mixed_gemm, batched_sgemm};
+pub use blocked::sgemm_blocked;
+pub use matrix::Matrix;
+pub use mixed::{hgemm, mixed_gemm, mixed_gemm_accumulate};
+pub use naive::{dgemm_naive, sgemm_naive};

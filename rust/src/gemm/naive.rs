@@ -1,0 +1,102 @@
+//! Naive triple-loop GEMMs — the simplest possible oracles.
+//!
+//! `dgemm_naive` accumulates in f64 and is the crate-wide ground truth
+//! for "what is the exact product"; `sgemm_naive` is the f32 baseline
+//! (the paper's CUDA-core sgemm semantics: f32 multiply, f32 accumulate).
+
+use super::Matrix;
+
+/// C = alpha*A*B + beta*C with all arithmetic in f32.
+pub fn sgemm_naive(a: &Matrix, b: &Matrix, c: Option<&Matrix>, alpha: f32, beta: f32) -> Matrix {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "inner dimension mismatch: {k} vs {k2}");
+    if let Some(c) = c {
+        assert_eq!(c.shape(), (m, n), "C shape mismatch");
+    }
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for p in 0..k {
+                acc += a[(i, p)] * b[(p, j)];
+            }
+            out[(i, j)] = alpha * acc + beta * c.map_or(0.0, |c| c[(i, j)]);
+        }
+    }
+    out
+}
+
+/// C = A*B with f64 accumulation — the "exact" reference for error studies
+/// (its own error is ~2^-29 relative, negligible next to any f16 effect).
+pub fn dgemm_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "inner dimension mismatch");
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for p in 0..k {
+                acc += a[(i, p)] as f64 * b[(p, j)] as f64;
+            }
+            out[(i, j)] = acc as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_product() {
+        let a = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let c = sgemm_naive(&a, &Matrix::eye(4), None, 1.0, 0.0);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn known_2x2() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = sgemm_naive(&a, &b, None, 1.0, 0.0);
+        assert_eq!(c.as_slice(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn alpha_beta_accumulate() {
+        let a = Matrix::eye(2);
+        let b = Matrix::eye(2);
+        let c0 = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        // C = 2*I*I + 3*ones
+        let c = sgemm_naive(&a, &b, Some(&c0), 2.0, 3.0);
+        assert_eq!(c.as_slice(), &[5.0, 3.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        let a = Matrix::from_fn(2, 3, |i, j| (i + j) as f32);
+        let b = Matrix::from_fn(3, 4, |i, j| (i * j) as f32);
+        let c = sgemm_naive(&a, &b, None, 1.0, 0.0);
+        assert_eq!(c.shape(), (2, 4));
+        // row 0 of a = [0,1,2]; col 1 of b = [0,1,2] => dot = 5
+        assert_eq!(c[(0, 1)], 5.0);
+    }
+
+    #[test]
+    fn dgemm_matches_sgemm_on_exact_inputs() {
+        let a = Matrix::from_fn(8, 8, |i, j| ((i * 8 + j) % 5) as f32 - 2.0);
+        let b = Matrix::from_fn(8, 8, |i, j| ((i + 2 * j) % 7) as f32 - 3.0);
+        let s = sgemm_naive(&a, &b, None, 1.0, 0.0);
+        let d = dgemm_naive(&a, &b);
+        assert_eq!(s, d); // all-integer products: both exact
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimension mismatch")]
+    fn dimension_check() {
+        sgemm_naive(&Matrix::zeros(2, 3), &Matrix::zeros(4, 2), None, 1.0, 0.0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Half-precision arithmetic, defined the way narrow-precision hardware
+//! defines it: compute in a wider format, round once to binary16.
+//!
+//! These are the CUDA-core *hgemm* semantics (the paper's half-precision
+//! baseline in Fig. 6): both multiply AND accumulate round to f16 — unlike
+//! the Tensor Core path ([`crate::tcemu`]) which keeps the accumulator in
+//! f32.  The contrast between these two is exactly the paper's
+//! mixed-precision story.
+
+use super::convert::{f32_to_f16, Half};
+
+/// a + b rounded once to binary16 (f32 add is exact for two halves).
+#[inline]
+pub fn half_add(a: Half, b: Half) -> Half {
+    f32_to_f16(a.to_f32() + b.to_f32())
+}
+
+/// a - b rounded once to binary16.
+#[inline]
+pub fn half_sub(a: Half, b: Half) -> Half {
+    f32_to_f16(a.to_f32() - b.to_f32())
+}
+
+/// a * b rounded once to binary16 (the f32 product of two halves is
+/// exact — 22-bit significand — so the only rounding is the final f16 one).
+#[inline]
+pub fn half_mul(a: Half, b: Half) -> Half {
+    f32_to_f16(a.to_f32() * b.to_f32())
+}
+
+/// a / b rounded to binary16.  f32 division of two halves is not always
+/// exact, but the double-rounding error is below half a f16 ulp, so the
+/// result equals the correctly-rounded f16 quotient for all inputs
+/// (f32 has 13 extra significand bits; Goldberg's double-rounding margin
+/// needs only 2p+2).
+#[inline]
+pub fn half_div(a: Half, b: Half) -> Half {
+    f32_to_f16(a.to_f32() / b.to_f32())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::halfprec::bits::F16_EPSILON;
+
+    fn h(x: f32) -> Half {
+        Half::from_f32(x)
+    }
+
+    #[test]
+    fn add_rounds_to_f16() {
+        // 1 + eps/2 is not representable: rounds back to 1 (tie to even)
+        let r = half_add(h(1.0), h(F16_EPSILON / 2.0));
+        assert_eq!(r, Half::ONE);
+        // 1 + eps is representable
+        let r = half_add(h(1.0), h(F16_EPSILON));
+        assert_eq!(r.to_f32(), 1.0 + F16_EPSILON);
+    }
+
+    #[test]
+    fn mul_exact_cases() {
+        assert_eq!(half_mul(h(2.0), h(3.0)).to_f32(), 6.0);
+        assert_eq!(half_mul(h(-0.5), h(0.25)).to_f32(), -0.125);
+    }
+
+    #[test]
+    fn mul_overflow_to_inf() {
+        assert!(half_mul(h(300.0), h(300.0)).is_infinite());
+    }
+
+    #[test]
+    fn absorption_above_1024() {
+        // §V: no fractional precision above 1024 -> 1024 + 0.4 == 1024
+        let r = half_add(h(1024.0), h(0.4));
+        assert_eq!(r.to_f32(), 1024.0);
+    }
+
+    #[test]
+    fn sub_cancellation_is_exact() {
+        // Sterbenz: subtraction of nearby halves is exact
+        let r = half_sub(h(1.5), h(1.25));
+        assert_eq!(r.to_f32(), 0.25);
+    }
+
+    #[test]
+    fn div_basic() {
+        assert_eq!(half_div(h(1.0), h(2.0)).to_f32(), 0.5);
+        assert!(half_div(h(1.0), h(0.0)).is_infinite());
+    }
+}

@@ -1,0 +1,85 @@
+//! binary16 format constants and bit-level helpers (paper Fig. 4).
+
+/// Significand (fraction/mantissa) bits: 10.
+pub const SIG_BITS: u32 = 10;
+/// Exponent bits: 5.
+pub const EXP_BITS: u32 = 5;
+/// Exponent bias: 15.
+pub const EXP_BIAS: i32 = 15;
+
+/// Largest finite half: 65504.0 (§V "the maximum representable number in
+/// half precision is 65,504").
+pub const F16_MAX: f32 = 65504.0;
+/// Machine epsilon in half precision: 2⁻¹⁰ (§V).
+pub const F16_EPSILON: f32 = 0.0009765625;
+/// Smallest positive normal half: 2⁻¹⁴.
+pub const F16_MIN_POSITIVE_NORMAL: f32 = 6.103515625e-5;
+/// Smallest positive subnormal half: 2⁻²⁴.
+pub const F16_MIN_POSITIVE: f32 = 5.9604644775390625e-8;
+
+pub(crate) const SIGN_MASK: u16 = 0x8000;
+pub(crate) const EXP_MASK: u16 = 0x7C00;
+pub(crate) const SIG_MASK: u16 = 0x03FF;
+pub(crate) const INF_BITS: u16 = 0x7C00;
+pub(crate) const NAN_BITS: u16 = 0x7E00; // canonical quiet NaN
+
+/// Decompose half bits into (sign, biased exponent, significand).
+#[inline]
+pub(crate) fn unpack(bits: u16) -> (u16, u16, u16) {
+    (
+        (bits & SIGN_MASK) >> 15,
+        (bits & EXP_MASK) >> SIG_BITS,
+        bits & SIG_MASK,
+    )
+}
+
+/// Number of representable halves in [2^e, 2^(e+1)): always 1024 for
+/// normal e — the paper's "only 1,024 values for each power of two number
+/// interval" (§V).  Exposed for the precision-analysis tests.
+pub const VALUES_PER_BINADE: u32 = 1 << SIG_BITS;
+
+/// Unit in the last place of a half at magnitude `x` (normal range).
+/// ulp(x) = 2^(floor(log2 x) - 10); e.g. ulp = 32 in [32768, 65536) — the
+/// paper's "accuracy of ±32 between 32,768 and 65,536".
+pub fn ulp_at(x: f32) -> f32 {
+    let ax = x.abs();
+    if ax < F16_MIN_POSITIVE_NORMAL {
+        return F16_MIN_POSITIVE; // subnormal spacing is uniform: 2⁻²⁴
+    }
+    let e = ax.log2().floor() as i32;
+    (2.0f32).powi(e - SIG_BITS as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_match_ieee() {
+        assert_eq!(SIG_BITS + EXP_BITS + 1, 16);
+        assert_eq!(F16_EPSILON, (2.0f32).powi(-10));
+        assert_eq!(F16_MIN_POSITIVE_NORMAL, (2.0f32).powi(-14));
+        assert_eq!(F16_MIN_POSITIVE, (2.0f32).powi(-24));
+    }
+
+    #[test]
+    fn unpack_roundtrip() {
+        let (s, e, m) = unpack(0xBC01); // -1.0009765625
+        assert_eq!((s, e, m), (1, 15, 1));
+    }
+
+    #[test]
+    fn binade_population_is_1024() {
+        assert_eq!(VALUES_PER_BINADE, 1024);
+    }
+
+    #[test]
+    fn paper_ulp_claims() {
+        // "accuracy of ±32 between 32,768 and 65,536" => ulp = 32
+        assert_eq!(ulp_at(40000.0), 32.0);
+        // "all fractional precision is lost for numbers larger than 1,024"
+        assert_eq!(ulp_at(1500.0), 1.0);
+        // 1024 values between 1 and 2 => ulp = 2^-10
+        assert_eq!(ulp_at(1.5), F16_EPSILON);
+    }
+}

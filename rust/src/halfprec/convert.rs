@@ -1,0 +1,270 @@
+//! f32 <-> binary16 conversions with IEEE round-to-nearest-even, bit by bit.
+//!
+//! `f32_to_f16` implements exactly the rounding the paper's protocol
+//! applies to A and B before a Tensor Core GEMM (§VI), including the two
+//! §V failure modes: overflow to ±inf above 65504 ("if the float number
+//! is larger than 65,504, it is set to half infinity") and underflow to
+//! zero/subnormals ("any float number that is too small to be represented
+//! as a half will be set to zero").
+
+use super::bits::*;
+
+/// A binary16 value stored as its bit pattern.  Newtype so the rest of
+/// the crate can't confuse halves with `u16` counters.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct Half(pub u16);
+
+impl Half {
+    pub const ZERO: Half = Half(0);
+    pub const ONE: Half = Half(0x3C00);
+    pub const INFINITY: Half = Half(INF_BITS);
+    pub const NEG_INFINITY: Half = Half(INF_BITS | SIGN_MASK);
+    pub const NAN: Half = Half(NAN_BITS);
+    pub const MAX: Half = Half(0x7BFF); // 65504.0
+
+    #[inline]
+    pub fn from_f32(x: f32) -> Half {
+        f32_to_f16(x)
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f16_to_f32(self)
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & EXP_MASK) == EXP_MASK && (self.0 & SIG_MASK) != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & !SIGN_MASK) == INF_BITS
+    }
+
+    #[inline]
+    pub fn is_sign_negative(self) -> bool {
+        self.0 & SIGN_MASK != 0
+    }
+
+    #[inline]
+    pub fn abs(self) -> Half {
+        Half(self.0 & !SIGN_MASK)
+    }
+
+    #[inline]
+    pub fn neg(self) -> Half {
+        Half(self.0 ^ SIGN_MASK)
+    }
+}
+
+impl From<f32> for Half {
+    fn from(x: f32) -> Half {
+        f32_to_f16(x)
+    }
+}
+
+impl From<Half> for f32 {
+    fn from(h: Half) -> f32 {
+        f16_to_f32(h)
+    }
+}
+
+/// f32 -> binary16, round-to-nearest-even, entirely on the bit patterns.
+pub fn f32_to_f16(x: f32) -> Half {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = ((bits >> 23) & 0xFF) as i32;
+    let sig32 = bits & 0x007F_FFFF;
+
+    // NaN / infinity.
+    if exp32 == 0xFF {
+        return if sig32 != 0 {
+            Half(sign | NAN_BITS)
+        } else {
+            Half(sign | INF_BITS)
+        };
+    }
+
+    // Unbiased exponent; f32 bias is 127.
+    let e = exp32 - 127;
+
+    // Overflow: anything that would round to a value > 65504 becomes inf.
+    // The threshold is 65520 = halfway between 65504 and the next (absent)
+    // step 65536; RNE sends exactly-65520 up to inf.
+    if e > 15 {
+        return Half(sign | INF_BITS);
+    }
+    if e == 15 {
+        // max normal half has sig 0x3FF; check rounding against overflow
+        let sig10 = sig32 >> 13;
+        let rest = sig32 & 0x1FFF;
+        let round_up = rest > 0x1000 || (rest == 0x1000 && (sig10 & 1) == 1);
+        if sig10 == 0x3FF && round_up {
+            return Half(sign | INF_BITS);
+        }
+    }
+
+    if e >= -14 {
+        // Normal half range.
+        let exp16 = (e + EXP_BIAS) as u16;
+        let sig10 = (sig32 >> 13) as u16;
+        let rest = sig32 & 0x1FFF; // 13 dropped bits
+        let mut h = (exp16 << SIG_BITS) | sig10;
+        // round-to-nearest-even on the dropped bits
+        if rest > 0x1000 || (rest == 0x1000 && (sig10 & 1) == 1) {
+            h += 1; // carries ripple into the exponent correctly
+        }
+        return Half(sign | h);
+    }
+
+    // Subnormal half range: e in [-24, -15] produces subnormals; below
+    // that, zero.  Build the 10-bit subnormal with the implicit leading 1
+    // shifted into place, then RNE on what falls off.
+    if e < -25 {
+        return Half(sign); // rounds to zero (even exactly 2^-25 w/ sig=0 -> 0)
+    }
+    let full_sig = 0x0080_0000 | sig32; // implicit 1 + 23 fraction bits
+    let shift = (-14 - e) as u32 + 13; // total right shift to 10-bit field
+    let sig10 = (full_sig >> shift) as u16;
+    let rest = full_sig & ((1u32 << shift) - 1);
+    let halfway = 1u32 << (shift - 1);
+    let mut h = sig10;
+    if rest > halfway || (rest == halfway && (sig10 & 1) == 1) {
+        h += 1;
+    }
+    Half(sign | h)
+}
+
+/// binary16 -> f32, exact (every half is representable in f32).
+pub fn f16_to_f32(h: Half) -> f32 {
+    let (sign, exp, sig) = unpack(h.0);
+    let sign32 = (sign as u32) << 31;
+
+    let bits = if exp == 0 {
+        if sig == 0 {
+            sign32 // +-0
+        } else {
+            // subnormal: value = sig * 2^-24; normalize into f32
+            let msb = 31 - (sig as u32).leading_zeros(); // MSB index, 0..=9
+            let exp32 = 127 - 24 + msb; // unbiased exponent is msb - 24
+            let frac = ((sig as u32) << (23 - msb)) & 0x007F_FFFF;
+            sign32 | (exp32 << 23) | frac
+        }
+    } else if exp == 0x1F {
+        if sig == 0 {
+            sign32 | 0x7F80_0000 // inf
+        } else {
+            sign32 | 0x7FC0_0000 // NaN
+        }
+    } else {
+        let exp32 = (exp as i32 - EXP_BIAS + 127) as u32;
+        sign32 | (exp32 << 23) | ((sig as u32) << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference conversion via the hardware `as` cast (Rust lowers f32 as
+    /// f16 via correct RNE when the `f16` type exists; here we emulate the
+    /// oracle with a table of known values instead).
+    #[test]
+    fn known_values() {
+        for (f, bits) in [
+            (0.0f32, 0x0000u16),
+            (-0.0, 0x8000),
+            (1.0, 0x3C00),
+            (-1.0, 0xBC00),
+            (2.0, 0x4000),
+            (65504.0, 0x7BFF),
+            (0.5, 0x3800),
+            (0.099975586, 0x2E66), // nearest half to 0.1
+            (6.103515625e-5, 0x0400),  // min normal
+            (5.9604644775390625e-8, 0x0001), // min subnormal
+        ] {
+            assert_eq!(f32_to_f16(f).0, bits, "f32_to_f16({f})");
+        }
+    }
+
+    #[test]
+    fn roundtrip_exact_for_all_halves() {
+        // every finite half must roundtrip bit-exactly through f32
+        for bits in 0u16..=0xFFFF {
+            let h = Half(bits);
+            if h.is_nan() {
+                assert!(f32_to_f16(f16_to_f32(h)).is_nan());
+                continue;
+            }
+            let back = f32_to_f16(f16_to_f32(h));
+            assert_eq!(back.0, bits, "bits {bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn overflow_to_infinity() {
+        // §V: "if the float number is larger than 65,504, it is set to
+        // half infinity" (rounding threshold is 65520)
+        assert_eq!(f32_to_f16(65519.0).0, 0x7BFF);
+        assert!(f32_to_f16(65520.0).is_infinite());
+        assert!(f32_to_f16(1e30).is_infinite());
+        assert!(f32_to_f16(-70000.0).is_infinite());
+        assert!(f32_to_f16(-70000.0).is_sign_negative());
+    }
+
+    #[test]
+    fn underflow_to_zero() {
+        // §V: "any float number that is too small ... set to zero"
+        assert_eq!(f32_to_f16(1e-10).0, 0x0000);
+        assert_eq!(f32_to_f16(-1e-10).0, 0x8000);
+        // but the subnormal range is kept
+        assert_eq!(f32_to_f16(3e-8).0, 0x0001); // rounds to min subnormal
+    }
+
+    #[test]
+    fn round_to_nearest_even_ties() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10: ties to even (1.0)
+        let tie = 1.0 + (2.0f32).powi(-11);
+        assert_eq!(f32_to_f16(tie).0, 0x3C00);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9: ties to even (1+2^-9)
+        let tie2 = 1.0 + 3.0 * (2.0f32).powi(-11);
+        assert_eq!(f32_to_f16(tie2).0, 0x3C02);
+        // just above the tie rounds up
+        assert_eq!(f32_to_f16(tie + 1e-7).0, 0x3C01);
+    }
+
+    #[test]
+    fn rne_carry_ripples_into_exponent() {
+        // largest sig in a binade + round-up must bump the exponent
+        let x = 1.9999999; // rounds to 2.0
+        assert_eq!(f32_to_f16(x).0, 0x4000);
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(f32_to_f16(f32::NAN).is_nan());
+        assert!(f16_to_f32(Half::NAN).is_nan());
+    }
+
+    #[test]
+    fn rounding_error_bounded_by_half_ulp() {
+        // exhaustive-ish sweep: |x - f16(x)| <= ulp(x)/2 in the normal range
+        let mut x = 6.2e-5f32;
+        while x < 60000.0 {
+            let err = (x - f32_to_f16(x).to_f32()).abs();
+            assert!(
+                err <= super::super::bits::ulp_at(x) / 2.0 + f32::EPSILON,
+                "x={x} err={err}"
+            );
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn epsilon_is_gap_above_one() {
+        let above = f16_to_f32(Half(Half::ONE.0 + 1));
+        assert_eq!(above - 1.0, F16_EPSILON);
+    }
+}

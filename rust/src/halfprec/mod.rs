@@ -1,0 +1,24 @@
+//! S1 — IEEE 754 binary16 ("half") substrate, implemented from scratch.
+//!
+//! The paper's precision analysis (§V, Fig. 4) rests entirely on the
+//! binary16 format: 1 sign bit, 5 exponent bits, 10 significand bits,
+//! range ±65504, machine epsilon 2⁻¹⁰, and "only 1,024 values for each
+//! power-of-two interval".  Everything downstream — the Tensor Core
+//! emulation ([`crate::tcemu`]), the refinement math
+//! ([`crate::precision`]) and the error figures (F8/F9) — is built on the
+//! conversions in this module, so they are implemented bit-by-bit here
+//! (no `half` crate) and tested exhaustively against the f32 rounding
+//! semantics.
+
+mod arith;
+mod bits;
+mod convert;
+mod residual;
+
+pub use arith::{half_add, half_div, half_mul, half_sub};
+pub use bits::{
+    ulp_at, EXP_BIAS, EXP_BITS, F16_EPSILON, F16_MAX, F16_MIN_POSITIVE,
+    F16_MIN_POSITIVE_NORMAL, SIG_BITS, VALUES_PER_BINADE,
+};
+pub use convert::{f16_to_f32, f32_to_f16, Half};
+pub use residual::{residual_f16, split_residual, ResidualSplit};

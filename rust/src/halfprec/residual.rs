@@ -1,0 +1,120 @@
+//! Eq. 1 of the paper: the half-precision residual split.
+//!
+//! `R = x_single − x_half`, with R itself stored in half precision.  The
+//! refinement GEMMs (Eqs. 2–3, [`crate::precision::refine`]) are built on
+//! this split; its exactness properties determine how much precision the
+//! refinement can recover.
+
+use super::convert::{f16_to_f32, f32_to_f16, Half};
+
+/// The two-halves decomposition of an f32: `value ≈ hi + lo` with both
+/// parts binary16.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResidualSplit {
+    /// `f16(x)` — what the Tensor Core GEMM consumes.
+    pub hi: Half,
+    /// `f16(x − f32(hi))` — the Eq. 1 residual.
+    pub lo: Half,
+}
+
+impl ResidualSplit {
+    /// Reconstruct the f32 value the split represents (exact for the
+    /// paper's input ranges; see `split_residual`).
+    pub fn reconstruct(self) -> f32 {
+        f16_to_f32(self.hi) + f16_to_f32(self.lo)
+    }
+}
+
+/// Eq. 1: residual of rounding `x` to half, itself rounded to half.
+#[inline]
+pub fn residual_f16(x: f32) -> Half {
+    f32_to_f16(x - f16_to_f32(f32_to_f16(x)))
+}
+
+/// Split `x` into rounded half + residual half (the paper's §V scheme:
+/// "the value is originally in 32-bit, it can be fully represented by two
+/// 16-bit numbers, subject to error from distribution").
+///
+/// Exactness: the rounding error of a normal half at magnitude `|x|` is
+/// ≤ ulp(x)/2 = 2^(e−11); as an f16 it needs its own exponent in range and
+/// ≤ 11 significant bits.  An f32 has 24 significand bits, so hi (11 bits)
+/// + lo (11 bits) cover 22 — the split is exact whenever the dropped f32
+/// bits beyond 22 are zero *or* lo's own rounding absorbs them (< ulp(lo)/2
+/// leak otherwise).  Tests quantify both regimes.
+#[inline]
+pub fn split_residual(x: f32) -> ResidualSplit {
+    let hi = f32_to_f16(x);
+    let lo = f32_to_f16(x - f16_to_f32(hi));
+    ResidualSplit { hi, lo }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift for test data (no rand dependency).
+    fn uniform(seed: &mut u64, lo: f32, hi: f32) -> f32 {
+        *seed ^= *seed << 13;
+        *seed ^= *seed >> 7;
+        *seed ^= *seed << 17;
+        let u = (*seed >> 40) as f32 / (1u64 << 24) as f32;
+        lo + (hi - lo) * u
+    }
+
+    #[test]
+    fn residual_magnitude_below_half_ulp() {
+        let mut s = 7u64;
+        for _ in 0..10_000 {
+            let x = uniform(&mut s, -1.0, 1.0);
+            let r = residual_f16(x).to_f32();
+            assert!(r.abs() <= 2f32.powi(-11), "x={x} r={r}");
+        }
+    }
+
+    #[test]
+    fn split_exact_on_unit_range() {
+        // U[-1,1]: f32 values here have <= 24 significant bits and hi
+        // captures 11, lo captures the next 11; the residual of the
+        // residual is below f16 subnormal resolution only when the value
+        // has >22 significant bits -- measure the worst leak.
+        let mut s = 42u64;
+        let mut worst = 0f32;
+        for _ in 0..10_000 {
+            let x = uniform(&mut s, -1.0, 1.0);
+            let leak = (x - split_residual(x).reconstruct()).abs();
+            worst = worst.max(leak);
+        }
+        // leak bounded by half an ulp of the residual: 2^-11 * 2^-11 = 2^-22
+        assert!(worst <= 2f32.powi(-22), "worst leak {worst}");
+    }
+
+    #[test]
+    fn split_exact_on_pm16() {
+        let mut s = 1234u64;
+        let mut worst = 0f32;
+        for _ in 0..10_000 {
+            let x = uniform(&mut s, -16.0, 16.0);
+            let leak = (x - split_residual(x).reconstruct()).abs();
+            worst = worst.max(leak);
+        }
+        assert!(worst <= 2f32.powi(-18), "worst leak {worst}");
+    }
+
+    #[test]
+    fn split_of_representable_half_has_zero_residual() {
+        for x in [0.5f32, 1.0, 1.5, 100.0, 1024.0, -0.125] {
+            let s = split_residual(x);
+            assert_eq!(s.lo, Half::ZERO, "x={x}");
+            assert_eq!(s.reconstruct(), x);
+        }
+    }
+
+    #[test]
+    fn residual_sign_follows_rounding_direction() {
+        // x slightly above a representable half rounds down -> positive residual
+        let x = 1.0 + 2f32.powi(-12); // rounds to 1.0
+        assert!(residual_f16(x).to_f32() > 0.0);
+        let y = 1.0 - 2f32.powi(-13); // rounds to 1.0 (tie-ish), residual negative
+        assert!(residual_f16(y).to_f32() <= 0.0);
+    }
+}

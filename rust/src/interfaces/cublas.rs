@@ -1,0 +1,251 @@
+//! The cuBLAS-style interface (paper §IV-A): an opaque handle with a
+//! *math mode* — "the cuBLAS math mode needs to be set to
+//! CUBLAS_TENSOR_OP_MATH using the function cublasSetMathMode()".
+//!
+//! `gemm_ex` dispatches on the mode exactly the way cuBLAS does: default
+//! mode computes in full f32 on "CUDA cores"; TensorOp mode rounds inputs
+//! to f16 and accumulates in f32 on "Tensor Cores".  Batched GEMM is also
+//! provided, including the paper's footnote 1 constraint: at the time of
+//! writing, `gemm_batched` on Tensor Cores was *unsupported* — the
+//! coordinator's batcher is the WMMA workaround, and this API returns an
+//! error in TensorOp mode unless `allow_post_9_1_128` (the cuBLAS release
+//! that added it) is set.
+
+use crate::gemm::{mixed_gemm, sgemm_blocked, Matrix};
+use crate::precision::{refine_gemm, RefineMode};
+
+/// cuBLAS math modes (cublasMath_t).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MathMode {
+    /// CUBLAS_DEFAULT_MATH: f32 on CUDA cores.
+    #[default]
+    Default,
+    /// CUBLAS_TENSOR_OP_MATH: mixed precision on Tensor Cores.
+    TensorOp,
+}
+
+/// GEMM algorithm selector (cublasGemmAlgo_t, narrowed to what the study
+/// uses).  `RefinedTensorOp*` are the library's extension: the paper's
+/// §V technique surfaced as first-class algorithms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum GemmAlgo {
+    #[default]
+    Default,
+    /// Eq. 2 refinement (2 Tensor-Core GEMMs).
+    RefinedTensorOpA,
+    /// Eq. 3 refinement (4 Tensor-Core GEMMs).
+    RefinedTensorOpAB,
+}
+
+/// Errors the handle can report (mirrors cublasStatus_t categories).
+#[derive(Debug, PartialEq, Eq)]
+pub enum CublasError {
+    /// Batched GEMM on Tensor Cores before cuBLAS 9.1.128 (footnote 1).
+    NotSupported(&'static str),
+    /// Dimension mismatch.
+    InvalidValue(&'static str),
+}
+
+impl std::fmt::Display for CublasError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CublasError::NotSupported(m) => write!(f, "not supported: {m}"),
+            CublasError::InvalidValue(m) => write!(f, "invalid value: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CublasError {}
+
+/// The cuBLAS-style handle.
+#[derive(Clone, Debug, Default)]
+pub struct CublasHandle {
+    math_mode: MathMode,
+    /// Model a cuBLAS >= 9.1.128 library (footnote 1: batched Tensor-Core
+    /// GEMM "was released in cuBLAS 9.1.128" after the work completed).
+    pub allow_post_9_1_128: bool,
+}
+
+impl CublasHandle {
+    pub fn new() -> CublasHandle {
+        CublasHandle::default()
+    }
+
+    /// cublasSetMathMode().
+    pub fn set_math_mode(&mut self, mode: MathMode) {
+        self.math_mode = mode;
+    }
+
+    pub fn math_mode(&self) -> MathMode {
+        self.math_mode
+    }
+
+    /// cublasGemmEx(): C = alpha*A*B + beta*C, dispatching on math mode
+    /// and algorithm.
+    pub fn gemm_ex(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        c: Option<&Matrix>,
+        alpha: f32,
+        beta: f32,
+        algo: GemmAlgo,
+    ) -> Result<Matrix, CublasError> {
+        if a.cols() != b.rows() {
+            return Err(CublasError::InvalidValue("inner dimensions differ"));
+        }
+        match (self.math_mode, algo) {
+            (MathMode::Default, GemmAlgo::Default) => {
+                Ok(sgemm_blocked(a, b, c, alpha, beta))
+            }
+            (MathMode::Default, _) => Err(CublasError::NotSupported(
+                "refined algorithms require CUBLAS_TENSOR_OP_MATH",
+            )),
+            (MathMode::TensorOp, GemmAlgo::Default) => {
+                Ok(mixed_gemm(a, b, c, alpha, beta))
+            }
+            (MathMode::TensorOp, GemmAlgo::RefinedTensorOpA) => {
+                Ok(scale_accum(refine_gemm(a, b, RefineMode::RefineA), c, alpha, beta))
+            }
+            (MathMode::TensorOp, GemmAlgo::RefinedTensorOpAB) => {
+                Ok(scale_accum(refine_gemm(a, b, RefineMode::RefineAB), c, alpha, beta))
+            }
+        }
+    }
+
+    /// cublasSgemmBatched() / the Tensor-Core batched GEMM.  Returns
+    /// `NotSupported` in TensorOp mode unless the handle models cuBLAS
+    /// >= 9.1.128 — the exact constraint that made the paper write its
+    /// own batched WMMA kernel (§IV-B + footnote 1).
+    pub fn gemm_batched(
+        &self,
+        a: &[Matrix],
+        b: &[Matrix],
+    ) -> Result<Vec<Matrix>, CublasError> {
+        if a.len() != b.len() {
+            return Err(CublasError::InvalidValue("batch length mismatch"));
+        }
+        match self.math_mode {
+            MathMode::Default => Ok(crate::gemm::batched_sgemm(a, b)),
+            MathMode::TensorOp if self.allow_post_9_1_128 => {
+                Ok(crate::gemm::batched_mixed_gemm(a, b))
+            }
+            MathMode::TensorOp => Err(CublasError::NotSupported(
+                "batched GEMM is not supported by NVIDIA Tensor Cores \
+                 (cuBLAS < 9.1.128); use the WMMA batcher",
+            )),
+        }
+    }
+}
+
+fn scale_accum(mut prod: Matrix, c: Option<&Matrix>, alpha: f32, beta: f32) -> Matrix {
+    match c {
+        None => {
+            for v in prod.as_mut_slice() {
+                *v *= alpha;
+            }
+            prod
+        }
+        Some(c) => {
+            let (r, n) = prod.shape();
+            Matrix::from_fn(r, n, |i, j| alpha * prod[(i, j)] + beta * c[(i, j)])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::dgemm_naive;
+    use crate::workload::{uniform_batch, uniform_matrix, Rng};
+
+    #[test]
+    fn default_math_is_f32() {
+        let mut rng = Rng::new(1);
+        let a = uniform_matrix(&mut rng, 32, 32, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 32, 32, -1.0, 1.0);
+        let h = CublasHandle::new();
+        let c = h.gemm_ex(&a, &b, None, 1.0, 0.0, GemmAlgo::Default).unwrap();
+        let truth = dgemm_naive(&a, &b);
+        assert!(c.max_norm_diff(&truth) < 1e-4); // f32-level error only
+    }
+
+    #[test]
+    fn tensor_op_math_rounds_inputs() {
+        let mut rng = Rng::new(2);
+        let a = uniform_matrix(&mut rng, 32, 32, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 32, 32, -1.0, 1.0);
+        let mut h = CublasHandle::new();
+        h.set_math_mode(MathMode::TensorOp);
+        let c_tc = h.gemm_ex(&a, &b, None, 1.0, 0.0, GemmAlgo::Default).unwrap();
+        let c_f32 = CublasHandle::new()
+            .gemm_ex(&a, &b, None, 1.0, 0.0, GemmAlgo::Default)
+            .unwrap();
+        // Tensor-Core result must differ (f16 input rounding) ...
+        assert!(c_tc.max_norm_diff(&c_f32) > 1e-4);
+        // ... and equal the mixed oracle exactly
+        assert_eq!(c_tc, mixed_gemm(&a, &b, None, 1.0, 0.0));
+    }
+
+    #[test]
+    fn refined_algos_reduce_error() {
+        let mut rng = Rng::new(3);
+        let a = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
+        let truth = dgemm_naive(&a, &b);
+        let mut h = CublasHandle::new();
+        h.set_math_mode(MathMode::TensorOp);
+        let e_plain = h
+            .gemm_ex(&a, &b, None, 1.0, 0.0, GemmAlgo::Default)
+            .unwrap()
+            .max_norm_diff(&truth);
+        let e_ra = h
+            .gemm_ex(&a, &b, None, 1.0, 0.0, GemmAlgo::RefinedTensorOpA)
+            .unwrap()
+            .max_norm_diff(&truth);
+        let e_rab = h
+            .gemm_ex(&a, &b, None, 1.0, 0.0, GemmAlgo::RefinedTensorOpAB)
+            .unwrap()
+            .max_norm_diff(&truth);
+        assert!(e_plain > e_ra && e_ra > e_rab);
+    }
+
+    #[test]
+    fn refined_requires_tensor_math() {
+        let h = CublasHandle::new(); // default math
+        let a = Matrix::eye(16);
+        let err = h.gemm_ex(&a, &a, None, 1.0, 0.0, GemmAlgo::RefinedTensorOpA);
+        assert!(matches!(err, Err(CublasError::NotSupported(_))));
+    }
+
+    #[test]
+    fn batched_tensor_op_unsupported_pre_9_1_128() {
+        // the paper's footnote-1 constraint
+        let mut rng = Rng::new(4);
+        let a = uniform_batch(&mut rng, 4, 16, -1.0, 1.0);
+        let b = uniform_batch(&mut rng, 4, 16, -1.0, 1.0);
+        let mut h = CublasHandle::new();
+        h.set_math_mode(MathMode::TensorOp);
+        assert!(matches!(
+            h.gemm_batched(&a, &b),
+            Err(CublasError::NotSupported(_))
+        ));
+        // ... and supported once the library models 9.1.128
+        h.allow_post_9_1_128 = true;
+        assert_eq!(h.gemm_batched(&a, &b).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn dimension_error() {
+        let h = CublasHandle::new();
+        let e = h.gemm_ex(
+            &Matrix::zeros(4, 5),
+            &Matrix::zeros(6, 4),
+            None,
+            1.0,
+            0.0,
+            GemmAlgo::Default,
+        );
+        assert!(matches!(e, Err(CublasError::InvalidValue(_))));
+    }
+}

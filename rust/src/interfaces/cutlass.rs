@@ -1,0 +1,197 @@
+//! The CUTLASS-style interface (paper §IV-A): a GEMM parameterized by a
+//! *tile policy*, the way CUTLASS templates parameterize threadblock /
+//! warp tile shapes — "the library supports different tiling strategies
+//! and exploits software pipelining to hide GPU memory latencies".
+//!
+//! The policy's effect on *numerics* is nil (all policies produce the
+//! same k-ascending accumulation, tested below); its effect on
+//! *performance* is what the simulator models (shared-memory staging and
+//! per-tile traffic depend on the tile shape — see `sim::kernels`), and
+//! the A1 ablation sweeps it the way the paper "tested different tiling
+//! techniques ... and report the timing of the set-up with higher
+//! performance".
+
+use crate::gemm::Matrix;
+use crate::tcemu::{mma_sync, AccumFragment, Fragment, Layout, FRAGMENT_DIM};
+
+/// A threadblock tile policy: the C tile each "thread block" owns and the
+/// K panel it stages per iteration, in fragments of 16.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TilePolicy {
+    /// C tile rows (must be a multiple of 16).
+    pub block_m: usize,
+    /// C tile cols (multiple of 16).
+    pub block_n: usize,
+    /// K panel depth staged per main-loop iteration (multiple of 16).
+    pub block_k: usize,
+    /// Software pipeline stages (2 = double buffering).  Numerically
+    /// inert; drives the simulator's latency-hiding model.
+    pub stages: usize,
+}
+
+impl TilePolicy {
+    /// CUTLASS's default large tile: 128x128x32, 2 stages.
+    pub const DEFAULT: TilePolicy =
+        TilePolicy { block_m: 128, block_n: 128, block_k: 32, stages: 2 };
+
+    /// The sweep of policies the A1 ablation explores (a subset of the
+    /// shapes CUTLASS ships).
+    pub const SWEEP: [TilePolicy; 5] = [
+        TilePolicy { block_m: 64, block_n: 64, block_k: 32, stages: 2 },
+        TilePolicy { block_m: 128, block_n: 64, block_k: 32, stages: 2 },
+        TilePolicy { block_m: 64, block_n: 128, block_k: 32, stages: 2 },
+        TilePolicy { block_m: 128, block_n: 128, block_k: 32, stages: 2 },
+        TilePolicy { block_m: 256, block_n: 128, block_k: 32, stages: 2 },
+    ];
+
+    /// Shared-memory bytes the policy stages per iteration (A panel +
+    /// B panel in f16, double-buffered by `stages`).
+    pub fn smem_bytes(&self) -> usize {
+        self.stages * 2 * (self.block_m * self.block_k + self.block_k * self.block_n)
+    }
+
+    /// Does this policy fit Volta's 96 KB/SM shared memory?
+    pub fn fits_volta_smem(&self) -> bool {
+        self.smem_bytes() <= 96 * 1024
+    }
+
+    fn validate(&self) {
+        assert!(
+            self.block_m % FRAGMENT_DIM == 0
+                && self.block_n % FRAGMENT_DIM == 0
+                && self.block_k % FRAGMENT_DIM == 0,
+            "tile policy must be fragment-aligned"
+        );
+        assert!(self.stages >= 1, "at least one pipeline stage");
+    }
+}
+
+/// A CUTLASS-style GEMM instance: construct with a policy, then `run`.
+#[derive(Clone, Debug)]
+pub struct CutlassGemm {
+    policy: TilePolicy,
+}
+
+impl CutlassGemm {
+    pub fn new(policy: TilePolicy) -> CutlassGemm {
+        policy.validate();
+        CutlassGemm { policy }
+    }
+
+    pub fn policy(&self) -> TilePolicy {
+        self.policy
+    }
+
+    /// C = A x B (mixed precision, Tensor-Core semantics).  Dims must be
+    /// multiples of the fragment (16); the tile policy handles edge tiles
+    /// smaller than the block by clamping.
+    pub fn run(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let (k2, n) = b.shape();
+        assert_eq!(k, k2, "inner dimension mismatch");
+        assert!(
+            m % FRAGMENT_DIM == 0 && n % FRAGMENT_DIM == 0 && k % FRAGMENT_DIM == 0,
+            "dims must be multiples of {FRAGMENT_DIM}"
+        );
+        let p = self.policy;
+        let av = a.as_slice();
+        let bv = b.as_slice();
+        let mut c = Matrix::zeros(m, n);
+
+        // threadblock grid over C
+        for bm0 in (0..m).step_by(p.block_m) {
+            let bm1 = (bm0 + p.block_m).min(m);
+            for bn0 in (0..n).step_by(p.block_n) {
+                let bn1 = (bn0 + p.block_n).min(n);
+                // warp grid inside the block: one accumulator per 16x16
+                let tiles_m = (bm1 - bm0) / FRAGMENT_DIM;
+                let tiles_n = (bn1 - bn0) / FRAGMENT_DIM;
+                let mut accs = vec![AccumFragment::fill(0.0); tiles_m * tiles_n];
+                // main loop over K panels (the software-pipelined loop)
+                for bk0 in (0..k).step_by(p.block_k) {
+                    let bk1 = (bk0 + p.block_k).min(k);
+                    for wi in 0..tiles_m {
+                        for wj in 0..tiles_n {
+                            let acc = &mut accs[wi * tiles_n + wj];
+                            for fk in (bk0..bk1).step_by(FRAGMENT_DIM) {
+                                let a_off = (bm0 + wi * FRAGMENT_DIM) * k + fk;
+                                let b_off = fk * n + bn0 + wj * FRAGMENT_DIM;
+                                let amat = Fragment::load(&av[a_off..], k, Layout::RowMajor);
+                                let bmat = Fragment::load(&bv[b_off..], n, Layout::RowMajor);
+                                *acc = mma_sync(&amat, &bmat, acc);
+                            }
+                        }
+                    }
+                }
+                // epilogue: store accumulators
+                for wi in 0..tiles_m {
+                    for wj in 0..tiles_n {
+                        let c_off = (bm0 + wi * FRAGMENT_DIM) * n + bn0 + wj * FRAGMENT_DIM;
+                        let cols = c.cols();
+                        accs[wi * tiles_n + wj].store(
+                            &mut c.as_mut_slice()[c_off..],
+                            cols,
+                            Layout::RowMajor,
+                        );
+                    }
+                }
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::mixed_gemm;
+    use crate::workload::{uniform_matrix, Rng};
+
+    #[test]
+    fn default_policy_matches_oracle() {
+        let mut rng = Rng::new(1);
+        let a = uniform_matrix(&mut rng, 128, 128, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 128, 128, -1.0, 1.0);
+        let got = CutlassGemm::new(TilePolicy::DEFAULT).run(&a, &b);
+        let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn all_policies_agree_bitwise() {
+        // tiling must not change numerics: k order is preserved
+        let mut rng = Rng::new(2);
+        let a = uniform_matrix(&mut rng, 256, 128, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 128, 192, -1.0, 1.0);
+        let base = CutlassGemm::new(TilePolicy::SWEEP[0]).run(&a, &b);
+        for p in &TilePolicy::SWEEP[1..] {
+            let c = CutlassGemm::new(*p).run(&a, &b);
+            assert_eq!(c, base, "policy {p:?}");
+        }
+    }
+
+    #[test]
+    fn matrix_smaller_than_block() {
+        let mut rng = Rng::new(3);
+        let a = uniform_matrix(&mut rng, 32, 32, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 32, 32, -1.0, 1.0);
+        let got = CutlassGemm::new(TilePolicy::DEFAULT).run(&a, &b);
+        assert_eq!(got, mixed_gemm(&a, &b, None, 1.0, 0.0));
+    }
+
+    #[test]
+    fn smem_accounting() {
+        let p = TilePolicy { block_m: 128, block_n: 128, block_k: 32, stages: 2 };
+        // 2 * 2 * (128*32 + 32*128) = 32768
+        assert_eq!(p.smem_bytes(), 32768);
+        assert!(p.fits_volta_smem());
+        let too_big = TilePolicy { block_m: 256, block_n: 256, block_k: 64, stages: 2 };
+        assert!(!too_big.fits_volta_smem());
+    }
+
+    #[test]
+    #[should_panic(expected = "fragment-aligned")]
+    fn policy_validation() {
+        CutlassGemm::new(TilePolicy { block_m: 100, block_n: 64, block_k: 32, stages: 2 });
+    }
+}

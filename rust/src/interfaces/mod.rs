@@ -1,0 +1,23 @@
+//! S4 — the paper's programmability survey (§IV) as executable API layers.
+//!
+//! The paper's first contribution is a survey of the three ways to program
+//! Tensor Cores in 2018, ordered by abstraction level:
+//!
+//! | CUDA artifact            | This module        | Level |
+//! |--------------------------|--------------------|-------|
+//! | CUDA 9 WMMA API          | [`wmma`]           | warp-level fragments, user owns tiling |
+//! | CUTLASS templates        | [`cutlass`]        | tile-policy-parameterized GEMM |
+//! | cuBLAS + math mode       | [`cublas`]         | handle + `MathMode`, opaque kernels |
+//!
+//! All three run on the same [`crate::tcemu`] backend, so their results
+//! agree bit-for-bit; what differs is the API surface — which is exactly
+//! the paper's point.  The simulator ([`crate::sim`]) assigns each its
+//! own performance model (naive WMMA vs tiled CUTLASS vs tuned cuBLAS).
+
+pub mod cublas;
+pub mod cutlass;
+pub mod wmma;
+
+pub use cublas::{CublasHandle, GemmAlgo, MathMode};
+pub use cutlass::{CutlassGemm, TilePolicy};
+pub use wmma::{wmma_batched_gemm, wmma_tensor_op, wmma_tiled_gemm};

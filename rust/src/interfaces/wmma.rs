@@ -1,0 +1,188 @@
+//! The CUDA 9 WMMA interface (paper §IV, Listing 1) as a Rust API.
+//!
+//! The five steps of Listing 1 map one-to-one:
+//!
+//! ```text
+//! wmma::fragment<...> Amat;            Fragment / AccumFragment types
+//! wmma::fill_fragment(Cmat, 0.0f);     AccumFragment::fill(0.0)
+//! wmma::load_matrix_sync(Amat, A, M);  Fragment::load(a, ld, layout)
+//! wmma::mma_sync(Cmat, Amat, Bmat, Cmat);  tcemu::mma_sync(&a, &b, &c)
+//! wmma::store_matrix_sync(D, Cmat, M); AccumFragment::store(dst, ld, ..)
+//! ```
+//!
+//! [`wmma_tensor_op`] is Listing 1 itself (one warp, one 16x16 tile);
+//! [`wmma_tiled_gemm`] is §IV-A's "Tiled Matrix Multiply with CUDA 9
+//! WMMA" (one warp per C tile, K-loop per warp) — the *naive* Fig. 6
+//! variant: every tile load goes to "global memory" with no staging,
+//! which is why its simulated performance model is HBM-bound.
+
+use crate::gemm::Matrix;
+use crate::tcemu::{mma_sync, AccumFragment, Fragment, Layout, FRAGMENT_DIM};
+
+/// Listing 1: D = A x B for one 16x16 tile computed by "one warp".
+/// `a`, `b`, `d` are 1-D arrays with leading dimension `ld`.
+pub fn wmma_tensor_op(d: &mut [f32], a: &[f32], b: &[f32], ld: usize, layout: Layout) {
+    // 1. declare fragments; 2. zero the accumulator
+    let cmat = AccumFragment::fill(0.0);
+    // 3. load inputs (rounding to f16 happens in the load, as the
+    //    fragment's storage precision)
+    let amat = Fragment::load(a, ld, layout);
+    let bmat = Fragment::load(b, ld, layout);
+    // 4. multiply
+    let cmat = mma_sync(&amat, &bmat, &cmat);
+    // 5. store
+    cmat.store(d, ld, match layout {
+        Layout::RowMajor => Layout::RowMajor,
+        Layout::ColMajor => Layout::ColMajor,
+    });
+}
+
+/// §IV-A tiled GEMM over WMMA: C tiles of 16x16, one "warp" each, each
+/// accumulating over K fragment steps.  Requires dims divisible by 16.
+pub fn wmma_tiled_gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "inner dimension mismatch");
+    assert!(
+        m % FRAGMENT_DIM == 0 && n % FRAGMENT_DIM == 0 && k % FRAGMENT_DIM == 0,
+        "dims must be multiples of {FRAGMENT_DIM}"
+    );
+
+    let mut c = Matrix::zeros(m, n);
+    let av = a.as_slice();
+    let bv = b.as_slice();
+
+    for ti in 0..m / FRAGMENT_DIM {
+        for tj in 0..n / FRAGMENT_DIM {
+            // one warp's work: accumulate A(ti, tk) x B(tk, tj) over tk
+            let mut acc = AccumFragment::fill(0.0);
+            for tk in 0..k / FRAGMENT_DIM {
+                let a_off = ti * FRAGMENT_DIM * k + tk * FRAGMENT_DIM;
+                let b_off = tk * FRAGMENT_DIM * n + tj * FRAGMENT_DIM;
+                let amat = Fragment::load(&av[a_off..], k, Layout::RowMajor);
+                let bmat = Fragment::load(&bv[b_off..], n, Layout::RowMajor);
+                acc = mma_sync(&amat, &bmat, &acc);
+            }
+            // store the C tile
+            let c_off = ti * FRAGMENT_DIM * n + tj * FRAGMENT_DIM;
+            let cols = c.cols();
+            acc.store(&mut c.as_mut_slice()[c_off..], cols, Layout::RowMajor);
+        }
+    }
+    c
+}
+
+/// §VI's batched GEMM implementation, at the fragment level: "the CUDA
+/// execution configuration consists of 512 threads per block.  Since a
+/// 16x16 matrix multiplication is executed by one Warp (32 threads), 16
+/// matrix multiplications are executed per thread block."  Each "warp"
+/// (loop iteration within a block group) performs one Listing-1 tensor
+/// op; blocks iterate groups of [`WARPS_PER_BLOCK`].
+pub const WARPS_PER_BLOCK: usize = 16;
+
+/// Batched 16x16 mixed-precision GEMM via warp-level WMMA ops.
+pub fn wmma_batched_gemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
+    assert_eq!(a.len(), b.len(), "batch length mismatch");
+    let mut out = Vec::with_capacity(a.len());
+    // thread-block loop: each block owns WARPS_PER_BLOCK matrices
+    for block in a.chunks(WARPS_PER_BLOCK).zip(b.chunks(WARPS_PER_BLOCK)) {
+        let (ab, bb) = block;
+        // warp loop inside the block: one Listing-1 op per warp
+        for (am, bm) in ab.iter().zip(bb) {
+            assert_eq!(am.shape(), (FRAGMENT_DIM, FRAGMENT_DIM), "16x16 only");
+            assert_eq!(bm.shape(), (FRAGMENT_DIM, FRAGMENT_DIM), "16x16 only");
+            let mut d = Matrix::zeros(FRAGMENT_DIM, FRAGMENT_DIM);
+            wmma_tensor_op(
+                d.as_mut_slice(),
+                am.as_slice(),
+                bm.as_slice(),
+                FRAGMENT_DIM,
+                Layout::RowMajor,
+            );
+            out.push(d);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::mixed_gemm;
+    use crate::workload::{uniform_matrix, Rng};
+
+    #[test]
+    fn listing1_matches_oracle() {
+        let mut rng = Rng::new(1);
+        let a = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+        let mut d = vec![0f32; 256];
+        wmma_tensor_op(&mut d, a.as_slice(), b.as_slice(), 16, Layout::RowMajor);
+        let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
+        assert_eq!(&d, want.as_slice());
+    }
+
+    #[test]
+    fn tiled_gemm_matches_oracle_64() {
+        let mut rng = Rng::new(2);
+        let a = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
+        let got = wmma_tiled_gemm(&a, &b);
+        let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
+        // same k-ascending accumulation order => bitwise equal
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn tiled_gemm_rectangular() {
+        let mut rng = Rng::new(3);
+        let a = uniform_matrix(&mut rng, 32, 48, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 48, 80, -1.0, 1.0);
+        let got = wmma_tiled_gemm(&a, &b);
+        let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiples of 16")]
+    fn tiled_gemm_requires_fragment_multiple() {
+        wmma_tiled_gemm(&Matrix::zeros(20, 16), &Matrix::zeros(16, 16));
+    }
+
+    #[test]
+    fn batched_wmma_matches_batched_oracle() {
+        let mut rng = Rng::new(5);
+        // 40 matrices: 2 full blocks of 16 warps + a 8-warp tail block
+        let a: Vec<Matrix> = (0..40).map(|_| uniform_matrix(&mut rng, 16, 16, -1.0, 1.0)).collect();
+        let b: Vec<Matrix> = (0..40).map(|_| uniform_matrix(&mut rng, 16, 16, -1.0, 1.0)).collect();
+        let got = wmma_batched_gemm(&a, &b);
+        let want = crate::gemm::batched_mixed_gemm(&a, &b);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn batched_wmma_empty() {
+        assert!(wmma_batched_gemm(&[], &[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "16x16 only")]
+    fn batched_wmma_rejects_non_tile() {
+        wmma_batched_gemm(&[Matrix::zeros(8, 8)], &[Matrix::zeros(8, 8)]);
+    }
+
+    #[test]
+    fn col_major_listing1() {
+        // same data interpreted col-major computes A^T B^T ... i.e. the
+        // transposed product; verify against the transposed oracle
+        let mut rng = Rng::new(4);
+        let a = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+        let mut d = vec![0f32; 256];
+        wmma_tensor_op(&mut d, a.as_slice(), b.as_slice(), 16, Layout::ColMajor);
+        let want = mixed_gemm(&a.transpose(), &b.transpose(), None, 1.0, 0.0);
+        // store was col-major too: d holds want^T
+        let got = Matrix::from_vec(16, 16, d).transpose();
+        assert_eq!(got, want);
+    }
+}

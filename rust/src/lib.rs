@@ -1,0 +1,32 @@
+//! # tensoremu
+//!
+//! Reproduction of **"NVIDIA Tensor Core Programmability, Performance &
+//! Precision"** (Markidis et al., IPDPSW 2018) as a three-layer Rust +
+//! JAX + Pallas system (see DESIGN.md for the full inventory):
+//!
+//! * **Numerics** — bit-exact software emulation of the Volta Tensor Core
+//!   mixed-precision contract ([`halfprec`], [`gemm`], [`tcemu`]) plus the
+//!   paper's precision-refinement technique ([`precision`]).
+//! * **Programmability** — the paper's three programming interfaces
+//!   re-implemented as Rust API layers over the emulation
+//!   ([`interfaces::wmma`], [`interfaces::cutlass`], [`interfaces::cublas`]).
+//! * **Performance** — a first-principles Volta V100 timing model
+//!   ([`sim`]) that regenerates the paper's Figs. 6-7, and criterion
+//!   benches for the host-side hot paths.
+//! * **Serving** — a GEMM-as-a-service coordinator ([`coordinator`])
+//!   executing AOT-compiled JAX/Pallas artifacts through PJRT
+//!   ([`runtime`]); Python never runs on the request path.
+//!
+//! Quickstart: `make artifacts && cargo run --release --example quickstart`.
+
+pub mod coordinator;
+pub mod util;
+pub mod figures;
+pub mod gemm;
+pub mod halfprec;
+pub mod interfaces;
+pub mod precision;
+pub mod runtime;
+pub mod sim;
+pub mod tcemu;
+pub mod workload;

@@ -1,0 +1,188 @@
+//! `repro` — the L3 command-line entrypoint.
+//!
+//! ```text
+//! repro info                          device model + artifact inventory
+//! repro check                        run the cross-layer numerics check
+//! repro figures [--fig 6|7|8|9]      regenerate the paper's figures
+//! repro figures --headline           the §VII headline-number table
+//! repro figures --ablation <name>    tiling | shmem | range | pipeline | kahan | cluster
+//! repro serve --requests N [...]     run the GEMM service on a trace
+//! ```
+
+use anyhow::{Context, Result};
+
+use tensoremu::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, GemmRequest};
+use tensoremu::figures;
+use tensoremu::gemm::mixed_gemm;
+use tensoremu::runtime::{Engine, Manifest};
+use tensoremu::sim::VoltaConfig;
+use tensoremu::util::cli::Args;
+use tensoremu::workload::{uniform_matrix, RequestTrace, Rng, TraceSpec};
+
+fn main() {
+    let args = Args::from_env(&["headline", "large", "verbose"]);
+    let cmd = args.positional(0).unwrap_or("info").to_string();
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "info" => info(),
+        "check" => check(),
+        "figures" => figures_cmd(args),
+        "serve" => serve(args),
+        other => anyhow::bail!("unknown command {other:?} (try info|check|figures|serve)"),
+    }
+}
+
+fn info() -> Result<()> {
+    let cfg = VoltaConfig::tesla_v100_pdc();
+    println!("tensoremu — reproduction of 'NVIDIA Tensor Core Programmability,");
+    println!("Performance & Precision' (Markidis et al., IPDPSW 2018)\n");
+    println!("device model: Tesla V100 @ {:.2} GHz", cfg.clock_hz / 1e9);
+    println!("  tensor cores: {}   TC peak: {:.1} Tflops/s", cfg.tensor_cores(), cfg.tc_peak_flops() / 1e12);
+    println!("  fp32 peak: {:.1} Tflops/s   fp16 peak: {:.1} Tflops/s", cfg.fp32_peak_flops() / 1e12, cfg.fp16_peak_flops() / 1e12);
+    match Manifest::discover() {
+        Ok(m) => {
+            println!("\nartifacts: {} in {}", m.artifacts.len(), m.dir.display());
+            for a in &m.artifacts {
+                println!("  {:<40} {:?}", a.name, a.kind);
+            }
+        }
+        Err(e) => println!("\nartifacts: not found ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}
+
+/// Cross-layer numerics check: PJRT artifact vs the Rust emulation.
+fn check() -> Result<()> {
+    let mut e = Engine::discover()?;
+    let mut rng = Rng::new(7);
+    let a = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
+    let name = e
+        .manifest()
+        .gemm("mixed", 64)
+        .context("no mixed GEMM artifact")?
+        .name
+        .clone();
+    let out = e
+        .run(
+            &name,
+            &[
+                tensoremu::runtime::TensorData::from_matrix(&a),
+                tensoremu::runtime::TensorData::from_matrix(&b),
+            ],
+        )?
+        .into_matrix()?;
+    let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
+    let diff = out.max_norm_diff(&want);
+    println!("pallas artifact vs rust tcemu: ||diff||_max = {diff:.3e}");
+    anyhow::ensure!(diff < 1e-4, "cross-layer mismatch!");
+    println!("check OK");
+    Ok(())
+}
+
+fn figures_cmd(args: &Args) -> Result<()> {
+    let cfg = VoltaConfig::tesla_v100_pdc();
+    if args.flag("headline") {
+        let mut e = Engine::discover()?;
+        println!("{}", figures::headline::render(&figures::headline::compute(&mut e, &cfg, 42)?));
+        return Ok(());
+    }
+    if let Some(ab) = args.opt("ablation") {
+        match ab {
+            "tiling" => println!("{}", figures::ablations::tiling_sweep(&cfg)),
+            "shmem" => println!("{}", figures::ablations::shared_memory_study(&cfg)),
+            "range" => {
+                let mut e = Engine::discover()?;
+                println!("{}", figures::ablations::input_range_study(&mut e, 42)?);
+            }
+            "pipeline" => {
+                let mut e = Engine::discover()?;
+                println!("{}", figures::ablations::pipeline_study(&mut e, 42)?);
+            }
+            "kahan" => println!("{}", figures::ablations::kahan_study(42)),
+            "cluster" => println!("{}", figures::ablations::cluster_study()),
+            other => anyhow::bail!("unknown ablation {other:?}"),
+        }
+        return Ok(());
+    }
+    let which: Option<usize> = args.opt_parse("fig");
+    let trials: usize = args.opt_parse("trials").unwrap_or(3);
+    if which.is_none() || which == Some(6) {
+        println!("{}", figures::fig6::render(&figures::fig6::compute(&cfg)));
+    }
+    if which.is_none() || which == Some(7) {
+        println!("{}", figures::fig7::render(&figures::fig7::compute(&cfg)));
+    }
+    if which.is_none() || which == Some(8) {
+        let mut e = Engine::discover()?;
+        println!("{}", figures::fig8::render(&figures::fig8::compute(&mut e, trials, -1.0, 1.0, 42)?));
+    }
+    if which.is_none() || which == Some(9) {
+        let mut e = Engine::discover()?;
+        println!("{}", figures::fig9::render(&figures::fig9::compute(&mut e, &cfg, trials, 42)?));
+    }
+    Ok(())
+}
+
+/// Run the coordinator on a synthetic trace and report service metrics.
+fn serve(args: &Args) -> Result<()> {
+    let count: usize = args.opt_parse("requests").unwrap_or(2000);
+    let rate: f64 = args.opt_parse("rate").unwrap_or(5000.0);
+    let large_fraction: f64 = args.opt_parse("large-fraction").unwrap_or(0.02);
+    let max_wait_us: u64 = args.opt_parse("max-wait-us").unwrap_or(2000);
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch: 1024,
+            max_wait: std::time::Duration::from_micros(max_wait_us),
+        },
+        ..Default::default()
+    })?;
+
+    coord.warmup()?; // pre-compile artifacts off the serving path (§Perf)
+
+    let mut rng = Rng::new(11);
+    let spec = TraceSpec { rate, count, large_fraction, large_n: 512, ..Default::default() };
+    let trace = RequestTrace::generate(&mut rng, spec);
+    println!(
+        "serving {} requests at ~{:.0} req/s ({}% large 512x512 GEMMs)...",
+        count,
+        trace.observed_rate(),
+        (large_fraction * 100.0) as u32
+    );
+
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(count);
+    for ev in &trace.events {
+        // replay arrivals in (scaled) real time
+        let due = std::time::Duration::from_secs_f64(ev.at);
+        if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        let a = uniform_matrix(&mut rng, ev.n, ev.n, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, ev.n, ev.n, -1.0, 1.0);
+        rxs.push(coord.submit(GemmRequest::new(0, a, b)));
+    }
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv().context("service gone")?.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = coord.metrics().snapshot();
+    println!("done: {ok}/{count} ok in {wall:.2?} ({:.0} resp/s)", ok as f64 / wall.as_secs_f64());
+    println!("{}", snap.report());
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Analytic error bounds for mixed-precision GEMM (the model behind the
+//! paper's §V discussion and the N-scaling in Fig. 8).
+//!
+//! Error model for C = f16(A) x f16(B) with f32 accumulation, |a|,|b| ≤ s:
+//!
+//!   e_ij = Σ_k (δa·b + a·δb + δa·δb) + f32 accumulation noise
+//!
+//! with |δa|, |δb| ≤ ulp(s)/2 ≈ s·2⁻¹¹.  Deterministic (worst-case) and
+//! probabilistic (RMS, for iid uniform inputs) forms are provided; the
+//! tests in `precision::refine` and the F8 harness check measurements sit
+//! between the RMS estimate and the worst-case bound.
+
+/// Half-ulp relative rounding error of binary16 for values scaled to
+/// magnitude `scale` (normal range): ulp(scale)/2.
+pub fn f16_half_ulp(scale: f32) -> f32 {
+    crate::halfprec::ulp_at(scale) / 2.0
+}
+
+/// Deterministic worst-case bound on ‖e‖_Max for an N-term inner product
+/// with inputs bounded by `scale` (paper's input model: U[-scale, scale]).
+pub fn mixed_gemm_error_bound(n: usize, scale: f32) -> f32 {
+    let d = f16_half_ulp(scale);
+    // |Σ δa·b| ≤ N·d·s, same for a·δb, plus the quadratic term N·d².
+    let nf = n as f32;
+    2.0 * nf * d * scale + nf * d * d
+        // f32 accumulation worst case: N * eps_f32 * N * s² (loose)
+        + nf * f32::EPSILON * nf * scale * scale
+}
+
+/// RMS (probabilistic) estimate of ‖e‖_Max for iid U[-s, s] inputs:
+/// the entry error is a sum of 2N independent terms of RMS d·s/√3·(1/√3),
+/// and the max over an m x m matrix of Gaussians adds ≈ √(2 ln m²).
+pub fn mixed_gemm_error_rms_estimate(n: usize, m_out: usize, scale: f32) -> f32 {
+    // average rounding error over a binade-weighted uniform magnitude is
+    // ~0.37x the half-ulp at the top magnitude (empirical constant).
+    let d_rms = 0.37 * f16_half_ulp(scale);
+    let term_rms = d_rms * (scale / 3f32.sqrt());
+    let entry_rms = (2.0 * n as f32).sqrt() * term_rms;
+    let entries = (m_out * m_out).max(2) as f32;
+    entry_rms * (2.0 * entries.ln()).sqrt()
+}
+
+/// Bound after refinement (Eq. 2 refine-A or Eq. 3 refine-AB): the
+/// recovered terms drop out; what remains is (for refine-A) B's rounding
+/// term, and (for refine-AB) only the residual-of-residual and f32 noise.
+pub fn refined_gemm_error_bound(n: usize, scale: f32, mode: crate::precision::RefineMode) -> f32 {
+    use crate::precision::RefineMode::*;
+    let d = f16_half_ulp(scale);
+    let nf = n as f32;
+    let f32_noise = nf * f32::EPSILON * nf * scale * scale;
+    match mode {
+        None => mixed_gemm_error_bound(n, scale),
+        // B's rounding remains + quadratic term
+        RefineA => nf * d * scale + nf * d * d + f32_noise,
+        // residual-of-residual: residual split leak is ≤ d·2⁻¹¹ per entry
+        RefineAB => 2.0 * nf * (d * f16_half_ulp(d.max(f32::MIN_POSITIVE))) * scale + f32_noise,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::precision::RefineMode;
+
+    #[test]
+    fn half_ulp_at_unit_scale() {
+        // values in [1, 2): ulp 2^-10, half-ulp 2^-11
+        assert_eq!(f16_half_ulp(1.5), 2f32.powi(-11));
+    }
+
+    #[test]
+    fn bound_grows_linearly_in_n_where_f16_dominates() {
+        // below n ~ 4100 the f16 input-rounding terms dominate and the
+        // bound is ~linear; beyond that the (worst-case) f32 accumulation
+        // term takes over and growth turns superlinear
+        let b1 = mixed_gemm_error_bound(256, 1.0);
+        let b2 = mixed_gemm_error_bound(512, 1.0);
+        assert!(b2 / b1 > 1.9 && b2 / b1 < 2.2, "ratio {}", b2 / b1);
+        let b3 = mixed_gemm_error_bound(8192, 1.0);
+        let b4 = mixed_gemm_error_bound(16384, 1.0);
+        assert!(b4 / b3 > 2.2, "f32 term must dominate at large n");
+    }
+
+    #[test]
+    fn bound_grows_quadratically_in_scale() {
+        // scale enters via d ∝ scale and the b factor: quadratic overall
+        let b1 = mixed_gemm_error_bound(1024, 1.0);
+        let b16 = mixed_gemm_error_bound(1024, 16.0);
+        let ratio = b16 / b1;
+        assert!(ratio > 200.0 && ratio < 300.0, "ratio {ratio}"); // ~256
+    }
+
+    #[test]
+    fn refined_bounds_ordered() {
+        for n in [256usize, 4096] {
+            let b0 = refined_gemm_error_bound(n, 1.0, RefineMode::None);
+            let b1 = refined_gemm_error_bound(n, 1.0, RefineMode::RefineA);
+            let b2 = refined_gemm_error_bound(n, 1.0, RefineMode::RefineAB);
+            assert!(b0 > b1 && b1 > b2, "n={n}: {b0} {b1} {b2}");
+        }
+    }
+
+    #[test]
+    fn rms_estimate_below_worst_case() {
+        for n in [64usize, 1024, 8192] {
+            let rms = mixed_gemm_error_rms_estimate(n, n, 1.0);
+            let wc = mixed_gemm_error_bound(n, 1.0);
+            assert!(rms < wc, "n={n}");
+        }
+    }
+}

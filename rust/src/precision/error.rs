@@ -1,0 +1,81 @@
+//! Error metrics for the precision studies (paper §VI: "we choose the max
+//! norm to quantify the error as it provides a bound of the maximum error
+//! per matrix entry").
+
+use crate::gemm::Matrix;
+
+/// ‖e‖_Max = max |c_test − c_ref| — the paper's figure of merit.
+pub fn max_norm_error(c_test: &Matrix, c_ref: &Matrix) -> f32 {
+    c_test.max_norm_diff(c_ref)
+}
+
+/// Full error characterization of a computed matrix against a reference.
+#[derive(Clone, Copy, Debug)]
+pub struct ErrorReport {
+    /// max |e_ij| (the paper's metric).
+    pub max_norm: f32,
+    /// mean |e_ij|.
+    pub mean_abs: f32,
+    /// Frobenius norm of e.
+    pub frobenius: f32,
+    /// max relative error |e_ij| / max(|ref_ij|, tiny).
+    pub max_rel: f32,
+}
+
+/// Compute an [`ErrorReport`] of `c_test` against `c_ref`.
+pub fn error_report(c_test: &Matrix, c_ref: &Matrix) -> ErrorReport {
+    assert_eq!(c_test.shape(), c_ref.shape(), "shape mismatch");
+    let mut max_norm = 0f32;
+    let mut sum_abs = 0f64;
+    let mut sum_sq = 0f64;
+    let mut max_rel = 0f32;
+    for (t, r) in c_test.as_slice().iter().zip(c_ref.as_slice()) {
+        let e = (t - r).abs();
+        max_norm = max_norm.max(e);
+        sum_abs += e as f64;
+        sum_sq += (e as f64) * (e as f64);
+        let rel = e / r.abs().max(1e-30);
+        max_rel = max_rel.max(rel);
+    }
+    let count = c_test.as_slice().len().max(1) as f64;
+    ErrorReport {
+        max_norm,
+        mean_abs: (sum_abs / count) as f32,
+        frobenius: sum_sq.sqrt() as f32,
+        max_rel,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_on_identical_is_zero() {
+        let m = Matrix::from_fn(4, 4, |i, j| (i * j) as f32);
+        let r = error_report(&m, &m);
+        assert_eq!(r.max_norm, 0.0);
+        assert_eq!(r.mean_abs, 0.0);
+        assert_eq!(r.frobenius, 0.0);
+        assert_eq!(r.max_rel, 0.0);
+    }
+
+    #[test]
+    fn report_single_entry_error() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut b = a.clone();
+        b[(1, 0)] = 3.5;
+        let r = error_report(&b, &a);
+        assert_eq!(r.max_norm, 0.5);
+        assert!((r.mean_abs - 0.125).abs() < 1e-7);
+        assert!((r.frobenius - 0.5).abs() < 1e-7);
+        assert!((r.max_rel - 0.5 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn max_norm_error_matches_matrix_method() {
+        let a = Matrix::from_fn(3, 3, |i, j| (i + j) as f32);
+        let b = Matrix::from_fn(3, 3, |i, j| (i + j) as f32 + if i == 2 { 0.25 } else { 0.0 });
+        assert_eq!(max_norm_error(&b, &a), 0.25);
+    }
+}

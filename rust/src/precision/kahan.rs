@@ -1,0 +1,125 @@
+//! Kahan compensated summation — the §V-cited alternative ("To avoid
+//! precision loss or use additional computation, i.e. Kahan summation,
+//! accumulation is performed in single precision").
+//!
+//! Provided as an extension ablation: an f16-accumulator GEMM *with*
+//! Kahan compensation sits numerically between plain hgemm and the
+//! Tensor-Core f32 accumulation, at ~4x the adds.  The A2-adjacent bench
+//! (`repro figures --ablation kahan`) quantifies it.
+
+use crate::gemm::Matrix;
+use crate::halfprec::{f32_to_f16, half_add, half_mul, half_sub, Half};
+
+/// Running Kahan (compensated) sum in f32.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KahanF32 {
+    sum: f32,
+    comp: f32,
+}
+
+impl KahanF32 {
+    pub fn add(&mut self, x: f32) {
+        let y = x - self.comp;
+        let t = self.sum + y;
+        self.comp = (t - self.sum) - y;
+        self.sum = t;
+    }
+
+    pub fn value(self) -> f32 {
+        self.sum
+    }
+}
+
+/// Running Kahan sum entirely in binary16 (every operation rounds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KahanF16 {
+    sum: Half,
+    comp: Half,
+}
+
+impl KahanF16 {
+    pub fn add(&mut self, x: Half) {
+        let y = half_sub(x, self.comp);
+        let t = half_add(self.sum, y);
+        self.comp = half_sub(half_sub(t, self.sum), y);
+        self.sum = t;
+    }
+
+    pub fn value(self) -> Half {
+        self.sum
+    }
+}
+
+/// hgemm with Kahan-compensated f16 accumulation: the ablation point
+/// between `gemm::hgemm` (plain f16 accumulate) and `gemm::mixed_gemm`
+/// (f32 accumulate).
+pub fn hgemm_kahan(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "inner dimension mismatch");
+    let ah: Vec<Half> = a.as_slice().iter().map(|&x| f32_to_f16(x)).collect();
+    let bh: Vec<Half> = b.as_slice().iter().map(|&x| f32_to_f16(x)).collect();
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = KahanF16::default();
+            for p in 0..k {
+                acc.add(half_mul(ah[i * k + p], bh[p * n + j]));
+            }
+            out[(i, j)] = acc.value().to_f32();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{dgemm_naive, hgemm, mixed_gemm};
+
+    #[test]
+    fn kahan_f32_beats_naive_on_pathological_sum() {
+        let xs: Vec<f32> = (0..100_000).map(|i| if i == 0 { 1e8 } else { 0.01 }).collect();
+        let naive: f32 = xs.iter().sum();
+        let mut kh = KahanF32::default();
+        for &x in &xs {
+            kh.add(x);
+        }
+        let truth = 1e8 + 0.01 * 99_999.0;
+        assert!((kh.value() - truth).abs() < (naive - truth).abs());
+    }
+
+    #[test]
+    fn kahan_f16_counters_absorption() {
+        // summing 1.0 4096 times: plain f16 saturates at 2048,
+        // Kahan-compensated f16 keeps going much further
+        let mut plain = Half::ZERO;
+        let mut kh = KahanF16::default();
+        let one = Half::ONE;
+        for _ in 0..4096 {
+            plain = half_add(plain, one);
+            kh.add(one);
+        }
+        assert!(plain.to_f32() <= 2048.0);
+        assert!(kh.value().to_f32() >= 4000.0, "kahan got {}", kh.value().to_f32());
+    }
+
+    #[test]
+    fn hgemm_kahan_between_hgemm_and_mixed() {
+        let n = 128;
+        let mut s = 9u64;
+        let a = Matrix::from_fn(n, n, |_, _| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+        });
+        let b = a.transpose();
+        let truth = dgemm_naive(&a, &b);
+        let e_h = hgemm(&a, &b).max_norm_diff(&truth);
+        let e_kahan = hgemm_kahan(&a, &b).max_norm_diff(&truth);
+        let e_mixed = mixed_gemm(&a, &b, None, 1.0, 0.0).max_norm_diff(&truth);
+        assert!(e_kahan < e_h, "kahan {e_kahan} must beat plain f16 {e_h}");
+        assert!(e_mixed < e_kahan, "f32 accumulate {e_mixed} must beat kahan-f16 {e_kahan}");
+    }
+}

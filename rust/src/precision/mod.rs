@@ -1,0 +1,21 @@
+//! S6 — precision toolkit: the paper's §V contribution as a library.
+//!
+//! * [`refine`] — the precision-refinement decompositions (Eqs. 1–3) over
+//!   the CPU Tensor-Core emulation, in both the paper's pipelined form
+//!   and the exact-chaining form.
+//! * [`error`] — error metrics (‖e‖_Max et al.) and empirical error
+//!   measurement against f64 ground truth.
+//! * [`bounds`] — analytic error bounds (input-rounding model, the O(N)
+//!   scaling the paper discusses via "error scales quadratically with N"
+//!   for total operations).
+//! * [`kahan`] — compensated summation, the §V-cited alternative to f32
+//!   accumulation (Higham 1993), as an extension ablation.
+
+pub mod bounds;
+pub mod error;
+pub mod kahan;
+pub mod refine;
+
+pub use bounds::{mixed_gemm_error_bound, refined_gemm_error_bound};
+pub use error::{error_report, max_norm_error, ErrorReport};
+pub use refine::{refine_gemm, RefineMode};

@@ -1,0 +1,289 @@
+//! `artifacts/manifest.json` parsing and artifact lookup.
+//!
+//! The manifest is written by `python/compile/aot.py` (one entry per AOT
+//! variant) and parsed here with the in-tree JSON substrate.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::precision::RefineMode;
+use crate::util::json::Json;
+
+/// What a variant computes (mirrors model.py's `kind`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Square GEMM (op = sgemm / mixed / refine_a / refine_ab / fused).
+    Gemm,
+    /// Batched tile GEMM.
+    Batched,
+    /// Fig. 8 error probe (returns 5 scalar errors).
+    ErrProbe,
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+    /// gemm ops: "sgemm" | "mixed" | "refine_a" | "refine_ab" |
+    /// "refine_ab_fused"; batched: "mixed".
+    pub op: String,
+    /// Square size for gemm/errprobe.
+    pub n: Option<usize>,
+    /// Batch count / tile edge for batched.
+    pub batch: Option<usize>,
+    pub tile: Option<usize>,
+    /// "pallas" | "xla" (errprobe entries have no kernel field).
+    pub kernel: Option<String>,
+    /// Input shapes, in argument order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactMeta {
+    fn from_json(dir: &Path, j: &Json) -> Result<ArtifactMeta> {
+        let name = j.get("name").and_then(Json::as_str).context("name")?.to_string();
+        let file = dir.join(j.get("file").and_then(Json::as_str).context("file")?);
+        let kind = match j.get("kind").and_then(Json::as_str).context("kind")? {
+            "gemm" => ArtifactKind::Gemm,
+            "batched" => ArtifactKind::Batched,
+            "errprobe" => ArtifactKind::ErrProbe,
+            other => bail!("unknown artifact kind {other:?}"),
+        };
+        let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+            Ok(j.get(key)
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect::<Vec<_>>()
+                })
+                .collect())
+        };
+        Ok(ArtifactMeta {
+            name,
+            file,
+            kind,
+            op: j.get("op").and_then(Json::as_str).unwrap_or("").to_string(),
+            n: j.get("n").and_then(Json::as_usize),
+            batch: j.get("batch").and_then(Json::as_usize),
+            tile: j.get("tile").and_then(Json::as_usize),
+            kernel: j.get("kernel").and_then(Json::as_str).map(str::to_string),
+            inputs: shapes("inputs")?,
+            outputs: shapes("outputs")?,
+        })
+    }
+}
+
+/// The parsed manifest plus its directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest has no artifacts array")?
+            .iter()
+            .map(|a| ArtifactMeta::from_json(&dir, a))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Load from the discovered default location (see
+    /// [`super::find_artifacts_dir`]).
+    pub fn discover() -> Result<Manifest> {
+        let dir = super::find_artifacts_dir()
+            .context("no artifacts directory found; run `make artifacts`")?;
+        Manifest::load(dir)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// The GEMM artifact for an op at size n.  When both kernel modes
+    /// exist the *xla* one is preferred: the two are numerically
+    /// equivalent (proven by pytest's mode-agreement tests), but
+    /// interpret-mode Pallas pays a large per-grid-step cost on the CPU
+    /// PJRT backend — §Perf measured 0.3 s vs 3 ms per 512x512 GEMM — so
+    /// serving always takes the fast lowering.  Tests that specifically
+    /// exercise the Pallas path select it with [`Manifest::gemm_kernel`].
+    pub fn gemm(&self, op: &str, n: usize) -> Option<&ArtifactMeta> {
+        let mut hits: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Gemm && a.op == op && a.n == Some(n))
+            .collect();
+        hits.sort_by_key(|a| a.kernel.as_deref() != Some("xla"));
+        hits.first().copied()
+    }
+
+    /// The GEMM artifact for an op at size n with an explicit kernel
+    /// lowering ("pallas" | "xla").
+    pub fn gemm_kernel(&self, op: &str, n: usize, kernel: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| {
+            a.kind == ArtifactKind::Gemm
+                && a.op == op
+                && a.n == Some(n)
+                && a.kernel.as_deref() == Some(kernel)
+        })
+    }
+
+    /// The GEMM artifact for a refinement mode at size n.
+    pub fn gemm_for_mode(&self, mode: RefineMode, n: usize) -> Option<&ArtifactMeta> {
+        let op = match mode {
+            RefineMode::None => "mixed",
+            RefineMode::RefineA => "refine_a",
+            RefineMode::RefineAB => "refine_ab",
+        };
+        self.gemm(op, n)
+    }
+
+    /// Sizes available for a GEMM op, ascending.
+    pub fn gemm_sizes(&self, op: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Gemm && a.op == op)
+            .filter_map(|a| a.n)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// The batched artifact with the smallest capacity >= `batch`
+    /// (requests are padded up to the artifact's batch size).
+    pub fn batched_at_least(&self, batch: usize, tile: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Batched
+                    && a.tile == Some(tile)
+                    && a.batch.is_some_and(|b| b >= batch)
+            })
+            .min_by_key(|a| a.batch.unwrap())
+    }
+
+    /// The largest batched artifact for a tile size.
+    pub fn batched_max(&self, tile: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Batched && a.tile == Some(tile))
+            .max_by_key(|a| a.batch.unwrap_or(0))
+    }
+
+    /// The Fig. 8 error probe at size n.
+    pub fn errprobe(&self, n: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::ErrProbe && a.n == Some(n))
+    }
+
+    /// Sizes with an error probe, ascending.
+    pub fn errprobe_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::ErrProbe)
+            .filter_map(|a| a.n)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> Manifest {
+        let dir = std::env::temp_dir().join(format!("tensoremu-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "artifacts": [
+              {"name": "gemm_mixed_n64_pallas", "file": "a.hlo.txt", "kind": "gemm",
+               "op": "mixed", "n": 64, "kernel": "pallas",
+               "inputs": [[64,64],[64,64]], "outputs": [[64,64]]},
+              {"name": "gemm_mixed_n64_xla", "file": "b.hlo.txt", "kind": "gemm",
+               "op": "mixed", "n": 64, "kernel": "xla",
+               "inputs": [[64,64],[64,64]], "outputs": [[64,64]]},
+              {"name": "gemm_refine_ab_n128_xla", "file": "c.hlo.txt", "kind": "gemm",
+               "op": "refine_ab", "n": 128, "kernel": "xla",
+               "inputs": [[128,128],[128,128]], "outputs": [[128,128]]},
+              {"name": "batched_mixed_b256_t16", "file": "d.hlo.txt", "kind": "batched",
+               "op": "mixed", "batch": 256, "tile": 16,
+               "inputs": [[256,16,16],[256,16,16]], "outputs": [[256,16,16]]},
+              {"name": "batched_mixed_b1024_t16", "file": "e.hlo.txt", "kind": "batched",
+               "op": "mixed", "batch": 1024, "tile": 16,
+               "inputs": [[1024,16,16],[1024,16,16]], "outputs": [[1024,16,16]]},
+              {"name": "errprobe_n128", "file": "f.hlo.txt", "kind": "errprobe",
+               "n": 128, "inputs": [[128,128],[128,128]], "outputs": [[5]]}
+            ]}"#,
+        )
+        .unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let m = fake_manifest();
+        assert_eq!(m.artifacts.len(), 6);
+        assert!(m.by_name("errprobe_n128").is_some());
+        assert!(m.by_name("nope").is_none());
+    }
+
+    #[test]
+    fn gemm_prefers_xla_for_serving() {
+        let m = fake_manifest();
+        let g = m.gemm("mixed", 64).unwrap();
+        assert_eq!(g.kernel.as_deref(), Some("xla"));
+        // the pallas lowering stays reachable for the cross-layer tests
+        let p = m.gemm_kernel("mixed", 64, "pallas").unwrap();
+        assert_eq!(p.kernel.as_deref(), Some("pallas"));
+    }
+
+    #[test]
+    fn gemm_for_mode_maps_ops() {
+        let m = fake_manifest();
+        assert_eq!(
+            m.gemm_for_mode(RefineMode::RefineAB, 128).unwrap().op,
+            "refine_ab"
+        );
+        assert!(m.gemm_for_mode(RefineMode::RefineA, 128).is_none());
+    }
+
+    #[test]
+    fn batched_picks_smallest_sufficient() {
+        let m = fake_manifest();
+        assert_eq!(m.batched_at_least(100, 16).unwrap().batch, Some(256));
+        assert_eq!(m.batched_at_least(300, 16).unwrap().batch, Some(1024));
+        assert!(m.batched_at_least(5000, 16).is_none());
+        assert_eq!(m.batched_max(16).unwrap().batch, Some(1024));
+    }
+
+    #[test]
+    fn sizes_listing() {
+        let m = fake_manifest();
+        assert_eq!(m.gemm_sizes("mixed"), vec![64]);
+        assert_eq!(m.errprobe_sizes(), vec![128]);
+    }
+}

@@ -1,0 +1,124 @@
+//! The PJRT engine: a CPU client plus a lazily-populated cache of
+//! compiled executables, one per artifact.
+//!
+//! PJRT handles are not `Send`; the engine lives on whatever thread
+//! created it ([`super::executor`] wraps it in a dedicated thread for the
+//! multi-threaded coordinator).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::artifact::Manifest;
+use super::tensor::TensorData;
+
+/// PJRT client + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client over the given manifest.
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, compiled: HashMap::new() })
+    }
+
+    /// Create from the discovered artifacts directory.
+    pub fn discover() -> Result<Engine> {
+        Engine::new(Manifest::discover()?)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.len()
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .by_name(name)
+            .with_context(|| format!("unknown artifact {name:?}"))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(&meta.file)
+            .with_context(|| format!("parsing HLO text {}", meta.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name:?}"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact: f32 input tensors in argument order, returns
+    /// the single output tensor (all variants return a 1-tuple — aot.py
+    /// lowers with `return_tuple=True`).
+    pub fn run(&mut self, name: &str, inputs: &[TensorData]) -> Result<TensorData> {
+        let meta = self
+            .manifest
+            .by_name(name)
+            .with_context(|| format!("unknown artifact {name:?}"))?;
+        // validate shapes before touching PJRT: clearer errors
+        if inputs.len() != meta.inputs.len() {
+            anyhow::bail!(
+                "artifact {name:?} wants {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, want)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if &t.shape != want {
+                anyhow::bail!(
+                    "artifact {name:?} input {i}: want shape {:?}, got {:?}",
+                    want,
+                    t.shape
+                );
+            }
+        }
+        let meta_name = meta.name.clone();
+        self.ensure_compiled(&meta_name)?;
+        let exe = self.compiled.get(&meta_name).expect("just compiled");
+
+        let literals = inputs
+            .iter()
+            .map(TensorData::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&literals).context("executing")?;
+        let out = result[0][0].to_literal_sync().context("fetching result")?;
+        let tuple = out.to_tuple1().context("unwrapping 1-tuple result")?;
+        TensorData::from_literal(&tuple)
+    }
+
+    /// Run the errprobe artifact for size n; returns the five max-norm
+    /// errors (none, refine_a, refine_ab, refine_a_paper,
+    /// refine_ab_paper).
+    pub fn run_errprobe(&mut self, n: usize, a: &TensorData, b: &TensorData) -> Result<[f32; 5]> {
+        let name = self
+            .manifest
+            .errprobe(n)
+            .with_context(|| format!("no errprobe artifact for n={n}"))?
+            .name
+            .clone();
+        let out = self.run(&name, &[a.clone(), b.clone()])?;
+        anyhow::ensure!(out.len() == 5, "errprobe returned {} values", out.len());
+        Ok([out.data[0], out.data[1], out.data[2], out.data[3], out.data[4]])
+    }
+}
+
+// Integration tests for the engine live in rust/tests/runtime.rs (they
+// need real artifacts from `make artifacts`).

@@ -1,0 +1,155 @@
+//! Executor thread: owns the non-`Send` PJRT [`Engine`] and serves
+//! execution requests over channels.  [`ExecutorHandle`] is `Send +
+//! Clone`, so the coordinator's worker threads can all submit work; the
+//! PJRT device is inherently serial here (one CPU client), which mirrors
+//! the single-GPU serialization the paper's measurements assume.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::artifact::Manifest;
+use super::engine::Engine;
+use super::tensor::TensorData;
+
+enum Job {
+    Run {
+        artifact: String,
+        inputs: Vec<TensorData>,
+        reply: Sender<Result<TensorData>>,
+    },
+    /// Pre-compile an artifact (warmup) without running it.
+    Warm {
+        artifact: String,
+        reply: Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// The server side: join handle + the manifest it serves.
+pub struct ExecutorServer {
+    thread: Option<JoinHandle<()>>,
+    sender: Sender<Job>,
+    manifest: Manifest,
+}
+
+/// Cheap, thread-safe handle for submitting work.
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    sender: Sender<Job>,
+}
+
+impl ExecutorServer {
+    /// Spawn the executor thread over an artifacts manifest.
+    pub fn start(manifest: Manifest) -> Result<ExecutorServer> {
+        let (tx, rx) = channel::<Job>();
+        let m = manifest.clone();
+        let thread = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || executor_loop(m, rx))
+            .context("spawning executor thread")?;
+        Ok(ExecutorServer { thread: Some(thread), sender: tx, manifest })
+    }
+
+    /// Spawn over the discovered artifacts directory.
+    pub fn discover() -> Result<ExecutorServer> {
+        ExecutorServer::start(Manifest::discover()?)
+    }
+
+    pub fn handle(&self) -> ExecutorHandle {
+        ExecutorHandle { sender: self.sender.clone() }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Stop the executor thread (also happens on drop).
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        let _ = self.sender.send(Job::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ExecutorServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+impl ExecutorHandle {
+    /// Execute an artifact synchronously (blocks until the executor
+    /// thread finishes the job).
+    pub fn run(&self, artifact: &str, inputs: Vec<TensorData>) -> Result<TensorData> {
+        let (tx, rx) = channel();
+        self.sender
+            .send(Job::Run { artifact: artifact.to_string(), inputs, reply: tx })
+            .context("executor thread gone")?;
+        rx.recv().context("executor dropped the reply")?
+    }
+
+    /// Submit without waiting; returns the receiver for the result.
+    pub fn run_async(
+        &self,
+        artifact: &str,
+        inputs: Vec<TensorData>,
+    ) -> Result<Receiver<Result<TensorData>>> {
+        let (tx, rx) = channel();
+        self.sender
+            .send(Job::Run { artifact: artifact.to_string(), inputs, reply: tx })
+            .context("executor thread gone")?;
+        Ok(rx)
+    }
+
+    /// Pre-compile an artifact.
+    pub fn warm(&self, artifact: &str) -> Result<()> {
+        let (tx, rx) = channel();
+        self.sender
+            .send(Job::Warm { artifact: artifact.to_string(), reply: tx })
+            .context("executor thread gone")?;
+        rx.recv().context("executor dropped the reply")?
+    }
+}
+
+fn executor_loop(manifest: Manifest, rx: Receiver<Job>) {
+    // The engine is created inside the thread: PJRT handles never cross
+    // thread boundaries.
+    let mut engine = match Engine::new(manifest) {
+        Ok(e) => e,
+        Err(err) => {
+            // Serve errors for every job until shutdown.
+            while let Ok(job) = rx.recv() {
+                match job {
+                    Job::Run { reply, .. } => {
+                        let _ = reply.send(Err(anyhow::anyhow!("engine init failed: {err:#}")));
+                    }
+                    Job::Warm { reply, .. } => {
+                        let _ = reply.send(Err(anyhow::anyhow!("engine init failed: {err:#}")));
+                    }
+                    Job::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Run { artifact, inputs, reply } => {
+                let _ = reply.send(engine.run(&artifact, &inputs));
+            }
+            Job::Warm { artifact, reply } => {
+                let _ = reply.send(engine.ensure_compiled(&artifact));
+            }
+            Job::Shutdown => break,
+        }
+    }
+}
+
+// Integration tests live in rust/tests/runtime.rs (need real artifacts).

@@ -1,0 +1,50 @@
+//! S8 — PJRT runtime: load the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and execute
+//! them from Rust.  Python never runs on this path.
+//!
+//! * [`tensor`]   — host tensor type and Matrix/Literal conversions.
+//! * [`artifact`] — `manifest.json` parsing and artifact lookup.
+//! * [`engine`]   — PJRT client + lazy-compiled executable cache
+//!   (single-threaded: PJRT handles are not Send).
+//! * [`executor`] — a dedicated executor thread owning the [`engine`],
+//!   driven through channels; [`executor::ExecutorHandle`] is the Send +
+//!   Clone face the coordinator uses.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits serialized protos with
+//! 64-bit ids that xla_extension 0.5.1 rejects; the text parser reassigns
+//! ids (see /opt/xla-example/README.md and python/compile/aot.py).
+
+pub mod artifact;
+pub mod engine;
+pub mod executor;
+pub mod tensor;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, Manifest};
+pub use engine::Engine;
+pub use executor::{ExecutorHandle, ExecutorServer};
+pub use tensor::TensorData;
+
+/// Default artifacts directory, relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: `$TENSOREMU_ARTIFACTS`, then
+/// `artifacts/` upward from the current directory (so tests, examples
+/// and benches work from any workspace subdirectory).
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("TENSOREMU_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join(DEFAULT_ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Host tensor type and conversions to/from PJRT literals and the crate's
+//! [`Matrix`] type.
+
+use anyhow::{bail, Context, Result};
+
+use crate::gemm::Matrix;
+
+/// A dense row-major f32 host tensor of arbitrary rank (rank <= 3 in
+/// practice: matrices and matrix batches).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorData {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorData {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<TensorData> {
+        let expect: usize = shape.iter().product();
+        if expect != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, expect, data.len());
+        }
+        Ok(TensorData { shape, data })
+    }
+
+    /// Flattened length.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// A 2-D tensor from a matrix.
+    pub fn from_matrix(m: &Matrix) -> TensorData {
+        TensorData { shape: vec![m.rows(), m.cols()], data: m.as_slice().to_vec() }
+    }
+
+    /// A 3-D tensor stacking equal-shaped matrices along a batch axis.
+    pub fn from_batch(ms: &[Matrix]) -> Result<TensorData> {
+        let (r, c) = ms.first().context("empty batch")?.shape();
+        let mut data = Vec::with_capacity(ms.len() * r * c);
+        for m in ms {
+            if m.shape() != (r, c) {
+                bail!("batch entries must share a shape");
+            }
+            data.extend_from_slice(m.as_slice());
+        }
+        Ok(TensorData { shape: vec![ms.len(), r, c], data })
+    }
+
+    /// Interpret as a matrix (rank 2 only).
+    pub fn into_matrix(self) -> Result<Matrix> {
+        if self.shape.len() != 2 {
+            bail!("expected rank 2, got shape {:?}", self.shape);
+        }
+        Ok(Matrix::from_vec(self.shape[0], self.shape[1], self.data))
+    }
+
+    /// Interpret as a batch of matrices (rank 3 only).
+    pub fn into_batch(self) -> Result<Vec<Matrix>> {
+        if self.shape.len() != 3 {
+            bail!("expected rank 3, got shape {:?}", self.shape);
+        }
+        let (b, r, c) = (self.shape[0], self.shape[1], self.shape[2]);
+        Ok((0..b)
+            .map(|i| Matrix::from_vec(r, c, self.data[i * r * c..(i + 1) * r * c].to_vec()))
+            .collect())
+    }
+
+    /// Build the PJRT literal (f32, row-major).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &self.shape, bytes)
+            .context("creating literal")
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<TensorData> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().context("literal data")?;
+        TensorData::new(dims, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_roundtrip() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let t = TensorData::from_matrix(&m);
+        assert_eq!(t.shape, vec![3, 4]);
+        assert_eq!(t.clone().into_matrix().unwrap(), m);
+    }
+
+    #[test]
+    fn batch_roundtrip() {
+        let ms: Vec<Matrix> =
+            (0..4).map(|k| Matrix::from_fn(2, 2, |i, j| (k * 10 + i * 2 + j) as f32)).collect();
+        let t = TensorData::from_batch(&ms).unwrap();
+        assert_eq!(t.shape, vec![4, 2, 2]);
+        assert_eq!(t.into_batch().unwrap(), ms);
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(TensorData::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(TensorData::new(vec![2, 3], vec![0.0; 6]).is_ok());
+    }
+
+    #[test]
+    fn mixed_shape_batch_rejected() {
+        let ms = vec![Matrix::zeros(2, 2), Matrix::zeros(2, 3)];
+        assert!(TensorData::from_batch(&ms).is_err());
+    }
+
+    #[test]
+    fn rank_mismatch_rejected() {
+        let t = TensorData::new(vec![2, 2, 2], vec![0.0; 8]).unwrap();
+        assert!(t.clone().into_matrix().is_err());
+        assert!(t.into_batch().is_ok());
+    }
+}

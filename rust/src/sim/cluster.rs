@@ -1,0 +1,111 @@
+//! Cluster-scale projections (paper §I): "systems like the NVIDIA DGX-1
+//! system that combines eight Tesla V100 GPUs could achieve a theoretical
+//! peak performance of one Pflops/s in mixed precision" and "the Summit
+//! supercomputer that has six Tesla V100 GPUs ... in each compute node
+//! for a total of 4,600 nodes, will offer nearly 18M Tensor Cores!"
+//!
+//! Also provides the simple strong-scaling model used by the cluster
+//! ablation: per-GPU GEMM throughput from [`super::kernels`], NVLink
+//! all-reduce cost for the C tiles.
+
+use super::config::VoltaConfig;
+use super::kernels::cublas_tc_time;
+
+/// A cluster of V100 nodes.
+#[derive(Clone, Copy, Debug)]
+pub struct Cluster {
+    pub gpus_per_node: usize,
+    pub nodes: usize,
+    /// NVLink bandwidth per GPU, bytes/s (V100 NVLink2: 300 GB/s agg).
+    pub nvlink_bytes_per_s: f64,
+    pub gpu: VoltaConfig,
+}
+
+impl Cluster {
+    /// The DGX-1 of §I: 8 V100s at the whitepaper clock.
+    pub fn dgx1() -> Cluster {
+        Cluster {
+            gpus_per_node: 8,
+            nodes: 1,
+            nvlink_bytes_per_s: 300.0e9,
+            gpu: VoltaConfig::tesla_v100_reference(),
+        }
+    }
+
+    /// The Summit configuration of §I: 6 V100s x 4600 nodes.
+    pub fn summit() -> Cluster {
+        Cluster {
+            gpus_per_node: 6,
+            nodes: 4600,
+            nvlink_bytes_per_s: 300.0e9,
+            gpu: VoltaConfig::tesla_v100_reference(),
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.gpus_per_node * self.nodes
+    }
+
+    pub fn total_tensor_cores(&self) -> usize {
+        self.total_gpus() * self.gpu.tensor_cores()
+    }
+
+    /// Aggregate theoretical Tensor-Core peak, flops/s.
+    pub fn tc_peak_flops(&self) -> f64 {
+        self.total_gpus() as f64 * self.gpu.tc_peak_flops()
+    }
+
+    /// Strong-scaled square-GEMM time on one node: each GPU owns an
+    /// N/g-row slab (g = gpus) and all-gathers its C slab at the end.
+    /// Returns (time_s, parallel efficiency vs 1 GPU).
+    pub fn node_gemm_time(&self, n: usize) -> (f64, f64) {
+        let g = self.gpus_per_node;
+        let slab_rows = n.div_ceil(g);
+        // per-GPU work: slab_rows x n x n GEMM ~ full-GEMM time scaled;
+        // model with the per-GPU kernel at the equivalent cube edge
+        let full = cublas_tc_time(&self.gpu, n).time_s();
+        let per_gpu_compute = full * slab_rows as f64 / n as f64;
+        // all-gather C slabs over NVLink: each GPU sends its slab once
+        let comm = (slab_rows * n * 4) as f64 / self.nvlink_bytes_per_s;
+        let t = per_gpu_compute + comm;
+        (t, full / (g as f64 * t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dgx1_is_one_petaflop() {
+        // §I: "could achieve a theoretical peak performance of one
+        // Pflops/s in mixed precision"
+        let pf = Cluster::dgx1().tc_peak_flops() / 1e15;
+        assert!((pf - 1.0).abs() < 0.01, "got {pf} Pflops/s");
+    }
+
+    #[test]
+    fn summit_has_18m_tensor_cores() {
+        // §I: "will offer nearly 18M Tensor Cores!"
+        let tc = Cluster::summit().total_tensor_cores();
+        assert_eq!(tc, 4600 * 6 * 640); // 17,664,000
+        assert!((17_000_000..18_000_000).contains(&tc));
+    }
+
+    #[test]
+    fn node_scaling_efficiency_reasonable() {
+        let c = Cluster::dgx1();
+        let (t8, eff) = c.node_gemm_time(8192);
+        let t1 = cublas_tc_time(&c.gpu, 8192).time_s();
+        assert!(t8 < t1, "8 GPUs must beat 1");
+        assert!(eff > 0.5 && eff <= 1.0, "efficiency {eff}");
+    }
+
+    #[test]
+    fn communication_hurts_small_n() {
+        let c = Cluster::dgx1();
+        let (_, eff_small) = c.node_gemm_time(1024);
+        let (_, eff_big) = c.node_gemm_time(16384);
+        assert!(eff_big > eff_small, "{eff_big} vs {eff_small}");
+    }
+}

@@ -1,0 +1,123 @@
+//! Device description of the Tesla V100 (paper §III + §VI and the Volta
+//! whitepaper).  All Fig. 6/7 numbers derive from these constants.
+
+/// Tesla V100 device model.
+#[derive(Clone, Copy, Debug)]
+pub struct VoltaConfig {
+    /// Streaming multiprocessors (V100: 80 of the GV100's 84 enabled).
+    pub sms: usize,
+    /// Processing blocks per SM (4), each with 2 tensor cores.
+    pub blocks_per_sm: usize,
+    /// Tensor cores per SM (8).
+    pub tensor_cores_per_sm: usize,
+    /// FP32 cores per SM (64).
+    pub fp32_per_sm: usize,
+    /// FP64 cores per SM (32).
+    pub fp64_per_sm: usize,
+    /// GPU clock in Hz (paper's testbed boosts to 1.38 GHz, 10% below
+    /// the 1.53 GHz the whitepaper quotes — §VI).
+    pub clock_hz: f64,
+    /// FMAs per tensor core per cycle (64, on 4x4 tiles).
+    pub fma_per_tc: usize,
+    /// HBM2 bandwidth, bytes/s (V100: 900 GB/s).
+    pub hbm_bytes_per_s: f64,
+    /// L2 cache size in bytes (6 MB).
+    pub l2_bytes: usize,
+    /// L2 bandwidth, bytes/s (~2.5 TB/s effective).
+    pub l2_bytes_per_s: f64,
+    /// Combined L1/shared capacity per SM (128 KB), max shared 96 KB.
+    pub smem_per_sm: usize,
+    /// Device memory capacity (16 GB).
+    pub dram_bytes: usize,
+    /// Max resident threads per SM (2048).
+    pub max_threads_per_sm: usize,
+    /// Max thread blocks per SM (32).
+    pub max_blocks_per_sm: usize,
+    /// Kernel launch overhead in seconds (~5 us, CUDA 9 era).
+    pub launch_overhead_s: f64,
+}
+
+impl VoltaConfig {
+    /// The paper's testbed: V100 at PDC, boost clock 1.38 GHz.
+    pub fn tesla_v100_pdc() -> VoltaConfig {
+        VoltaConfig {
+            sms: 80,
+            blocks_per_sm: 4,
+            tensor_cores_per_sm: 8,
+            fp32_per_sm: 64,
+            fp64_per_sm: 32,
+            clock_hz: 1.38e9,
+            fma_per_tc: 64,
+            hbm_bytes_per_s: 900.0e9,
+            l2_bytes: 6 * 1024 * 1024,
+            l2_bytes_per_s: 2.5e12,
+            smem_per_sm: 96 * 1024,
+            dram_bytes: 16 * 1024 * 1024 * 1024,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 32,
+            launch_overhead_s: 5.0e-6,
+        }
+    }
+
+    /// The whitepaper's reference clock (1.53 GHz) — for the 125 Tflops/s
+    /// headline cross-check.
+    pub fn tesla_v100_reference() -> VoltaConfig {
+        VoltaConfig { clock_hz: 1.53e9, ..VoltaConfig::tesla_v100_pdc() }
+    }
+
+    /// Total tensor cores (V100: 640).
+    pub fn tensor_cores(&self) -> usize {
+        self.sms * self.tensor_cores_per_sm
+    }
+
+    /// Theoretical Tensor Core peak, flops/s: TCs x 64 FMA x 2.
+    pub fn tc_peak_flops(&self) -> f64 {
+        self.tensor_cores() as f64 * self.fma_per_tc as f64 * 2.0 * self.clock_hz
+    }
+
+    /// FP32 (CUDA core) peak, flops/s: cores x 2 (FMA).
+    pub fn fp32_peak_flops(&self) -> f64 {
+        (self.sms * self.fp32_per_sm) as f64 * 2.0 * self.clock_hz
+    }
+
+    /// FP16 peak on CUDA cores: 2x FP32 (half2 vectorization).
+    pub fn fp16_peak_flops(&self) -> f64 {
+        2.0 * self.fp32_peak_flops()
+    }
+
+    /// FP64 peak, flops/s.
+    pub fn fp64_peak_flops(&self) -> f64 {
+        (self.sms * self.fp64_per_sm) as f64 * 2.0 * self.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_constants() {
+        let v = VoltaConfig::tesla_v100_pdc();
+        assert_eq!(v.tensor_cores(), 640);
+        // §VI: "the theoretical peak performance on Tensor Cores is
+        // 112.7 Tflops/s" at 1.38 GHz
+        let peak_t = v.tc_peak_flops() / 1e12;
+        assert!((peak_t - 113.0).abs() < 0.7, "got {peak_t}");
+        // §III: 15.7 Tflops/s single / 31.4 half / 7.8 double at 1.53 GHz
+        let r = VoltaConfig::tesla_v100_reference();
+        assert!((r.fp32_peak_flops() / 1e12 - 15.7).abs() < 0.2);
+        assert!((r.fp16_peak_flops() / 1e12 - 31.4).abs() < 0.4);
+        assert!((r.fp64_peak_flops() / 1e12 - 7.8).abs() < 0.1);
+        // §III: 125 Tflops/s on Tensor Cores at the reference clock
+        assert!((r.tc_peak_flops() / 1e12 - 125.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn fma_throughput_per_cycle() {
+        // §III: "the Tesla V100 accelerator can perform up to 40,960 FMA
+        // operations per cycle"
+        let v = VoltaConfig::tesla_v100_pdc();
+        let fma_per_cycle = v.tensor_cores() * v.fma_per_tc;
+        assert_eq!(fma_per_cycle, 40_960);
+    }
+}

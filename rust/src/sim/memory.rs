@@ -1,0 +1,95 @@
+//! Memory traffic and capacity model — the Fig. 7 OOM cliff and the
+//! HBM/L2 volumes the kernel models consume.
+
+use super::config::VoltaConfig;
+
+/// Bytes a GEMM must move through HBM at minimum (compulsory traffic):
+/// read A and B once, write C once.
+pub fn gemm_compulsory_bytes(m: usize, n: usize, k: usize, in_bytes: usize, out_bytes: usize) -> f64 {
+    (m * k * in_bytes + k * n * in_bytes + m * n * out_bytes) as f64
+}
+
+/// HBM traffic of a *tiled* GEMM with C tiles of (bm, bn): every K panel
+/// of A is re-read n/bn times and of B m/bm times (standard tiling
+/// traffic model), C written once.
+pub fn gemm_tiled_traffic_bytes(
+    m: usize,
+    n: usize,
+    k: usize,
+    bm: usize,
+    bn: usize,
+    in_bytes: usize,
+    out_bytes: usize,
+) -> f64 {
+    let a_reads = (n as f64 / bn as f64).ceil().max(1.0);
+    let b_reads = (m as f64 / bm as f64).ceil().max(1.0);
+    (m * k * in_bytes) as f64 * a_reads
+        + (k * n * in_bytes) as f64 * b_reads
+        + (m * n * out_bytes) as f64
+}
+
+/// Device-memory footprint of the paper's batched cuBLAS sgemm run:
+/// 3 f32 matrices per entry (A, B, C) plus the library's per-matrix
+/// workspace.  Calibration (documented, DESIGN.md §6): the paper observed
+/// OOM above 131,072 16x16 multiplications on a 16 GB card, which implies
+/// ~40 KB of workspace per matrix triple beyond the 3 KB of payload —
+/// consistent with cuBLAS 9.0's per-op staging buffers for pointer-array
+/// batched GEMM.
+pub const CUBLAS_BATCHED_WORKSPACE_PER_ENTRY: usize = 125 * 1024;
+
+/// Footprint in bytes of a batched sgemm with `batch` n x n f32 entries.
+pub fn batched_sgemm_footprint_bytes(batch: usize, n: usize) -> usize {
+    let payload = 3 * n * n * 4;
+    batch * (payload + CUBLAS_BATCHED_WORKSPACE_PER_ENTRY)
+}
+
+/// Does a batched sgemm of this size fit device memory?  (The Fig. 7
+/// "cannot run for more than 131,072 multiplications" cliff.)
+pub fn fits_memory(cfg: &VoltaConfig, batch: usize, n: usize) -> bool {
+    batched_sgemm_footprint_bytes(batch, n) <= cfg.dram_bytes
+}
+
+/// Footprint of the WMMA batched kernel: f16 A/B + f32 C, no workspace
+/// (the hand-written kernel streams directly).
+pub fn batched_wmma_footprint_bytes(batch: usize, n: usize) -> usize {
+    batch * (2 * n * n * 2 + n * n * 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compulsory_traffic_square() {
+        // N=1024 f16 in, f32 out: 2*1M*2 + 1M*4 bytes
+        let b = gemm_compulsory_bytes(1024, 1024, 1024, 2, 4);
+        assert_eq!(b, (2.0 * 2.0 + 4.0) * 1024.0 * 1024.0);
+    }
+
+    #[test]
+    fn tiled_traffic_reduces_with_bigger_tiles() {
+        let small = gemm_tiled_traffic_bytes(4096, 4096, 4096, 64, 64, 2, 4);
+        let large = gemm_tiled_traffic_bytes(4096, 4096, 4096, 128, 128, 2, 4);
+        assert!(large < small);
+        // and both at least the compulsory traffic
+        let comp = gemm_compulsory_bytes(4096, 4096, 4096, 2, 4);
+        assert!(large >= comp);
+    }
+
+    #[test]
+    fn oom_cliff_at_paper_batch_size() {
+        // Fig. 7: 131,072 fits, 262,144 does not (16x16 f32 batched sgemm)
+        let cfg = VoltaConfig::tesla_v100_pdc();
+        assert!(fits_memory(&cfg, 131_072, 16));
+        assert!(!fits_memory(&cfg, 262_144, 16));
+    }
+
+    #[test]
+    fn wmma_batched_fits_where_sgemm_does_not() {
+        // the WMMA kernel ran 262,144 (Fig. 7's grey boxes extend past
+        // the sgemm cliff): its footprint must fit
+        let cfg = VoltaConfig::tesla_v100_pdc();
+        let wmma = batched_wmma_footprint_bytes(262_144, 16);
+        assert!(wmma <= cfg.dram_bytes);
+    }
+}

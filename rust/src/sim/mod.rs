@@ -1,0 +1,36 @@
+//! S5 — Volta V100 performance model.
+//!
+//! We have no V100 (DESIGN.md substitution table); Figs. 6-7 are
+//! regenerated from a first-principles timing model of the Tesla V100
+//! instead.  The model is deliberately *not* a curve fit of the paper's
+//! plots: device constants come from §III/§VI of the paper and the Volta
+//! whitepaper, per-kernel behaviour comes from the kernels' arithmetic
+//! and traffic structure, and only per-implementation efficiency ceilings
+//! are calibrated (documented at their definitions in [`kernels`]).
+//!
+//! Structure:
+//! * [`config`]  — the device description (SMs, tensor cores, clocks,
+//!   memory hierarchy, capacities); `VoltaConfig::tesla_v100_pdc()` is
+//!   the paper's testbed (boost clock 1.38 GHz, peak 112.7 Tflops/s).
+//! * [`waves`]   — thread-block wave scheduling onto SMs with occupancy
+//!   limits and tail-quantization effects.
+//! * [`memory`]  — traffic model: HBM/L2 volumes per kernel, capacity
+//!   accounting (the Fig. 7 OOM cliff).
+//! * [`kernels`] — per-implementation GEMM models: sgemm / hgemm on CUDA
+//!   cores, naive WMMA, shared-memory WMMA, CUTLASS-tiled, cuBLAS-TC,
+//!   and the batched kernels.
+//!
+//! Every model returns a [`KernelTiming`] (cycles broken into compute /
+//! memory / launch) so benches can report both Tflops/s and ms.
+
+pub mod cluster;
+pub mod config;
+pub mod kernels;
+pub mod memory;
+pub mod waves;
+
+pub use cluster::Cluster;
+pub use config::VoltaConfig;
+pub use kernels::{gemm_flops, GemmImpl, KernelTiming};
+pub use memory::{batched_sgemm_footprint_bytes, fits_memory};
+pub use waves::{occupancy_blocks_per_sm, wave_count, WaveSchedule};

@@ -1,0 +1,143 @@
+//! Thread-block wave scheduling: how a kernel's block grid maps onto the
+//! SMs, including occupancy limits and the tail-quantization effect that
+//! makes real GEMM curves non-smooth in N.
+
+use super::config::VoltaConfig;
+
+/// A wave schedule: how many full waves of blocks run, plus the tail.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WaveSchedule {
+    /// Blocks resident per SM (occupancy-limited).
+    pub blocks_per_sm: usize,
+    /// Blocks resident on the whole device per wave.
+    pub blocks_per_wave: usize,
+    /// Number of full waves.
+    pub full_waves: usize,
+    /// Blocks in the final partial wave (0 if the grid divides evenly).
+    pub tail_blocks: usize,
+}
+
+impl WaveSchedule {
+    /// Total waves including a partial tail.
+    pub fn total_waves(&self) -> usize {
+        self.full_waves + usize::from(self.tail_blocks > 0)
+    }
+
+    /// Efficiency lost to the tail: achieved/ideal block-slot utilization
+    /// with strict wave boundaries (no inter-wave overlap).
+    pub fn tail_efficiency(&self, total_blocks: usize) -> f64 {
+        if total_blocks == 0 {
+            return 1.0;
+        }
+        let slots = self.total_waves() * self.blocks_per_wave;
+        total_blocks as f64 / slots as f64
+    }
+
+    /// Tail efficiency with latency-hiding overlap: the GPU starts tail
+    /// blocks as earlier blocks drain, so only ~half of the tail wave's
+    /// idle slots are actually lost.  This is the factor the kernel
+    /// models use (the strict version over-penalizes mid-size grids).
+    pub fn tail_efficiency_overlapped(&self, total_blocks: usize) -> f64 {
+        if total_blocks == 0 {
+            return 1.0;
+        }
+        if self.tail_blocks == 0 {
+            return self.tail_efficiency(total_blocks);
+        }
+        let idle = self.blocks_per_wave - self.tail_blocks;
+        let slots =
+            (self.full_waves * self.blocks_per_wave + self.tail_blocks) as f64 + 0.5 * idle as f64;
+        (total_blocks as f64 / slots).min(1.0)
+    }
+}
+
+/// Occupancy: resident blocks per SM given per-block resources.
+pub fn occupancy_blocks_per_sm(
+    cfg: &VoltaConfig,
+    threads_per_block: usize,
+    smem_per_block: usize,
+) -> usize {
+    let by_threads = if threads_per_block == 0 {
+        cfg.max_blocks_per_sm
+    } else {
+        cfg.max_threads_per_sm / threads_per_block
+    };
+    let by_smem = if smem_per_block == 0 {
+        cfg.max_blocks_per_sm
+    } else {
+        cfg.smem_per_sm / smem_per_block
+    };
+    by_threads.min(by_smem).min(cfg.max_blocks_per_sm).max(1)
+}
+
+/// Build the wave schedule for `total_blocks` blocks.
+pub fn wave_count(
+    cfg: &VoltaConfig,
+    total_blocks: usize,
+    threads_per_block: usize,
+    smem_per_block: usize,
+) -> WaveSchedule {
+    let blocks_per_sm = occupancy_blocks_per_sm(cfg, threads_per_block, smem_per_block);
+    let blocks_per_wave = blocks_per_sm * cfg.sms;
+    WaveSchedule {
+        blocks_per_sm,
+        blocks_per_wave,
+        full_waves: total_blocks / blocks_per_wave,
+        tail_blocks: total_blocks % blocks_per_wave,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> VoltaConfig {
+        VoltaConfig::tesla_v100_pdc()
+    }
+
+    #[test]
+    fn occupancy_thread_limited() {
+        // 512-thread blocks: 2048/512 = 4 blocks/SM
+        assert_eq!(occupancy_blocks_per_sm(&cfg(), 512, 0), 4);
+    }
+
+    #[test]
+    fn occupancy_smem_limited() {
+        // 48KB smem per block: 96/48 = 2 blocks/SM even with small blocks
+        assert_eq!(occupancy_blocks_per_sm(&cfg(), 128, 48 * 1024), 2);
+    }
+
+    #[test]
+    fn occupancy_block_cap() {
+        assert_eq!(occupancy_blocks_per_sm(&cfg(), 32, 0), 32); // capped at 32
+    }
+
+    #[test]
+    fn waves_divide_evenly() {
+        // 4 blocks/SM x 80 SMs = 320 per wave
+        let w = wave_count(&cfg(), 640, 512, 0);
+        assert_eq!(w.blocks_per_wave, 320);
+        assert_eq!(w.full_waves, 2);
+        assert_eq!(w.tail_blocks, 0);
+        assert_eq!(w.total_waves(), 2);
+        assert_eq!(w.tail_efficiency(640), 1.0);
+    }
+
+    #[test]
+    fn tail_quantization() {
+        let w = wave_count(&cfg(), 321, 512, 0);
+        assert_eq!(w.full_waves, 1);
+        assert_eq!(w.tail_blocks, 1);
+        assert_eq!(w.total_waves(), 2);
+        // 321 blocks use 2 waves' worth of slots: ~50% efficiency
+        assert!((w.tail_efficiency(321) - 321.0 / 640.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn small_grid_single_wave() {
+        let w = wave_count(&cfg(), 10, 512, 0);
+        assert_eq!(w.full_waves, 0);
+        assert_eq!(w.tail_blocks, 10);
+        assert_eq!(w.total_waves(), 1);
+    }
+}

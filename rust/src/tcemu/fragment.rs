@@ -1,0 +1,198 @@
+//! WMMA fragments: the register tiles a warp loads before an MMA
+//! (Listing 1's `wmma::fragment<...>`).  CUDA exposes them as opaque
+//! per-thread register slices; here a fragment owns its 16x16 tile
+//! explicitly, with the row/column-major interpretation the WMMA loads
+//! take ("we need to declare if the 1-D arrays should be interpreted
+//! either as row- or column-major", §IV).
+
+use crate::halfprec::{f32_to_f16, Half};
+
+/// WMMA fragment edge: CUDA 9 exposes 16x16x16 warp MMAs.
+pub const FRAGMENT_DIM: usize = 16;
+
+/// Memory interpretation of a 1-D array backing a matrix tile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    RowMajor,
+    ColMajor,
+}
+
+/// An input fragment (matrix_a / matrix_b): 16x16 halves, stored
+/// row-major internally regardless of the load layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fragment {
+    data: [Half; FRAGMENT_DIM * FRAGMENT_DIM],
+}
+
+impl Fragment {
+    /// `wmma::load_matrix_sync`: load a 16x16 tile from a 1-D f32 slice
+    /// with leading dimension `ld` and the given layout, rounding each
+    /// element to binary16 (the fragment's storage precision).
+    pub fn load(src: &[f32], ld: usize, layout: Layout) -> Fragment {
+        let mut data = [Half::ZERO; FRAGMENT_DIM * FRAGMENT_DIM];
+        for i in 0..FRAGMENT_DIM {
+            for j in 0..FRAGMENT_DIM {
+                let idx = match layout {
+                    Layout::RowMajor => i * ld + j,
+                    Layout::ColMajor => j * ld + i,
+                };
+                data[i * FRAGMENT_DIM + j] = f32_to_f16(src[idx]);
+            }
+        }
+        Fragment { data }
+    }
+
+    /// Load from values already in binary16 (no re-rounding).
+    pub fn load_half(src: &[Half], ld: usize, layout: Layout) -> Fragment {
+        let mut data = [Half::ZERO; FRAGMENT_DIM * FRAGMENT_DIM];
+        for i in 0..FRAGMENT_DIM {
+            for j in 0..FRAGMENT_DIM {
+                let idx = match layout {
+                    Layout::RowMajor => i * ld + j,
+                    Layout::ColMajor => j * ld + i,
+                };
+                data[i * FRAGMENT_DIM + j] = src[idx];
+            }
+        }
+        Fragment { data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> Half {
+        self.data[i * FRAGMENT_DIM + j]
+    }
+
+    /// The 4x4 hardware sub-tile at block position (bi, bj), as the MMA
+    /// unit consumes it.
+    pub(crate) fn hw_tile(&self, bi: usize, bj: usize) -> [Half; 16] {
+        let mut t = [Half::ZERO; 16];
+        for i in 0..4 {
+            for j in 0..4 {
+                t[i * 4 + j] = self.get(bi * 4 + i, bj * 4 + j);
+            }
+        }
+        t
+    }
+}
+
+/// An accumulator fragment in f32 (the mixed-precision accumulator of
+/// Listing 1: `wmma::fragment<wmma::accumulator, M, N, K, float>`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AccumFragment {
+    data: [f32; FRAGMENT_DIM * FRAGMENT_DIM],
+}
+
+impl Default for AccumFragment {
+    fn default() -> Self {
+        Self::fill(0.0)
+    }
+}
+
+impl AccumFragment {
+    /// `wmma::fill_fragment`: constant-fill (step 2 of Listing 1).
+    pub fn fill(value: f32) -> AccumFragment {
+        AccumFragment { data: [value; FRAGMENT_DIM * FRAGMENT_DIM] }
+    }
+
+    /// Load an existing C tile (for beta != 0 GEMMs).
+    pub fn load(src: &[f32], ld: usize, layout: Layout) -> AccumFragment {
+        let mut data = [0f32; FRAGMENT_DIM * FRAGMENT_DIM];
+        for i in 0..FRAGMENT_DIM {
+            for j in 0..FRAGMENT_DIM {
+                let idx = match layout {
+                    Layout::RowMajor => i * ld + j,
+                    Layout::ColMajor => j * ld + i,
+                };
+                data[i * FRAGMENT_DIM + j] = src[idx];
+            }
+        }
+        AccumFragment { data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * FRAGMENT_DIM + j]
+    }
+
+    #[inline]
+    pub(crate) fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * FRAGMENT_DIM + j] = v;
+    }
+
+    /// `wmma::store_matrix_sync`: write the tile into a 1-D f32 slice
+    /// with leading dimension `ld` (step 5 of Listing 1).
+    pub fn store(&self, dst: &mut [f32], ld: usize, layout: Layout) {
+        for i in 0..FRAGMENT_DIM {
+            for j in 0..FRAGMENT_DIM {
+                let idx = match layout {
+                    Layout::RowMajor => i * ld + j,
+                    Layout::ColMajor => j * ld + i,
+                };
+                dst[idx] = self.data[i * FRAGMENT_DIM + j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_row_vs_col_major_transposes() {
+        let src: Vec<f32> = (0..256).map(|x| x as f32).collect();
+        let r = Fragment::load(&src, 16, Layout::RowMajor);
+        let c = Fragment::load(&src, 16, Layout::ColMajor);
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(r.get(i, j), c.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn load_respects_leading_dimension() {
+        // a 16x16 tile embedded in a 32-wide row-major buffer
+        let mut src = vec![0f32; 16 * 32];
+        for i in 0..16 {
+            for j in 0..16 {
+                src[i * 32 + j] = (i * 100 + j) as f32;
+            }
+        }
+        let f = Fragment::load(&src, 32, Layout::RowMajor);
+        assert_eq!(f.get(3, 5).to_f32(), 305.0);
+    }
+
+    #[test]
+    fn load_rounds_to_half() {
+        let src = vec![1.0 + 2f32.powi(-12); 256]; // not representable
+        let f = Fragment::load(&src, 16, Layout::RowMajor);
+        assert_eq!(f.get(0, 0).to_f32(), 1.0);
+    }
+
+    #[test]
+    fn fill_and_store_roundtrip() {
+        let acc = AccumFragment::fill(3.25);
+        let mut dst = vec![0f32; 256];
+        acc.store(&mut dst, 16, Layout::RowMajor);
+        assert!(dst.iter().all(|&x| x == 3.25));
+    }
+
+    #[test]
+    fn store_col_major() {
+        let mut acc = AccumFragment::fill(0.0);
+        acc.set(2, 7, 42.0);
+        let mut dst = vec![0f32; 256];
+        acc.store(&mut dst, 16, Layout::ColMajor);
+        assert_eq!(dst[7 * 16 + 2], 42.0);
+    }
+
+    #[test]
+    fn hw_tile_extraction() {
+        let src: Vec<f32> = (0..256).map(|x| (x % 64) as f32).collect();
+        let f = Fragment::load(&src, 16, Layout::RowMajor);
+        let t = f.hw_tile(1, 2); // rows 4.., cols 8..
+        assert_eq!(t[0].to_f32(), f.get(4, 8).to_f32());
+        assert_eq!(t[15].to_f32(), f.get(7, 11).to_f32());
+    }
+}

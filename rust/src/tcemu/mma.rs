@@ -1,0 +1,125 @@
+//! The raw hardware op: one Tensor Core clock = `D = A x B + C` on 4x4
+//! tiles (64 FMAs), per §III and Fig. 3 of the paper.
+
+use crate::halfprec::{f32_to_f16, Half};
+
+/// Hardware MMA tile edge: the Tensor Core operates on 4x4 matrices.
+pub const HW_MMA_DIM: usize = 4;
+
+/// One tensor-core op with an f32 accumulator (the mixed-precision mode):
+/// `d = a x b + c`, a and b binary16, products exact, sums in f32.
+///
+/// Tiles are row-major `[row * 4 + col]`.
+pub fn mma4x4_f32acc(a: &[Half; 16], b: &[Half; 16], c: &[f32; 16]) -> [f32; 16] {
+    let mut d = *c;
+    // widen once; f16->f32 is exact
+    let mut aw = [0f32; 16];
+    let mut bw = [0f32; 16];
+    for i in 0..16 {
+        aw[i] = a[i].to_f32();
+        bw[i] = b[i].to_f32();
+    }
+    for i in 0..HW_MMA_DIM {
+        for j in 0..HW_MMA_DIM {
+            // FMA chain: 4 exact products accumulated in f32.  The order
+            // (k ascending) matches the dot-product unit's fixed chain.
+            let mut acc = d[i * 4 + j];
+            for k in 0..HW_MMA_DIM {
+                acc += aw[i * 4 + k] * bw[k * 4 + j];
+            }
+            d[i * 4 + j] = acc;
+        }
+    }
+    d
+}
+
+/// One tensor-core op with an f16 accumulator (FP16-output mode, Fig. 3
+/// right path): the products are still formed exactly, their 4-term sum
+/// is computed in full precision, then rounded *once* into the f16
+/// accumulator — the "one rounding operation instead of two" FMA property
+/// §III quotes, applied to the whole dot-product chain.
+pub fn mma4x4_f16acc(a: &[Half; 16], b: &[Half; 16], c: &[Half; 16]) -> [Half; 16] {
+    let mut d = [Half::ZERO; 16];
+    for i in 0..HW_MMA_DIM {
+        for j in 0..HW_MMA_DIM {
+            let mut acc = c[i * 4 + j].to_f32();
+            for k in 0..HW_MMA_DIM {
+                acc += a[i * 4 + k].to_f32() * b[k * 4 + j].to_f32();
+            }
+            d[i * 4 + j] = f32_to_f16(acc);
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h(x: f32) -> Half {
+        Half::from_f32(x)
+    }
+
+    fn tile(f: impl Fn(usize, usize) -> f32) -> [Half; 16] {
+        let mut t = [Half::ZERO; 16];
+        for i in 0..4 {
+            for j in 0..4 {
+                t[i * 4 + j] = h(f(i, j));
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn identity_times_identity() {
+        let eye = tile(|i, j| if i == j { 1.0 } else { 0.0 });
+        let d = mma4x4_f32acc(&eye, &eye, &[0.0; 16]);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(d[i * 4 + j], if i == j { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn accumulator_adds() {
+        let eye = tile(|i, j| if i == j { 1.0 } else { 0.0 });
+        let c = [2.5f32; 16];
+        let d = mma4x4_f32acc(&eye, &eye, &c);
+        assert_eq!(d[0], 3.5);
+        assert_eq!(d[1], 2.5);
+    }
+
+    #[test]
+    fn integer_exactness() {
+        let a = tile(|i, j| (i * 4 + j) as f32 - 8.0);
+        let b = tile(|i, j| (i + j) as f32 - 3.0);
+        let d = mma4x4_f32acc(&a, &b, &[0.0; 16]);
+        // check one entry by hand: d[0][0] = sum_k a[0][k] * b[k][0]
+        let want: f32 = (0..4).map(|k| ((k as f32) - 8.0) * ((k as f32) - 3.0)).sum();
+        assert_eq!(d[0], want);
+    }
+
+    #[test]
+    fn f16acc_rounds_once_per_op() {
+        // values chosen so the true sum needs more than 11 bits: the f16
+        // accumulator must round, the f32 one must not
+        let a = tile(|_, _| 1.0);
+        let b = tile(|i, j| if i == j { 1.0 + 2f32.powi(-10) } else { 0.0 });
+        let c16 = [h(1000.0); 16];
+        let d16 = mma4x4_f16acc(&a, &b, &c16);
+        let d32 = mma4x4_f32acc(&a, &b, &[1000.0; 16]);
+        // f32 keeps the small addend exactly; f16 absorbs the fraction
+        assert_eq!(d32[0], 1000.0 + 1.0 + 2f32.powi(-10));
+        assert_eq!(d16[0].to_f32(), 1001.0);
+    }
+
+    #[test]
+    fn products_are_exact_even_for_extreme_halves() {
+        // f16 max * f16 min subnormal is exactly representable in f32
+        let a = tile(|i, j| if (i, j) == (0, 0) { 65504.0 } else { 0.0 });
+        let b = tile(|i, j| if (i, j) == (0, 0) { 5.9604644775390625e-8 } else { 0.0 });
+        let d = mma4x4_f32acc(&a, &b, &[0.0; 16]);
+        assert_eq!(d[0], 65504.0 * 5.9604644775390625e-8);
+    }
+}

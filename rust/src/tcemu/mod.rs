@@ -1,0 +1,26 @@
+//! S3 — Tensor Core emulation: the hardware contract of §III/Fig. 3.
+//!
+//! A Volta Tensor Core performs `D = A x B + C` on 4x4 matrices per clock
+//! (64 FMAs): A, B in binary16, the products exact, the accumulation in
+//! binary32 (or binary16 when the accumulator fragment is f16).  This
+//! module implements that operation *at hardware granularity*:
+//!
+//! * [`mma`] — the raw 4x4x4 tensor-core op, both f32- and f16-accumulate
+//!   flavours.
+//! * [`fragment`] — WMMA-style fragments (register tiles) for 16x16x16
+//!   warp-level MMAs, composed of 4x4 hardware ops exactly as a warp's
+//!   two tensor cores would iterate them.
+//! * [`warp`] — the warp-level `mma_sync` built on fragments; the unit
+//!   [`crate::interfaces::wmma`] exposes.
+//!
+//! The emulation is bit-faithful: products of halves are formed in f32
+//! (exact), accumulated in the declared accumulator precision, with
+//! rounding through [`crate::halfprec`] at every step the hardware rounds.
+
+mod fragment;
+mod mma;
+mod warp;
+
+pub use fragment::{AccumFragment, Fragment, Layout, FRAGMENT_DIM};
+pub use mma::{mma4x4_f16acc, mma4x4_f32acc, HW_MMA_DIM};
+pub use warp::{mma_sync, mma_sync_f16acc};

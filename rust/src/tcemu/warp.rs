@@ -1,0 +1,170 @@
+//! Warp-level MMA: `wmma::mma_sync` (step 4 of Listing 1), composed from
+//! the 4x4 hardware ops the way a warp's two tensor cores iterate them.
+//!
+//! A 16x16x16 warp MMA decomposes into 4x4x4 = 64 hardware ops; the K
+//! blocks accumulate in sequence (fixed order — the emulation is
+//! deterministic and matches the per-k-ascending chain of the dot units).
+
+use crate::halfprec::f32_to_f16;
+
+use super::fragment::{AccumFragment, Fragment, FRAGMENT_DIM};
+use super::mma::{mma4x4_f32acc, mma4x4_f16acc};
+use crate::halfprec::Half;
+
+const BLOCKS: usize = FRAGMENT_DIM / 4;
+
+/// `wmma::mma_sync(D, A, B, C)` with f32 accumulation (mixed precision):
+/// D = A x B + C on 16x16 fragments.
+pub fn mma_sync(a: &Fragment, b: &Fragment, c: &AccumFragment) -> AccumFragment {
+    let mut d = c.clone();
+    for bi in 0..BLOCKS {
+        for bj in 0..BLOCKS {
+            // gather the current 4x4 accumulator block
+            let mut acc = [0f32; 16];
+            for i in 0..4 {
+                for j in 0..4 {
+                    acc[i * 4 + j] = d.get(bi * 4 + i, bj * 4 + j);
+                }
+            }
+            for bk in 0..BLOCKS {
+                let at = a.hw_tile(bi, bk);
+                let bt = b.hw_tile(bk, bj);
+                acc = mma4x4_f32acc(&at, &bt, &acc);
+            }
+            for i in 0..4 {
+                for j in 0..4 {
+                    d.set(bi * 4 + i, bj * 4 + j, acc[i * 4 + j]);
+                }
+            }
+        }
+    }
+    d
+}
+
+/// `mma_sync` with an f16 accumulator (FP16-output mode): every hardware
+/// op rounds its dot-chain result to binary16, as Fig. 3's right path.
+/// Returns the f16 accumulator widened into an [`AccumFragment`] plus the
+/// raw halves for callers that keep chaining.
+pub fn mma_sync_f16acc(a: &Fragment, b: &Fragment, c_init: f32) -> (AccumFragment, Vec<Half>) {
+    let mut c16 = vec![f32_to_f16(c_init); FRAGMENT_DIM * FRAGMENT_DIM];
+    for bi in 0..BLOCKS {
+        for bj in 0..BLOCKS {
+            let mut acc = [Half::ZERO; 16];
+            for i in 0..4 {
+                for j in 0..4 {
+                    acc[i * 4 + j] = c16[(bi * 4 + i) * FRAGMENT_DIM + bj * 4 + j];
+                }
+            }
+            for bk in 0..BLOCKS {
+                let at = a.hw_tile(bi, bk);
+                let bt = b.hw_tile(bk, bj);
+                acc = mma4x4_f16acc(&at, &bt, &acc);
+            }
+            for i in 0..4 {
+                for j in 0..4 {
+                    c16[(bi * 4 + i) * FRAGMENT_DIM + bj * 4 + j] = acc[i * 4 + j];
+                }
+            }
+        }
+    }
+    let mut out = AccumFragment::fill(0.0);
+    for i in 0..FRAGMENT_DIM {
+        for j in 0..FRAGMENT_DIM {
+            out.set(i, j, c16[i * FRAGMENT_DIM + j].to_f32());
+        }
+    }
+    (out, c16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{mixed_gemm, Matrix};
+    use crate::tcemu::Layout;
+
+    fn rand_vec(len: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut s = seed.max(1);
+        (0..len)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (((s >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0) * scale
+            })
+            .collect()
+    }
+
+    #[test]
+    fn mma_sync_matches_mixed_gemm_oracle() {
+        // the warp MMA must equal the CPU mixed GEMM bit-for-bit: both
+        // use f16-exact products with f32 k-ascending accumulation
+        let av = rand_vec(256, 1, 1.0);
+        let bv = rand_vec(256, 2, 1.0);
+        let a = Fragment::load(&av, 16, Layout::RowMajor);
+        let b = Fragment::load(&bv, 16, Layout::RowMajor);
+        let d = mma_sync(&a, &b, &AccumFragment::fill(0.0));
+
+        let am = Matrix::from_vec(16, 16, av);
+        let bm = Matrix::from_vec(16, 16, bv);
+        let want = mixed_gemm(&am, &bm, None, 1.0, 0.0);
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(d.get(i, j), want[(i, j)], "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulator_chains_across_mma_sync() {
+        // two chained mma_syncs == one GEMM of doubled A
+        let av = rand_vec(256, 3, 1.0);
+        let bv = rand_vec(256, 4, 1.0);
+        let a = Fragment::load(&av, 16, Layout::RowMajor);
+        let b = Fragment::load(&bv, 16, Layout::RowMajor);
+        let once = mma_sync(&a, &b, &AccumFragment::fill(0.0));
+        let twice = mma_sync(&a, &b, &once);
+        for i in 0..16 {
+            for j in 0..16 {
+                let diff = (twice.get(i, j) - 2.0 * once.get(i, j)).abs();
+                assert!(diff <= 1e-5, "({i},{j}) diff {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16acc_loses_precision_vs_f32acc() {
+        // inputs whose products need the accumulator's extra bits
+        let av = rand_vec(256, 5, 16.0);
+        let bv = rand_vec(256, 6, 16.0);
+        let a = Fragment::load(&av, 16, Layout::RowMajor);
+        let b = Fragment::load(&bv, 16, Layout::RowMajor);
+        let d32 = mma_sync(&a, &b, &AccumFragment::fill(0.0));
+        let (d16, _) = mma_sync_f16acc(&a, &b, 0.0);
+        let mut max_diff = 0f32;
+        for i in 0..16 {
+            for j in 0..16 {
+                max_diff = max_diff.max((d32.get(i, j) - d16.get(i, j)).abs());
+            }
+        }
+        assert!(max_diff > 0.0, "f16 accumulation must differ on these inputs");
+    }
+
+    #[test]
+    fn col_major_loads_compute_transposed_product() {
+        // loading A row-major vs col-major computes A*B vs A^T*B
+        let av = rand_vec(256, 7, 1.0);
+        let bv = rand_vec(256, 8, 1.0);
+        let a_t = Fragment::load(&av, 16, Layout::ColMajor);
+        let b = Fragment::load(&bv, 16, Layout::RowMajor);
+        let d = mma_sync(&a_t, &b, &AccumFragment::fill(0.0));
+
+        let am = Matrix::from_vec(16, 16, av).transpose();
+        let bm = Matrix::from_vec(16, 16, bv);
+        let want = mixed_gemm(&am, &bm, None, 1.0, 0.0);
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(d.get(i, j), want[(i, j)]);
+            }
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Micro-benchmark harness (criterion replacement) used by the cargo
+//! bench targets: warmup, adaptive iteration count, and robust statistics
+//! including the harmonic-mean-of-rates convention the paper uses ("we
+//! run 5 to 100 tests and present the harmonic mean of flops/s").
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark: per-iteration wall times.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl BenchResult {
+    /// Arithmetic mean execution time (the paper's convention when time
+    /// is the figure of merit).
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+
+    pub fn min(&self) -> Duration {
+        self.samples.iter().min().copied().unwrap_or_default()
+    }
+
+    pub fn max(&self) -> Duration {
+        self.samples.iter().max().copied().unwrap_or_default()
+    }
+
+    /// p-th percentile (0-100) of per-iteration time.
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut s = self.samples.clone();
+        s.sort();
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    /// Harmonic mean of rates `work / t_i` (the paper's flops/s
+    /// convention): equals total work / total time for constant work.
+    pub fn harmonic_mean_rate(&self, work_per_iter: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let denom: f64 = self.samples.iter().map(|d| d.as_secs_f64() / work_per_iter).sum();
+        self.samples.len() as f64 / denom
+    }
+
+    /// Relative spread (max-min)/mean, the error-bar criterion ("we do
+    /// not show error bars when the error is less than 1%").
+    pub fn spread(&self) -> f64 {
+        let m = self.mean().as_secs_f64();
+        if m == 0.0 {
+            return 0.0;
+        }
+        (self.max().as_secs_f64() - self.min().as_secs_f64()) / m
+    }
+
+    /// One-line report: `name  mean ± spread  [min .. max]  (n samples)`.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10.3?} ±{:>5.1}% [{:.3?} .. {:.3?}] ({} samples)",
+            self.name,
+            self.mean(),
+            self.spread() * 100.0,
+            self.min(),
+            self.max(),
+            self.samples.len()
+        )
+    }
+}
+
+/// Run `f` repeatedly: warm up for ~`warmup_ms`, then time `iters`
+/// iterations (bounded by `max_ms` total).
+pub fn bench(name: &str, iters: usize, f: impl FnMut()) -> BenchResult {
+    bench_config(name, iters, 50, 5_000, f)
+}
+
+/// Fully-configurable variant.
+pub fn bench_config(
+    name: &str,
+    iters: usize,
+    warmup_ms: u64,
+    max_ms: u64,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    // warmup
+    let w0 = Instant::now();
+    while w0.elapsed() < Duration::from_millis(warmup_ms) {
+        f();
+    }
+    // measurement
+    let mut samples = Vec::with_capacity(iters);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed());
+        if t0.elapsed() > Duration::from_millis(max_ms) {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples() {
+        let r = bench_config("noop", 10, 0, 1000, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(!r.samples.is_empty());
+        assert!(r.samples.len() <= 10);
+    }
+
+    #[test]
+    fn harmonic_mean_equals_total_over_total_for_constant_work() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: vec![Duration::from_millis(10), Duration::from_millis(20)],
+        };
+        let hm = r.harmonic_mean_rate(1000.0);
+        // total work 2000 over total time 0.03s
+        assert!((hm - 2000.0 / 0.03).abs() / hm < 1e-9);
+    }
+
+    #[test]
+    fn percentile_ordering() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: (1..=100).map(Duration::from_millis).collect(),
+        };
+        assert!(r.percentile(50.0) <= r.percentile(99.0));
+        assert_eq!(r.percentile(0.0), Duration::from_millis(1));
+        assert_eq!(r.percentile(100.0), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn respects_time_budget() {
+        let r = bench_config("slow", 1_000_000, 0, 50, || {
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert!(r.samples.len() < 1_000_000);
+    }
+}

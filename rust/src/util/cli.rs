@@ -1,0 +1,110 @@
+//! Tiny CLI argument parser (clap replacement): `--flag`, `--key value`,
+//! and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without the binary name).
+    /// `--key value` pairs become options unless the key is in
+    /// `known_flags` (then it is a bare flag and `value` stays
+    /// positional); `--key` at the end is a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let name = name.to_string();
+                if known_flags.contains(&name.as_str()) {
+                    out.flags.push(name);
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(name);
+                    } else {
+                        out.options.insert(name, it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.opt(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str], flags: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()), flags)
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = args(&["figures", "--fig", "6", "--out", "x.json"], &[]);
+        assert_eq!(a.positional(0), Some("figures"));
+        assert_eq!(a.opt("fig"), Some("6"));
+        assert_eq!(a.opt_parse::<usize>("fig"), Some(6));
+        assert_eq!(a.opt("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn flags_detected() {
+        let a = args(&["--verbose", "--n", "128"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_parse::<usize>("n"), Some(128));
+        assert!(!a.flag("n"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args(&["run", "--fast"], &[]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional(0), Some("run"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = args(&["--quick", "--n", "4"], &[]);
+        assert!(a.flag("quick")); // detected because next token is --n
+        assert_eq!(a.opt_parse::<usize>("n"), Some(4));
+    }
+
+    #[test]
+    fn known_flag_keeps_value_positional() {
+        let a = args(&["--check", "artifacts"], &["check"]);
+        assert!(a.flag("check"));
+        assert_eq!(a.positional(0), Some("artifacts"));
+    }
+}

@@ -1,0 +1,13 @@
+//! In-tree replacements for crates the offline image does not vendor
+//! (see Cargo.toml): a minimal JSON parser for the artifact manifest, a
+//! tiny CLI argument parser, a micro-benchmark harness used by the cargo
+//! bench targets, and a property-test driver over the crate's own PRNG.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+
+pub use bench::{bench, BenchResult};
+pub use cli::Args;
+pub use json::Json;

@@ -1,0 +1,78 @@
+//! Property-test driver (proptest replacement): run a property over many
+//! seeded random cases; on failure report the seed so the case replays
+//! deterministically.
+//!
+//! Shrinking is traded for seed-replay: every case derives from a u64
+//! seed printed on failure, so `forall_seeded(FAILING_SEED..FAILING_SEED+1,
+//! ...)` reproduces it exactly.
+
+use crate::workload::Rng;
+
+/// Run `prop` for `cases` seeds (0..cases).  Panics with the failing seed
+/// on first violation.
+pub fn forall(cases: u64, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    forall_seeded(0..cases, prop)
+}
+
+/// Run `prop` for every seed in `seeds`.
+pub fn forall_seeded(
+    seeds: std::ops::Range<u64>,
+    prop: impl Fn(&mut Rng) -> Result<(), String>,
+) {
+    for seed in seeds {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert helper for properties: `ensure!(cond, "...{x}...")`.
+#[macro_export]
+macro_rules! ensure_prop {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        let counter = std::cell::Cell::new(0u64);
+        forall(25, |rng| {
+            counter.set(counter.get() + 1);
+            let x = rng.uniform(0.0, 1.0);
+            ensure_prop!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed 3")]
+    fn failing_property_reports_seed() {
+        let calls = std::cell::Cell::new(0u64);
+        forall(10, |_rng| {
+            let i = calls.get();
+            calls.set(i + 1);
+            ensure_prop!(i != 3, "boom at call {i}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn seed_replay_is_deterministic() {
+        let capture = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            rng.next_u64()
+        };
+        assert_eq!(capture(7), capture(7));
+    }
+}

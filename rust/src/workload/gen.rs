@@ -1,0 +1,129 @@
+//! Deterministic random matrix generation (paper §VI protocol:
+//! "we initialize the two square matrices A and B of size N with random
+//! numbers, taken from range [-1,1] in single precision").
+//!
+//! A self-contained xoshiro256** PRNG keeps the whole repro reproducible
+//! without a rand dependency: every figure harness seeds explicitly.
+
+use crate::gemm::Matrix;
+
+/// xoshiro256** — small, fast, high-quality; seeded via splitmix64.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed deterministically (any seed value is fine, including 0).
+    pub fn new(seed: u64) -> Rng {
+        // splitmix64 expansion of the seed into four lanes
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Next raw u64.
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn uniform01(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform01()
+    }
+
+    /// Uniform usize in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Exponential inter-arrival sample with the given rate (per second).
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        let u = (self.uniform01() as f64).max(1e-12);
+        -u.ln() / rate
+    }
+}
+
+/// rows x cols matrix with iid U[lo, hi) entries.
+pub fn uniform_matrix(rng: &mut Rng, rows: usize, cols: usize, lo: f32, hi: f32) -> Matrix {
+    Matrix::from_fn(rows, cols, |_, _| rng.uniform(lo, hi))
+}
+
+/// A batch of `count` square n x n U[lo, hi) matrices.
+pub fn uniform_batch(rng: &mut Rng, count: usize, n: usize, lo: f32, hi: f32) -> Vec<Matrix> {
+    (0..count).map(|_| uniform_matrix(rng, n, n, lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_respects_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.uniform(-16.0, 16.0);
+            assert!((-16.0..16.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_center() {
+        let mut r = Rng::new(4);
+        let mean: f64 = (0..100_000).map(|_| r.uniform(-1.0, 1.0) as f64).sum::<f64>() / 100_000.0;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn matrix_shape_and_range() {
+        let mut r = Rng::new(5);
+        let m = uniform_matrix(&mut r, 8, 12, -1.0, 1.0);
+        assert_eq!(m.shape(), (8, 12));
+        assert!(m.max_abs() <= 1.0);
+    }
+
+    #[test]
+    fn exp_positive_and_rate_scaled() {
+        let mut r = Rng::new(6);
+        let mean: f64 = (0..50_000).map(|_| r.exp(100.0)).sum::<f64>() / 50_000.0;
+        assert!((mean - 0.01).abs() < 0.002, "mean {mean}");
+    }
+}

@@ -1,0 +1,17 @@
+//! S7 — workload generation: the paper's input protocol (§VI) and the HPC
+//! application shapes its introduction motivates (§IV-B).
+//!
+//! * [`gen`] — deterministic PRNG + uniform matrix generators (the
+//!   paper's U[-1,1] and ±16 protocols).
+//! * [`trace`] — request traces for the coordinator benches: batched
+//!   small-GEMM arrival streams with configurable size mix and rates.
+//! * [`spectral`] — Nek5000-style spectral-element GEMM mixes and the
+//!   FMM-FFT small-matrix shape (the paper's two named applications).
+
+pub mod gen;
+pub mod spectral;
+pub mod trace;
+
+pub use gen::{uniform_batch, uniform_matrix, Rng};
+pub use spectral::{fmm_fft_workload, spectral_element_workload, SpectralElementMix};
+pub use trace::{RequestTrace, TraceEvent, TraceSpec};

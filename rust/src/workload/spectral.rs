@@ -1,0 +1,123 @@
+//! HPC application workloads from the paper's motivation (§IV-B): the
+//! Nek5000 spectral-element mix ("the matrix size depends on the order of
+//! the spectral element in each direction") and the FMM-accelerated FFT's
+//! many small matrix multiplies.
+
+use crate::gemm::Matrix;
+
+use super::gen::{uniform_matrix, Rng};
+
+/// A spectral-element GEMM mix: elements of polynomial order p produce
+/// dense (p+1) x (p+1) operator applications, three per element (one per
+/// direction).
+#[derive(Clone, Copy, Debug)]
+pub struct SpectralElementMix {
+    /// Polynomial order of the elements (Nek5000 production runs: 5-15).
+    pub order: usize,
+    /// Number of spectral elements.
+    pub elements: usize,
+}
+
+impl SpectralElementMix {
+    /// Matrix edge the mix produces: p + 1.
+    pub fn matrix_size(&self) -> usize {
+        self.order + 1
+    }
+
+    /// Total small GEMMs per operator application: 3 per element.
+    pub fn gemm_count(&self) -> usize {
+        3 * self.elements
+    }
+}
+
+/// Generate the (A, B) pairs of one spectral operator application:
+/// per element, three (p+1)x(p+1) products of the derivative operator
+/// (shared, well-conditioned) against the element's field values.
+pub fn spectral_element_workload(
+    rng: &mut Rng,
+    mix: SpectralElementMix,
+) -> (Vec<Matrix>, Vec<Matrix>) {
+    let n = mix.matrix_size();
+    // One shared pseudo-derivative operator: rows sum to ~0, entries O(n)
+    // like a spectral differentiation matrix.
+    let deriv = Matrix::from_fn(n, n, |i, j| {
+        if i == j {
+            0.0
+        } else {
+            let d = i as f32 - j as f32;
+            (if (i + j) % 2 == 0 { 1.0 } else { -1.0 }) / d
+        }
+    });
+    let mut a = Vec::with_capacity(mix.gemm_count());
+    let mut b = Vec::with_capacity(mix.gemm_count());
+    for _ in 0..mix.elements {
+        for _ in 0..3 {
+            a.push(deriv.clone());
+            b.push(uniform_matrix(rng, n, n, -1.0, 1.0));
+        }
+    }
+    (a, b)
+}
+
+/// FMM-accelerated FFT workload (paper ref [25]): `count` translation
+/// operators of edge `n` (typically 16-32) applied to multipole vectors
+/// packed as matrices.
+pub fn fmm_fft_workload(rng: &mut Rng, count: usize, n: usize) -> (Vec<Matrix>, Vec<Matrix>) {
+    let mut a = Vec::with_capacity(count);
+    let mut b = Vec::with_capacity(count);
+    for _ in 0..count {
+        // translation operators decay away from the diagonal
+        let op = Matrix::from_fn(n, n, |i, j| {
+            let d = (i as f32 - j as f32).abs();
+            rng.uniform(-1.0, 1.0) / (1.0 + d)
+        });
+        a.push(op);
+        b.push(uniform_matrix(rng, n, n, -1.0, 1.0));
+    }
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_sizes() {
+        let mix = SpectralElementMix { order: 15, elements: 100 };
+        assert_eq!(mix.matrix_size(), 16);
+        assert_eq!(mix.gemm_count(), 300);
+    }
+
+    #[test]
+    fn workload_shapes_consistent() {
+        let mut rng = Rng::new(1);
+        let mix = SpectralElementMix { order: 7, elements: 10 };
+        let (a, b) = spectral_element_workload(&mut rng, mix);
+        assert_eq!(a.len(), 30);
+        assert_eq!(b.len(), 30);
+        assert!(a.iter().all(|m| m.shape() == (8, 8)));
+        assert!(b.iter().all(|m| m.shape() == (8, 8)));
+    }
+
+    #[test]
+    fn derivative_operator_is_shared() {
+        let mut rng = Rng::new(2);
+        let mix = SpectralElementMix { order: 7, elements: 2 };
+        let (a, _) = spectral_element_workload(&mut rng, mix);
+        assert_eq!(a[0], a[1]);
+        assert_eq!(a[0], a[5]);
+    }
+
+    #[test]
+    fn fmm_workload_decay() {
+        let mut rng = Rng::new(3);
+        let (a, b) = fmm_fft_workload(&mut rng, 4, 16);
+        assert_eq!(a.len(), 4);
+        assert_eq!(b[0].shape(), (16, 16));
+        // off-diagonal decay: far entries smaller on average than near
+        let m = &a[0];
+        let near: f32 = (0..16).map(|i| m[(i, i)].abs()).sum::<f32>() / 16.0;
+        let far: f32 = (0..8).map(|i| m[(i, i + 8)].abs()).sum::<f32>() / 8.0;
+        assert!(far < near + 0.5); // statistical, loose
+    }
+}

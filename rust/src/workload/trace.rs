@@ -1,0 +1,132 @@
+//! Request traces for the coordinator: synthetic arrival streams of GEMM
+//! requests, standing in for the production traces the paper's motivating
+//! applications would generate (DESIGN.md substitution table).
+
+
+use super::gen::Rng;
+
+/// Specification of a synthetic request trace.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSpec {
+    /// Mean request arrival rate (requests/second, Poisson process).
+    pub rate: f64,
+    /// Total number of requests.
+    pub count: usize,
+    /// Matrix edge for small-GEMM requests (16 = paper's batched shape).
+    pub tile: usize,
+    /// Fraction of requests that are large square GEMMs instead of tiles.
+    pub large_fraction: f64,
+    /// Edge of the large GEMMs.
+    pub large_n: usize,
+    /// Input value range (half-width s of U[-s, s]).
+    pub scale: f32,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            rate: 10_000.0,
+            count: 10_000,
+            tile: 16,
+            large_fraction: 0.0,
+            large_n: 512,
+            scale: 1.0,
+        }
+    }
+}
+
+/// One request arrival.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// Arrival time in seconds from trace start.
+    pub at: f64,
+    /// Square matrix edge of the requested GEMM.
+    pub n: usize,
+    /// Input scale (U[-scale, scale] entries).
+    pub scale: f32,
+    /// Sequence number.
+    pub seq: usize,
+}
+
+/// A generated trace: events sorted by arrival time.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    pub events: Vec<TraceEvent>,
+    pub spec_rate: f64,
+}
+
+impl RequestTrace {
+    /// Generate a Poisson trace from a spec, deterministically.
+    pub fn generate(rng: &mut Rng, spec: TraceSpec) -> RequestTrace {
+        let mut events = Vec::with_capacity(spec.count);
+        let mut t = 0.0;
+        for seq in 0..spec.count {
+            t += rng.exp(spec.rate);
+            let large = (rng.uniform01() as f64) < spec.large_fraction;
+            events.push(TraceEvent {
+                at: t,
+                n: if large { spec.large_n } else { spec.tile },
+                scale: spec.scale,
+                seq,
+            });
+        }
+        RequestTrace { events, spec_rate: spec.rate }
+    }
+
+    /// Duration from first to last arrival.
+    pub fn duration(&self) -> f64 {
+        match (self.events.first(), self.events.last()) {
+            (Some(f), Some(l)) => l.at - f.at,
+            _ => 0.0,
+        }
+    }
+
+    /// Observed average arrival rate.
+    pub fn observed_rate(&self) -> f64 {
+        let d = self.duration();
+        if d <= 0.0 {
+            return 0.0;
+        }
+        (self.events.len() as f64 - 1.0) / d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_sorted_and_counted() {
+        let mut rng = Rng::new(1);
+        let t = RequestTrace::generate(&mut rng, TraceSpec { count: 1000, ..Default::default() });
+        assert_eq!(t.events.len(), 1000);
+        assert!(t.events.windows(2).all(|w| w[0].at <= w[1].at));
+        assert!(t.events.iter().enumerate().all(|(i, e)| e.seq == i));
+    }
+
+    #[test]
+    fn observed_rate_matches_spec() {
+        let mut rng = Rng::new(2);
+        let spec = TraceSpec { rate: 5000.0, count: 20_000, ..Default::default() };
+        let t = RequestTrace::generate(&mut rng, spec);
+        let r = t.observed_rate();
+        assert!((r - 5000.0).abs() / 5000.0 < 0.05, "rate {r}");
+    }
+
+    #[test]
+    fn large_fraction_mixes_sizes() {
+        let mut rng = Rng::new(3);
+        let spec = TraceSpec { large_fraction: 0.3, count: 10_000, ..Default::default() };
+        let t = RequestTrace::generate(&mut rng, spec);
+        let large = t.events.iter().filter(|e| e.n == spec.large_n).count();
+        let frac = large as f64 / t.events.len() as f64;
+        assert!((frac - 0.3).abs() < 0.03, "frac {frac}");
+    }
+
+    #[test]
+    fn zero_large_fraction_all_tiles() {
+        let mut rng = Rng::new(4);
+        let t = RequestTrace::generate(&mut rng, TraceSpec::default());
+        assert!(t.events.iter().all(|e| e.n == 16));
+    }
+}

@@ -1,0 +1,179 @@
+//! Integration tests for the GEMM coordinator over real PJRT artifacts
+//! (requires `make artifacts`).
+
+use std::time::Duration;
+
+use tensoremu::coordinator::request::ServedBy;
+use tensoremu::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, GemmRequest};
+use tensoremu::gemm::{mixed_gemm, Matrix};
+use tensoremu::precision::{refine_gemm, RefineMode};
+use tensoremu::workload::{uniform_matrix, Rng};
+
+fn coordinator() -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(3) },
+        ..Default::default()
+    })
+    .expect("artifacts not built? run `make artifacts`")
+}
+
+#[test]
+fn serves_a_large_gemm_on_tensor_core_path() {
+    let c = coordinator();
+    let mut rng = Rng::new(1);
+    let a = uniform_matrix(&mut rng, 256, 256, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 256, 256, -1.0, 1.0);
+    let resp = c.gemm(a.clone(), b.clone()).unwrap();
+    assert_eq!(resp.served_by, ServedBy::TensorCore);
+    assert_eq!(resp.mode, RefineMode::None);
+    let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
+    assert!(resp.c.max_norm_diff(&want) < 1e-4);
+    c.shutdown();
+}
+
+#[test]
+fn batches_tile_requests_together() {
+    let c = coordinator();
+    let mut rng = Rng::new(2);
+    // submit a burst of 16x16 requests, then collect
+    let mut rxs = Vec::new();
+    let mut inputs = Vec::new();
+    for _ in 0..40 {
+        let a = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+        rxs.push(c.submit(GemmRequest::new(0, a.clone(), b.clone())));
+        inputs.push((a, b));
+    }
+    for (rx, (a, b)) in rxs.into_iter().zip(inputs) {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert_eq!(resp.served_by, ServedBy::BatchedTensorCore);
+        let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
+        assert!(resp.c.max_norm_diff(&want) < 1e-4);
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.responses, 40);
+    assert_eq!(snap.batched, 40);
+    assert!(snap.flushes >= 1, "expected at least one flush");
+    assert!(
+        snap.flushes < 40,
+        "requests must be batched, not served one-by-one (flushes = {})",
+        snap.flushes
+    );
+    c.shutdown();
+}
+
+#[test]
+fn error_budget_selects_refined_artifact() {
+    let c = coordinator();
+    let mut rng = Rng::new(3);
+    let a = uniform_matrix(&mut rng, 512, 512, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 512, 512, -1.0, 1.0);
+    let resp = c
+        .gemm_with(GemmRequest::new(0, a.clone(), b.clone()).with_error_budget(1e-7))
+        .unwrap();
+    assert_eq!(resp.mode, RefineMode::RefineAB);
+    let want = refine_gemm(&a, &b, RefineMode::RefineAB);
+    assert!(resp.c.max_norm_diff(&want) < 1e-4);
+    c.shutdown();
+}
+
+#[test]
+fn explicit_mode_respected() {
+    let c = coordinator();
+    let mut rng = Rng::new(4);
+    let a = uniform_matrix(&mut rng, 128, 128, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 128, 128, -1.0, 1.0);
+    let resp = c
+        .gemm_with(GemmRequest::new(0, a.clone(), b.clone()).with_mode(RefineMode::RefineA))
+        .unwrap();
+    assert_eq!(resp.mode, RefineMode::RefineA);
+    let want = refine_gemm(&a, &b, RefineMode::RefineA);
+    assert!(resp.c.max_norm_diff(&want) < 1e-4);
+    c.shutdown();
+}
+
+#[test]
+fn odd_shapes_served_by_cpu_fallback() {
+    let c = coordinator();
+    let mut rng = Rng::new(5);
+    let a = uniform_matrix(&mut rng, 48, 80, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 80, 32, -1.0, 1.0);
+    let resp = c.gemm(a.clone(), b.clone()).unwrap();
+    assert_eq!(resp.served_by, ServedBy::CpuFallback);
+    let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
+    assert!(resp.c.max_norm_diff(&want) < 1e-5);
+    assert_eq!(c.metrics().snapshot().fallback, 1);
+    c.shutdown();
+}
+
+#[test]
+fn mixed_traffic_all_served_correctly() {
+    let c = coordinator();
+    let mut rng = Rng::new(6);
+    let mut rxs = Vec::new();
+    let mut wants = Vec::new();
+    for i in 0..30 {
+        let n = match i % 3 {
+            0 => 16,
+            1 => 64,
+            _ => 128,
+        };
+        let a = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        wants.push(mixed_gemm(&a, &b, None, 1.0, 0.0));
+        rxs.push(c.submit(GemmRequest::new(0, a, b)));
+    }
+    for (rx, want) in rxs.into_iter().zip(wants) {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
+        assert!(resp.c.max_norm_diff(&want) < 1e-4);
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.responses, 30);
+    assert!(snap.batched == 10 && snap.direct == 20, "{}", snap.report());
+    c.shutdown();
+}
+
+#[test]
+fn response_ids_match_requests() {
+    let c = coordinator();
+    let mut rng = Rng::new(7);
+    let a = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+    let rx = c.submit(GemmRequest::new(4242, a, b));
+    let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+    assert_eq!(resp.id, 4242);
+    c.shutdown();
+}
+
+#[test]
+fn latency_accounting_present() {
+    let c = coordinator();
+    let mut rng = Rng::new(8);
+    let a = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
+    let resp = c.gemm(a, b).unwrap();
+    assert!(resp.exec > Duration::ZERO);
+    let snap = c.metrics().snapshot();
+    assert!(snap.p50 > Duration::ZERO);
+    c.shutdown();
+}
+
+#[test]
+fn pm16_inputs_budget_escalates_precision() {
+    // the §VII-B scenario as service behaviour: same budget, ±16 inputs
+    // -> the policy must refine
+    let c = coordinator();
+    let mut rng = Rng::new(9);
+    let n = 512;
+    let a = uniform_matrix(&mut rng, n, n, -16.0, 16.0);
+    let b = uniform_matrix(&mut rng, n, n, -16.0, 16.0);
+    let resp = c
+        .gemm_with(
+            GemmRequest::new(0, a.clone(), b.clone())
+                .with_error_budget(0.05)
+                .with_scale(16.0),
+        )
+        .unwrap();
+    assert_ne!(resp.mode, RefineMode::None, "±16 inputs must trigger refinement");
+    c.shutdown();
+}

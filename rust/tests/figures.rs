@@ -1,0 +1,145 @@
+//! Integration tests for the figure harness: every paper figure must
+//! regenerate with the paper's qualitative shape (who wins, by what
+//! factor, where cliffs fall).  Precision figures run real artifacts.
+
+use tensoremu::figures::{ablations, fig6, fig7, fig8, fig9, headline};
+use tensoremu::runtime::Engine;
+use tensoremu::sim::{GemmImpl, VoltaConfig};
+
+fn cfg() -> VoltaConfig {
+    VoltaConfig::tesla_v100_pdc()
+}
+
+#[test]
+fn fig6_shape_matches_paper() {
+    let f = fig6::compute(&cfg());
+    let at = |n: usize, imp: GemmImpl| {
+        f.rows
+            .iter()
+            .find(|r| r.n == n)
+            .unwrap()
+            .series
+            .iter()
+            .find(|(i, _, _)| *i == imp)
+            .unwrap()
+            .1
+    };
+    // headline: cuBLAS-TC ~83 @ 8192, ~6x sgemm, ~3x hgemm
+    let tc = at(8192, GemmImpl::CublasTensorOp);
+    assert!((79.0..88.0).contains(&tc), "cublas-tc {tc}");
+    assert!((5.0..7.5).contains(&(tc / at(8192, GemmImpl::Sgemm))));
+    assert!((2.5..3.8).contains(&(tc / at(8192, GemmImpl::Hgemm))));
+    // naive WMMA never wins; CUTLASS overtakes cuBLAS at 16384 only
+    for n in [4096, 8192, 16384] {
+        assert!(at(n, GemmImpl::NaiveWmma) <= at(n, GemmImpl::Hgemm));
+    }
+    assert!(at(8192, GemmImpl::Cutlass) < at(8192, GemmImpl::CublasTensorOp));
+    assert!(at(16384, GemmImpl::Cutlass) > at(16384, GemmImpl::CublasTensorOp));
+    // peak line respected by every point
+    for r in &f.rows {
+        for (_, t, _) in &r.series {
+            assert!(*t < f.peak_tflops);
+        }
+    }
+}
+
+#[test]
+fn fig7_shape_matches_paper() {
+    let f = fig7::compute(&cfg());
+    // OOM cliff after 131072
+    assert!(f.rows.iter().find(|r| r.batch == 131072).unwrap().sgemm_tflops.is_some());
+    assert!(f.rows.iter().find(|r| r.batch == 262144).unwrap().sgemm_tflops.is_none());
+    // WMMA peak ~4 Tflops/s; speedups in the paper band
+    let peak = f.rows.iter().map(|r| r.wmma_tflops).fold(0.0, f64::max);
+    assert!((3.2..4.8).contains(&peak), "peak {peak}");
+    for r in &f.rows {
+        if let Some(s) = r.speedup {
+            assert!((1.8..16.0).contains(&s), "batch {}: {s}", r.batch);
+        }
+    }
+}
+
+#[test]
+fn fig8_measured_shape() {
+    let mut e = Engine::discover().expect("run `make artifacts`");
+    let f = fig8::compute(&mut e, 2, -1.0, 1.0, 7).unwrap();
+    let measured: Vec<_> = f.rows.iter().filter(|r| !r.extrapolated).collect();
+    assert!(measured.len() >= 3);
+    // error grows with N
+    for w in measured.windows(2) {
+        assert!(w[1].none > w[0].none, "error must grow with N");
+    }
+    // refinement ordering at every size
+    for r in &measured {
+        assert!(r.none > r.refine_a && r.refine_a > r.refine_ab, "n={}", r.n);
+        assert!(r.none > r.refine_ab_paper, "n={}", r.n);
+    }
+    // extrapolated rows exist for the paper's sizes
+    assert!(f.rows.iter().any(|r| r.n == 8192 && r.extrapolated));
+    // render mentions the extrapolation marker
+    assert!(fig8::render(&f).contains("*"));
+}
+
+#[test]
+fn fig9_scatter_shape() {
+    let mut e = Engine::discover().expect("run `make artifacts`");
+    let f = fig9::compute(&mut e, &cfg(), 2, 7).unwrap();
+    assert_eq!(f.points.len(), 6); // 2 sizes x 3 modes
+    // within a size: more cost, less error
+    for n in [4096usize, 8192] {
+        let mut pts: Vec<_> = f.points.iter().filter(|p| p.n == n).collect();
+        pts.sort_by(|a, b| a.cost_factor.total_cmp(&b.cost_factor));
+        assert!(pts.windows(2).all(|w| w[1].error <= w[0].error * 1.001), "n={n}");
+        assert!(pts.windows(2).all(|w| w[1].time_ms > w[0].time_ms), "n={n}");
+    }
+    // the paper's cost story: full refinement stays under the sgemm line
+    let sgemm_8k = f.sgemm_ms.iter().find(|(n, _)| *n == 8192).unwrap().1;
+    let rab_8k = f
+        .points
+        .iter()
+        .find(|p| p.n == 8192 && p.cost_factor > 4.0)
+        .unwrap()
+        .time_ms;
+    assert!(
+        rab_8k < sgemm_8k,
+        "refined mixed GEMM ({rab_8k} ms) must beat full sgemm ({sgemm_8k} ms)"
+    );
+}
+
+#[test]
+fn headline_table_complete() {
+    let mut e = Engine::discover().expect("run `make artifacts`");
+    let claims = headline::compute(&mut e, &cfg(), 7).unwrap();
+    assert!(claims.len() >= 12);
+    let ids: Vec<_> = claims.iter().map(|c| c.id).collect();
+    for id in ["H1", "H2", "H3", "H8", "H9", "H11", "H12"] {
+        assert!(ids.contains(&id), "missing {id}");
+    }
+    let rendered = headline::render(&claims);
+    assert!(rendered.contains("83 Tflops/s"));
+    assert!(rendered.contains("74%"));
+}
+
+#[test]
+fn ablation_tables_render() {
+    let s = ablations::tiling_sweep(&cfg());
+    assert!(s.contains("128x128"));
+    let s = ablations::shared_memory_study(&cfg());
+    assert!(s.contains("gain"));
+    let s = ablations::kahan_study(3);
+    assert!(s.contains("Kahan"));
+}
+
+#[test]
+fn ablation_range_study_runs() {
+    let mut e = Engine::discover().expect("run `make artifacts`");
+    let s = ablations::input_range_study(&mut e, 3).unwrap();
+    assert!(s.contains("±16"));
+}
+
+#[test]
+fn ablation_pipeline_study_runs() {
+    let mut e = Engine::discover().expect("run `make artifacts`");
+    let s = ablations::pipeline_study(&mut e, 3).unwrap();
+    assert!(s.contains("fused"));
+}

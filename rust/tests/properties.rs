@@ -1,0 +1,226 @@
+//! Property-based tests over the crate's numerical invariants, driven by
+//! the in-tree property harness (util::prop — the offline image has no
+//! proptest; failures print a replayable seed).
+
+use tensoremu::ensure_prop;
+use tensoremu::gemm::{batched_mixed_gemm, dgemm_naive, mixed_gemm, sgemm_blocked, sgemm_naive, Matrix};
+use tensoremu::halfprec::{f16_to_f32, f32_to_f16, split_residual, ulp_at, Half};
+use tensoremu::interfaces::{wmma_tiled_gemm, CutlassGemm, TilePolicy};
+use tensoremu::precision::bounds::mixed_gemm_error_bound;
+use tensoremu::precision::{refine_gemm, RefineMode};
+use tensoremu::util::prop::forall;
+use tensoremu::workload::{uniform_batch, uniform_matrix, Rng};
+
+fn rand_dims(rng: &mut Rng) -> (usize, usize, usize) {
+    let pick = |rng: &mut Rng| 16 * (1 + rng.below(6));
+    (pick(rng), pick(rng), pick(rng))
+}
+
+#[test]
+fn prop_f16_roundtrip_error_below_half_ulp() {
+    forall(200, |rng| {
+        let x = rng.uniform(-60000.0, 60000.0);
+        let h = f32_to_f16(x);
+        let err = (x - f16_to_f32(h)).abs();
+        let bound = ulp_at(x) / 2.0 + f32::EPSILON * x.abs();
+        ensure_prop!(err <= bound, "x={x} err={err} bound={bound}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f16_rounding_monotone() {
+    // rounding preserves order: x <= y => f16(x) <= f16(y)
+    forall(300, |rng| {
+        let x = rng.uniform(-100.0, 100.0);
+        let y = rng.uniform(-100.0, 100.0);
+        let (lo, hi) = if x <= y { (x, y) } else { (y, x) };
+        let (hl, hh) = (f32_to_f16(lo).to_f32(), f32_to_f16(hi).to_f32());
+        ensure_prop!(hl <= hh, "monotonicity broke: {lo}->{hl}, {hi}->{hh}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_residual_split_reconstructs() {
+    forall(300, |rng| {
+        let scale = [1.0f32, 16.0, 100.0][rng.below(3)];
+        let x = rng.uniform(-scale, scale);
+        let s = split_residual(x);
+        let leak = (x - s.reconstruct()).abs();
+        // leak bounded by half an ulp of the residual's magnitude
+        let bound = ulp_at(ulp_at(x) / 2.0) / 2.0 + f32::EPSILON;
+        ensure_prop!(leak <= bound.max(1e-12), "x={x} leak={leak} bound={bound}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_residual_hi_is_rounding() {
+    forall(200, |rng| {
+        let x = rng.uniform(-1000.0, 1000.0);
+        ensure_prop!(split_residual(x).hi == f32_to_f16(x), "hi != f16(x) at {x}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mixed_gemm_error_within_analytic_bound() {
+    forall(25, |rng| {
+        let (m, n, k) = rand_dims(rng);
+        let scale = [1.0f32, 4.0][rng.below(2)];
+        let a = uniform_matrix(rng, m, k, -scale, scale);
+        let b = uniform_matrix(rng, k, n, -scale, scale);
+        let got = mixed_gemm(&a, &b, None, 1.0, 0.0);
+        let truth = dgemm_naive(&a, &b);
+        let err = got.max_norm_diff(&truth);
+        let bound = mixed_gemm_error_bound(k, scale);
+        ensure_prop!(err <= bound, "({m},{n},{k}) scale {scale}: err {err} > bound {bound}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_refinement_never_hurts() {
+    forall(20, |rng| {
+        let n = 16 * (1 + rng.below(4));
+        let scale = [1.0f32, 16.0][rng.below(2)];
+        let a = uniform_matrix(rng, n, n, -scale, scale);
+        let b = uniform_matrix(rng, n, n, -scale, scale);
+        let truth = dgemm_naive(&a, &b);
+        let e0 = refine_gemm(&a, &b, RefineMode::None).max_norm_diff(&truth);
+        let e1 = refine_gemm(&a, &b, RefineMode::RefineA).max_norm_diff(&truth);
+        let e2 = refine_gemm(&a, &b, RefineMode::RefineAB).max_norm_diff(&truth);
+        // refine_a gets a 15% statistical allowance: it can shift which
+        // entry attains the max norm (B's error remains); refine_ab
+        // removes both inputs' errors and must land far below
+        ensure_prop!(e1 <= e0 * 1.15, "refine_a hurt: {e0} -> {e1}");
+        ensure_prop!(e2 <= e1 * 0.5, "refine_ab too weak: {e1} -> {e2}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_gemm_backends_agree() {
+    // wmma-tiled, cutlass (any policy) and the scalar oracle are the
+    // same function, bit for bit
+    forall(15, |rng| {
+        let (m, n, k) = rand_dims(rng);
+        let a = uniform_matrix(rng, m, k, -1.0, 1.0);
+        let b = uniform_matrix(rng, k, n, -1.0, 1.0);
+        let oracle = mixed_gemm(&a, &b, None, 1.0, 0.0);
+        let wmma = wmma_tiled_gemm(&a, &b);
+        ensure_prop!(wmma == oracle, "wmma != oracle at ({m},{n},{k})");
+        let policy = TilePolicy::SWEEP[rng.below(TilePolicy::SWEEP.len())];
+        let ct = CutlassGemm::new(policy).run(&a, &b);
+        ensure_prop!(ct == oracle, "cutlass {policy:?} != oracle at ({m},{n},{k})");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sgemm_blocked_close_to_naive() {
+    forall(20, |rng| {
+        let (m, n, k) = rand_dims(rng);
+        let a = uniform_matrix(rng, m, k, -1.0, 1.0);
+        let b = uniform_matrix(rng, k, n, -1.0, 1.0);
+        let d = sgemm_blocked(&a, &b, None, 1.0, 0.0)
+            .max_norm_diff(&sgemm_naive(&a, &b, None, 1.0, 0.0));
+        // only accumulation-order noise
+        ensure_prop!(d <= 1e-4 * k as f32 / 16.0, "({m},{n},{k}): diff {d}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batched_equals_loop_of_singles() {
+    forall(10, |rng| {
+        let count = 1 + rng.below(8);
+        let n = 8 * (1 + rng.below(3));
+        let a = uniform_batch(rng, count, n, -1.0, 1.0);
+        let b = uniform_batch(rng, count, n, -1.0, 1.0);
+        let batched = batched_mixed_gemm(&a, &b);
+        for i in 0..count {
+            let single = mixed_gemm(&a[i], &b[i], None, 1.0, 0.0);
+            ensure_prop!(batched[i] == single, "entry {i} differs");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_linearity_in_alpha() {
+    // sgemm(alpha) == alpha * sgemm(1) for exact scalars
+    forall(20, |rng| {
+        let n = 16 * (1 + rng.below(3));
+        let a = uniform_matrix(rng, n, n, -1.0, 1.0);
+        let b = uniform_matrix(rng, n, n, -1.0, 1.0);
+        let one = sgemm_naive(&a, &b, None, 1.0, 0.0);
+        let two = sgemm_naive(&a, &b, None, 2.0, 0.0);
+        let scaled = Matrix::from_fn(n, n, |i, j| 2.0 * one[(i, j)]);
+        ensure_prop!(two == scaled, "alpha scaling broke");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_half_arithmetic_commutative() {
+    forall(300, |rng| {
+        let a = f32_to_f16(rng.uniform(-100.0, 100.0));
+        let b = f32_to_f16(rng.uniform(-100.0, 100.0));
+        ensure_prop!(
+            tensoremu::halfprec::half_add(a, b) == tensoremu::halfprec::half_add(b, a),
+            "add not commutative"
+        );
+        ensure_prop!(
+            tensoremu::halfprec::half_mul(a, b) == tensoremu::halfprec::half_mul(b, a),
+            "mul not commutative"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_half_special_values() {
+    forall(100, |rng| {
+        let x = rng.uniform(-65000.0, 65000.0);
+        let h = f32_to_f16(x);
+        ensure_prop!(!h.is_nan(), "finite input became NaN: {x}");
+        // negation is a bit flip
+        ensure_prop!(f32_to_f16(-x) == h.neg() || x == 0.0, "neg mismatch at {x}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zero_times_anything_is_zero() {
+    forall(50, |rng| {
+        let n = 16 * (1 + rng.below(3));
+        let a = uniform_matrix(rng, n, n, -1e4, 1e4);
+        let z = Matrix::zeros(n, n);
+        let c = mixed_gemm(&a, &z, None, 1.0, 0.0);
+        ensure_prop!(c == Matrix::zeros(n, n), "A x 0 != 0");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_overflow_saturates_to_infinity_not_garbage() {
+    // §V: values above 65504 become half infinity; the GEMM must then
+    // produce inf/nan, never silently wrong finite numbers
+    forall(30, |rng| {
+        let n = 16;
+        let mut a = uniform_matrix(rng, n, n, -1.0, 1.0);
+        a[(0, 0)] = 1e30; // rounds to +inf in f16
+        let b = Matrix::eye(n);
+        let c = mixed_gemm(&a, &b, None, 1.0, 0.0);
+        ensure_prop!(c[(0, 0)].is_infinite(), "expected inf, got {}", c[(0, 0)]);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_half_infinity_constant() {
+    assert_eq!(f32_to_f16(f32::INFINITY), Half::INFINITY);
+    assert_eq!(f32_to_f16(65504.0), Half::MAX);
+}

@@ -1,0 +1,182 @@
+//! Integration tests: the PJRT runtime executing real AOT artifacts
+//! (requires `make artifacts` — the Makefile runs it before `cargo test`).
+//!
+//! These tests are the cross-language correctness signal: the JAX/Pallas
+//! artifacts must agree with the Rust CPU emulation to accumulation-order
+//! tolerance.
+
+use tensoremu::gemm::{mixed_gemm, sgemm_naive};
+use tensoremu::precision::{refine_gemm, RefineMode};
+use tensoremu::runtime::{Engine, ExecutorServer, Manifest, TensorData};
+use tensoremu::workload::{uniform_batch, uniform_matrix, Rng};
+
+fn engine() -> Engine {
+    Engine::discover().expect("artifacts not built? run `make artifacts`")
+}
+
+#[test]
+fn manifest_discovers_and_has_core_artifacts() {
+    let m = Manifest::discover().unwrap();
+    assert!(m.gemm("mixed", 64).is_some());
+    assert!(m.gemm("sgemm", 256).is_some());
+    assert!(m.gemm("refine_ab", 512).is_some());
+    assert!(m.batched_at_least(64, 16).is_some());
+    assert!(!m.errprobe_sizes().is_empty());
+}
+
+#[test]
+fn pallas_mixed_gemm_matches_rust_emulation() {
+    let mut e = engine();
+    let mut rng = Rng::new(1);
+    let a = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
+    let name = e
+        .manifest()
+        .gemm_kernel("mixed", 64, "pallas")
+        .expect("pallas artifact missing")
+        .name
+        .clone();
+    let out = e
+        .run(&name, &[TensorData::from_matrix(&a), TensorData::from_matrix(&b)])
+        .unwrap()
+        .into_matrix()
+        .unwrap();
+    let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
+    let diff = out.max_norm_diff(&want);
+    assert!(diff < 1e-4, "pallas vs rust emulation diff {diff}");
+}
+
+#[test]
+fn sgemm_artifact_matches_rust_sgemm() {
+    let mut e = engine();
+    let mut rng = Rng::new(2);
+    let a = uniform_matrix(&mut rng, 128, 128, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 128, 128, -1.0, 1.0);
+    let name = e.manifest().gemm("sgemm", 128).unwrap().name.clone();
+    let out = e
+        .run(&name, &[TensorData::from_matrix(&a), TensorData::from_matrix(&b)])
+        .unwrap()
+        .into_matrix()
+        .unwrap();
+    let want = sgemm_naive(&a, &b, None, 1.0, 0.0);
+    assert!(out.max_norm_diff(&want) < 1e-3);
+}
+
+#[test]
+fn refined_artifacts_match_rust_refinement() {
+    let mut e = engine();
+    let mut rng = Rng::new(3);
+    let a = uniform_matrix(&mut rng, 128, 128, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 128, 128, -1.0, 1.0);
+    for (op, mode) in [("refine_a", RefineMode::RefineA), ("refine_ab", RefineMode::RefineAB)] {
+        let name = e.manifest().gemm(op, 128).unwrap().name.clone();
+        let out = e
+            .run(&name, &[TensorData::from_matrix(&a), TensorData::from_matrix(&b)])
+            .unwrap()
+            .into_matrix()
+            .unwrap();
+        let want = refine_gemm(&a, &b, mode);
+        let diff = out.max_norm_diff(&want);
+        assert!(diff < 1e-4, "{op}: diff {diff}");
+    }
+}
+
+#[test]
+fn batched_artifact_matches_batched_emulation() {
+    let mut e = engine();
+    let mut rng = Rng::new(4);
+    let a = uniform_batch(&mut rng, 64, 16, -1.0, 1.0);
+    let b = uniform_batch(&mut rng, 64, 16, -1.0, 1.0);
+    let meta = e.manifest().batched_at_least(64, 16).unwrap();
+    assert_eq!(meta.batch, Some(64));
+    let name = meta.name.clone();
+    let out = e
+        .run(
+            &name,
+            &[TensorData::from_batch(&a).unwrap(), TensorData::from_batch(&b).unwrap()],
+        )
+        .unwrap()
+        .into_batch()
+        .unwrap();
+    let want = tensoremu::gemm::batched_mixed_gemm(&a, &b);
+    for (i, (o, w)) in out.iter().zip(&want).enumerate() {
+        let diff = o.max_norm_diff(w);
+        assert!(diff < 1e-4, "batch entry {i}: diff {diff}");
+    }
+}
+
+#[test]
+fn errprobe_orders_refinement_errors() {
+    let mut e = engine();
+    let n = *e.manifest().errprobe_sizes().first().unwrap();
+    let mut rng = Rng::new(5);
+    let a = TensorData::from_matrix(&uniform_matrix(&mut rng, n, n, -1.0, 1.0));
+    let b = TensorData::from_matrix(&uniform_matrix(&mut rng, n, n, -1.0, 1.0));
+    let [e_none, e_a, e_ab, e_a_paper, e_ab_paper] = e.run_errprobe(n, &a, &b).unwrap();
+    assert!(e_none > e_a, "refine_a must improve: {e_none} vs {e_a}");
+    assert!(e_a > e_ab, "refine_ab must improve: {e_a} vs {e_ab}");
+    assert!(e_none > e_a_paper && e_none > e_ab_paper);
+    assert!(e_ab_paper >= e_ab * 0.99, "paper pipeline cannot beat exact chaining");
+}
+
+#[test]
+fn engine_rejects_wrong_shapes() {
+    let mut e = engine();
+    let name = e.manifest().gemm("mixed", 64).unwrap().name.clone();
+    let bad = TensorData::new(vec![32, 32], vec![0.0; 1024]).unwrap();
+    let err = e.run(&name, &[bad.clone(), bad]).unwrap_err();
+    assert!(format!("{err:#}").contains("shape"), "got: {err:#}");
+}
+
+#[test]
+fn engine_rejects_unknown_artifact() {
+    let mut e = engine();
+    assert!(e.run("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn engine_caches_compilations() {
+    let mut e = engine();
+    let name = e.manifest().gemm("mixed", 64).unwrap().name.clone();
+    assert_eq!(e.compiled_count(), 0);
+    e.ensure_compiled(&name).unwrap();
+    assert_eq!(e.compiled_count(), 1);
+    e.ensure_compiled(&name).unwrap();
+    assert_eq!(e.compiled_count(), 1);
+}
+
+#[test]
+fn executor_thread_serves_concurrent_clients() {
+    let server = ExecutorServer::discover().unwrap();
+    let name = server.manifest().gemm("mixed", 64).unwrap().name.clone();
+    let mut joins = Vec::new();
+    for t in 0..4 {
+        let h = server.handle();
+        let name = name.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t);
+            let a = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
+            let b = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
+            let out = h
+                .run(&name, vec![TensorData::from_matrix(&a), TensorData::from_matrix(&b)])
+                .unwrap()
+                .into_matrix()
+                .unwrap();
+            let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
+            assert!(out.max_norm_diff(&want) < 1e-4);
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    server.shutdown();
+}
+
+#[test]
+fn executor_warm_precompiles() {
+    let server = ExecutorServer::discover().unwrap();
+    let h = server.handle();
+    let name = server.manifest().gemm("sgemm", 64).unwrap().name.clone();
+    h.warm(&name).unwrap();
+    assert!(h.warm("bogus").is_err());
+}
