@@ -1,29 +1,137 @@
-//! Hot-path benchmarks for the §Perf optimization pass (EXPERIMENTS.md):
-//! the L3 components that sit on the request path, measured in isolation
-//! so the coordinator overhead can be compared against artifact
-//! execution time.
+//! Hot-path benchmarks for the §Perf optimization pass (EXPERIMENTS.md).
 //!
-//! Run: `cargo bench --bench hotpath`  (needs `make artifacts`)
+//! Part 1 — **engine vs scalar**: the packed multithreaded GEMM engine
+//! against the serial scalar oracles it replaced, on the two shapes the
+//! acceptance bar names (512^3 mixed GEMM, 1024-tile batched 16x16), plus
+//! the hgemm repack-reuse path.  Requires nothing but the crate; writes a
+//! machine-readable baseline to `BENCH_hotpath.json` (override the path
+//! with `BENCH_OUT`) so future PRs have a perf trajectory.
+//!
+//! Part 2 — **L3 serving components** (router / batcher / tensor
+//! conversion / PJRT execution), which require `make artifacts`; skipped
+//! gracefully when the artifacts are absent.
+//!
+//! Run: `cargo bench --bench hotpath`
 
 use std::time::Duration;
 
 use tensoremu::coordinator::{Batcher, BatcherConfig, GemmRequest, PrecisionPolicy, Router};
-use tensoremu::gemm::Matrix;
+use tensoremu::gemm::engine::{self, PackedHalfA, PackedHalfB};
+use tensoremu::gemm::{
+    batched_mixed_gemm, batched_mixed_gemm_scalar, hgemm_scalar, mixed_gemm, mixed_gemm_scalar,
+    Matrix,
+};
 use tensoremu::runtime::{Engine, Manifest, TensorData};
-use tensoremu::util::bench::{bench, bench_config};
-use tensoremu::workload::{uniform_matrix, Rng};
+use tensoremu::util::bench::{bench, bench_config, BenchResult};
+use tensoremu::workload::{uniform_batch, uniform_matrix, Rng};
+
+struct Comparison {
+    name: &'static str,
+    scalar: BenchResult,
+    engine: BenchResult,
+}
+
+impl Comparison {
+    fn speedup(&self) -> f64 {
+        self.scalar.mean().as_secs_f64() / self.engine.mean().as_secs_f64().max(1e-12)
+    }
+}
 
 fn main() {
-    let manifest = Manifest::discover().expect("run `make artifacts` first");
-
-    // -- router: requests/second it can classify
-    let router = Router::new(manifest.clone(), 16, PrecisionPolicy::default());
     let mut rng = Rng::new(1);
+    let mut comparisons = Vec::new();
+
+    // -- 512^3 mixed GEMM: the direct-path shape of Fig. 6
+    let a = uniform_matrix(&mut rng, 512, 512, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 512, 512, -1.0, 1.0);
+    let scalar = bench_config("gemm/mixed_512_scalar", 3, 0, 30_000, || {
+        std::hint::black_box(mixed_gemm_scalar(&a, &b, None, 1.0, 0.0));
+    });
+    println!("{}", scalar.report());
+    let fast = bench_config("gemm/mixed_512_engine", 30, 300, 10_000, || {
+        std::hint::black_box(mixed_gemm(&a, &b, None, 1.0, 0.0));
+    });
+    println!("{}", fast.report());
+    comparisons.push(Comparison { name: "mixed_512", scalar, engine: fast });
+
+    // -- 1024-tile batched 16x16: the Fig. 7 / coordinator batch shape
+    let ab = uniform_batch(&mut rng, 1024, 16, -1.0, 1.0);
+    let bb = uniform_batch(&mut rng, 1024, 16, -1.0, 1.0);
+    let scalar = bench_config("gemm/batched_1024x16_scalar", 10, 0, 30_000, || {
+        std::hint::black_box(batched_mixed_gemm_scalar(&ab, &bb));
+    });
+    println!("{}", scalar.report());
+    let fast = bench_config("gemm/batched_1024x16_engine", 50, 300, 10_000, || {
+        std::hint::black_box(batched_mixed_gemm(&ab, &bb));
+    });
+    println!("{}", fast.report());
+    comparisons.push(Comparison { name: "batched_1024x16", scalar, engine: fast });
+
+    // -- hgemm 256^2: per-call repacking vs pre-packed operand reuse
+    let a = uniform_matrix(&mut rng, 256, 256, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 256, 256, -1.0, 1.0);
+    let scalar = bench_config("gemm/hgemm_256_scalar", 3, 0, 30_000, || {
+        std::hint::black_box(hgemm_scalar(&a, &b));
+    });
+    println!("{}", scalar.report());
+    let pa = PackedHalfA::pack(&a);
+    let pb = PackedHalfB::pack(&b);
+    let fast = bench_config("gemm/hgemm_256_prepacked_engine", 20, 300, 10_000, || {
+        std::hint::black_box(engine::hgemm_packed(&pa, &pb, 0));
+    });
+    println!("{}", fast.report());
+    comparisons.push(Comparison { name: "hgemm_256_prepacked", scalar, engine: fast });
+
+    println!();
+    for c in &comparisons {
+        println!("speedup {:<24} {:>7.2}x  (engine threads: {})", c.name, c.speedup(),
+                 engine::default_threads());
+    }
+    println!("target (ISSUE 1): >= 4x on mixed_512 and batched_1024x16 vs the scalar seed kernels");
+
+    write_baseline(&comparisons);
+
+    // -- L3 serving components: need the AOT artifacts
+    match Manifest::discover() {
+        Ok(manifest) => l3_benches(manifest, &mut rng),
+        Err(e) => println!("\nskipping L3/PJRT sections (artifacts not built): {e:#}"),
+    }
+}
+
+fn write_baseline(comparisons: &[Comparison]) {
+    // default to the committed repo-root baseline, not the bench CWD
+    let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json").to_string()
+    });
+    let mut rows = Vec::new();
+    for c in comparisons {
+        rows.push(format!(
+            "    {{\"name\": \"{}\", \"scalar_ms\": {:.3}, \"engine_ms\": {:.3}, \"speedup\": {:.2}}}",
+            c.name,
+            c.scalar.mean().as_secs_f64() * 1e3,
+            c.engine.mean().as_secs_f64() * 1e3,
+            c.speedup()
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"hotpath\",\n  \"threads\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
+        engine::default_threads(),
+        rows.join(",\n")
+    );
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("baseline written to {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+fn l3_benches(manifest: Manifest, rng: &mut Rng) {
+    // -- router: requests/second it can classify
+    let router = Router::new(manifest, 16, PrecisionPolicy::default());
     let reqs: Vec<GemmRequest> = (0..256)
         .map(|i| {
             let n = [16usize, 64, 256][i % 3];
-            GemmRequest::new(i as u64, uniform_matrix(&mut rng, n, n, -1.0, 1.0),
-                             uniform_matrix(&mut rng, n, n, -1.0, 1.0))
+            GemmRequest::new(i as u64, uniform_matrix(rng, n, n, -1.0, 1.0),
+                             uniform_matrix(rng, n, n, -1.0, 1.0))
         })
         .collect();
     let r = bench("l3/router_route_256req", 200, || {
@@ -48,7 +156,7 @@ fn main() {
              1024.0 / r.mean().as_secs_f64());
 
     // -- tensor conversion: Matrix -> TensorData -> literal-ready bytes
-    let ms: Vec<Matrix> = (0..256).map(|_| uniform_matrix(&mut rng, 16, 16, -1.0, 1.0)).collect();
+    let ms: Vec<Matrix> = (0..256).map(|_| uniform_matrix(rng, 16, 16, -1.0, 1.0)).collect();
     let r = bench("l3/tensor_from_batch_256x16x16", 500, || {
         std::hint::black_box(TensorData::from_batch(&ms).unwrap());
     });

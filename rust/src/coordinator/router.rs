@@ -6,9 +6,10 @@
 //!   2.5-12x over per-call serving);
 //! * square requests matching a dedicated artifact -> direct Tensor-Core
 //!   execution at the mode the policy picked;
-//! * everything else -> CPU fallback through the cuBLAS-style interface
-//!   (correct, slow, counted by metrics — a real deployment would AOT
-//!   more shapes).
+//! * everything else -> CPU fallback through the cuBLAS-style interface,
+//!   which executes on the packed multithreaded engine
+//!   ([`crate::gemm::engine`]) — correct and host-speed, counted by
+//!   metrics (a real deployment would still AOT more shapes).
 
 use crate::precision::RefineMode;
 use crate::runtime::Manifest;

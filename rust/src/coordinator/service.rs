@@ -15,7 +15,9 @@
 //! The dispatcher never blocks on execution: direct jobs and batch
 //! flushes run on short-lived worker threads that submit to the executor
 //! thread and deliver responses; the dispatcher keeps batching while
-//! earlier work executes.
+//! earlier work executes.  The CPU fallback lane (`Route::CpuFallback`)
+//! runs on the packed multithreaded GEMM engine via the cuBLAS-style
+//! handle, so odd-shaped requests no longer pay scalar triple-loop cost.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,11 +1,35 @@
 //! Batched small-matrix GEMMs (paper §IV-B): many independent tile x tile
 //! products, the Nek5000 / FMM-FFT workload shape.
+//!
+//! All three precisions dispatch to the engine's batched paths, which
+//! distribute entries over the worker pool (each entry computed serially
+//! by its owner, so batched results equal a loop of singles bit for bit).
+//! The serial map-over-singles originals are kept as `*_scalar` oracles
+//! for the equivalence tests and throughput baselines.
 
-use super::{mixed::mixed_gemm, naive::sgemm_naive, Matrix};
+use super::{engine, mixed::mixed_gemm_scalar, naive::sgemm_naive, Matrix};
 
 /// Batched sgemm: out[i] = a[i] x b[i] in full f32 (the paper's
-/// `cublasSgemmBatched` baseline).
+/// `cublasSgemmBatched` baseline).  Engine-backed.
 pub fn batched_sgemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
+    engine::batched_sgemm(a, b, 0)
+}
+
+/// Batched Tensor-Core-semantics GEMM: the paper's hand-written batched
+/// WMMA kernel (f16 inputs, f32 accumulate).  Engine-backed.
+pub fn batched_mixed_gemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
+    engine::batched_mixed_gemm(a, b, 0)
+}
+
+/// Batched CUDA-core hgemm (all-f16 arithmetic) for the precision
+/// comparison benches.  Engine-backed: each worker converts its entries
+/// to f16 into reused pack buffers instead of allocating per call.
+pub fn batched_hgemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
+    engine::batched_hgemm(a, b, 0)
+}
+
+/// Serial oracle for [`batched_sgemm`]: a plain loop of naive singles.
+pub fn batched_sgemm_scalar(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
     assert_eq!(a.len(), b.len(), "batch length mismatch");
     a.iter()
         .zip(b)
@@ -13,25 +37,25 @@ pub fn batched_sgemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
         .collect()
 }
 
-/// Batched Tensor-Core-semantics GEMM: the paper's hand-written batched
-/// WMMA kernel (f16 inputs, f32 accumulate).
-pub fn batched_mixed_gemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
+/// Serial oracle for [`batched_mixed_gemm`]: a loop of scalar mixed
+/// GEMMs (per-call conversion and all).
+pub fn batched_mixed_gemm_scalar(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
     assert_eq!(a.len(), b.len(), "batch length mismatch");
     a.iter()
         .zip(b)
-        .map(|(a, b)| mixed_gemm(a, b, None, 1.0, 0.0))
+        .map(|(a, b)| mixed_gemm_scalar(a, b, None, 1.0, 0.0))
         .collect()
 }
 
-/// Batched CUDA-core hgemm (all-f16 arithmetic) for the precision
-/// comparison benches.
-pub fn batched_hgemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
+/// Serial oracle for [`batched_hgemm`].
+pub fn batched_hgemm_scalar(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
     assert_eq!(a.len(), b.len(), "batch length mismatch");
-    a.iter().zip(b).map(|(a, b)| super::mixed::hgemm(a, b)).collect()
+    a.iter().zip(b).map(|(a, b)| super::mixed::hgemm_scalar(a, b)).collect()
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::mixed::mixed_gemm;
     use super::*;
 
     fn batch(n: usize, count: usize, seed: u64) -> Vec<Matrix> {
@@ -57,6 +81,15 @@ mod tests {
             let single = mixed_gemm(aa, bb, None, 1.0, 0.0);
             assert_eq!(ga, &single);
         }
+    }
+
+    #[test]
+    fn batched_matches_scalar_oracles() {
+        let a = batch(16, 20, 7);
+        let b = batch(16, 20, 8);
+        assert_eq!(batched_mixed_gemm(&a, &b), batched_mixed_gemm_scalar(&a, &b));
+        assert_eq!(batched_sgemm(&a, &b), batched_sgemm_scalar(&a, &b));
+        assert_eq!(batched_hgemm(&a, &b), batched_hgemm_scalar(&a, &b));
     }
 
     #[test]

@@ -1,59 +1,21 @@
-//! Cache-blocked sgemm — the optimized CPU baseline.
+//! `sgemm_blocked` — the optimized f32 CPU baseline, now served by the
+//! packed multithreaded engine.
 //!
-//! Same numerics as `sgemm_naive` is *not* guaranteed (different
-//! accumulation order), but the result is within standard f32 GEMM error.
-//! This is the kernel the host-side hot paths use when a matrix product
-//! must be computed outside PJRT (e.g. the coordinator's fallback path
-//! and the workload generators' verification).
+//! Historically this was a cache-blocked loop nest with a *different*
+//! accumulation order from `sgemm_naive`; the engine's microkernel keeps
+//! the naive kernel's exact k-ascending chain per output element, so the
+//! result is now bitwise equal to [`super::sgemm_naive`] while being far
+//! faster (packed panels + register blocking + worker pool).  This is the
+//! kernel the host-side hot paths use when a matrix product must be
+//! computed outside PJRT (e.g. the coordinator's fallback path and the
+//! workload generators' verification).
 
-use super::Matrix;
+use super::{engine, Matrix};
 
-/// Block edge; 64 f32 x 64 f32 tiles of A/B/C fit comfortably in L1/L2.
-const BLOCK: usize = 64;
-
-/// C = alpha*A*B + beta*C, blocked over (i, j, p) with a k-innermost
-/// microkernel that vectorizes well.
+/// C = alpha*A*B + beta*C in f32, engine-backed (bitwise equal to the
+/// naive oracle, orders of magnitude faster on large shapes).
 pub fn sgemm_blocked(a: &Matrix, b: &Matrix, c: Option<&Matrix>, alpha: f32, beta: f32) -> Matrix {
-    let (m, k) = a.shape();
-    let (k2, n) = b.shape();
-    assert_eq!(k, k2, "inner dimension mismatch");
-    let mut out = match c {
-        Some(c) => {
-            assert_eq!(c.shape(), (m, n), "C shape mismatch");
-            let mut o = c.clone();
-            for v in o.as_mut_slice() {
-                *v *= beta;
-            }
-            o
-        }
-        None => Matrix::zeros(m, n),
-    };
-
-    let av = a.as_slice();
-    let bv = b.as_slice();
-    let ov = out.as_mut_slice();
-
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
-        for p0 in (0..k).step_by(BLOCK) {
-            let p1 = (p0 + BLOCK).min(k);
-            for j0 in (0..n).step_by(BLOCK) {
-                let j1 = (j0 + BLOCK).min(n);
-                // microkernel: rank-1 style update, j-innermost
-                for i in i0..i1 {
-                    for p in p0..p1 {
-                        let aip = alpha * av[i * k + p];
-                        let brow = &bv[p * n + j0..p * n + j1];
-                        let orow = &mut ov[i * n + j0..i * n + j1];
-                        for (o, bb) in orow.iter_mut().zip(brow) {
-                            *o += aip * bb;
-                        }
-                    }
-                }
-            }
-        }
-    }
-    out
+    engine::sgemm(a, b, c, alpha, beta, 0)
 }
 
 #[cfg(test)]
@@ -77,7 +39,8 @@ mod tests {
         let b = rand_matrix(96, 96, 2);
         let got = sgemm_blocked(&a, &b, None, 1.0, 0.0);
         let want = sgemm_naive(&a, &b, None, 1.0, 0.0);
-        assert!(got.max_norm_diff(&want) < 1e-4);
+        // engine preserves the naive chain exactly
+        assert_eq!(got, want);
     }
 
     #[test]
@@ -86,7 +49,7 @@ mod tests {
         let b = rand_matrix(33, 81, 4);
         let got = sgemm_blocked(&a, &b, None, 1.0, 0.0);
         let want = sgemm_naive(&a, &b, None, 1.0, 0.0);
-        assert!(got.max_norm_diff(&want) < 1e-4);
+        assert_eq!(got, want);
     }
 
     #[test]
@@ -96,7 +59,7 @@ mod tests {
         let c = rand_matrix(16, 16, 7);
         let got = sgemm_blocked(&a, &b, Some(&c), 0.5, 2.0);
         let want = sgemm_naive(&a, &b, Some(&c), 0.5, 2.0);
-        assert!(got.max_norm_diff(&want) < 1e-5);
+        assert_eq!(got, want);
     }
 
     #[test]

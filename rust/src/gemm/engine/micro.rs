@@ -1,0 +1,92 @@
+//! The register-blocked microkernel: an `MR x NR` block of f32
+//! accumulators updated by one rank-1 step per k, streaming both packed
+//! panels contiguously.
+//!
+//! Numerics contract: every accumulator element receives its products in
+//! ascending-k order through a single f32 accumulator — exactly the
+//! fixed dot-product chain of the scalar oracles (`mixed_gemm_scalar`,
+//! `sgemm_naive`) and of the emulated Tensor Core dot units
+//! ([`crate::tcemu::mma4x4_f32acc`]).  Rust never contracts `mul` + `add`
+//! into an FMA, so the engine's bits equal the oracles' bits; blocking
+//! and vectorization only reorder *independent* accumulators.
+
+/// Microkernel rows: one A panel holds `MR` interleaved matrix rows.
+pub(crate) const MR: usize = 4;
+/// Microkernel cols: one B panel holds `NR` interleaved matrix columns.
+pub(crate) const NR: usize = 8;
+
+/// Ceiling division (open-coded: `usize::div_ceil` needs a newer
+/// toolchain than the offline image guarantees).
+#[allow(clippy::manual_div_ceil)]
+pub(crate) fn div_up(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// `acc[r][c] += sum_p apanel[p][r] * bpanel[p][c]`, p ascending.
+///
+/// `apanel` is `k * MR` elements (k-major, MR consecutive row entries per
+/// k); `bpanel` is `k * NR` (k-major, NR consecutive column entries per
+/// k).  The `MR x NR` accumulator block stays in registers across the
+/// whole k loop.
+#[inline]
+pub(crate) fn microkernel(apanel: &[f32], bpanel: &[f32], acc: &mut [f32; MR * NR]) {
+    for (ar, br) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
+        for (accrow, &av) in acc.chunks_exact_mut(NR).zip(ar) {
+            for (o, &bv) in accrow.iter_mut().zip(br) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_one_step() {
+        // k = 1: acc[r][c] = a[r] * b[c]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, 10.0, 100.0, 1000.0, 1.0, 1.0, 1.0, 1.0];
+        let mut acc = [0f32; MR * NR];
+        microkernel(&a, &b, &mut acc);
+        assert_eq!(acc[0], 1.0);
+        assert_eq!(acc[1], 10.0);
+        assert_eq!(acc[NR], 2.0);
+        assert_eq!(acc[3 * NR + 3], 4000.0);
+    }
+
+    #[test]
+    fn k_ascending_chain_matches_scalar_loop() {
+        // random-ish values: the microkernel chain must equal a plain
+        // scalar k-loop bit for bit
+        let k = 37;
+        let mut s = 0x9e3779b97f4a7c15u64;
+        let mut nextf = || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+        };
+        let ap: Vec<f32> = (0..k * MR).map(|_| nextf()).collect();
+        let bp: Vec<f32> = (0..k * NR).map(|_| nextf()).collect();
+        let mut acc = [0f32; MR * NR];
+        microkernel(&ap, &bp, &mut acc);
+        for r in 0..MR {
+            for c in 0..NR {
+                let mut want = 0f32;
+                for p in 0..k {
+                    want += ap[p * MR + r] * bp[p * NR + c];
+                }
+                assert_eq!(acc[r * NR + c], want, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_k_leaves_acc_untouched() {
+        let mut acc = [3.5f32; MR * NR];
+        microkernel(&[], &[], &mut acc);
+        assert!(acc.iter().all(|&v| v == 3.5));
+    }
+}

@@ -1,0 +1,374 @@
+//! The packed multithreaded GEMM engine: one fast kernel core under every
+//! precision path of the reproduction.
+//!
+//! Pipeline: **pack → microkernel → pool**.
+//!
+//! * [`pack`] — operands copied once into panel order (A row-panels, B
+//!   column-panels), with the f16 input rounding of the Tensor Core
+//!   contract applied at pack time; packed operands are reusable.
+//! * [`micro`] — an `MR x NR` register-blocked f32 microkernel whose
+//!   per-element accumulation chain is exactly the scalar oracles'
+//!   ascending-k chain.
+//! * [`pool`] — a deterministic `std::thread` fork-join pool: row panels
+//!   within one GEMM, entries within a batched GEMM.  Each output tile is
+//!   owned by exactly one worker, so results are bitwise identical across
+//!   worker counts.
+//!
+//! Numerics contract (verified bit-for-bit against the scalar oracles in
+//! `tests/engine.rs`): inputs optionally rounded to binary16 once,
+//! products exact in f32, accumulation in f32 in a fixed k-ascending
+//! chain per output element, epilogue `alpha * acc + beta * C`.  The all-
+//! f16 `hgemm` path performs the identical `half_add(half_mul(..))` chain
+//! as [`crate::gemm::hgemm_scalar`].
+//!
+//! Every `threads` parameter means: `0` = auto (serial for small
+//! problems, [`default_threads`] otherwise), `n > 0` = exactly n workers.
+
+mod micro;
+mod pack;
+mod pool;
+
+pub use pack::{InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB};
+pub use pool::default_threads;
+
+use crate::gemm::Matrix;
+use crate::halfprec::{half_add, half_mul, Half};
+
+use micro::{div_up, microkernel, MR, NR};
+use pool::{parallel_units, resolve_threads};
+
+/// Auto mode stays serial below this many flop-equivalents (m*n*k); a
+/// thread spawn costs tens of microseconds, a 64^3 GEMM a few hundred.
+const SERIAL_FLOPS: usize = 1 << 18;
+
+/// Software-f16 work is ~2 orders of magnitude more expensive per flop,
+/// so the hgemm auto cutoff sits much lower.
+const SERIAL_HALF_FLOPS: usize = 1 << 12;
+
+/// C = alpha * A x B + beta * C over pre-packed operands (precision was
+/// chosen at pack time).  The core entry point every precision path
+/// funnels into.
+pub fn gemm_packed(
+    pa: &PackedA,
+    pb: &PackedB,
+    c: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+    threads: usize,
+) -> Matrix {
+    let mut out = Matrix::zeros(pa.m, pb.n);
+    gemm_packed_into(&mut out, pa, pb, c, alpha, beta, threads);
+    out
+}
+
+/// Single-precision GEMM (CUDA-core sgemm semantics): f32 inputs kept
+/// exactly, f32 k-ascending accumulation — bitwise equal to
+/// [`crate::gemm::sgemm_naive`].
+pub fn sgemm(
+    a: &Matrix,
+    b: &Matrix,
+    c: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+    threads: usize,
+) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "inner dimension mismatch");
+    let pa = PackedA::pack(a, InputPrecision::Full);
+    let pb = PackedB::pack(b, InputPrecision::Full);
+    gemm_packed(&pa, &pb, c, alpha, beta, threads)
+}
+
+/// Tensor-Core-semantics GEMM (§III/Fig. 3): inputs rounded to binary16
+/// once at pack time, exact products, f32 k-ascending accumulation —
+/// bitwise equal to [`crate::gemm::mixed_gemm_scalar`].
+pub fn mixed_gemm(
+    a: &Matrix,
+    b: &Matrix,
+    c: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+    threads: usize,
+) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "inner dimension mismatch");
+    let pa = PackedA::pack(a, InputPrecision::F16Rounded);
+    let pb = PackedB::pack(b, InputPrecision::F16Rounded);
+    gemm_packed(&pa, &pb, c, alpha, beta, threads)
+}
+
+/// CUDA-core hgemm (all arithmetic rounds to binary16), over operands
+/// converted once — bitwise equal to [`crate::gemm::hgemm_scalar`].
+pub fn hgemm(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "inner dimension mismatch");
+    let pa = PackedHalfA::pack(a);
+    let pb = PackedHalfB::pack(b);
+    hgemm_packed(&pa, &pb, threads)
+}
+
+/// hgemm over pre-packed f16 operands: callers that reuse an operand pay
+/// the f32 -> f16 conversion once (the repacking cost the scalar kernel
+/// paid on every call).
+pub fn hgemm_packed(pa: &PackedHalfA, pb: &PackedHalfB, threads: usize) -> Matrix {
+    let (m, k) = (pa.m, pa.k);
+    let n = pb.n;
+    assert_eq!(k, pb.k, "inner dimension mismatch");
+    let mut out = Matrix::zeros(m, n);
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let t = resolve_threads(threads, m * n * k, SERIAL_HALF_FLOPS);
+    let ov = out.as_mut_slice();
+    parallel_units(ov, m, |u| u * n, t, |r0, r1, chunk| {
+        for i in r0..r1 {
+            let arow = pa.row(i);
+            let orow = &mut chunk[(i - r0) * n..(i - r0) * n + n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let mut acc = Half::ZERO;
+                for (&x, &y) in arow.iter().zip(pb.col(j)) {
+                    acc = half_add(acc, half_mul(x, y));
+                }
+                *o = acc.to_f32();
+            }
+        }
+    });
+    out
+}
+
+/// Batched sgemm: `out[i] = a[i] x b[i]` in full f32, entries distributed
+/// over the pool (each entry computed serially by its owning worker).
+pub fn batched_sgemm(a: &[Matrix], b: &[Matrix], threads: usize) -> Vec<Matrix> {
+    batched_gemm(a, b, InputPrecision::Full, threads)
+}
+
+/// Batched Tensor-Core-semantics GEMM — the paper's batched WMMA shape
+/// (§IV-B), entries distributed over the pool.
+pub fn batched_mixed_gemm(a: &[Matrix], b: &[Matrix], threads: usize) -> Vec<Matrix> {
+    batched_gemm(a, b, InputPrecision::F16Rounded, threads)
+}
+
+/// Batched CUDA-core hgemm, entries distributed over the pool; each
+/// worker reuses one pair of packed-f16 buffers across its entries.
+pub fn batched_hgemm(a: &[Matrix], b: &[Matrix], threads: usize) -> Vec<Matrix> {
+    assert_eq!(a.len(), b.len(), "batch length mismatch");
+    let mut out: Vec<Matrix> = (0..a.len()).map(|_| Matrix::zeros(0, 0)).collect();
+    let t = resolve_threads(threads, batch_flops(a, b), SERIAL_HALF_FLOPS);
+    parallel_units(&mut out, a.len(), |u| u, t, |e0, e1, chunk| {
+        let mut pa = PackedHalfA::default();
+        let mut pb = PackedHalfB::default();
+        for e in e0..e1 {
+            pa.repack(&a[e]);
+            pb.repack(&b[e]);
+            chunk[e - e0] = hgemm_packed(&pa, &pb, 1);
+        }
+    });
+    out
+}
+
+fn batch_flops(a: &[Matrix], b: &[Matrix]) -> usize {
+    a.iter().zip(b).map(|(x, y)| x.rows() * x.cols() * y.cols()).sum()
+}
+
+fn batched_gemm(a: &[Matrix], b: &[Matrix], prec: InputPrecision, threads: usize) -> Vec<Matrix> {
+    assert_eq!(a.len(), b.len(), "batch length mismatch");
+    let mut out: Vec<Matrix> = (0..a.len()).map(|_| Matrix::zeros(0, 0)).collect();
+    let t = resolve_threads(threads, batch_flops(a, b), SERIAL_FLOPS);
+    parallel_units(&mut out, a.len(), |u| u, t, |e0, e1, chunk| {
+        // per-worker pack buffers, reused across the worker's entries
+        let mut pa = PackedA::default();
+        let mut pb = PackedB::default();
+        for e in e0..e1 {
+            assert_eq!(a[e].cols(), b[e].rows(), "inner dimension mismatch");
+            pa.repack(&a[e], prec);
+            pb.repack(&b[e], prec);
+            chunk[e - e0] = gemm_packed(&pa, &pb, None, 1.0, 0.0, 1);
+        }
+    });
+    out
+}
+
+/// `c += A x B` in place on raw row-major slices, f32 k-ascending chain
+/// continuing from the existing accumulator values — the warp-level MMA
+/// contract ([`crate::tcemu::mma_sync`] routes its 16x16x16 tile loop
+/// here).  Inputs are used as-is (no rounding: fragments already hold
+/// binary16 values widened to f32).  Serial: the tiles are tiny.
+pub fn gemm_acc_inplace(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A buffer length mismatch");
+    assert_eq!(b.len(), k * n, "B buffer length mismatch");
+    assert_eq!(c.len(), m * n, "C buffer length mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let mut pa = PackedA::default();
+    pa.repack_slice(a, m, k, InputPrecision::Full);
+    let mut pb = PackedB::default();
+    pb.repack_slice(b, k, n, InputPrecision::Full);
+    for pi in 0..div_up(m, MR) {
+        let row0 = pi * MR;
+        let vr = MR.min(m - row0);
+        let ap = pa.panel(pi);
+        for pj in 0..div_up(n, NR) {
+            let col0 = pj * NR;
+            let vc = NR.min(n - col0);
+            let mut acc = [0f32; MR * NR];
+            for r in 0..vr {
+                for (ci, slot) in acc[r * NR..r * NR + vc].iter_mut().enumerate() {
+                    *slot = c[(row0 + r) * n + col0 + ci];
+                }
+            }
+            microkernel(ap, pb.panel(pj), &mut acc);
+            for r in 0..vr {
+                for (ci, &v) in acc[r * NR..r * NR + vc].iter().enumerate() {
+                    c[(row0 + r) * n + col0 + ci] = v;
+                }
+            }
+        }
+    }
+}
+
+/// The shared packed-panel core: compute into a preallocated output.
+fn gemm_packed_into(
+    out: &mut Matrix,
+    pa: &PackedA,
+    pb: &PackedB,
+    cprev: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+    threads: usize,
+) {
+    let (m, k) = (pa.m, pa.k);
+    let n = pb.n;
+    assert_eq!(k, pb.k, "inner dimension mismatch");
+    assert_eq!(out.shape(), (m, n), "output shape mismatch");
+    if let Some(c) = cprev {
+        assert_eq!(c.shape(), (m, n), "C shape mismatch");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    let t = resolve_threads(threads, m * n * k, SERIAL_FLOPS);
+    let panels = div_up(m, MR);
+    let elems_at = |u: usize| (u * MR).min(m) * n;
+    let ov = out.as_mut_slice();
+    parallel_units(ov, panels, elems_at, t, |p0, p1, chunk| {
+        let base = p0 * MR * n;
+        for pi in p0..p1 {
+            let row0 = pi * MR;
+            let vr = MR.min(m - row0);
+            let ap = pa.panel(pi);
+            for pj in 0..div_up(n, NR) {
+                let col0 = pj * NR;
+                let vc = NR.min(n - col0);
+                let mut acc = [0f32; MR * NR];
+                microkernel(ap, pb.panel(pj), &mut acc);
+                // epilogue: identical expression to the scalar oracles
+                for r in 0..vr {
+                    let o0 = row0 * n - base + r * n + col0;
+                    let orow = &mut chunk[o0..o0 + vc];
+                    for (ci, o) in orow.iter_mut().enumerate() {
+                        let cval = cprev.map_or(0.0, |c| c[(row0 + r, col0 + ci)]);
+                        *o = alpha * acc[r * NR + ci] + beta * cval;
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{hgemm_scalar, mixed_gemm_scalar, sgemm_naive};
+    use crate::workload::{uniform_matrix, Rng};
+
+    #[test]
+    fn mixed_matches_scalar_oracle_bitwise() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (5, 7, 3), (16, 16, 16), (70, 33, 81)] {
+            let a = uniform_matrix(&mut rng, m, k, -1.0, 1.0);
+            let b = uniform_matrix(&mut rng, k, n, -1.0, 1.0);
+            let want = mixed_gemm_scalar(&a, &b, None, 1.0, 0.0);
+            for t in [1, 2, 8] {
+                assert_eq!(mixed_gemm(&a, &b, None, 1.0, 0.0, t), want, "({m},{k},{n}) t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn sgemm_matches_naive_bitwise() {
+        let mut rng = Rng::new(2);
+        let a = uniform_matrix(&mut rng, 33, 21, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 21, 50, -1.0, 1.0);
+        let c = uniform_matrix(&mut rng, 33, 50, -1.0, 1.0);
+        assert_eq!(
+            sgemm(&a, &b, Some(&c), 0.5, 2.0, 4),
+            sgemm_naive(&a, &b, Some(&c), 0.5, 2.0)
+        );
+    }
+
+    #[test]
+    fn hgemm_matches_scalar_oracle_bitwise() {
+        let mut rng = Rng::new(3);
+        let a = uniform_matrix(&mut rng, 18, 31, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 31, 9, -1.0, 1.0);
+        let want = hgemm_scalar(&a, &b);
+        for t in [1, 2, 8] {
+            assert_eq!(hgemm(&a, &b, t), want, "t={t}");
+        }
+    }
+
+    #[test]
+    fn packed_operands_reusable() {
+        let mut rng = Rng::new(4);
+        let a = uniform_matrix(&mut rng, 20, 12, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 12, 20, -1.0, 1.0);
+        let pb = PackedB::pack(&b, InputPrecision::F16Rounded);
+        let pa1 = PackedA::pack(&a, InputPrecision::F16Rounded);
+        let first = gemm_packed(&pa1, &pb, None, 1.0, 0.0, 2);
+        let second = gemm_packed(&pa1, &pb, None, 1.0, 0.0, 2);
+        assert_eq!(first, second);
+        assert_eq!(first, mixed_gemm(&a, &b, None, 1.0, 0.0, 1));
+    }
+
+    #[test]
+    fn acc_inplace_continues_chain() {
+        // c += A x B must equal: start from c, add products k-ascending
+        let mut rng = Rng::new(5);
+        let a = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+        let c0 = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+        let mut c = c0.clone().into_vec();
+        gemm_acc_inplace(&mut c, a.as_slice(), b.as_slice(), 16, 16, 16);
+        for i in 0..16 {
+            for j in 0..16 {
+                let mut want = c0[(i, j)];
+                for p in 0..16 {
+                    want += a[(i, p)] * b[(p, j)];
+                }
+                assert_eq!(c[i * 16 + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shapes() {
+        let a = Matrix::zeros(0, 4);
+        let b = Matrix::zeros(4, 3);
+        assert_eq!(mixed_gemm(&a, &b, None, 1.0, 0.0, 2).shape(), (0, 3));
+        let a = Matrix::zeros(3, 0);
+        let b = Matrix::zeros(0, 2);
+        // k = 0: pure epilogue
+        let got = sgemm(&a, &b, None, 1.0, 0.0, 2);
+        assert_eq!(got, Matrix::zeros(3, 2));
+        assert_eq!(batched_mixed_gemm(&[], &[], 4), Vec::<Matrix>::new());
+    }
+
+    #[test]
+    fn batched_entries_match_singles() {
+        let mut rng = Rng::new(6);
+        let a: Vec<Matrix> = (0..10).map(|_| uniform_matrix(&mut rng, 16, 16, -1.0, 1.0)).collect();
+        let b: Vec<Matrix> = (0..10).map(|_| uniform_matrix(&mut rng, 16, 16, -1.0, 1.0)).collect();
+        let got = batched_mixed_gemm(&a, &b, 4);
+        for i in 0..10 {
+            assert_eq!(got[i], mixed_gemm(&a[i], &b[i], None, 1.0, 0.0, 1), "entry {i}");
+        }
+    }
+}

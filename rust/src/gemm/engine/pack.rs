@@ -1,0 +1,282 @@
+//! Packed panel storage: operands are copied once into microkernel-order
+//! panels (A in `MR`-row panels, B in `NR`-column panels, both k-major) so
+//! the inner loop streams both inputs contiguously, and any f16 input
+//! rounding is paid once at pack time instead of per GEMM call.
+//!
+//! The packed types are public: callers that reuse an operand across
+//! several products (the refinement chains in [`crate::precision`], the
+//! repeated-B case of batched refinement, benchmark loops) pack once and
+//! hand the packed operand to `gemm_packed` / `hgemm_packed` repeatedly.
+//! `repack` reuses the allocation, which is what the batched workers do
+//! per entry.
+//!
+//! Padding rows/cols (to fill the last partial panel) are zero; a padded
+//! lane only ever accumulates `x * 0.0` into an accumulator that is
+//! discarded at store time, so padding cannot perturb any kept element.
+
+use crate::gemm::Matrix;
+use crate::halfprec::{f16_to_f32, f32_to_f16, Half};
+
+use super::micro::{div_up, MR, NR};
+
+/// Input rounding applied at pack time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputPrecision {
+    /// Keep f32 inputs exactly (the CUDA-core sgemm semantics).
+    Full,
+    /// Round once to binary16 and widen back (the Tensor Core input
+    /// contract of §III; identical to what the scalar oracle applies).
+    F16Rounded,
+}
+
+#[inline]
+fn convert(x: f32, prec: InputPrecision) -> f32 {
+    match prec {
+        InputPrecision::Full => x,
+        InputPrecision::F16Rounded => f16_to_f32(f32_to_f16(x)),
+    }
+}
+
+/// A packed as `ceil(m/MR)` row panels, each `k * MR` (k-major).
+#[derive(Clone, Debug, Default)]
+pub struct PackedA {
+    pub(crate) m: usize,
+    pub(crate) k: usize,
+    pub(crate) data: Vec<f32>,
+}
+
+impl PackedA {
+    /// Pack (and optionally f16-round) a fresh copy of `a`.
+    pub fn pack(a: &Matrix, prec: InputPrecision) -> PackedA {
+        let mut p = PackedA::default();
+        p.repack(a, prec);
+        p
+    }
+
+    /// Re-pack in place, reusing the allocation.
+    pub fn repack(&mut self, a: &Matrix, prec: InputPrecision) {
+        self.repack_slice(a.as_slice(), a.rows(), a.cols(), prec);
+    }
+
+    /// Shape of the packed operand as (rows, k).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.k)
+    }
+
+    pub(crate) fn repack_slice(&mut self, a: &[f32], m: usize, k: usize, prec: InputPrecision) {
+        assert_eq!(a.len(), m * k, "A buffer length mismatch");
+        self.m = m;
+        self.k = k;
+        let panels = div_up(m, MR);
+        self.data.clear();
+        self.data.reserve(panels * k * MR);
+        for pi in 0..panels {
+            let row0 = pi * MR;
+            for p in 0..k {
+                for r in 0..MR {
+                    let i = row0 + r;
+                    self.data.push(if i < m { convert(a[i * k + p], prec) } else { 0.0 });
+                }
+            }
+        }
+    }
+
+    pub(crate) fn panel(&self, pi: usize) -> &[f32] {
+        &self.data[pi * self.k * MR..(pi + 1) * self.k * MR]
+    }
+}
+
+/// B packed as `ceil(n/NR)` column panels, each `k * NR` (k-major) — the
+/// column-strided access of the scalar loops becomes a contiguous stream.
+#[derive(Clone, Debug, Default)]
+pub struct PackedB {
+    pub(crate) k: usize,
+    pub(crate) n: usize,
+    pub(crate) data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack (and optionally f16-round) a fresh copy of `b`.
+    pub fn pack(b: &Matrix, prec: InputPrecision) -> PackedB {
+        let mut p = PackedB::default();
+        p.repack(b, prec);
+        p
+    }
+
+    /// Re-pack in place, reusing the allocation.
+    pub fn repack(&mut self, b: &Matrix, prec: InputPrecision) {
+        self.repack_slice(b.as_slice(), b.rows(), b.cols(), prec);
+    }
+
+    /// Shape of the packed operand as (k, cols).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+
+    pub(crate) fn repack_slice(&mut self, b: &[f32], k: usize, n: usize, prec: InputPrecision) {
+        assert_eq!(b.len(), k * n, "B buffer length mismatch");
+        self.k = k;
+        self.n = n;
+        let panels = div_up(n, NR);
+        self.data.clear();
+        self.data.reserve(panels * k * NR);
+        for pj in 0..panels {
+            let col0 = pj * NR;
+            let vc = NR.min(n - col0);
+            for p in 0..k {
+                for &x in &b[p * n + col0..p * n + col0 + vc] {
+                    self.data.push(convert(x, prec));
+                }
+                for _ in vc..NR {
+                    self.data.push(0.0);
+                }
+            }
+        }
+    }
+
+    pub(crate) fn panel(&self, pj: usize) -> &[f32] {
+        &self.data[pj * self.k * NR..(pj + 1) * self.k * NR]
+    }
+}
+
+/// A converted to binary16 once, stored row-major — the pre-packed left
+/// operand of [`super::hgemm_packed`] (CUDA-core half semantics).
+#[derive(Clone, Debug, Default)]
+pub struct PackedHalfA {
+    pub(crate) m: usize,
+    pub(crate) k: usize,
+    pub(crate) data: Vec<Half>,
+}
+
+impl PackedHalfA {
+    pub fn pack(a: &Matrix) -> PackedHalfA {
+        let mut p = PackedHalfA::default();
+        p.repack(a);
+        p
+    }
+
+    pub fn repack(&mut self, a: &Matrix) {
+        let (m, k) = a.shape();
+        self.m = m;
+        self.k = k;
+        self.data.clear();
+        self.data.extend(a.as_slice().iter().map(|&x| f32_to_f16(x)));
+    }
+
+    /// Shape of the packed operand as (rows, k).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.k)
+    }
+
+    pub(crate) fn row(&self, i: usize) -> &[Half] {
+        &self.data[i * self.k..(i + 1) * self.k]
+    }
+}
+
+/// B converted to binary16 once, stored column-major so each output
+/// element's k loop reads both operands contiguously.
+#[derive(Clone, Debug, Default)]
+pub struct PackedHalfB {
+    pub(crate) k: usize,
+    pub(crate) n: usize,
+    pub(crate) data: Vec<Half>,
+}
+
+impl PackedHalfB {
+    pub fn pack(b: &Matrix) -> PackedHalfB {
+        let mut p = PackedHalfB::default();
+        p.repack(b);
+        p
+    }
+
+    pub fn repack(&mut self, b: &Matrix) {
+        let (k, n) = b.shape();
+        self.k = k;
+        self.n = n;
+        self.data.clear();
+        self.data.reserve(k * n);
+        let bv = b.as_slice();
+        for j in 0..n {
+            for p in 0..k {
+                self.data.push(f32_to_f16(bv[p * n + j]));
+            }
+        }
+    }
+
+    /// Shape of the packed operand as (k, cols).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+
+    pub(crate) fn col(&self, j: usize) -> &[Half] {
+        &self.data[j * self.k..(j + 1) * self.k]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |i, j| (i * cols + j) as f32 + 0.25)
+    }
+
+    #[test]
+    fn packed_a_layout() {
+        let a = m(5, 3); // 2 panels of MR=4 rows, second padded
+        let p = PackedA::pack(&a, InputPrecision::Full);
+        assert_eq!(p.shape(), (5, 3));
+        let p0 = p.panel(0);
+        // k-major: p0[p*MR + r] == a[r][p]
+        assert_eq!(p0[0], a[(0, 0)]);
+        assert_eq!(p0[1], a[(1, 0)]);
+        assert_eq!(p0[MR], a[(0, 1)]);
+        let p1 = p.panel(1);
+        assert_eq!(p1[0], a[(4, 0)]);
+        assert_eq!(p1[1], 0.0); // padded row
+    }
+
+    #[test]
+    fn packed_b_layout() {
+        let b = m(3, 10); // 2 panels of NR=8 cols, second padded
+        let p = PackedB::pack(&b, InputPrecision::Full);
+        assert_eq!(p.shape(), (3, 10));
+        let p0 = p.panel(0);
+        assert_eq!(p0[0], b[(0, 0)]);
+        assert_eq!(p0[1], b[(0, 1)]);
+        assert_eq!(p0[NR], b[(1, 0)]);
+        let p1 = p.panel(1);
+        assert_eq!(p1[0], b[(0, 8)]);
+        assert_eq!(p1[1], b[(0, 9)]);
+        assert_eq!(p1[2], 0.0); // padded col
+    }
+
+    #[test]
+    fn f16_rounding_applied_at_pack() {
+        let a = Matrix::from_fn(1, 1, |_, _| 1.0 + 2f32.powi(-12)); // not a half
+        let p = PackedA::pack(&a, InputPrecision::F16Rounded);
+        assert_eq!(p.panel(0)[0], 1.0);
+        let q = PackedA::pack(&a, InputPrecision::Full);
+        assert_eq!(q.panel(0)[0], 1.0 + 2f32.powi(-12));
+    }
+
+    #[test]
+    fn repack_reuses_and_resizes() {
+        let mut p = PackedB::pack(&m(4, 4), InputPrecision::Full);
+        p.repack(&m(2, 2), InputPrecision::Full);
+        assert_eq!(p.shape(), (2, 2));
+        assert_eq!(p.panel(0).len(), 2 * NR);
+    }
+
+    #[test]
+    fn half_packs_round_and_transpose() {
+        let b = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let p = PackedHalfB::pack(&b);
+        assert_eq!(p.shape(), (2, 3));
+        // col 1 = [b[0][1], b[1][1]]
+        assert_eq!(p.col(1)[0].to_f32(), 1.0);
+        assert_eq!(p.col(1)[1].to_f32(), 4.0);
+        let a = PackedHalfA::pack(&b);
+        assert_eq!(a.row(1)[0].to_f32(), 3.0);
+    }
+}

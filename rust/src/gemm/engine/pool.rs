@@ -1,0 +1,147 @@
+//! Deterministic fork-join worker pool over `std::thread::scope`.
+//!
+//! Parallelism must never change results (the engine's contract, tested in
+//! `tests/engine.rs`): work is partitioned *statically* into contiguous
+//! chunks of whole ownership units — row panels of one GEMM, entries of a
+//! batched GEMM — each written by exactly one worker, and every output
+//! element's accumulation chain is computed sequentially by its owner.
+//! 1 worker and N workers therefore produce identical bits; the worker
+//! count only moves wall-clock time.
+
+use std::sync::OnceLock;
+
+/// Worker count used when a caller passes `threads == 0` (auto): the
+/// `TENSOREMU_THREADS` env var when set, otherwise the machine's available
+/// parallelism.
+pub fn default_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("TENSOREMU_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
+    })
+}
+
+/// Resolve a caller-supplied worker count: `0` = auto, but only when the
+/// job is big enough to amortize thread spawns (`work` is a flop-ish cost
+/// estimate, `serial_below` the cutoff under which auto stays serial).
+/// Explicit counts are always honoured — the determinism tests rely on it.
+pub(crate) fn resolve_threads(threads: usize, work: usize, serial_below: usize) -> usize {
+    match threads {
+        0 if work < serial_below => 1,
+        0 => default_threads(),
+        t => t,
+    }
+}
+
+/// Split `out` into per-worker contiguous chunks of whole units and run
+/// `work(unit_start, unit_end, chunk)` on each chunk in parallel.
+///
+/// `elems_at(u)` maps a unit boundary `u` (0..=units, monotone) to its
+/// element offset in `out`; `elems_at(units)` must equal `out.len()`.
+/// Each worker's `chunk` starts at element `elems_at(unit_start)`.
+pub(crate) fn parallel_units<T, F>(
+    out: &mut [T],
+    units: usize,
+    elems_at: impl Fn(usize) -> usize,
+    threads: usize,
+    work: F,
+) where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    if units == 0 {
+        return;
+    }
+    let t = threads.clamp(1, units);
+    if t == 1 {
+        work(0, units, out);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest: &mut [T] = out;
+        let mut u0 = 0usize;
+        for w in 1..=t {
+            let u1 = units * w / t;
+            let take = elems_at(u1) - elems_at(u0);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            if w < t {
+                let workr = &work;
+                s.spawn(move || workr(u0, u1, chunk));
+            } else {
+                // the calling thread takes the last chunk instead of
+                // idling at the join barrier: one spawn saved per call
+                work(u0, u1, chunk);
+            }
+            u0 = u1;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn resolve_serial_cutoff_applies_only_to_auto() {
+        assert_eq!(resolve_threads(0, 10, 100), 1);
+        assert_eq!(resolve_threads(8, 10, 100), 8);
+        assert!(resolve_threads(0, 1000, 100) >= 1);
+    }
+
+    #[test]
+    fn partition_covers_every_unit_once() {
+        // each unit is 3 elements; workers stamp their unit index
+        let units = 17;
+        let mut out = vec![0usize; units * 3];
+        parallel_units(&mut out, units, |u| u * 3, 4, |u0, u1, chunk| {
+            for u in u0..u1 {
+                for e in 0..3 {
+                    chunk[(u - u0) * 3 + e] = u + 1;
+                }
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i / 3 + 1, "element {i}");
+        }
+    }
+
+    #[test]
+    fn ragged_last_unit() {
+        // units of 4 elements, last unit only 2
+        let mut out = vec![0u32; 10];
+        let elems = |u: usize| (u * 4).min(10);
+        parallel_units(&mut out, 3, elems, 8, |u0, u1, chunk| {
+            for v in chunk.iter_mut() {
+                *v = (u1 - u0) as u32 * 100;
+            }
+        });
+        assert!(out.iter().all(|&v| v == 100));
+    }
+
+    #[test]
+    fn zero_units_is_noop() {
+        let mut out: Vec<u8> = vec![];
+        parallel_units(&mut out, 0, |_| 0, 4, |_, _, _| panic!("no work expected"));
+    }
+
+    #[test]
+    fn more_threads_than_units() {
+        let mut out = vec![0u8; 2];
+        parallel_units(&mut out, 2, |u| u, 16, |u0, u1, chunk| {
+            assert_eq!(u1 - u0, chunk.len());
+            for v in chunk.iter_mut() {
+                *v = 7;
+            }
+        });
+        assert_eq!(out, vec![7, 7]);
+    }
+}

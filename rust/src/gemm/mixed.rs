@@ -7,14 +7,52 @@
 //!   every accumulate rounds to f16 (what `cublasHgemm` does on FP16
 //!   units).  The numerical gap between these two is the paper's central
 //!   precision argument.
+//!
+//! Both dispatch to the packed multithreaded engine
+//! ([`crate::gemm::engine`]); the serial triple-loop originals are kept as
+//! [`mixed_gemm_scalar`] / [`hgemm_scalar`] — the *numerical oracles* the
+//! engine is verified against bit for bit (`tests/engine.rs`) and the
+//! baselines the hot-path benches compare throughput against.
 
 use crate::halfprec::{f16_to_f32, f32_to_f16, half_add, half_mul, Half};
 
-use super::Matrix;
+use super::{engine, Matrix};
 
 /// Tensor-Core-semantics GEMM: C = alpha*(f16(A) x f16(B)) + beta*C with
-/// f32 accumulation.  Row-major, result f32.
+/// f32 accumulation.  Row-major, result f32.  Engine-backed; bitwise
+/// equal to [`mixed_gemm_scalar`].
 pub fn mixed_gemm(a: &Matrix, b: &Matrix, c: Option<&Matrix>, alpha: f32, beta: f32) -> Matrix {
+    engine::mixed_gemm(a, b, c, alpha, beta, 0)
+}
+
+/// Tensor-Core GEMM continuing an existing f32 accumulator matrix (used
+/// by the exact-chaining refinement): C += f16(A) x f16(B).
+pub fn mixed_gemm_accumulate(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    let prod = mixed_gemm(a, b, None, 1.0, 0.0);
+    for (o, p) in c.as_mut_slice().iter_mut().zip(prod.as_slice()) {
+        *o += p;
+    }
+}
+
+/// CUDA-core hgemm: all arithmetic in binary16 (multiply rounds, every
+/// accumulate rounds).  Result returned widened to f32 for uniformity.
+/// Engine-backed; bitwise equal to [`hgemm_scalar`].
+pub fn hgemm(a: &Matrix, b: &Matrix) -> Matrix {
+    engine::hgemm(a, b, 0)
+}
+
+/// The serial reference implementation of [`mixed_gemm`]: the paper's
+/// semantics written as the simplest possible triple loop (inputs rounded
+/// once, exact products, one f32 accumulator per element, k ascending).
+/// Kept as the engine's correctness oracle and the benches' scalar
+/// baseline — not for production call paths.
+pub fn mixed_gemm_scalar(
+    a: &Matrix,
+    b: &Matrix,
+    c: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+) -> Matrix {
     let (m, k) = a.shape();
     let (k2, n) = b.shape();
     assert_eq!(k, k2, "inner dimension mismatch");
@@ -37,18 +75,10 @@ pub fn mixed_gemm(a: &Matrix, b: &Matrix, c: Option<&Matrix>, alpha: f32, beta: 
     out
 }
 
-/// Tensor-Core GEMM continuing an existing f32 accumulator matrix (used
-/// by the exact-chaining refinement): C += f16(A) x f16(B).
-pub fn mixed_gemm_accumulate(a: &Matrix, b: &Matrix, c: &mut Matrix) {
-    let prod = mixed_gemm(a, b, None, 1.0, 0.0);
-    for (o, p) in c.as_mut_slice().iter_mut().zip(prod.as_slice()) {
-        *o += p;
-    }
-}
-
-/// CUDA-core hgemm: all arithmetic in binary16 (multiply rounds, every
-/// accumulate rounds).  Result returned widened to f32 for uniformity.
-pub fn hgemm(a: &Matrix, b: &Matrix) -> Matrix {
+/// The serial reference implementation of [`hgemm`] (per-call operand
+/// conversion, all-f16 arithmetic, k ascending).  Engine oracle and
+/// scalar bench baseline.
+pub fn hgemm_scalar(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, k) = a.shape();
     let (k2, n) = b.shape();
     assert_eq!(k, k2, "inner dimension mismatch");
@@ -93,6 +123,18 @@ mod tests {
         let got = mixed_gemm(&a, &b, None, 1.0, 0.0);
         let want = sgemm_naive(&a, &b, None, 1.0, 0.0);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn engine_path_equals_scalar_oracle() {
+        let a = rand_matrix(23, 17, 51, 1.0);
+        let b = rand_matrix(17, 29, 52, 1.0);
+        let c = rand_matrix(23, 29, 53, 1.0);
+        assert_eq!(
+            mixed_gemm(&a, &b, Some(&c), 1.5, -0.5),
+            mixed_gemm_scalar(&a, &b, Some(&c), 1.5, -0.5)
+        );
+        assert_eq!(hgemm(&a, &b), hgemm_scalar(&a, &b));
     }
 
     #[test]

@@ -1,19 +1,33 @@
-//! S2 — CPU reference GEMM substrate.
+//! S2 — CPU GEMM substrate: the packed multithreaded engine plus the
+//! scalar reference oracles.
 //!
-//! These kernels are the *numerical oracles* on the Rust side: everything
-//! the runtime executes through PJRT and everything `tcemu` computes is
-//! cross-checked against them in tests, and they double as the
-//! single-precision baselines (the paper's CUDA-core sgemm/hgemm) for the
-//! error studies.
+//! [`engine`] is the single fast kernel core (pack → microkernel → worker
+//! pool) that every precision path funnels into: `sgemm_blocked`,
+//! `mixed_gemm`, `hgemm`, the `batched_*` family, the `tcemu` warp tile
+//! loop and the three `interfaces` layers all execute on it.  The engine
+//! preserves the paper's numerics contract exactly — f16-rounded inputs
+//! where the mode demands it, exact products, f32 accumulation in a fixed
+//! k-ascending chain per output element — so it is bitwise
+//! interchangeable with the serial oracles at every precision mode.
+//!
+//! The scalar kernels (`sgemm_naive`, `dgemm_naive`, `mixed_gemm_scalar`,
+//! `hgemm_scalar`, `batched_*_scalar`) remain the *numerical oracles*:
+//! everything the runtime executes through PJRT and everything `tcemu`
+//! computes is cross-checked against them in tests, and they double as
+//! the throughput baselines for `benches/hotpath.rs`.
 
 mod batched;
 mod blocked;
+pub mod engine;
 mod matrix;
 mod mixed;
 mod naive;
 
-pub use batched::{batched_hgemm, batched_mixed_gemm, batched_sgemm};
+pub use batched::{
+    batched_hgemm, batched_hgemm_scalar, batched_mixed_gemm, batched_mixed_gemm_scalar,
+    batched_sgemm, batched_sgemm_scalar,
+};
 pub use blocked::sgemm_blocked;
 pub use matrix::Matrix;
-pub use mixed::{hgemm, mixed_gemm, mixed_gemm_accumulate};
+pub use mixed::{hgemm, hgemm_scalar, mixed_gemm, mixed_gemm_accumulate, mixed_gemm_scalar};
 pub use naive::{dgemm_naive, sgemm_naive};

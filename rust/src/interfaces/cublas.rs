@@ -4,7 +4,10 @@
 //!
 //! `gemm_ex` dispatches on the mode exactly the way cuBLAS does: default
 //! mode computes in full f32 on "CUDA cores"; TensorOp mode rounds inputs
-//! to f16 and accumulates in f32 on "Tensor Cores".  Batched GEMM is also
+//! to f16 and accumulates in f32 on "Tensor Cores".  Every dispatch target
+//! is engine-backed ([`crate::gemm::engine`]): this handle is the
+//! coordinator's CPU-fallback path, so its throughput is the fallback
+//! lane's throughput.  Batched GEMM is also
 //! provided, including the paper's footnote 1 constraint: at the time of
 //! writing, `gemm_batched` on Tensor Cores was *unsupported* — the
 //! coordinator's batcher is the WMMA workaround, and this API returns an

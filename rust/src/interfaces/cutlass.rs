@@ -12,7 +12,7 @@
 //! performance".
 
 use crate::gemm::Matrix;
-use crate::tcemu::{mma_sync, AccumFragment, Fragment, Layout, FRAGMENT_DIM};
+use crate::tcemu::FRAGMENT_DIM;
 
 /// A threadblock tile policy: the C tile each "thread block" owns and the
 /// K panel it stages per iteration, in fragments of 16.
@@ -83,8 +83,15 @@ impl CutlassGemm {
     }
 
     /// C = A x B (mixed precision, Tensor-Core semantics).  Dims must be
-    /// multiples of the fragment (16); the tile policy handles edge tiles
-    /// smaller than the block by clamping.
+    /// multiples of the fragment (16).
+    ///
+    /// The threadblock/warp/K-panel loop nest accumulated each C element
+    /// in ascending-k order regardless of the policy — the policy is
+    /// numerically inert by design — so the product now executes on the
+    /// packed multithreaded engine ([`crate::gemm::engine::mixed_gemm`]),
+    /// bitwise identical for every policy (asserted in the tests below).
+    /// The policy's *performance* meaning lives on in the simulator
+    /// (`sim::kernels`), which models the staged-panel traffic per shape.
     pub fn run(&self, a: &Matrix, b: &Matrix) -> Matrix {
         let (m, k) = a.shape();
         let (k2, n) = b.shape();
@@ -93,51 +100,7 @@ impl CutlassGemm {
             m % FRAGMENT_DIM == 0 && n % FRAGMENT_DIM == 0 && k % FRAGMENT_DIM == 0,
             "dims must be multiples of {FRAGMENT_DIM}"
         );
-        let p = self.policy;
-        let av = a.as_slice();
-        let bv = b.as_slice();
-        let mut c = Matrix::zeros(m, n);
-
-        // threadblock grid over C
-        for bm0 in (0..m).step_by(p.block_m) {
-            let bm1 = (bm0 + p.block_m).min(m);
-            for bn0 in (0..n).step_by(p.block_n) {
-                let bn1 = (bn0 + p.block_n).min(n);
-                // warp grid inside the block: one accumulator per 16x16
-                let tiles_m = (bm1 - bm0) / FRAGMENT_DIM;
-                let tiles_n = (bn1 - bn0) / FRAGMENT_DIM;
-                let mut accs = vec![AccumFragment::fill(0.0); tiles_m * tiles_n];
-                // main loop over K panels (the software-pipelined loop)
-                for bk0 in (0..k).step_by(p.block_k) {
-                    let bk1 = (bk0 + p.block_k).min(k);
-                    for wi in 0..tiles_m {
-                        for wj in 0..tiles_n {
-                            let acc = &mut accs[wi * tiles_n + wj];
-                            for fk in (bk0..bk1).step_by(FRAGMENT_DIM) {
-                                let a_off = (bm0 + wi * FRAGMENT_DIM) * k + fk;
-                                let b_off = fk * n + bn0 + wj * FRAGMENT_DIM;
-                                let amat = Fragment::load(&av[a_off..], k, Layout::RowMajor);
-                                let bmat = Fragment::load(&bv[b_off..], n, Layout::RowMajor);
-                                *acc = mma_sync(&amat, &bmat, acc);
-                            }
-                        }
-                    }
-                }
-                // epilogue: store accumulators
-                for wi in 0..tiles_m {
-                    for wj in 0..tiles_n {
-                        let c_off = (bm0 + wi * FRAGMENT_DIM) * n + bn0 + wj * FRAGMENT_DIM;
-                        let cols = c.cols();
-                        accs[wi * tiles_n + wj].store(
-                            &mut c.as_mut_slice()[c_off..],
-                            cols,
-                            Layout::RowMajor,
-                        );
-                    }
-                }
-            }
-        }
-        c
+        crate::gemm::engine::mixed_gemm(a, b, None, 1.0, 0.0, 0)
     }
 }
 

@@ -9,10 +9,12 @@
 //! | CUTLASS templates        | [`cutlass`]        | tile-policy-parameterized GEMM |
 //! | cuBLAS + math mode       | [`cublas`]         | handle + `MathMode`, opaque kernels |
 //!
-//! All three run on the same [`crate::tcemu`] backend, so their results
-//! agree bit-for-bit; what differs is the API surface — which is exactly
-//! the paper's point.  The simulator ([`crate::sim`]) assigns each its
-//! own performance model (naive WMMA vs tiled CUTLASS vs tuned cuBLAS).
+//! All three execute on the same packed multithreaded engine
+//! ([`crate::gemm::engine`]), whose per-element chains match the
+//! [`crate::tcemu`] hardware emulation bit for bit — so the three layers
+//! agree exactly; what differs is the API surface, which is exactly the
+//! paper's point.  The simulator ([`crate::sim`]) assigns each its own
+//! performance model (naive WMMA vs tiled CUTLASS vs tuned cuBLAS).
 
 pub mod cublas;
 pub mod cutlass;

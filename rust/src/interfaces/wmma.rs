@@ -39,6 +39,12 @@ pub fn wmma_tensor_op(d: &mut [f32], a: &[f32], b: &[f32], ld: usize, layout: La
 
 /// §IV-A tiled GEMM over WMMA: C tiles of 16x16, one "warp" each, each
 /// accumulating over K fragment steps.  Requires dims divisible by 16.
+///
+/// The warp grid's tile iteration is an ascending-k chain per output
+/// element — exactly the engine's contract — so the whole loop nest now
+/// executes on the packed multithreaded engine
+/// ([`crate::gemm::engine::mixed_gemm`]), bitwise identical to iterating
+/// `mma_sync` per tile (asserted against the oracle in the tests below).
 pub fn wmma_tiled_gemm(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, k) = a.shape();
     let (k2, n) = b.shape();
@@ -47,62 +53,30 @@ pub fn wmma_tiled_gemm(a: &Matrix, b: &Matrix) -> Matrix {
         m % FRAGMENT_DIM == 0 && n % FRAGMENT_DIM == 0 && k % FRAGMENT_DIM == 0,
         "dims must be multiples of {FRAGMENT_DIM}"
     );
-
-    let mut c = Matrix::zeros(m, n);
-    let av = a.as_slice();
-    let bv = b.as_slice();
-
-    for ti in 0..m / FRAGMENT_DIM {
-        for tj in 0..n / FRAGMENT_DIM {
-            // one warp's work: accumulate A(ti, tk) x B(tk, tj) over tk
-            let mut acc = AccumFragment::fill(0.0);
-            for tk in 0..k / FRAGMENT_DIM {
-                let a_off = ti * FRAGMENT_DIM * k + tk * FRAGMENT_DIM;
-                let b_off = tk * FRAGMENT_DIM * n + tj * FRAGMENT_DIM;
-                let amat = Fragment::load(&av[a_off..], k, Layout::RowMajor);
-                let bmat = Fragment::load(&bv[b_off..], n, Layout::RowMajor);
-                acc = mma_sync(&amat, &bmat, &acc);
-            }
-            // store the C tile
-            let c_off = ti * FRAGMENT_DIM * n + tj * FRAGMENT_DIM;
-            let cols = c.cols();
-            acc.store(&mut c.as_mut_slice()[c_off..], cols, Layout::RowMajor);
-        }
-    }
-    c
+    crate::gemm::engine::mixed_gemm(a, b, None, 1.0, 0.0, 0)
 }
 
-/// §VI's batched GEMM implementation, at the fragment level: "the CUDA
-/// execution configuration consists of 512 threads per block.  Since a
-/// 16x16 matrix multiplication is executed by one Warp (32 threads), 16
-/// matrix multiplications are executed per thread block."  Each "warp"
-/// (loop iteration within a block group) performs one Listing-1 tensor
-/// op; blocks iterate groups of [`WARPS_PER_BLOCK`].
+/// §VI's batched-GEMM execution configuration: "the CUDA execution
+/// configuration consists of 512 threads per block.  Since a 16x16
+/// matrix multiplication is executed by one Warp (32 threads), 16
+/// matrix multiplications are executed per thread block."  Kept as the
+/// paper's documented constant (the simulator's batched model assumes
+/// it); since the engine rewire, [`wmma_batched_gemm`] no longer chunks
+/// by it — the engine pool plays the parallel warps' role directly.
 pub const WARPS_PER_BLOCK: usize = 16;
 
 /// Batched 16x16 mixed-precision GEMM via warp-level WMMA ops.
+///
+/// Each "warp" (one tile product) is one engine batched entry; the
+/// engine's worker pool plays the role of the blocks' parallel warps and
+/// produces the same bits as a serial loop of Listing-1 ops.
 pub fn wmma_batched_gemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
     assert_eq!(a.len(), b.len(), "batch length mismatch");
-    let mut out = Vec::with_capacity(a.len());
-    // thread-block loop: each block owns WARPS_PER_BLOCK matrices
-    for block in a.chunks(WARPS_PER_BLOCK).zip(b.chunks(WARPS_PER_BLOCK)) {
-        let (ab, bb) = block;
-        // warp loop inside the block: one Listing-1 op per warp
-        for (am, bm) in ab.iter().zip(bb) {
-            assert_eq!(am.shape(), (FRAGMENT_DIM, FRAGMENT_DIM), "16x16 only");
-            assert_eq!(bm.shape(), (FRAGMENT_DIM, FRAGMENT_DIM), "16x16 only");
-            let mut d = Matrix::zeros(FRAGMENT_DIM, FRAGMENT_DIM);
-            wmma_tensor_op(
-                d.as_mut_slice(),
-                am.as_slice(),
-                bm.as_slice(),
-                FRAGMENT_DIM,
-                Layout::RowMajor,
-            );
-            out.push(d);
-        }
+    for (am, bm) in a.iter().zip(b) {
+        assert_eq!(am.shape(), (FRAGMENT_DIM, FRAGMENT_DIM), "16x16 only");
+        assert_eq!(bm.shape(), (FRAGMENT_DIM, FRAGMENT_DIM), "16x16 only");
     }
-    out
+    crate::gemm::engine::batched_mixed_gemm(a, b, 0)
 }
 
 #[cfg(test)]
@@ -128,8 +102,9 @@ mod tests {
         let a = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
         let b = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
         let got = wmma_tiled_gemm(&a, &b);
-        let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
-        // same k-ascending accumulation order => bitwise equal
+        // same k-ascending accumulation order => bitwise equal to the
+        // serial scalar oracle, not just the engine
+        let want = crate::gemm::mixed_gemm_scalar(&a, &b, None, 1.0, 0.0);
         assert_eq!(got, want);
     }
 

@@ -7,12 +7,23 @@
 //! * **Numerics** — bit-exact software emulation of the Volta Tensor Core
 //!   mixed-precision contract ([`halfprec`], [`gemm`], [`tcemu`]) plus the
 //!   paper's precision-refinement technique ([`precision`]).
+//! * **Kernel engine** — [`gemm::engine`], the packed multithreaded GEMM
+//!   core (pack -> register-blocked microkernel -> deterministic
+//!   `std::thread` worker pool) that executes every precision path:
+//!   `sgemm_blocked` and the cuBLAS default mode (the paper's CUDA-core
+//!   sgemm, §IV), `mixed_gemm` and the WMMA/CUTLASS/cuBLAS TensorOp
+//!   layers (the §III Tensor Core contract), `hgemm` (the CUDA-core half
+//!   baseline of Fig. 6), the `batched_*` family (§IV-B / Fig. 7), the
+//!   `tcemu` warp tile loop, the §V refinement chains, and the
+//!   coordinator's CPU fallback lane.  The serial triple-loop kernels
+//!   survive as `*_scalar` oracles the engine must match bit for bit.
 //! * **Programmability** — the paper's three programming interfaces
 //!   re-implemented as Rust API layers over the emulation
 //!   ([`interfaces::wmma`], [`interfaces::cutlass`], [`interfaces::cublas`]).
 //! * **Performance** — a first-principles Volta V100 timing model
-//!   ([`sim`]) that regenerates the paper's Figs. 6-7, and criterion
-//!   benches for the host-side hot paths.
+//!   ([`sim`]) that regenerates the paper's Figs. 6-7, and in-tree
+//!   benches (`util::bench`) for the host-side hot paths, including the
+//!   engine-vs-scalar throughput comparison in `benches/hotpath.rs`.
 //! * **Serving** — a GEMM-as-a-service coordinator ([`coordinator`])
 //!   executing AOT-compiled JAX/Pallas artifacts through PJRT
 //!   ([`runtime`]); Python never runs on the request path.

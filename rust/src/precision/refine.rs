@@ -1,11 +1,17 @@
 //! Precision refinement (paper §V, Eqs. 1–3) over the CPU emulation.
 //!
 //! The residual split (Eq. 1) comes from [`crate::halfprec::split_residual`];
-//! the refined products are sums of Tensor-Core-semantics GEMMs
-//! ([`crate::gemm::mixed_gemm`]).  `RefineMode` is the knob the
-//! coordinator's precision policy ([`crate::coordinator::policy`]) turns:
-//! more refinement = lower error = more GEMMs (1x, 2x, 4x).
+//! the refined products are sums of Tensor-Core-semantics GEMMs run on
+//! the packed engine ([`crate::gemm::engine`]).  The multi-pass chains
+//! reuse pre-packed operands: Eq. 2 consumes B in both of its GEMMs and
+//! Eq. 3 consumes each split operand twice, so each matrix is packed
+//! (and f16-rounded) exactly once per refinement — numerically identical
+//! to repacking per call, but the pack cost is paid once.  `RefineMode`
+//! is the knob the coordinator's precision policy
+//! ([`crate::coordinator::policy`]) turns: more refinement = lower error
+//! = more GEMMs (1x, 2x, 4x).
 
+use crate::gemm::engine::{gemm_packed, InputPrecision, PackedA, PackedB};
 use crate::gemm::{mixed_gemm, Matrix};
 use crate::halfprec::{f16_to_f32, f32_to_f16};
 
@@ -69,27 +75,32 @@ fn split_matrix(x: &Matrix) -> (Matrix, Matrix) {
 /// figures also report the paper's f16 hand-off through the PJRT
 /// artifacts, see python/compile/kernels/ref.py).
 pub fn refine_gemm(a: &Matrix, b: &Matrix, mode: RefineMode) -> Matrix {
+    let f16 = InputPrecision::F16Rounded;
     match mode {
         RefineMode::None => mixed_gemm(a, b, None, 1.0, 0.0),
         RefineMode::RefineA => {
             // R_A B_h + A_h B_h  (both GEMMs consume f16-rounded operands;
-            // mixed_gemm rounds internally, so pass the split parts)
+            // B is packed+rounded once and reused by both)
             let (a_h, r_a) = split_matrix(a);
-            let mut c = mixed_gemm(&r_a, b, None, 1.0, 0.0);
-            let main = mixed_gemm(&a_h, b, None, 1.0, 0.0);
+            let pb = PackedB::pack(b, f16);
+            let mut c = gemm_packed(&PackedA::pack(&r_a, f16), &pb, None, 1.0, 0.0, 0);
+            let main = gemm_packed(&PackedA::pack(&a_h, f16), &pb, None, 1.0, 0.0, 0);
             for (o, m) in c.as_mut_slice().iter_mut().zip(main.as_slice()) {
                 *o += m;
             }
             c
         }
         RefineMode::RefineAB => {
+            // each split operand feeds two of the four GEMMs: pack once
             let (a_h, r_a) = split_matrix(a);
             let (b_h, r_b) = split_matrix(b);
-            let mut c = mixed_gemm(&r_a, &r_b, None, 1.0, 0.0);
+            let (pah, par) = (PackedA::pack(&a_h, f16), PackedA::pack(&r_a, f16));
+            let (pbh, pbr) = (PackedB::pack(&b_h, f16), PackedB::pack(&r_b, f16));
+            let mut c = gemm_packed(&par, &pbr, None, 1.0, 0.0, 0);
             for part in [
-                mixed_gemm(&a_h, &r_b, None, 1.0, 0.0),
-                mixed_gemm(&r_a, &b_h, None, 1.0, 0.0),
-                mixed_gemm(&a_h, &b_h, None, 1.0, 0.0),
+                gemm_packed(&pah, &pbr, None, 1.0, 0.0, 0),
+                gemm_packed(&par, &pbh, None, 1.0, 0.0, 0),
+                gemm_packed(&pah, &pbh, None, 1.0, 0.0, 0),
             ] {
                 for (o, p) in c.as_mut_slice().iter_mut().zip(part.as_slice()) {
                     *o += p;

@@ -109,8 +109,7 @@ impl Manifest {
     /// Load from the discovered default location (see
     /// [`super::find_artifacts_dir`]).
     pub fn discover() -> Result<Manifest> {
-        let dir = super::find_artifacts_dir()
-            .context("no artifacts directory found; run `make artifacts`")?;
+        let dir = super::find_artifacts_dir().context(super::NO_ARTIFACTS_MSG)?;
         Manifest::load(dir)
     }
 

@@ -27,6 +27,19 @@ pub use tensor::TensorData;
 /// Default artifacts directory, relative to the repo root.
 pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
 
+/// The error message every discovery path reports when no artifacts
+/// directory exists (see [`Manifest::discover`]); the single source of
+/// truth [`is_artifacts_missing`] matches against.
+pub(crate) const NO_ARTIFACTS_MSG: &str =
+    "no artifacts directory found; run `make artifacts`";
+
+/// True when `err` is the artifacts-not-built discovery failure — the
+/// only error the artifact-gated integration tests may skip on; anything
+/// else (corrupt manifest, broken artifact) should fail loudly.
+pub fn is_artifacts_missing(err: &anyhow::Error) -> bool {
+    format!("{err:#}").contains(NO_ARTIFACTS_MSG)
+}
+
 /// Locate the artifacts directory: `$TENSOREMU_ARTIFACTS`, then
 /// `artifacts/` upward from the current directory (so tests, examples
 /// and benches work from any workspace subdirectory).

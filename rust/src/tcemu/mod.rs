@@ -11,7 +11,9 @@
 //!   warp-level MMAs, composed of 4x4 hardware ops exactly as a warp's
 //!   two tensor cores would iterate them.
 //! * [`warp`] — the warp-level `mma_sync` built on fragments; the unit
-//!   [`crate::interfaces::wmma`] exposes.
+//!   [`crate::interfaces::wmma`] exposes.  Its f32-accumulate path runs
+//!   on the packed engine core ([`crate::gemm::engine`]); the 4x4
+//!   hardware iteration is kept as `mma_sync_hw`, the bitwise oracle.
 //!
 //! The emulation is bit-faithful: products of halves are formed in f32
 //! (exact), accumulated in the declared accumulator precision, with
@@ -23,4 +25,4 @@ mod warp;
 
 pub use fragment::{AccumFragment, Fragment, Layout, FRAGMENT_DIM};
 pub use mma::{mma4x4_f16acc, mma4x4_f32acc, HW_MMA_DIM};
-pub use warp::{mma_sync, mma_sync_f16acc};
+pub use warp::{mma_sync, mma_sync_f16acc, mma_sync_hw};

@@ -1,21 +1,51 @@
-//! Warp-level MMA: `wmma::mma_sync` (step 4 of Listing 1), composed from
-//! the 4x4 hardware ops the way a warp's two tensor cores iterate them.
+//! Warp-level MMA: `wmma::mma_sync` (step 4 of Listing 1).
 //!
-//! A 16x16x16 warp MMA decomposes into 4x4x4 = 64 hardware ops; the K
-//! blocks accumulate in sequence (fixed order — the emulation is
-//! deterministic and matches the per-k-ascending chain of the dot units).
+//! A 16x16x16 warp MMA decomposes into 4x4x4 = 64 hardware ops whose K
+//! blocks accumulate in sequence; per output element that is exactly an
+//! ascending-k f32 chain starting from the C fragment value.  The f32
+//! path therefore routes through the engine's in-place accumulate core
+//! ([`crate::gemm::engine::gemm_acc_inplace`]) — bitwise identical to
+//! iterating [`super::mma::mma4x4_f32acc`] over the hardware tiles (the
+//! equivalence is asserted in the tests below), but on the packed
+//! microkernel.  The f16-accumulator flavour still iterates the hardware
+//! ops: its per-4-chain rounding is hardware-granular by definition.
 
 use crate::halfprec::f32_to_f16;
 
 use super::fragment::{AccumFragment, Fragment, FRAGMENT_DIM};
-use super::mma::{mma4x4_f32acc, mma4x4_f16acc};
+use super::mma::{mma4x4_f16acc, mma4x4_f32acc};
 use crate::halfprec::Half;
 
 const BLOCKS: usize = FRAGMENT_DIM / 4;
 
 /// `wmma::mma_sync(D, A, B, C)` with f32 accumulation (mixed precision):
-/// D = A x B + C on 16x16 fragments.
+/// D = A x B + C on 16x16 fragments.  Engine-backed.
 pub fn mma_sync(a: &Fragment, b: &Fragment, c: &AccumFragment) -> AccumFragment {
+    const N: usize = FRAGMENT_DIM;
+    let mut acc = [0f32; N * N];
+    let mut aw = [0f32; N * N];
+    let mut bw = [0f32; N * N];
+    for i in 0..N {
+        for j in 0..N {
+            acc[i * N + j] = c.get(i, j);
+            aw[i * N + j] = a.get(i, j).to_f32();
+            bw[i * N + j] = b.get(i, j).to_f32();
+        }
+    }
+    crate::gemm::engine::gemm_acc_inplace(&mut acc, &aw, &bw, N, N, N);
+    let mut d = AccumFragment::fill(0.0);
+    for i in 0..N {
+        for j in 0..N {
+            d.set(i, j, acc[i * N + j]);
+        }
+    }
+    d
+}
+
+/// The pre-engine reference: iterate the 4x4 hardware ops the way a
+/// warp's two tensor cores do.  Kept as the hardware-granularity oracle
+/// [`mma_sync`] is verified against.
+pub fn mma_sync_hw(a: &Fragment, b: &Fragment, c: &AccumFragment) -> AccumFragment {
     let mut d = c.clone();
     for bi in 0..BLOCKS {
         for bj in 0..BLOCKS {
@@ -92,6 +122,25 @@ mod tests {
                 (((s >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0) * scale
             })
             .collect()
+    }
+
+    #[test]
+    fn engine_path_matches_hardware_iteration_bitwise() {
+        // the engine-backed mma_sync must equal the 4x4-hardware-op
+        // iteration exactly, including a nonzero starting accumulator
+        let av = rand_vec(256, 9, 4.0);
+        let bv = rand_vec(256, 10, 4.0);
+        let cv = rand_vec(256, 11, 2.0);
+        let a = Fragment::load(&av, 16, Layout::RowMajor);
+        let b = Fragment::load(&bv, 16, Layout::RowMajor);
+        let c = AccumFragment::load(&cv, 16, Layout::RowMajor);
+        let fast = mma_sync(&a, &b, &c);
+        let hw = mma_sync_hw(&a, &b, &c);
+        for i in 0..16 {
+            for j in 0..16 {
+                assert_eq!(fast.get(i, j), hw.get(i, j), "({i},{j})");
+            }
+        }
     }
 
     #[test]

@@ -7,6 +7,12 @@
 //!   small-GEMM arrival streams with configurable size mix and rates.
 //! * [`spectral`] — Nek5000-style spectral-element GEMM mixes and the
 //!   FMM-FFT small-matrix shape (the paper's two named applications).
+//!
+//! Workload verification (checking generated batches against reference
+//! products) and the engine equivalence suite both consume these
+//! generators; they feed the engine paths and the `*_scalar` oracles with
+//! identical inputs, which is what makes the bitwise comparisons in
+//! `tests/engine.rs` meaningful.
 
 pub mod gen;
 pub mod spectral;

@@ -7,19 +7,29 @@ use tensoremu::coordinator::request::ServedBy;
 use tensoremu::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, GemmRequest};
 use tensoremu::gemm::{mixed_gemm, Matrix};
 use tensoremu::precision::{refine_gemm, RefineMode};
+use tensoremu::runtime::is_artifacts_missing;
 use tensoremu::workload::{uniform_matrix, Rng};
 
-fn coordinator() -> Coordinator {
-    Coordinator::start(CoordinatorConfig {
+/// Skips (returns None) when the PJRT artifacts are not built — the
+/// coordinator cannot start without a manifest.  Only that case skips;
+/// any other startup failure panics so regressions stay visible.
+fn coordinator() -> Option<Coordinator> {
+    match Coordinator::start(CoordinatorConfig {
         batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(3) },
         ..Default::default()
-    })
-    .expect("artifacts not built? run `make artifacts`")
+    }) {
+        Ok(c) => Some(c),
+        Err(e) if is_artifacts_missing(&e) => {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+        Err(e) => panic!("coordinator startup failed (not a missing build): {e:#}"),
+    }
 }
 
 #[test]
 fn serves_a_large_gemm_on_tensor_core_path() {
-    let c = coordinator();
+    let Some(c) = coordinator() else { return };
     let mut rng = Rng::new(1);
     let a = uniform_matrix(&mut rng, 256, 256, -1.0, 1.0);
     let b = uniform_matrix(&mut rng, 256, 256, -1.0, 1.0);
@@ -33,7 +43,7 @@ fn serves_a_large_gemm_on_tensor_core_path() {
 
 #[test]
 fn batches_tile_requests_together() {
-    let c = coordinator();
+    let Some(c) = coordinator() else { return };
     let mut rng = Rng::new(2);
     // submit a burst of 16x16 requests, then collect
     let mut rxs = Vec::new();
@@ -64,7 +74,7 @@ fn batches_tile_requests_together() {
 
 #[test]
 fn error_budget_selects_refined_artifact() {
-    let c = coordinator();
+    let Some(c) = coordinator() else { return };
     let mut rng = Rng::new(3);
     let a = uniform_matrix(&mut rng, 512, 512, -1.0, 1.0);
     let b = uniform_matrix(&mut rng, 512, 512, -1.0, 1.0);
@@ -79,7 +89,7 @@ fn error_budget_selects_refined_artifact() {
 
 #[test]
 fn explicit_mode_respected() {
-    let c = coordinator();
+    let Some(c) = coordinator() else { return };
     let mut rng = Rng::new(4);
     let a = uniform_matrix(&mut rng, 128, 128, -1.0, 1.0);
     let b = uniform_matrix(&mut rng, 128, 128, -1.0, 1.0);
@@ -94,7 +104,7 @@ fn explicit_mode_respected() {
 
 #[test]
 fn odd_shapes_served_by_cpu_fallback() {
-    let c = coordinator();
+    let Some(c) = coordinator() else { return };
     let mut rng = Rng::new(5);
     let a = uniform_matrix(&mut rng, 48, 80, -1.0, 1.0);
     let b = uniform_matrix(&mut rng, 80, 32, -1.0, 1.0);
@@ -108,7 +118,7 @@ fn odd_shapes_served_by_cpu_fallback() {
 
 #[test]
 fn mixed_traffic_all_served_correctly() {
-    let c = coordinator();
+    let Some(c) = coordinator() else { return };
     let mut rng = Rng::new(6);
     let mut rxs = Vec::new();
     let mut wants = Vec::new();
@@ -135,7 +145,7 @@ fn mixed_traffic_all_served_correctly() {
 
 #[test]
 fn response_ids_match_requests() {
-    let c = coordinator();
+    let Some(c) = coordinator() else { return };
     let mut rng = Rng::new(7);
     let a = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
     let b = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
@@ -147,7 +157,7 @@ fn response_ids_match_requests() {
 
 #[test]
 fn latency_accounting_present() {
-    let c = coordinator();
+    let Some(c) = coordinator() else { return };
     let mut rng = Rng::new(8);
     let a = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
     let b = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
@@ -162,7 +172,7 @@ fn latency_accounting_present() {
 fn pm16_inputs_budget_escalates_precision() {
     // the §VII-B scenario as service behaviour: same budget, ±16 inputs
     // -> the policy must refine
-    let c = coordinator();
+    let Some(c) = coordinator() else { return };
     let mut rng = Rng::new(9);
     let n = 512;
     let a = uniform_matrix(&mut rng, n, n, -16.0, 16.0);

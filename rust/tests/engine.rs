@@ -1,0 +1,235 @@
+//! Engine-vs-oracle equivalence suite: the packed multithreaded engine
+//! must reproduce the serial scalar kernels **bit for bit** at every
+//! precision mode, for every shape (including degenerate and
+//! non-block-multiple ones), at every worker count.  This is the contract
+//! that lets every consumer — interfaces, tcemu, refinement, coordinator
+//! fallback — ride the fast core without any numerical drift.
+
+use tensoremu::gemm::engine::{
+    self, InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB,
+};
+use tensoremu::gemm::{
+    batched_hgemm, batched_hgemm_scalar, batched_mixed_gemm, batched_mixed_gemm_scalar,
+    batched_sgemm, batched_sgemm_scalar, hgemm, hgemm_scalar, mixed_gemm, mixed_gemm_scalar,
+    sgemm_blocked, sgemm_naive, Matrix,
+};
+use tensoremu::workload::{uniform_matrix, Rng};
+
+/// (m, k, n) shapes: degenerate, tiny, non-block-multiple, block-aligned.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (0, 5, 4),
+    (4, 0, 3),
+    (3, 4, 0),
+    (1, 17, 1),
+    (2, 3, 2),
+    (5, 7, 3),
+    (4, 8, 8),
+    (16, 16, 16),
+    (17, 16, 15),
+    (33, 1, 9),
+    (70, 33, 81),
+    (64, 64, 64),
+    (128, 32, 96),
+];
+
+const THREADS: &[usize] = &[1, 2, 8];
+
+fn pair(rng: &mut Rng, m: usize, k: usize, n: usize, scale: f32) -> (Matrix, Matrix) {
+    (
+        uniform_matrix(rng, m, k, -scale, scale),
+        uniform_matrix(rng, k, n, -scale, scale),
+    )
+}
+
+#[test]
+fn mixed_gemm_bitwise_equals_scalar_for_all_shapes_and_threads() {
+    let mut rng = Rng::new(1);
+    for &(m, k, n) in SHAPES {
+        let (a, b) = pair(&mut rng, m, k, n, 1.0);
+        let want = mixed_gemm_scalar(&a, &b, None, 1.0, 0.0);
+        for &t in THREADS {
+            let got = engine::mixed_gemm(&a, &b, None, 1.0, 0.0, t);
+            assert_eq!(got, want, "mixed ({m},{k},{n}) threads={t}");
+        }
+        // the public wrapper (auto threads) as well
+        assert_eq!(mixed_gemm(&a, &b, None, 1.0, 0.0), want, "wrapper ({m},{k},{n})");
+    }
+}
+
+#[test]
+fn sgemm_bitwise_equals_naive_for_all_shapes_and_threads() {
+    let mut rng = Rng::new(2);
+    for &(m, k, n) in SHAPES {
+        let (a, b) = pair(&mut rng, m, k, n, 1.0);
+        let want = sgemm_naive(&a, &b, None, 1.0, 0.0);
+        for &t in THREADS {
+            let got = engine::sgemm(&a, &b, None, 1.0, 0.0, t);
+            assert_eq!(got, want, "sgemm ({m},{k},{n}) threads={t}");
+        }
+        assert_eq!(sgemm_blocked(&a, &b, None, 1.0, 0.0), want, "blocked ({m},{k},{n})");
+    }
+}
+
+#[test]
+fn hgemm_bitwise_equals_scalar_for_all_shapes_and_threads() {
+    let mut rng = Rng::new(3);
+    for &(m, k, n) in SHAPES {
+        let (a, b) = pair(&mut rng, m, k, n, 1.0);
+        let want = hgemm_scalar(&a, &b);
+        for &t in THREADS {
+            assert_eq!(engine::hgemm(&a, &b, t), want, "hgemm ({m},{k},{n}) threads={t}");
+        }
+        assert_eq!(hgemm(&a, &b), want, "wrapper ({m},{k},{n})");
+    }
+}
+
+#[test]
+fn alpha_beta_c_epilogue_bitwise() {
+    let mut rng = Rng::new(4);
+    for &(m, k, n) in &[(1, 1, 1), (5, 7, 3), (70, 33, 81)] {
+        let (a, b) = pair(&mut rng, m, k, n, 1.0);
+        let c = uniform_matrix(&mut rng, m, n, -1.0, 1.0);
+        for &(alpha, beta) in &[(1.0f32, 1.0f32), (0.5, 2.0), (-1.25, 0.0), (0.0, 3.0)] {
+            let want = mixed_gemm_scalar(&a, &b, Some(&c), alpha, beta);
+            for &t in THREADS {
+                let got = engine::mixed_gemm(&a, &b, Some(&c), alpha, beta, t);
+                assert_eq!(got, want, "({m},{k},{n}) a={alpha} b={beta} t={t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn absorption_case_k4096_bitwise() {
+    // the §V absorption pathology: 4096 ones accumulated in f16 saturate
+    // near 2048; in f32 they are exact.  The engine must reproduce the
+    // scalar kernels' bits on this pathological chain too.
+    let n = 4096;
+    let a = Matrix::from_fn(1, n, |_, _| 1.0);
+    let b = Matrix::from_fn(n, 1, |_, _| 1.0);
+    let h_want = hgemm_scalar(&a, &b);
+    let m_want = mixed_gemm_scalar(&a, &b, None, 1.0, 0.0);
+    assert!(h_want[(0, 0)] <= 2048.0);
+    assert_eq!(m_want[(0, 0)], n as f32);
+    for &t in THREADS {
+        assert_eq!(engine::hgemm(&a, &b, t), h_want, "hgemm t={t}");
+        assert_eq!(engine::mixed_gemm(&a, &b, None, 1.0, 0.0, t), m_want, "mixed t={t}");
+    }
+}
+
+#[test]
+fn pm16_range_bitwise() {
+    // the paper's ±16 input protocol stresses rounding; bitwise equality
+    // must hold there as well
+    let mut rng = Rng::new(5);
+    let (a, b) = pair(&mut rng, 48, 48, 48, 16.0);
+    assert_eq!(
+        engine::mixed_gemm(&a, &b, None, 1.0, 0.0, 4),
+        mixed_gemm_scalar(&a, &b, None, 1.0, 0.0)
+    );
+    assert_eq!(engine::hgemm(&a, &b, 4), hgemm_scalar(&a, &b));
+}
+
+#[test]
+fn determinism_across_worker_counts() {
+    // large enough that auto mode would actually parallelize; explicit
+    // counts must all produce identical bits
+    let mut rng = Rng::new(6);
+    let (a, b) = pair(&mut rng, 200, 150, 170, 1.0);
+    let base_mixed = engine::mixed_gemm(&a, &b, None, 1.0, 0.0, 1);
+    let base_sgemm = engine::sgemm(&a, &b, None, 1.0, 0.0, 1);
+    let base_hgemm = engine::hgemm(&a, &b, 1);
+    for &t in &[2usize, 3, 5, 8] {
+        assert_eq!(engine::mixed_gemm(&a, &b, None, 1.0, 0.0, t), base_mixed, "mixed t={t}");
+        assert_eq!(engine::sgemm(&a, &b, None, 1.0, 0.0, t), base_sgemm, "sgemm t={t}");
+        assert_eq!(engine::hgemm(&a, &b, t), base_hgemm, "hgemm t={t}");
+    }
+}
+
+#[test]
+fn batched_bitwise_equals_scalar_loops() {
+    let mut rng = Rng::new(7);
+    // heterogeneous shapes in one batch: the engine must handle per-entry
+    // shapes, not just uniform tiles
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    for &(m, k, n) in &[(16, 16, 16), (1, 1, 1), (5, 7, 3), (16, 16, 16), (33, 2, 9)] {
+        let (x, y) = pair(&mut rng, m, k, n, 1.0);
+        a.push(x);
+        b.push(y);
+    }
+    assert_eq!(batched_mixed_gemm(&a, &b), batched_mixed_gemm_scalar(&a, &b));
+    assert_eq!(batched_sgemm(&a, &b), batched_sgemm_scalar(&a, &b));
+    assert_eq!(batched_hgemm(&a, &b), batched_hgemm_scalar(&a, &b));
+}
+
+#[test]
+fn batched_determinism_across_worker_counts() {
+    let mut rng = Rng::new(8);
+    let a: Vec<Matrix> = (0..65).map(|_| uniform_matrix(&mut rng, 16, 16, -1.0, 1.0)).collect();
+    let b: Vec<Matrix> = (0..65).map(|_| uniform_matrix(&mut rng, 16, 16, -1.0, 1.0)).collect();
+    let base = engine::batched_mixed_gemm(&a, &b, 1);
+    for &t in &[2usize, 8] {
+        assert_eq!(engine::batched_mixed_gemm(&a, &b, t), base, "t={t}");
+        assert_eq!(engine::batched_hgemm(&a, &b, t), engine::batched_hgemm(&a, &b, 1), "h t={t}");
+    }
+    // and batched == loop of singles, the Fig. 7 contract
+    for i in [0usize, 31, 64] {
+        assert_eq!(base[i], mixed_gemm(&a[i], &b[i], None, 1.0, 0.0), "entry {i}");
+    }
+}
+
+#[test]
+fn empty_batch_and_zero_entries() {
+    assert!(batched_mixed_gemm(&[], &[]).is_empty());
+    let a = vec![Matrix::zeros(0, 4), Matrix::zeros(2, 0)];
+    let b = vec![Matrix::zeros(4, 2), Matrix::zeros(0, 3)];
+    let got = batched_mixed_gemm(&a, &b);
+    assert_eq!(got[0].shape(), (0, 2));
+    assert_eq!(got[1], Matrix::zeros(2, 3));
+}
+
+#[test]
+fn prepacked_operands_reused_across_products() {
+    // pack once, multiply many: results must equal fresh packs bitwise
+    let mut rng = Rng::new(9);
+    let b = uniform_matrix(&mut rng, 40, 24, -1.0, 1.0);
+    let pb = PackedB::pack(&b, InputPrecision::F16Rounded);
+    for seed in 10..14 {
+        let mut r2 = Rng::new(seed);
+        let a = uniform_matrix(&mut r2, 31, 40, -1.0, 1.0);
+        let pa = PackedA::pack(&a, InputPrecision::F16Rounded);
+        let got = engine::gemm_packed(&pa, &pb, None, 1.0, 0.0, 2);
+        assert_eq!(got, mixed_gemm_scalar(&a, &b, None, 1.0, 0.0), "seed {seed}");
+    }
+}
+
+#[test]
+fn prepacked_half_operands_reused() {
+    let mut rng = Rng::new(15);
+    let b = uniform_matrix(&mut rng, 24, 18, -1.0, 1.0);
+    let pb = PackedHalfB::pack(&b);
+    assert_eq!(pb.shape(), (24, 18));
+    for seed in 16..19 {
+        let mut r2 = Rng::new(seed);
+        let a = uniform_matrix(&mut r2, 13, 24, -1.0, 1.0);
+        let pa = PackedHalfA::pack(&a);
+        let got = engine::hgemm_packed(&pa, &pb, 2);
+        assert_eq!(got, hgemm_scalar(&a, &b), "seed {seed}");
+    }
+}
+
+#[test]
+fn repack_reuse_matches_fresh_pack() {
+    let mut rng = Rng::new(20);
+    let mut pa = PackedA::default();
+    let mut pb = PackedB::default();
+    for &(m, k, n) in &[(16, 16, 16), (3, 9, 5), (40, 12, 40)] {
+        let (a, b) = pair(&mut rng, m, k, n, 1.0);
+        pa.repack(&a, InputPrecision::F16Rounded);
+        pb.repack(&b, InputPrecision::F16Rounded);
+        let got = engine::gemm_packed(&pa, &pb, None, 1.0, 0.0, 1);
+        assert_eq!(got, mixed_gemm_scalar(&a, &b, None, 1.0, 0.0), "({m},{k},{n})");
+    }
+}

@@ -7,16 +7,46 @@
 
 use tensoremu::gemm::{mixed_gemm, sgemm_naive};
 use tensoremu::precision::{refine_gemm, RefineMode};
-use tensoremu::runtime::{Engine, ExecutorServer, Manifest, TensorData};
+use tensoremu::runtime::{is_artifacts_missing, Engine, ExecutorServer, Manifest, TensorData};
 use tensoremu::workload::{uniform_batch, uniform_matrix, Rng};
 
-fn engine() -> Engine {
-    Engine::discover().expect("artifacts not built? run `make artifacts`")
+/// The PJRT artifacts are an optional build product (`make artifacts`
+/// needs the JAX/Pallas toolchain).  When absent these integration tests
+/// skip rather than fail, like the router's manifest-driven tests.  Only
+/// the artifacts-not-built case skips: any other discovery failure (a
+/// corrupt manifest, a broken artifact) must fail the suite loudly.
+fn engine() -> Option<Engine> {
+    match Engine::discover() {
+        Ok(e) => Some(e),
+        Err(e) if is_artifacts_missing(&e) => {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+        Err(e) => panic!("artifact discovery failed (not a missing build): {e:#}"),
+    }
+}
+
+fn executor() -> Option<ExecutorServer> {
+    match ExecutorServer::discover() {
+        Ok(s) => Some(s),
+        Err(e) if is_artifacts_missing(&e) => {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+        Err(e) => panic!("executor discovery failed (not a missing build): {e:#}"),
+    }
 }
 
 #[test]
 fn manifest_discovers_and_has_core_artifacts() {
-    let m = Manifest::discover().unwrap();
+    let m = match Manifest::discover() {
+        Ok(m) => m,
+        Err(e) if is_artifacts_missing(&e) => {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        Err(e) => panic!("manifest discovery failed: {e:#}"),
+    };
     assert!(m.gemm("mixed", 64).is_some());
     assert!(m.gemm("sgemm", 256).is_some());
     assert!(m.gemm("refine_ab", 512).is_some());
@@ -26,7 +56,7 @@ fn manifest_discovers_and_has_core_artifacts() {
 
 #[test]
 fn pallas_mixed_gemm_matches_rust_emulation() {
-    let mut e = engine();
+    let Some(mut e) = engine() else { return };
     let mut rng = Rng::new(1);
     let a = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
     let b = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
@@ -48,7 +78,7 @@ fn pallas_mixed_gemm_matches_rust_emulation() {
 
 #[test]
 fn sgemm_artifact_matches_rust_sgemm() {
-    let mut e = engine();
+    let Some(mut e) = engine() else { return };
     let mut rng = Rng::new(2);
     let a = uniform_matrix(&mut rng, 128, 128, -1.0, 1.0);
     let b = uniform_matrix(&mut rng, 128, 128, -1.0, 1.0);
@@ -64,7 +94,7 @@ fn sgemm_artifact_matches_rust_sgemm() {
 
 #[test]
 fn refined_artifacts_match_rust_refinement() {
-    let mut e = engine();
+    let Some(mut e) = engine() else { return };
     let mut rng = Rng::new(3);
     let a = uniform_matrix(&mut rng, 128, 128, -1.0, 1.0);
     let b = uniform_matrix(&mut rng, 128, 128, -1.0, 1.0);
@@ -83,7 +113,7 @@ fn refined_artifacts_match_rust_refinement() {
 
 #[test]
 fn batched_artifact_matches_batched_emulation() {
-    let mut e = engine();
+    let Some(mut e) = engine() else { return };
     let mut rng = Rng::new(4);
     let a = uniform_batch(&mut rng, 64, 16, -1.0, 1.0);
     let b = uniform_batch(&mut rng, 64, 16, -1.0, 1.0);
@@ -107,7 +137,7 @@ fn batched_artifact_matches_batched_emulation() {
 
 #[test]
 fn errprobe_orders_refinement_errors() {
-    let mut e = engine();
+    let Some(mut e) = engine() else { return };
     let n = *e.manifest().errprobe_sizes().first().unwrap();
     let mut rng = Rng::new(5);
     let a = TensorData::from_matrix(&uniform_matrix(&mut rng, n, n, -1.0, 1.0));
@@ -121,7 +151,7 @@ fn errprobe_orders_refinement_errors() {
 
 #[test]
 fn engine_rejects_wrong_shapes() {
-    let mut e = engine();
+    let Some(mut e) = engine() else { return };
     let name = e.manifest().gemm("mixed", 64).unwrap().name.clone();
     let bad = TensorData::new(vec![32, 32], vec![0.0; 1024]).unwrap();
     let err = e.run(&name, &[bad.clone(), bad]).unwrap_err();
@@ -130,13 +160,13 @@ fn engine_rejects_wrong_shapes() {
 
 #[test]
 fn engine_rejects_unknown_artifact() {
-    let mut e = engine();
+    let Some(mut e) = engine() else { return };
     assert!(e.run("no_such_artifact", &[]).is_err());
 }
 
 #[test]
 fn engine_caches_compilations() {
-    let mut e = engine();
+    let Some(mut e) = engine() else { return };
     let name = e.manifest().gemm("mixed", 64).unwrap().name.clone();
     assert_eq!(e.compiled_count(), 0);
     e.ensure_compiled(&name).unwrap();
@@ -147,7 +177,8 @@ fn engine_caches_compilations() {
 
 #[test]
 fn executor_thread_serves_concurrent_clients() {
-    let server = ExecutorServer::discover().unwrap();
+    let Some(server) = executor() else { return };
+
     let name = server.manifest().gemm("mixed", 64).unwrap().name.clone();
     let mut joins = Vec::new();
     for t in 0..4 {
@@ -174,7 +205,7 @@ fn executor_thread_serves_concurrent_clients() {
 
 #[test]
 fn executor_warm_precompiles() {
-    let server = ExecutorServer::discover().unwrap();
+    let Some(server) = executor() else { return };
     let h = server.handle();
     let name = server.manifest().gemm("sgemm", 64).unwrap().name.clone();
     h.warm(&name).unwrap();
