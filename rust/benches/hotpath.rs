@@ -1,22 +1,33 @@
 //! Hot-path benchmarks for the §Perf optimization pass (EXPERIMENTS.md).
 //!
 //! Part 1 — **engine vs scalar**: the packed multithreaded GEMM engine
-//! against the serial scalar oracles it replaced, on the two shapes the
-//! acceptance bar names (512^3 mixed GEMM, 1024-tile batched 16x16), plus
-//! the hgemm repack-reuse path.  Requires nothing but the crate; writes a
-//! machine-readable baseline to `BENCH_hotpath.json` (override the path
-//! with `BENCH_OUT`) so future PRs have a perf trajectory.
+//! (persistent pool + kc/mc cache blocking + 8x8 microkernel) against the
+//! serial scalar oracles it replaced, on the two shapes the acceptance
+//! bar names (512^3 mixed GEMM, 1024-tile batched 16x16), plus the hgemm
+//! repack-reuse path.
 //!
-//! Part 2 — **L3 serving components** (router / batcher / tensor
+//! Part 2 — **persistent vs scoped pool** on repeated small GEMMs: the
+//! per-call latency axis (a scoped fork-join pays thread spawns on every
+//! call; the warm persistent pool only a latch round-trip).
+//!
+//! Part 3 — **L3 serving components** (router / batcher / tensor
 //! conversion / PJRT execution), which require `make artifacts`; skipped
 //! gracefully when the artifacts are absent.
+//!
+//! Requires nothing but the crate; writes a machine-readable baseline to
+//! `BENCH_hotpath.json` — schema records `threads`, pool mode, blocking
+//! params (`MR/NR/KC/MC`) and the `simd` feature state alongside the
+//! numbers, so baselines stay attributable.  Env knobs: `BENCH_OUT`
+//! overrides the output path, `BENCH_SMOKE=1` shrinks shapes/iterations
+//! to CI-smoke size and redirects output to `BENCH_hotpath.smoke.json`
+//! (smoke shapes are a sanity signal, not the acceptance measurement).
 //!
 //! Run: `cargo bench --bench hotpath`
 
 use std::time::Duration;
 
 use tensoremu::coordinator::{Batcher, BatcherConfig, GemmRequest, PrecisionPolicy, Router};
-use tensoremu::gemm::engine::{self, PackedHalfA, PackedHalfB};
+use tensoremu::gemm::engine::{self, PackedHalfA, PackedHalfB, PoolMode};
 use tensoremu::gemm::{
     batched_mixed_gemm, batched_mixed_gemm_scalar, hgemm_scalar, mixed_gemm, mixed_gemm_scalar,
     Matrix,
@@ -37,59 +48,121 @@ impl Comparison {
     }
 }
 
+struct PoolComparison {
+    name: String,
+    scoped: BenchResult,
+    persistent: BenchResult,
+}
+
+impl PoolComparison {
+    fn speedup(&self) -> f64 {
+        self.scoped.mean().as_secs_f64() / self.persistent.mean().as_secs_f64().max(1e-12)
+    }
+}
+
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0" && !v.eq_ignore_ascii_case("false"))
+        .unwrap_or(false);
+    if smoke {
+        println!("BENCH_SMOKE: reduced shapes/iterations (CI smoke mode) — these are");
+        println!("sanity numbers, NOT the mixed_512/batched_1024x16 acceptance shapes\n");
+    }
     let mut rng = Rng::new(1);
+    // the mode the engine-vs-scalar comparisons actually run under
+    // (TENSOREMU_POOL-selectable) — recorded in the baseline, and
+    // restored after the pool-comparison section flips modes
+    let initial_mode = engine::pool_mode();
     let mut comparisons = Vec::new();
 
-    // -- 512^3 mixed GEMM: the direct-path shape of Fig. 6
-    let a = uniform_matrix(&mut rng, 512, 512, -1.0, 1.0);
-    let b = uniform_matrix(&mut rng, 512, 512, -1.0, 1.0);
-    let scalar = bench_config("gemm/mixed_512_scalar", 3, 0, 30_000, || {
+    // -- direct-path shape of Fig. 6 (512^3 mixed GEMM; 128^3 in smoke)
+    let nm = if smoke { 128 } else { 512 };
+    let mixed_name: &'static str = if smoke { "mixed_128" } else { "mixed_512" };
+    let a = uniform_matrix(&mut rng, nm, nm, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, nm, nm, -1.0, 1.0);
+    let scalar = bench_config("gemm/mixed_scalar", 3, 0, 30_000, || {
         std::hint::black_box(mixed_gemm_scalar(&a, &b, None, 1.0, 0.0));
     });
     println!("{}", scalar.report());
-    let fast = bench_config("gemm/mixed_512_engine", 30, 300, 10_000, || {
+    let fast = bench_config("gemm/mixed_engine", 30, 300, 10_000, || {
         std::hint::black_box(mixed_gemm(&a, &b, None, 1.0, 0.0));
     });
     println!("{}", fast.report());
-    comparisons.push(Comparison { name: "mixed_512", scalar, engine: fast });
+    comparisons.push(Comparison { name: mixed_name, scalar, engine: fast });
 
-    // -- 1024-tile batched 16x16: the Fig. 7 / coordinator batch shape
-    let ab = uniform_batch(&mut rng, 1024, 16, -1.0, 1.0);
-    let bb = uniform_batch(&mut rng, 1024, 16, -1.0, 1.0);
-    let scalar = bench_config("gemm/batched_1024x16_scalar", 10, 0, 30_000, || {
+    // -- batched 16x16 tiles: the Fig. 7 / coordinator batch shape
+    let nbatch = if smoke { 128 } else { 1024 };
+    let batch_name: &'static str = if smoke { "batched_128x16" } else { "batched_1024x16" };
+    let ab = uniform_batch(&mut rng, nbatch, 16, -1.0, 1.0);
+    let bb = uniform_batch(&mut rng, nbatch, 16, -1.0, 1.0);
+    let scalar = bench_config("gemm/batched_scalar", 10, 0, 30_000, || {
         std::hint::black_box(batched_mixed_gemm_scalar(&ab, &bb));
     });
     println!("{}", scalar.report());
-    let fast = bench_config("gemm/batched_1024x16_engine", 50, 300, 10_000, || {
+    let fast = bench_config("gemm/batched_engine", 50, 300, 10_000, || {
         std::hint::black_box(batched_mixed_gemm(&ab, &bb));
     });
     println!("{}", fast.report());
-    comparisons.push(Comparison { name: "batched_1024x16", scalar, engine: fast });
+    comparisons.push(Comparison { name: batch_name, scalar, engine: fast });
 
-    // -- hgemm 256^2: per-call repacking vs pre-packed operand reuse
-    let a = uniform_matrix(&mut rng, 256, 256, -1.0, 1.0);
-    let b = uniform_matrix(&mut rng, 256, 256, -1.0, 1.0);
-    let scalar = bench_config("gemm/hgemm_256_scalar", 3, 0, 30_000, || {
+    // -- hgemm: per-call repacking vs pre-packed operand reuse
+    let nh = if smoke { 96 } else { 256 };
+    let hg_name: &'static str = if smoke { "hgemm_96_prepacked" } else { "hgemm_256_prepacked" };
+    let a = uniform_matrix(&mut rng, nh, nh, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, nh, nh, -1.0, 1.0);
+    let scalar = bench_config("gemm/hgemm_scalar", 3, 0, 30_000, || {
         std::hint::black_box(hgemm_scalar(&a, &b));
     });
     println!("{}", scalar.report());
     let pa = PackedHalfA::pack(&a);
     let pb = PackedHalfB::pack(&b);
-    let fast = bench_config("gemm/hgemm_256_prepacked_engine", 20, 300, 10_000, || {
+    let fast = bench_config("gemm/hgemm_prepacked_engine", 20, 300, 10_000, || {
         std::hint::black_box(engine::hgemm_packed(&pa, &pb, 0));
     });
     println!("{}", fast.report());
-    comparisons.push(Comparison { name: "hgemm_256_prepacked", scalar, engine: fast });
+    comparisons.push(Comparison { name: hg_name, scalar, engine: fast });
+
+    // -- persistent vs scoped pool: repeated small (<= 128^3) GEMMs,
+    //    where per-call thread spawns dominate the scoped path
+    let np = if smoke { 64 } else { 96 };
+    let a = uniform_matrix(&mut rng, np, np, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, np, np, -1.0, 1.0);
+    // explicit worker count: the latency comparison must not collapse to
+    // the serial path via the auto cutoff
+    let t = engine::default_threads().clamp(2, 8);
+    engine::set_pool_mode(PoolMode::Scoped);
+    let scoped = bench_config("pool/small_repeated_scoped", 200, 100, 5_000, || {
+        std::hint::black_box(engine::mixed_gemm(&a, &b, None, 1.0, 0.0, t));
+    });
+    println!("{}", scoped.report());
+    engine::set_pool_mode(PoolMode::Persistent);
+    let persistent = bench_config("pool/small_repeated_persistent", 200, 100, 5_000, || {
+        std::hint::black_box(engine::mixed_gemm(&a, &b, None, 1.0, 0.0, t));
+    });
+    println!("{}", persistent.report());
+    engine::set_pool_mode(initial_mode);
+    let pool_cmp = PoolComparison { name: format!("mixed_{np}^3_t{t}"), scoped, persistent };
 
     println!();
     for c in &comparisons {
-        println!("speedup {:<24} {:>7.2}x  (engine threads: {})", c.name, c.speedup(),
-                 engine::default_threads());
+        println!(
+            "speedup {:<24} {:>7.2}x  (engine threads: {})",
+            c.name,
+            c.speedup(),
+            engine::default_threads()
+        );
     }
-    println!("target (ISSUE 1): >= 4x on mixed_512 and batched_1024x16 vs the scalar seed kernels");
+    println!(
+        "speedup {:<24} {:>7.2}x  (persistent pool vs scoped spawns)",
+        pool_cmp.name,
+        pool_cmp.speedup()
+    );
+    println!(
+        "targets (ISSUE 2): >= 4x on mixed_512 and batched_1024x16 vs the scalar seed \
+         kernels; persistent > scoped on repeated small GEMMs"
+    );
 
-    write_baseline(&comparisons);
+    write_baseline(&comparisons, &pool_cmp, initial_mode, smoke);
 
     // -- L3 serving components: need the AOT artifacts
     match Manifest::discover() {
@@ -98,10 +171,21 @@ fn main() {
     }
 }
 
-fn write_baseline(comparisons: &[Comparison]) {
-    // default to the committed repo-root baseline, not the bench CWD
+fn write_baseline(
+    comparisons: &[Comparison],
+    pool_cmp: &PoolComparison,
+    mode_ran: PoolMode,
+    smoke: bool,
+) {
+    // default to the repo root, not the bench CWD; smoke runs get their
+    // own file so they can never clobber the committed full-shape
+    // baseline with non-comparable reduced-shape numbers
     let path = std::env::var("BENCH_OUT").unwrap_or_else(|_| {
-        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json").to_string()
+        if smoke {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.smoke.json").to_string()
+        } else {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json").to_string()
+        }
     });
     let mut rows = Vec::new();
     for c in comparisons {
@@ -113,10 +197,26 @@ fn write_baseline(comparisons: &[Comparison]) {
             c.speedup()
         ));
     }
+    let (mr, nr, kc, mc) = engine::blocking_params();
     let json = format!(
-        "{{\n  \"bench\": \"hotpath\",\n  \"threads\": {},\n  \"results\": [\n{}\n  ]\n}}\n",
-        engine::default_threads(),
-        rows.join(",\n")
+        "{{\n  \"bench\": \"hotpath\",\n  \"mode\": \"{mode}\",\n  \"threads\": {threads},\n  \
+         \"pool\": \"{pool}\",\n  \
+         \"blocking\": {{\"mr\": {mr}, \"nr\": {nr}, \"kc\": {kc}, \"mc\": {mc}}},\n  \
+         \"simd\": {simd},\n  \"results\": [\n{rows}\n  ],\n  \
+         \"pool_comparison\": {{\"name\": \"{pname}\", \"scoped_ms\": {sms:.3}, \
+         \"persistent_ms\": {pms:.3}, \"speedup\": {pspeed:.2}}}\n}}\n",
+        mode = if smoke { "smoke" } else { "full" },
+        threads = engine::default_threads(),
+        pool = match mode_ran {
+            PoolMode::Persistent => "persistent",
+            PoolMode::Scoped => "scoped",
+        },
+        simd = cfg!(feature = "simd"),
+        rows = rows.join(",\n"),
+        pname = pool_cmp.name,
+        sms = pool_cmp.scoped.mean().as_secs_f64() * 1e3,
+        pms = pool_cmp.persistent.mean().as_secs_f64() * 1e3,
+        pspeed = pool_cmp.speedup(),
     );
     match std::fs::write(&path, &json) {
         Ok(()) => println!("baseline written to {path}"),
@@ -154,6 +254,21 @@ fn l3_benches(manifest: Manifest, rng: &mut Rng) {
     });
     println!("{}  ({:.0} req/s through the batcher)", r.report(),
              1024.0 / r.mean().as_secs_f64());
+
+    // -- batcher: bucketed flush of heterogeneous square shapes (the
+    //    engine lane pays zero padding work)
+    let r = bench("l3/batcher_flush_buckets_3x256", 100, || {
+        let mut b = Batcher::new(
+            16,
+            BatcherConfig { max_batch: 1024, max_wait: Duration::from_secs(1) },
+        );
+        for i in 0..768u64 {
+            let n = [8usize, 16, 32][(i % 3) as usize];
+            b.push(GemmRequest::new(i, Matrix::eye(n), Matrix::eye(n)));
+        }
+        std::hint::black_box(b.flush_buckets());
+    });
+    println!("{}  ({:.0} req/s bucketed)", r.report(), 768.0 / r.mean().as_secs_f64());
 
     // -- tensor conversion: Matrix -> TensorData -> literal-ready bytes
     let ms: Vec<Matrix> = (0..256).map(|_| uniform_matrix(rng, 16, 16, -1.0, 1.0)).collect();

@@ -1,12 +1,24 @@
 //! Dynamic batcher for tile-sized GEMM requests (the serving-side
 //! equivalent of the paper's hand-written batched WMMA kernel, §IV-B).
 //!
-//! Requests accumulate in a queue; a flush happens when the queue
+//! Requests accumulate in one FIFO queue; a flush happens when the queue
 //! reaches the largest batched artifact's capacity or the oldest request
-//! has waited `max_wait`.  Flushed batches are padded with zero matrices
-//! up to the smallest artifact batch >= the queue length (zeros are
-//! numerically inert and keep the artifact set small: fixed shapes are
-//! the price of AOT compilation).
+//! has waited `max_wait`.  Two flush flavours serve the two execution
+//! lanes:
+//!
+//! * [`Batcher::flush`] — the **artifact lane**: drains the bucket of the
+//!   oldest request's shape and pads it with zero matrices up to the
+//!   smallest artifact batch >= the bucket length (zeros are numerically
+//!   inert; fixed shapes are the price of AOT compilation).
+//! * [`Batcher::flush_buckets`] — the **engine lane**: drains the whole
+//!   queue grouped by shape into un-padded [`ShapeBucket`]s.  The host
+//!   engine's batched paths ([`crate::gemm::batched_mixed_gemm`]) accept
+//!   heterogeneous per-entry shapes, so no padding work is ever computed
+//!   there — the ROADMAP "shape-bucketing" item.
+//!
+//! The batcher accepts any *square* request; `tile` names the primary
+//! edge the artifact lane was compiled for (the router only routes that
+//! edge to the batcher today, other edges ride the engine lane).
 
 use std::time::{Duration, Instant};
 
@@ -33,6 +45,8 @@ impl Default for BatcherConfig {
 /// One queued entry.
 struct Pending {
     id: RequestId,
+    /// Square edge of the request (the bucket key).
+    n: usize,
     a: Matrix,
     b: Matrix,
     enqueued: Instant,
@@ -40,6 +54,9 @@ struct Pending {
 
 /// A flushed batch ready for the batched artifact.
 pub struct FlushedBatch {
+    /// Square edge of every entry in this batch — the artifact lane must
+    /// verify it matches the tile shape its artifacts were compiled for.
+    pub n: usize,
     /// Request ids in batch order (the first `ids.len()` entries of the
     /// padded batch are real).
     pub ids: Vec<RequestId>,
@@ -61,6 +78,39 @@ impl FlushedBatch {
     }
 }
 
+/// One same-shape group of a bucketed flush: un-padded, FIFO within the
+/// bucket — ready for the heterogeneous batched engine, which computes
+/// exactly the entries it is given.
+pub struct ShapeBucket {
+    /// Square edge shared by every entry in this bucket.
+    pub n: usize,
+    pub ids: Vec<RequestId>,
+    pub enqueued: Vec<Instant>,
+    pub a: Vec<Matrix>,
+    pub b: Vec<Matrix>,
+}
+
+impl ShapeBucket {
+    fn empty(n: usize) -> ShapeBucket {
+        ShapeBucket { n, ids: Vec::new(), enqueued: Vec::new(), a: Vec::new(), b: Vec::new() }
+    }
+
+    fn push(&mut self, p: Pending) {
+        self.ids.push(p.id);
+        self.enqueued.push(p.enqueued);
+        self.a.push(p.a);
+        self.b.push(p.b);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+}
+
 /// The dynamic batcher.
 pub struct Batcher {
     cfg: BatcherConfig,
@@ -77,16 +127,16 @@ impl Batcher {
         self.queue.len()
     }
 
-    /// Tile edge this batcher groups.
+    /// Primary tile edge (the artifact lane's compiled shape).
     pub fn tile(&self) -> usize {
         self.tile
     }
 
-    /// Enqueue a tile-sized request.  Panics if the shape is wrong (the
-    /// router guarantees it).
+    /// Enqueue a square request of any edge.  Panics on non-square
+    /// shapes (the router only batches square requests).
     pub fn push(&mut self, req: GemmRequest) {
-        assert_eq!(req.square_n(), Some(self.tile), "batcher got a non-tile request");
-        self.queue.push(Pending { id: req.id, a: req.a, b: req.b, enqueued: Instant::now() });
+        let n = req.square_n().expect("batcher requires square requests");
+        self.queue.push(Pending { id: req.id, n, a: req.a, b: req.b, enqueued: Instant::now() });
     }
 
     /// Should the queue flush now?
@@ -104,39 +154,70 @@ impl Batcher {
         Some(self.cfg.max_wait.saturating_sub(now.duration_since(oldest)))
     }
 
-    /// Flush up to `max_batch` requests, padding to `pad_to(len)` (the
-    /// caller maps the real length to an artifact capacity).
+    /// Drain up to `max_batch` entries of `n`'s shape bucket, preserving
+    /// FIFO order within the bucket; other shapes stay queued.
+    fn drain_bucket(&mut self, n: usize) -> ShapeBucket {
+        let cap = self.cfg.max_batch;
+        let mut bucket = ShapeBucket::empty(n);
+        let mut kept = Vec::with_capacity(self.queue.len());
+        for p in self.queue.drain(..) {
+            if p.n == n && bucket.len() < cap {
+                bucket.push(p);
+            } else {
+                kept.push(p);
+            }
+        }
+        self.queue = kept;
+        bucket
+    }
+
+    /// Artifact-lane flush: drain the oldest request's shape bucket (up
+    /// to `max_batch` entries), padding to `pad_to(len)` with zero
+    /// matrices (the caller maps the real length to an artifact
+    /// capacity).  Other shape buckets stay queued for their own flush.
     pub fn flush(&mut self, pad_to: impl Fn(usize) -> usize) -> Option<FlushedBatch> {
-        if self.queue.is_empty() {
-            return None;
-        }
-        let take = self.queue.len().min(self.cfg.max_batch);
-        let drained: Vec<Pending> = self.queue.drain(..take).collect();
-        let padded = pad_to(drained.len()).max(drained.len());
-        let mut ids = Vec::with_capacity(drained.len());
-        let mut enqueued = Vec::with_capacity(drained.len());
-        let mut a = Vec::with_capacity(padded);
-        let mut b = Vec::with_capacity(padded);
-        for p in drained {
-            ids.push(p.id);
-            enqueued.push(p.enqueued);
-            a.push(p.a);
-            b.push(p.b);
-        }
+        let n = self.queue.first()?.n;
+        let bucket = self.drain_bucket(n);
+        let padded = pad_to(bucket.len()).max(bucket.len());
+        let ShapeBucket { n, ids, enqueued, mut a, mut b } = bucket;
         while a.len() < padded {
-            a.push(Matrix::zeros(self.tile, self.tile));
-            b.push(Matrix::zeros(self.tile, self.tile));
+            a.push(Matrix::zeros(n, n));
+            b.push(Matrix::zeros(n, n));
         }
-        Some(FlushedBatch { ids, enqueued, a, b })
+        Some(FlushedBatch { n, ids, enqueued, a, b })
+    }
+
+    /// Engine-lane flush: drain the *whole* queue into per-shape buckets
+    /// (bucket order = first-seen order, FIFO within each bucket), with
+    /// no padding — the batched engine runs each bucket exactly as-is.
+    pub fn flush_buckets(&mut self) -> Vec<ShapeBucket> {
+        let mut buckets: Vec<ShapeBucket> = Vec::new();
+        for p in self.queue.drain(..) {
+            let idx = match buckets.iter().position(|bk| bk.n == p.n) {
+                Some(i) => i,
+                None => {
+                    buckets.push(ShapeBucket::empty(p.n));
+                    buckets.len() - 1
+                }
+            };
+            buckets[idx].push(p);
+        }
+        buckets
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gemm::{batched_mixed_gemm, mixed_gemm};
+    use crate::workload::{uniform_matrix, Rng};
 
     fn req(id: RequestId) -> GemmRequest {
         GemmRequest::new(id, Matrix::eye(16), Matrix::eye(16))
+    }
+
+    fn req_n(id: RequestId, n: usize) -> GemmRequest {
+        GemmRequest::new(id, Matrix::eye(n), Matrix::eye(n))
     }
 
     fn batcher(max_batch: usize, max_wait_ms: u64) -> Batcher {
@@ -198,9 +279,73 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "non-tile")]
-    fn rejects_wrong_tile() {
+    #[should_panic(expected = "square")]
+    fn rejects_non_square() {
         let mut b = batcher(4, 1);
-        b.push(GemmRequest::new(0, Matrix::zeros(8, 8), Matrix::zeros(8, 8)));
+        b.push(GemmRequest::new(0, Matrix::zeros(8, 4), Matrix::zeros(4, 8)));
+    }
+
+    #[test]
+    fn mixed_shapes_flush_oldest_bucket_first() {
+        let mut b = batcher(100, 0);
+        b.push(req_n(0, 16));
+        b.push(req_n(1, 32));
+        b.push(req_n(2, 16));
+        b.push(req_n(3, 32));
+        b.push(req_n(4, 16));
+        // artifact-lane flush takes the oldest request's bucket (16s)...
+        let f = b.flush(|n| n).unwrap();
+        assert_eq!(f.ids, vec![0, 2, 4]);
+        assert_eq!(f.n, 16);
+        assert_eq!(f.a[0].shape(), (16, 16));
+        // ...and leaves the 32s queued, now the oldest bucket
+        assert_eq!(b.queue_len(), 2);
+        let f = b.flush(|n| n).unwrap();
+        assert_eq!(f.ids, vec![1, 3]);
+        assert_eq!(f.n, 32);
+        assert_eq!(f.a[0].shape(), (32, 32));
+        assert_eq!(b.queue_len(), 0);
+    }
+
+    #[test]
+    fn bucketed_flush_groups_by_shape_unpadded() {
+        let mut b = batcher(100, 0);
+        for (i, n) in [16usize, 8, 16, 32, 8, 16].iter().enumerate() {
+            b.push(req_n(i as RequestId, *n));
+        }
+        let buckets = b.flush_buckets();
+        assert_eq!(b.queue_len(), 0);
+        // first-seen bucket order, FIFO within each bucket, no padding
+        assert_eq!(buckets.len(), 3);
+        assert_eq!(buckets[0].n, 16);
+        assert_eq!(buckets[0].ids, vec![0, 2, 5]);
+        assert_eq!(buckets[1].n, 8);
+        assert_eq!(buckets[1].ids, vec![1, 4]);
+        assert_eq!(buckets[2].n, 32);
+        assert_eq!(buckets[2].ids, vec![3]);
+        assert!(buckets.iter().all(|bk| bk.a.len() == bk.len() && !bk.is_empty()));
+    }
+
+    #[test]
+    fn bucket_runs_unpadded_on_the_batched_engine() {
+        // the point of bucketing: a bucket feeds the heterogeneous
+        // batched engine directly and matches per-request singles
+        let mut rng = Rng::new(9);
+        let mut b = batcher(100, 0);
+        for i in 0..4u64 {
+            let n = if i % 2 == 0 { 8 } else { 24 };
+            b.push(GemmRequest::new(
+                i,
+                uniform_matrix(&mut rng, n, n, -1.0, 1.0),
+                uniform_matrix(&mut rng, n, n, -1.0, 1.0),
+            ));
+        }
+        for bucket in b.flush_buckets() {
+            let got = batched_mixed_gemm(&bucket.a, &bucket.b);
+            for (i, g) in got.iter().enumerate() {
+                let want = mixed_gemm(&bucket.a[i], &bucket.b[i], None, 1.0, 0.0);
+                assert_eq!(g, &want, "bucket n={} entry {i}", bucket.n);
+            }
+        }
     }
 }

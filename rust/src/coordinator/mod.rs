@@ -27,7 +27,7 @@ pub mod request;
 pub mod router;
 pub mod service;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{Batcher, BatcherConfig, FlushedBatch, ShapeBucket};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use policy::{PolicyConfig, PrecisionPolicy};
 pub use request::{GemmRequest, GemmResponse, RequestId};

@@ -8,8 +8,12 @@
 //!   execution at the mode the policy picked;
 //! * everything else -> CPU fallback through the cuBLAS-style interface,
 //!   which executes on the packed multithreaded engine
-//!   ([`crate::gemm::engine`]) — correct and host-speed, counted by
-//!   metrics (a real deployment would still AOT more shapes).
+//!   ([`crate::gemm::engine`]) — correct and host-speed (the engine's
+//!   persistent pool amortizes worker startup across the fallback
+//!   stream), counted by metrics (a real deployment would still AOT
+//!   more shapes).  Square non-tile requests that end up here are also
+//!   the candidates for the batcher's un-padded shape buckets
+//!   ([`crate::coordinator::batcher::Batcher::flush_buckets`]).
 
 use crate::precision::RefineMode;
 use crate::runtime::Manifest;

@@ -332,6 +332,9 @@ fn flush_batch(
             .unwrap_or(len)
     };
     let Some(flushed) = batcher.flush(pad_to) else { return };
+    // the artifact lane is compiled for `tile`-edge entries only; the
+    // router guarantees it, this catches any future caller that doesn't
+    assert_eq!(flushed.n, tile, "artifact lane flushed a non-tile bucket");
     metrics.on_flush(flushed.real_len(), flushed.padded_len());
 
     let Some(meta) = manifest.batched_at_least(flushed.padded_len(), tile) else {

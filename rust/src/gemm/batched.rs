@@ -2,10 +2,12 @@
 //! products, the Nek5000 / FMM-FFT workload shape.
 //!
 //! All three precisions dispatch to the engine's batched paths, which
-//! distribute entries over the worker pool (each entry computed serially
-//! by its owner, so batched results equal a loop of singles bit for bit).
-//! The serial map-over-singles originals are kept as `*_scalar` oracles
-//! for the equivalence tests and throughput baselines.
+//! distribute entries over the persistent worker pool (each entry
+//! computed serially by its owner, so batched results equal a loop of
+//! singles bit for bit; per-entry shapes may be heterogeneous — the
+//! coordinator batcher's shape buckets exploit exactly that).  The serial
+//! map-over-singles originals are kept as `*_scalar` oracles for the
+//! equivalence tests and throughput baselines.
 
 use super::{engine, mixed::mixed_gemm_scalar, naive::sgemm_naive, Matrix};
 

@@ -5,10 +5,12 @@
 //! accumulation order from `sgemm_naive`; the engine's microkernel keeps
 //! the naive kernel's exact k-ascending chain per output element, so the
 //! result is now bitwise equal to [`super::sgemm_naive`] while being far
-//! faster (packed panels + register blocking + worker pool).  This is the
-//! kernel the host-side hot paths use when a matrix product must be
-//! computed outside PJRT (e.g. the coordinator's fallback path and the
-//! workload generators' verification).
+//! faster (packed panels + 8x8 register blocking + `kc`/`mc` cache
+//! blocking + the persistent worker pool).  This is the kernel the
+//! host-side hot paths use when a matrix product must be computed outside
+//! PJRT (e.g. the coordinator's fallback path and the workload
+//! generators' verification); repeated calls land on warm, parked
+//! workers rather than paying per-call thread spawns.
 
 use super::{engine, Matrix};
 

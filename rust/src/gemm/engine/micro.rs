@@ -9,9 +9,18 @@
 //! ([`crate::tcemu::mma4x4_f32acc`]).  Rust never contracts `mul` + `add`
 //! into an FMA, so the engine's bits equal the oracles' bits; blocking
 //! and vectorization only reorder *independent* accumulators.
+//!
+//! The block is 8x8: with `NR = 8` each accumulator row is exactly one
+//! f32x8 lane, and the whole block (8 lanes) plus one broadcast register
+//! and one B vector fit the 16 vector registers of x86-64/AVX.  The
+//! `simd` cargo feature enables an explicit AVX kernel
+//! ([`microkernel_avx`], runtime-detected, scalar fallback elsewhere)
+//! whose per-lane mul-then-add performs the identical IEEE operations in
+//! the identical order — bitwise equal to the scalar kernel, asserted in
+//! the tests below and against the oracles in `tests/engine.rs`.
 
 /// Microkernel rows: one A panel holds `MR` interleaved matrix rows.
-pub(crate) const MR: usize = 4;
+pub(crate) const MR: usize = 8;
 /// Microkernel cols: one B panel holds `NR` interleaved matrix columns.
 pub(crate) const NR: usize = 8;
 
@@ -27,15 +36,79 @@ pub(crate) fn div_up(a: usize, b: usize) -> usize {
 /// `apanel` is `k * MR` elements (k-major, MR consecutive row entries per
 /// k); `bpanel` is `k * NR` (k-major, NR consecutive column entries per
 /// k).  The `MR x NR` accumulator block stays in registers across the
-/// whole k loop.
+/// whole k extent it is given (one `kc` block under cache blocking).
 #[inline]
 pub(crate) fn microkernel(apanel: &[f32], bpanel: &[f32], acc: &mut [f32; MR * NR]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx_available() {
+            // SAFETY: guarded by runtime AVX detection.
+            unsafe { microkernel_avx(apanel, bpanel, acc) };
+            return;
+        }
+    }
+    microkernel_scalar(apanel, bpanel, acc);
+}
+
+/// The portable kernel: plain mul-then-add over independent accumulators
+/// (the compiler is free to vectorize the NR loop — lanes are
+/// independent — but never to reorder any single element's chain).
+#[inline]
+fn microkernel_scalar(apanel: &[f32], bpanel: &[f32], acc: &mut [f32; MR * NR]) {
     for (ar, br) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
         for (accrow, &av) in acc.chunks_exact_mut(NR).zip(ar) {
             for (o, &bv) in accrow.iter_mut().zip(br) {
                 *o += av * bv;
             }
         }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+const _: () = assert!(NR == 8, "the AVX kernel maps one f32x8 lane per accumulator row");
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub(crate) fn avx_available() -> bool {
+    use std::sync::OnceLock;
+    static AVX: OnceLock<bool> = OnceLock::new();
+    *AVX.get_or_init(|| std::arch::is_x86_feature_detected!("avx"))
+}
+
+/// Explicit f32x8 kernel: one 256-bit lane per accumulator row, one
+/// broadcast A element per row per k step.  Uses separate
+/// `_mm256_mul_ps` + `_mm256_add_ps` (never FMA): each lane performs the
+/// same two IEEE roundings as the scalar kernel, in the same k order, so
+/// the result is bitwise identical.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx")]
+unsafe fn microkernel_avx(apanel: &[f32], bpanel: &[f32], acc: &mut [f32; MR * NR]) {
+    use std::arch::x86_64::{
+        __m256, _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps,
+        _mm256_storeu_ps,
+    };
+    let k = apanel.len() / MR;
+    // real asserts (not debug_): the loop below reads k*NR elements of
+    // bpanel through raw pointers, where the scalar kernel's zip would
+    // merely truncate — a mismatched panel pair must fail loudly, not
+    // read out of bounds in release builds
+    assert_eq!(apanel.len(), k * MR, "A panel not MR-aligned");
+    assert_eq!(bpanel.len(), k * NR, "panel k extents differ");
+    let mut accv: [__m256; MR] = [_mm256_setzero_ps(); MR];
+    for (r, v) in accv.iter_mut().enumerate() {
+        *v = _mm256_loadu_ps(acc.as_ptr().add(r * NR));
+    }
+    let ap = apanel.as_ptr();
+    let bp = bpanel.as_ptr();
+    for p in 0..k {
+        let bv = _mm256_loadu_ps(bp.add(p * NR));
+        let arow = ap.add(p * MR);
+        for (r, v) in accv.iter_mut().enumerate() {
+            let av = _mm256_set1_ps(*arow.add(r));
+            *v = _mm256_add_ps(*v, _mm256_mul_ps(av, bv));
+        }
+    }
+    for (r, v) in accv.iter().enumerate() {
+        _mm256_storeu_ps(acc.as_mut_ptr().add(r * NR), *v);
     }
 }
 
@@ -46,7 +119,7 @@ mod tests {
     #[test]
     fn rank_one_step() {
         // k = 1: acc[r][c] = a[r] * b[c]
-        let a = [1.0, 2.0, 3.0, 4.0];
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
         let b = [1.0, 10.0, 100.0, 1000.0, 1.0, 1.0, 1.0, 1.0];
         let mut acc = [0f32; MR * NR];
         microkernel(&a, &b, &mut acc);
@@ -54,13 +127,10 @@ mod tests {
         assert_eq!(acc[1], 10.0);
         assert_eq!(acc[NR], 2.0);
         assert_eq!(acc[3 * NR + 3], 4000.0);
+        assert_eq!(acc[7 * NR], 8.0);
     }
 
-    #[test]
-    fn k_ascending_chain_matches_scalar_loop() {
-        // random-ish values: the microkernel chain must equal a plain
-        // scalar k-loop bit for bit
-        let k = 37;
+    fn xorshift_panels(k: usize) -> (Vec<f32>, Vec<f32>) {
         let mut s = 0x9e3779b97f4a7c15u64;
         let mut nextf = || {
             s ^= s << 13;
@@ -70,6 +140,15 @@ mod tests {
         };
         let ap: Vec<f32> = (0..k * MR).map(|_| nextf()).collect();
         let bp: Vec<f32> = (0..k * NR).map(|_| nextf()).collect();
+        (ap, bp)
+    }
+
+    #[test]
+    fn k_ascending_chain_matches_scalar_loop() {
+        // random-ish values: the microkernel chain must equal a plain
+        // scalar k-loop bit for bit
+        let k = 37;
+        let (ap, bp) = xorshift_panels(k);
         let mut acc = [0f32; MR * NR];
         microkernel(&ap, &bp, &mut acc);
         for r in 0..MR {
@@ -88,5 +167,27 @@ mod tests {
         let mut acc = [3.5f32; MR * NR];
         microkernel(&[], &[], &mut acc);
         assert!(acc.iter().all(|&v| v == 3.5));
+    }
+
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    #[test]
+    fn avx_bitwise_equals_scalar_including_preloaded_acc() {
+        if !avx_available() {
+            return;
+        }
+        let k = 53;
+        let (ap, bp) = xorshift_panels(k);
+        // nonzero starting accumulator: the kc-blocked reload path
+        let mut scalar = [0f32; MR * NR];
+        for (i, v) in scalar.iter_mut().enumerate() {
+            *v = (i as f32) * 0.375 - 10.0;
+        }
+        let mut vector = scalar;
+        microkernel_scalar(&ap, &bp, &mut scalar);
+        // SAFETY: avx_available() checked above.
+        unsafe { microkernel_avx(&ap, &bp, &mut vector) };
+        for (i, (s, v)) in scalar.iter().zip(&vector).enumerate() {
+            assert_eq!(s.to_bits(), v.to_bits(), "element {i}");
+        }
     }
 }

@@ -6,13 +6,25 @@
 //! * [`pack`] — operands copied once into panel order (A row-panels, B
 //!   column-panels), with the f16 input rounding of the Tensor Core
 //!   contract applied at pack time; packed operands are reusable.
-//! * [`micro`] — an `MR x NR` register-blocked f32 microkernel whose
-//!   per-element accumulation chain is exactly the scalar oracles'
-//!   ascending-k chain.
-//! * [`pool`] — a deterministic `std::thread` fork-join pool: row panels
-//!   within one GEMM, entries within a batched GEMM.  Each output tile is
-//!   owned by exactly one worker, so results are bitwise identical across
-//!   worker counts.
+//! * [`micro`] — an `MR x NR` (8x8) register-blocked f32 microkernel
+//!   whose per-element accumulation chain is exactly the scalar oracles'
+//!   ascending-k chain; the `simd` cargo feature swaps in an explicit
+//!   f32x8 AVX kernel with identical bits.
+//! * [`pool`] — a deterministic worker pool: row panels within one GEMM,
+//!   entries within a batched GEMM.  Each output tile is owned by exactly
+//!   one worker, so results are bitwise identical across worker counts
+//!   AND across pool modes (the default persistent pool parks and reuses
+//!   workers between calls; `TENSOREMU_POOL=scoped` restores per-call
+//!   `std::thread::scope` spawns).
+//!
+//! On top of the register block, [`gemm_packed`] runs a BLIS-style cache
+//! hierarchy blocking: the k extent is walked in [`KC`]-deep blocks and
+//! each worker's row range in [`MC`]-row blocks, so a `KC x NR` B block
+//! stays L1-resident and an `MC x KC` A block L2-resident even on
+//! >= 2048^3 shapes.  Accumulators live in a C-resident f32 tile carried
+//! across `kc` blocks (raw partial sums are spilled to and reloaded from
+//! the output buffer, which is bit-exact), so every output element still
+//! sees one ascending-k f32 chain and blocking cannot move a single bit.
 //!
 //! Numerics contract (verified bit-for-bit against the scalar oracles in
 //! `tests/engine.rs`): inputs optionally rounded to binary16 once,
@@ -29,13 +41,31 @@ mod pack;
 mod pool;
 
 pub use pack::{InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB};
-pub use pool::default_threads;
+pub use pool::{
+    default_threads, idle_workers, parse_pool_mode, parse_threads, pool_mode, set_pool_mode,
+    spawned_workers, PoolMode,
+};
 
 use crate::gemm::Matrix;
 use crate::halfprec::{half_add, half_mul, Half};
 
 use micro::{div_up, microkernel, MR, NR};
 use pool::{parallel_units, resolve_threads};
+
+/// k extent of one cache block: a `KC x NR` B block (~8 KB) stays
+/// L1-resident across a whole `MC` row sweep.
+pub(crate) const KC: usize = 256;
+
+/// Row extent of one cache block (`MC / MR` row panels): an `MC x KC` A
+/// block (~128 KB) stays L2-resident while every B panel streams past it.
+pub(crate) const MC: usize = 128;
+
+/// The engine's blocking geometry as `(MR, NR, KC, MC)` — recorded by the
+/// hot-path bench into `BENCH_hotpath.json` so perf baselines stay
+/// attributable to the parameters that produced them.
+pub fn blocking_params() -> (usize, usize, usize, usize) {
+    (MR, NR, KC, MC)
+}
 
 /// Auto mode stays serial below this many flop-equivalents (m*n*k); a
 /// thread spawn costs tens of microseconds, a 64^3 GEMM a few hundred.
@@ -247,27 +277,64 @@ fn gemm_packed_into(
     let t = resolve_threads(threads, m * n * k, SERIAL_FLOPS);
     let panels = div_up(m, MR);
     let elems_at = |u: usize| (u * MR).min(m) * n;
+    let nb = div_up(n, NR);
+    // k = 0 still needs one (empty) pass so the epilogue runs
+    let kblocks = div_up(k, KC).max(1);
+    let mc_panels = MC / MR;
     let ov = out.as_mut_slice();
     parallel_units(ov, panels, elems_at, t, |p0, p1, chunk| {
+        // BLIS-style loop nest over this worker's row panels: kc blocks
+        // outermost, then mc row blocks, then B panels, then row panels —
+        // the A block of one (kc, mc) pair stays cache-resident while
+        // every B panel streams past it.
         let base = p0 * MR * n;
-        for pi in p0..p1 {
-            let row0 = pi * MR;
-            let vr = MR.min(m - row0);
-            let ap = pa.panel(pi);
-            for pj in 0..div_up(n, NR) {
-                let col0 = pj * NR;
-                let vc = NR.min(n - col0);
-                let mut acc = [0f32; MR * NR];
-                microkernel(ap, pb.panel(pj), &mut acc);
-                // epilogue: identical expression to the scalar oracles
-                for r in 0..vr {
-                    let o0 = row0 * n - base + r * n + col0;
-                    let orow = &mut chunk[o0..o0 + vc];
-                    for (ci, o) in orow.iter_mut().enumerate() {
-                        let cval = cprev.map_or(0.0, |c| c[(row0 + r, col0 + ci)]);
-                        *o = alpha * acc[r * NR + ci] + beta * cval;
+        for kb in 0..kblocks {
+            let k0 = kb * KC;
+            let k1 = (k0 + KC).min(k);
+            let first = kb == 0;
+            let last = kb + 1 == kblocks;
+            let mut ic = p0;
+            while ic < p1 {
+                let ic_end = (ic + mc_panels).min(p1);
+                for pj in 0..nb {
+                    let col0 = pj * NR;
+                    let vc = NR.min(n - col0);
+                    let bblock = pb.panel_block(pj, k0, k1);
+                    for pi in ic..ic_end {
+                        let row0 = pi * MR;
+                        let vr = MR.min(m - row0);
+                        let mut acc = [0f32; MR * NR];
+                        if !first {
+                            // C-resident accumulator tile: reload the raw
+                            // f32 partial sums of the earlier kc blocks
+                            // (an f32 memory round-trip is bit-exact, so
+                            // the chain is unbroken)
+                            for r in 0..vr {
+                                let o0 = row0 * n - base + r * n + col0;
+                                acc[r * NR..r * NR + vc].copy_from_slice(&chunk[o0..o0 + vc]);
+                            }
+                        }
+                        microkernel(pa.panel_block(pi, k0, k1), bblock, &mut acc);
+                        if last {
+                            // epilogue: identical expression to the
+                            // scalar oracles
+                            for r in 0..vr {
+                                let o0 = row0 * n - base + r * n + col0;
+                                let orow = &mut chunk[o0..o0 + vc];
+                                for (ci, o) in orow.iter_mut().enumerate() {
+                                    let cval = cprev.map_or(0.0, |c| c[(row0 + r, col0 + ci)]);
+                                    *o = alpha * acc[r * NR + ci] + beta * cval;
+                                }
+                            }
+                        } else {
+                            for r in 0..vr {
+                                let o0 = row0 * n - base + r * n + col0;
+                                chunk[o0..o0 + vc].copy_from_slice(&acc[r * NR..r * NR + vc]);
+                            }
+                        }
                     }
                 }
+                ic = ic_end;
             }
         }
     });
@@ -282,7 +349,10 @@ mod tests {
     #[test]
     fn mixed_matches_scalar_oracle_bitwise() {
         let mut rng = Rng::new(1);
-        for &(m, k, n) in &[(1, 1, 1), (5, 7, 3), (16, 16, 16), (70, 33, 81)] {
+        // (5, 600, 9) spans three kc blocks, (150, 20, 30) two mc blocks
+        for &(m, k, n) in
+            &[(1, 1, 1), (5, 7, 3), (16, 16, 16), (70, 33, 81), (5, 600, 9), (150, 20, 30)]
+        {
             let a = uniform_matrix(&mut rng, m, k, -1.0, 1.0);
             let b = uniform_matrix(&mut rng, k, n, -1.0, 1.0);
             let want = mixed_gemm_scalar(&a, &b, None, 1.0, 0.0);

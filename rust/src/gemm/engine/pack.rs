@@ -3,6 +3,12 @@
 //! the inner loop streams both inputs contiguously, and any f16 input
 //! rounding is paid once at pack time instead of per GEMM call.
 //!
+//! Because panels are k-major, a `kc` sub-range of a panel is itself a
+//! contiguous slice ([`PackedA::panel_block`] / [`PackedB::panel_block`]):
+//! the cache-blocked loop nest in [`super`] streams `KC x MR` / `KC x NR`
+//! blocks straight out of the same packed buffers, no re-packing per
+//! block.
+//!
 //! The packed types are public: callers that reuse an operand across
 //! several products (the refinement chains in [`crate::precision`], the
 //! repeated-B case of batched refinement, benchmark loops) pack once and
@@ -82,7 +88,14 @@ impl PackedA {
     }
 
     pub(crate) fn panel(&self, pi: usize) -> &[f32] {
-        &self.data[pi * self.k * MR..(pi + 1) * self.k * MR]
+        self.panel_block(pi, 0, self.k)
+    }
+
+    /// k-subrange `[k0, k1)` of panel `pi` — contiguous because panels
+    /// are k-major; the unit the `kc`-blocked loop streams.
+    pub(crate) fn panel_block(&self, pi: usize, k0: usize, k1: usize) -> &[f32] {
+        let base = pi * self.k * MR;
+        &self.data[base + k0 * MR..base + k1 * MR]
     }
 }
 
@@ -135,7 +148,13 @@ impl PackedB {
     }
 
     pub(crate) fn panel(&self, pj: usize) -> &[f32] {
-        &self.data[pj * self.k * NR..(pj + 1) * self.k * NR]
+        self.panel_block(pj, 0, self.k)
+    }
+
+    /// k-subrange `[k0, k1)` of panel `pj` (see [`PackedA::panel_block`]).
+    pub(crate) fn panel_block(&self, pj: usize, k0: usize, k1: usize) -> &[f32] {
+        let base = pj * self.k * NR;
+        &self.data[base + k0 * NR..base + k1 * NR]
     }
 }
 
@@ -223,17 +242,29 @@ mod tests {
 
     #[test]
     fn packed_a_layout() {
-        let a = m(5, 3); // 2 panels of MR=4 rows, second padded
+        let a = m(9, 3); // 2 panels of MR=8 rows, second padded
         let p = PackedA::pack(&a, InputPrecision::Full);
-        assert_eq!(p.shape(), (5, 3));
+        assert_eq!(p.shape(), (9, 3));
         let p0 = p.panel(0);
         // k-major: p0[p*MR + r] == a[r][p]
         assert_eq!(p0[0], a[(0, 0)]);
         assert_eq!(p0[1], a[(1, 0)]);
         assert_eq!(p0[MR], a[(0, 1)]);
         let p1 = p.panel(1);
-        assert_eq!(p1[0], a[(4, 0)]);
+        assert_eq!(p1[0], a[(8, 0)]);
         assert_eq!(p1[1], 0.0); // padded row
+    }
+
+    #[test]
+    fn panel_block_is_k_subrange() {
+        let a = m(6, 7);
+        let p = PackedA::pack(&a, InputPrecision::Full);
+        assert_eq!(p.panel_block(0, 2, 5), &p.panel(0)[2 * MR..5 * MR]);
+        assert_eq!(p.panel_block(0, 0, 7), p.panel(0));
+        assert!(p.panel_block(0, 3, 3).is_empty());
+        let b = m(7, 10);
+        let q = PackedB::pack(&b, InputPrecision::Full);
+        assert_eq!(q.panel_block(1, 1, 4), &q.panel(1)[NR..4 * NR]);
     }
 
     #[test]

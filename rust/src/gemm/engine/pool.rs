@@ -1,14 +1,90 @@
-//! Deterministic fork-join worker pool over `std::thread::scope`.
+//! Deterministic worker pool: a lazily-spawned **persistent** pool (the
+//! default) with the original `std::thread::scope` fork-join kept as a
+//! selectable fallback.
 //!
 //! Parallelism must never change results (the engine's contract, tested in
 //! `tests/engine.rs`): work is partitioned *statically* into contiguous
 //! chunks of whole ownership units — row panels of one GEMM, entries of a
 //! batched GEMM — each written by exactly one worker, and every output
 //! element's accumulation chain is computed sequentially by its owner.
-//! 1 worker and N workers therefore produce identical bits; the worker
-//! count only moves wall-clock time.
+//! The chunk boundaries depend only on `(units, threads)`, never on the
+//! pool mode, so {persistent, scoped} x any worker count all produce
+//! identical bits; mode and count only move wall-clock time.
+//!
+//! ## Pool lifecycle
+//!
+//! The persistent pool is process-global and grows on demand: a parallel
+//! call pops parked workers from the idle list (spawning new ones only
+//! when the list runs dry), hands each a lifetime-erased job, runs the
+//! last chunk on the calling thread, and blocks on a latch until every
+//! job has finished.  Workers park in a channel `recv` between jobs and
+//! are reused for the process lifetime — repeated small GEMMs pay no
+//! per-call thread spawns, which is the whole point (a spawn costs tens
+//! of microseconds, a 64^3 GEMM a few hundred).  Mode selection:
+//! `TENSOREMU_POOL=scoped|persistent` (default persistent), overridable
+//! at runtime via [`set_pool_mode`] (used by benches to compare modes in
+//! one process).
 
-use std::sync::OnceLock;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Which execution substrate [`parallel_units`] uses for multi-worker
+/// jobs.  Numerically inert: both modes run the identical static
+/// partition, so results are bitwise equal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolMode {
+    /// Process-global pool of parked, reused workers (the default).
+    Persistent,
+    /// Fresh `std::thread::scope` spawns per call — the pre-persistent
+    /// behaviour, kept selectable (`TENSOREMU_POOL=scoped`) as the
+    /// baseline for latency comparisons and as a bisection aid.
+    Scoped,
+}
+
+const MODE_UNSET: u8 = 0;
+const MODE_PERSISTENT: u8 = 1;
+const MODE_SCOPED: u8 = 2;
+
+static POOL_MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// Parse a `TENSOREMU_POOL` value; anything other than `scoped`
+/// (case-insensitive) means persistent, including unset.
+pub fn parse_pool_mode(s: Option<&str>) -> PoolMode {
+    match s.map(str::trim) {
+        Some(v) if v.eq_ignore_ascii_case("scoped") => PoolMode::Scoped,
+        _ => PoolMode::Persistent,
+    }
+}
+
+/// Parse a `TENSOREMU_THREADS` value: a positive integer, else `None`.
+pub fn parse_threads(s: Option<&str>) -> Option<usize> {
+    s?.trim().parse::<usize>().ok().filter(|&n| n > 0)
+}
+
+/// The active pool mode (initialized from `TENSOREMU_POOL` on first use).
+pub fn pool_mode() -> PoolMode {
+    match POOL_MODE.load(Ordering::Relaxed) {
+        MODE_PERSISTENT => PoolMode::Persistent,
+        MODE_SCOPED => PoolMode::Scoped,
+        _ => {
+            let m = parse_pool_mode(std::env::var("TENSOREMU_POOL").ok().as_deref());
+            set_pool_mode(m);
+            m
+        }
+    }
+}
+
+/// Override the pool mode at runtime (benches flip this to measure the
+/// scoped baseline against the warm persistent pool in one process).
+pub fn set_pool_mode(mode: PoolMode) {
+    let v = match mode {
+        PoolMode::Persistent => MODE_PERSISTENT,
+        PoolMode::Scoped => MODE_SCOPED,
+    };
+    POOL_MODE.store(v, Ordering::Relaxed);
+}
 
 /// Worker count used when a caller passes `threads == 0` (auto): the
 /// `TENSOREMU_THREADS` env var when set, otherwise the machine's available
@@ -16,28 +92,149 @@ use std::sync::OnceLock;
 pub fn default_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
-        std::env::var("TENSOREMU_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .filter(|&n| n > 0)
+        parse_threads(std::env::var("TENSOREMU_THREADS").ok().as_deref())
             .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
     })
 }
 
 /// Resolve a caller-supplied worker count: `0` = auto, but only when the
-/// job is big enough to amortize thread spawns (`work` is a flop-ish cost
-/// estimate, `serial_below` the cutoff under which auto stays serial).
-/// Explicit counts are always honoured — the determinism tests rely on it.
+/// job is big enough to amortize the dispatch cost (`work` is a flop-ish
+/// cost estimate, `serial_below` the cutoff under which auto stays
+/// serial).  A warm persistent pool dispatches far cheaper than scoped
+/// spawns, so its auto cutoff sits 4x lower.  Explicit counts are always
+/// honoured — the determinism tests rely on it.
 pub(crate) fn resolve_threads(threads: usize, work: usize, serial_below: usize) -> usize {
+    let cutoff = match pool_mode() {
+        PoolMode::Persistent => serial_below / 4,
+        PoolMode::Scoped => serial_below,
+    };
     match threads {
-        0 if work < serial_below => 1,
+        0 if work < cutoff => 1,
         0 => default_threads(),
         t => t,
     }
 }
 
+// ---------------------------------------------------------------------------
+// The persistent pool.
+
+/// A lifetime-erased job (see the SAFETY discussion in `persistent_run`).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PersistentPool {
+    /// Parked workers, each addressed by its job channel.  A worker is
+    /// popped for the duration of one job and pushes itself back when the
+    /// job returns, so no worker ever holds two jobs at once.
+    idle: Mutex<Vec<Sender<Job>>>,
+}
+
+static WORKERS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+fn pool() -> &'static PersistentPool {
+    static POOL: OnceLock<PersistentPool> = OnceLock::new();
+    POOL.get_or_init(|| PersistentPool { idle: Mutex::new(Vec::new()) })
+}
+
+impl PersistentPool {
+    fn submit(&self, job: Job) {
+        let tx = self.idle.lock().unwrap().pop().unwrap_or_else(spawn_worker);
+        if let Err(std::sync::mpsc::SendError(job)) = tx.send(job) {
+            // the worker died (jobs catch panics, so this is belt and
+            // braces): replace it and re-submit
+            let _ = spawn_worker().send(job);
+        }
+    }
+}
+
+fn spawn_worker() -> Sender<Job> {
+    WORKERS_SPAWNED.fetch_add(1, Ordering::Relaxed);
+    let (tx, rx) = channel::<Job>();
+    let requeue = tx.clone();
+    std::thread::Builder::new()
+        .name("tensoremu-pool".into())
+        .spawn(move || {
+            while let Ok(job) = rx.recv() {
+                job();
+                pool().idle.lock().unwrap().push(requeue.clone());
+            }
+        })
+        .expect("spawning engine pool worker");
+    tx
+}
+
+/// Parked (idle) persistent workers right now — introspection for the
+/// pool-reuse tests and benches.
+pub fn idle_workers() -> usize {
+    pool().idle.lock().unwrap().len()
+}
+
+/// Total persistent workers ever spawned in this process.  Stays flat
+/// across repeated warm-pool calls — the reuse contract.
+pub fn spawned_workers() -> usize {
+    WORKERS_SPAWNED.load(Ordering::Relaxed)
+}
+
+/// Completion latch: jobs count *up* as they finish; the calling thread
+/// waits for however many jobs were actually submitted (which may be
+/// fewer than planned if a spawn/submit panicked mid-loop), and learns
+/// whether any of them panicked.
+struct Latch {
+    completed: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new() -> Latch {
+        Latch { completed: Mutex::new(0), done: Condvar::new(), panicked: AtomicBool::new(false) }
+    }
+
+    fn count_up(&self) {
+        let mut done_count = self.completed.lock().unwrap();
+        *done_count += 1;
+        self.done.notify_all();
+    }
+
+    fn wait_for(&self, n: usize) {
+        let mut done_count = self.completed.lock().unwrap();
+        while *done_count < n {
+            done_count = self.done.wait(done_count).unwrap();
+        }
+    }
+}
+
+/// Joins every *actually submitted* job on drop.  This is what upholds
+/// the [`erase_job`] safety contract on ALL unwind paths: even if a
+/// later `spawn_worker`/`submit` panics mid-loop, the in-flight jobs'
+/// borrows of the caller's stack stay valid until this guard has waited
+/// them out.
+struct JoinGuard<'a> {
+    latch: &'a Latch,
+    submitted: usize,
+}
+
+impl Drop for JoinGuard<'_> {
+    fn drop(&mut self) {
+        self.latch.wait_for(self.submitted);
+    }
+}
+
+/// Erase a job's borrow lifetime so it can ride the `'static` channel.
+///
+/// SAFETY: the caller must not return (or otherwise invalidate the
+/// borrows captured by `job`) until the job has finished executing.
+/// `persistent_run` guarantees this by blocking on its latch — on panic
+/// paths too — before any captured borrow goes out of scope.
+unsafe fn erase_job(job: Box<dyn FnOnce() + Send + '_>) -> Job {
+    Box::from_raw(Box::into_raw(job) as *mut (dyn FnOnce() + Send + 'static))
+}
+
+// ---------------------------------------------------------------------------
+// Partitioned execution.
+
 /// Split `out` into per-worker contiguous chunks of whole units and run
-/// `work(unit_start, unit_end, chunk)` on each chunk in parallel.
+/// `work(unit_start, unit_end, chunk)` on each chunk in parallel, on the
+/// active pool mode's substrate.
 ///
 /// `elems_at(u)` maps a unit boundary `u` (0..=units, monotone) to its
 /// element offset in `out`; `elems_at(units)` must equal `out.len()`.
@@ -60,17 +257,35 @@ pub(crate) fn parallel_units<T, F>(
         work(0, units, out);
         return;
     }
+    match pool_mode() {
+        PoolMode::Scoped => scoped_run(out, units, &elems_at, t, &work),
+        PoolMode::Persistent => persistent_run(out, units, &elems_at, t, &work),
+    }
+}
+
+/// Compute the chunk boundary for worker `w` of `t` — shared by both
+/// substrates so the partition (and therefore the bits) cannot diverge.
+#[inline]
+fn unit_boundary(units: usize, w: usize, t: usize) -> usize {
+    units * w / t
+}
+
+fn scoped_run<T, F, E>(out: &mut [T], units: usize, elems_at: &E, t: usize, work: &F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+    E: Fn(usize) -> usize,
+{
     std::thread::scope(|s| {
         let mut rest: &mut [T] = out;
         let mut u0 = 0usize;
         for w in 1..=t {
-            let u1 = units * w / t;
+            let u1 = unit_boundary(units, w, t);
             let take = elems_at(u1) - elems_at(u0);
             let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
             rest = tail;
             if w < t {
-                let workr = &work;
-                s.spawn(move || workr(u0, u1, chunk));
+                s.spawn(move || work(u0, u1, chunk));
             } else {
                 // the calling thread takes the last chunk instead of
                 // idling at the join barrier: one spawn saved per call
@@ -81,9 +296,71 @@ pub(crate) fn parallel_units<T, F>(
     });
 }
 
+fn persistent_run<T, F, E>(out: &mut [T], units: usize, elems_at: &E, t: usize, work: &F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+    E: Fn(usize) -> usize,
+{
+    let latch = Latch::new();
+    let mut guard = JoinGuard { latch: &latch, submitted: 0 };
+    let mut rest: &mut [T] = out;
+    let mut u0 = 0usize;
+    let mut own: Option<(usize, usize, &mut [T])> = None;
+    for w in 1..=t {
+        let u1 = unit_boundary(units, w, t);
+        let take = elems_at(u1) - elems_at(u0);
+        let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
+        rest = tail;
+        if w < t {
+            let latch_ref = &latch;
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                // a panic must still count up, or the caller deadlocks
+                // while borrows are live; it is re-raised after the join
+                let r = catch_unwind(AssertUnwindSafe(|| work(u0, u1, chunk)));
+                if r.is_err() {
+                    latch_ref.panicked.store(true, Ordering::Relaxed);
+                }
+                latch_ref.count_up();
+            });
+            // SAFETY: `guard` joins every submitted job before this
+            // frame can unwind (Drop) or return, so the borrows of
+            // `work`, `latch` and the output chunk outlive the job
+            // despite the erased lifetime.  `submitted` is bumped only
+            // after `submit` returns: a panic inside `submit` means the
+            // job was dropped unrun, never half-counted.
+            pool().submit(unsafe { erase_job(job) });
+            guard.submitted += 1;
+        } else {
+            own = Some((u0, u1, chunk));
+        }
+        u0 = u1;
+    }
+    let (o0, o1, chunk) = own.expect("t >= 2 leaves the caller a chunk");
+    let caller = catch_unwind(AssertUnwindSafe(|| work(o0, o1, chunk)));
+    drop(guard); // join all submitted jobs
+    if let Err(p) = caller {
+        resume_unwind(p);
+    }
+    if latch.panicked.load(Ordering::Relaxed) {
+        panic!("engine pool worker panicked");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::{Duration, Instant};
+
+    /// Serializes the tests that flip the process-global pool mode: a
+    /// concurrent flip mid-test can't change any bits (the determinism
+    /// contract) but CAN starve a test that asserts on persistent-pool
+    /// bookkeeping (idle/spawned counts).
+    static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+    fn lock_mode() -> std::sync::MutexGuard<'static, ()> {
+        MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
 
     #[test]
     fn default_threads_positive() {
@@ -98,20 +375,44 @@ mod tests {
     }
 
     #[test]
-    fn partition_covers_every_unit_once() {
-        // each unit is 3 elements; workers stamp their unit index
-        let units = 17;
+    fn env_value_parsers() {
+        assert_eq!(parse_threads(Some("8")), Some(8));
+        assert_eq!(parse_threads(Some(" 4 ")), Some(4));
+        assert_eq!(parse_threads(Some("0")), None);
+        assert_eq!(parse_threads(Some("-2")), None);
+        assert_eq!(parse_threads(Some("many")), None);
+        assert_eq!(parse_threads(None), None);
+        assert_eq!(parse_pool_mode(Some("scoped")), PoolMode::Scoped);
+        assert_eq!(parse_pool_mode(Some(" SCOPED ")), PoolMode::Scoped);
+        assert_eq!(parse_pool_mode(Some("persistent")), PoolMode::Persistent);
+        assert_eq!(parse_pool_mode(Some("bogus")), PoolMode::Persistent);
+        assert_eq!(parse_pool_mode(None), PoolMode::Persistent);
+    }
+
+    fn stamp_units(units: usize, threads: usize) -> Vec<usize> {
         let mut out = vec![0usize; units * 3];
-        parallel_units(&mut out, units, |u| u * 3, 4, |u0, u1, chunk| {
+        parallel_units(&mut out, units, |u| u * 3, threads, |u0, u1, chunk| {
             for u in u0..u1 {
                 for e in 0..3 {
                     chunk[(u - u0) * 3 + e] = u + 1;
                 }
             }
         });
-        for (i, v) in out.iter().enumerate() {
-            assert_eq!(*v, i / 3 + 1, "element {i}");
+        out
+    }
+
+    #[test]
+    fn partition_covers_every_unit_once() {
+        let _g = lock_mode();
+        // each unit is 3 elements; workers stamp their unit index
+        for mode in [PoolMode::Persistent, PoolMode::Scoped] {
+            set_pool_mode(mode);
+            let out = stamp_units(17, 4);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i / 3 + 1, "element {i} ({mode:?})");
+            }
         }
+        set_pool_mode(PoolMode::Persistent);
     }
 
     #[test]
@@ -143,5 +444,62 @@ mod tests {
             }
         });
         assert_eq!(out, vec![7, 7]);
+    }
+
+    /// Wait (bounded) for at least `n` workers to park back on the idle
+    /// list: a worker re-registers *after* the latch releases the caller,
+    /// so immediate inspection races with the hand-back.
+    fn await_idle(n: usize) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_secs(5) {
+            if idle_workers() >= n {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        false
+    }
+
+    #[test]
+    fn persistent_workers_are_reused_across_calls() {
+        let _g = lock_mode();
+        set_pool_mode(PoolMode::Persistent);
+        // warm: first call may spawn up to 3 helpers
+        let _ = stamp_units(16, 4);
+        assert!(await_idle(3), "helpers never parked");
+        let s0 = spawned_workers();
+        // 50 warm calls, each needing 3 helpers; waiting for the idle
+        // list first means no call can be forced to spawn.  Other tests
+        // run concurrently in this binary and may legitimately grow the
+        // pool a little, but a reuse bug would add ~150 spawns here.
+        for _ in 0..50 {
+            assert!(await_idle(3), "helpers never parked");
+            let out = stamp_units(16, 4);
+            assert_eq!(out[0], 1);
+        }
+        // generous margin: other unit tests in this binary legitimately
+        // pop/spawn shared pool workers concurrently (MODE_LOCK only
+        // serializes this module's tests); a per-call-spawn regression
+        // would add ~150 spawns from our own 50 calls alone
+        let grown = spawned_workers() - s0;
+        assert!(grown <= 64, "pool must reuse parked workers, spawned {grown} more");
+    }
+
+    #[test]
+    fn worker_panic_propagates_without_deadlock() {
+        let _g = lock_mode();
+        set_pool_mode(PoolMode::Persistent);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut out = vec![0u8; 8];
+            parallel_units(&mut out, 8, |u| u, 4, |u0, _, _| {
+                if u0 == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must surface to the caller");
+        // the pool must still be serviceable afterwards
+        let out = stamp_units(8, 4);
+        assert_eq!(out[out.len() - 1], 8);
     }
 }

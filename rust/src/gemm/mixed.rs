@@ -9,7 +9,9 @@
 //!   precision argument.
 //!
 //! Both dispatch to the packed multithreaded engine
-//! ([`crate::gemm::engine`]); the serial triple-loop originals are kept as
+//! ([`crate::gemm::engine`]: persistent pool, `kc`/`mc` cache blocking,
+//! 8x8 microkernel — optionally explicit f32x8 lanes under the `simd`
+//! feature); the serial triple-loop originals are kept as
 //! [`mixed_gemm_scalar`] / [`hgemm_scalar`] — the *numerical oracles* the
 //! engine is verified against bit for bit (`tests/engine.rs`) and the
 //! baselines the hot-path benches compare throughput against.

@@ -7,7 +7,9 @@
 //! to f16 and accumulates in f32 on "Tensor Cores".  Every dispatch target
 //! is engine-backed ([`crate::gemm::engine`]): this handle is the
 //! coordinator's CPU-fallback path, so its throughput is the fallback
-//! lane's throughput.  Batched GEMM is also
+//! lane's throughput — and because the engine's worker pool is
+//! persistent, a stream of fallback requests reuses parked workers
+//! instead of spawning threads per call.  Batched GEMM is also
 //! provided, including the paper's footnote 1 constraint: at the time of
 //! writing, `gemm_batched` on Tensor Cores was *unsupported* — the
 //! coordinator's batcher is the WMMA workaround, and this API returns an

@@ -10,7 +10,8 @@
 //! | cuBLAS + math mode       | [`cublas`]         | handle + `MathMode`, opaque kernels |
 //!
 //! All three execute on the same packed multithreaded engine
-//! ([`crate::gemm::engine`]), whose per-element chains match the
+//! ([`crate::gemm::engine`] — persistent pool, cache-blocked, 8x8
+//! microkernel), whose per-element chains match the
 //! [`crate::tcemu`] hardware emulation bit for bit — so the three layers
 //! agree exactly; what differs is the API surface, which is exactly the
 //! paper's point.  The simulator ([`crate::sim`]) assigns each its own

@@ -8,15 +8,28 @@
 //!   mixed-precision contract ([`halfprec`], [`gemm`], [`tcemu`]) plus the
 //!   paper's precision-refinement technique ([`precision`]).
 //! * **Kernel engine** — [`gemm::engine`], the packed multithreaded GEMM
-//!   core (pack -> register-blocked microkernel -> deterministic
-//!   `std::thread` worker pool) that executes every precision path:
+//!   core (pack -> cache-blocked `kc`/`mc` loop nest -> 8x8
+//!   register-blocked microkernel -> deterministic **persistent worker
+//!   pool**) that executes every precision path.  The pool spawns lazily
+//!   once and parks its workers between jobs, so repeated calls pay no
+//!   thread-spawn latency (`TENSOREMU_POOL=scoped` restores per-call
+//!   `std::thread::scope` forks; `TENSOREMU_THREADS` pins the auto worker
+//!   count).  Blocking parameters `(MR, NR, KC, MC) = (8, 8, 256, 128)`
+//!   keep a `KC x NR` B block L1-resident and an `MC x KC` A block
+//!   L2-resident on >= 2048^3 shapes, with accumulators carried across
+//!   `kc` blocks in a C-resident f32 tile so every output element keeps
+//!   one ascending-k chain — blocking and the optional explicit f32x8
+//!   microkernel (`--features simd`, runtime AVX detection, never FMA)
+//!   are bitwise invisible.  Paths served:
 //!   `sgemm_blocked` and the cuBLAS default mode (the paper's CUDA-core
 //!   sgemm, §IV), `mixed_gemm` and the WMMA/CUTLASS/cuBLAS TensorOp
 //!   layers (the §III Tensor Core contract), `hgemm` (the CUDA-core half
 //!   baseline of Fig. 6), the `batched_*` family (§IV-B / Fig. 7), the
 //!   `tcemu` warp tile loop, the §V refinement chains, and the
 //!   coordinator's CPU fallback lane.  The serial triple-loop kernels
-//!   survive as `*_scalar` oracles the engine must match bit for bit.
+//!   survive as `*_scalar` oracles the engine must match bit for bit at
+//!   every {pool mode} x {worker count} x {shape} combination
+//!   (`tests/engine.rs`).
 //! * **Programmability** — the paper's three programming interfaces
 //!   re-implemented as Rust API layers over the emulation
 //!   ([`interfaces::wmma`], [`interfaces::cutlass`], [`interfaces::cublas`]).

@@ -9,7 +9,10 @@
 //! to repacking per call, but the pack cost is paid once.  `RefineMode`
 //! is the knob the coordinator's precision policy
 //! ([`crate::coordinator::policy`]) turns: more refinement = lower error
-//! = more GEMMs (1x, 2x, 4x).
+//! = more GEMMs (1x, 2x, 4x).  All partial GEMMs of one refinement run on
+//! the engine's persistent pool — a refinement chain is exactly the
+//! repeated-small-GEMM pattern where reused warm workers beat per-call
+//! scoped spawns (see `benches/hotpath.rs`, pool comparison).
 
 use crate::gemm::engine::{gemm_packed, InputPrecision, PackedA, PackedB};
 use crate::gemm::{mixed_gemm, Matrix};

@@ -6,9 +6,11 @@
 //! path therefore routes through the engine's in-place accumulate core
 //! ([`crate::gemm::engine::gemm_acc_inplace`]) — bitwise identical to
 //! iterating [`super::mma::mma4x4_f32acc`] over the hardware tiles (the
-//! equivalence is asserted in the tests below), but on the packed
-//! microkernel.  The f16-accumulator flavour still iterates the hardware
-//! ops: its per-4-chain rounding is hardware-granular by definition.
+//! equivalence is asserted in the tests below), but on the packed 8x8
+//! microkernel (serial: a 16x16 fragment never reaches the engine's pool
+//! or cache-blocking thresholds).  The f16-accumulator flavour still
+//! iterates the hardware ops: its per-4-chain rounding is
+//! hardware-granular by definition.
 
 use crate::halfprec::f32_to_f16;
 

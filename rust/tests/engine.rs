@@ -1,12 +1,14 @@
 //! Engine-vs-oracle equivalence suite: the packed multithreaded engine
 //! must reproduce the serial scalar kernels **bit for bit** at every
-//! precision mode, for every shape (including degenerate and
-//! non-block-multiple ones), at every worker count.  This is the contract
-//! that lets every consumer — interfaces, tcemu, refinement, coordinator
-//! fallback — ride the fast core without any numerical drift.
+//! precision mode, for every shape (including degenerate,
+//! non-block-multiple, and kc/mc cache-blocked ones), at every worker
+//! count, under both pool modes (warm persistent pool and scoped
+//! spawns).  This is the contract that lets every consumer — interfaces,
+//! tcemu, refinement, coordinator fallback — ride the fast core without
+//! any numerical drift.
 
 use tensoremu::gemm::engine::{
-    self, InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB,
+    self, InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB, PoolMode,
 };
 use tensoremu::gemm::{
     batched_hgemm, batched_hgemm_scalar, batched_mixed_gemm, batched_mixed_gemm_scalar,
@@ -34,6 +36,16 @@ const SHAPES: &[(usize, usize, usize)] = &[
 ];
 
 const THREADS: &[usize] = &[1, 2, 8];
+
+/// Serializes the tests that flip the process-global pool mode, so each
+/// actually exercises the substrate it claims (a concurrent flip can't
+/// change bits — that's the contract — but would silently shrink what
+/// the warm-pool / scoped-equivalence tests cover).
+static MODE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock_mode() -> std::sync::MutexGuard<'static, ()> {
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 fn pair(rng: &mut Rng, m: usize, k: usize, n: usize, scale: f32) -> (Matrix, Matrix) {
     (
@@ -218,6 +230,92 @@ fn prepacked_half_operands_reused() {
         let got = engine::hgemm_packed(&pa, &pb, 2);
         assert_eq!(got, hgemm_scalar(&a, &b), "seed {seed}");
     }
+}
+
+#[test]
+fn kc_blocked_long_k_bitwise_70x33x4096() {
+    // k = 4096 spans 16 kc blocks: the C-resident accumulator tile is
+    // spilled and reloaded 15 times per output element, and the result
+    // must still be the scalar oracle's single ascending-k chain, bit
+    // for bit, at every worker count
+    let mut rng = Rng::new(30);
+    let (a, b) = pair(&mut rng, 70, 4096, 33, 1.0);
+    let want = mixed_gemm_scalar(&a, &b, None, 1.0, 0.0);
+    for &t in THREADS {
+        assert_eq!(engine::mixed_gemm(&a, &b, None, 1.0, 0.0, t), want, "t={t}");
+    }
+}
+
+#[test]
+fn mc_and_kc_blocked_mid_shape_bitwise() {
+    // m spans multiple mc row blocks per worker and k multiple kc
+    // blocks, with ragged edges on every dimension
+    let mut rng = Rng::new(31);
+    let (a, b) = pair(&mut rng, 300, 600, 65, 1.0);
+    let want = sgemm_naive(&a, &b, None, 1.0, 0.0);
+    for &t in &[1usize, 3] {
+        assert_eq!(engine::sgemm(&a, &b, None, 1.0, 0.0, t), want, "t={t}");
+    }
+}
+
+#[test]
+fn warm_persistent_pool_repeated_calls_bitwise_stable() {
+    // repeated, interleaved shapes on an increasingly warm pool: worker
+    // reuse must never perturb a bit at any worker count
+    let _g = lock_mode();
+    engine::set_pool_mode(PoolMode::Persistent);
+    let mut rng = Rng::new(32);
+    let shapes = [(70, 33, 81), (16, 16, 16), (40, 24, 40)];
+    let inputs: Vec<_> = shapes.iter().map(|&(m, k, n)| pair(&mut rng, m, k, n, 1.0)).collect();
+    let want: Vec<_> =
+        inputs.iter().map(|(a, b)| mixed_gemm_scalar(a, b, None, 1.0, 0.0)).collect();
+    for round in 0..3 {
+        for (i, (a, b)) in inputs.iter().enumerate() {
+            for &t in THREADS {
+                assert_eq!(
+                    engine::mixed_gemm(a, b, None, 1.0, 0.0, t),
+                    want[i],
+                    "round={round} shape#{i} t={t}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn scoped_and_persistent_pools_produce_identical_bits() {
+    // the pool mode is an execution-substrate knob only: both modes run
+    // the same static partition, so the bits cannot differ — on an
+    // unblocked small shape and on a kc-blocked one (k > KC), at every
+    // worker count
+    let _g = lock_mode();
+    let mut rng = Rng::new(33);
+    for &(m, k, n) in &[(40, 24, 40), (70, 600, 33)] {
+        let (a, b) = pair(&mut rng, m, k, n, 1.0);
+        let want = mixed_gemm_scalar(&a, &b, None, 1.0, 0.0);
+        let hwant = hgemm_scalar(&a, &b);
+        for mode in [PoolMode::Scoped, PoolMode::Persistent] {
+            engine::set_pool_mode(mode);
+            for &t in THREADS {
+                let got = engine::mixed_gemm(&a, &b, None, 1.0, 0.0, t);
+                assert_eq!(got, want, "({m},{k},{n}) {mode:?} t={t}");
+                assert_eq!(engine::hgemm(&a, &b, t), hwant, "hgemm ({m},{k},{n}) {mode:?} t={t}");
+            }
+        }
+    }
+    engine::set_pool_mode(PoolMode::Persistent);
+}
+
+#[test]
+fn env_knobs_are_exposed_and_sane() {
+    // TENSOREMU_THREADS / TENSOREMU_POOL handling: the exhaustive parser
+    // cases live next to the parsers (pool.rs::env_value_parsers); here
+    // just pin the public re-exports and the resolved defaults
+    use tensoremu::gemm::engine::{parse_pool_mode, parse_threads};
+    assert_eq!(parse_threads(Some("8")), Some(8));
+    assert_eq!(parse_pool_mode(Some("scoped")), PoolMode::Scoped);
+    assert_eq!(parse_pool_mode(None), PoolMode::Persistent);
+    assert!(engine::default_threads() >= 1);
 }
 
 #[test]
