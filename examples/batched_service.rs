@@ -11,11 +11,12 @@
 //! Run: `make artifacts && cargo run --release --example batched_service`
 //! (results recorded in EXPERIMENTS.md §E2E)
 
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use tensoremu::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, GemmRequest};
 use tensoremu::coordinator::request::ServedBy;
-use tensoremu::gemm::mixed_gemm;
+use tensoremu::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, GemmRequest};
+use tensoremu::gemm::{GemmDesc, GemmPlan, Precision};
 use tensoremu::workload::{uniform_matrix, RequestTrace, Rng, TraceSpec};
 
 fn main() -> anyhow::Result<()> {
@@ -70,10 +71,14 @@ fn main() -> anyhow::Result<()> {
         rxs.push(coord.submit(GemmRequest::new(0, a.clone(), b.clone())));
     }
 
-    // collect + spot-check numerics on a sample
+    // collect + spot-check numerics on a sample.  The checker mirrors
+    // the serving architecture: one cached mixed-precision GemmPlan per
+    // square edge, operands swapped per check (set_a/set_b) — packing
+    // buffers and descriptor validation amortized across the whole run.
     let mut ok = 0usize;
     let mut batched = 0usize;
     let mut max_err = 0f32;
+    let mut checkers: HashMap<usize, GemmPlan> = HashMap::new();
     for (i, (rx, (a, b))) in rxs.into_iter().zip(&inputs).enumerate() {
         let resp = rx.recv()??;
         ok += 1;
@@ -81,7 +86,19 @@ fn main() -> anyhow::Result<()> {
             batched += 1;
         }
         if i % 97 == 0 {
-            let want = mixed_gemm(a, b, None, 1.0, 0.0);
+            let n = a.rows();
+            let plan = match checkers.entry(n) {
+                std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                std::collections::hash_map::Entry::Vacant(e) => e.insert(
+                    GemmDesc::square(n)
+                        .precision(Precision::Mixed)
+                        .build()
+                        .map_err(|e| anyhow::anyhow!("plan: {e}"))?,
+                ),
+            };
+            plan.set_a(a).map_err(|e| anyhow::anyhow!("set_a: {e}"))?;
+            plan.set_b(b).map_err(|e| anyhow::anyhow!("set_b: {e}"))?;
+            let want = plan.execute().map_err(|e| anyhow::anyhow!("execute: {e}"))?;
             max_err = max_err.max(resp.c.max_norm_diff(&want));
         }
     }

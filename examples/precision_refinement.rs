@@ -1,15 +1,45 @@
-//! The paper's §V/§VII-B precision study end-to-end on real executions:
-//! error growth with N (Fig. 8), the input-range effect (the ±16
-//! example), and the cost/precision trade-off summary (Fig. 9's story),
-//! all through the PJRT error-probe artifacts.
+//! The paper's §V/§VII-B precision study end-to-end: first on the host
+//! plan layer (no artifacts needed — a refined `GemmPlan` owns the
+//! Eq. 1 residual splits and swaps operands across a chain), then on
+//! real executions through the PJRT error-probe artifacts: error growth
+//! with N (Fig. 8), the input-range effect (the ±16 example), and the
+//! cost/precision trade-off summary (Fig. 9's story).
 //!
 //! Run: `make artifacts && cargo run --release --example precision_refinement`
 
 use tensoremu::figures::{ablations, fig8};
+use tensoremu::gemm::{dgemm_naive, GemmDesc, Precision};
 use tensoremu::precision::bounds::{mixed_gemm_error_bound, mixed_gemm_error_rms_estimate};
+use tensoremu::precision::RefineMode;
 use tensoremu::runtime::Engine;
+use tensoremu::workload::{uniform_matrix, Rng};
 
 fn main() -> anyhow::Result<()> {
+    // --- the refinement trade-off on the host plan layer: one refined
+    //     plan per mode, A's split panels packed once and reused while B
+    //     swaps — the reuse pattern the chains are built around
+    let n = 96;
+    let mut rng = Rng::new(7);
+    let a = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+    println!("host plan layer: refine modes over one shared A, 3 B swaps each");
+    println!("{:>10} {:>6} {:>14}", "mode", "gemms", "worst ||e||_max");
+    for mode in RefineMode::ALL {
+        let b0 = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        let mut plan = GemmDesc::square(n)
+            .precision(Precision::Refined(mode))
+            .plan(&a, &b0)
+            .map_err(|e| anyhow::anyhow!("plan: {e}"))?;
+        let mut worst = 0f32;
+        for _ in 0..3 {
+            let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+            plan.set_b(&b).map_err(|e| anyhow::anyhow!("set_b: {e}"))?;
+            let got = plan.execute().map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+            worst = worst.max(got.max_norm_diff(&dgemm_naive(&a, &b)));
+        }
+        println!("{:>10} {:>6} {:>14.3e}", mode.to_string(), mode.gemm_count(), worst);
+    }
+    println!();
+
     let mut engine = Engine::discover()?;
 
     // Fig. 8 on real executions

@@ -3,13 +3,14 @@
 //! 1. L1/L2 were AOT-compiled by `make artifacts` (JAX + Pallas -> HLO
 //!    text); 2. this binary loads the artifact through PJRT and runs a
 //!    mixed-precision GEMM; 3. the result is checked against the crate's
-//!    bit-exact Tensor Core emulation and the refinement levels are
-//!    demonstrated.
+//!    bit-exact Tensor Core emulation — driven through the `GemmPlan`
+//!    descriptor API, the crate's single GEMM entry point — and the
+//!    refinement levels are demonstrated as plan precisions.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
-use tensoremu::gemm::{dgemm_naive, mixed_gemm};
-use tensoremu::precision::{refine_gemm, RefineMode};
+use tensoremu::gemm::{dgemm_naive, GemmDesc, Precision};
+use tensoremu::precision::RefineMode;
 use tensoremu::runtime::{Engine, TensorData};
 use tensoremu::workload::{uniform_matrix, Rng};
 
@@ -29,17 +30,31 @@ fn main() -> anyhow::Result<()> {
         .run(&artifact, &[TensorData::from_matrix(&a), TensorData::from_matrix(&b)])?
         .into_matrix()?;
 
-    // --- cross-check against the bit-exact Rust emulation
-    let emulated = mixed_gemm(&a, &b, None, 1.0, 0.0);
+    // --- cross-check against the bit-exact Rust emulation, via the plan
+    //     API: describe once, pack once, execute (reusably)
+    let plan = GemmDesc::square(n)
+        .precision(Precision::Mixed)
+        .plan(&a, &b)
+        .map_err(|e| anyhow::anyhow!("plan: {e}"))?;
+    let emulated = plan.execute().map_err(|e| anyhow::anyhow!("execute: {e}"))?;
     println!(
         "artifact vs rust emulation: ||diff||_max = {:.3e}",
         c.max_norm_diff(&emulated)
     );
 
-    // --- the paper's precision story in three lines
+    // --- the paper's precision story: one descriptor per refinement
+    //     level, same operands (a refined plan packs the Eq. 1 residual
+    //     splits once and owns them across executions)
     let truth = dgemm_naive(&a, &b);
     for mode in RefineMode::ALL {
-        let err = refine_gemm(&a, &b, mode).max_norm_diff(&truth);
+        let refined = GemmDesc::square(n)
+            .precision(Precision::Refined(mode))
+            .plan(&a, &b)
+            .map_err(|e| anyhow::anyhow!("plan: {e}"))?;
+        let err = refined
+            .execute()
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?
+            .max_norm_diff(&truth);
         println!(
             "{:<10} ({} Tensor-Core GEMM{}): ||e||_max = {:.3e}",
             mode.to_string(),

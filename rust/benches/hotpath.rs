@@ -10,7 +10,12 @@
 //! per-call latency axis (a scoped fork-join pays thread spawns on every
 //! call; the warm persistent pool only a latch round-trip).
 //!
-//! Part 3 — **L3 serving components** (router / batcher / tensor
+//! Part 3 — **plan reuse**: a cached [`GemmDesc`]-built plan (operands
+//! packed once) against the one-shot wrappers (re-pack per call), on a
+//! repeated small GEMM and on a refine chain sharing packed A across
+//! swapped B operands (`set_b`) — the reuse the plan layer exists for.
+//!
+//! Part 4 — **L3 serving components** (router / batcher / tensor
 //! conversion / PJRT execution), which require `make artifacts`; skipped
 //! gracefully when the artifacts are absent.
 //!
@@ -30,8 +35,9 @@ use tensoremu::coordinator::{Batcher, BatcherConfig, GemmRequest, PrecisionPolic
 use tensoremu::gemm::engine::{self, PackedHalfA, PackedHalfB, PoolMode};
 use tensoremu::gemm::{
     batched_mixed_gemm, batched_mixed_gemm_scalar, hgemm_scalar, mixed_gemm, mixed_gemm_scalar,
-    Matrix,
+    GemmDesc, Matrix, Precision,
 };
+use tensoremu::precision::{refine_gemm, RefineMode};
 use tensoremu::runtime::{Engine, Manifest, TensorData};
 use tensoremu::util::bench::{bench, bench_config, BenchResult};
 use tensoremu::workload::{uniform_batch, uniform_matrix, Rng};
@@ -57,6 +63,19 @@ struct PoolComparison {
 impl PoolComparison {
     fn speedup(&self) -> f64 {
         self.scoped.mean().as_secs_f64() / self.persistent.mean().as_secs_f64().max(1e-12)
+    }
+}
+
+/// One-shot wrapper (re-pack per call) vs cached plan (packed once).
+struct PlanComparison {
+    name: String,
+    oneshot: BenchResult,
+    cached: BenchResult,
+}
+
+impl PlanComparison {
+    fn speedup(&self) -> f64 {
+        self.oneshot.mean().as_secs_f64() / self.cached.mean().as_secs_f64().max(1e-12)
     }
 }
 
@@ -143,6 +162,47 @@ fn main() {
     engine::set_pool_mode(initial_mode);
     let pool_cmp = PoolComparison { name: format!("mixed_{np}^3_t{t}"), scoped, persistent };
 
+    // -- plan reuse: one-shot wrapper (re-packs both operands per call)
+    //    vs a cached GemmPlan (packed once at build, executed repeatedly)
+    let npl = if smoke { 64 } else { 96 };
+    let a = uniform_matrix(&mut rng, npl, npl, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, npl, npl, -1.0, 1.0);
+    let oneshot = bench_config("plan/mixed_oneshot", 200, 100, 5_000, || {
+        std::hint::black_box(mixed_gemm(&a, &b, None, 1.0, 0.0));
+    });
+    println!("{}", oneshot.report());
+    let plan = GemmDesc::square(npl).precision(Precision::Mixed).plan(&a, &b).unwrap();
+    let cached = bench_config("plan/mixed_cached_plan", 200, 100, 5_000, || {
+        std::hint::black_box(plan.execute().unwrap());
+    });
+    println!("{}", cached.report());
+    let plan_cmp = PlanComparison { name: format!("mixed_{npl}^3"), oneshot, cached };
+
+    // -- refine chain with shared packed A: one-shot refine_gemm splits
+    //    and packs A on every call; the cached plan swaps B (set_b) while
+    //    A's two split panels stay warm
+    let bs: Vec<Matrix> =
+        (0..4).map(|_| uniform_matrix(&mut rng, npl, npl, -1.0, 1.0)).collect();
+    let oneshot = bench_config("plan/refine_a_oneshot_x4", 50, 100, 5_000, || {
+        for bi in &bs {
+            std::hint::black_box(refine_gemm(&a, bi, RefineMode::RefineA));
+        }
+    });
+    println!("{}", oneshot.report());
+    let mut rplan = GemmDesc::square(npl)
+        .precision(Precision::Refined(RefineMode::RefineA))
+        .plan(&a, &bs[0])
+        .unwrap();
+    let cached = bench_config("plan/refine_a_cached_swap_b_x4", 50, 100, 5_000, || {
+        for bi in &bs {
+            rplan.set_b(bi).unwrap();
+            std::hint::black_box(rplan.execute().unwrap());
+        }
+    });
+    println!("{}", cached.report());
+    let refine_cmp =
+        PlanComparison { name: format!("refine_a_{npl}^3_shared_a_x4b"), oneshot, cached };
+
     println!();
     for c in &comparisons {
         println!(
@@ -157,12 +217,20 @@ fn main() {
         pool_cmp.name,
         pool_cmp.speedup()
     );
+    for pc in [&plan_cmp, &refine_cmp] {
+        println!(
+            "speedup {:<24} {:>7.2}x  (cached plan vs one-shot wrapper)",
+            pc.name,
+            pc.speedup()
+        );
+    }
     println!(
         "targets (ISSUE 2): >= 4x on mixed_512 and batched_1024x16 vs the scalar seed \
-         kernels; persistent > scoped on repeated small GEMMs"
+         kernels; persistent > scoped on repeated small GEMMs; \
+         (ISSUE 3) cached plans > one-shot wrappers on repeated/refined GEMMs"
     );
 
-    write_baseline(&comparisons, &pool_cmp, initial_mode, smoke);
+    write_baseline(&comparisons, &pool_cmp, &plan_cmp, &refine_cmp, initial_mode, smoke);
 
     // -- L3 serving components: need the AOT artifacts
     match Manifest::discover() {
@@ -174,6 +242,8 @@ fn main() {
 fn write_baseline(
     comparisons: &[Comparison],
     pool_cmp: &PoolComparison,
+    plan_cmp: &PlanComparison,
+    refine_cmp: &PlanComparison,
     mode_ran: PoolMode,
     smoke: bool,
 ) {
@@ -198,13 +268,23 @@ fn write_baseline(
         ));
     }
     let (mr, nr, kc, mc) = engine::blocking_params();
+    let plan_json = |pc: &PlanComparison| {
+        format!(
+            "{{\"name\": \"{}\", \"oneshot_ms\": {:.3}, \"cached_ms\": {:.3}, \"speedup\": {:.2}}}",
+            pc.name,
+            pc.oneshot.mean().as_secs_f64() * 1e3,
+            pc.cached.mean().as_secs_f64() * 1e3,
+            pc.speedup()
+        )
+    };
     let json = format!(
         "{{\n  \"bench\": \"hotpath\",\n  \"mode\": \"{mode}\",\n  \"threads\": {threads},\n  \
          \"pool\": \"{pool}\",\n  \
          \"blocking\": {{\"mr\": {mr}, \"nr\": {nr}, \"kc\": {kc}, \"mc\": {mc}}},\n  \
          \"simd\": {simd},\n  \"results\": [\n{rows}\n  ],\n  \
          \"pool_comparison\": {{\"name\": \"{pname}\", \"scoped_ms\": {sms:.3}, \
-         \"persistent_ms\": {pms:.3}, \"speedup\": {pspeed:.2}}}\n}}\n",
+         \"persistent_ms\": {pms:.3}, \"speedup\": {pspeed:.2}}},\n  \
+         \"plan_cache\": {{\"repeated_gemm\": {plan_repeat}, \"refine_shared_a\": {plan_refine}}}\n}}\n",
         mode = if smoke { "smoke" } else { "full" },
         threads = engine::default_threads(),
         pool = match mode_ran {
@@ -217,6 +297,8 @@ fn write_baseline(
         sms = pool_cmp.scoped.mean().as_secs_f64() * 1e3,
         pms = pool_cmp.persistent.mean().as_secs_f64() * 1e3,
         pspeed = pool_cmp.speedup(),
+        plan_repeat = plan_json(plan_cmp),
+        plan_refine = plan_json(refine_cmp),
     );
     match std::fs::write(&path, &json) {
         Ok(()) => println!("baseline written to {path}"),

@@ -13,6 +13,8 @@ pub struct Metrics {
     batched: AtomicU64,
     direct: AtomicU64,
     fallback: AtomicU64,
+    engine_batched: AtomicU64,
+    engine_flushes: AtomicU64,
     flushes: AtomicU64,
     padded_slots: AtomicU64,
     errors: AtomicU64,
@@ -28,6 +30,10 @@ pub struct MetricsSnapshot {
     pub batched: u64,
     pub direct: u64,
     pub fallback: u64,
+    /// Requests served through the cached-plan bucketed engine lane.
+    pub engine_batched: u64,
+    /// Engine-lane bucket flushes (one per shape bucket drained).
+    pub engine_flushes: u64,
     pub flushes: u64,
     pub padded_slots: u64,
     pub errors: u64,
@@ -57,6 +63,12 @@ impl Metrics {
         self.fallback.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One engine-lane shape bucket drained with `real` requests.
+    pub fn on_engine_flush(&self, real: usize) {
+        self.engine_flushes.fetch_add(1, Ordering::Relaxed);
+        self.engine_batched.fetch_add(real as u64, Ordering::Relaxed);
+    }
+
     pub fn on_flush(&self, real: usize, padded: usize) {
         self.flushes.fetch_add(1, Ordering::Relaxed);
         self.padded_slots.fetch_add((padded - real) as u64, Ordering::Relaxed);
@@ -82,6 +94,8 @@ impl Metrics {
             batched: self.batched.load(Ordering::Relaxed),
             direct: self.direct.load(Ordering::Relaxed),
             fallback: self.fallback.load(Ordering::Relaxed),
+            engine_batched: self.engine_batched.load(Ordering::Relaxed),
+            engine_flushes: self.engine_flushes.load(Ordering::Relaxed),
             flushes: self.flushes.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
@@ -96,13 +110,15 @@ impl MetricsSnapshot {
     /// One-line service report.
     pub fn report(&self) -> String {
         format!(
-            "req={} resp={} batched={} direct={} fallback={} flushes={} pad={} err={} \
-             p50={:?} p99={:?} max={:?}",
+            "req={} resp={} batched={} direct={} fallback={} engine_batched={} \
+             engine_flushes={} flushes={} pad={} err={} p50={:?} p99={:?} max={:?}",
             self.requests,
             self.responses,
             self.batched,
             self.direct,
             self.fallback,
+            self.engine_batched,
+            self.engine_flushes,
             self.flushes,
             self.padded_slots,
             self.errors,
@@ -125,14 +141,19 @@ mod tests {
         m.on_response(Duration::from_millis(2), true);
         m.on_response(Duration::from_millis(4), false);
         m.on_flush(5, 8);
+        m.on_engine_flush(3);
+        m.on_engine_flush(2);
         m.on_error();
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.responses, 2);
         assert_eq!(s.batched, 1);
         assert_eq!(s.flushes, 1);
+        assert_eq!(s.engine_flushes, 2);
+        assert_eq!(s.engine_batched, 5);
         assert_eq!(s.padded_slots, 3);
         assert_eq!(s.errors, 1);
+        assert!(s.report().contains("engine_batched=5"));
     }
 
     #[test]

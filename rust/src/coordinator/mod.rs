@@ -14,11 +14,15 @@
 //!    request's error budget, using the analytic bounds from
 //!    [`crate::precision::bounds`].
 //!
-//! [`router`] classifies requests (tile-batchable vs large vs unservable
-//! -> CPU fallback), [`service`] wires router + batcher + policy over the
-//! PJRT [`crate::runtime::executor`] with a threaded event loop (the
-//! offline image has no async runtime — see Cargo.toml), and [`metrics`]
-//! counts everything.
+//! [`router`] classifies requests (tile-batchable vs artifact-direct vs
+//! square-bucketable vs CPU fallback), [`service`] wires router +
+//! batchers + policy over the PJRT [`crate::runtime::executor`] with a
+//! threaded event loop (the offline image has no async runtime — see
+//! Cargo.toml), and [`metrics`] counts everything.  Square requests no
+//! artifact can serve ride the **bucketed engine lane**: un-padded
+//! same-shape buckets executed on the service's cached per-edge
+//! [`crate::gemm::plan::GemmPlan`]s, so they are batched and
+//! plan-amortized instead of falling back one request at a time.
 
 pub mod batcher;
 pub mod metrics;

@@ -58,7 +58,11 @@ pub enum ServedBy {
     BatchedTensorCore,
     /// Dedicated GEMM artifact.
     TensorCore,
-    /// Host CPU fallback (no artifact fits the shape).
+    /// The host engine's bucketed lane: an un-padded same-shape bucket
+    /// executed on the coordinator's cached per-edge
+    /// [`crate::gemm::plan::GemmPlan`].
+    BatchedEngine,
+    /// Host CPU fallback, one request at a time (nothing else fits).
     CpuFallback,
 }
 

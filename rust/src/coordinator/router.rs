@@ -6,14 +6,19 @@
 //!   2.5-12x over per-call serving);
 //! * square requests matching a dedicated artifact -> direct Tensor-Core
 //!   execution at the mode the policy picked;
-//! * everything else -> CPU fallback through the cuBLAS-style interface,
-//!   which executes on the packed multithreaded engine
+//! * square unrefined requests with no artifact -> the **bucketed engine
+//!   lane**: they join a second dynamic batcher whose un-padded shape
+//!   buckets ([`crate::coordinator::batcher::Batcher::flush_buckets`])
+//!   execute on cached [`crate::gemm::plan::GemmPlan`]s — one plan per
+//!   square edge, built once and reused across flushes — instead of
+//!   paying a per-request CPU fallback;
+//! * everything else (non-square, or refined with no artifact) -> CPU
+//!   fallback through the cuBLAS-style interface, which itself executes
+//!   as a one-shot plan on the packed multithreaded engine
 //!   ([`crate::gemm::engine`]) — correct and host-speed (the engine's
 //!   persistent pool amortizes worker startup across the fallback
 //!   stream), counted by metrics (a real deployment would still AOT
-//!   more shapes).  Square non-tile requests that end up here are also
-//!   the candidates for the batcher's un-padded shape buckets
-//!   ([`crate::coordinator::batcher::Batcher::flush_buckets`]).
+//!   more shapes).
 
 use crate::precision::RefineMode;
 use crate::runtime::Manifest;
@@ -24,11 +29,15 @@ use super::request::GemmRequest;
 /// Where a request should execute.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Route {
-    /// Join the dynamic batch for `tile`-sized multiplications.
+    /// Join the dynamic batch for `tile`-sized multiplications (the
+    /// batched Tensor-Core artifact lane).
     Batch { tile: usize },
+    /// Square, unrefined, no artifact: join the engine lane's shape
+    /// bucket for edge `n`, executed on the service's cached plan.
+    EngineBatch { n: usize },
     /// Run the named artifact directly.
     Direct { artifact: String, mode: RefineMode },
-    /// No artifact fits: emulate on the host.
+    /// Nothing else fits: emulate on the host, one request at a time.
     CpuFallback { mode: RefineMode },
 }
 
@@ -54,7 +63,7 @@ impl Router {
     pub fn route(&self, req: &GemmRequest) -> Route {
         let mode = self.policy.choose(req);
         if let Some(n) = req.square_n() {
-            // tile-sized unrefined requests ride the batcher
+            // tile-sized unrefined requests ride the artifact batcher
             if n == self.tile
                 && mode == RefineMode::None
                 && self.manifest.batched_max(self.tile).is_some()
@@ -63,6 +72,11 @@ impl Router {
             }
             if let Some(meta) = self.manifest.gemm_for_mode(mode, n) {
                 return Route::Direct { artifact: meta.name.clone(), mode };
+            }
+            // square but artifact-less: the bucketed engine lane serves
+            // it through a cached plan instead of per-request fallback
+            if mode == RefineMode::None {
+                return Route::EngineBatch { n };
             }
         }
         Route::CpuFallback { mode }
@@ -110,10 +124,17 @@ mod tests {
     }
 
     #[test]
-    fn odd_shapes_fall_back() {
+    fn square_non_artifact_shapes_ride_engine_lane() {
         let Some(r) = router() else { return };
+        // square with no matching artifact: bucketed engine lane, not
+        // per-request CPU fallback (the PR 2 open item)
         let req = GemmRequest::new(4, Matrix::zeros(100, 100), Matrix::zeros(100, 100));
-        assert!(matches!(r.route(&req), Route::CpuFallback { .. }));
+        assert_eq!(r.route(&req), Route::EngineBatch { n: 100 });
+    }
+
+    #[test]
+    fn non_square_shapes_fall_back() {
+        let Some(r) = router() else { return };
         let req = GemmRequest::new(5, Matrix::zeros(64, 128), Matrix::zeros(128, 64));
         assert!(matches!(r.route(&req), Route::CpuFallback { .. }));
     }

@@ -15,9 +15,24 @@
 //! The dispatcher never blocks on execution: direct jobs and batch
 //! flushes run on short-lived worker threads that submit to the executor
 //! thread and deliver responses; the dispatcher keeps batching while
-//! earlier work executes.  The CPU fallback lane (`Route::CpuFallback`)
-//! runs on the packed multithreaded GEMM engine via the cuBLAS-style
-//! handle, so odd-shaped requests no longer pay scalar triple-loop cost.
+//! earlier work executes.
+//!
+//! Two host-engine lanes exist below the artifact lanes:
+//!
+//! * the **bucketed engine lane** (`Route::EngineBatch`): square
+//!   unrefined requests with no artifact accumulate in their own dynamic
+//!   batcher and flush as un-padded per-shape buckets
+//!   ([`Batcher::flush_buckets`]) onto the dispatcher's `PlanCache` —
+//!   one cached [`GemmPlan`] per square edge, built once, executed
+//!   (`execute_batched`) for every subsequent bucket of that edge.  The
+//!   throughput win of this lane is the *bucketing* (one pool dispatch
+//!   per shape group instead of one thread per request); the cached plan
+//!   contributes the validated descriptor and a uniform execution
+//!   configuration per edge — batched execution packs per entry inside
+//!   the engine, so per-operand panel reuse does not apply here;
+//! * the **CPU fallback lane** (`Route::CpuFallback`): anything left
+//!   (non-square, or refined with no artifact) runs one-shot through the
+//!   cuBLAS-style handle, which itself executes as a plan.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -28,6 +43,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::gemm::plan::{GemmDesc, GemmPlan, Precision};
 use crate::gemm::Matrix;
 use crate::interfaces::{CublasHandle, GemmAlgo, MathMode};
 use crate::precision::RefineMode;
@@ -200,6 +216,37 @@ struct PendingReply {
     submitted: Instant,
 }
 
+/// The dispatcher's per-bucket plan cache: one mixed-precision
+/// [`GemmPlan`] per square edge, built on first use and shared (via
+/// `Arc`) with the worker threads that execute its buckets.  The cached
+/// plan carries the validated descriptor and execution configuration
+/// for its edge (batched execution packs per entry inside the engine,
+/// so this cache is about a stable, validated route per shape — the
+/// speed of the lane comes from bucketing onto the pool).
+struct PlanCache {
+    plans: HashMap<usize, Arc<GemmPlan>>,
+}
+
+impl PlanCache {
+    fn new() -> PlanCache {
+        PlanCache { plans: HashMap::new() }
+    }
+
+    /// The cached plan for square edge `n` (built on first request).
+    fn for_edge(&mut self, n: usize) -> Arc<GemmPlan> {
+        self.plans
+            .entry(n)
+            .or_insert_with(|| {
+                let plan = GemmDesc::square(n)
+                    .precision(Precision::Mixed)
+                    .build()
+                    .expect("square mixed plan descriptors are always valid");
+                Arc::new(plan)
+            })
+            .clone()
+    }
+}
+
 fn dispatcher_loop(
     cfg: CoordinatorConfig,
     manifest: Manifest,
@@ -210,6 +257,10 @@ fn dispatcher_loop(
 ) {
     let router = Router::new(manifest.clone(), cfg.tile, PrecisionPolicy::new(cfg.policy));
     let mut batcher = Batcher::new(cfg.tile, effective_batcher_cfg(cfg, &manifest));
+    // second batcher for the engine lane: square artifact-less requests
+    // bucket here and execute on cached plans (never padded, never PJRT)
+    let mut engine_batcher = Batcher::new(cfg.tile, cfg.batcher);
+    let mut plans = PlanCache::new();
     let mut pending: HashMap<RequestId, PendingReply> = HashMap::new();
     let mut shutting_down = false;
 
@@ -220,16 +271,30 @@ fn dispatcher_loop(
             flush_batch(&mut batcher, &manifest, &executor, &metrics, &mut pending);
             continue;
         }
-        if shutting_down && batcher.queue_len() == 0 {
+        if engine_batcher.should_flush(now) {
+            flush_engine_buckets(&mut engine_batcher, &mut plans, &metrics, &mut pending);
+            continue;
+        }
+        if shutting_down && batcher.queue_len() == 0 && engine_batcher.queue_len() == 0 {
             break;
         }
-        let timeout = batcher
-            .time_to_flush(now)
+        let timeout = [batcher.time_to_flush(now), engine_batcher.time_to_flush(now)]
+            .into_iter()
+            .flatten()
+            .min()
             .unwrap_or(Duration::from_millis(50))
             .min(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(Event::Submit(sub)) => {
-                dispatch_one(sub, &router, &mut batcher, &direct_executor, &metrics, &mut pending);
+                dispatch_one(
+                    sub,
+                    &router,
+                    &mut batcher,
+                    &mut engine_batcher,
+                    &direct_executor,
+                    &metrics,
+                    &mut pending,
+                );
             }
             Ok(Event::Shutdown) => shutting_down = true,
             Err(RecvTimeoutError::Timeout) => {}
@@ -251,6 +316,7 @@ fn dispatch_one(
     sub: Submission,
     router: &Router,
     batcher: &mut Batcher,
+    engine_batcher: &mut Batcher,
     executor: &ExecutorHandle,
     metrics: &Arc<Metrics>,
     pending: &mut HashMap<RequestId, PendingReply>,
@@ -262,6 +328,13 @@ fn dispatch_one(
                 PendingReply { reply: sub.reply, submitted: sub.submitted },
             );
             batcher.push(sub.req);
+        }
+        Route::EngineBatch { .. } => {
+            pending.insert(
+                sub.req.id,
+                PendingReply { reply: sub.reply, submitted: sub.submitted },
+            );
+            engine_batcher.push(sub.req);
         }
         Route::Direct { artifact, mode } => {
             metrics.on_direct();
@@ -394,6 +467,63 @@ fn flush_batch(
             }
         }
     });
+}
+
+/// Engine-lane flush: drain the whole engine batcher into un-padded
+/// per-shape buckets and execute each on the cached plan for its edge.
+/// Each bucket runs on its own worker thread (the dispatcher keeps
+/// batching); the plan rides into the thread as an `Arc`, so a hot edge
+/// can have several buckets in flight against one plan.
+fn flush_engine_buckets(
+    batcher: &mut Batcher,
+    plans: &mut PlanCache,
+    metrics: &Arc<Metrics>,
+    pending: &mut HashMap<RequestId, PendingReply>,
+) {
+    for bucket in batcher.flush_buckets() {
+        let plan = plans.for_edge(bucket.n);
+        metrics.on_engine_flush(bucket.len());
+        let replies: Vec<(RequestId, Instant, Option<PendingReply>)> = bucket
+            .ids
+            .iter()
+            .zip(&bucket.enqueued)
+            .map(|(id, enq)| (*id, *enq, pending.remove(id)))
+            .collect();
+        let metrics = metrics.clone();
+        let (a, b) = (bucket.a, bucket.b);
+        std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let result = plan.execute_batched(&a, &b);
+            let exec = t0.elapsed();
+            match result {
+                Ok(outs) => {
+                    // replies and outs are index-aligned by construction;
+                    // move each output into its response (no copy)
+                    for ((id, enq, reply), out) in replies.into_iter().zip(outs) {
+                        if let Some(p) = reply {
+                            let resp = GemmResponse {
+                                id,
+                                c: out,
+                                mode: RefineMode::None,
+                                served_by: ServedBy::BatchedEngine,
+                                queued: t0.duration_since(enq),
+                                exec,
+                            };
+                            finish(Ok(resp), &p.reply, &metrics, p.submitted, false);
+                        }
+                    }
+                }
+                Err(e) => {
+                    for (_, _, reply) in replies {
+                        if let Some(p) = reply {
+                            let _ = p.reply.send(Err(anyhow::anyhow!("engine bucket failed: {e}")));
+                            metrics.on_error();
+                        }
+                    }
+                }
+            }
+        });
+    }
 }
 
 fn finish(

@@ -1,33 +1,37 @@
 //! Batched small-matrix GEMMs (paper §IV-B): many independent tile x tile
 //! products, the Nek5000 / FMM-FFT workload shape.
 //!
-//! All three precisions dispatch to the engine's batched paths, which
-//! distribute entries over the persistent worker pool (each entry
-//! computed serially by its owner, so batched results equal a loop of
-//! singles bit for bit; per-entry shapes may be heterogeneous — the
-//! coordinator batcher's shape buckets exploit exactly that).  The serial
-//! map-over-singles originals are kept as `*_scalar` oracles for the
-//! equivalence tests and throughput baselines.
+//! All three precisions are **legacy one-shot wrappers** over
+//! shape-wildcard plans ([`crate::gemm::plan::GemmDesc::any_shape`]),
+//! whose batched execution distributes entries over the persistent
+//! worker pool (each entry computed serially by its owner, so batched
+//! results equal a loop of singles bit for bit; per-entry shapes may be
+//! heterogeneous — the coordinator batcher's shape buckets exploit
+//! exactly that).  The serial map-over-singles originals are kept as
+//! `*_scalar` oracles for the equivalence tests and throughput
+//! baselines.
 
-use super::{engine, mixed::mixed_gemm_scalar, naive::sgemm_naive, Matrix};
+use super::plan::{self, Precision};
+use super::{mixed::mixed_gemm_scalar, naive::sgemm_naive, Matrix};
 
 /// Batched sgemm: out[i] = a[i] x b[i] in full f32 (the paper's
-/// `cublasSgemmBatched` baseline).  Engine-backed.
+/// `cublasSgemmBatched` baseline).  Plan-backed.
 pub fn batched_sgemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
-    engine::batched_sgemm(a, b, 0)
+    plan::oneshot_batched(Precision::F32, a, b, 0)
 }
 
 /// Batched Tensor-Core-semantics GEMM: the paper's hand-written batched
-/// WMMA kernel (f16 inputs, f32 accumulate).  Engine-backed.
+/// WMMA kernel (f16 inputs, f32 accumulate).  Plan-backed.
 pub fn batched_mixed_gemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
-    engine::batched_mixed_gemm(a, b, 0)
+    plan::oneshot_batched(Precision::Mixed, a, b, 0)
 }
 
 /// Batched CUDA-core hgemm (all-f16 arithmetic) for the precision
-/// comparison benches.  Engine-backed: each worker converts its entries
-/// to f16 into reused pack buffers instead of allocating per call.
+/// comparison benches.  Plan-backed: each engine worker converts its
+/// entries to f16 into reused pack buffers instead of allocating per
+/// call.
 pub fn batched_hgemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
-    engine::batched_hgemm(a, b, 0)
+    plan::oneshot_batched(Precision::F16, a, b, 0)
 }
 
 /// Serial oracle for [`batched_sgemm`]: a plain loop of naive singles.

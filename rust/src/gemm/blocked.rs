@@ -1,23 +1,24 @@
-//! `sgemm_blocked` — the optimized f32 CPU baseline, now served by the
-//! packed multithreaded engine.
+//! `sgemm_blocked` — the optimized f32 CPU baseline, now a legacy
+//! wrapper over the descriptor/plan layer ([`crate::gemm::plan`]).
 //!
 //! Historically this was a cache-blocked loop nest with a *different*
 //! accumulation order from `sgemm_naive`; the engine's microkernel keeps
 //! the naive kernel's exact k-ascending chain per output element, so the
-//! result is now bitwise equal to [`super::sgemm_naive`] while being far
+//! result is bitwise equal to [`super::sgemm_naive`] while being far
 //! faster (packed panels + 8x8 register blocking + `kc`/`mc` cache
-//! blocking + the persistent worker pool).  This is the kernel the
-//! host-side hot paths use when a matrix product must be computed outside
-//! PJRT (e.g. the coordinator's fallback path and the workload
-//! generators' verification); repeated calls land on warm, parked
-//! workers rather than paying per-call thread spawns.
+//! blocking + the persistent worker pool).  New code should build a
+//! [`crate::gemm::plan::GemmDesc`] with [`crate::gemm::plan::Precision::F32`]
+//! instead — a reused plan additionally amortizes operand packing, which
+//! this one-shot wrapper re-pays every call.
 
-use super::{engine, Matrix};
+use super::plan::{self, Precision};
+use super::Matrix;
 
-/// C = alpha*A*B + beta*C in f32, engine-backed (bitwise equal to the
-/// naive oracle, orders of magnitude faster on large shapes).
+/// C = alpha*A*B + beta*C in f32 (bitwise equal to the naive oracle).
+/// **Legacy one-shot wrapper** over a [`crate::gemm::plan::GemmPlan`];
+/// prefer the plan API when operands repeat.
 pub fn sgemm_blocked(a: &Matrix, b: &Matrix, c: Option<&Matrix>, alpha: f32, beta: f32) -> Matrix {
-    engine::sgemm(a, b, c, alpha, beta, 0)
+    plan::oneshot(Precision::F32, a, b, c, alpha, beta, 0)
 }
 
 #[cfg(test)]

@@ -1,16 +1,21 @@
 //! The packed multithreaded GEMM engine: one fast kernel core under every
-//! precision path of the reproduction.
+//! precision path of the reproduction.  Consumers do not call it
+//! directly any more — the descriptor/plan layer
+//! ([`crate::gemm::plan::GemmPlan`]) is the sole consumer-facing caller
+//! of [`gemm_packed`]; the convenience functions kept here
+//! ([`sgemm`]/[`mixed_gemm`]/[`hgemm`]) delegate through one-shot plans
+//! and survive for the engine test/bench suites.
 //!
 //! Pipeline: **pack → microkernel → pool**.
 //!
-//! * [`pack`] — operands copied once into panel order (A row-panels, B
+//! * `pack` — operands copied once into panel order (A row-panels, B
 //!   column-panels), with the f16 input rounding of the Tensor Core
 //!   contract applied at pack time; packed operands are reusable.
-//! * [`micro`] — an `MR x NR` (8x8) register-blocked f32 microkernel
+//! * `micro` — an `MR x NR` (8x8) register-blocked f32 microkernel
 //!   whose per-element accumulation chain is exactly the scalar oracles'
 //!   ascending-k chain; the `simd` cargo feature swaps in an explicit
 //!   f32x8 AVX kernel with identical bits.
-//! * [`pool`] — a deterministic worker pool: row panels within one GEMM,
+//! * `pool` — a deterministic worker pool: row panels within one GEMM,
 //!   entries within a batched GEMM.  Each output tile is owned by exactly
 //!   one worker, so results are bitwise identical across worker counts
 //!   AND across pool modes (the default persistent pool parks and reuses
@@ -18,8 +23,8 @@
 //!   `std::thread::scope` spawns).
 //!
 //! On top of the register block, [`gemm_packed`] runs a BLIS-style cache
-//! hierarchy blocking: the k extent is walked in [`KC`]-deep blocks and
-//! each worker's row range in [`MC`]-row blocks, so a `KC x NR` B block
+//! hierarchy blocking: the k extent is walked in `KC`-deep blocks and
+//! each worker's row range in `MC`-row blocks, so a `KC x NR` B block
 //! stays L1-resident and an `MC x KC` A block L2-resident even on
 //! >= 2048^3 shapes.  Accumulators live in a C-resident f32 tile carried
 //! across `kc` blocks (raw partial sums are spilled to and reloaded from
@@ -76,8 +81,9 @@ const SERIAL_FLOPS: usize = 1 << 18;
 const SERIAL_HALF_FLOPS: usize = 1 << 12;
 
 /// C = alpha * A x B + beta * C over pre-packed operands (precision was
-/// chosen at pack time).  The core entry point every precision path
-/// funnels into.
+/// chosen at pack time).  The core the plan layer
+/// ([`crate::gemm::plan::GemmPlan`]) — and only the plan layer —
+/// executes on.
 pub fn gemm_packed(
     pa: &PackedA,
     pb: &PackedB,
@@ -93,7 +99,8 @@ pub fn gemm_packed(
 
 /// Single-precision GEMM (CUDA-core sgemm semantics): f32 inputs kept
 /// exactly, f32 k-ascending accumulation — bitwise equal to
-/// [`crate::gemm::sgemm_naive`].
+/// [`crate::gemm::sgemm_naive`].  One-shot plan delegate, kept for the
+/// engine test/bench suites.
 pub fn sgemm(
     a: &Matrix,
     b: &Matrix,
@@ -102,15 +109,13 @@ pub fn sgemm(
     beta: f32,
     threads: usize,
 ) -> Matrix {
-    assert_eq!(a.cols(), b.rows(), "inner dimension mismatch");
-    let pa = PackedA::pack(a, InputPrecision::Full);
-    let pb = PackedB::pack(b, InputPrecision::Full);
-    gemm_packed(&pa, &pb, c, alpha, beta, threads)
+    crate::gemm::plan::oneshot(crate::gemm::plan::Precision::F32, a, b, c, alpha, beta, threads)
 }
 
 /// Tensor-Core-semantics GEMM (§III/Fig. 3): inputs rounded to binary16
 /// once at pack time, exact products, f32 k-ascending accumulation —
-/// bitwise equal to [`crate::gemm::mixed_gemm_scalar`].
+/// bitwise equal to [`crate::gemm::mixed_gemm_scalar`].  One-shot plan
+/// delegate, kept for the engine test/bench suites.
 pub fn mixed_gemm(
     a: &Matrix,
     b: &Matrix,
@@ -119,19 +124,14 @@ pub fn mixed_gemm(
     beta: f32,
     threads: usize,
 ) -> Matrix {
-    assert_eq!(a.cols(), b.rows(), "inner dimension mismatch");
-    let pa = PackedA::pack(a, InputPrecision::F16Rounded);
-    let pb = PackedB::pack(b, InputPrecision::F16Rounded);
-    gemm_packed(&pa, &pb, c, alpha, beta, threads)
+    crate::gemm::plan::oneshot(crate::gemm::plan::Precision::Mixed, a, b, c, alpha, beta, threads)
 }
 
 /// CUDA-core hgemm (all arithmetic rounds to binary16), over operands
 /// converted once — bitwise equal to [`crate::gemm::hgemm_scalar`].
+/// One-shot plan delegate, kept for the engine test/bench suites.
 pub fn hgemm(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
-    assert_eq!(a.cols(), b.rows(), "inner dimension mismatch");
-    let pa = PackedHalfA::pack(a);
-    let pb = PackedHalfB::pack(b);
-    hgemm_packed(&pa, &pb, threads)
+    crate::gemm::plan::oneshot(crate::gemm::plan::Precision::F16, a, b, None, 1.0, 0.0, threads)
 }
 
 /// hgemm over pre-packed f16 operands: callers that reuse an operand pay
@@ -165,12 +165,15 @@ pub fn hgemm_packed(pa: &PackedHalfA, pb: &PackedHalfB, threads: usize) -> Matri
 
 /// Batched sgemm: `out[i] = a[i] x b[i]` in full f32, entries distributed
 /// over the pool (each entry computed serially by its owning worker).
+/// This is [`crate::gemm::plan::GemmPlan::execute_batched`]'s execution
+/// substrate; consumer code goes through a plan.
 pub fn batched_sgemm(a: &[Matrix], b: &[Matrix], threads: usize) -> Vec<Matrix> {
     batched_gemm(a, b, InputPrecision::Full, threads)
 }
 
 /// Batched Tensor-Core-semantics GEMM — the paper's batched WMMA shape
-/// (§IV-B), entries distributed over the pool.
+/// (§IV-B), entries distributed over the pool.  Plan execution
+/// substrate, like [`batched_sgemm`].
 pub fn batched_mixed_gemm(a: &[Matrix], b: &[Matrix], threads: usize) -> Vec<Matrix> {
     batched_gemm(a, b, InputPrecision::F16Rounded, threads)
 }
@@ -255,7 +258,10 @@ pub fn gemm_acc_inplace(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize,
 }
 
 /// The shared packed-panel core: compute into a preallocated output.
-fn gemm_packed_into(
+/// Public for [`crate::gemm::plan::GemmPlan::execute_into`], the plan
+/// layer's allocation-free execution path; the output and C shapes are
+/// asserted here (plans pre-validate and surface typed errors instead).
+pub fn gemm_packed_into(
     out: &mut Matrix,
     pa: &PackedA,
     pb: &PackedB,

@@ -30,7 +30,7 @@ use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Condvar, Mutex, OnceLock};
 
-/// Which execution substrate [`parallel_units`] uses for multi-worker
+/// Which execution substrate `parallel_units` uses for multi-worker
 /// jobs.  Numerically inert: both modes run the identical static
 /// partition, so results are bitwise equal.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -404,6 +404,7 @@ mod tests {
     #[test]
     fn partition_covers_every_unit_once() {
         let _g = lock_mode();
+        let ambient = pool_mode();
         // each unit is 3 elements; workers stamp their unit index
         for mode in [PoolMode::Persistent, PoolMode::Scoped] {
             set_pool_mode(mode);
@@ -412,7 +413,9 @@ mod tests {
                 assert_eq!(*v, i / 3 + 1, "element {i} ({mode:?})");
             }
         }
-        set_pool_mode(PoolMode::Persistent);
+        // restore the ambient (TENSOREMU_POOL-selected) mode so the
+        // scoped CI leg keeps its coverage in later tests
+        set_pool_mode(ambient);
     }
 
     #[test]
@@ -463,6 +466,7 @@ mod tests {
     #[test]
     fn persistent_workers_are_reused_across_calls() {
         let _g = lock_mode();
+        let ambient = pool_mode();
         set_pool_mode(PoolMode::Persistent);
         // warm: first call may spawn up to 3 helpers
         let _ = stamp_units(16, 4);
@@ -483,11 +487,13 @@ mod tests {
         // would add ~150 spawns from our own 50 calls alone
         let grown = spawned_workers() - s0;
         assert!(grown <= 64, "pool must reuse parked workers, spawned {grown} more");
+        set_pool_mode(ambient);
     }
 
     #[test]
     fn worker_panic_propagates_without_deadlock() {
         let _g = lock_mode();
+        let ambient = pool_mode();
         set_pool_mode(PoolMode::Persistent);
         let result = catch_unwind(AssertUnwindSafe(|| {
             let mut out = vec![0u8; 8];
@@ -501,5 +507,6 @@ mod tests {
         // the pool must still be serviceable afterwards
         let out = stamp_units(8, 4);
         assert_eq!(out[out.len() - 1], 8);
+        set_pool_mode(ambient);
     }
 }

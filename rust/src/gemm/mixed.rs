@@ -8,44 +8,58 @@
 //!   units).  The numerical gap between these two is the paper's central
 //!   precision argument.
 //!
-//! Both dispatch to the packed multithreaded engine
-//! ([`crate::gemm::engine`]: persistent pool, `kc`/`mc` cache blocking,
-//! 8x8 microkernel — optionally explicit f32x8 lanes under the `simd`
-//! feature); the serial triple-loop originals are kept as
-//! [`mixed_gemm_scalar`] / [`hgemm_scalar`] — the *numerical oracles* the
-//! engine is verified against bit for bit (`tests/engine.rs`) and the
+//! Both are **legacy one-shot wrappers** over the descriptor/plan layer
+//! ([`crate::gemm::plan`]), which executes on the packed multithreaded
+//! engine ([`crate::gemm::engine`]: persistent pool, `kc`/`mc` cache
+//! blocking, 8x8 microkernel — optionally explicit f32x8 lanes under the
+//! `simd` feature).  New code should build a
+//! [`crate::gemm::plan::GemmDesc`] directly: a reused plan amortizes the
+//! operand packing these wrappers re-pay on every call.  The serial
+//! triple-loop originals are kept as [`mixed_gemm_scalar`] /
+//! [`hgemm_scalar`] — the *numerical oracles* the plans are verified
+//! against bit for bit (`tests/engine.rs`, `tests/plan.rs`) and the
 //! baselines the hot-path benches compare throughput against.
 
 use crate::halfprec::{f16_to_f32, f32_to_f16, half_add, half_mul, Half};
 
-use super::{engine, Matrix};
+use super::plan::{self, GemmDesc, Precision};
+use super::Matrix;
 
 /// Tensor-Core-semantics GEMM: C = alpha*(f16(A) x f16(B)) + beta*C with
-/// f32 accumulation.  Row-major, result f32.  Engine-backed; bitwise
-/// equal to [`mixed_gemm_scalar`].
+/// f32 accumulation.  Row-major, result f32.  Plan-backed; bitwise equal
+/// to [`mixed_gemm_scalar`].  **Legacy one-shot wrapper** — prefer a
+/// reused [`crate::gemm::plan::GemmPlan`] when operands repeat.
 pub fn mixed_gemm(a: &Matrix, b: &Matrix, c: Option<&Matrix>, alpha: f32, beta: f32) -> Matrix {
-    engine::mixed_gemm(a, b, c, alpha, beta, 0)
+    plan::oneshot(Precision::Mixed, a, b, c, alpha, beta, 0)
 }
 
 /// Tensor-Core GEMM continuing an existing f32 accumulator matrix (used
-/// by the exact-chaining refinement): C += f16(A) x f16(B).
+/// by the exact-chaining refinement): C += f16(A) x f16(B) — i.e. the
+/// plan epilogue with `alpha = beta = 1`, which is where the former
+/// hand-rolled accumulation loop now lives.
 pub fn mixed_gemm_accumulate(a: &Matrix, b: &Matrix, c: &mut Matrix) {
-    let prod = mixed_gemm(a, b, None, 1.0, 0.0);
-    for (o, p) in c.as_mut_slice().iter_mut().zip(prod.as_slice()) {
-        *o += p;
-    }
+    let out = GemmDesc::new(a.rows(), a.cols(), b.cols())
+        .precision(Precision::Mixed)
+        .epilogue(1.0, 1.0)
+        .plan(a, b)
+        .and_then(|p| p.execute_with(Some(&*c)))
+        .unwrap_or_else(|e| panic!("{e}"));
+    *c = out;
 }
 
 /// CUDA-core hgemm: all arithmetic in binary16 (multiply rounds, every
 /// accumulate rounds).  Result returned widened to f32 for uniformity.
-/// Engine-backed; bitwise equal to [`hgemm_scalar`].
+/// Plan-backed; bitwise equal to [`hgemm_scalar`].  **Legacy one-shot
+/// wrapper** — prefer a reused plan when operands repeat.
 pub fn hgemm(a: &Matrix, b: &Matrix) -> Matrix {
-    engine::hgemm(a, b, 0)
+    plan::oneshot(Precision::F16, a, b, None, 1.0, 0.0, 0)
 }
 
 /// The serial reference implementation of [`mixed_gemm`]: the paper's
 /// semantics written as the simplest possible triple loop (inputs rounded
-/// once, exact products, one f32 accumulator per element, k ascending).
+/// once, exact products, one f32 accumulator per element, k ascending;
+/// epilogue follows the plan layer's cuBLAS rule — `beta == 0` never
+/// reads C, so oracle and engine stay bitwise equal in every corner).
 /// Kept as the engine's correctness oracle and the benches' scalar
 /// baseline — not for production call paths.
 pub fn mixed_gemm_scalar(
@@ -71,7 +85,8 @@ pub fn mixed_gemm_scalar(
                 // f16 x f16 product is exact in f32
                 acc += ah[i * k + p] * bh[p * n + j];
             }
-            out[(i, j)] = alpha * acc + beta * c.map_or(0.0, |c| c[(i, j)]);
+            let cval = if beta == 0.0 { 0.0 } else { c.map_or(0.0, |c| c[(i, j)]) };
+            out[(i, j)] = alpha * acc + beta * cval;
         }
     }
     out

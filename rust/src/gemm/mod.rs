@@ -1,14 +1,22 @@
-//! S2 — CPU GEMM substrate: the packed multithreaded engine plus the
-//! scalar reference oracles.
+//! S2 — CPU GEMM substrate: the descriptor/plan entry layer, the packed
+//! multithreaded engine beneath it, and the scalar reference oracles.
 //!
-//! [`engine`] is the single fast kernel core (pack → microkernel → worker
-//! pool) that every precision path funnels into: `sgemm_blocked`,
-//! `mixed_gemm`, `hgemm`, the `batched_*` family, the `tcemu` warp tile
-//! loop and the three `interfaces` layers all execute on it.  The engine
-//! preserves the paper's numerics contract exactly — f16-rounded inputs
-//! where the mode demands it, exact products, f32 accumulation in a fixed
-//! k-ascending chain per output element — so it is bitwise
-//! interchangeable with the serial oracles at every precision mode.
+//! [`plan`] is the crate's **single GEMM entry point** (cuBLASLt-style):
+//! a [`GemmDesc`] describes dims / [`Precision`] / epilogue / batch /
+//! worker count, validates into an immutable [`GemmPlan`] that owns the
+//! pre-packed operand panels, and executes repeatedly with operand
+//! swapping (`set_a`/`set_b`).  Every public path — `sgemm_blocked`,
+//! `mixed_gemm`, `hgemm`, the `batched_*` family, the three
+//! `interfaces` layers, the §V refinement chains and the coordinator's
+//! engine lane — is a thin wrapper over a plan.
+//!
+//! [`engine`] is the fast kernel core underneath (pack → cache-blocked
+//! loop nest → microkernel → worker pool); the plan layer is its sole
+//! consumer-facing caller.  The engine preserves the paper's numerics
+//! contract exactly — f16-rounded inputs where the mode demands it,
+//! exact products, f32 accumulation in a fixed k-ascending chain per
+//! output element — so plans are bitwise interchangeable with the serial
+//! oracles at every precision mode.
 //!
 //! The scalar kernels (`sgemm_naive`, `dgemm_naive`, `mixed_gemm_scalar`,
 //! `hgemm_scalar`, `batched_*_scalar`) remain the *numerical oracles*:
@@ -22,6 +30,7 @@ pub mod engine;
 mod matrix;
 mod mixed;
 mod naive;
+pub mod plan;
 
 pub use batched::{
     batched_hgemm, batched_hgemm_scalar, batched_mixed_gemm, batched_mixed_gemm_scalar,
@@ -31,3 +40,4 @@ pub use blocked::sgemm_blocked;
 pub use matrix::Matrix;
 pub use mixed::{hgemm, hgemm_scalar, mixed_gemm, mixed_gemm_accumulate, mixed_gemm_scalar};
 pub use naive::{dgemm_naive, sgemm_naive};
+pub use plan::{GemmDesc, GemmPlan, PlanError, Precision};

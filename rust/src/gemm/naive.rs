@@ -6,7 +6,10 @@
 
 use super::Matrix;
 
-/// C = alpha*A*B + beta*C with all arithmetic in f32.
+/// C = alpha*A*B + beta*C with all arithmetic in f32.  Epilogue follows
+/// the cuBLAS rule the plan layer implements: `beta == 0` never reads C
+/// (so a NaN-filled C cannot reach the output) — keeping this oracle
+/// bitwise equal to the engine-backed paths in every corner.
 pub fn sgemm_naive(a: &Matrix, b: &Matrix, c: Option<&Matrix>, alpha: f32, beta: f32) -> Matrix {
     let (m, k) = a.shape();
     let (k2, n) = b.shape();
@@ -21,7 +24,8 @@ pub fn sgemm_naive(a: &Matrix, b: &Matrix, c: Option<&Matrix>, alpha: f32, beta:
             for p in 0..k {
                 acc += a[(i, p)] * b[(p, j)];
             }
-            out[(i, j)] = alpha * acc + beta * c.map_or(0.0, |c| c[(i, j)]);
+            let cval = if beta == 0.0 { 0.0 } else { c.map_or(0.0, |c| c[(i, j)]) };
+            out[(i, j)] = alpha * acc + beta * cval;
         }
     }
     out

@@ -1,0 +1,793 @@
+//! The descriptor/plan layer — the crate's single GEMM entry point,
+//! modeled on cuBLASLt's `MatmulDesc`/plan pair and CUTLASS's
+//! device-level `Gemm` instances.
+//!
+//! The paper's programmability finding (§IV) is that the three Tensor
+//! Core APIs differ only in surface: fragment-level WMMA, tile-policy
+//! CUTLASS and handle+descriptor cuBLAS all drive the same MMA unit, and
+//! the descriptor-based path is both the fastest and the most reusable.
+//! This module is that finding applied to the host engine: every public
+//! GEMM path — `sgemm_blocked`, `mixed_gemm`, `hgemm`, the `batched_*`
+//! family, the three [`crate::interfaces`] layers, the
+//! [`crate::precision::refine_gemm`] chains and the coordinator's engine
+//! lane — now builds (or reuses) a [`GemmPlan`] and executes it; the
+//! plan layer is the sole consumer-facing caller of
+//! [`engine::gemm_packed`].
+//!
+//! ## Shape of the API
+//!
+//! [`GemmDesc`] is the immutable problem description: dimensions,
+//! [`Precision`], the `alpha`/`beta` epilogue, an optional pinned batch
+//! count, a worker-count override and an optional pool-mode annotation
+//! ([`GemmDesc::pool_hint`] — metadata, not a substrate switch).
+//! [`GemmDesc::build`] validates it into a [`GemmPlan`]; [`GemmDesc::plan`]
+//! additionally packs both operands.  The plan owns:
+//!
+//! * the **pre-packed operand panels** (A row-panels / B column-panels,
+//!   f16 rounding or residual splitting paid once at pack time),
+//! * the **resolved execution configuration** (worker count request and
+//!   the pool mode recorded at build — the mode is numerically inert, so
+//!   it is attribution metadata, not a per-call switch),
+//! * the **epilogue**: the one implementation of `alpha*AB + beta*C` in
+//!   the crate, with the cuBLAS rule that `beta == 0` never reads `C`
+//!   (a NaN-filled C cannot leak into the output).
+//!
+//! Execution never re-packs: [`GemmPlan::execute`] /
+//! [`GemmPlan::execute_into`] run the cached panels repeatedly, and
+//! [`GemmPlan::set_a`] / [`GemmPlan::set_b`] swap one operand (reusing
+//! its buffer allocation) while the other side's packed panels — for a
+//! refined plan, *both* of its split panels — stay warm.  That is
+//! exactly the reuse the §V refinement chains (2–4 products per result)
+//! and the coordinator's repeated-shape buckets want.
+//!
+//! ## Numerics contract
+//!
+//! A plan execution is bitwise identical to the corresponding serial
+//! `*_scalar` oracle at every worker count and pool mode — the engine's
+//! contract, inherited unchanged (`tests/plan.rs` sweeps
+//! {precision} x {threads} x {pool mode}).  The refined chains preserve
+//! the legacy summation order exactly: residual products first, partials
+//! accumulated into one f32 matrix in ascending refinement order.
+
+use crate::gemm::engine::{
+    self, InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB, PoolMode,
+};
+use crate::gemm::Matrix;
+use crate::halfprec::{f16_to_f32, f32_to_f16};
+use crate::precision::RefineMode;
+
+/// The numerical mode a plan executes under — the paper's precision axis
+/// as a descriptor field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full f32 inputs, f32 accumulation (CUDA-core sgemm semantics);
+    /// oracle: [`crate::gemm::sgemm_naive`].
+    F32,
+    /// Inputs rounded to binary16 once at pack time, exact products, f32
+    /// accumulation (the §III Tensor Core contract); oracle:
+    /// [`crate::gemm::mixed_gemm_scalar`].
+    Mixed,
+    /// All-f16 arithmetic (CUDA-core hgemm); oracle:
+    /// [`crate::gemm::hgemm_scalar`].
+    F16,
+    /// §V precision refinement: the mode's 1/2/4 Tensor-Core-semantics
+    /// partial products with exact f32 chaining.
+    /// `Refined(RefineMode::None)` is identical to [`Precision::Mixed`].
+    Refined(RefineMode),
+}
+
+/// Typed rejection from descriptor validation or plan execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanError {
+    /// `A.cols != B.rows` at plan/pack time.
+    InnerDim { a_cols: usize, b_rows: usize },
+    /// An operand's shape disagrees with the descriptor's dimensions.
+    OperandShape { side: &'static str, want: (usize, usize), got: (usize, usize) },
+    /// `execute` was called before this operand was packed.
+    OperandMissing { side: &'static str },
+    /// Single-GEMM execution on a shape-wildcard ([`GemmDesc::any_shape`])
+    /// plan, which can only serve `execute_batched`.
+    UnpinnedDims,
+    /// `execute_batched` received differing A/B entry counts.
+    BatchLength { a: usize, b: usize },
+    /// The descriptor pins a batch count and the call disagrees.
+    BatchCount { want: usize, got: usize },
+    /// A batch entry's shapes are inconsistent (with each other, or with
+    /// the descriptor's pinned dimensions).
+    BatchEntry { index: usize, a: (usize, usize), b: (usize, usize) },
+    /// The prior-C operand's shape disagrees with the output shape.
+    CShape { want: (usize, usize), got: (usize, usize) },
+    /// `execute_into` received an output of the wrong shape.
+    OutputShape { want: (usize, usize), got: (usize, usize) },
+    /// The descriptor asks for a combination the engine does not serve.
+    Unsupported { what: &'static str },
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            PlanError::InnerDim { a_cols, b_rows } => {
+                write!(f, "inner dimension mismatch: A has {a_cols} cols, B has {b_rows} rows")
+            }
+            PlanError::OperandShape { side, want, got } => {
+                write!(f, "operand {side} shape mismatch: descriptor wants {want:?}, got {got:?}")
+            }
+            PlanError::OperandMissing { side } => {
+                write!(f, "operand {side} has not been set on this plan")
+            }
+            PlanError::UnpinnedDims => {
+                write!(
+                    f,
+                    "plan has no pinned dimensions (any-shape descriptor); only execute_batched is available"
+                )
+            }
+            PlanError::BatchLength { a, b } => {
+                write!(f, "batch length mismatch: {a} A entries vs {b} B entries")
+            }
+            PlanError::BatchCount { want, got } => {
+                write!(f, "batch count mismatch: descriptor pins {want} entries, got {got}")
+            }
+            PlanError::BatchEntry { index, a, b } => {
+                write!(
+                    f,
+                    "batch entry {index}: inner dimension mismatch or descriptor violation for shapes {a:?} x {b:?}"
+                )
+            }
+            PlanError::CShape { want, got } => {
+                write!(f, "C operand shape mismatch: want {want:?}, got {got:?}")
+            }
+            PlanError::OutputShape { want, got } => {
+                write!(f, "output shape mismatch: want {want:?}, got {got:?}")
+            }
+            PlanError::Unsupported { what } => write!(f, "not supported by this plan: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// The immutable GEMM problem description (cuBLASLt-style descriptor).
+///
+/// Build one with [`GemmDesc::new`] (pinned dimensions),
+/// [`GemmDesc::square`] or [`GemmDesc::any_shape`] (heterogeneous batched
+/// work), refine it with the builder methods, then [`GemmDesc::build`] /
+/// [`GemmDesc::plan`] it into a [`GemmPlan`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GemmDesc {
+    dims: Option<(usize, usize, usize)>,
+    precision: Precision,
+    alpha: f32,
+    beta: f32,
+    batch: Option<usize>,
+    threads: usize,
+    pool: Option<PoolMode>,
+}
+
+impl GemmDesc {
+    /// Describe `C[m x n] = alpha * A[m x k] x B[k x n] + beta * C`.
+    /// Defaults: [`Precision::Mixed`], `alpha = 1`, `beta = 0`, unpinned
+    /// batch count, auto worker count, ambient pool mode.
+    pub fn new(m: usize, k: usize, n: usize) -> GemmDesc {
+        GemmDesc {
+            dims: Some((m, k, n)),
+            precision: Precision::Mixed,
+            alpha: 1.0,
+            beta: 0.0,
+            batch: None,
+            threads: 0,
+            pool: None,
+        }
+    }
+
+    /// Square `n^3` problem — the coordinator's bucket key shape.
+    pub fn square(n: usize) -> GemmDesc {
+        GemmDesc::new(n, n, n)
+    }
+
+    /// Shape-wildcard descriptor: per-entry shapes are validated at
+    /// [`GemmPlan::execute_batched`] time instead of being pinned here.
+    /// Such a plan serves only batched execution ([`PlanError::UnpinnedDims`]
+    /// otherwise).
+    pub fn any_shape() -> GemmDesc {
+        GemmDesc { dims: None, ..GemmDesc::new(0, 0, 0) }
+    }
+
+    /// Select the numerical mode (default [`Precision::Mixed`]).
+    pub fn precision(mut self, p: Precision) -> GemmDesc {
+        self.precision = p;
+        self
+    }
+
+    /// Set the epilogue scalars `alpha` and `beta` in one call.
+    /// `beta == 0` guarantees `C` is never read (cuBLAS semantics).
+    pub fn epilogue(mut self, alpha: f32, beta: f32) -> GemmDesc {
+        self.alpha = alpha;
+        self.beta = beta;
+        self
+    }
+
+    /// Set `alpha` only.
+    pub fn alpha(mut self, alpha: f32) -> GemmDesc {
+        self.alpha = alpha;
+        self
+    }
+
+    /// Set `beta` only.
+    pub fn beta(mut self, beta: f32) -> GemmDesc {
+        self.beta = beta;
+        self
+    }
+
+    /// Pin the batch count [`GemmPlan::execute_batched`] must be called
+    /// with (unpinned by default: any length is accepted).
+    pub fn batch(mut self, count: usize) -> GemmDesc {
+        self.batch = Some(count);
+        self
+    }
+
+    /// Worker-count override: `0` = auto (serial below the engine cutoff,
+    /// [`engine::default_threads`] otherwise), `t > 0` = exactly `t`.
+    pub fn threads(mut self, threads: usize) -> GemmDesc {
+        self.threads = threads;
+        self
+    }
+
+    /// Annotate the plan with a pool-mode hint.  **Metadata only — this
+    /// does not change the execution substrate**: execution always
+    /// follows the process-global [`engine::pool_mode`] (flip it with
+    /// [`engine::set_pool_mode`]); the mode is bitwise inert either way
+    /// (the engine contract).  The hint is carried for bench/metrics
+    /// attribution via [`GemmPlan::pool_mode`].
+    pub fn pool_hint(mut self, mode: PoolMode) -> GemmDesc {
+        self.pool = Some(mode);
+        self
+    }
+
+    /// The pinned `(m, k, n)`, if any.
+    pub fn dims(&self) -> Option<(usize, usize, usize)> {
+        self.dims
+    }
+
+    /// Validate the descriptor into an operand-less plan (operands are
+    /// supplied later via [`GemmPlan::set_a`] / [`GemmPlan::set_b`], or
+    /// per call for batched execution).
+    pub fn build(self) -> Result<GemmPlan, PlanError> {
+        if let (Precision::Refined(mode), Some(_)) = (self.precision, self.batch) {
+            if mode != RefineMode::None {
+                return Err(PlanError::Unsupported { what: "batched refined GEMM plans" });
+            }
+        }
+        let pool = self.pool.unwrap_or_else(engine::pool_mode);
+        Ok(GemmPlan { desc: self, pool, a: OperandA::Unset, b: OperandB::Unset })
+    }
+
+    /// Validate and pack both operands: the one-shot construction every
+    /// legacy wrapper uses.
+    pub fn plan(self, a: &Matrix, b: &Matrix) -> Result<GemmPlan, PlanError> {
+        if a.cols() != b.rows() {
+            return Err(PlanError::InnerDim { a_cols: a.cols(), b_rows: b.rows() });
+        }
+        let mut p = self.build()?;
+        p.set_a(a)?;
+        p.set_b(b)?;
+        Ok(p)
+    }
+}
+
+/// Packed left operand, one variant per descriptor precision.
+enum OperandA {
+    Unset,
+    /// [`Precision::F32`]: exact f32 panels.
+    Full(PackedA),
+    /// [`Precision::Mixed`] / `Refined(None)`: f16-rounded panels.
+    Rounded(PackedA),
+    /// [`Precision::F16`]: binary16 storage.
+    Half(PackedHalfA),
+    /// Refined modes that recover A's rounding error: the rounded matrix
+    /// and its rounded residual, both packed once.
+    Split { hi: PackedA, lo: PackedA },
+}
+
+/// Packed right operand (see [`OperandA`]).
+enum OperandB {
+    Unset,
+    Full(PackedB),
+    Rounded(PackedB),
+    Half(PackedHalfB),
+    Split { hi: PackedB, lo: PackedB },
+}
+
+/// Does this refinement mode split the left operand?
+fn refines_a(mode: RefineMode) -> bool {
+    matches!(mode, RefineMode::RefineA | RefineMode::RefineAB)
+}
+
+/// Does this refinement mode split the right operand?
+fn refines_b(mode: RefineMode) -> bool {
+    matches!(mode, RefineMode::RefineAB)
+}
+
+/// Eq. 1 residual split: elementwise rounded-to-half copy (still f32
+/// storage) and the rounded remainder — identical to the legacy
+/// refinement's split, order and all.
+fn split_matrix(x: &Matrix) -> (Matrix, Matrix) {
+    let (r, c) = x.shape();
+    let hi = Matrix::from_fn(r, c, |i, j| f16_to_f32(f32_to_f16(x[(i, j)])));
+    let lo = Matrix::from_fn(r, c, |i, j| f16_to_f32(f32_to_f16(x[(i, j)] - hi[(i, j)])));
+    (hi, lo)
+}
+
+/// Elementwise `acc += part` — the refinement chains' exact f32 chaining
+/// step (same expression and order as the legacy implementation).
+fn add_assign(acc: &mut Matrix, part: &Matrix) {
+    for (o, p) in acc.as_mut_slice().iter_mut().zip(part.as_slice()) {
+        *o += p;
+    }
+}
+
+/// A validated, immutable execution plan owning its packed operands.
+///
+/// Cheap to execute repeatedly; see the module docs for the reuse story.
+pub struct GemmPlan {
+    desc: GemmDesc,
+    pool: PoolMode,
+    a: OperandA,
+    b: OperandB,
+}
+
+impl GemmPlan {
+    /// The descriptor this plan was validated from.
+    pub fn desc(&self) -> &GemmDesc {
+        &self.desc
+    }
+
+    /// The pool mode recorded at build time (the descriptor's
+    /// [`GemmDesc::pool_hint`], else the ambient [`engine::pool_mode`]).
+    /// Attribution metadata only: execution always follows the
+    /// process-global mode, which is numerically inert either way.
+    pub fn pool_mode(&self) -> PoolMode {
+        self.pool
+    }
+
+    /// Are both operands packed and ready for `execute`?
+    pub fn ready(&self) -> bool {
+        !matches!(self.a, OperandA::Unset) && !matches!(self.b, OperandB::Unset)
+    }
+
+    fn dims_pinned(&self) -> Result<(usize, usize, usize), PlanError> {
+        self.desc.dims.ok_or(PlanError::UnpinnedDims)
+    }
+
+    /// Pack (or re-pack, reusing the buffer allocation) the left operand.
+    /// The other operand's packed panels are untouched — swapping one
+    /// side is the refinement chains' and bucket lanes' reuse pattern.
+    pub fn set_a(&mut self, a: &Matrix) -> Result<(), PlanError> {
+        let (m, k, _) = self.dims_pinned()?;
+        if a.shape() != (m, k) {
+            return Err(PlanError::OperandShape { side: "A", want: (m, k), got: a.shape() });
+        }
+        match self.desc.precision {
+            Precision::F32 => match &mut self.a {
+                OperandA::Full(p) => p.repack(a, InputPrecision::Full),
+                slot => *slot = OperandA::Full(PackedA::pack(a, InputPrecision::Full)),
+            },
+            Precision::Mixed | Precision::Refined(RefineMode::None) => match &mut self.a {
+                OperandA::Rounded(p) => p.repack(a, InputPrecision::F16Rounded),
+                slot => *slot = OperandA::Rounded(PackedA::pack(a, InputPrecision::F16Rounded)),
+            },
+            Precision::F16 => match &mut self.a {
+                OperandA::Half(p) => p.repack(a),
+                slot => *slot = OperandA::Half(PackedHalfA::pack(a)),
+            },
+            Precision::Refined(mode) => {
+                debug_assert!(refines_a(mode));
+                let (him, lom) = split_matrix(a);
+                match &mut self.a {
+                    OperandA::Split { hi, lo } => {
+                        hi.repack(&him, InputPrecision::F16Rounded);
+                        lo.repack(&lom, InputPrecision::F16Rounded);
+                    }
+                    slot => {
+                        *slot = OperandA::Split {
+                            hi: PackedA::pack(&him, InputPrecision::F16Rounded),
+                            lo: PackedA::pack(&lom, InputPrecision::F16Rounded),
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pack (or re-pack) the right operand; see [`GemmPlan::set_a`].
+    pub fn set_b(&mut self, b: &Matrix) -> Result<(), PlanError> {
+        let (_, k, n) = self.dims_pinned()?;
+        if b.shape() != (k, n) {
+            return Err(PlanError::OperandShape { side: "B", want: (k, n), got: b.shape() });
+        }
+        match self.desc.precision {
+            Precision::F32 => match &mut self.b {
+                OperandB::Full(p) => p.repack(b, InputPrecision::Full),
+                slot => *slot = OperandB::Full(PackedB::pack(b, InputPrecision::Full)),
+            },
+            Precision::Mixed | Precision::Refined(RefineMode::None) => match &mut self.b {
+                OperandB::Rounded(p) => p.repack(b, InputPrecision::F16Rounded),
+                slot => *slot = OperandB::Rounded(PackedB::pack(b, InputPrecision::F16Rounded)),
+            },
+            Precision::F16 => match &mut self.b {
+                OperandB::Half(p) => p.repack(b),
+                slot => *slot = OperandB::Half(PackedHalfB::pack(b)),
+            },
+            Precision::Refined(mode) => {
+                if refines_b(mode) {
+                    let (him, lom) = split_matrix(b);
+                    match &mut self.b {
+                        OperandB::Split { hi, lo } => {
+                            hi.repack(&him, InputPrecision::F16Rounded);
+                            lo.repack(&lom, InputPrecision::F16Rounded);
+                        }
+                        slot => {
+                            *slot = OperandB::Split {
+                                hi: PackedB::pack(&him, InputPrecision::F16Rounded),
+                                lo: PackedB::pack(&lom, InputPrecision::F16Rounded),
+                            }
+                        }
+                    }
+                } else {
+                    // RefineA consumes the rounded B in both of its GEMMs
+                    match &mut self.b {
+                        OperandB::Rounded(p) => p.repack(b, InputPrecision::F16Rounded),
+                        slot => {
+                            *slot = OperandB::Rounded(PackedB::pack(b, InputPrecision::F16Rounded))
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with no prior C: `alpha * A x B` under the plan's
+    /// precision.  Reuses the packed panels; never re-packs.
+    pub fn execute(&self) -> Result<Matrix, PlanError> {
+        self.execute_with(None)
+    }
+
+    /// Execute the full epilogue `alpha * A x B + beta * C`.  When
+    /// `beta == 0`, `C` is never read (cuBLAS semantics: a NaN-filled C
+    /// cannot reach the output); its shape is still validated.
+    pub fn execute_with(&self, c: Option<&Matrix>) -> Result<Matrix, PlanError> {
+        let (m, _, n) = self.dims_pinned()?;
+        if let Some(cm) = c {
+            if cm.shape() != (m, n) {
+                return Err(PlanError::CShape { want: (m, n), got: cm.shape() });
+            }
+        }
+        let ceff = if self.desc.beta == 0.0 { None } else { c };
+        let (alpha, beta, t) = (self.desc.alpha, self.desc.beta, self.desc.threads);
+        match (&self.a, &self.b) {
+            (OperandA::Unset, _) => Err(PlanError::OperandMissing { side: "A" }),
+            (_, OperandB::Unset) => Err(PlanError::OperandMissing { side: "B" }),
+            (OperandA::Full(pa), OperandB::Full(pb))
+            | (OperandA::Rounded(pa), OperandB::Rounded(pb)) => {
+                Ok(engine::gemm_packed(pa, pb, ceff, alpha, beta, t))
+            }
+            (OperandA::Half(pa), OperandB::Half(pb)) => {
+                Ok(self.epilogue(engine::hgemm_packed(pa, pb, t), ceff))
+            }
+            (OperandA::Split { .. }, _) | (_, OperandB::Split { .. }) => {
+                Ok(self.epilogue(self.refined_sum(t), ceff))
+            }
+            _ => unreachable!("operand variants always agree with the plan precision"),
+        }
+    }
+
+    /// Execute into a caller-provided output buffer (shape-checked); the
+    /// engine-backed precisions write `out` directly with no allocation.
+    pub fn execute_into(&self, out: &mut Matrix, c: Option<&Matrix>) -> Result<(), PlanError> {
+        let (m, _, n) = self.dims_pinned()?;
+        if out.shape() != (m, n) {
+            return Err(PlanError::OutputShape { want: (m, n), got: out.shape() });
+        }
+        if let Some(cm) = c {
+            if cm.shape() != (m, n) {
+                return Err(PlanError::CShape { want: (m, n), got: cm.shape() });
+            }
+        }
+        match (&self.a, &self.b) {
+            (OperandA::Unset, _) => Err(PlanError::OperandMissing { side: "A" }),
+            (_, OperandB::Unset) => Err(PlanError::OperandMissing { side: "B" }),
+            (OperandA::Full(pa), OperandB::Full(pb))
+            | (OperandA::Rounded(pa), OperandB::Rounded(pb)) => {
+                let ceff = if self.desc.beta == 0.0 { None } else { c };
+                engine::gemm_packed_into(
+                    out,
+                    pa,
+                    pb,
+                    ceff,
+                    self.desc.alpha,
+                    self.desc.beta,
+                    self.desc.threads,
+                );
+                Ok(())
+            }
+            _ => {
+                let r = self.execute_with(c)?;
+                out.as_mut_slice().copy_from_slice(r.as_slice());
+                Ok(())
+            }
+        }
+    }
+
+    /// Batched execution `out[i] = a[i] x b[i]` under the plan's
+    /// precision, entries distributed over the engine pool.  Pinned-dims
+    /// plans require every entry to match the descriptor exactly;
+    /// [`GemmDesc::any_shape`] plans accept heterogeneous entries (the
+    /// coordinator's un-padded shape buckets).  The epilogue must be the
+    /// default `(alpha, beta) = (1, 0)`.
+    pub fn execute_batched(&self, a: &[Matrix], b: &[Matrix]) -> Result<Vec<Matrix>, PlanError> {
+        if a.len() != b.len() {
+            return Err(PlanError::BatchLength { a: a.len(), b: b.len() });
+        }
+        if let Some(count) = self.desc.batch {
+            if a.len() != count {
+                return Err(PlanError::BatchCount { want: count, got: a.len() });
+            }
+        }
+        if self.desc.alpha != 1.0 || self.desc.beta != 0.0 {
+            return Err(PlanError::Unsupported { what: "alpha/beta epilogue on batched execution" });
+        }
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let consistent = match self.desc.dims {
+                Some((m, k, n)) => x.shape() == (m, k) && y.shape() == (k, n),
+                None => x.cols() == y.rows(),
+            };
+            if !consistent {
+                return Err(PlanError::BatchEntry { index: i, a: x.shape(), b: y.shape() });
+            }
+        }
+        let t = self.desc.threads;
+        match self.desc.precision {
+            Precision::F32 => Ok(engine::batched_sgemm(a, b, t)),
+            Precision::Mixed | Precision::Refined(RefineMode::None) => {
+                Ok(engine::batched_mixed_gemm(a, b, t))
+            }
+            Precision::F16 => Ok(engine::batched_hgemm(a, b, t)),
+            Precision::Refined(_) => {
+                Err(PlanError::Unsupported { what: "batched refined GEMM plans" })
+            }
+        }
+    }
+
+    /// The refinement chain over the cached split panels, in the legacy
+    /// summation order (residual products first): Eq. 2 is
+    /// `R_A B_h + A_h B_h`, Eq. 3 is
+    /// `R_A R_B + A_h R_B + R_A B_h + A_h B_h`.
+    fn refined_sum(&self, t: usize) -> Matrix {
+        match (&self.a, &self.b) {
+            (OperandA::Split { hi, lo }, OperandB::Rounded(pb)) => {
+                let mut acc = engine::gemm_packed(lo, pb, None, 1.0, 0.0, t);
+                let main = engine::gemm_packed(hi, pb, None, 1.0, 0.0, t);
+                add_assign(&mut acc, &main);
+                acc
+            }
+            (OperandA::Split { hi: ah, lo: al }, OperandB::Split { hi: bh, lo: bl }) => {
+                let mut acc = engine::gemm_packed(al, bl, None, 1.0, 0.0, t);
+                for part in [
+                    engine::gemm_packed(ah, bl, None, 1.0, 0.0, t),
+                    engine::gemm_packed(al, bh, None, 1.0, 0.0, t),
+                    engine::gemm_packed(ah, bh, None, 1.0, 0.0, t),
+                ] {
+                    add_assign(&mut acc, &part);
+                }
+                acc
+            }
+            _ => unreachable!("refined plans always split A (and split B only for RefineAB)"),
+        }
+    }
+
+    /// The single epilogue implementation for the non-engine-backed
+    /// products (f16 and refined sums): `alpha * prod + beta * C`, with
+    /// `beta == 0` never reading `C` (callers pass `c = None` then).
+    /// `(1, 0)` returns the product unchanged, preserving the legacy
+    /// paths' bits.
+    fn epilogue(&self, mut prod: Matrix, c: Option<&Matrix>) -> Matrix {
+        let (alpha, beta) = (self.desc.alpha, self.desc.beta);
+        if alpha == 1.0 && beta == 0.0 {
+            return prod;
+        }
+        match c {
+            None => {
+                for v in prod.as_mut_slice() {
+                    *v = alpha * *v;
+                }
+                prod
+            }
+            Some(c) => {
+                let cv = c.as_slice();
+                for (v, cval) in prod.as_mut_slice().iter_mut().zip(cv) {
+                    *v = alpha * *v + beta * cval;
+                }
+                prod
+            }
+        }
+    }
+}
+
+/// One-shot plan execution — the body of every legacy single-GEMM
+/// wrapper (`sgemm_blocked`, `mixed_gemm`, `hgemm`, the engine
+/// convenience functions).  Panics on validation errors with the typed
+/// error's message, preserving the wrappers' historical panic behaviour.
+pub(crate) fn oneshot(
+    precision: Precision,
+    a: &Matrix,
+    b: &Matrix,
+    c: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+    threads: usize,
+) -> Matrix {
+    GemmDesc::new(a.rows(), a.cols(), b.cols())
+        .precision(precision)
+        .epilogue(alpha, beta)
+        .threads(threads)
+        .plan(a, b)
+        .and_then(|p| p.execute_with(c))
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// One-shot batched plan execution — the body of the legacy `batched_*`
+/// wrappers (heterogeneous entry shapes allowed, as before).
+pub(crate) fn oneshot_batched(
+    precision: Precision,
+    a: &[Matrix],
+    b: &[Matrix],
+    threads: usize,
+) -> Vec<Matrix> {
+    GemmDesc::any_shape()
+        .precision(precision)
+        .threads(threads)
+        .build()
+        .and_then(|p| p.execute_batched(a, b))
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{hgemm_scalar, mixed_gemm_scalar, sgemm_naive};
+    use crate::workload::{uniform_matrix, Rng};
+
+    #[test]
+    fn desc_defaults_and_builder() {
+        let d = GemmDesc::new(3, 4, 5).alpha(2.0).beta(0.5).threads(2);
+        assert_eq!(d.dims(), Some((3, 4, 5)));
+        assert_eq!(d, GemmDesc::new(3, 4, 5).epilogue(2.0, 0.5).threads(2));
+        assert_eq!(GemmDesc::square(7).dims(), Some((7, 7, 7)));
+        assert_eq!(GemmDesc::any_shape().dims(), None);
+    }
+
+    #[test]
+    fn plan_rejects_inner_dim_mismatch() {
+        let a = Matrix::zeros(4, 5);
+        let b = Matrix::zeros(6, 4);
+        let err = GemmDesc::new(4, 5, 4).plan(&a, &b).err().unwrap();
+        assert_eq!(err, PlanError::InnerDim { a_cols: 5, b_rows: 6 });
+        assert!(err.to_string().contains("inner dimension mismatch"));
+    }
+
+    #[test]
+    fn set_operand_rejects_shape_mismatch() {
+        let mut p = GemmDesc::new(4, 5, 6).build().unwrap();
+        let err = p.set_a(&Matrix::zeros(4, 6)).err().unwrap();
+        assert_eq!(err, PlanError::OperandShape { side: "A", want: (4, 5), got: (4, 6) });
+        assert!(p.set_a(&Matrix::zeros(4, 5)).is_ok());
+        let err = p.set_b(&Matrix::zeros(5, 7)).err().unwrap();
+        assert_eq!(err, PlanError::OperandShape { side: "B", want: (5, 6), got: (5, 7) });
+    }
+
+    #[test]
+    fn execute_requires_operands() {
+        let p = GemmDesc::new(2, 2, 2).build().unwrap();
+        assert!(!p.ready());
+        assert_eq!(p.execute().err().unwrap(), PlanError::OperandMissing { side: "A" });
+    }
+
+    #[test]
+    fn unpinned_plans_are_batch_only() {
+        let p = GemmDesc::any_shape().build().unwrap();
+        assert_eq!(p.execute().err().unwrap(), PlanError::UnpinnedDims);
+    }
+
+    #[test]
+    fn batched_validation_typed_errors() {
+        let p = GemmDesc::new(2, 2, 2).batch(2).build().unwrap();
+        let one = vec![Matrix::zeros(2, 2)];
+        let two = vec![Matrix::zeros(2, 2), Matrix::zeros(2, 2)];
+        let err = p.execute_batched(&one, &two).err().unwrap();
+        assert_eq!(err, PlanError::BatchLength { a: 1, b: 2 });
+        assert!(err.to_string().contains("batch length mismatch"));
+        assert_eq!(
+            p.execute_batched(&one, &one).err().unwrap(),
+            PlanError::BatchCount { want: 2, got: 1 }
+        );
+        let odd = vec![Matrix::zeros(2, 2), Matrix::zeros(3, 3)];
+        assert_eq!(
+            p.execute_batched(&odd, &two).err().unwrap(),
+            PlanError::BatchEntry { index: 1, a: (3, 3), b: (2, 2) }
+        );
+    }
+
+    #[test]
+    fn batched_refined_rejected_at_build() {
+        let err = GemmDesc::any_shape()
+            .precision(Precision::Refined(RefineMode::RefineA))
+            .batch(4)
+            .build()
+            .err()
+            .unwrap();
+        assert!(matches!(err, PlanError::Unsupported { .. }));
+    }
+
+    #[test]
+    fn plan_matches_oracles_per_precision() {
+        let mut rng = Rng::new(41);
+        let a = uniform_matrix(&mut rng, 18, 23, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 23, 11, -1.0, 1.0);
+        let p = GemmDesc::new(18, 23, 11).precision(Precision::F32).plan(&a, &b).unwrap();
+        assert_eq!(p.execute().unwrap(), sgemm_naive(&a, &b, None, 1.0, 0.0));
+        let p = GemmDesc::new(18, 23, 11).precision(Precision::Mixed).plan(&a, &b).unwrap();
+        assert_eq!(p.execute().unwrap(), mixed_gemm_scalar(&a, &b, None, 1.0, 0.0));
+        let p = GemmDesc::new(18, 23, 11).precision(Precision::F16).plan(&a, &b).unwrap();
+        assert_eq!(p.execute().unwrap(), hgemm_scalar(&a, &b));
+    }
+
+    #[test]
+    fn execute_into_matches_execute() {
+        let mut rng = Rng::new(42);
+        let a = uniform_matrix(&mut rng, 9, 14, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 14, 7, -1.0, 1.0);
+        let c = uniform_matrix(&mut rng, 9, 7, -1.0, 1.0);
+        let p = GemmDesc::new(9, 14, 7).epilogue(0.5, 2.0).plan(&a, &b).unwrap();
+        let want = p.execute_with(Some(&c)).unwrap();
+        let mut out = Matrix::zeros(9, 7);
+        p.execute_into(&mut out, Some(&c)).unwrap();
+        assert_eq!(out, want);
+        let mut wrong = Matrix::zeros(7, 9);
+        assert_eq!(
+            p.execute_into(&mut wrong, None).err().unwrap(),
+            PlanError::OutputShape { want: (9, 7), got: (7, 9) }
+        );
+    }
+
+    #[test]
+    fn beta_zero_never_reads_c() {
+        // cuBLAS semantics: beta == 0 must not read C, even a NaN-filled
+        // one — the single-epilogue regression the plan layer fixes
+        let mut rng = Rng::new(43);
+        let a = uniform_matrix(&mut rng, 8, 8, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 8, 8, -1.0, 1.0);
+        let nan_c = Matrix::from_fn(8, 8, |_, _| f32::NAN);
+        for prec in [
+            Precision::F32,
+            Precision::Mixed,
+            Precision::F16,
+            Precision::Refined(RefineMode::RefineAB),
+        ] {
+            let p = GemmDesc::square(8).precision(prec).epilogue(1.5, 0.0).plan(&a, &b).unwrap();
+            let got = p.execute_with(Some(&nan_c)).unwrap();
+            assert_eq!(got, p.execute().unwrap(), "{prec:?}");
+            assert!(got.as_slice().iter().all(|v| v.is_finite()), "{prec:?} leaked NaN");
+        }
+    }
+
+    #[test]
+    fn pool_hint_recorded_not_executed() {
+        // the hint is attribution metadata; it must not flip the global
+        // execution substrate
+        let ambient = engine::pool_mode();
+        let p = GemmDesc::square(4).pool_hint(PoolMode::Scoped).build().unwrap();
+        assert_eq!(p.pool_mode(), PoolMode::Scoped);
+        assert_eq!(engine::pool_mode(), ambient);
+    }
+}

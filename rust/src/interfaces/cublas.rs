@@ -4,20 +4,43 @@
 //!
 //! `gemm_ex` dispatches on the mode exactly the way cuBLAS does: default
 //! mode computes in full f32 on "CUDA cores"; TensorOp mode rounds inputs
-//! to f16 and accumulates in f32 on "Tensor Cores".  Every dispatch target
-//! is engine-backed ([`crate::gemm::engine`]): this handle is the
-//! coordinator's CPU-fallback path, so its throughput is the fallback
-//! lane's throughput — and because the engine's worker pool is
-//! persistent, a stream of fallback requests reuses parked workers
-//! instead of spawning threads per call.  Batched GEMM is also
-//! provided, including the paper's footnote 1 constraint: at the time of
-//! writing, `gemm_batched` on Tensor Cores was *unsupported* — the
-//! coordinator's batcher is the WMMA workaround, and this API returns an
-//! error in TensorOp mode unless `allow_post_9_1_128` (the cuBLAS release
-//! that added it) is set.
+//! to f16 and accumulates in f32 on "Tensor Cores".  Every dispatch
+//! target is a [`crate::gemm::plan::GemmPlan`] — `(mode, algo)` maps to
+//! a [`crate::gemm::plan::Precision`] and the alpha/beta epilogue runs
+//! the plan layer's single implementation (cuBLAS semantics included:
+//! `beta == 0` never reads C).  This handle is the coordinator's
+//! CPU-fallback path, so its throughput is the fallback lane's
+//! throughput — and because the engine's worker pool is persistent, a
+//! stream of fallback requests reuses parked workers instead of
+//! spawning threads per call.  Batched GEMM is also provided, including
+//! the paper's footnote 1 constraint: at the time of writing,
+//! `gemm_batched` on Tensor Cores was *unsupported* — the coordinator's
+//! batcher is the WMMA workaround, and this API returns an error in
+//! TensorOp mode unless `allow_post_9_1_128` (the cuBLAS release that
+//! added it) is set.
 
-use crate::gemm::{mixed_gemm, sgemm_blocked, Matrix};
-use crate::precision::{refine_gemm, RefineMode};
+use crate::gemm::plan::{GemmDesc, PlanError, Precision};
+use crate::gemm::Matrix;
+use crate::precision::RefineMode;
+
+/// Map a typed plan rejection onto the closest cublasStatus_t-style
+/// error, keeping the diagnostic specific (cuBLAS reports these cases as
+/// CUBLAS_STATUS_INVALID_VALUE with distinct causes).
+fn plan_err(e: PlanError) -> CublasError {
+    CublasError::InvalidValue(match e {
+        PlanError::InnerDim { .. } => "inner dimensions differ",
+        PlanError::OperandShape { .. } => "operand shape disagrees with the descriptor",
+        PlanError::CShape { .. } => "C matrix shape disagrees with the output",
+        PlanError::OutputShape { .. } => "output shape disagrees with the descriptor",
+        PlanError::BatchLength { .. } => "batch length mismatch",
+        PlanError::BatchCount { .. } => "batch count disagrees with the descriptor",
+        PlanError::BatchEntry { .. } => "batch entry shape is inconsistent",
+        PlanError::OperandMissing { .. } | PlanError::UnpinnedDims => {
+            "plan operands not initialized"
+        }
+        PlanError::Unsupported { .. } => "operation not supported by the plan",
+    })
+}
 
 /// cuBLAS math modes (cublasMath_t).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -86,7 +109,10 @@ impl CublasHandle {
     }
 
     /// cublasGemmEx(): C = alpha*A*B + beta*C, dispatching on math mode
-    /// and algorithm.
+    /// and algorithm.  Builds a one-shot plan at the mapped precision;
+    /// the former hand-rolled refined-path scaling now rides the plan's
+    /// single epilogue (so `beta == 0` never reads C — cuBLAS
+    /// semantics).
     pub fn gemm_ex(
         &self,
         a: &Matrix,
@@ -99,29 +125,34 @@ impl CublasHandle {
         if a.cols() != b.rows() {
             return Err(CublasError::InvalidValue("inner dimensions differ"));
         }
-        match (self.math_mode, algo) {
-            (MathMode::Default, GemmAlgo::Default) => {
-                Ok(sgemm_blocked(a, b, c, alpha, beta))
+        let precision = match (self.math_mode, algo) {
+            (MathMode::Default, GemmAlgo::Default) => Precision::F32,
+            (MathMode::Default, _) => {
+                return Err(CublasError::NotSupported(
+                    "refined algorithms require CUBLAS_TENSOR_OP_MATH",
+                ))
             }
-            (MathMode::Default, _) => Err(CublasError::NotSupported(
-                "refined algorithms require CUBLAS_TENSOR_OP_MATH",
-            )),
-            (MathMode::TensorOp, GemmAlgo::Default) => {
-                Ok(mixed_gemm(a, b, c, alpha, beta))
-            }
+            (MathMode::TensorOp, GemmAlgo::Default) => Precision::Mixed,
             (MathMode::TensorOp, GemmAlgo::RefinedTensorOpA) => {
-                Ok(scale_accum(refine_gemm(a, b, RefineMode::RefineA), c, alpha, beta))
+                Precision::Refined(RefineMode::RefineA)
             }
             (MathMode::TensorOp, GemmAlgo::RefinedTensorOpAB) => {
-                Ok(scale_accum(refine_gemm(a, b, RefineMode::RefineAB), c, alpha, beta))
+                Precision::Refined(RefineMode::RefineAB)
             }
-        }
+        };
+        GemmDesc::new(a.rows(), a.cols(), b.cols())
+            .precision(precision)
+            .epilogue(alpha, beta)
+            .plan(a, b)
+            .and_then(|p| p.execute_with(c))
+            .map_err(plan_err)
     }
 
-    /// cublasSgemmBatched() / the Tensor-Core batched GEMM.  Returns
-    /// `NotSupported` in TensorOp mode unless the handle models cuBLAS
-    /// >= 9.1.128 — the exact constraint that made the paper write its
-    /// own batched WMMA kernel (§IV-B + footnote 1).
+    /// cublasSgemmBatched() / the Tensor-Core batched GEMM, as a
+    /// shape-wildcard plan with the batch count pinned to the call.
+    /// Returns `NotSupported` in TensorOp mode unless the handle models
+    /// cuBLAS >= 9.1.128 — the exact constraint that made the paper
+    /// write its own batched WMMA kernel (§IV-B + footnote 1).
     pub fn gemm_batched(
         &self,
         a: &[Matrix],
@@ -130,38 +161,29 @@ impl CublasHandle {
         if a.len() != b.len() {
             return Err(CublasError::InvalidValue("batch length mismatch"));
         }
-        match self.math_mode {
-            MathMode::Default => Ok(crate::gemm::batched_sgemm(a, b)),
-            MathMode::TensorOp if self.allow_post_9_1_128 => {
-                Ok(crate::gemm::batched_mixed_gemm(a, b))
+        let precision = match self.math_mode {
+            MathMode::Default => Precision::F32,
+            MathMode::TensorOp if self.allow_post_9_1_128 => Precision::Mixed,
+            MathMode::TensorOp => {
+                return Err(CublasError::NotSupported(
+                    "batched GEMM is not supported by NVIDIA Tensor Cores \
+                     (cuBLAS < 9.1.128); use the WMMA batcher",
+                ))
             }
-            MathMode::TensorOp => Err(CublasError::NotSupported(
-                "batched GEMM is not supported by NVIDIA Tensor Cores \
-                 (cuBLAS < 9.1.128); use the WMMA batcher",
-            )),
-        }
-    }
-}
-
-fn scale_accum(mut prod: Matrix, c: Option<&Matrix>, alpha: f32, beta: f32) -> Matrix {
-    match c {
-        None => {
-            for v in prod.as_mut_slice() {
-                *v *= alpha;
-            }
-            prod
-        }
-        Some(c) => {
-            let (r, n) = prod.shape();
-            Matrix::from_fn(r, n, |i, j| alpha * prod[(i, j)] + beta * c[(i, j)])
-        }
+        };
+        GemmDesc::any_shape()
+            .precision(precision)
+            .batch(a.len())
+            .build()
+            .and_then(|p| p.execute_batched(a, b))
+            .map_err(plan_err)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::gemm::dgemm_naive;
+    use crate::gemm::{dgemm_naive, mixed_gemm};
     use crate::workload::{uniform_batch, uniform_matrix, Rng};
 
     #[test]

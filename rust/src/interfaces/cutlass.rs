@@ -11,6 +11,7 @@
 //! techniques ... and report the timing of the set-up with higher
 //! performance".
 
+use crate::gemm::plan::{GemmDesc, Precision};
 use crate::gemm::Matrix;
 use crate::tcemu::FRAGMENT_DIM;
 
@@ -87,11 +88,14 @@ impl CutlassGemm {
     ///
     /// The threadblock/warp/K-panel loop nest accumulated each C element
     /// in ascending-k order regardless of the policy — the policy is
-    /// numerically inert by design — so the product now executes on the
-    /// packed multithreaded engine ([`crate::gemm::engine::mixed_gemm`]),
-    /// bitwise identical for every policy (asserted in the tests below).
-    /// The policy's *performance* meaning lives on in the simulator
-    /// (`sim::kernels`), which models the staged-panel traffic per shape.
+    /// numerically inert by design — so the product executes as a
+    /// [`crate::gemm::plan::GemmPlan`] at
+    /// [`crate::gemm::plan::Precision::Mixed`], bitwise identical for
+    /// every policy (asserted in the tests below).  This mirrors real
+    /// CUTLASS, whose device-level `Gemm` is itself a compiled plan over
+    /// the template parameters.  The policy's *performance* meaning
+    /// lives on in the simulator (`sim::kernels`), which models the
+    /// staged-panel traffic per shape.
     pub fn run(&self, a: &Matrix, b: &Matrix) -> Matrix {
         let (m, k) = a.shape();
         let (k2, n) = b.shape();
@@ -100,7 +104,11 @@ impl CutlassGemm {
             m % FRAGMENT_DIM == 0 && n % FRAGMENT_DIM == 0 && k % FRAGMENT_DIM == 0,
             "dims must be multiples of {FRAGMENT_DIM}"
         );
-        crate::gemm::engine::mixed_gemm(a, b, None, 1.0, 0.0, 0)
+        GemmDesc::new(m, k, n)
+            .precision(Precision::Mixed)
+            .plan(a, b)
+            .and_then(|p| p.execute())
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 }
 

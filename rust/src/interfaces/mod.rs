@@ -9,13 +9,17 @@
 //! | CUTLASS templates        | [`cutlass`]        | tile-policy-parameterized GEMM |
 //! | cuBLAS + math mode       | [`cublas`]         | handle + `MathMode`, opaque kernels |
 //!
-//! All three execute on the same packed multithreaded engine
-//! ([`crate::gemm::engine`] — persistent pool, cache-blocked, 8x8
-//! microkernel), whose per-element chains match the
-//! [`crate::tcemu`] hardware emulation bit for bit — so the three layers
-//! agree exactly; what differs is the API surface, which is exactly the
-//! paper's point.  The simulator ([`crate::sim`]) assigns each its own
-//! performance model (naive WMMA vs tiled CUTLASS vs tuned cuBLAS).
+//! All three are rebuilt over the descriptor/plan layer
+//! ([`crate::gemm::plan`]): each call maps its surface onto a
+//! [`crate::gemm::plan::GemmDesc`] and executes the resulting plan on
+//! the packed multithreaded engine ([`crate::gemm::engine`] — persistent
+//! pool, cache-blocked, 8x8 microkernel), whose per-element chains match
+//! the [`crate::tcemu`] hardware emulation bit for bit — so the three
+//! layers agree exactly; what differs is the API surface, which is
+//! exactly the paper's point (and the plan layer *is* the
+//! descriptor-based surface the paper found fastest and most reusable).
+//! The simulator ([`crate::sim`]) assigns each its own performance model
+//! (naive WMMA vs tiled CUTLASS vs tuned cuBLAS).
 
 pub mod cublas;
 pub mod cutlass;

@@ -16,6 +16,7 @@
 //! variant: every tile load goes to "global memory" with no staging,
 //! which is why its simulated performance model is HBM-bound.
 
+use crate::gemm::plan::{GemmDesc, Precision};
 use crate::gemm::Matrix;
 use crate::tcemu::{mma_sync, AccumFragment, Fragment, Layout, FRAGMENT_DIM};
 
@@ -41,10 +42,10 @@ pub fn wmma_tensor_op(d: &mut [f32], a: &[f32], b: &[f32], ld: usize, layout: La
 /// accumulating over K fragment steps.  Requires dims divisible by 16.
 ///
 /// The warp grid's tile iteration is an ascending-k chain per output
-/// element — exactly the engine's contract — so the whole loop nest now
-/// executes on the packed multithreaded engine
-/// ([`crate::gemm::engine::mixed_gemm`]), bitwise identical to iterating
-/// `mma_sync` per tile (asserted against the oracle in the tests below).
+/// element — exactly the engine's contract — so the whole loop nest
+/// executes as a mixed-precision [`crate::gemm::plan::GemmPlan`],
+/// bitwise identical to iterating `mma_sync` per tile (asserted against
+/// the oracle in the tests below).
 pub fn wmma_tiled_gemm(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, k) = a.shape();
     let (k2, n) = b.shape();
@@ -53,7 +54,11 @@ pub fn wmma_tiled_gemm(a: &Matrix, b: &Matrix) -> Matrix {
         m % FRAGMENT_DIM == 0 && n % FRAGMENT_DIM == 0 && k % FRAGMENT_DIM == 0,
         "dims must be multiples of {FRAGMENT_DIM}"
     );
-    crate::gemm::engine::mixed_gemm(a, b, None, 1.0, 0.0, 0)
+    GemmDesc::new(m, k, n)
+        .precision(Precision::Mixed)
+        .plan(a, b)
+        .and_then(|p| p.execute())
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// §VI's batched-GEMM execution configuration: "the CUDA execution
@@ -67,16 +72,24 @@ pub const WARPS_PER_BLOCK: usize = 16;
 
 /// Batched 16x16 mixed-precision GEMM via warp-level WMMA ops.
 ///
-/// Each "warp" (one tile product) is one engine batched entry; the
-/// engine's worker pool plays the role of the blocks' parallel warps and
-/// produces the same bits as a serial loop of Listing-1 ops.
+/// Executes as a batched plan with the tile dims *and* the batch count
+/// pinned in the descriptor (the strictest [`GemmDesc`] validation in
+/// the crate).  Each "warp" (one tile product) is one engine batched
+/// entry; the engine's worker pool plays the role of the blocks'
+/// parallel warps and produces the same bits as a serial loop of
+/// Listing-1 ops.
 pub fn wmma_batched_gemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
     assert_eq!(a.len(), b.len(), "batch length mismatch");
     for (am, bm) in a.iter().zip(b) {
         assert_eq!(am.shape(), (FRAGMENT_DIM, FRAGMENT_DIM), "16x16 only");
         assert_eq!(bm.shape(), (FRAGMENT_DIM, FRAGMENT_DIM), "16x16 only");
     }
-    crate::gemm::engine::batched_mixed_gemm(a, b, 0)
+    GemmDesc::new(FRAGMENT_DIM, FRAGMENT_DIM, FRAGMENT_DIM)
+        .precision(Precision::Mixed)
+        .batch(a.len())
+        .build()
+        .and_then(|p| p.execute_batched(a, b))
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[cfg(test)]

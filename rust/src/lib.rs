@@ -7,12 +7,26 @@
 //! * **Numerics** — bit-exact software emulation of the Volta Tensor Core
 //!   mixed-precision contract ([`halfprec`], [`gemm`], [`tcemu`]) plus the
 //!   paper's precision-refinement technique ([`precision`]).
+//! * **Plan layer** — [`gemm::plan`], the crate's **single GEMM entry
+//!   point**, modeled on the descriptor-based cuBLAS surface the paper
+//!   found fastest and most reusable (§IV): a
+//!   [`gemm::GemmDesc`] (dims, [`gemm::Precision`], alpha/beta epilogue,
+//!   batch count, worker count) validates into an immutable
+//!   [`gemm::GemmPlan`] owning pre-packed operand panels, with
+//!   `execute`/`execute_into`/`execute_batched` and operand swapping
+//!   (`set_a`/`set_b`) for the refine chains' 2–4 products and the
+//!   coordinator's repeated shapes.  The plan epilogue is the crate's
+//!   one `alpha*AB + beta*C` implementation (cuBLAS rule: `beta == 0`
+//!   never reads C).  Every legacy entry point (`sgemm_blocked`,
+//!   `mixed_gemm`, `hgemm`, `batched_*`, the three interface layers,
+//!   `refine_gemm`, the coordinator lanes) is a thin wrapper over a
+//!   plan.
 //! * **Kernel engine** — [`gemm::engine`], the packed multithreaded GEMM
-//!   core (pack -> cache-blocked `kc`/`mc` loop nest -> 8x8
-//!   register-blocked microkernel -> deterministic **persistent worker
-//!   pool**) that executes every precision path.  The pool spawns lazily
-//!   once and parks its workers between jobs, so repeated calls pay no
-//!   thread-spawn latency (`TENSOREMU_POOL=scoped` restores per-call
+//!   core underneath the plan layer (pack -> cache-blocked `kc`/`mc`
+//!   loop nest -> 8x8 register-blocked microkernel -> deterministic
+//!   **persistent worker pool**).  The pool spawns lazily once and parks
+//!   its workers between jobs, so repeated calls pay no thread-spawn
+//!   latency (`TENSOREMU_POOL=scoped` restores per-call
 //!   `std::thread::scope` forks; `TENSOREMU_THREADS` pins the auto worker
 //!   count).  Blocking parameters `(MR, NR, KC, MC) = (8, 8, 256, 128)`
 //!   keep a `KC x NR` B block L1-resident and an `MC x KC` A block
@@ -20,26 +34,25 @@
 //!   `kc` blocks in a C-resident f32 tile so every output element keeps
 //!   one ascending-k chain — blocking and the optional explicit f32x8
 //!   microkernel (`--features simd`, runtime AVX detection, never FMA)
-//!   are bitwise invisible.  Paths served:
-//!   `sgemm_blocked` and the cuBLAS default mode (the paper's CUDA-core
-//!   sgemm, §IV), `mixed_gemm` and the WMMA/CUTLASS/cuBLAS TensorOp
-//!   layers (the §III Tensor Core contract), `hgemm` (the CUDA-core half
-//!   baseline of Fig. 6), the `batched_*` family (§IV-B / Fig. 7), the
-//!   `tcemu` warp tile loop, the §V refinement chains, and the
-//!   coordinator's CPU fallback lane.  The serial triple-loop kernels
-//!   survive as `*_scalar` oracles the engine must match bit for bit at
-//!   every {pool mode} x {worker count} x {shape} combination
-//!   (`tests/engine.rs`).
+//!   are bitwise invisible.  The serial triple-loop kernels survive as
+//!   `*_scalar` oracles the plans must match bit for bit at every
+//!   {pool mode} x {worker count} x {shape} combination
+//!   (`tests/engine.rs`, `tests/plan.rs`).
 //! * **Programmability** — the paper's three programming interfaces
-//!   re-implemented as Rust API layers over the emulation
-//!   ([`interfaces::wmma`], [`interfaces::cutlass`], [`interfaces::cublas`]).
+//!   re-implemented as Rust API layers over the plan layer
+//!   ([`interfaces::wmma`], [`interfaces::cutlass`], [`interfaces::cublas`]):
+//!   three surfaces, one descriptor underneath — which is the paper's
+//!   §IV point made executable.
 //! * **Performance** — a first-principles Volta V100 timing model
 //!   ([`sim`]) that regenerates the paper's Figs. 6-7, and in-tree
 //!   benches (`util::bench`) for the host-side hot paths, including the
-//!   engine-vs-scalar throughput comparison in `benches/hotpath.rs`.
+//!   engine-vs-scalar and cached-plan-vs-one-shot comparisons in
+//!   `benches/hotpath.rs`.
 //! * **Serving** — a GEMM-as-a-service coordinator ([`coordinator`])
 //!   executing AOT-compiled JAX/Pallas artifacts through PJRT
-//!   ([`runtime`]); Python never runs on the request path.
+//!   ([`runtime`]); Python never runs on the request path.  Square
+//!   requests no artifact covers ride a bucketed engine lane over the
+//!   service's per-edge cached plans instead of per-request fallback.
 //!
 //! Quickstart: `make artifacts && cargo run --release --example quickstart`.
 

@@ -1,22 +1,23 @@
 //! Precision refinement (paper §V, Eqs. 1–3) over the CPU emulation.
 //!
-//! The residual split (Eq. 1) comes from [`crate::halfprec::split_residual`];
-//! the refined products are sums of Tensor-Core-semantics GEMMs run on
-//! the packed engine ([`crate::gemm::engine`]).  The multi-pass chains
-//! reuse pre-packed operands: Eq. 2 consumes B in both of its GEMMs and
-//! Eq. 3 consumes each split operand twice, so each matrix is packed
-//! (and f16-rounded) exactly once per refinement — numerically identical
-//! to repacking per call, but the pack cost is paid once.  `RefineMode`
-//! is the knob the coordinator's precision policy
-//! ([`crate::coordinator::policy`]) turns: more refinement = lower error
-//! = more GEMMs (1x, 2x, 4x).  All partial GEMMs of one refinement run on
-//! the engine's persistent pool — a refinement chain is exactly the
-//! repeated-small-GEMM pattern where reused warm workers beat per-call
-//! scoped spawns (see `benches/hotpath.rs`, pool comparison).
+//! [`refine_gemm`] is a thin wrapper over a
+//! [`crate::gemm::plan::GemmPlan`] built with
+//! [`crate::gemm::plan::Precision::Refined`]: the plan owns the residual
+//! split (Eq. 1) and the packed panels of every split operand, and its
+//! refined execution chains the 2–4 Tensor-Core-semantics partial
+//! products in exact f32 — the same summation order this module
+//! implemented by hand before the plan layer existed, bit for bit.
+//! Because the plan packs (and f16-rounds) each split operand exactly
+//! once, a *reused* refined plan goes further than this one-shot
+//! wrapper: `set_b` swaps the right operand while A's two split panels
+//! stay warm across calls (see `benches/hotpath.rs`, plan-reuse
+//! comparison).  `RefineMode` is the knob the coordinator's precision
+//! policy ([`crate::coordinator::policy`]) turns: more refinement =
+//! lower error = more GEMMs (1x, 2x, 4x), all run on the engine's
+//! persistent pool.
 
-use crate::gemm::engine::{gemm_packed, InputPrecision, PackedA, PackedB};
-use crate::gemm::{mixed_gemm, Matrix};
-use crate::halfprec::{f16_to_f32, f32_to_f16};
+use crate::gemm::plan::{GemmDesc, Precision};
+use crate::gemm::Matrix;
 
 /// How much refinement to apply to a mixed-precision GEMM.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -63,55 +64,19 @@ impl std::fmt::Display for RefineMode {
     }
 }
 
-/// Elementwise rounded-to-half copy (still f32 storage) and residual.
-fn split_matrix(x: &Matrix) -> (Matrix, Matrix) {
-    let (r, c) = x.shape();
-    let hi = Matrix::from_fn(r, c, |i, j| f16_to_f32(f32_to_f16(x[(i, j)])));
-    let lo = Matrix::from_fn(r, c, |i, j| {
-        f16_to_f32(f32_to_f16(x[(i, j)] - hi[(i, j)]))
-    });
-    (hi, lo)
-}
-
 /// Refined mixed-precision product C = A x B with exact f32 chaining of
 /// the partial GEMMs (the "optimized versions are possible" variant; the
 /// figures also report the paper's f16 hand-off through the PJRT
-/// artifacts, see python/compile/kernels/ref.py).
+/// artifacts, see python/compile/kernels/ref.py).  **Legacy one-shot
+/// wrapper** over a [`crate::gemm::plan::GemmPlan`] with
+/// [`crate::gemm::plan::Precision::Refined`] — a reused plan amortizes
+/// the residual splits and packed panels across a chain of products.
 pub fn refine_gemm(a: &Matrix, b: &Matrix, mode: RefineMode) -> Matrix {
-    let f16 = InputPrecision::F16Rounded;
-    match mode {
-        RefineMode::None => mixed_gemm(a, b, None, 1.0, 0.0),
-        RefineMode::RefineA => {
-            // R_A B_h + A_h B_h  (both GEMMs consume f16-rounded operands;
-            // B is packed+rounded once and reused by both)
-            let (a_h, r_a) = split_matrix(a);
-            let pb = PackedB::pack(b, f16);
-            let mut c = gemm_packed(&PackedA::pack(&r_a, f16), &pb, None, 1.0, 0.0, 0);
-            let main = gemm_packed(&PackedA::pack(&a_h, f16), &pb, None, 1.0, 0.0, 0);
-            for (o, m) in c.as_mut_slice().iter_mut().zip(main.as_slice()) {
-                *o += m;
-            }
-            c
-        }
-        RefineMode::RefineAB => {
-            // each split operand feeds two of the four GEMMs: pack once
-            let (a_h, r_a) = split_matrix(a);
-            let (b_h, r_b) = split_matrix(b);
-            let (pah, par) = (PackedA::pack(&a_h, f16), PackedA::pack(&r_a, f16));
-            let (pbh, pbr) = (PackedB::pack(&b_h, f16), PackedB::pack(&r_b, f16));
-            let mut c = gemm_packed(&par, &pbr, None, 1.0, 0.0, 0);
-            for part in [
-                gemm_packed(&pah, &pbr, None, 1.0, 0.0, 0),
-                gemm_packed(&par, &pbh, None, 1.0, 0.0, 0),
-                gemm_packed(&pah, &pbh, None, 1.0, 0.0, 0),
-            ] {
-                for (o, p) in c.as_mut_slice().iter_mut().zip(part.as_slice()) {
-                    *o += p;
-                }
-            }
-            c
-        }
-    }
+    GemmDesc::new(a.rows(), a.cols(), b.cols())
+        .precision(Precision::Refined(mode))
+        .plan(a, b)
+        .and_then(|p| p.execute())
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
 #[cfg(test)]

@@ -5,15 +5,24 @@
 //! binary32 (or binary16 when the accumulator fragment is f16).  This
 //! module implements that operation *at hardware granularity*:
 //!
-//! * [`mma`] — the raw 4x4x4 tensor-core op, both f32- and f16-accumulate
+//! * `mma` — the raw 4x4x4 tensor-core op, both f32- and f16-accumulate
 //!   flavours.
-//! * [`fragment`] — WMMA-style fragments (register tiles) for 16x16x16
+//! * `fragment` — WMMA-style fragments (register tiles) for 16x16x16
 //!   warp-level MMAs, composed of 4x4 hardware ops exactly as a warp's
 //!   two tensor cores would iterate them.
-//! * [`warp`] — the warp-level `mma_sync` built on fragments; the unit
+//! * `warp` — the warp-level `mma_sync` built on fragments; the unit
 //!   [`crate::interfaces::wmma`] exposes.  Its f32-accumulate path runs
 //!   on the packed engine core ([`crate::gemm::engine`]); the 4x4
 //!   hardware iteration is kept as `mma_sync_hw`, the bitwise oracle.
+//!
+//! This is the one layer that sits *below* the descriptor/plan entry
+//! point ([`crate::gemm::plan`]): `mma_sync` continues an accumulator
+//! chain in place (`C += A x B`, chain seeded by C), which is a
+//! different numerical contract from a plan's `alpha*AB + beta*C`
+//! epilogue (epilogue adds C at the end of the chain, `mma_sync` starts
+//! from it) — so the tile loop keeps its dedicated
+//! [`crate::gemm::engine::gemm_acc_inplace`] path rather than riding a
+//! plan.  Everything at or above GEMM granularity goes through plans.
 //!
 //! The emulation is bit-faithful: products of halves are formed in f32
 //! (exact), accumulated in the declared accumulator precision, with

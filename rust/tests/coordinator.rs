@@ -1,5 +1,8 @@
-//! Integration tests for the GEMM coordinator over real PJRT artifacts
-//! (requires `make artifacts`).
+//! Integration tests for the GEMM coordinator.  Most require real PJRT
+//! artifacts (`make artifacts`) and skip without them; the engine-lane
+//! tests at the bottom inject an *empty* manifest instead — no artifact
+//! can serve anything there, which is exactly the regime the cached-plan
+//! bucketed engine lane exists for — so they run everywhere.
 
 use std::time::Duration;
 
@@ -7,7 +10,7 @@ use tensoremu::coordinator::request::ServedBy;
 use tensoremu::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, GemmRequest};
 use tensoremu::gemm::{mixed_gemm, Matrix};
 use tensoremu::precision::{refine_gemm, RefineMode};
-use tensoremu::runtime::is_artifacts_missing;
+use tensoremu::runtime::{is_artifacts_missing, ExecutorServer, Manifest};
 use tensoremu::workload::{uniform_matrix, Rng};
 
 /// Skips (returns None) when the PJRT artifacts are not built — the
@@ -165,6 +168,102 @@ fn latency_accounting_present() {
     assert!(resp.exec > Duration::ZERO);
     let snap = c.metrics().snapshot();
     assert!(snap.p50 > Duration::ZERO);
+    c.shutdown();
+}
+
+/// A coordinator over an *empty* manifest: no batched artifact, no
+/// direct artifacts — every square request must ride the bucketed
+/// engine lane, and only non-square requests may fall back.  Needs no
+/// built artifacts, so it runs on every machine.
+fn engine_only_coordinator() -> Coordinator {
+    let manifest = Manifest { dir: std::path::PathBuf::from("unbuilt"), artifacts: Vec::new() };
+    let executor = ExecutorServer::start(manifest).expect("executor over empty manifest");
+    Coordinator::start_with(
+        CoordinatorConfig {
+            batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) },
+            ..Default::default()
+        },
+        executor,
+    )
+    .expect("coordinator over empty manifest")
+}
+
+#[test]
+fn square_non_tile_requests_ride_engine_lane_with_zero_fallbacks() {
+    // the acceptance check for the PR 2 open item: a square non-tile
+    // workload keeps the CPU-fallback counter at exactly zero and is
+    // served bitwise-correctly through cached per-edge plans
+    let c = engine_only_coordinator();
+    let mut rng = Rng::new(11);
+    let mut rxs = Vec::new();
+    let mut wants = Vec::new();
+    for i in 0..24u64 {
+        let n = [24usize, 48, 33][(i % 3) as usize];
+        let a = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        wants.push(mixed_gemm(&a, &b, None, 1.0, 0.0));
+        rxs.push(c.submit(GemmRequest::new(0, a, b)));
+    }
+    for (rx, want) in rxs.into_iter().zip(wants) {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert_eq!(resp.served_by, ServedBy::BatchedEngine);
+        assert_eq!(resp.mode, RefineMode::None);
+        // the engine lane is the host engine: bitwise equal to the oracle
+        assert_eq!(resp.c, want);
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.fallback, 0, "square requests must never fall back: {}", snap.report());
+    assert_eq!(snap.engine_batched, 24, "{}", snap.report());
+    assert!(snap.engine_flushes >= 3, "three edges -> at least three buckets: {}", snap.report());
+    assert_eq!(snap.responses, 24);
+    c.shutdown();
+}
+
+#[test]
+fn engine_lane_buckets_requests_instead_of_serving_singly() {
+    // a same-edge burst must drain as few buckets, not 16 one-request
+    // flushes — the batching half of the engine-lane claim
+    let c = engine_only_coordinator();
+    let mut rng = Rng::new(12);
+    // generate inputs first so the submit burst is as tight as possible
+    let inputs: Vec<(Matrix, Matrix)> = (0..16)
+        .map(|_| {
+            (
+                uniform_matrix(&mut rng, 24, 24, -1.0, 1.0),
+                uniform_matrix(&mut rng, 24, 24, -1.0, 1.0),
+            )
+        })
+        .collect();
+    let mut rxs = Vec::new();
+    for (a, b) in inputs {
+        rxs.push(c.submit(GemmRequest::new(0, a, b)));
+    }
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.engine_batched, 16);
+    assert!(
+        snap.engine_flushes < 16,
+        "burst must be bucketed, not served one-by-one ({})",
+        snap.report()
+    );
+    c.shutdown();
+}
+
+#[test]
+fn non_square_requests_still_fall_back_without_artifacts() {
+    let c = engine_only_coordinator();
+    let mut rng = Rng::new(13);
+    let a = uniform_matrix(&mut rng, 48, 80, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 80, 32, -1.0, 1.0);
+    let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
+    let resp = c.gemm(a, b).unwrap();
+    assert_eq!(resp.served_by, ServedBy::CpuFallback);
+    assert_eq!(resp.c, want);
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.fallback, 1);
+    assert_eq!(snap.engine_batched, 0);
     c.shutdown();
 }
 

@@ -261,8 +261,11 @@ fn mc_and_kc_blocked_mid_shape_bitwise() {
 #[test]
 fn warm_persistent_pool_repeated_calls_bitwise_stable() {
     // repeated, interleaved shapes on an increasingly warm pool: worker
-    // reuse must never perturb a bit at any worker count
+    // reuse must never perturb a bit at any worker count.  The ambient
+    // mode is restored afterwards so the TENSOREMU_POOL=scoped CI leg
+    // keeps covering the scoped substrate in later tests.
     let _g = lock_mode();
+    let ambient = engine::pool_mode();
     engine::set_pool_mode(PoolMode::Persistent);
     let mut rng = Rng::new(32);
     let shapes = [(70, 33, 81), (16, 16, 16), (40, 24, 40)];
@@ -280,6 +283,7 @@ fn warm_persistent_pool_repeated_calls_bitwise_stable() {
             }
         }
     }
+    engine::set_pool_mode(ambient);
 }
 
 #[test]
@@ -289,6 +293,7 @@ fn scoped_and_persistent_pools_produce_identical_bits() {
     // unblocked small shape and on a kc-blocked one (k > KC), at every
     // worker count
     let _g = lock_mode();
+    let ambient = engine::pool_mode();
     let mut rng = Rng::new(33);
     for &(m, k, n) in &[(40, 24, 40), (70, 600, 33)] {
         let (a, b) = pair(&mut rng, m, k, n, 1.0);
@@ -303,7 +308,9 @@ fn scoped_and_persistent_pools_produce_identical_bits() {
             }
         }
     }
-    engine::set_pool_mode(PoolMode::Persistent);
+    // restore the ambient mode (TENSOREMU_POOL-selected), not a
+    // hardcoded one — the scoped CI leg relies on it
+    engine::set_pool_mode(ambient);
 }
 
 #[test]

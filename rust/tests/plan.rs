@@ -1,0 +1,367 @@
+//! Plan-vs-oracle equivalence suite: every [`GemmPlan`] execution must
+//! reproduce the serial scalar kernels **bit for bit** at every
+//! precision, worker count and pool mode; plan reuse and operand
+//! swapping must be bitwise stable; and descriptor validation must
+//! reject malformed requests with typed errors.  This is the contract
+//! that lets every legacy entry point (and the coordinator's engine
+//! lane) delegate to plans without any numerical drift.
+
+use tensoremu::gemm::engine::{self, PoolMode};
+use tensoremu::gemm::plan::{GemmDesc, GemmPlan, PlanError, Precision};
+use tensoremu::gemm::{
+    batched_hgemm_scalar, batched_mixed_gemm_scalar, batched_sgemm_scalar, hgemm_scalar,
+    mixed_gemm_scalar, sgemm_naive, Matrix,
+};
+use tensoremu::precision::RefineMode;
+use tensoremu::workload::{uniform_matrix, Rng};
+
+const THREADS: &[usize] = &[1, 2, 8];
+
+/// Serializes the tests that flip the process-global pool mode (see
+/// tests/engine.rs for the rationale).
+static MODE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock_mode() -> std::sync::MutexGuard<'static, ()> {
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn pair(rng: &mut Rng, m: usize, k: usize, n: usize) -> (Matrix, Matrix) {
+    (uniform_matrix(rng, m, k, -1.0, 1.0), uniform_matrix(rng, k, n, -1.0, 1.0))
+}
+
+/// Eq. 1 split, written against the scalar oracle's own rounding helper
+/// chain so the refined oracle below shares no code with the plan layer.
+fn split_scalar(x: &Matrix) -> (Matrix, Matrix) {
+    use tensoremu::halfprec::{f16_to_f32, f32_to_f16};
+    let (r, c) = x.shape();
+    let hi = Matrix::from_fn(r, c, |i, j| f16_to_f32(f32_to_f16(x[(i, j)])));
+    let lo = Matrix::from_fn(r, c, |i, j| f16_to_f32(f32_to_f16(x[(i, j)] - hi[(i, j)])));
+    (hi, lo)
+}
+
+/// Serial oracle for the refined chains: scalar mixed GEMM partials
+/// summed in the documented order (residual products first).
+fn refine_scalar(a: &Matrix, b: &Matrix, mode: RefineMode) -> Matrix {
+    let prod = |x: &Matrix, y: &Matrix| mixed_gemm_scalar(x, y, None, 1.0, 0.0);
+    let add = |acc: &mut Matrix, part: &Matrix| {
+        for (o, p) in acc.as_mut_slice().iter_mut().zip(part.as_slice()) {
+            *o += p;
+        }
+    };
+    match mode {
+        RefineMode::None => prod(a, b),
+        RefineMode::RefineA => {
+            let (ah, al) = split_scalar(a);
+            let mut acc = prod(&al, b);
+            add(&mut acc, &prod(&ah, b));
+            acc
+        }
+        RefineMode::RefineAB => {
+            let (ah, al) = split_scalar(a);
+            let (bh, bl) = split_scalar(b);
+            let mut acc = prod(&al, &bl);
+            add(&mut acc, &prod(&ah, &bl));
+            add(&mut acc, &prod(&al, &bh));
+            add(&mut acc, &prod(&ah, &bh));
+            acc
+        }
+    }
+}
+
+fn oracle(prec: Precision, a: &Matrix, b: &Matrix) -> Matrix {
+    match prec {
+        Precision::F32 => sgemm_naive(a, b, None, 1.0, 0.0),
+        Precision::Mixed => mixed_gemm_scalar(a, b, None, 1.0, 0.0),
+        Precision::F16 => hgemm_scalar(a, b),
+        Precision::Refined(mode) => refine_scalar(a, b, mode),
+    }
+}
+
+const ALL_PRECISIONS: &[Precision] = &[
+    Precision::F32,
+    Precision::Mixed,
+    Precision::F16,
+    Precision::Refined(RefineMode::None),
+    Precision::Refined(RefineMode::RefineA),
+    Precision::Refined(RefineMode::RefineAB),
+];
+
+#[test]
+fn plan_execute_equals_oracle_for_every_precision_thread_count_and_pool_mode() {
+    // the satellite sweep: {precision} x {1,2,8} threads x {scoped,
+    // persistent} pool, plan bits == oracle bits
+    let _g = lock_mode();
+    // restore the AMBIENT mode afterwards (not a hardcoded one), so the
+    // TENSOREMU_POOL=scoped CI leg keeps covering the scoped substrate
+    // in the tests that run after this one
+    let ambient = engine::pool_mode();
+    let mut rng = Rng::new(101);
+    let (a, b) = pair(&mut rng, 34, 29, 27);
+    for &prec in ALL_PRECISIONS {
+        let want = oracle(prec, &a, &b);
+        for mode in [PoolMode::Scoped, PoolMode::Persistent] {
+            engine::set_pool_mode(mode);
+            for &t in THREADS {
+                let plan = GemmDesc::new(34, 29, 27)
+                    .precision(prec)
+                    .threads(t)
+                    .pool_hint(mode)
+                    .plan(&a, &b)
+                    .unwrap();
+                assert_eq!(plan.pool_mode(), mode);
+                assert_eq!(plan.execute().unwrap(), want, "{prec:?} {mode:?} t={t}");
+            }
+        }
+    }
+    engine::set_pool_mode(ambient);
+}
+
+#[test]
+fn plan_reuse_across_three_executions_is_bitwise_stable() {
+    let mut rng = Rng::new(102);
+    let (a, b) = pair(&mut rng, 40, 24, 40);
+    for &prec in ALL_PRECISIONS {
+        let plan = GemmDesc::new(40, 24, 40).precision(prec).threads(4).plan(&a, &b).unwrap();
+        let first = plan.execute().unwrap();
+        assert_eq!(first, oracle(prec, &a, &b), "{prec:?}");
+        for round in 1..3 {
+            assert_eq!(plan.execute().unwrap(), first, "{prec:?} round {round}");
+        }
+    }
+}
+
+#[test]
+fn set_b_swap_matches_fresh_plan() {
+    // the operand-caching contract: swapping B on a warm plan (A's
+    // packed panels reused) must match a freshly-built plan bitwise
+    let mut rng = Rng::new(103);
+    let a = uniform_matrix(&mut rng, 31, 40, -1.0, 1.0);
+    for &prec in ALL_PRECISIONS {
+        let b0 = uniform_matrix(&mut rng, 40, 24, -1.0, 1.0);
+        let mut plan = GemmDesc::new(31, 40, 24).precision(prec).plan(&a, &b0).unwrap();
+        let _ = plan.execute().unwrap();
+        for seed in 0..3 {
+            let mut r2 = Rng::new(200 + seed);
+            let b = uniform_matrix(&mut r2, 40, 24, -1.0, 1.0);
+            plan.set_b(&b).unwrap();
+            let fresh = GemmDesc::new(31, 40, 24).precision(prec).plan(&a, &b).unwrap();
+            assert_eq!(
+                plan.execute().unwrap(),
+                fresh.execute().unwrap(),
+                "{prec:?} seed {seed}"
+            );
+            assert_eq!(plan.execute().unwrap(), oracle(prec, &a, &b), "{prec:?} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn set_a_swap_matches_fresh_plan() {
+    let mut rng = Rng::new(104);
+    let b = uniform_matrix(&mut rng, 24, 18, -1.0, 1.0);
+    for &prec in ALL_PRECISIONS {
+        let a0 = uniform_matrix(&mut rng, 17, 24, -1.0, 1.0);
+        let mut plan = GemmDesc::new(17, 24, 18).precision(prec).plan(&a0, &b).unwrap();
+        let a = uniform_matrix(&mut rng, 17, 24, -1.0, 1.0);
+        plan.set_a(&a).unwrap();
+        assert_eq!(plan.execute().unwrap(), oracle(prec, &a, &b), "{prec:?}");
+    }
+}
+
+#[test]
+fn alpha_beta_epilogue_matches_scalar_oracle_bitwise() {
+    let mut rng = Rng::new(105);
+    let (a, b) = pair(&mut rng, 21, 33, 19);
+    let c = uniform_matrix(&mut rng, 21, 19, -1.0, 1.0);
+    for &(alpha, beta) in &[(1.0f32, 1.0f32), (0.5, 2.0), (-1.25, 0.75)] {
+        let want = mixed_gemm_scalar(&a, &b, Some(&c), alpha, beta);
+        for &t in THREADS {
+            let plan = GemmDesc::new(21, 33, 19)
+                .precision(Precision::Mixed)
+                .epilogue(alpha, beta)
+                .threads(t)
+                .plan(&a, &b)
+                .unwrap();
+            assert_eq!(plan.execute_with(Some(&c)).unwrap(), want, "a={alpha} b={beta} t={t}");
+        }
+    }
+}
+
+#[test]
+fn beta_zero_with_nan_c_never_reads_c() {
+    // the folded-epilogue regression: cuBLAS semantics say beta == 0
+    // must not read C, so a NaN-filled C cannot poison the output
+    let mut rng = Rng::new(106);
+    let (a, b) = pair(&mut rng, 12, 12, 12);
+    let nan_c = Matrix::from_fn(12, 12, |_, _| f32::NAN);
+    for &prec in ALL_PRECISIONS {
+        let plan =
+            GemmDesc::new(12, 12, 12).precision(prec).epilogue(2.0, 0.0).plan(&a, &b).unwrap();
+        let got = plan.execute_with(Some(&nan_c)).unwrap();
+        assert!(got.as_slice().iter().all(|v| v.is_finite()), "{prec:?} leaked NaN from C");
+        assert_eq!(got, plan.execute().unwrap(), "{prec:?}");
+    }
+    // the scalar oracles implement the same rule, so the bit-for-bit
+    // contract holds even in this corner
+    let plan = GemmDesc::new(12, 12, 12).epilogue(2.0, 0.0).plan(&a, &b).unwrap();
+    assert_eq!(
+        plan.execute_with(Some(&nan_c)).unwrap(),
+        mixed_gemm_scalar(&a, &b, Some(&nan_c), 2.0, 0.0)
+    );
+}
+
+#[test]
+fn legacy_wrappers_equal_plans_bitwise() {
+    // the reroute contract: every legacy entry point is a thin plan
+    // wrapper, so wrapper bits == plan bits == oracle bits
+    use tensoremu::gemm::{hgemm, mixed_gemm, sgemm_blocked};
+    use tensoremu::interfaces::{
+        wmma_tiled_gemm, CublasHandle, CutlassGemm, GemmAlgo, MathMode, TilePolicy,
+    };
+    use tensoremu::precision::refine_gemm;
+    let mut rng = Rng::new(107);
+    let (a, b) = pair(&mut rng, 32, 32, 32);
+    assert_eq!(sgemm_blocked(&a, &b, None, 1.0, 0.0), oracle(Precision::F32, &a, &b));
+    assert_eq!(mixed_gemm(&a, &b, None, 1.0, 0.0), oracle(Precision::Mixed, &a, &b));
+    assert_eq!(hgemm(&a, &b), oracle(Precision::F16, &a, &b));
+    for mode in RefineMode::ALL {
+        assert_eq!(refine_gemm(&a, &b, mode), oracle(Precision::Refined(mode), &a, &b), "{mode}");
+    }
+    let mut h = CublasHandle::new();
+    h.set_math_mode(MathMode::TensorOp);
+    assert_eq!(
+        h.gemm_ex(&a, &b, None, 1.0, 0.0, GemmAlgo::RefinedTensorOpA).unwrap(),
+        oracle(Precision::Refined(RefineMode::RefineA), &a, &b)
+    );
+    assert_eq!(
+        CutlassGemm::new(TilePolicy::DEFAULT).run(&a, &b),
+        oracle(Precision::Mixed, &a, &b)
+    );
+    assert_eq!(wmma_tiled_gemm(&a, &b), oracle(Precision::Mixed, &a, &b));
+}
+
+#[test]
+fn batched_plans_equal_scalar_loops() {
+    let mut rng = Rng::new(108);
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    for &(m, k, n) in &[(16, 16, 16), (5, 7, 3), (1, 1, 1), (24, 8, 24)] {
+        let (x, y) = pair(&mut rng, m, k, n);
+        a.push(x);
+        b.push(y);
+    }
+    let run = |prec: Precision| {
+        GemmDesc::any_shape().precision(prec).build().unwrap().execute_batched(&a, &b).unwrap()
+    };
+    assert_eq!(run(Precision::F32), batched_sgemm_scalar(&a, &b));
+    assert_eq!(run(Precision::Mixed), batched_mixed_gemm_scalar(&a, &b));
+    assert_eq!(run(Precision::F16), batched_hgemm_scalar(&a, &b));
+}
+
+#[test]
+fn execute_into_writes_the_same_bits() {
+    let mut rng = Rng::new(109);
+    let (a, b) = pair(&mut rng, 26, 15, 22);
+    let c = uniform_matrix(&mut rng, 26, 22, -1.0, 1.0);
+    for &prec in ALL_PRECISIONS {
+        let plan =
+            GemmDesc::new(26, 15, 22).precision(prec).epilogue(1.5, -0.5).plan(&a, &b).unwrap();
+        let want = plan.execute_with(Some(&c)).unwrap();
+        let mut out = Matrix::zeros(26, 22);
+        plan.execute_into(&mut out, Some(&c)).unwrap();
+        assert_eq!(out, want, "{prec:?}");
+    }
+}
+
+#[test]
+fn desc_validation_rejects_malformed_requests_with_typed_errors() {
+    // mismatched dims
+    let a = Matrix::zeros(4, 5);
+    let bad_b = Matrix::zeros(7, 3);
+    assert_eq!(
+        GemmDesc::new(4, 5, 3).plan(&a, &bad_b).err().unwrap(),
+        PlanError::InnerDim { a_cols: 5, b_rows: 7 }
+    );
+    let mut p = GemmDesc::new(4, 5, 3).build().unwrap();
+    assert_eq!(
+        p.set_a(&Matrix::zeros(5, 4)).err().unwrap(),
+        PlanError::OperandShape { side: "A", want: (4, 5), got: (5, 4) }
+    );
+    assert_eq!(
+        p.set_b(&Matrix::zeros(5, 4)).err().unwrap(),
+        PlanError::OperandShape { side: "B", want: (5, 3), got: (5, 4) }
+    );
+    // execute before operands are packed
+    assert_eq!(p.execute().err().unwrap(), PlanError::OperandMissing { side: "A" });
+    // mismatched batch lengths / counts
+    let plan = GemmDesc::new(2, 2, 2).batch(3).build().unwrap();
+    let two = vec![Matrix::zeros(2, 2), Matrix::zeros(2, 2)];
+    let three = vec![Matrix::zeros(2, 2), Matrix::zeros(2, 2), Matrix::zeros(2, 2)];
+    assert_eq!(
+        plan.execute_batched(&two, &three).err().unwrap(),
+        PlanError::BatchLength { a: 2, b: 3 }
+    );
+    assert_eq!(
+        plan.execute_batched(&two, &two).err().unwrap(),
+        PlanError::BatchCount { want: 3, got: 2 }
+    );
+    // pinned-dims batch rejects an off-shape entry
+    let mixed: Vec<Matrix> = vec![Matrix::zeros(2, 2), Matrix::zeros(4, 4), Matrix::zeros(2, 2)];
+    assert_eq!(
+        plan.execute_batched(&mixed, &three).err().unwrap(),
+        PlanError::BatchEntry { index: 1, a: (4, 4), b: (2, 2) }
+    );
+    // C / output shape errors
+    let mut rng = Rng::new(110);
+    let (x, y) = pair(&mut rng, 3, 3, 3);
+    let full = GemmDesc::square(3).beta(1.0).plan(&x, &y).unwrap();
+    assert_eq!(
+        full.execute_with(Some(&Matrix::zeros(2, 2))).err().unwrap(),
+        PlanError::CShape { want: (3, 3), got: (2, 2) }
+    );
+    let mut wrong = Matrix::zeros(4, 4);
+    assert_eq!(
+        full.execute_into(&mut wrong, None).err().unwrap(),
+        PlanError::OutputShape { want: (3, 3), got: (4, 4) }
+    );
+    // errors are std::error::Error with stable, grep-able messages
+    let e: Box<dyn std::error::Error> = Box::new(PlanError::BatchLength { a: 1, b: 2 });
+    assert!(e.to_string().contains("batch length mismatch"));
+}
+
+#[test]
+fn warm_pool_plan_reuse_interleaved_shapes_stable() {
+    // interleave three plans over an increasingly warm pool: cached
+    // panels + reused workers must never move a bit
+    let _g = lock_mode();
+    let ambient = engine::pool_mode();
+    engine::set_pool_mode(PoolMode::Persistent);
+    let mut rng = Rng::new(111);
+    let shapes = [(70, 33, 81), (16, 16, 16), (40, 600, 24)];
+    let plans: Vec<(GemmPlan, Matrix)> = shapes
+        .iter()
+        .map(|&(m, k, n)| {
+            let (a, b) = pair(&mut rng, m, k, n);
+            let want = mixed_gemm_scalar(&a, &b, None, 1.0, 0.0);
+            (GemmDesc::new(m, k, n).threads(4).plan(&a, &b).unwrap(), want)
+        })
+        .collect();
+    for round in 0..3 {
+        for (i, (plan, want)) in plans.iter().enumerate() {
+            assert_eq!(&plan.execute().unwrap(), want, "round {round} shape#{i}");
+        }
+    }
+    engine::set_pool_mode(ambient);
+}
+
+#[test]
+fn zero_sized_plans() {
+    let plan = GemmDesc::new(0, 4, 3).plan(&Matrix::zeros(0, 4), &Matrix::zeros(4, 3)).unwrap();
+    assert_eq!(plan.execute().unwrap().shape(), (0, 3));
+    // k = 0: pure epilogue
+    let plan = GemmDesc::new(3, 0, 2).plan(&Matrix::zeros(3, 0), &Matrix::zeros(0, 2)).unwrap();
+    assert_eq!(plan.execute().unwrap(), Matrix::zeros(3, 2));
+    // empty batch
+    let p = GemmDesc::any_shape().build().unwrap();
+    assert!(p.execute_batched(&[], &[]).unwrap().is_empty());
+}
