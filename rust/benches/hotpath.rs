@@ -4,7 +4,9 @@
 //! (persistent pool + kc/mc cache blocking + 8x8 microkernel) against the
 //! serial scalar oracles it replaced, on the two shapes the acceptance
 //! bar names (512^3 mixed GEMM, 1024-tile batched 16x16), plus the hgemm
-//! repack-reuse path.
+//! repack-reuse path and a batched refined comparison (a loop of
+//! per-entry `refine_gemm` singles vs one batched refined plan driving
+//! the Eq. 3 chains over the pool — the refined engine-lane shape).
 //!
 //! Part 2 — **persistent vs scoped pool** on repeated small GEMMs: the
 //! per-call latency axis (a scoped fork-join pays thread spawns on every
@@ -37,7 +39,7 @@ use tensoremu::gemm::{
     batched_mixed_gemm, batched_mixed_gemm_scalar, hgemm_scalar, mixed_gemm, mixed_gemm_scalar,
     GemmDesc, Matrix, Precision,
 };
-use tensoremu::precision::{refine_gemm, RefineMode};
+use tensoremu::precision::{batched_refine_gemm, refine_gemm, RefineMode};
 use tensoremu::runtime::{Engine, Manifest, TensorData};
 use tensoremu::util::bench::{bench, bench_config, BenchResult};
 use tensoremu::workload::{uniform_batch, uniform_matrix, Rng};
@@ -141,6 +143,27 @@ fn main() {
     println!("{}", fast.report());
     comparisons.push(Comparison { name: hg_name, scalar, engine: fast });
 
+    // -- batched refined chains (the §IV-B batched shape at §V
+    //    precision): a loop of per-entry refine_gemm singles vs one
+    //    batched refined plan distributing the Eq. 3 chains over the
+    //    pool — the refined engine-lane shape
+    let nrb = if smoke { 16 } else { 64 };
+    let rb_name: &'static str =
+        if smoke { "batched_refine_ab_16x32" } else { "batched_refine_ab_64x32" };
+    let ra = uniform_batch(&mut rng, nrb, 32, -1.0, 1.0);
+    let rbm = uniform_batch(&mut rng, nrb, 32, -1.0, 1.0);
+    let scalar = bench_config("gemm/refine_ab_singles_loop", 10, 0, 30_000, || {
+        for (x, y) in ra.iter().zip(&rbm) {
+            std::hint::black_box(refine_gemm(x, y, RefineMode::RefineAB));
+        }
+    });
+    println!("{}", scalar.report());
+    let fast = bench_config("gemm/refine_ab_batched_engine", 30, 300, 10_000, || {
+        std::hint::black_box(batched_refine_gemm(&ra, &rbm, RefineMode::RefineAB));
+    });
+    println!("{}", fast.report());
+    comparisons.push(Comparison { name: rb_name, scalar, engine: fast });
+
     // -- persistent vs scoped pool: repeated small (<= 128^3) GEMMs,
     //    where per-call thread spawns dominate the scoped path
     let np = if smoke { 64 } else { 96 };
@@ -227,7 +250,8 @@ fn main() {
     println!(
         "targets (ISSUE 2): >= 4x on mixed_512 and batched_1024x16 vs the scalar seed \
          kernels; persistent > scoped on repeated small GEMMs; \
-         (ISSUE 3) cached plans > one-shot wrappers on repeated/refined GEMMs"
+         (ISSUE 3) cached plans > one-shot wrappers on repeated/refined GEMMs; \
+         (ISSUE 4) batched refined plan > per-entry refine_gemm loop"
     );
 
     write_baseline(&comparisons, &pool_cmp, &plan_cmp, &refine_cmp, initial_mode, smoke);

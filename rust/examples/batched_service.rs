@@ -20,7 +20,8 @@ use tensoremu::gemm::{GemmDesc, GemmPlan, Precision};
 use tensoremu::workload::{uniform_matrix, RequestTrace, Rng, TraceSpec};
 
 fn main() -> anyhow::Result<()> {
-    let requests: usize = std::env::var("E2E_REQUESTS").ok().and_then(|s| s.parse().ok()).unwrap_or(4000);
+    let requests: usize =
+        std::env::var("E2E_REQUESTS").ok().and_then(|s| s.parse().ok()).unwrap_or(4000);
     let rate: f64 = std::env::var("E2E_RATE").ok().and_then(|s| s.parse().ok()).unwrap_or(20_000.0);
 
     let coord = Coordinator::start(CoordinatorConfig {
@@ -108,8 +109,11 @@ fn main() -> anyhow::Result<()> {
     println!("\n--- E2E report ---");
     println!("served        : {ok}/{requests} in {wall:.2?}");
     println!("throughput    : {:.0} responses/s", ok as f64 / wall.as_secs_f64());
-    println!("batched       : {batched} requests over {} flushes (avg {:.0}/flush)",
-             snap.flushes, batched as f64 / snap.flushes.max(1) as f64);
+    println!(
+        "batched       : {batched} requests over {} flushes (avg {:.0}/flush)",
+        snap.flushes,
+        batched as f64 / snap.flushes.max(1) as f64
+    );
     println!("latency       : p50 {:?}  p99 {:?}  max {:?}", snap.p50, snap.p99, snap.max);
     println!("pad overhead  : {} zero slots", snap.padded_slots);
     println!("spot-check err: ||e||_max = {max_err:.3e} vs rust emulation (must be ~1e-6)");

@@ -36,7 +36,8 @@ fn main() -> anyhow::Result<()> {
             let got = plan.execute().map_err(|e| anyhow::anyhow!("execute: {e}"))?;
             worst = worst.max(got.max_norm_diff(&dgemm_naive(&a, &b)));
         }
-        println!("{:>10} {:>6} {:>14.3e}", mode.to_string(), mode.gemm_count(), worst);
+        let name = mode.to_string();
+        println!("{name:>10} {:>6} {worst:>14.3e}", mode.gemm_count());
     }
     println!();
 

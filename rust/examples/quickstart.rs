@@ -37,10 +37,7 @@ fn main() -> anyhow::Result<()> {
         .plan(&a, &b)
         .map_err(|e| anyhow::anyhow!("plan: {e}"))?;
     let emulated = plan.execute().map_err(|e| anyhow::anyhow!("execute: {e}"))?;
-    println!(
-        "artifact vs rust emulation: ||diff||_max = {:.3e}",
-        c.max_norm_diff(&emulated)
-    );
+    println!("artifact vs rust emulation: ||diff||_max = {:.3e}", c.max_norm_diff(&emulated));
 
     // --- the paper's precision story: one descriptor per refinement
     //     level, same operands (a refined plan packs the Eq. 1 residual
@@ -55,12 +52,11 @@ fn main() -> anyhow::Result<()> {
             .execute()
             .map_err(|e| anyhow::anyhow!("execute: {e}"))?
             .max_norm_diff(&truth);
+        let name = mode.to_string();
         println!(
-            "{:<10} ({} Tensor-Core GEMM{}): ||e||_max = {:.3e}",
-            mode.to_string(),
+            "{name:<10} ({} Tensor-Core GEMM{}): ||e||_max = {err:.3e}",
             mode.gemm_count(),
             if mode.gemm_count() > 1 { "s" } else { " " },
-            err
         );
     }
     println!("\nquickstart OK");

@@ -51,8 +51,10 @@ fn main() -> anyhow::Result<()> {
     }
     let wall = t0.elapsed();
     let snap = coord.metrics().snapshot();
-    println!("applied operator in {wall:.2?} ({:.0} GEMMs/s)",
-             mix.gemm_count() as f64 / wall.as_secs_f64());
+    println!(
+        "applied operator in {wall:.2?} ({:.0} GEMMs/s)",
+        mix.gemm_count() as f64 / wall.as_secs_f64()
+    );
     println!("batching: {} flushes, {} padded slots", snap.flushes, snap.padded_slots);
     println!("mixed-precision error: ||e||_max = {worst:.3e} (rel {worst_rel:.3e})");
 

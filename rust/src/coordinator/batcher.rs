@@ -11,10 +11,14 @@
 //!   smallest artifact batch >= the bucket length (zeros are numerically
 //!   inert; fixed shapes are the price of AOT compilation).
 //! * [`Batcher::flush_buckets`] — the **engine lane**: drains the whole
-//!   queue grouped by shape into un-padded [`ShapeBucket`]s.  The host
-//!   engine's batched paths ([`crate::gemm::batched_mixed_gemm`]) accept
-//!   heterogeneous per-entry shapes, so no padding work is ever computed
-//!   there — the ROADMAP "shape-bucketing" item.
+//!   queue grouped by *edge × precision mode* into un-padded
+//!   [`ShapeBucket`]s.  The host engine's batched paths
+//!   ([`crate::gemm::batched_mixed_gemm`],
+//!   [`crate::precision::batched_refine_gemm`]) accept heterogeneous
+//!   per-entry shapes, so no padding work is ever computed there — and
+//!   because the mode is part of the key, refined and unrefined
+//!   requests of the same edge flush as separate buckets onto their own
+//!   cached plans ([`Batcher::push_mode`]).
 //!
 //! The batcher accepts any *square* request; `tile` names the primary
 //! edge the artifact lane was compiled for (the router only routes that
@@ -23,6 +27,7 @@
 use std::time::{Duration, Instant};
 
 use crate::gemm::Matrix;
+use crate::precision::RefineMode;
 
 use super::request::{GemmRequest, RequestId};
 
@@ -45,8 +50,13 @@ impl Default for BatcherConfig {
 /// One queued entry.
 struct Pending {
     id: RequestId,
-    /// Square edge of the request (the bucket key).
+    /// Square edge of the request (one half of the bucket key).
     n: usize,
+    /// Precision mode the router resolved for the request (the other
+    /// half of the bucket key): entries of the same edge but different
+    /// modes never share a bucket, because they execute on different
+    /// cached plans.
+    mode: RefineMode,
     a: Matrix,
     b: Matrix,
     enqueued: Instant,
@@ -78,12 +88,16 @@ impl FlushedBatch {
     }
 }
 
-/// One same-shape group of a bucketed flush: un-padded, FIFO within the
-/// bucket — ready for the heterogeneous batched engine, which computes
-/// exactly the entries it is given.
+/// One same-shape, same-mode group of a bucketed flush: un-padded, FIFO
+/// within the bucket — ready for the heterogeneous batched engine, which
+/// computes exactly the entries it is given on the cached plan for this
+/// `(edge, mode)` pair.
 pub struct ShapeBucket {
     /// Square edge shared by every entry in this bucket.
     pub n: usize,
+    /// Precision mode shared by every entry in this bucket (mixed and
+    /// refined requests of the same edge never share a bucket).
+    pub mode: RefineMode,
     pub ids: Vec<RequestId>,
     pub enqueued: Vec<Instant>,
     pub a: Vec<Matrix>,
@@ -91,8 +105,8 @@ pub struct ShapeBucket {
 }
 
 impl ShapeBucket {
-    fn empty(n: usize) -> ShapeBucket {
-        ShapeBucket { n, ids: Vec::new(), enqueued: Vec::new(), a: Vec::new(), b: Vec::new() }
+    fn empty(n: usize, mode: RefineMode) -> ShapeBucket {
+        ShapeBucket { n, mode, ids: Vec::new(), enqueued: Vec::new(), a: Vec::new(), b: Vec::new() }
     }
 
     fn push(&mut self, p: Pending) {
@@ -132,11 +146,27 @@ impl Batcher {
         self.tile
     }
 
-    /// Enqueue a square request of any edge.  Panics on non-square
-    /// shapes (the router only batches square requests).
+    /// Enqueue an unrefined square request of any edge (the artifact
+    /// lane's shape).  Panics on non-square shapes (the router only
+    /// batches square requests).
     pub fn push(&mut self, req: GemmRequest) {
+        self.push_mode(req, RefineMode::None);
+    }
+
+    /// Enqueue a square request under the precision mode the router
+    /// resolved for it — the engine lane's entry point.  The mode joins
+    /// the edge as the bucket key, so a refined request can never be
+    /// flushed into an unrefined bucket (or vice versa).
+    pub fn push_mode(&mut self, req: GemmRequest, mode: RefineMode) {
         let n = req.square_n().expect("batcher requires square requests");
-        self.queue.push(Pending { id: req.id, n, a: req.a, b: req.b, enqueued: Instant::now() });
+        self.queue.push(Pending {
+            id: req.id,
+            n,
+            mode,
+            a: req.a,
+            b: req.b,
+            enqueued: Instant::now(),
+        });
     }
 
     /// Should the queue flush now?
@@ -154,14 +184,15 @@ impl Batcher {
         Some(self.cfg.max_wait.saturating_sub(now.duration_since(oldest)))
     }
 
-    /// Drain up to `max_batch` entries of `n`'s shape bucket, preserving
-    /// FIFO order within the bucket; other shapes stay queued.
-    fn drain_bucket(&mut self, n: usize) -> ShapeBucket {
+    /// Drain up to `max_batch` entries of the `(n, mode)` bucket,
+    /// preserving FIFO order within the bucket; other shapes and modes
+    /// stay queued.
+    fn drain_bucket(&mut self, n: usize, mode: RefineMode) -> ShapeBucket {
         let cap = self.cfg.max_batch;
-        let mut bucket = ShapeBucket::empty(n);
+        let mut bucket = ShapeBucket::empty(n, mode);
         let mut kept = Vec::with_capacity(self.queue.len());
         for p in self.queue.drain(..) {
-            if p.n == n && bucket.len() < cap {
+            if p.n == n && p.mode == mode && bucket.len() < cap {
                 bucket.push(p);
             } else {
                 kept.push(p);
@@ -171,15 +202,17 @@ impl Batcher {
         bucket
     }
 
-    /// Artifact-lane flush: drain the oldest request's shape bucket (up
-    /// to `max_batch` entries), padding to `pad_to(len)` with zero
-    /// matrices (the caller maps the real length to an artifact
-    /// capacity).  Other shape buckets stay queued for their own flush.
+    /// Artifact-lane flush: drain the oldest request's bucket (up to
+    /// `max_batch` entries), padding to `pad_to(len)` with zero matrices
+    /// (the caller maps the real length to an artifact capacity).  Other
+    /// buckets stay queued for their own flush.  The artifact lane only
+    /// ever enqueues unrefined requests ([`Batcher::push`]), so the
+    /// drained bucket's mode is always [`RefineMode::None`] there.
     pub fn flush(&mut self, pad_to: impl Fn(usize) -> usize) -> Option<FlushedBatch> {
-        let n = self.queue.first()?.n;
-        let bucket = self.drain_bucket(n);
+        let (n, mode) = self.queue.first().map(|p| (p.n, p.mode))?;
+        let bucket = self.drain_bucket(n, mode);
         let padded = pad_to(bucket.len()).max(bucket.len());
-        let ShapeBucket { n, ids, enqueued, mut a, mut b } = bucket;
+        let ShapeBucket { n, ids, enqueued, mut a, mut b, .. } = bucket;
         while a.len() < padded {
             a.push(Matrix::zeros(n, n));
             b.push(Matrix::zeros(n, n));
@@ -187,16 +220,17 @@ impl Batcher {
         Some(FlushedBatch { n, ids, enqueued, a, b })
     }
 
-    /// Engine-lane flush: drain the *whole* queue into per-shape buckets
-    /// (bucket order = first-seen order, FIFO within each bucket), with
-    /// no padding — the batched engine runs each bucket exactly as-is.
+    /// Engine-lane flush: drain the *whole* queue into per-`(edge, mode)`
+    /// buckets (bucket order = first-seen order, FIFO within each
+    /// bucket), with no padding — the batched engine runs each bucket
+    /// exactly as-is on the cached plan for its key.
     pub fn flush_buckets(&mut self) -> Vec<ShapeBucket> {
         let mut buckets: Vec<ShapeBucket> = Vec::new();
         for p in self.queue.drain(..) {
-            let idx = match buckets.iter().position(|bk| bk.n == p.n) {
+            let idx = match buckets.iter().position(|bk| bk.n == p.n && bk.mode == p.mode) {
                 Some(i) => i,
                 None => {
-                    buckets.push(ShapeBucket::empty(p.n));
+                    buckets.push(ShapeBucket::empty(p.n, p.mode));
                     buckets.len() - 1
                 }
             };
@@ -324,6 +358,51 @@ mod tests {
         assert_eq!(buckets[2].n, 32);
         assert_eq!(buckets[2].ids, vec![3]);
         assert!(buckets.iter().all(|bk| bk.a.len() == bk.len() && !bk.is_empty()));
+    }
+
+    #[test]
+    fn same_edge_different_modes_never_share_a_bucket() {
+        // the mode-keying contract: mixed and refined requests of one
+        // edge flush as separate buckets, FIFO within each
+        let mut b = batcher(100, 0);
+        b.push_mode(req_n(0, 16), RefineMode::None);
+        b.push_mode(req_n(1, 16), RefineMode::RefineAB);
+        b.push_mode(req_n(2, 16), RefineMode::None);
+        b.push_mode(req_n(3, 16), RefineMode::RefineA);
+        b.push_mode(req_n(4, 16), RefineMode::RefineAB);
+        let buckets = b.flush_buckets();
+        assert_eq!(buckets.len(), 3);
+        assert!(buckets.iter().all(|bk| bk.n == 16));
+        assert_eq!(buckets[0].mode, RefineMode::None);
+        assert_eq!(buckets[0].ids, vec![0, 2]);
+        assert_eq!(buckets[1].mode, RefineMode::RefineAB);
+        assert_eq!(buckets[1].ids, vec![1, 4]);
+        assert_eq!(buckets[2].mode, RefineMode::RefineA);
+        assert_eq!(buckets[2].ids, vec![3]);
+    }
+
+    #[test]
+    fn artifact_flush_drains_only_the_oldest_mode_bucket() {
+        // flush() is keyed on (edge, mode) of the oldest entry: a
+        // refined entry of the same edge must stay queued
+        let mut b = batcher(100, 0);
+        b.push_mode(req_n(0, 16), RefineMode::None);
+        b.push_mode(req_n(1, 16), RefineMode::RefineA);
+        b.push_mode(req_n(2, 16), RefineMode::None);
+        let f = b.flush(|n| n).unwrap();
+        assert_eq!(f.ids, vec![0, 2]);
+        assert_eq!(b.queue_len(), 1);
+        let f = b.flush(|n| n).unwrap();
+        assert_eq!(f.ids, vec![1]);
+    }
+
+    #[test]
+    fn plain_push_is_unrefined() {
+        let mut b = batcher(100, 0);
+        b.push(req(0));
+        let buckets = b.flush_buckets();
+        assert_eq!(buckets.len(), 1);
+        assert_eq!(buckets[0].mode, RefineMode::None);
     }
 
     #[test]

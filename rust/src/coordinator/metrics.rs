@@ -14,6 +14,7 @@ pub struct Metrics {
     direct: AtomicU64,
     fallback: AtomicU64,
     engine_batched: AtomicU64,
+    engine_refined: AtomicU64,
     engine_flushes: AtomicU64,
     flushes: AtomicU64,
     padded_slots: AtomicU64,
@@ -32,7 +33,11 @@ pub struct MetricsSnapshot {
     pub fallback: u64,
     /// Requests served through the cached-plan bucketed engine lane.
     pub engine_batched: u64,
-    /// Engine-lane bucket flushes (one per shape bucket drained).
+    /// The subset of `engine_batched` served at a refined precision mode
+    /// (per-entry Eq. 1–3 chains batched on the engine pool).
+    pub engine_refined: u64,
+    /// Engine-lane bucket flushes (one per `(edge, mode)` bucket
+    /// drained).
     pub engine_flushes: u64,
     pub flushes: u64,
     pub padded_slots: u64,
@@ -63,10 +68,15 @@ impl Metrics {
         self.fallback.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// One engine-lane shape bucket drained with `real` requests.
-    pub fn on_engine_flush(&self, real: usize) {
+    /// One engine-lane `(edge, mode)` bucket drained with `real`
+    /// requests; `refined` marks a bucket executing at a refined
+    /// precision mode.
+    pub fn on_engine_flush(&self, real: usize, refined: bool) {
         self.engine_flushes.fetch_add(1, Ordering::Relaxed);
         self.engine_batched.fetch_add(real as u64, Ordering::Relaxed);
+        if refined {
+            self.engine_refined.fetch_add(real as u64, Ordering::Relaxed);
+        }
     }
 
     pub fn on_flush(&self, real: usize, padded: usize) {
@@ -95,6 +105,7 @@ impl Metrics {
             direct: self.direct.load(Ordering::Relaxed),
             fallback: self.fallback.load(Ordering::Relaxed),
             engine_batched: self.engine_batched.load(Ordering::Relaxed),
+            engine_refined: self.engine_refined.load(Ordering::Relaxed),
             engine_flushes: self.engine_flushes.load(Ordering::Relaxed),
             flushes: self.flushes.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
@@ -111,13 +122,15 @@ impl MetricsSnapshot {
     pub fn report(&self) -> String {
         format!(
             "req={} resp={} batched={} direct={} fallback={} engine_batched={} \
-             engine_flushes={} flushes={} pad={} err={} p50={:?} p99={:?} max={:?}",
+             engine_refined={} engine_flushes={} flushes={} pad={} err={} \
+             p50={:?} p99={:?} max={:?}",
             self.requests,
             self.responses,
             self.batched,
             self.direct,
             self.fallback,
             self.engine_batched,
+            self.engine_refined,
             self.engine_flushes,
             self.flushes,
             self.padded_slots,
@@ -141,8 +154,8 @@ mod tests {
         m.on_response(Duration::from_millis(2), true);
         m.on_response(Duration::from_millis(4), false);
         m.on_flush(5, 8);
-        m.on_engine_flush(3);
-        m.on_engine_flush(2);
+        m.on_engine_flush(3, false);
+        m.on_engine_flush(2, true);
         m.on_error();
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
@@ -151,9 +164,11 @@ mod tests {
         assert_eq!(s.flushes, 1);
         assert_eq!(s.engine_flushes, 2);
         assert_eq!(s.engine_batched, 5);
+        assert_eq!(s.engine_refined, 2);
         assert_eq!(s.padded_slots, 3);
         assert_eq!(s.errors, 1);
         assert!(s.report().contains("engine_batched=5"));
+        assert!(s.report().contains("engine_refined=2"));
     }
 
     #[test]

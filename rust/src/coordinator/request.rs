@@ -58,11 +58,15 @@ pub enum ServedBy {
     BatchedTensorCore,
     /// Dedicated GEMM artifact.
     TensorCore,
-    /// The host engine's bucketed lane: an un-padded same-shape bucket
-    /// executed on the coordinator's cached per-edge
-    /// [`crate::gemm::plan::GemmPlan`].
+    /// The host engine's bucketed lane: an un-padded same-shape,
+    /// same-mode bucket executed on the coordinator's cached
+    /// per-`(edge, mode)` [`crate::gemm::plan::GemmPlan`] (refined
+    /// modes included — check [`GemmResponse::mode`] for the precision
+    /// actually applied).
     BatchedEngine,
-    /// Host CPU fallback, one request at a time (nothing else fits).
+    /// Host CPU fallback, one request at a time (non-square requests
+    /// only: every square request has an artifact, a batch slot or an
+    /// engine bucket).
     CpuFallback,
 }
 

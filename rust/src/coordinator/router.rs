@@ -6,19 +6,20 @@
 //!   2.5-12x over per-call serving);
 //! * square requests matching a dedicated artifact -> direct Tensor-Core
 //!   execution at the mode the policy picked;
-//! * square unrefined requests with no artifact -> the **bucketed engine
-//!   lane**: they join a second dynamic batcher whose un-padded shape
-//!   buckets ([`crate::coordinator::batcher::Batcher::flush_buckets`])
-//!   execute on cached [`crate::gemm::plan::GemmPlan`]s — one plan per
-//!   square edge, built once and reused across flushes — instead of
+//! * square requests with no artifact — *at any precision mode* -> the
+//!   **bucketed engine lane**: they join a second dynamic batcher whose
+//!   un-padded `(edge, mode)` buckets
+//!   ([`crate::coordinator::batcher::Batcher::flush_buckets`]) execute
+//!   on cached [`crate::gemm::plan::GemmPlan`]s — one plan per bucket
+//!   key, built once and reused across flushes; refined keys batch
+//!   their per-entry Eq. 1–3 chains on the engine pool — instead of
 //!   paying a per-request CPU fallback;
-//! * everything else (non-square, or refined with no artifact) -> CPU
-//!   fallback through the cuBLAS-style interface, which itself executes
-//!   as a one-shot plan on the packed multithreaded engine
-//!   ([`crate::gemm::engine`]) — correct and host-speed (the engine's
-//!   persistent pool amortizes worker startup across the fallback
-//!   stream), counted by metrics (a real deployment would still AOT
-//!   more shapes).
+//! * everything else (non-square only, now) -> CPU fallback through the
+//!   cuBLAS-style interface, which itself executes as a one-shot plan
+//!   on the packed multithreaded engine ([`crate::gemm::engine`]) —
+//!   correct and host-speed (the engine's persistent pool amortizes
+//!   worker startup across the fallback stream), counted by metrics (a
+//!   real deployment would still AOT more shapes).
 
 use crate::precision::RefineMode;
 use crate::runtime::Manifest;
@@ -32,12 +33,15 @@ pub enum Route {
     /// Join the dynamic batch for `tile`-sized multiplications (the
     /// batched Tensor-Core artifact lane).
     Batch { tile: usize },
-    /// Square, unrefined, no artifact: join the engine lane's shape
-    /// bucket for edge `n`, executed on the service's cached plan.
-    EngineBatch { n: usize },
+    /// Square with no artifact, at any precision mode: join the engine
+    /// lane's `(edge, mode)` bucket, executed on the service's cached
+    /// plan for that key (refined modes run per-entry Eq. 1–3 chains on
+    /// the engine pool).
+    EngineBatch { n: usize, mode: RefineMode },
     /// Run the named artifact directly.
     Direct { artifact: String, mode: RefineMode },
-    /// Nothing else fits: emulate on the host, one request at a time.
+    /// Nothing else fits (non-square): emulate on the host, one request
+    /// at a time.
     CpuFallback { mode: RefineMode },
 }
 
@@ -74,10 +78,10 @@ impl Router {
                 return Route::Direct { artifact: meta.name.clone(), mode };
             }
             // square but artifact-less: the bucketed engine lane serves
-            // it through a cached plan instead of per-request fallback
-            if mode == RefineMode::None {
-                return Route::EngineBatch { n };
-            }
+            // every mode through a mode-keyed cached plan instead of
+            // per-request fallback (refined requests included — the
+            // plan layer batches their Eq. 1–3 chains on the pool)
+            return Route::EngineBatch { n, mode };
         }
         Route::CpuFallback { mode }
     }
@@ -129,7 +133,18 @@ mod tests {
         // square with no matching artifact: bucketed engine lane, not
         // per-request CPU fallback (the PR 2 open item)
         let req = GemmRequest::new(4, Matrix::zeros(100, 100), Matrix::zeros(100, 100));
-        assert_eq!(r.route(&req), Route::EngineBatch { n: 100 });
+        assert_eq!(r.route(&req), Route::EngineBatch { n: 100, mode: RefineMode::None });
+    }
+
+    #[test]
+    fn refined_square_non_artifact_shapes_ride_engine_lane() {
+        let Some(r) = router() else { return };
+        // refined square with no artifact at that (mode, edge): the
+        // engine lane carries the mode instead of falling back (the
+        // PR 3 open item)
+        let req = GemmRequest::new(7, Matrix::zeros(100, 100), Matrix::zeros(100, 100))
+            .with_mode(RefineMode::RefineAB);
+        assert_eq!(r.route(&req), Route::EngineBatch { n: 100, mode: RefineMode::RefineAB });
     }
 
     #[test]

@@ -20,19 +20,22 @@
 //! Two host-engine lanes exist below the artifact lanes:
 //!
 //! * the **bucketed engine lane** (`Route::EngineBatch`): square
-//!   unrefined requests with no artifact accumulate in their own dynamic
-//!   batcher and flush as un-padded per-shape buckets
-//!   ([`Batcher::flush_buckets`]) onto the dispatcher's `PlanCache` —
-//!   one cached [`GemmPlan`] per square edge, built once, executed
-//!   (`execute_batched`) for every subsequent bucket of that edge.  The
-//!   throughput win of this lane is the *bucketing* (one pool dispatch
-//!   per shape group instead of one thread per request); the cached plan
-//!   contributes the validated descriptor and a uniform execution
-//!   configuration per edge — batched execution packs per entry inside
-//!   the engine, so per-operand panel reuse does not apply here;
+//!   requests with no artifact — refined or not — accumulate in their
+//!   own dynamic batcher and flush as un-padded per-`(edge, mode)`
+//!   buckets ([`Batcher::flush_buckets`]) onto the dispatcher's
+//!   `PlanCache` — one cached [`GemmPlan`] per bucket key, built once,
+//!   executed (`execute_batched`) for every subsequent bucket of that
+//!   key; refined keys batch their per-entry Eq. 1–3 chains on the
+//!   engine pool.  The throughput win of this lane is the *bucketing*
+//!   (one pool dispatch per bucket instead of one thread per request);
+//!   the cached plan contributes the validated descriptor and a uniform
+//!   execution configuration per key — batched execution packs per
+//!   entry inside the engine, so per-operand panel reuse does not apply
+//!   here;
 //! * the **CPU fallback lane** (`Route::CpuFallback`): anything left
-//!   (non-square, or refined with no artifact) runs one-shot through the
-//!   cuBLAS-style handle, which itself executes as a plan.
+//!   (non-square only, now that refined square traffic rides the engine
+//!   lane) runs one-shot through the cuBLAS-style handle, which itself
+//!   executes as a plan.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -216,15 +219,18 @@ struct PendingReply {
     submitted: Instant,
 }
 
-/// The dispatcher's per-bucket plan cache: one mixed-precision
-/// [`GemmPlan`] per square edge, built on first use and shared (via
-/// `Arc`) with the worker threads that execute its buckets.  The cached
-/// plan carries the validated descriptor and execution configuration
-/// for its edge (batched execution packs per entry inside the engine,
-/// so this cache is about a stable, validated route per shape — the
-/// speed of the lane comes from bucketing onto the pool).
+/// The dispatcher's per-bucket plan cache: one [`GemmPlan`] per
+/// `(square edge, precision mode)` key, built on first use and shared
+/// (via `Arc`) with the worker threads that execute its buckets.
+/// Unrefined keys cache a mixed-precision plan; refined keys cache a
+/// [`Precision::Refined`] plan whose batched execution runs per-entry
+/// Eq. 1–3 chains on the engine pool.  The cached plan carries the
+/// validated descriptor and execution configuration for its key
+/// (batched execution packs per entry inside the engine, so this cache
+/// is about a stable, validated route per key — the speed of the lane
+/// comes from bucketing onto the pool).
 struct PlanCache {
-    plans: HashMap<usize, Arc<GemmPlan>>,
+    plans: HashMap<(usize, RefineMode), Arc<GemmPlan>>,
 }
 
 impl PlanCache {
@@ -232,15 +238,20 @@ impl PlanCache {
         PlanCache { plans: HashMap::new() }
     }
 
-    /// The cached plan for square edge `n` (built on first request).
-    fn for_edge(&mut self, n: usize) -> Arc<GemmPlan> {
+    /// The cached plan for the `(edge, mode)` bucket key (built on first
+    /// request).
+    fn for_bucket(&mut self, n: usize, mode: RefineMode) -> Arc<GemmPlan> {
         self.plans
-            .entry(n)
+            .entry((n, mode))
             .or_insert_with(|| {
+                let precision = match mode {
+                    RefineMode::None => Precision::Mixed,
+                    refined => Precision::Refined(refined),
+                };
                 let plan = GemmDesc::square(n)
-                    .precision(Precision::Mixed)
+                    .precision(precision)
                     .build()
-                    .expect("square mixed plan descriptors are always valid");
+                    .expect("square engine-lane plan descriptors are always valid");
                 Arc::new(plan)
             })
             .clone()
@@ -329,12 +340,12 @@ fn dispatch_one(
             );
             batcher.push(sub.req);
         }
-        Route::EngineBatch { .. } => {
+        Route::EngineBatch { mode, .. } => {
             pending.insert(
                 sub.req.id,
                 PendingReply { reply: sub.reply, submitted: sub.submitted },
             );
-            engine_batcher.push(sub.req);
+            engine_batcher.push_mode(sub.req, mode);
         }
         Route::Direct { artifact, mode } => {
             metrics.on_direct();
@@ -470,10 +481,11 @@ fn flush_batch(
 }
 
 /// Engine-lane flush: drain the whole engine batcher into un-padded
-/// per-shape buckets and execute each on the cached plan for its edge.
-/// Each bucket runs on its own worker thread (the dispatcher keeps
-/// batching); the plan rides into the thread as an `Arc`, so a hot edge
-/// can have several buckets in flight against one plan.
+/// per-`(edge, mode)` buckets and execute each on the cached plan for
+/// its key (refined keys batch their Eq. 1–3 chains on the engine
+/// pool).  Each bucket runs on its own worker thread (the dispatcher
+/// keeps batching); the plan rides into the thread as an `Arc`, so a
+/// hot key can have several buckets in flight against one plan.
 fn flush_engine_buckets(
     batcher: &mut Batcher,
     plans: &mut PlanCache,
@@ -481,8 +493,9 @@ fn flush_engine_buckets(
     pending: &mut HashMap<RequestId, PendingReply>,
 ) {
     for bucket in batcher.flush_buckets() {
-        let plan = plans.for_edge(bucket.n);
-        metrics.on_engine_flush(bucket.len());
+        let mode = bucket.mode;
+        let plan = plans.for_bucket(bucket.n, mode);
+        metrics.on_engine_flush(bucket.len(), mode != RefineMode::None);
         let replies: Vec<(RequestId, Instant, Option<PendingReply>)> = bucket
             .ids
             .iter()
@@ -504,7 +517,7 @@ fn flush_engine_buckets(
                             let resp = GemmResponse {
                                 id,
                                 c: out,
-                                mode: RefineMode::None,
+                                mode,
                                 served_by: ServedBy::BatchedEngine,
                                 queued: t0.duration_since(enq),
                                 exec,

@@ -46,6 +46,7 @@ mod pack;
 mod pool;
 
 pub use pack::{InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB};
+pub(crate) use pack::split_f16_matrix;
 pub use pool::{
     default_threads, idle_workers, parse_pool_mode, parse_threads, pool_mode, set_pool_mode,
     spawned_workers, PoolMode,
@@ -53,6 +54,7 @@ pub use pool::{
 
 use crate::gemm::Matrix;
 use crate::halfprec::{half_add, half_mul, Half};
+use crate::precision::RefineMode;
 
 use micro::{div_up, microkernel, MR, NR};
 use pool::{parallel_units, resolve_threads};
@@ -191,6 +193,88 @@ pub fn batched_hgemm(a: &[Matrix], b: &[Matrix], threads: usize) -> Vec<Matrix> 
             pa.repack(&a[e]);
             pb.repack(&b[e]);
             chunk[e - e0] = hgemm_packed(&pa, &pb, 1);
+        }
+    });
+    out
+}
+
+/// Elementwise `acc += part` — the refinement chains' exact f32 chaining
+/// step (Eqs. 2–3 accumulate their partial products into one f32 matrix
+/// in ascending refinement order; this is that step's single definition,
+/// shared with the plan layer's cached-panel refined execution).
+pub(crate) fn add_assign(acc: &mut Matrix, part: &Matrix) {
+    for (o, p) in acc.as_mut_slice().iter_mut().zip(part.as_slice()) {
+        *o += p;
+    }
+}
+
+/// Batched §V precision refinement: `out[i]` is the Eq. 2/3 chain of
+/// entry `i`, entries distributed over the pool with the same static
+/// contiguous-chunk ownership as every other batched path.  Each worker
+/// pays each entry's Eq. 1 residual split and pack exactly once (into
+/// per-worker buffers reused across its entries) and chains the 2/4
+/// Tensor-Core-semantics partial products in the legacy summation order
+/// — residual products first — so a batched refined result equals a
+/// loop of per-entry [`crate::precision::refine_gemm`] calls bit for
+/// bit at every worker count and pool mode.  Buckets narrower than the
+/// pool hand the leftover width to the partial GEMMs inside each entry
+/// (one large refined request still uses the whole pool), which cannot
+/// move a bit either.  Plan
+/// execution substrate, like [`batched_mixed_gemm`]; consumer code goes
+/// through [`crate::gemm::plan::GemmPlan::execute_batched`].
+pub fn batched_refined_gemm(
+    a: &[Matrix],
+    b: &[Matrix],
+    mode: RefineMode,
+    threads: usize,
+) -> Vec<Matrix> {
+    if mode == RefineMode::None {
+        return batched_mixed_gemm(a, b, threads);
+    }
+    assert_eq!(a.len(), b.len(), "batch length mismatch");
+    let split_b = mode == RefineMode::RefineAB;
+    let mut out: Vec<Matrix> = (0..a.len()).map(|_| Matrix::zeros(0, 0)).collect();
+    let t = resolve_threads(threads, batch_flops(a, b) * mode.gemm_count(), SERIAL_FLOPS);
+    // a bucket narrower than the pool (down to one large refined
+    // request on the coordinator's engine lane) hands the leftover
+    // width to the partial GEMMs inside each entry instead of
+    // serializing them — threading is bitwise inert by the engine
+    // contract, so this only moves wall-clock time
+    let inner = (t / a.len().max(1)).max(1);
+    parallel_units(&mut out, a.len(), |u| u, t, |e0, e1, chunk| {
+        // per-worker pack buffers, reused across the worker's entries
+        let mut ah = PackedA::default();
+        let mut al = PackedA::default();
+        let mut bh = PackedB::default();
+        let mut bl = PackedB::default();
+        for e in e0..e1 {
+            assert_eq!(a[e].cols(), b[e].rows(), "inner dimension mismatch");
+            let (hi, lo) = split_f16_matrix(&a[e]);
+            ah.repack(&hi, InputPrecision::F16Rounded);
+            al.repack(&lo, InputPrecision::F16Rounded);
+            chunk[e - e0] = if split_b {
+                let (hi, lo) = split_f16_matrix(&b[e]);
+                bh.repack(&hi, InputPrecision::F16Rounded);
+                bl.repack(&lo, InputPrecision::F16Rounded);
+                // Eq. 3: R_A R_B + A_h R_B + R_A B_h + A_h B_h
+                let mut acc = gemm_packed(&al, &bl, None, 1.0, 0.0, inner);
+                for part in [
+                    gemm_packed(&ah, &bl, None, 1.0, 0.0, inner),
+                    gemm_packed(&al, &bh, None, 1.0, 0.0, inner),
+                    gemm_packed(&ah, &bh, None, 1.0, 0.0, inner),
+                ] {
+                    add_assign(&mut acc, &part);
+                }
+                acc
+            } else {
+                // RefineA consumes the rounded B in both of its GEMMs
+                bh.repack(&b[e], InputPrecision::F16Rounded);
+                // Eq. 2: R_A B_h + A_h B_h
+                let mut acc = gemm_packed(&al, &bh, None, 1.0, 0.0, inner);
+                let main = gemm_packed(&ah, &bh, None, 1.0, 0.0, inner);
+                add_assign(&mut acc, &main);
+                acc
+            };
         }
     });
     out
@@ -446,5 +530,20 @@ mod tests {
         for i in 0..10 {
             assert_eq!(got[i], mixed_gemm(&a[i], &b[i], None, 1.0, 0.0, 1), "entry {i}");
         }
+    }
+
+    #[test]
+    fn batched_refined_entries_match_single_chains() {
+        use crate::precision::refine_gemm;
+        let mut rng = Rng::new(7);
+        let a: Vec<Matrix> = (0..6).map(|_| uniform_matrix(&mut rng, 20, 20, -1.0, 1.0)).collect();
+        let b: Vec<Matrix> = (0..6).map(|_| uniform_matrix(&mut rng, 20, 20, -1.0, 1.0)).collect();
+        for mode in RefineMode::ALL {
+            let got = batched_refined_gemm(&a, &b, mode, 4);
+            for i in 0..6 {
+                assert_eq!(got[i], refine_gemm(&a[i], &b[i], mode), "{mode} entry {i}");
+            }
+        }
+        assert_eq!(batched_refined_gemm(&[], &[], RefineMode::RefineAB, 4), Vec::<Matrix>::new());
     }
 }

@@ -43,6 +43,18 @@ fn convert(x: f32, prec: InputPrecision) -> f32 {
     }
 }
 
+/// Eq. 1 residual split at matrix granularity: the elementwise
+/// rounded-to-half copy (widened back to f32 storage) and the rounded
+/// remainder.  This is the pack step of every refined path — single-GEMM
+/// refined plans and the batched refined engine share this one
+/// definition, so their splits cannot drift apart.
+pub(crate) fn split_f16_matrix(x: &Matrix) -> (Matrix, Matrix) {
+    let (r, c) = x.shape();
+    let hi = Matrix::from_fn(r, c, |i, j| f16_to_f32(f32_to_f16(x[(i, j)])));
+    let lo = Matrix::from_fn(r, c, |i, j| f16_to_f32(f32_to_f16(x[(i, j)] - hi[(i, j)])));
+    (hi, lo)
+}
+
 /// A packed as `ceil(m/MR)` row panels, each `k * MR` (k-major).
 #[derive(Clone, Debug, Default)]
 pub struct PackedA {

@@ -30,7 +30,10 @@
 //!   it is attribution metadata, not a per-call switch),
 //! * the **epilogue**: the one implementation of `alpha*AB + beta*C` in
 //!   the crate, with the cuBLAS rule that `beta == 0` never reads `C`
-//!   (a NaN-filled C cannot leak into the output).
+//!   (a NaN-filled C cannot leak into the output).  Batched execution
+//!   applies the same implementation as a per-entry post-pass
+//!   ([`GemmPlan::execute_batched_with`]), so single and batched
+//!   epilogues cannot drift apart.
 //!
 //! Execution never re-packs: [`GemmPlan::execute`] /
 //! [`GemmPlan::execute_into`] run the cached panels repeatedly, and
@@ -53,7 +56,6 @@ use crate::gemm::engine::{
     self, InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB, PoolMode,
 };
 use crate::gemm::Matrix;
-use crate::halfprec::{f16_to_f32, f32_to_f16};
 use crate::precision::RefineMode;
 
 /// The numerical mode a plan executes under — the paper's precision axis
@@ -97,9 +99,16 @@ pub enum PlanError {
     BatchEntry { index: usize, a: (usize, usize), b: (usize, usize) },
     /// The prior-C operand's shape disagrees with the output shape.
     CShape { want: (usize, usize), got: (usize, usize) },
+    /// `execute_batched_with` received a C batch whose length differs
+    /// from the A/B batches.
+    CBatchLength { want: usize, got: usize },
     /// `execute_into` received an output of the wrong shape.
     OutputShape { want: (usize, usize), got: (usize, usize) },
     /// The descriptor asks for a combination the engine does not serve.
+    /// No current descriptor produces this — batched refined plans and
+    /// batched alpha/beta epilogues, the two historical cases, are now
+    /// served — but the variant is kept so future engine gaps stay
+    /// expressible as typed errors.
     Unsupported { what: &'static str },
 }
 
@@ -136,6 +145,9 @@ impl std::fmt::Display for PlanError {
             PlanError::CShape { want, got } => {
                 write!(f, "C operand shape mismatch: want {want:?}, got {got:?}")
             }
+            PlanError::CBatchLength { want, got } => {
+                write!(f, "C batch length mismatch: want {want} entries, got {got}")
+            }
             PlanError::OutputShape { want, got } => {
                 write!(f, "output shape mismatch: want {want:?}, got {got:?}")
             }
@@ -152,6 +164,20 @@ impl std::error::Error for PlanError {}
 /// [`GemmDesc::square`] or [`GemmDesc::any_shape`] (heterogeneous batched
 /// work), refine it with the builder methods, then [`GemmDesc::build`] /
 /// [`GemmDesc::plan`] it into a [`GemmPlan`].
+///
+/// # Example
+///
+/// ```
+/// use tensoremu::gemm::{GemmDesc, Matrix, Precision};
+///
+/// // integer-valued inputs are f16-exact, so the Tensor-Core-semantics
+/// // Mixed mode reproduces them exactly against an identity B
+/// let a = Matrix::from_fn(4, 6, |i, j| (i + j) as f32);
+/// let b = Matrix::eye(6);
+/// let plan = GemmDesc::new(4, 6, 6).precision(Precision::Mixed).plan(&a, &b)?;
+/// assert_eq!(plan.execute()?, a);
+/// # Ok::<(), tensoremu::gemm::PlanError>(())
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct GemmDesc {
     dims: Option<(usize, usize, usize)>,
@@ -250,13 +276,11 @@ impl GemmDesc {
 
     /// Validate the descriptor into an operand-less plan (operands are
     /// supplied later via [`GemmPlan::set_a`] / [`GemmPlan::set_b`], or
-    /// per call for batched execution).
+    /// per call for batched execution).  Every descriptor combination
+    /// currently validates — batched refined plans and batched alpha/beta
+    /// epilogues included — but the `Result` stays so future engine gaps
+    /// surface as typed errors, not panics.
     pub fn build(self) -> Result<GemmPlan, PlanError> {
-        if let (Precision::Refined(mode), Some(_)) = (self.precision, self.batch) {
-            if mode != RefineMode::None {
-                return Err(PlanError::Unsupported { what: "batched refined GEMM plans" });
-            }
-        }
         let pool = self.pool.unwrap_or_else(engine::pool_mode);
         Ok(GemmPlan { desc: self, pool, a: OperandA::Unset, b: OperandB::Unset })
     }
@@ -307,24 +331,6 @@ fn refines_b(mode: RefineMode) -> bool {
     matches!(mode, RefineMode::RefineAB)
 }
 
-/// Eq. 1 residual split: elementwise rounded-to-half copy (still f32
-/// storage) and the rounded remainder — identical to the legacy
-/// refinement's split, order and all.
-fn split_matrix(x: &Matrix) -> (Matrix, Matrix) {
-    let (r, c) = x.shape();
-    let hi = Matrix::from_fn(r, c, |i, j| f16_to_f32(f32_to_f16(x[(i, j)])));
-    let lo = Matrix::from_fn(r, c, |i, j| f16_to_f32(f32_to_f16(x[(i, j)] - hi[(i, j)])));
-    (hi, lo)
-}
-
-/// Elementwise `acc += part` — the refinement chains' exact f32 chaining
-/// step (same expression and order as the legacy implementation).
-fn add_assign(acc: &mut Matrix, part: &Matrix) {
-    for (o, p) in acc.as_mut_slice().iter_mut().zip(part.as_slice()) {
-        *o += p;
-    }
-}
-
 /// A validated, immutable execution plan owning its packed operands.
 ///
 /// Cheap to execute repeatedly; see the module docs for the reuse story.
@@ -361,6 +367,17 @@ impl GemmPlan {
     /// Pack (or re-pack, reusing the buffer allocation) the left operand.
     /// The other operand's packed panels are untouched — swapping one
     /// side is the refinement chains' and bucket lanes' reuse pattern.
+    ///
+    /// ```
+    /// use tensoremu::gemm::{GemmDesc, Matrix};
+    ///
+    /// let b = Matrix::eye(3);
+    /// let mut plan = GemmDesc::square(3).plan(&Matrix::zeros(3, 3), &b)?;
+    /// let a = Matrix::from_fn(3, 3, |i, j| (i * 3 + j) as f32);
+    /// plan.set_a(&a)?; // B's packed panels stay warm
+    /// assert_eq!(plan.execute()?, a);
+    /// # Ok::<(), tensoremu::gemm::PlanError>(())
+    /// ```
     pub fn set_a(&mut self, a: &Matrix) -> Result<(), PlanError> {
         let (m, k, _) = self.dims_pinned()?;
         if a.shape() != (m, k) {
@@ -381,7 +398,7 @@ impl GemmPlan {
             },
             Precision::Refined(mode) => {
                 debug_assert!(refines_a(mode));
-                let (him, lom) = split_matrix(a);
+                let (him, lom) = engine::split_f16_matrix(a);
                 match &mut self.a {
                     OperandA::Split { hi, lo } => {
                         hi.repack(&him, InputPrecision::F16Rounded);
@@ -420,7 +437,7 @@ impl GemmPlan {
             },
             Precision::Refined(mode) => {
                 if refines_b(mode) {
-                    let (him, lom) = split_matrix(b);
+                    let (him, lom) = engine::split_f16_matrix(b);
                     match &mut self.b {
                         OperandB::Split { hi, lo } => {
                             hi.repack(&him, InputPrecision::F16Rounded);
@@ -519,13 +536,46 @@ impl GemmPlan {
         }
     }
 
-    /// Batched execution `out[i] = a[i] x b[i]` under the plan's
-    /// precision, entries distributed over the engine pool.  Pinned-dims
-    /// plans require every entry to match the descriptor exactly;
-    /// [`GemmDesc::any_shape`] plans accept heterogeneous entries (the
-    /// coordinator's un-padded shape buckets).  The epilogue must be the
-    /// default `(alpha, beta) = (1, 0)`.
+    /// Batched execution `out[i] = alpha * a[i] x b[i]` under the plan's
+    /// precision, entries distributed over the engine pool (refined
+    /// precisions run their per-entry Eq. 1–3 residual-split chains on
+    /// the pool, each entry split and packed once by its owning worker).
+    /// Pinned-dims plans require every entry to match the descriptor
+    /// exactly; [`GemmDesc::any_shape`] plans accept heterogeneous
+    /// entries (the coordinator's un-padded shape buckets).  Like
+    /// [`GemmPlan::execute`], a missing C is treated as zeros (so a
+    /// `beta != 0` descriptor only scales by `alpha` here) — pass the
+    /// prior-C batch to [`GemmPlan::execute_batched_with`] for real
+    /// accumulation.
     pub fn execute_batched(&self, a: &[Matrix], b: &[Matrix]) -> Result<Vec<Matrix>, PlanError> {
+        self.execute_batched_with(a, b, None)
+    }
+
+    /// Batched execution with the full epilogue:
+    /// `out[i] = alpha * a[i] x b[i] + beta * c[i]`.  The epilogue is a
+    /// per-entry post-pass through the crate's single `alpha*AB + beta*C`
+    /// implementation, so batched results stay bitwise equal to a loop
+    /// of per-entry scalar-oracle calls; `(alpha, beta) = (1, 0)` leaves
+    /// the raw products untouched.  cuBLAS semantics hold per entry:
+    /// `beta == 0` never reads C (a NaN-filled C batch cannot leak into
+    /// any output), though a provided C batch is still shape-validated.
+    ///
+    /// ```
+    /// use tensoremu::gemm::{GemmDesc, Matrix};
+    ///
+    /// let eyes = vec![Matrix::eye(2), Matrix::eye(2)];
+    /// let plan = GemmDesc::any_shape().epilogue(1.0, 2.0).build()?;
+    /// let out = plan.execute_batched_with(&eyes, &eyes, Some(&eyes))?;
+    /// // per entry: alpha * I x I + beta * I = 3 * I
+    /// assert_eq!(out[1], Matrix::from_fn(2, 2, |i, j| if i == j { 3.0 } else { 0.0 }));
+    /// # Ok::<(), tensoremu::gemm::PlanError>(())
+    /// ```
+    pub fn execute_batched_with(
+        &self,
+        a: &[Matrix],
+        b: &[Matrix],
+        c: Option<&[Matrix]>,
+    ) -> Result<Vec<Matrix>, PlanError> {
         if a.len() != b.len() {
             return Err(PlanError::BatchLength { a: a.len(), b: b.len() });
         }
@@ -534,8 +584,10 @@ impl GemmPlan {
                 return Err(PlanError::BatchCount { want: count, got: a.len() });
             }
         }
-        if self.desc.alpha != 1.0 || self.desc.beta != 0.0 {
-            return Err(PlanError::Unsupported { what: "alpha/beta epilogue on batched execution" });
+        if let Some(cs) = c {
+            if cs.len() != a.len() {
+                return Err(PlanError::CBatchLength { want: a.len(), got: cs.len() });
+            }
         }
         for (i, (x, y)) in a.iter().zip(b).enumerate() {
             let consistent = match self.desc.dims {
@@ -545,18 +597,31 @@ impl GemmPlan {
             if !consistent {
                 return Err(PlanError::BatchEntry { index: i, a: x.shape(), b: y.shape() });
             }
+            if let Some(cs) = c {
+                let want = (x.rows(), y.cols());
+                if cs[i].shape() != want {
+                    return Err(PlanError::CShape { want, got: cs[i].shape() });
+                }
+            }
         }
         let t = self.desc.threads;
-        match self.desc.precision {
-            Precision::F32 => Ok(engine::batched_sgemm(a, b, t)),
+        let raw = match self.desc.precision {
+            Precision::F32 => engine::batched_sgemm(a, b, t),
             Precision::Mixed | Precision::Refined(RefineMode::None) => {
-                Ok(engine::batched_mixed_gemm(a, b, t))
+                engine::batched_mixed_gemm(a, b, t)
             }
-            Precision::F16 => Ok(engine::batched_hgemm(a, b, t)),
-            Precision::Refined(_) => {
-                Err(PlanError::Unsupported { what: "batched refined GEMM plans" })
-            }
-        }
+            Precision::F16 => engine::batched_hgemm(a, b, t),
+            Precision::Refined(mode) => engine::batched_refined_gemm(a, b, mode, t),
+        };
+        let beta = self.desc.beta;
+        Ok(raw
+            .into_iter()
+            .enumerate()
+            .map(|(i, prod)| {
+                let ce = if beta == 0.0 { None } else { c.map(|cs| &cs[i]) };
+                self.epilogue(prod, ce)
+            })
+            .collect())
     }
 
     /// The refinement chain over the cached split panels, in the legacy
@@ -568,7 +633,7 @@ impl GemmPlan {
             (OperandA::Split { hi, lo }, OperandB::Rounded(pb)) => {
                 let mut acc = engine::gemm_packed(lo, pb, None, 1.0, 0.0, t);
                 let main = engine::gemm_packed(hi, pb, None, 1.0, 0.0, t);
-                add_assign(&mut acc, &main);
+                engine::add_assign(&mut acc, &main);
                 acc
             }
             (OperandA::Split { hi: ah, lo: al }, OperandB::Split { hi: bh, lo: bl }) => {
@@ -578,7 +643,7 @@ impl GemmPlan {
                     engine::gemm_packed(al, bh, None, 1.0, 0.0, t),
                     engine::gemm_packed(ah, bh, None, 1.0, 0.0, t),
                 ] {
-                    add_assign(&mut acc, &part);
+                    engine::add_assign(&mut acc, &part);
                 }
                 acc
             }
@@ -587,10 +652,10 @@ impl GemmPlan {
     }
 
     /// The single epilogue implementation for the non-engine-backed
-    /// products (f16 and refined sums): `alpha * prod + beta * C`, with
-    /// `beta == 0` never reading `C` (callers pass `c = None` then).
-    /// `(1, 0)` returns the product unchanged, preserving the legacy
-    /// paths' bits.
+    /// products (f16 and refined sums) and the batched per-entry
+    /// post-pass: `alpha * prod + beta * C`, with `beta == 0` never
+    /// reading `C` (callers pass `c = None` then).  `(1, 0)` returns
+    /// the product unchanged, preserving the legacy paths' bits.
     fn epilogue(&self, mut prod: Matrix, c: Option<&Matrix>) -> Matrix {
         let (alpha, beta) = (self.desc.alpha, self.desc.beta);
         if alpha == 1.0 && beta == 0.0 {
@@ -598,8 +663,11 @@ impl GemmPlan {
         }
         match c {
             None => {
+                // the scalar oracles always evaluate the full fused
+                // expression with cval = 0.0; keeping the `beta * 0.0`
+                // term preserves their bits down to the sign of zero
                 for v in prod.as_mut_slice() {
-                    *v = alpha * *v;
+                    *v = alpha * *v + beta * 0.0;
                 }
                 prod
             }
@@ -719,14 +787,47 @@ mod tests {
     }
 
     #[test]
-    fn batched_refined_rejected_at_build() {
-        let err = GemmDesc::any_shape()
+    fn batched_refined_plans_build_and_match_single_chains() {
+        // the two historical `Unsupported` corners are now served:
+        // batched refined descriptors validate and execute per-entry
+        // Eq. 2 chains, bitwise equal to a loop of refine_gemm singles
+        use crate::precision::refine_gemm;
+        let mut rng = Rng::new(40);
+        let a: Vec<Matrix> = (0..4).map(|_| uniform_matrix(&mut rng, 12, 12, -1.0, 1.0)).collect();
+        let b: Vec<Matrix> = (0..4).map(|_| uniform_matrix(&mut rng, 12, 12, -1.0, 1.0)).collect();
+        let p = GemmDesc::any_shape()
             .precision(Precision::Refined(RefineMode::RefineA))
             .batch(4)
             .build()
-            .err()
             .unwrap();
-        assert!(matches!(err, PlanError::Unsupported { .. }));
+        let got = p.execute_batched(&a, &b).unwrap();
+        for i in 0..4 {
+            assert_eq!(got[i], refine_gemm(&a[i], &b[i], RefineMode::RefineA), "entry {i}");
+        }
+    }
+
+    #[test]
+    fn batched_epilogue_applies_per_entry() {
+        let mut rng = Rng::new(44);
+        let a: Vec<Matrix> = (0..3).map(|_| uniform_matrix(&mut rng, 8, 8, -1.0, 1.0)).collect();
+        let b: Vec<Matrix> = (0..3).map(|_| uniform_matrix(&mut rng, 8, 8, -1.0, 1.0)).collect();
+        let c: Vec<Matrix> = (0..3).map(|_| uniform_matrix(&mut rng, 8, 8, -1.0, 1.0)).collect();
+        let p = GemmDesc::any_shape().epilogue(0.5, 2.0).build().unwrap();
+        let got = p.execute_batched_with(&a, &b, Some(&c)).unwrap();
+        for i in 0..3 {
+            let want = mixed_gemm_scalar(&a[i], &b[i], Some(&c[i]), 0.5, 2.0);
+            assert_eq!(got[i], want, "entry {i}");
+        }
+        // C batch validation: wrong length, then wrong entry shape
+        assert_eq!(
+            p.execute_batched_with(&a, &b, Some(&c[..2])).err().unwrap(),
+            PlanError::CBatchLength { want: 3, got: 2 }
+        );
+        let bad_c = vec![Matrix::zeros(8, 8), Matrix::zeros(4, 4), Matrix::zeros(8, 8)];
+        assert_eq!(
+            p.execute_batched_with(&a, &b, Some(&bad_c)).err().unwrap(),
+            PlanError::CShape { want: (8, 8), got: (4, 4) }
+        );
     }
 
     #[test]

@@ -31,6 +31,7 @@ fn plan_err(e: PlanError) -> CublasError {
         PlanError::InnerDim { .. } => "inner dimensions differ",
         PlanError::OperandShape { .. } => "operand shape disagrees with the descriptor",
         PlanError::CShape { .. } => "C matrix shape disagrees with the output",
+        PlanError::CBatchLength { .. } => "C batch length disagrees with the A/B batches",
         PlanError::OutputShape { .. } => "output shape disagrees with the descriptor",
         PlanError::BatchLength { .. } => "batch length mismatch",
         PlanError::BatchCount { .. } => "batch count disagrees with the descriptor",

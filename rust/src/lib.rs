@@ -51,13 +51,45 @@
 //! * **Serving** — a GEMM-as-a-service coordinator ([`coordinator`])
 //!   executing AOT-compiled JAX/Pallas artifacts through PJRT
 //!   ([`runtime`]); Python never runs on the request path.  Square
-//!   requests no artifact covers ride a bucketed engine lane over the
-//!   service's per-edge cached plans instead of per-request fallback.
+//!   requests no artifact covers — refined or not — ride a bucketed
+//!   engine lane: un-padded `(edge, precision mode)` buckets executed
+//!   on the service's mode-keyed cached plans (refined buckets batch
+//!   their §V Eq. 1–3 chains on the engine pool), so CPU fallback is
+//!   non-square traffic only.
 //!
-//! Quickstart: `make artifacts && cargo run --release --example quickstart`.
+//! ## Guides
+//!
+//! Long-form documentation lives in `docs/` and is rendered into this
+//! rustdoc (links and examples checked by `cargo doc` / `cargo test`):
+//!
+//! * [`docs::precision`] — the four [`gemm::Precision`] modes mapped to
+//!   the paper's §V Eqs. 1–3, the Fig. 8–10 error narrative, and when
+//!   the refined modes are worth their extra multiplications.
+//! * [`docs::migration`] — the legacy-wrapper → [`gemm::GemmPlan`]
+//!   migration table, with runnable before/after examples.
+//! * [`docs::benchmarks`] — the `BENCH_hotpath.json` schema, smoke vs
+//!   full runs, and the ROADMAP acceptance bar.
+//!
+//! Quickstart: `make artifacts && cargo run --release --example quickstart`
+//! (from `rust/`).
 
 pub mod coordinator;
 pub mod util;
+
+/// Long-form guides from `docs/`, rendered into rustdoc so their
+/// intra-doc links break `cargo doc -D warnings` when they rot and
+/// their Rust examples run as doctests under `cargo test`.
+pub mod docs {
+    #[doc = include_str!("../../docs/PRECISION.md")]
+    pub mod precision {}
+
+    #[doc = include_str!("../../docs/MIGRATION.md")]
+    pub mod migration {}
+
+    #[doc = include_str!("../../docs/BENCHMARKS.md")]
+    pub mod benchmarks {}
+}
+
 pub mod figures;
 pub mod gemm;
 pub mod halfprec;

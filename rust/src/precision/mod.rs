@@ -18,4 +18,4 @@ pub mod refine;
 
 pub use bounds::{mixed_gemm_error_bound, refined_gemm_error_bound};
 pub use error::{error_report, max_norm_error, ErrorReport};
-pub use refine::{refine_gemm, RefineMode};
+pub use refine::{batched_refine_gemm, refine_gemm, RefineMode};

@@ -14,7 +14,11 @@
 //! comparison).  `RefineMode` is the knob the coordinator's precision
 //! policy ([`crate::coordinator::policy`]) turns: more refinement =
 //! lower error = more GEMMs (1x, 2x, 4x), all run on the engine's
-//! persistent pool.
+//! persistent pool.  [`batched_refine_gemm`] is the batched face of the
+//! same chains — many refined products distributed over the pool, the
+//! combination the coordinator's engine lane serves for refined square
+//! traffic.  See `docs/PRECISION.md` (rendered as
+//! [`crate::docs::precision`]) for the full when-to-refine guide.
 
 use crate::gemm::plan::{GemmDesc, Precision};
 use crate::gemm::Matrix;
@@ -79,6 +83,21 @@ pub fn refine_gemm(a: &Matrix, b: &Matrix, mode: RefineMode) -> Matrix {
         .unwrap_or_else(|e| panic!("{e}"))
 }
 
+/// Batched refined product: `out[i] = refine(a[i] x b[i], mode)` through
+/// a shape-wildcard [`crate::gemm::plan::GemmPlan`] — the §IV-B batched
+/// workload at §V precision, which the plan layer serves by distributing
+/// per-entry Eq. 1–3 chains over the engine pool (each entry's residual
+/// split packed once by its owning worker).  Bitwise equal to a loop of
+/// [`refine_gemm`] singles at every worker count and pool mode; entry
+/// shapes may be heterogeneous.
+pub fn batched_refine_gemm(a: &[Matrix], b: &[Matrix], mode: RefineMode) -> Vec<Matrix> {
+    GemmDesc::any_shape()
+        .precision(Precision::Refined(mode))
+        .build()
+        .and_then(|p| p.execute_batched(a, b))
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +159,18 @@ mod tests {
         let e_none = refine_gemm(&a, &b, RefineMode::None).max_norm_diff(&truth);
         let e_ab = refine_gemm(&a, &b, RefineMode::RefineAB).max_norm_diff(&truth);
         assert!(e_none / e_ab > 10.0, "ratio {}", e_none / e_ab);
+    }
+
+    #[test]
+    fn batched_wrapper_matches_singles_bitwise() {
+        let a: Vec<Matrix> = (1u64..=3).map(|s| rand_matrix(24, s, 1.0)).collect();
+        let b: Vec<Matrix> = (4u64..=6).map(|s| rand_matrix(24, s, 1.0)).collect();
+        for mode in RefineMode::ALL {
+            let got = batched_refine_gemm(&a, &b, mode);
+            for i in 0..3 {
+                assert_eq!(got[i], refine_gemm(&a[i], &b[i], mode), "{mode} entry {i}");
+            }
+        }
     }
 
     #[test]

@@ -214,8 +214,83 @@ fn square_non_tile_requests_ride_engine_lane_with_zero_fallbacks() {
     let snap = c.metrics().snapshot();
     assert_eq!(snap.fallback, 0, "square requests must never fall back: {}", snap.report());
     assert_eq!(snap.engine_batched, 24, "{}", snap.report());
+    assert_eq!(snap.engine_refined, 0, "unrefined traffic: {}", snap.report());
     assert!(snap.engine_flushes >= 3, "three edges -> at least three buckets: {}", snap.report());
     assert_eq!(snap.responses, 24);
+    c.shutdown();
+}
+
+#[test]
+fn refined_square_requests_ride_engine_lane_with_zero_fallbacks() {
+    // the acceptance check for this PR's tentpole: a refined square
+    // workload over an injected empty manifest keeps the CPU-fallback
+    // counter at exactly zero — refined requests bucket onto mode-keyed
+    // cached plans and come back bitwise equal to the refine_gemm chains
+    let c = engine_only_coordinator();
+    let mut rng = Rng::new(14);
+    let mut rxs = Vec::new();
+    let mut wants = Vec::new();
+    for i in 0..18u64 {
+        let n = [24usize, 33, 24][(i % 3) as usize];
+        let mode = [RefineMode::RefineA, RefineMode::RefineAB][(i % 2) as usize];
+        let a = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        wants.push((mode, refine_gemm(&a, &b, mode)));
+        rxs.push(c.submit(GemmRequest::new(0, a, b).with_mode(mode)));
+    }
+    for (rx, (mode, want)) in rxs.into_iter().zip(wants) {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert_eq!(resp.served_by, ServedBy::BatchedEngine);
+        assert_eq!(resp.mode, mode);
+        // the engine lane is the host engine: bitwise equal to the chain
+        assert_eq!(resp.c, want);
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.fallback, 0, "refined square must never fall back: {}", snap.report());
+    assert_eq!(snap.engine_batched, 18, "{}", snap.report());
+    assert_eq!(snap.engine_refined, 18, "{}", snap.report());
+    assert_eq!(snap.responses, 18);
+    c.shutdown();
+}
+
+#[test]
+fn mixed_and_refined_same_edge_bucket_separately() {
+    // mode-aware bucketing at service level: one tight same-edge burst,
+    // half unrefined / half RefineAB — every response must come back at
+    // its own mode (same-bucket mixing would corrupt one half), and the
+    // refined counter must see exactly the refined half
+    let c = engine_only_coordinator();
+    let mut rng = Rng::new(15);
+    let inputs: Vec<(Matrix, Matrix, RefineMode)> = (0..16)
+        .map(|i| {
+            let mode = if i % 2 == 0 { RefineMode::None } else { RefineMode::RefineAB };
+            (
+                uniform_matrix(&mut rng, 24, 24, -1.0, 1.0),
+                uniform_matrix(&mut rng, 24, 24, -1.0, 1.0),
+                mode,
+            )
+        })
+        .collect();
+    let mut rxs = Vec::new();
+    for (a, b, mode) in &inputs {
+        let req = GemmRequest::new(0, a.clone(), b.clone()).with_mode(*mode);
+        rxs.push(c.submit(req));
+    }
+    for (rx, (a, b, mode)) in rxs.into_iter().zip(&inputs) {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert_eq!(resp.served_by, ServedBy::BatchedEngine);
+        assert_eq!(resp.mode, *mode);
+        let want = match mode {
+            RefineMode::None => mixed_gemm(a, b, None, 1.0, 0.0),
+            refined => refine_gemm(a, b, *refined),
+        };
+        assert_eq!(resp.c, want, "mode {mode:?}");
+    }
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.fallback, 0, "{}", snap.report());
+    assert_eq!(snap.engine_batched, 16, "{}", snap.report());
+    assert_eq!(snap.engine_refined, 8, "{}", snap.report());
+    assert!(snap.engine_flushes >= 2, "modes must never share a bucket: {}", snap.report());
     c.shutdown();
 }
 

@@ -259,6 +259,139 @@ fn batched_plans_equal_scalar_loops() {
 }
 
 #[test]
+fn batched_refined_equals_per_entry_oracle_across_threads_and_pools() {
+    // the closed descriptor corner: batched refined plans execute
+    // per-entry Eq. 2/3 chains on the pool, bitwise equal to the serial
+    // refined oracle AND to per-entry refine_gemm singles at every
+    // worker count and pool mode
+    let _g = lock_mode();
+    let ambient = engine::pool_mode();
+    let mut rng = Rng::new(112);
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    for &(m, k, n) in &[(16, 16, 16), (5, 7, 3), (33, 20, 12), (1, 1, 1)] {
+        let (x, y) = pair(&mut rng, m, k, n);
+        a.push(x);
+        b.push(y);
+    }
+    for mode in [RefineMode::RefineA, RefineMode::RefineAB] {
+        let want: Vec<Matrix> =
+            a.iter().zip(&b).map(|(x, y)| refine_scalar(x, y, mode)).collect();
+        let singles: Vec<Matrix> =
+            a.iter().zip(&b).map(|(x, y)| tensoremu::precision::refine_gemm(x, y, mode)).collect();
+        assert_eq!(singles, want, "{mode}: single chains must already match the oracle");
+        for pm in [PoolMode::Scoped, PoolMode::Persistent] {
+            engine::set_pool_mode(pm);
+            for &t in THREADS {
+                let plan = GemmDesc::any_shape()
+                    .precision(Precision::Refined(mode))
+                    .threads(t)
+                    .build()
+                    .unwrap();
+                assert_eq!(plan.execute_batched(&a, &b).unwrap(), want, "{mode} {pm:?} t={t}");
+            }
+        }
+    }
+    engine::set_pool_mode(ambient);
+}
+
+#[test]
+fn pinned_batched_refined_descriptor_validates_and_executes() {
+    // the acceptance corner spelled out: GemmDesc { batch: Some(n),
+    // precision: Refined(_), .. } builds and runs, bitwise equal to the
+    // per-entry scalar oracle
+    let mut rng = Rng::new(116);
+    let (a0, b0) = pair(&mut rng, 16, 16, 16);
+    let (a1, b1) = pair(&mut rng, 16, 16, 16);
+    let plan = GemmDesc::square(16)
+        .precision(Precision::Refined(RefineMode::RefineAB))
+        .batch(2)
+        .build()
+        .unwrap();
+    let got = plan.execute_batched(&[a0.clone(), a1.clone()], &[b0.clone(), b1.clone()]).unwrap();
+    assert_eq!(got[0], refine_scalar(&a0, &b0, RefineMode::RefineAB));
+    assert_eq!(got[1], refine_scalar(&a1, &b1, RefineMode::RefineAB));
+    // the batch pin still validates the call length
+    assert_eq!(
+        plan.execute_batched(&[a0], &[b0]).err().unwrap(),
+        PlanError::BatchCount { want: 2, got: 1 }
+    );
+}
+
+#[test]
+fn batched_epilogue_matches_per_entry_scalar_oracle_bitwise() {
+    // the other closed corner: alpha/beta on batched execution is a
+    // per-entry post-pass through the crate's single epilogue, bitwise
+    // equal to the scalar oracle's fused expression
+    let mut rng = Rng::new(113);
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    let mut c = Vec::new();
+    for &(m, k, n) in &[(16, 16, 16), (5, 7, 3), (24, 8, 24)] {
+        let (x, y) = pair(&mut rng, m, k, n);
+        c.push(uniform_matrix(&mut rng, m, n, -1.0, 1.0));
+        a.push(x);
+        b.push(y);
+    }
+    for &(alpha, beta) in &[(1.0f32, 1.0f32), (0.5, 2.0), (-1.25, 0.75)] {
+        for &t in THREADS {
+            let plan = GemmDesc::any_shape().epilogue(alpha, beta).threads(t).build().unwrap();
+            let got = plan.execute_batched_with(&a, &b, Some(&c)).unwrap();
+            for i in 0..a.len() {
+                let want = mixed_gemm_scalar(&a[i], &b[i], Some(&c[i]), alpha, beta);
+                assert_eq!(got[i], want, "entry {i} a={alpha} b={beta} t={t}");
+            }
+        }
+    }
+    // alpha-only scaling needs no C batch at all
+    let plan = GemmDesc::any_shape().epilogue(2.0, 0.0).build().unwrap();
+    let got = plan.execute_batched(&a, &b).unwrap();
+    for i in 0..a.len() {
+        assert_eq!(got[i], mixed_gemm_scalar(&a[i], &b[i], None, 2.0, 0.0), "entry {i}");
+    }
+}
+
+#[test]
+fn batched_refined_epilogue_composes() {
+    // refined precision x alpha/beta epilogue in one batched plan: the
+    // post-pass applies the same expression the single path fuses
+    let mut rng = Rng::new(114);
+    let a: Vec<Matrix> = (0..3).map(|_| uniform_matrix(&mut rng, 12, 12, -1.0, 1.0)).collect();
+    let b: Vec<Matrix> = (0..3).map(|_| uniform_matrix(&mut rng, 12, 12, -1.0, 1.0)).collect();
+    let c: Vec<Matrix> = (0..3).map(|_| uniform_matrix(&mut rng, 12, 12, -1.0, 1.0)).collect();
+    let plan = GemmDesc::any_shape()
+        .precision(Precision::Refined(RefineMode::RefineAB))
+        .epilogue(0.5, -2.0)
+        .build()
+        .unwrap();
+    let got = plan.execute_batched_with(&a, &b, Some(&c)).unwrap();
+    for i in 0..3 {
+        let mut want = refine_scalar(&a[i], &b[i], RefineMode::RefineAB);
+        for (w, cv) in want.as_mut_slice().iter_mut().zip(c[i].as_slice()) {
+            *w = 0.5 * *w + (-2.0) * cv;
+        }
+        assert_eq!(got[i], want, "entry {i}");
+    }
+}
+
+#[test]
+fn batched_beta_zero_with_nan_c_never_reads_c() {
+    // cuBLAS semantics per entry: beta == 0 must not read the C batch,
+    // so a NaN-filled C cannot poison any output at any precision
+    let mut rng = Rng::new(115);
+    let (a0, b0) = pair(&mut rng, 9, 9, 9);
+    let a = vec![a0];
+    let b = vec![b0];
+    let nan_c = vec![Matrix::from_fn(9, 9, |_, _| f32::NAN)];
+    for &prec in ALL_PRECISIONS {
+        let plan = GemmDesc::any_shape().precision(prec).epilogue(1.5, 0.0).build().unwrap();
+        let got = plan.execute_batched_with(&a, &b, Some(&nan_c)).unwrap();
+        assert!(got[0].as_slice().iter().all(|v| v.is_finite()), "{prec:?} leaked NaN from C");
+        assert_eq!(got, plan.execute_batched(&a, &b).unwrap(), "{prec:?}");
+    }
+}
+
+#[test]
 fn execute_into_writes_the_same_bits() {
     let mut rng = Rng::new(109);
     let (a, b) = pair(&mut rng, 26, 15, 22);
