@@ -6,7 +6,10 @@
 //! bar names (512^3 mixed GEMM, 1024-tile batched 16x16), plus the hgemm
 //! repack-reuse path and a batched refined comparison (a loop of
 //! per-entry `refine_gemm` singles vs one batched refined plan driving
-//! the Eq. 3 chains over the pool — the refined engine-lane shape).
+//! the Eq. 3 chains over the pool — the refined engine-lane shape),
+//! plus a strided-batched comparison (zero-copy `StridedBatch` views vs
+//! the per-call `Vec<Matrix>` gather the pre-view API forced — the
+//! `cublasGemmStridedBatched` axis of ISSUE 5).
 //!
 //! Part 2 — **persistent vs scoped pool** on repeated small GEMMs: the
 //! per-call latency axis (a scoped fork-join pays thread spawns on every
@@ -37,7 +40,7 @@ use tensoremu::coordinator::{Batcher, BatcherConfig, GemmRequest, PrecisionPolic
 use tensoremu::gemm::engine::{self, PackedHalfA, PackedHalfB, PoolMode};
 use tensoremu::gemm::{
     batched_mixed_gemm, batched_mixed_gemm_scalar, hgemm_scalar, mixed_gemm, mixed_gemm_scalar,
-    GemmDesc, Matrix, Precision,
+    GemmDesc, MatLayout, Matrix, Precision, StridedBatch,
 };
 use tensoremu::precision::{batched_refine_gemm, refine_gemm, RefineMode};
 use tensoremu::runtime::{Engine, Manifest, TensorData};
@@ -164,6 +167,41 @@ fn main() {
     println!("{}", fast.report());
     comparisons.push(Comparison { name: rb_name, scalar, engine: fast });
 
+    // -- strided batched vs Vec<Matrix> batch (the layout/view API
+    //    axis): both sides run the same cached any_shape plan over the
+    //    same contiguous buffers, so the only difference is the gather —
+    //    the owned path materializes a Vec<Matrix> per call (what the
+    //    pre-view API forced), the strided path hands zero-copy
+    //    StridedBatch views straight to the engine
+    let nsv = if smoke { 16 } else { 64 };
+    let sv_name: &'static str =
+        if smoke { "strided_batched_vs_vec_16x32" } else { "strided_batched_vs_vec_64x32" };
+    let edge = 32usize;
+    let sva = uniform_batch(&mut rng, nsv, edge, -1.0, 1.0);
+    let svb = uniform_batch(&mut rng, nsv, edge, -1.0, 1.0);
+    let abuf: Vec<f32> = sva.iter().flat_map(|m| m.as_slice().iter().copied()).collect();
+    let bbuf: Vec<f32> = svb.iter().flat_map(|m| m.as_slice().iter().copied()).collect();
+    let lay = MatLayout::new(edge, edge);
+    let entry = edge * edge;
+    let splan = GemmDesc::any_shape().build().unwrap();
+    let scalar = bench_config("gemm/batched_vec_gather", 30, 0, 30_000, || {
+        let av: Vec<Matrix> = (0..nsv)
+            .map(|i| Matrix::from_vec(edge, edge, abuf[i * entry..(i + 1) * entry].to_vec()))
+            .collect();
+        let bv: Vec<Matrix> = (0..nsv)
+            .map(|i| Matrix::from_vec(edge, edge, bbuf[i * entry..(i + 1) * entry].to_vec()))
+            .collect();
+        std::hint::black_box(splan.execute_batched(&av, &bv).unwrap());
+    });
+    println!("{}", scalar.report());
+    let fast = bench_config("gemm/batched_strided_views", 30, 300, 10_000, || {
+        let sa = StridedBatch::new(&abuf, lay, entry, nsv);
+        let sb = StridedBatch::new(&bbuf, lay, entry, nsv);
+        std::hint::black_box(splan.execute_strided_batched(&sa, &sb).unwrap());
+    });
+    println!("{}", fast.report());
+    comparisons.push(Comparison { name: sv_name, scalar, engine: fast });
+
     // -- persistent vs scoped pool: repeated small (<= 128^3) GEMMs,
     //    where per-call thread spawns dominate the scoped path
     let np = if smoke { 64 } else { 96 };
@@ -251,7 +289,8 @@ fn main() {
         "targets (ISSUE 2): >= 4x on mixed_512 and batched_1024x16 vs the scalar seed \
          kernels; persistent > scoped on repeated small GEMMs; \
          (ISSUE 3) cached plans > one-shot wrappers on repeated/refined GEMMs; \
-         (ISSUE 4) batched refined plan > per-entry refine_gemm loop"
+         (ISSUE 4) batched refined plan > per-entry refine_gemm loop; \
+         (ISSUE 5) zero-copy strided views >= per-call Vec<Matrix> gather"
     );
 
     write_baseline(&comparisons, &pool_cmp, &plan_cmp, &refine_cmp, initial_mode, smoke);

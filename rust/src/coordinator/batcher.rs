@@ -18,7 +18,13 @@
 //!   per-entry shapes, so no padding work is ever computed there — and
 //!   because the mode is part of the key, refined and unrefined
 //!   requests of the same edge flush as separate buckets onto their own
-//!   cached plans ([`Batcher::push_mode`]).
+//!   cached plans ([`Batcher::push_mode`]).  A bucket hands its
+//!   operands to the engine as borrowed views
+//!   ([`ShapeBucket::view_pairs`] →
+//!   [`crate::gemm::GemmPlan::execute_batched_views`]): zero per-entry
+//!   clones on the high-traffic lane, with [`ShapeBucket::view_bytes`]
+//!   feeding the service's `engine_view_bytes` metric so the win stays
+//!   observable.
 //!
 //! The batcher accepts any *square* request; `tile` names the primary
 //! edge the artifact lane was compiled for (the router only routes that
@@ -26,7 +32,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::gemm::Matrix;
+use crate::gemm::{MatRef, Matrix};
 use crate::precision::RefineMode;
 
 use super::request::{GemmRequest, RequestId};
@@ -122,6 +128,28 @@ impl ShapeBucket {
 
     pub fn is_empty(&self) -> bool {
         self.ids.is_empty()
+    }
+
+    /// Borrowed views over this bucket's operands, index-aligned with
+    /// `ids` — the zero-copy gather the engine lane executes through
+    /// [`crate::gemm::GemmPlan::execute_batched_views`]: request
+    /// matrices stay exactly where the batcher parked them, and not one
+    /// is cloned on the way to the engine pool.
+    pub fn view_pairs(&self) -> (Vec<MatRef<'_>>, Vec<MatRef<'_>>) {
+        (self.a.iter().map(MatRef::from).collect(), self.b.iter().map(MatRef::from).collect())
+    }
+
+    /// Total operand bytes this bucket hands to the engine by borrow —
+    /// the `engine_view_bytes` metric's per-bucket contribution (every
+    /// one of these bytes would have been cloned under an owned-operand
+    /// gather).
+    pub fn view_bytes(&self) -> u64 {
+        let f32_bytes = std::mem::size_of::<f32>();
+        self.a
+            .iter()
+            .zip(&self.b)
+            .map(|(x, y)| ((x.as_slice().len() + y.as_slice().len()) * f32_bytes) as u64)
+            .sum()
     }
 }
 
@@ -403,6 +431,30 @@ mod tests {
         let buckets = b.flush_buckets();
         assert_eq!(buckets.len(), 1);
         assert_eq!(buckets[0].mode, RefineMode::None);
+    }
+
+    #[test]
+    fn bucket_view_pairs_borrow_without_cloning() {
+        let mut rng = Rng::new(10);
+        let mut b = batcher(100, 0);
+        for i in 0..3u64 {
+            b.push(GemmRequest::new(
+                i,
+                uniform_matrix(&mut rng, 8, 8, -1.0, 1.0),
+                uniform_matrix(&mut rng, 8, 8, -1.0, 1.0),
+            ));
+        }
+        let buckets = b.flush_buckets();
+        let bucket = &buckets[0];
+        let (av, bv) = bucket.view_pairs();
+        assert_eq!(av.len(), 3);
+        // views alias the bucket's own storage (same buffer addresses:
+        // a borrow, not a clone)
+        for (v, m) in av.iter().zip(&bucket.a).chain(bv.iter().zip(&bucket.b)) {
+            assert!(std::ptr::eq(v.data(), m.as_slice()));
+        }
+        // 3 entries x 2 operands x 64 f32 elements
+        assert_eq!(bucket.view_bytes(), 3 * 2 * 64 * 4);
     }
 
     #[test]

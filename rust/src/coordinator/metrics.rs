@@ -16,6 +16,7 @@ pub struct Metrics {
     engine_batched: AtomicU64,
     engine_refined: AtomicU64,
     engine_flushes: AtomicU64,
+    engine_view_bytes: AtomicU64,
     flushes: AtomicU64,
     padded_slots: AtomicU64,
     errors: AtomicU64,
@@ -39,6 +40,11 @@ pub struct MetricsSnapshot {
     /// Engine-lane bucket flushes (one per `(edge, mode)` bucket
     /// drained).
     pub engine_flushes: u64,
+    /// Operand bytes the engine lane handed to the pool as **borrowed
+    /// views** ([`crate::gemm::GemmPlan::execute_batched_views`]) —
+    /// every one of these bytes would have been a per-entry clone under
+    /// an owned-operand gather; the engine lane clones zero.
+    pub engine_view_bytes: u64,
     pub flushes: u64,
     pub padded_slots: u64,
     pub errors: u64,
@@ -70,10 +76,13 @@ impl Metrics {
 
     /// One engine-lane `(edge, mode)` bucket drained with `real`
     /// requests; `refined` marks a bucket executing at a refined
-    /// precision mode.
-    pub fn on_engine_flush(&self, real: usize, refined: bool) {
+    /// precision mode; `view_bytes` is the operand volume the bucket
+    /// hands to the pool by borrow
+    /// ([`super::batcher::ShapeBucket::view_bytes`]).
+    pub fn on_engine_flush(&self, real: usize, refined: bool, view_bytes: u64) {
         self.engine_flushes.fetch_add(1, Ordering::Relaxed);
         self.engine_batched.fetch_add(real as u64, Ordering::Relaxed);
+        self.engine_view_bytes.fetch_add(view_bytes, Ordering::Relaxed);
         if refined {
             self.engine_refined.fetch_add(real as u64, Ordering::Relaxed);
         }
@@ -107,6 +116,7 @@ impl Metrics {
             engine_batched: self.engine_batched.load(Ordering::Relaxed),
             engine_refined: self.engine_refined.load(Ordering::Relaxed),
             engine_flushes: self.engine_flushes.load(Ordering::Relaxed),
+            engine_view_bytes: self.engine_view_bytes.load(Ordering::Relaxed),
             flushes: self.flushes.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
@@ -122,7 +132,7 @@ impl MetricsSnapshot {
     pub fn report(&self) -> String {
         format!(
             "req={} resp={} batched={} direct={} fallback={} engine_batched={} \
-             engine_refined={} engine_flushes={} flushes={} pad={} err={} \
+             engine_refined={} engine_flushes={} engine_view_bytes={} flushes={} pad={} err={} \
              p50={:?} p99={:?} max={:?}",
             self.requests,
             self.responses,
@@ -132,6 +142,7 @@ impl MetricsSnapshot {
             self.engine_batched,
             self.engine_refined,
             self.engine_flushes,
+            self.engine_view_bytes,
             self.flushes,
             self.padded_slots,
             self.errors,
@@ -154,8 +165,8 @@ mod tests {
         m.on_response(Duration::from_millis(2), true);
         m.on_response(Duration::from_millis(4), false);
         m.on_flush(5, 8);
-        m.on_engine_flush(3, false);
-        m.on_engine_flush(2, true);
+        m.on_engine_flush(3, false, 100);
+        m.on_engine_flush(2, true, 28);
         m.on_error();
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
@@ -165,10 +176,12 @@ mod tests {
         assert_eq!(s.engine_flushes, 2);
         assert_eq!(s.engine_batched, 5);
         assert_eq!(s.engine_refined, 2);
+        assert_eq!(s.engine_view_bytes, 128);
         assert_eq!(s.padded_slots, 3);
         assert_eq!(s.errors, 1);
         assert!(s.report().contains("engine_batched=5"));
         assert!(s.report().contains("engine_refined=2"));
+        assert!(s.report().contains("engine_view_bytes=128"));
     }
 
     #[test]

@@ -24,8 +24,10 @@
 //!   own dynamic batcher and flush as un-padded per-`(edge, mode)`
 //!   buckets ([`Batcher::flush_buckets`]) onto the dispatcher's
 //!   `PlanCache` — one cached [`GemmPlan`] per bucket key, built once,
-//!   executed (`execute_batched`) for every subsequent bucket of that
-//!   key; refined keys batch their per-entry Eq. 1–3 chains on the
+//!   executed (`execute_batched_views`, a zero-clone borrowed-view
+//!   gather counted by the `engine_view_bytes` metric) for every
+//!   subsequent bucket of that key; refined keys batch their per-entry
+//!   Eq. 1–3 chains on the
 //!   engine pool.  The throughput win of this lane is the *bucketing*
 //!   (one pool dispatch per bucket instead of one thread per request);
 //!   the cached plan contributes the validated descriptor and a uniform
@@ -47,7 +49,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::gemm::plan::{GemmDesc, GemmPlan, Precision};
-use crate::gemm::Matrix;
+use crate::gemm::{Matrix, Op};
 use crate::interfaces::{CublasHandle, GemmAlgo, MathMode};
 use crate::precision::RefineMode;
 use crate::runtime::{ExecutorHandle, ExecutorServer, Manifest, TensorData};
@@ -385,7 +387,7 @@ fn dispatch_one(
                     RefineMode::RefineAB => GemmAlgo::RefinedTensorOpAB,
                 };
                 let result = h
-                    .gemm_ex(&sub.req.a, &sub.req.b, None, 1.0, 0.0, algo)
+                    .gemm_ex(Op::N, Op::N, &sub.req.a, &sub.req.b, None, 1.0, 0.0, algo)
                     .map_err(|e| anyhow::anyhow!("cpu fallback: {e}"))
                     .map(|c| GemmResponse {
                         id: sub.req.id,
@@ -483,9 +485,15 @@ fn flush_batch(
 /// Engine-lane flush: drain the whole engine batcher into un-padded
 /// per-`(edge, mode)` buckets and execute each on the cached plan for
 /// its key (refined keys batch their Eq. 1–3 chains on the engine
-/// pool).  Each bucket runs on its own worker thread (the dispatcher
-/// keeps batching); the plan rides into the thread as an `Arc`, so a
-/// hot key can have several buckets in flight against one plan.
+/// pool).  The bucket's operands reach the plan as **borrowed views**
+/// ([`crate::coordinator::batcher::ShapeBucket::view_pairs`] →
+/// [`GemmPlan::execute_batched_views`]): request matrices are moved
+/// once into the batcher at submit time and never cloned again — the
+/// `engine_view_bytes` metric counts the bytes that travel by borrow,
+/// so the zero-clone property of this high-traffic lane is observable.
+/// Each bucket runs on its own worker thread (the dispatcher keeps
+/// batching); the plan rides into the thread as an `Arc`, so a hot key
+/// can have several buckets in flight against one plan.
 fn flush_engine_buckets(
     batcher: &mut Batcher,
     plans: &mut PlanCache,
@@ -495,7 +503,7 @@ fn flush_engine_buckets(
     for bucket in batcher.flush_buckets() {
         let mode = bucket.mode;
         let plan = plans.for_bucket(bucket.n, mode);
-        metrics.on_engine_flush(bucket.len(), mode != RefineMode::None);
+        metrics.on_engine_flush(bucket.len(), mode != RefineMode::None, bucket.view_bytes());
         let replies: Vec<(RequestId, Instant, Option<PendingReply>)> = bucket
             .ids
             .iter()
@@ -503,10 +511,12 @@ fn flush_engine_buckets(
             .map(|(id, enq)| (*id, *enq, pending.remove(id)))
             .collect();
         let metrics = metrics.clone();
-        let (a, b) = (bucket.a, bucket.b);
         std::thread::spawn(move || {
             let t0 = Instant::now();
-            let result = plan.execute_batched(&a, &b);
+            // zero-copy gather: the views borrow the bucket's storage
+            // for the duration of the batched execution
+            let (av, bv) = bucket.view_pairs();
+            let result = plan.execute_batched_views(&av, &bv);
             let exec = t0.elapsed();
             match result {
                 Ok(outs) => {

@@ -12,7 +12,7 @@
 //! baselines.
 
 use super::plan::{self, Precision};
-use super::{mixed::mixed_gemm_scalar, naive::sgemm_naive, Matrix};
+use super::{mixed::mixed_gemm_scalar, naive::sgemm_naive, Matrix, StridedBatch};
 
 /// Batched sgemm: out[i] = a[i] x b[i] in full f32 (the paper's
 /// `cublasSgemmBatched` baseline).  Plan-backed.
@@ -32,6 +32,22 @@ pub fn batched_mixed_gemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
 /// call.
 pub fn batched_hgemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
     plan::oneshot_batched(Precision::F16, a, b, 0)
+}
+
+/// Strided batched sgemm over one contiguous buffer per operand — the
+/// `cublasGemmStridedBatched` call shape (§IV-B).  Entries are gathered
+/// as borrowed views (zero copies, zero per-entry allocations); the
+/// batch stride and any per-entry layout op are absorbed at pack time.
+/// Bitwise identical to [`batched_sgemm`] over the same entries.
+pub fn batched_sgemm_strided(a: &StridedBatch<'_>, b: &StridedBatch<'_>) -> Vec<Matrix> {
+    plan::oneshot_strided(Precision::F32, a, b)
+}
+
+/// Strided batched Tensor-Core-semantics GEMM (see
+/// [`batched_sgemm_strided`]); bitwise identical to
+/// [`batched_mixed_gemm`] over the same entries.
+pub fn batched_mixed_gemm_strided(a: &StridedBatch<'_>, b: &StridedBatch<'_>) -> Vec<Matrix> {
+    plan::oneshot_strided(Precision::Mixed, a, b)
 }
 
 /// Serial oracle for [`batched_sgemm`]: a plain loop of naive singles.
@@ -120,5 +136,19 @@ mod tests {
     #[test]
     fn empty_batch() {
         assert!(batched_sgemm(&[], &[]).is_empty());
+    }
+
+    #[test]
+    fn strided_wrappers_match_vec_wrappers_bitwise() {
+        use super::super::MatLayout;
+        let a = batch(8, 5, 9);
+        let b = batch(8, 5, 10);
+        let abuf: Vec<f32> = a.iter().flat_map(|m| m.as_slice().iter().copied()).collect();
+        let bbuf: Vec<f32> = b.iter().flat_map(|m| m.as_slice().iter().copied()).collect();
+        let lay = MatLayout::new(8, 8);
+        let sa = StridedBatch::new(&abuf, lay, 64, 5);
+        let sb = StridedBatch::new(&bbuf, lay, 64, 5);
+        assert_eq!(batched_mixed_gemm_strided(&sa, &sb), batched_mixed_gemm(&a, &b));
+        assert_eq!(batched_sgemm_strided(&sa, &sb), batched_sgemm(&a, &b));
     }
 }

@@ -11,6 +11,10 @@
 //! * `pack` — operands copied once into panel order (A row-panels, B
 //!   column-panels), with the f16 input rounding of the Tensor Core
 //!   contract applied at pack time; packed operands are reusable.
+//!   Packing reads through borrowed layout views
+//!   ([`crate::gemm::MatRef`]) as readily as owned matrices, absorbing
+//!   transpose ops and row strides in the copy it already pays — the
+//!   substrate of the zero-copy `_views` batched entry points below.
 //! * `micro` — an `MR x NR` (8x8) register-blocked f32 microkernel
 //!   whose per-element accumulation chain is exactly the scalar oracles'
 //!   ascending-k chain; the `simd` cargo feature swaps in an explicit
@@ -46,13 +50,13 @@ mod pack;
 mod pool;
 
 pub use pack::{InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB};
-pub(crate) use pack::split_f16_matrix;
+pub(crate) use pack::split_f16_view;
 pub use pool::{
     default_threads, idle_workers, parse_pool_mode, parse_threads, pool_mode, set_pool_mode,
     spawned_workers, PoolMode,
 };
 
-use crate::gemm::Matrix;
+use crate::gemm::{MatRef, Matrix};
 use crate::halfprec::{half_add, half_mul, Half};
 use crate::precision::RefineMode;
 
@@ -165,24 +169,50 @@ pub fn hgemm_packed(pa: &PackedHalfA, pb: &PackedHalfB, threads: usize) -> Matri
     out
 }
 
+/// Borrowed dense views over a `Matrix` batch — how the legacy owned
+/// batched entry points bridge onto the view substrate (the bridge is
+/// numerically free: a dense `Op::N` view packs identical panels).
+fn view_vec(ms: &[Matrix]) -> Vec<MatRef<'_>> {
+    ms.iter().map(MatRef::from).collect()
+}
+
 /// Batched sgemm: `out[i] = a[i] x b[i]` in full f32, entries distributed
 /// over the pool (each entry computed serially by its owning worker).
 /// This is [`crate::gemm::plan::GemmPlan::execute_batched`]'s execution
 /// substrate; consumer code goes through a plan.
 pub fn batched_sgemm(a: &[Matrix], b: &[Matrix], threads: usize) -> Vec<Matrix> {
-    batched_gemm(a, b, InputPrecision::Full, threads)
+    batched_sgemm_views(&view_vec(a), &view_vec(b), threads)
+}
+
+/// [`batched_sgemm`] over borrowed views: per-entry ops and row strides
+/// are absorbed by each worker's pack step, so transposed or strided
+/// entries (incl. [`crate::gemm::StridedBatch`] gathers) cost dense
+/// price and clone nothing.
+pub fn batched_sgemm_views(a: &[MatRef<'_>], b: &[MatRef<'_>], threads: usize) -> Vec<Matrix> {
+    batched_gemm_views(a, b, InputPrecision::Full, threads)
 }
 
 /// Batched Tensor-Core-semantics GEMM — the paper's batched WMMA shape
 /// (§IV-B), entries distributed over the pool.  Plan execution
 /// substrate, like [`batched_sgemm`].
 pub fn batched_mixed_gemm(a: &[Matrix], b: &[Matrix], threads: usize) -> Vec<Matrix> {
-    batched_gemm(a, b, InputPrecision::F16Rounded, threads)
+    batched_mixed_gemm_views(&view_vec(a), &view_vec(b), threads)
+}
+
+/// [`batched_mixed_gemm`] over borrowed views (see
+/// [`batched_sgemm_views`]).
+pub fn batched_mixed_gemm_views(a: &[MatRef<'_>], b: &[MatRef<'_>], threads: usize) -> Vec<Matrix> {
+    batched_gemm_views(a, b, InputPrecision::F16Rounded, threads)
 }
 
 /// Batched CUDA-core hgemm, entries distributed over the pool; each
 /// worker reuses one pair of packed-f16 buffers across its entries.
 pub fn batched_hgemm(a: &[Matrix], b: &[Matrix], threads: usize) -> Vec<Matrix> {
+    batched_hgemm_views(&view_vec(a), &view_vec(b), threads)
+}
+
+/// [`batched_hgemm`] over borrowed views (see [`batched_sgemm_views`]).
+pub fn batched_hgemm_views(a: &[MatRef<'_>], b: &[MatRef<'_>], threads: usize) -> Vec<Matrix> {
     assert_eq!(a.len(), b.len(), "batch length mismatch");
     let mut out: Vec<Matrix> = (0..a.len()).map(|_| Matrix::zeros(0, 0)).collect();
     let t = resolve_threads(threads, batch_flops(a, b), SERIAL_HALF_FLOPS);
@@ -190,8 +220,8 @@ pub fn batched_hgemm(a: &[Matrix], b: &[Matrix], threads: usize) -> Vec<Matrix> 
         let mut pa = PackedHalfA::default();
         let mut pb = PackedHalfB::default();
         for e in e0..e1 {
-            pa.repack(&a[e]);
-            pb.repack(&b[e]);
+            pa.repack_view(&a[e]);
+            pb.repack_view(&b[e]);
             chunk[e - e0] = hgemm_packed(&pa, &pb, 1);
         }
     });
@@ -228,8 +258,21 @@ pub fn batched_refined_gemm(
     mode: RefineMode,
     threads: usize,
 ) -> Vec<Matrix> {
+    batched_refined_gemm_views(&view_vec(a), &view_vec(b), mode, threads)
+}
+
+/// [`batched_refined_gemm`] over borrowed views: each worker splits its
+/// entries straight out of the viewed buffers (op + stride absorbed in
+/// the Eq. 1 split pass), so refined strided batches clone nothing
+/// either.
+pub fn batched_refined_gemm_views(
+    a: &[MatRef<'_>],
+    b: &[MatRef<'_>],
+    mode: RefineMode,
+    threads: usize,
+) -> Vec<Matrix> {
     if mode == RefineMode::None {
-        return batched_mixed_gemm(a, b, threads);
+        return batched_mixed_gemm_views(a, b, threads);
     }
     assert_eq!(a.len(), b.len(), "batch length mismatch");
     let split_b = mode == RefineMode::RefineAB;
@@ -248,12 +291,12 @@ pub fn batched_refined_gemm(
         let mut bh = PackedB::default();
         let mut bl = PackedB::default();
         for e in e0..e1 {
-            assert_eq!(a[e].cols(), b[e].rows(), "inner dimension mismatch");
-            let (hi, lo) = split_f16_matrix(&a[e]);
+            assert_eq!(a[e].logical_shape().1, b[e].logical_shape().0, "inner dimension mismatch");
+            let (hi, lo) = split_f16_view(&a[e]);
             ah.repack(&hi, InputPrecision::F16Rounded);
             al.repack(&lo, InputPrecision::F16Rounded);
             chunk[e - e0] = if split_b {
-                let (hi, lo) = split_f16_matrix(&b[e]);
+                let (hi, lo) = split_f16_view(&b[e]);
                 bh.repack(&hi, InputPrecision::F16Rounded);
                 bl.repack(&lo, InputPrecision::F16Rounded);
                 // Eq. 3: R_A R_B + A_h R_B + R_A B_h + A_h B_h
@@ -268,7 +311,7 @@ pub fn batched_refined_gemm(
                 acc
             } else {
                 // RefineA consumes the rounded B in both of its GEMMs
-                bh.repack(&b[e], InputPrecision::F16Rounded);
+                bh.repack_view(&b[e], InputPrecision::F16Rounded);
                 // Eq. 2: R_A B_h + A_h B_h
                 let mut acc = gemm_packed(&al, &bh, None, 1.0, 0.0, inner);
                 let main = gemm_packed(&ah, &bh, None, 1.0, 0.0, inner);
@@ -280,11 +323,22 @@ pub fn batched_refined_gemm(
     out
 }
 
-fn batch_flops(a: &[Matrix], b: &[Matrix]) -> usize {
-    a.iter().zip(b).map(|(x, y)| x.rows() * x.cols() * y.cols()).sum()
+fn batch_flops(a: &[MatRef<'_>], b: &[MatRef<'_>]) -> usize {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let (m, k) = x.logical_shape();
+            m * k * y.logical_shape().1
+        })
+        .sum()
 }
 
-fn batched_gemm(a: &[Matrix], b: &[Matrix], prec: InputPrecision, threads: usize) -> Vec<Matrix> {
+fn batched_gemm_views(
+    a: &[MatRef<'_>],
+    b: &[MatRef<'_>],
+    prec: InputPrecision,
+    threads: usize,
+) -> Vec<Matrix> {
     assert_eq!(a.len(), b.len(), "batch length mismatch");
     let mut out: Vec<Matrix> = (0..a.len()).map(|_| Matrix::zeros(0, 0)).collect();
     let t = resolve_threads(threads, batch_flops(a, b), SERIAL_FLOPS);
@@ -293,9 +347,9 @@ fn batched_gemm(a: &[Matrix], b: &[Matrix], prec: InputPrecision, threads: usize
         let mut pa = PackedA::default();
         let mut pb = PackedB::default();
         for e in e0..e1 {
-            assert_eq!(a[e].cols(), b[e].rows(), "inner dimension mismatch");
-            pa.repack(&a[e], prec);
-            pb.repack(&b[e], prec);
+            assert_eq!(a[e].logical_shape().1, b[e].logical_shape().0, "inner dimension mismatch");
+            pa.repack_view(&a[e], prec);
+            pb.repack_view(&b[e], prec);
             chunk[e - e0] = gemm_packed(&pa, &pb, None, 1.0, 0.0, 1);
         }
     });

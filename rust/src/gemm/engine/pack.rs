@@ -19,8 +19,16 @@
 //! Padding rows/cols (to fill the last partial panel) are zero; a padded
 //! lane only ever accumulates `x * 0.0` into an accumulator that is
 //! discarded at store time, so padding cannot perturb any kept element.
+//!
+//! Packing is also where the layout/view API
+//! ([`crate::gemm::MatRef`]) lands: `repack_view` reads each logical
+//! element through the view's op + row stride while writing the same
+//! panel order as the dense paths, so `Op::T` operands and non-unit
+//! strides cost *nothing extra* — the copy was already being paid, only
+//! the read addresses change.  A dense `Op::N` view packs to bitwise
+//! identical panels as the `Matrix` it was borrowed from.
 
-use crate::gemm::Matrix;
+use crate::gemm::{MatRef, Matrix};
 use crate::halfprec::{f16_to_f32, f32_to_f16, Half};
 
 use super::micro::{div_up, MR, NR};
@@ -47,11 +55,13 @@ fn convert(x: f32, prec: InputPrecision) -> f32 {
 /// rounded-to-half copy (widened back to f32 storage) and the rounded
 /// remainder.  This is the pack step of every refined path — single-GEMM
 /// refined plans and the batched refined engine share this one
-/// definition, so their splits cannot drift apart.
-pub(crate) fn split_f16_matrix(x: &Matrix) -> (Matrix, Matrix) {
-    let (r, c) = x.shape();
-    let hi = Matrix::from_fn(r, c, |i, j| f16_to_f32(f32_to_f16(x[(i, j)])));
-    let lo = Matrix::from_fn(r, c, |i, j| f16_to_f32(f32_to_f16(x[(i, j)] - hi[(i, j)])));
+/// definition, so their splits cannot drift apart.  Takes a view so
+/// transposed/strided operands split straight from their buffer (the
+/// split of a dense `Op::N` view is bitwise the legacy matrix split).
+pub(crate) fn split_f16_view(x: &MatRef<'_>) -> (Matrix, Matrix) {
+    let (r, c) = x.logical_shape();
+    let hi = Matrix::from_fn(r, c, |i, j| f16_to_f32(f32_to_f16(x.get(i, j))));
+    let lo = Matrix::from_fn(r, c, |i, j| f16_to_f32(f32_to_f16(x.get(i, j) - hi[(i, j)])));
     (hi, lo)
 }
 
@@ -76,6 +86,21 @@ impl PackedA {
         self.repack_slice(a.as_slice(), a.rows(), a.cols(), prec);
     }
 
+    /// Pack a borrowed view: the view's op and row stride are resolved
+    /// per element while writing the identical panel order, so a
+    /// transposed or strided operand packs at dense cost.
+    pub fn pack_view(a: &MatRef<'_>, prec: InputPrecision) -> PackedA {
+        let mut p = PackedA::default();
+        p.repack_view(a, prec);
+        p
+    }
+
+    /// Re-pack a borrowed view in place (see [`PackedA::pack_view`]).
+    pub fn repack_view(&mut self, a: &MatRef<'_>, prec: InputPrecision) {
+        let (m, k) = a.logical_shape();
+        self.repack_with(m, k, prec, |i, p| a.get(i, p));
+    }
+
     /// Shape of the packed operand as (rows, k).
     pub fn shape(&self) -> (usize, usize) {
         (self.m, self.k)
@@ -83,6 +108,20 @@ impl PackedA {
 
     pub(crate) fn repack_slice(&mut self, a: &[f32], m: usize, k: usize, prec: InputPrecision) {
         assert_eq!(a.len(), m * k, "A buffer length mismatch");
+        self.repack_with(m, k, prec, |i, p| a[i * k + p]);
+    }
+
+    /// The one panel-writing loop every A pack path shares: `at(i, p)`
+    /// supplies logical element `(i, p)`, so dense slices, strided
+    /// buffers and transposed views all emit the same panel bytes for
+    /// the same logical operand.
+    fn repack_with(
+        &mut self,
+        m: usize,
+        k: usize,
+        prec: InputPrecision,
+        at: impl Fn(usize, usize) -> f32,
+    ) {
         self.m = m;
         self.k = k;
         let panels = div_up(m, MR);
@@ -93,7 +132,7 @@ impl PackedA {
             for p in 0..k {
                 for r in 0..MR {
                     let i = row0 + r;
-                    self.data.push(if i < m { convert(a[i * k + p], prec) } else { 0.0 });
+                    self.data.push(if i < m { convert(at(i, p), prec) } else { 0.0 });
                 }
             }
         }
@@ -133,6 +172,20 @@ impl PackedB {
         self.repack_slice(b.as_slice(), b.rows(), b.cols(), prec);
     }
 
+    /// Pack a borrowed view (op and row stride absorbed, see
+    /// [`PackedA::pack_view`]).
+    pub fn pack_view(b: &MatRef<'_>, prec: InputPrecision) -> PackedB {
+        let mut p = PackedB::default();
+        p.repack_view(b, prec);
+        p
+    }
+
+    /// Re-pack a borrowed view in place.
+    pub fn repack_view(&mut self, b: &MatRef<'_>, prec: InputPrecision) {
+        let (k, n) = b.logical_shape();
+        self.repack_with(k, n, prec, |p, j| b.get(p, j));
+    }
+
     /// Shape of the packed operand as (k, cols).
     pub fn shape(&self) -> (usize, usize) {
         (self.k, self.n)
@@ -140,6 +193,10 @@ impl PackedB {
 
     pub(crate) fn repack_slice(&mut self, b: &[f32], k: usize, n: usize, prec: InputPrecision) {
         assert_eq!(b.len(), k * n, "B buffer length mismatch");
+        // dense fast path: iterate contiguous row segments (one bounds
+        // check per segment, vectorizable) instead of per-element
+        // closure indexing — this is the pack loop every legacy f32/
+        // Mixed caller runs, so it keeps its pre-view cost exactly
         self.k = k;
         self.n = n;
         let panels = div_up(n, NR);
@@ -151,6 +208,37 @@ impl PackedB {
             for p in 0..k {
                 for &x in &b[p * n + col0..p * n + col0 + vc] {
                     self.data.push(convert(x, prec));
+                }
+                for _ in vc..NR {
+                    self.data.push(0.0);
+                }
+            }
+        }
+    }
+
+    /// The view-path B panel-writing loop: `at(p, j)` supplies logical
+    /// element `(p, j)`.  Dense packs keep the specialized
+    /// contiguous-segment loop in [`PackedB::repack_slice`]; both emit
+    /// identical panel bytes for the same logical operand (asserted in
+    /// the tests below).
+    fn repack_with(
+        &mut self,
+        k: usize,
+        n: usize,
+        prec: InputPrecision,
+        at: impl Fn(usize, usize) -> f32,
+    ) {
+        self.k = k;
+        self.n = n;
+        let panels = div_up(n, NR);
+        self.data.clear();
+        self.data.reserve(panels * k * NR);
+        for pj in 0..panels {
+            let col0 = pj * NR;
+            let vc = NR.min(n - col0);
+            for p in 0..k {
+                for j in 0..vc {
+                    self.data.push(convert(at(p, col0 + j), prec));
                 }
                 for _ in vc..NR {
                     self.data.push(0.0);
@@ -187,11 +275,35 @@ impl PackedHalfA {
     }
 
     pub fn repack(&mut self, a: &Matrix) {
+        // dense fast path: one linear bounds-check-free scan (the view
+        // path below emits identical values, asserted in the tests)
         let (m, k) = a.shape();
         self.m = m;
         self.k = k;
         self.data.clear();
         self.data.extend(a.as_slice().iter().map(|&x| f32_to_f16(x)));
+    }
+
+    /// Pack a borrowed view (op and row stride absorbed in the one
+    /// conversion pass the dense path already paid).
+    pub fn pack_view(a: &MatRef<'_>) -> PackedHalfA {
+        let mut p = PackedHalfA::default();
+        p.repack_view(a);
+        p
+    }
+
+    /// Re-pack a borrowed view in place.
+    pub fn repack_view(&mut self, a: &MatRef<'_>) {
+        let (m, k) = a.logical_shape();
+        self.m = m;
+        self.k = k;
+        self.data.clear();
+        self.data.reserve(m * k);
+        for i in 0..m {
+            for p in 0..k {
+                self.data.push(f32_to_f16(a.get(i, p)));
+            }
+        }
     }
 
     /// Shape of the packed operand as (rows, k).
@@ -221,6 +333,8 @@ impl PackedHalfB {
     }
 
     pub fn repack(&mut self, b: &Matrix) {
+        // dense fast path: direct slice indexing on the contiguous
+        // buffer (the view path emits identical values, tested below)
         let (k, n) = b.shape();
         self.k = k;
         self.n = n;
@@ -230,6 +344,27 @@ impl PackedHalfB {
         for j in 0..n {
             for p in 0..k {
                 self.data.push(f32_to_f16(bv[p * n + j]));
+            }
+        }
+    }
+
+    /// Pack a borrowed view (see [`PackedHalfA::pack_view`]).
+    pub fn pack_view(b: &MatRef<'_>) -> PackedHalfB {
+        let mut p = PackedHalfB::default();
+        p.repack_view(b);
+        p
+    }
+
+    /// Re-pack a borrowed view in place.
+    pub fn repack_view(&mut self, b: &MatRef<'_>) {
+        let (k, n) = b.logical_shape();
+        self.k = k;
+        self.n = n;
+        self.data.clear();
+        self.data.reserve(k * n);
+        for j in 0..n {
+            for p in 0..k {
+                self.data.push(f32_to_f16(b.get(p, j)));
             }
         }
     }
@@ -301,6 +436,79 @@ mod tests {
         assert_eq!(p.panel(0)[0], 1.0);
         let q = PackedA::pack(&a, InputPrecision::Full);
         assert_eq!(q.panel(0)[0], 1.0 + 2f32.powi(-12));
+    }
+
+    #[test]
+    fn dense_view_packs_bitwise_equal_to_matrix() {
+        let a = m(9, 5);
+        for prec in [InputPrecision::Full, InputPrecision::F16Rounded] {
+            let dense = PackedA::pack(&a, prec);
+            let viewed = PackedA::pack_view(&a.view(), prec);
+            assert_eq!(dense.data, viewed.data, "{prec:?}");
+            let b = m(5, 11);
+            assert_eq!(
+                PackedB::pack(&b, prec).data,
+                PackedB::pack_view(&b.view(), prec).data,
+                "{prec:?}"
+            );
+        }
+        assert_eq!(PackedHalfA::pack(&a).data, PackedHalfA::pack_view(&a.view()).data);
+        let b = m(5, 7);
+        assert_eq!(PackedHalfB::pack(&b).data, PackedHalfB::pack_view(&b.view()).data);
+    }
+
+    #[test]
+    fn transposed_view_packs_like_materialized_transpose() {
+        // the tentpole claim at pack granularity: Op::T absorbed at pack
+        // time emits the exact panels a Matrix::transpose() copy would
+        let a = m(6, 10);
+        let at = a.transpose();
+        let via_view = PackedA::pack_view(&a.view().transposed(), InputPrecision::F16Rounded);
+        let via_copy = PackedA::pack(&at, InputPrecision::F16Rounded);
+        assert_eq!(via_view.shape(), (10, 6));
+        assert_eq!(via_view.data, via_copy.data);
+        let bv = PackedB::pack_view(&a.view().transposed(), InputPrecision::Full);
+        assert_eq!(bv.data, PackedB::pack(&at, InputPrecision::Full).data);
+        assert_eq!(
+            PackedHalfB::pack_view(&a.view().transposed()).data,
+            PackedHalfB::pack(&at).data
+        );
+    }
+
+    #[test]
+    fn strided_view_packs_without_reading_gaps() {
+        use crate::gemm::MatLayout;
+        let a = m(4, 3);
+        // embed with stride 5, NaN gap columns: a NaN reaching any panel
+        // would poison the comparison below
+        let stride = 5;
+        let mut buf = vec![f32::NAN; 3 * stride + 3];
+        for i in 0..4 {
+            buf[i * stride..i * stride + 3].copy_from_slice(a.row(i));
+        }
+        let v = MatRef::new(&buf, MatLayout::strided(4, 3, stride));
+        assert_eq!(
+            PackedA::pack_view(&v, InputPrecision::Full).data,
+            PackedA::pack(&a, InputPrecision::Full).data
+        );
+        assert_eq!(
+            PackedB::pack_view(&v, InputPrecision::F16Rounded).data,
+            PackedB::pack(&a, InputPrecision::F16Rounded).data
+        );
+    }
+
+    #[test]
+    fn split_view_equals_legacy_matrix_split() {
+        let x = Matrix::from_fn(5, 4, |i, j| (i * 4 + j) as f32 * 0.1 + 0.001);
+        // the legacy matrix-granularity split, written out as the oracle
+        let hm = Matrix::from_fn(5, 4, |i, j| f16_to_f32(f32_to_f16(x[(i, j)])));
+        let lm = Matrix::from_fn(5, 4, |i, j| f16_to_f32(f32_to_f16(x[(i, j)] - hm[(i, j)])));
+        let (hv, lv) = split_f16_view(&x.view());
+        assert_eq!(hm, hv);
+        assert_eq!(lm, lv);
+        // transposed view splits the logical transpose
+        let (ht, _) = split_f16_view(&x.view().transposed());
+        assert_eq!(ht, hm.transpose());
     }
 
     #[test]

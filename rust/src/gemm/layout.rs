@@ -1,0 +1,494 @@
+//! Operand layout descriptors and borrowed views — the host-side image
+//! of the paper's fastest programming surface (§IV): cuBLAS'
+//! `cublasGemmEx(transa, transb, …, lda, …, ldb, …, ldc)` call shape and
+//! the `cublasGemmStridedBatched` one-buffer batch convention.
+//!
+//! A [`MatLayout`] describes how a row-major `f32` buffer is to be read:
+//! its stored `rows x cols` extent, the `row_stride` between consecutive
+//! rows (the row-major analogue of a leading dimension — `row_stride >
+//! cols` leaves unread gap columns), and an [`Op`] saying whether the
+//! GEMM consumes the stored matrix as-is (`Op::N`) or transposed
+//! (`Op::T`).  A [`MatRef`] pairs a layout with a borrowed `&[f32]`; a
+//! [`MatMut`] is its mutable output-side sibling; a [`StridedBatch`] is
+//! one contiguous buffer holding `count` equally-spaced entries.
+//!
+//! None of these own or copy anything: the engine's pack stage already
+//! copies operands into microkernel panels, so transposition and
+//! non-unit strides are absorbed *at pack time* for free — a transposed
+//! or strided view costs exactly the same pack traffic as a dense
+//! [`Matrix`], and gap columns (or inter-entry padding in a strided
+//! batch) are never read at all.
+
+use super::Matrix;
+
+/// Transpose op applied when a GEMM consumes a stored operand — the
+/// `transa`/`transb` axis of the cuBLAS call signature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Consume the stored matrix as-is (CUBLAS_OP_N).
+    N,
+    /// Consume the stored matrix transposed (CUBLAS_OP_T).
+    T,
+}
+
+/// Layout descriptor for a row-major `f32` buffer.
+///
+/// `rows`/`cols` describe the **stored** extent; `row_stride` is the
+/// element distance between row starts (`>= cols`; the row-major
+/// analogue of cuBLAS' leading dimension); `op` selects how the buffer
+/// is *read*: the logical matrix a view presents is `op(stored)`, so an
+/// `Op::T` layout over a stored `k x m` buffer reads as an `m x k`
+/// operand with no materialized transpose.
+///
+/// ```
+/// use tensoremu::gemm::{MatLayout, MatRef, Op};
+///
+/// // a 2x3 logical matrix embedded with row_stride 4 (one gap column;
+/// // the NaNs prove gap columns are never read)
+/// let buf = [1.0, 2.0, 3.0, f32::NAN, 4.0, 5.0, 6.0, f32::NAN];
+/// let v = MatRef::new(&buf, MatLayout::strided(2, 3, 4));
+/// assert_eq!(v.logical_shape(), (2, 3));
+/// assert_eq!(v.get(1, 2), 6.0);
+///
+/// // flipping the op is a zero-copy transpose
+/// let t = v.transposed();
+/// assert_eq!(t.layout().op, Op::T);
+/// assert_eq!(t.logical_shape(), (3, 2));
+/// assert_eq!(t.get(2, 1), 6.0);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MatLayout {
+    /// Stored row count.
+    pub rows: usize,
+    /// Stored column count.
+    pub cols: usize,
+    /// Element distance between consecutive stored rows (`>= cols`).
+    pub row_stride: usize,
+    /// How the GEMM reads the buffer: [`Op::N`] as stored, [`Op::T`]
+    /// transposed.
+    pub op: Op,
+}
+
+impl MatLayout {
+    /// Dense row-major layout: `row_stride == cols`, [`Op::N`].
+    pub fn new(rows: usize, cols: usize) -> MatLayout {
+        MatLayout { rows, cols, row_stride: cols, op: Op::N }
+    }
+
+    /// Row-strided layout (`row_stride >= cols` is enforced when a view
+    /// is built over it), [`Op::N`].
+    pub fn strided(rows: usize, cols: usize, row_stride: usize) -> MatLayout {
+        MatLayout { rows, cols, row_stride, op: Op::N }
+    }
+
+    /// The same storage read under the flipped op — a zero-copy logical
+    /// transpose.
+    pub fn transposed(mut self) -> MatLayout {
+        self.op = match self.op {
+            Op::N => Op::T,
+            Op::T => Op::N,
+        };
+        self
+    }
+
+    /// Builder-style op override.
+    pub fn with_op(mut self, op: Op) -> MatLayout {
+        self.op = op;
+        self
+    }
+
+    /// Shape of the matrix the layout *presents*: `(rows, cols)` under
+    /// [`Op::N`], `(cols, rows)` under [`Op::T`].
+    pub fn logical_shape(&self) -> (usize, usize) {
+        match self.op {
+            Op::N => (self.rows, self.cols),
+            Op::T => (self.cols, self.rows),
+        }
+    }
+
+    /// Minimum buffer length the layout addresses (the last stored row
+    /// needs only `cols` elements, not a full stride).
+    pub fn min_len(&self) -> usize {
+        if self.rows == 0 || self.cols == 0 {
+            0
+        } else {
+            (self.rows - 1) * self.row_stride + self.cols
+        }
+    }
+}
+
+/// Borrowed, read-only view of a row-major `f32` buffer under a
+/// [`MatLayout`] — the operand type of the zero-copy GEMM surface
+/// ([`crate::gemm::GemmDesc::plan_views`],
+/// [`crate::gemm::GemmPlan::set_a_view`] /
+/// [`crate::gemm::GemmPlan::set_b_view`],
+/// [`crate::gemm::GemmPlan::execute_batched_views`]).  A [`Matrix`]
+/// converts losslessly to a dense [`Op::N`] view ([`Matrix::view`] /
+/// `From<&Matrix>`).
+#[derive(Clone, Copy, Debug)]
+pub struct MatRef<'a> {
+    data: &'a [f32],
+    layout: MatLayout,
+}
+
+impl<'a> MatRef<'a> {
+    /// View `data` under `layout`.  Panics if the stride does not cover
+    /// a row or the buffer is shorter than the layout addresses.
+    pub fn new(data: &'a [f32], layout: MatLayout) -> MatRef<'a> {
+        assert!(
+            layout.rows <= 1 || layout.row_stride >= layout.cols,
+            "row stride {} must cover the {} stored columns",
+            layout.row_stride,
+            layout.cols
+        );
+        assert!(
+            data.len() >= layout.min_len(),
+            "buffer too short: {} elements, layout addresses {}",
+            data.len(),
+            layout.min_len()
+        );
+        MatRef { data, layout }
+    }
+
+    /// Dense row-major view ([`MatLayout::new`]).
+    pub fn dense(data: &'a [f32], rows: usize, cols: usize) -> MatRef<'a> {
+        MatRef::new(data, MatLayout::new(rows, cols))
+    }
+
+    /// The underlying buffer.
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// The view's layout descriptor.
+    pub fn layout(&self) -> MatLayout {
+        self.layout
+    }
+
+    /// Shape of the matrix this view presents (op applied).
+    pub fn logical_shape(&self) -> (usize, usize) {
+        self.layout.logical_shape()
+    }
+
+    /// Logical element `(i, j)` — op and stride resolved here, which is
+    /// what lets the engine's pack stage absorb both for free.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        let (lr, lc) = self.logical_shape();
+        debug_assert!(i < lr && j < lc, "({i}, {j}) out of {lr}x{lc}");
+        match self.layout.op {
+            Op::N => self.data[i * self.layout.row_stride + j],
+            Op::T => self.data[j * self.layout.row_stride + i],
+        }
+    }
+
+    /// The same buffer viewed under the flipped op — a zero-copy
+    /// transpose (contrast [`Matrix::transpose`], which copies).
+    pub fn transposed(self) -> MatRef<'a> {
+        MatRef { data: self.data, layout: self.layout.transposed() }
+    }
+
+    /// Materialize the logical matrix as an owned dense [`Matrix`] — the
+    /// copy this view layer otherwise avoids; used by oracles and tests.
+    pub fn to_matrix(&self) -> Matrix {
+        let (lr, lc) = self.logical_shape();
+        Matrix::from_fn(lr, lc, |i, j| self.get(i, j))
+    }
+}
+
+impl<'a> From<&'a Matrix> for MatRef<'a> {
+    /// Lossless conversion: a dense [`Op::N`] view of the whole matrix.
+    fn from(m: &'a Matrix) -> MatRef<'a> {
+        MatRef { data: m.as_slice(), layout: MatLayout::new(m.rows(), m.cols()) }
+    }
+}
+
+/// Borrowed, mutable, row-strided output view — the `ldc` side of the
+/// cuBLAS signature ([`crate::gemm::GemmPlan::execute_into_view`]
+/// writes one).  Outputs are never transposed (as in cuBLAS, there is
+/// no `transc`), so the view carries shape + stride only; stride gap
+/// columns are never written.
+#[derive(Debug)]
+pub struct MatMut<'a> {
+    data: &'a mut [f32],
+    rows: usize,
+    cols: usize,
+    row_stride: usize,
+}
+
+impl<'a> MatMut<'a> {
+    /// Mutable view of `data` as `rows x cols` with `row_stride` between
+    /// row starts.  Panics like [`MatRef::new`] on an uncovering stride
+    /// or a short buffer.
+    pub fn new(data: &'a mut [f32], rows: usize, cols: usize, row_stride: usize) -> MatMut<'a> {
+        assert!(
+            rows <= 1 || row_stride >= cols,
+            "row stride {row_stride} must cover the {cols} columns"
+        );
+        // reuse the one addressing formula (op is irrelevant to length)
+        let need = MatLayout::strided(rows, cols, row_stride).min_len();
+        assert!(
+            data.len() >= need,
+            "output buffer too short: {} elements, layout addresses {need}",
+            data.len()
+        );
+        MatMut { data, rows, cols, row_stride }
+    }
+
+    /// Dense mutable view (`row_stride == cols`).
+    pub fn dense(data: &'a mut [f32], rows: usize, cols: usize) -> MatMut<'a> {
+        MatMut::new(data, rows, cols, cols)
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn row_stride(&self) -> usize {
+        self.row_stride
+    }
+
+    /// Row `i` as a mutable slice (exactly `cols` elements — the stride
+    /// gap is not part of the row).
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert!(i < self.rows, "row {i} out of range ({} rows)", self.rows);
+        &mut self.data[i * self.row_stride..i * self.row_stride + self.cols]
+    }
+
+    /// Copy a dense matrix of the same shape into this view, row-wise;
+    /// stride gaps are left untouched.
+    pub fn copy_from(&mut self, src: &Matrix) {
+        assert_eq!(src.shape(), (self.rows, self.cols), "shape mismatch");
+        for i in 0..self.rows {
+            self.row_mut(i).copy_from_slice(src.row(i));
+        }
+    }
+}
+
+impl<'a> From<&'a mut Matrix> for MatMut<'a> {
+    fn from(m: &'a mut Matrix) -> MatMut<'a> {
+        let (rows, cols) = m.shape();
+        MatMut { data: m.as_mut_slice(), rows, cols, row_stride: cols }
+    }
+}
+
+/// Zero-copy strided batch: `count` equally-shaped entries in **one**
+/// contiguous buffer, entry `i` starting at element `i * batch_stride`
+/// — the exact convention of `cublasGemmStridedBatched` (§IV-B), whose
+/// point was precisely that batching must not force per-entry
+/// allocations.  `batch_stride` may exceed the entry footprint
+/// (inter-entry padding is never read) or be `0` (every entry reads the
+/// same stored matrix — the cuBLAS broadcast idiom).
+///
+/// ```
+/// use tensoremu::gemm::{MatLayout, StridedBatch};
+///
+/// // three 2x2 entries packed back to back
+/// let buf: Vec<f32> = (0..12).map(|x| x as f32).collect();
+/// let batch = StridedBatch::new(&buf, MatLayout::new(2, 2), 4, 3);
+/// assert_eq!(batch.len(), 3);
+/// assert_eq!(batch.entry(2).get(0, 0), 8.0);
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct StridedBatch<'a> {
+    data: &'a [f32],
+    layout: MatLayout,
+    batch_stride: usize,
+    count: usize,
+}
+
+impl<'a> StridedBatch<'a> {
+    /// Batch of `count` entries, each read under `layout`, entry `i`
+    /// starting at `i * batch_stride`.  Panics if the buffer cannot hold
+    /// the last entry.
+    pub fn new(
+        data: &'a [f32],
+        layout: MatLayout,
+        batch_stride: usize,
+        count: usize,
+    ) -> StridedBatch<'a> {
+        assert!(
+            layout.rows <= 1 || layout.row_stride >= layout.cols,
+            "row stride {} must cover the {} stored columns",
+            layout.row_stride,
+            layout.cols
+        );
+        if count > 0 {
+            let need = (count - 1) * batch_stride + layout.min_len();
+            assert!(
+                data.len() >= need,
+                "buffer too short: {} elements, {count} entries address {need}",
+                data.len()
+            );
+        }
+        StridedBatch { data, layout, batch_stride, count }
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// The per-entry layout.
+    pub fn layout(&self) -> MatLayout {
+        self.layout
+    }
+
+    /// Element distance between entry starts.
+    pub fn batch_stride(&self) -> usize {
+        self.batch_stride
+    }
+
+    /// Entry `i` as a borrowed view (no copy).
+    pub fn entry(&self, i: usize) -> MatRef<'a> {
+        assert!(i < self.count, "entry {i} out of range ({} entries)", self.count);
+        let off = i * self.batch_stride;
+        let data = self.data;
+        MatRef { data: &data[off..off + self.layout.min_len()], layout: self.layout }
+    }
+
+    /// All entries as borrowed views, in batch order — the gather the
+    /// batched plan paths execute on
+    /// ([`crate::gemm::GemmPlan::execute_strided_batched`]).
+    pub fn views(&self) -> Vec<MatRef<'a>> {
+        (0..self.count).map(|i| self.entry(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize) -> Matrix {
+        Matrix::from_fn(rows, cols, |i, j| (i * cols + j) as f32 + 0.5)
+    }
+
+    #[test]
+    fn dense_view_round_trips() {
+        let a = m(3, 4);
+        let v = a.view();
+        assert_eq!(v.logical_shape(), (3, 4));
+        assert_eq!(v.get(2, 3), a[(2, 3)]);
+        assert_eq!(v.to_matrix(), a);
+        let w: MatRef<'_> = (&a).into();
+        assert_eq!(w.to_matrix(), a);
+    }
+
+    #[test]
+    fn transposed_view_is_zero_copy_transpose() {
+        let a = m(3, 5);
+        let t = a.view().transposed();
+        assert_eq!(t.logical_shape(), (5, 3));
+        assert_eq!(t.get(4, 2), a[(2, 4)]);
+        assert_eq!(t.to_matrix(), a.transpose());
+        // double transpose restores the original view
+        assert_eq!(t.transposed().to_matrix(), a);
+    }
+
+    #[test]
+    fn strided_view_skips_gap_columns() {
+        // 2 rows x 3 cols embedded with stride 5; NaN gaps must never
+        // be read
+        let buf = [1.0, 2.0, 3.0, f32::NAN, f32::NAN, 4.0, 5.0, 6.0];
+        let v = MatRef::new(&buf, MatLayout::strided(2, 3, 5));
+        let got = v.to_matrix();
+        assert_eq!(got, Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        assert!(got.as_slice().iter().all(|x| x.is_finite()));
+        // the transposed read skips the same gaps
+        assert!(v.transposed().to_matrix().as_slice().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn layout_min_len_excludes_trailing_stride() {
+        assert_eq!(MatLayout::strided(2, 3, 5).min_len(), 8);
+        assert_eq!(MatLayout::new(4, 4).min_len(), 16);
+        assert_eq!(MatLayout::strided(0, 3, 5).min_len(), 0);
+        assert_eq!(MatLayout::strided(3, 0, 5).min_len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer too short")]
+    fn view_length_checked() {
+        let buf = [0.0; 7];
+        MatRef::new(&buf, MatLayout::strided(2, 3, 5));
+    }
+
+    #[test]
+    #[should_panic(expected = "must cover")]
+    fn view_stride_checked() {
+        let buf = [0.0; 8];
+        MatRef::new(&buf, MatLayout::strided(2, 3, 2));
+    }
+
+    #[test]
+    fn mat_mut_writes_rows_not_gaps() {
+        let mut buf = [f32::NAN; 8];
+        let mut out = MatMut::new(&mut buf, 2, 3, 5);
+        assert_eq!(out.shape(), (2, 3));
+        assert_eq!(out.row_stride(), 5);
+        out.copy_from(&m(2, 3));
+        assert_eq!(&buf[0..3], m(2, 3).row(0));
+        assert_eq!(&buf[5..8], m(2, 3).row(1));
+        assert!(buf[3].is_nan() && buf[4].is_nan(), "stride gap must stay untouched");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn mat_mut_row_bounds_checked() {
+        // the buffer is long enough to hold a third row, but the view
+        // declares two: writing past the view must panic, not clobber
+        let mut buf = [0.0; 13];
+        MatMut::new(&mut buf, 2, 3, 5).row_mut(2);
+    }
+
+    #[test]
+    fn mat_mut_from_matrix_is_dense() {
+        let mut a = Matrix::zeros(2, 2);
+        let mut v = MatMut::from(&mut a);
+        v.row_mut(1)[0] = 7.0;
+        assert_eq!(a[(1, 0)], 7.0);
+    }
+
+    #[test]
+    fn strided_batch_entries_and_broadcast() {
+        let buf: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let b = StridedBatch::new(&buf, MatLayout::new(2, 2), 4, 3);
+        assert_eq!(b.len(), 3);
+        assert!(!b.is_empty());
+        assert_eq!(b.entry(1).get(1, 1), 7.0);
+        assert_eq!(b.views().len(), 3);
+        // batch_stride 0: every entry is the same stored matrix
+        let one = [1.0, 2.0, 3.0, 4.0];
+        let bc = StridedBatch::new(&one, MatLayout::new(2, 2), 0, 5);
+        assert_eq!(bc.entry(0).to_matrix(), bc.entry(4).to_matrix());
+    }
+
+    #[test]
+    fn strided_batch_inter_entry_padding() {
+        // stride exceeds the entry footprint; padding is never read
+        let mut buf = vec![f32::NAN; 4 + 3 + 4];
+        buf[0..4].copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        buf[7..11].copy_from_slice(&[5.0, 6.0, 7.0, 8.0]);
+        let b = StridedBatch::new(&buf, MatLayout::new(2, 2), 7, 2);
+        assert!(b.entry(0).to_matrix().as_slice().iter().all(|x| x.is_finite()));
+        assert_eq!(b.entry(1).get(0, 0), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer too short")]
+    fn strided_batch_length_checked() {
+        let buf = [0.0; 11];
+        StridedBatch::new(&buf, MatLayout::new(2, 2), 4, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn strided_batch_entry_bounds_checked() {
+        let buf = [0.0; 8];
+        StridedBatch::new(&buf, MatLayout::new(2, 2), 4, 2).entry(2);
+    }
+}

@@ -72,7 +72,19 @@ impl Matrix {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// Transposed copy.
+    /// Borrowed dense [`Op::N`](super::Op::N) view of this matrix —
+    /// the lossless bridge into the layout/view API
+    /// ([`super::MatRef`]): same buffer, same logical shape, no copy.
+    /// `m.view().transposed()` is the zero-copy alternative to
+    /// [`Matrix::transpose`].
+    pub fn view(&self) -> super::MatRef<'_> {
+        super::MatRef::from(self)
+    }
+
+    /// Transposed copy.  Prefer the zero-copy
+    /// [`MatRef::transposed`](super::MatRef::transposed) view when the
+    /// consumer is a plan: the engine absorbs the transpose at pack
+    /// time, so materializing it here is pure overhead.
     pub fn transpose(&self) -> Matrix {
         Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
     }
@@ -151,6 +163,14 @@ mod tests {
     fn transpose_involution() {
         let m = Matrix::from_fn(3, 5, |i, j| (i * 7 + j) as f32);
         assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn view_is_lossless() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(m.view().to_matrix(), m);
+        // the zero-copy transposed view equals the materializing copy
+        assert_eq!(m.view().transposed().to_matrix(), m.transpose());
     }
 
     #[test]

@@ -1,14 +1,23 @@
-//! S2 — CPU GEMM substrate: the descriptor/plan entry layer, the packed
-//! multithreaded engine beneath it, and the scalar reference oracles.
+//! S2 — CPU GEMM substrate: the descriptor/plan entry layer, the
+//! operand layout/view layer, the packed multithreaded engine beneath
+//! them, and the scalar reference oracles.
 //!
 //! [`plan`] is the crate's **single GEMM entry point** (cuBLASLt-style):
-//! a [`GemmDesc`] describes dims / [`Precision`] / epilogue / batch /
-//! worker count, validates into an immutable [`GemmPlan`] that owns the
-//! pre-packed operand panels, and executes repeatedly with operand
-//! swapping (`set_a`/`set_b`).  Every public path — `sgemm_blocked`,
-//! `mixed_gemm`, `hgemm`, the `batched_*` family, the three
-//! `interfaces` layers, the §V refinement chains and the coordinator's
-//! engine lane — is a thin wrapper over a plan.
+//! a [`GemmDesc`] describes dims / [`Precision`] / transpose [`Op`]s /
+//! epilogue / batch / worker count, validates into an immutable
+//! [`GemmPlan`] that owns the pre-packed operand panels, and executes
+//! repeatedly with operand swapping (`set_a`/`set_b`).  Every public
+//! path — `sgemm_blocked`, `mixed_gemm`, `hgemm`, the `batched_*`
+//! family, the three `interfaces` layers, the §V refinement chains and
+//! the coordinator's engine lane — is a thin wrapper over a plan.
+//!
+//! The **layout/view layer** is the operand surface (the cuBLAS
+//! `transa/transb + lda/ldb + strided batch` surface, §IV): a
+//! [`MatLayout`] descriptor plus borrowed [`MatRef`]/[`MatMut`] views
+//! over raw `&[f32]`, and a [`StridedBatch`] of equally-spaced entries
+//! in one buffer.  Transposition and non-unit row strides are absorbed
+//! by the engine's pack stage at zero extra cost, so views never
+//! materialize a transpose and strided batching never clones an entry.
 //!
 //! [`engine`] is the fast kernel core underneath (pack → cache-blocked
 //! loop nest → microkernel → worker pool); the plan layer is its sole
@@ -27,6 +36,7 @@
 mod batched;
 mod blocked;
 pub mod engine;
+mod layout;
 mod matrix;
 mod mixed;
 mod naive;
@@ -34,9 +44,10 @@ pub mod plan;
 
 pub use batched::{
     batched_hgemm, batched_hgemm_scalar, batched_mixed_gemm, batched_mixed_gemm_scalar,
-    batched_sgemm, batched_sgemm_scalar,
+    batched_mixed_gemm_strided, batched_sgemm, batched_sgemm_scalar, batched_sgemm_strided,
 };
 pub use blocked::sgemm_blocked;
+pub use layout::{MatLayout, MatMut, MatRef, Op, StridedBatch};
 pub use matrix::Matrix;
 pub use mixed::{hgemm, hgemm_scalar, mixed_gemm, mixed_gemm_accumulate, mixed_gemm_scalar};
 pub use naive::{dgemm_naive, sgemm_naive};

@@ -17,8 +17,12 @@
 //! ## Shape of the API
 //!
 //! [`GemmDesc`] is the immutable problem description: dimensions,
-//! [`Precision`], the `alpha`/`beta` epilogue, an optional pinned batch
-//! count, a worker-count override and an optional pool-mode annotation
+//! [`Precision`], the transpose [`Op`]s `op_a`/`op_b` (the cuBLAS
+//! `transa`/`transb` axis — the descriptor's dims stay the *logical*
+//! `m, k, n`, and a `T` op means the corresponding operand is handed
+//! over in stored/transposed form), the `alpha`/`beta` epilogue, an
+//! optional pinned batch count, a worker-count override and an optional
+//! pool-mode annotation
 //! ([`GemmDesc::pool_hint`] — metadata, not a substrate switch).
 //! [`GemmDesc::build`] validates it into a [`GemmPlan`]; [`GemmDesc::plan`]
 //! additionally packs both operands.  The plan owns:
@@ -43,6 +47,17 @@
 //! exactly the reuse the §V refinement chains (2–4 products per result)
 //! and the coordinator's repeated-shape buckets want.
 //!
+//! Operands are supplied either as owned [`Matrix`] values or as
+//! borrowed layout views ([`MatRef`], via [`GemmDesc::plan_views`] /
+//! [`GemmPlan::set_a_view`] / [`GemmPlan::set_b_view`] /
+//! [`GemmPlan::execute_batched_views`]); a `Matrix` is just a dense
+//! `Op::N` view, so the two forms pack identical panels.  Transposition
+//! (descriptor op or view op — they compose) and row strides are
+//! absorbed by the pack stage at zero extra cost, and
+//! [`GemmPlan::execute_strided_batched`] gathers a whole
+//! `cublasGemmStridedBatched`-style [`StridedBatch`] without cloning a
+//! single entry.
+//!
 //! ## Numerics contract
 //!
 //! A plan execution is bitwise identical to the corresponding serial
@@ -55,7 +70,7 @@
 use crate::gemm::engine::{
     self, InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB, PoolMode,
 };
-use crate::gemm::Matrix;
+use crate::gemm::{MatMut, MatRef, Matrix, Op, StridedBatch};
 use crate::precision::RefineMode;
 
 /// The numerical mode a plan executes under — the paper's precision axis
@@ -104,12 +119,6 @@ pub enum PlanError {
     CBatchLength { want: usize, got: usize },
     /// `execute_into` received an output of the wrong shape.
     OutputShape { want: (usize, usize), got: (usize, usize) },
-    /// The descriptor asks for a combination the engine does not serve.
-    /// No current descriptor produces this — batched refined plans and
-    /// batched alpha/beta epilogues, the two historical cases, are now
-    /// served — but the variant is kept so future engine gaps stay
-    /// expressible as typed errors.
-    Unsupported { what: &'static str },
 }
 
 impl std::fmt::Display for PlanError {
@@ -151,7 +160,6 @@ impl std::fmt::Display for PlanError {
             PlanError::OutputShape { want, got } => {
                 write!(f, "output shape mismatch: want {want:?}, got {got:?}")
             }
-            PlanError::Unsupported { what } => write!(f, "not supported by this plan: {what}"),
         }
     }
 }
@@ -182,6 +190,8 @@ impl std::error::Error for PlanError {}
 pub struct GemmDesc {
     dims: Option<(usize, usize, usize)>,
     precision: Precision,
+    op_a: Op,
+    op_b: Op,
     alpha: f32,
     beta: f32,
     batch: Option<usize>,
@@ -190,13 +200,17 @@ pub struct GemmDesc {
 }
 
 impl GemmDesc {
-    /// Describe `C[m x n] = alpha * A[m x k] x B[k x n] + beta * C`.
-    /// Defaults: [`Precision::Mixed`], `alpha = 1`, `beta = 0`, unpinned
-    /// batch count, auto worker count, ambient pool mode.
+    /// Describe `C[m x n] = alpha * op_a(A) x op_b(B) + beta * C` with
+    /// logical dims `op_a(A) = m x k`, `op_b(B) = k x n`.
+    /// Defaults: [`Precision::Mixed`], `op_a = op_b =` [`Op::N`],
+    /// `alpha = 1`, `beta = 0`, unpinned batch count, auto worker count,
+    /// ambient pool mode.
     pub fn new(m: usize, k: usize, n: usize) -> GemmDesc {
         GemmDesc {
             dims: Some((m, k, n)),
             precision: Precision::Mixed,
+            op_a: Op::N,
+            op_b: Op::N,
             alpha: 1.0,
             beta: 0.0,
             batch: None,
@@ -221,6 +235,38 @@ impl GemmDesc {
     /// Select the numerical mode (default [`Precision::Mixed`]).
     pub fn precision(mut self, p: Precision) -> GemmDesc {
         self.precision = p;
+        self
+    }
+
+    /// Transpose op on the left operand (cuBLAS `transa`): under
+    /// [`Op::T`] the caller hands A in *stored* `k x m` form and the
+    /// pack stage absorbs the transpose — no copy is ever materialized.
+    /// The descriptor's dims stay the logical `m, k, n` either way.
+    ///
+    /// ```
+    /// use tensoremu::gemm::{GemmDesc, Matrix, Op, Precision};
+    ///
+    /// // C = Aᵀ x B with A stored k x m — no materialized transpose
+    /// // (integer inputs are f16-exact, so Mixed reproduces them)
+    /// let a_stored = Matrix::from_fn(3, 2, |i, j| (i * 2 + j) as f32);
+    /// let b = Matrix::eye(3);
+    /// let plan = GemmDesc::new(2, 3, 3)
+    ///     .precision(Precision::Mixed)
+    ///     .op_a(Op::T)
+    ///     .plan(&a_stored, &b)?;
+    /// assert_eq!(plan.execute()?, a_stored.transpose());
+    /// # Ok::<(), tensoremu::gemm::PlanError>(())
+    /// ```
+    pub fn op_a(mut self, op: Op) -> GemmDesc {
+        self.op_a = op;
+        self
+    }
+
+    /// Transpose op on the right operand (cuBLAS `transb`): under
+    /// [`Op::T`] the caller hands B in stored `n x k` form.  See
+    /// [`GemmDesc::op_a`].
+    pub fn op_b(mut self, op: Op) -> GemmDesc {
+        self.op_b = op;
         self
     }
 
@@ -274,27 +320,71 @@ impl GemmDesc {
         self.dims
     }
 
+    /// The transpose ops `(op_a, op_b)`.
+    pub fn ops(&self) -> (Op, Op) {
+        (self.op_a, self.op_b)
+    }
+
     /// Validate the descriptor into an operand-less plan (operands are
     /// supplied later via [`GemmPlan::set_a`] / [`GemmPlan::set_b`], or
     /// per call for batched execution).  Every descriptor combination
-    /// currently validates — batched refined plans and batched alpha/beta
-    /// epilogues included — but the `Result` stays so future engine gaps
-    /// surface as typed errors, not panics.
+    /// currently validates — transpose ops, batched refined plans and
+    /// batched alpha/beta epilogues included — but the `Result` stays so
+    /// future engine gaps surface as typed errors, not panics.
     pub fn build(self) -> Result<GemmPlan, PlanError> {
         let pool = self.pool.unwrap_or_else(engine::pool_mode);
         Ok(GemmPlan { desc: self, pool, a: OperandA::Unset, b: OperandB::Unset })
     }
 
     /// Validate and pack both operands: the one-shot construction every
-    /// legacy wrapper uses.
+    /// legacy wrapper uses.  Operands are handed in *stored* form; the
+    /// descriptor ops say how the GEMM reads them.
     pub fn plan(self, a: &Matrix, b: &Matrix) -> Result<GemmPlan, PlanError> {
-        if a.cols() != b.rows() {
-            return Err(PlanError::InnerDim { a_cols: a.cols(), b_rows: b.rows() });
+        self.plan_views(&MatRef::from(a), &MatRef::from(b))
+    }
+
+    /// [`GemmDesc::plan`] over borrowed layout views — the zero-copy
+    /// construction: transposed or row-strided operands pack straight
+    /// from their buffers (a view's own [`Op`] composes with the
+    /// descriptor op, so `op_a(view) = op_a ∘ view.op` applied to the
+    /// stored buffer).
+    pub fn plan_views(self, a: &MatRef<'_>, b: &MatRef<'_>) -> Result<GemmPlan, PlanError> {
+        let a_cols = consumed_shape(self.op_a, a).1;
+        let b_rows = consumed_shape(self.op_b, b).0;
+        if a_cols != b_rows {
+            return Err(PlanError::InnerDim { a_cols, b_rows });
         }
         let mut p = self.build()?;
-        p.set_a(a)?;
-        p.set_b(b)?;
+        p.set_a_view(a)?;
+        p.set_b_view(b)?;
         Ok(p)
+    }
+}
+
+/// The shape a stored operand must present so that `op(stored)` has the
+/// consumed shape `(rows, cols)` — and, because transposition is an
+/// involution, equally the consumed shape of `op(stored)` given the
+/// stored `(rows, cols)`.
+fn stored_shape(op: Op, rows: usize, cols: usize) -> (usize, usize) {
+    match op {
+        Op::N => (rows, cols),
+        Op::T => (cols, rows),
+    }
+}
+
+/// The `(rows, cols)` the GEMM consumes after applying the descriptor
+/// `op` to a supplied view.
+fn consumed_shape(op: Op, v: &MatRef<'_>) -> (usize, usize) {
+    let (r, c) = v.logical_shape();
+    stored_shape(op, r, c)
+}
+
+/// Apply a descriptor op to a supplied view: `Op::T` flips the view's
+/// own op (zero-copy), `Op::N` leaves it alone.
+fn apply_op<'a>(v: &MatRef<'a>, op: Op) -> MatRef<'a> {
+    match op {
+        Op::N => *v,
+        Op::T => v.transposed(),
     }
 }
 
@@ -379,26 +469,40 @@ impl GemmPlan {
     /// # Ok::<(), tensoremu::gemm::PlanError>(())
     /// ```
     pub fn set_a(&mut self, a: &Matrix) -> Result<(), PlanError> {
+        self.set_a_view(&MatRef::from(a))
+    }
+
+    /// [`GemmPlan::set_a`] over a borrowed layout view: the descriptor
+    /// op composes with the view's own op, and transposition/stride are
+    /// absorbed by the pack (or Eq. 1 split) pass — no intermediate
+    /// matrix is materialized.  The view's logical shape must be the
+    /// *stored* A shape the descriptor expects (`m x k` under `Op::N`,
+    /// `k x m` under `Op::T`).
+    pub fn set_a_view(&mut self, a: &MatRef<'_>) -> Result<(), PlanError> {
         let (m, k, _) = self.dims_pinned()?;
-        if a.shape() != (m, k) {
-            return Err(PlanError::OperandShape { side: "A", want: (m, k), got: a.shape() });
+        let want = stored_shape(self.desc.op_a, m, k);
+        if a.logical_shape() != want {
+            return Err(PlanError::OperandShape { side: "A", want, got: a.logical_shape() });
         }
+        let v = apply_op(a, self.desc.op_a);
         match self.desc.precision {
             Precision::F32 => match &mut self.a {
-                OperandA::Full(p) => p.repack(a, InputPrecision::Full),
-                slot => *slot = OperandA::Full(PackedA::pack(a, InputPrecision::Full)),
+                OperandA::Full(p) => p.repack_view(&v, InputPrecision::Full),
+                slot => *slot = OperandA::Full(PackedA::pack_view(&v, InputPrecision::Full)),
             },
             Precision::Mixed | Precision::Refined(RefineMode::None) => match &mut self.a {
-                OperandA::Rounded(p) => p.repack(a, InputPrecision::F16Rounded),
-                slot => *slot = OperandA::Rounded(PackedA::pack(a, InputPrecision::F16Rounded)),
+                OperandA::Rounded(p) => p.repack_view(&v, InputPrecision::F16Rounded),
+                slot => {
+                    *slot = OperandA::Rounded(PackedA::pack_view(&v, InputPrecision::F16Rounded))
+                }
             },
             Precision::F16 => match &mut self.a {
-                OperandA::Half(p) => p.repack(a),
-                slot => *slot = OperandA::Half(PackedHalfA::pack(a)),
+                OperandA::Half(p) => p.repack_view(&v),
+                slot => *slot = OperandA::Half(PackedHalfA::pack_view(&v)),
             },
             Precision::Refined(mode) => {
                 debug_assert!(refines_a(mode));
-                let (him, lom) = engine::split_f16_matrix(a);
+                let (him, lom) = engine::split_f16_view(&v);
                 match &mut self.a {
                     OperandA::Split { hi, lo } => {
                         hi.repack(&him, InputPrecision::F16Rounded);
@@ -418,26 +522,37 @@ impl GemmPlan {
 
     /// Pack (or re-pack) the right operand; see [`GemmPlan::set_a`].
     pub fn set_b(&mut self, b: &Matrix) -> Result<(), PlanError> {
+        self.set_b_view(&MatRef::from(b))
+    }
+
+    /// [`GemmPlan::set_b`] over a borrowed layout view; see
+    /// [`GemmPlan::set_a_view`].  The expected stored B shape is
+    /// `k x n` under `Op::N`, `n x k` under `Op::T`.
+    pub fn set_b_view(&mut self, b: &MatRef<'_>) -> Result<(), PlanError> {
         let (_, k, n) = self.dims_pinned()?;
-        if b.shape() != (k, n) {
-            return Err(PlanError::OperandShape { side: "B", want: (k, n), got: b.shape() });
+        let want = stored_shape(self.desc.op_b, k, n);
+        if b.logical_shape() != want {
+            return Err(PlanError::OperandShape { side: "B", want, got: b.logical_shape() });
         }
+        let v = apply_op(b, self.desc.op_b);
         match self.desc.precision {
             Precision::F32 => match &mut self.b {
-                OperandB::Full(p) => p.repack(b, InputPrecision::Full),
-                slot => *slot = OperandB::Full(PackedB::pack(b, InputPrecision::Full)),
+                OperandB::Full(p) => p.repack_view(&v, InputPrecision::Full),
+                slot => *slot = OperandB::Full(PackedB::pack_view(&v, InputPrecision::Full)),
             },
             Precision::Mixed | Precision::Refined(RefineMode::None) => match &mut self.b {
-                OperandB::Rounded(p) => p.repack(b, InputPrecision::F16Rounded),
-                slot => *slot = OperandB::Rounded(PackedB::pack(b, InputPrecision::F16Rounded)),
+                OperandB::Rounded(p) => p.repack_view(&v, InputPrecision::F16Rounded),
+                slot => {
+                    *slot = OperandB::Rounded(PackedB::pack_view(&v, InputPrecision::F16Rounded))
+                }
             },
             Precision::F16 => match &mut self.b {
-                OperandB::Half(p) => p.repack(b),
-                slot => *slot = OperandB::Half(PackedHalfB::pack(b)),
+                OperandB::Half(p) => p.repack_view(&v),
+                slot => *slot = OperandB::Half(PackedHalfB::pack_view(&v)),
             },
             Precision::Refined(mode) => {
                 if refines_b(mode) {
-                    let (him, lom) = engine::split_f16_matrix(b);
+                    let (him, lom) = engine::split_f16_view(&v);
                     match &mut self.b {
                         OperandB::Split { hi, lo } => {
                             hi.repack(&him, InputPrecision::F16Rounded);
@@ -453,9 +568,10 @@ impl GemmPlan {
                 } else {
                     // RefineA consumes the rounded B in both of its GEMMs
                     match &mut self.b {
-                        OperandB::Rounded(p) => p.repack(b, InputPrecision::F16Rounded),
+                        OperandB::Rounded(p) => p.repack_view(&v, InputPrecision::F16Rounded),
                         slot => {
-                            *slot = OperandB::Rounded(PackedB::pack(b, InputPrecision::F16Rounded))
+                            let packed = PackedB::pack_view(&v, InputPrecision::F16Rounded);
+                            *slot = OperandB::Rounded(packed)
                         }
                     }
                 }
@@ -536,6 +652,27 @@ impl GemmPlan {
         }
     }
 
+    /// Execute into a borrowed, possibly row-strided output view — the
+    /// `ldc` side of the cuBLAS signature ([`MatMut`]; stride gap
+    /// columns are never written).  The engine's workers write
+    /// contiguous chunks, so the result is staged through a dense
+    /// buffer and copied out row-wise; when the output is a plain
+    /// `Matrix`, prefer [`GemmPlan::execute_into`], which skips the
+    /// staging copy.
+    pub fn execute_into_view(
+        &self,
+        out: &mut MatMut<'_>,
+        c: Option<&Matrix>,
+    ) -> Result<(), PlanError> {
+        let (m, _, n) = self.dims_pinned()?;
+        if out.shape() != (m, n) {
+            return Err(PlanError::OutputShape { want: (m, n), got: out.shape() });
+        }
+        let staged = self.execute_with(c)?;
+        out.copy_from(&staged);
+        Ok(())
+    }
+
     /// Batched execution `out[i] = alpha * a[i] x b[i]` under the plan's
     /// precision, entries distributed over the engine pool (refined
     /// precisions run their per-entry Eq. 1–3 residual-split chains on
@@ -576,6 +713,37 @@ impl GemmPlan {
         b: &[Matrix],
         c: Option<&[Matrix]>,
     ) -> Result<Vec<Matrix>, PlanError> {
+        let av: Vec<MatRef<'_>> = a.iter().map(MatRef::from).collect();
+        let bv: Vec<MatRef<'_>> = b.iter().map(MatRef::from).collect();
+        self.execute_batched_views_with(&av, &bv, c)
+    }
+
+    /// Batched execution over borrowed layout views — the zero-copy
+    /// gather path the coordinator's engine lane runs on: entries stay
+    /// wherever they live (bucket vectors, one contiguous strided
+    /// buffer, somebody else's allocation) and each worker packs its
+    /// entries straight from the views; nothing is cloned.  Per-entry
+    /// ops and row strides are absorbed at pack time, and the
+    /// descriptor's `op_a`/`op_b` compose on top.  A dense `Op::N`
+    /// view batch is bitwise identical to the owned
+    /// [`GemmPlan::execute_batched`] call it replaces.
+    pub fn execute_batched_views(
+        &self,
+        a: &[MatRef<'_>],
+        b: &[MatRef<'_>],
+    ) -> Result<Vec<Matrix>, PlanError> {
+        self.execute_batched_views_with(a, b, None)
+    }
+
+    /// [`GemmPlan::execute_batched_views`] with the full per-entry
+    /// epilogue (see [`GemmPlan::execute_batched_with`] for the C-batch
+    /// semantics: `beta == 0` never reads C).
+    pub fn execute_batched_views_with(
+        &self,
+        a: &[MatRef<'_>],
+        b: &[MatRef<'_>],
+        c: Option<&[Matrix]>,
+    ) -> Result<Vec<Matrix>, PlanError> {
         if a.len() != b.len() {
             return Err(PlanError::BatchLength { a: a.len(), b: b.len() });
         }
@@ -589,29 +757,41 @@ impl GemmPlan {
                 return Err(PlanError::CBatchLength { want: a.len(), got: cs.len() });
             }
         }
+        let (op_a, op_b) = (self.desc.op_a, self.desc.op_b);
         for (i, (x, y)) in a.iter().zip(b).enumerate() {
             let consistent = match self.desc.dims {
-                Some((m, k, n)) => x.shape() == (m, k) && y.shape() == (k, n),
-                None => x.cols() == y.rows(),
+                Some((m, k, n)) => {
+                    x.logical_shape() == stored_shape(op_a, m, k)
+                        && y.logical_shape() == stored_shape(op_b, k, n)
+                }
+                None => consumed_shape(op_a, x).1 == consumed_shape(op_b, y).0,
             };
             if !consistent {
-                return Err(PlanError::BatchEntry { index: i, a: x.shape(), b: y.shape() });
+                return Err(PlanError::BatchEntry {
+                    index: i,
+                    a: x.logical_shape(),
+                    b: y.logical_shape(),
+                });
             }
             if let Some(cs) = c {
-                let want = (x.rows(), y.cols());
+                let want = (consumed_shape(op_a, x).0, consumed_shape(op_b, y).1);
                 if cs[i].shape() != want {
                     return Err(PlanError::CShape { want, got: cs[i].shape() });
                 }
             }
         }
+        // descriptor ops compose onto the views (zero-copy); the engine
+        // packs each entry under the composed op
+        let ae: Vec<MatRef<'_>> = a.iter().map(|v| apply_op(v, op_a)).collect();
+        let be: Vec<MatRef<'_>> = b.iter().map(|v| apply_op(v, op_b)).collect();
         let t = self.desc.threads;
         let raw = match self.desc.precision {
-            Precision::F32 => engine::batched_sgemm(a, b, t),
+            Precision::F32 => engine::batched_sgemm_views(&ae, &be, t),
             Precision::Mixed | Precision::Refined(RefineMode::None) => {
-                engine::batched_mixed_gemm(a, b, t)
+                engine::batched_mixed_gemm_views(&ae, &be, t)
             }
-            Precision::F16 => engine::batched_hgemm(a, b, t),
-            Precision::Refined(mode) => engine::batched_refined_gemm(a, b, mode, t),
+            Precision::F16 => engine::batched_hgemm_views(&ae, &be, t),
+            Precision::Refined(mode) => engine::batched_refined_gemm_views(&ae, &be, mode, t),
         };
         let beta = self.desc.beta;
         Ok(raw
@@ -622,6 +802,45 @@ impl GemmPlan {
                 self.epilogue(prod, ce)
             })
             .collect())
+    }
+
+    /// Strided batched execution — the `cublasGemmStridedBatched` call
+    /// shape (§IV-B): each operand batch is **one contiguous buffer**
+    /// with a fixed element stride between entries, gathered as borrowed
+    /// views with zero per-entry copies or allocations.  Bitwise
+    /// identical to the same entries submitted as a `Vec<Matrix>` batch.
+    ///
+    /// ```
+    /// use tensoremu::gemm::{GemmDesc, MatLayout, StridedBatch};
+    ///
+    /// // three 2x2 A entries in one buffer; B broadcast via stride 0
+    /// let buf: Vec<f32> = (0..12).map(|x| x as f32).collect();
+    /// let a = StridedBatch::new(&buf, MatLayout::new(2, 2), 4, 3);
+    /// let eye = [1.0, 0.0, 0.0, 1.0];
+    /// let b = StridedBatch::new(&eye, MatLayout::new(2, 2), 0, 3);
+    /// let plan = GemmDesc::any_shape().build()?;
+    /// let out = plan.execute_strided_batched(&a, &b)?;
+    /// assert_eq!(out[2].as_slice(), &buf[8..12]);
+    /// # Ok::<(), tensoremu::gemm::PlanError>(())
+    /// ```
+    pub fn execute_strided_batched(
+        &self,
+        a: &StridedBatch<'_>,
+        b: &StridedBatch<'_>,
+    ) -> Result<Vec<Matrix>, PlanError> {
+        self.execute_strided_batched_with(a, b, None)
+    }
+
+    /// [`GemmPlan::execute_strided_batched`] with the full per-entry
+    /// epilogue (C-batch semantics as in
+    /// [`GemmPlan::execute_batched_with`]).
+    pub fn execute_strided_batched_with(
+        &self,
+        a: &StridedBatch<'_>,
+        b: &StridedBatch<'_>,
+        c: Option<&[Matrix]>,
+    ) -> Result<Vec<Matrix>, PlanError> {
+        self.execute_batched_views_with(&a.views(), &b.views(), c)
     }
 
     /// The refinement chain over the cached split panels, in the legacy
@@ -720,6 +939,21 @@ pub(crate) fn oneshot_batched(
         .unwrap_or_else(|e| panic!("{e}"))
 }
 
+/// One-shot strided-batched plan execution — the body of the
+/// `batched_*_strided` wrappers (`cublasGemmStridedBatched` call shape,
+/// zero-copy gather).
+pub(crate) fn oneshot_strided(
+    precision: Precision,
+    a: &StridedBatch<'_>,
+    b: &StridedBatch<'_>,
+) -> Vec<Matrix> {
+    GemmDesc::any_shape()
+        .precision(precision)
+        .build()
+        .and_then(|p| p.execute_strided_batched(a, b))
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -733,6 +967,58 @@ mod tests {
         assert_eq!(d, GemmDesc::new(3, 4, 5).epilogue(2.0, 0.5).threads(2));
         assert_eq!(GemmDesc::square(7).dims(), Some((7, 7, 7)));
         assert_eq!(GemmDesc::any_shape().dims(), None);
+    }
+
+    #[test]
+    fn desc_ops_default_to_n_and_build() {
+        let d = GemmDesc::new(3, 4, 5);
+        assert_eq!(d.ops(), (Op::N, Op::N));
+        assert_eq!(d.op_a(Op::T).ops(), (Op::T, Op::N));
+        assert_eq!(d.op_b(Op::T).ops(), (Op::N, Op::T));
+    }
+
+    #[test]
+    fn transposed_ops_match_materialized_transpose() {
+        let mut rng = Rng::new(45);
+        let a = uniform_matrix(&mut rng, 9, 7, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 7, 5, -1.0, 1.0);
+        let want = mixed_gemm_scalar(&a, &b, None, 1.0, 0.0);
+        // stored transposes + T ops: same logical GEMM, no copy at pack
+        let (at, bt) = (a.transpose(), b.transpose());
+        let plan = GemmDesc::new(9, 7, 5).op_a(Op::T).op_b(Op::T).plan(&at, &bt).unwrap();
+        assert_eq!(plan.execute().unwrap(), want);
+        // descriptor op composes with a view op: a transposed view of
+        // the original operand *is* the stored transpose
+        let plan = GemmDesc::new(9, 7, 5)
+            .op_a(Op::T)
+            .plan_views(&a.view().transposed(), &b.view())
+            .unwrap();
+        assert_eq!(plan.execute().unwrap(), want);
+    }
+
+    #[test]
+    fn execute_into_view_writes_rows_only() {
+        let mut rng = Rng::new(46);
+        let a = uniform_matrix(&mut rng, 4, 6, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 6, 3, -1.0, 1.0);
+        let plan = GemmDesc::new(4, 6, 3).plan(&a, &b).unwrap();
+        let want = plan.execute().unwrap();
+        // strided output with NaN gaps: rows written, gaps untouched
+        let stride = 5;
+        let mut buf = vec![f32::NAN; 3 * stride + 3];
+        let mut out = MatMut::new(&mut buf, 4, 3, stride);
+        plan.execute_into_view(&mut out, None).unwrap();
+        for i in 0..4 {
+            assert_eq!(&buf[i * stride..i * stride + 3], want.row(i), "row {i}");
+        }
+        assert!(buf[3].is_nan() && buf[4].is_nan(), "stride gap must stay untouched");
+        // wrong output shape is a typed error
+        let mut short = vec![0.0; 9];
+        let mut wrong = MatMut::dense(&mut short, 3, 3);
+        assert_eq!(
+            plan.execute_into_view(&mut wrong, None).err().unwrap(),
+            PlanError::OutputShape { want: (4, 3), got: (3, 3) }
+        );
     }
 
     #[test]
@@ -788,7 +1074,7 @@ mod tests {
 
     #[test]
     fn batched_refined_plans_build_and_match_single_chains() {
-        // the two historical `Unsupported` corners are now served:
+        // the two historical unsupported descriptor corners are served:
         // batched refined descriptors validate and execute per-entry
         // Eq. 2 chains, bitwise equal to a loop of refine_gemm singles
         use crate::precision::refine_gemm;

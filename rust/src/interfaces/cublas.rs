@@ -2,9 +2,14 @@
 //! *math mode* — "the cuBLAS math mode needs to be set to
 //! CUBLAS_TENSOR_OP_MATH using the function cublasSetMathMode()".
 //!
-//! `gemm_ex` dispatches on the mode exactly the way cuBLAS does: default
+//! `gemm_ex` carries the paper's full call signature — `transa`/`transb`
+//! transpose ops included (absorbed at pack time, never materialized) —
+//! and dispatches on the mode exactly the way cuBLAS does: default
 //! mode computes in full f32 on "CUDA cores"; TensorOp mode rounds inputs
-//! to f16 and accumulates in f32 on "Tensor Cores".  Every dispatch
+//! to f16 and accumulates in f32 on "Tensor Cores".  `gemm_strided_batched`
+//! mirrors `cublasGemmStridedBatched` (§IV-B): one contiguous buffer per
+//! operand batch, gathered zero-copy through
+//! [`crate::gemm::StridedBatch`] views.  Every dispatch
 //! target is a [`crate::gemm::plan::GemmPlan`] — `(mode, algo)` maps to
 //! a [`crate::gemm::plan::Precision`] and the alpha/beta epilogue runs
 //! the plan layer's single implementation (cuBLAS semantics included:
@@ -20,7 +25,7 @@
 //! added it) is set.
 
 use crate::gemm::plan::{GemmDesc, PlanError, Precision};
-use crate::gemm::Matrix;
+use crate::gemm::{MatLayout, Matrix, Op, StridedBatch};
 use crate::precision::RefineMode;
 
 /// Map a typed plan rejection onto the closest cublasStatus_t-style
@@ -39,7 +44,6 @@ fn plan_err(e: PlanError) -> CublasError {
         PlanError::OperandMissing { .. } | PlanError::UnpinnedDims => {
             "plan operands not initialized"
         }
-        PlanError::Unsupported { .. } => "operation not supported by the plan",
     })
 }
 
@@ -109,13 +113,19 @@ impl CublasHandle {
         self.math_mode
     }
 
-    /// cublasGemmEx(): C = alpha*A*B + beta*C, dispatching on math mode
-    /// and algorithm.  Builds a one-shot plan at the mapped precision;
-    /// the former hand-rolled refined-path scaling now rides the plan's
-    /// single epilogue (so `beta == 0` never reads C — cuBLAS
+    /// cublasGemmEx(): `C = alpha * transa(A) x transb(B) + beta * C`,
+    /// dispatching on math mode and algorithm — the paper's §IV call
+    /// signature, `transa`/`transb` included.  A `T` op consumes the
+    /// stored operand transposed with **no materialized copy**: the
+    /// plan's pack stage absorbs the transpose.  Builds a one-shot plan
+    /// at the mapped precision; the alpha/beta epilogue rides the plan's
+    /// single implementation (so `beta == 0` never reads C — cuBLAS
     /// semantics).
+    #[allow(clippy::too_many_arguments)]
     pub fn gemm_ex(
         &self,
+        transa: Op,
+        transb: Op,
         a: &Matrix,
         b: &Matrix,
         c: Option<&Matrix>,
@@ -123,7 +133,11 @@ impl CublasHandle {
         beta: f32,
         algo: GemmAlgo,
     ) -> Result<Matrix, CublasError> {
-        if a.cols() != b.rows() {
+        // resolve consumed dims through the layout layer's one op-flip
+        // implementation instead of re-deriving the N/T rule here
+        let (m, k_a) = MatLayout::new(a.rows(), a.cols()).with_op(transa).logical_shape();
+        let (k_b, n) = MatLayout::new(b.rows(), b.cols()).with_op(transb).logical_shape();
+        if k_a != k_b {
             return Err(CublasError::InvalidValue("inner dimensions differ"));
         }
         let precision = match (self.math_mode, algo) {
@@ -141,8 +155,10 @@ impl CublasHandle {
                 Precision::Refined(RefineMode::RefineAB)
             }
         };
-        GemmDesc::new(a.rows(), a.cols(), b.cols())
+        GemmDesc::new(m, k_a, n)
             .precision(precision)
+            .op_a(transa)
+            .op_b(transb)
             .epilogue(alpha, beta)
             .plan(a, b)
             .and_then(|p| p.execute_with(c))
@@ -179,6 +195,44 @@ impl CublasHandle {
             .and_then(|p| p.execute_batched(a, b))
             .map_err(plan_err)
     }
+
+    /// cublasGemmStridedBatched(): `count` equally-shaped products whose
+    /// operands live in **one contiguous buffer each**, entry `i` at
+    /// element offset `i * batch_stride` — gathered as borrowed views
+    /// with zero per-entry copies or allocations, which is exactly the
+    /// allocation-free batching the paper's §IV-B API provides on
+    /// device.  `transa`/`transb` apply per entry (pack-time, no
+    /// copies).  Same footnote-1 gating as [`CublasHandle::gemm_batched`]:
+    /// TensorOp math requires a handle modeling cuBLAS >= 9.1.128.
+    pub fn gemm_strided_batched(
+        &self,
+        transa: Op,
+        transb: Op,
+        a: &StridedBatch<'_>,
+        b: &StridedBatch<'_>,
+    ) -> Result<Vec<Matrix>, CublasError> {
+        if a.len() != b.len() {
+            return Err(CublasError::InvalidValue("batch length mismatch"));
+        }
+        let precision = match self.math_mode {
+            MathMode::Default => Precision::F32,
+            MathMode::TensorOp if self.allow_post_9_1_128 => Precision::Mixed,
+            MathMode::TensorOp => {
+                return Err(CublasError::NotSupported(
+                    "batched GEMM is not supported by NVIDIA Tensor Cores \
+                     (cuBLAS < 9.1.128); use the WMMA batcher",
+                ))
+            }
+        };
+        GemmDesc::any_shape()
+            .precision(precision)
+            .op_a(transa)
+            .op_b(transb)
+            .batch(a.len())
+            .build()
+            .and_then(|p| p.execute_strided_batched(a, b))
+            .map_err(plan_err)
+    }
 }
 
 #[cfg(test)]
@@ -193,7 +247,7 @@ mod tests {
         let a = uniform_matrix(&mut rng, 32, 32, -1.0, 1.0);
         let b = uniform_matrix(&mut rng, 32, 32, -1.0, 1.0);
         let h = CublasHandle::new();
-        let c = h.gemm_ex(&a, &b, None, 1.0, 0.0, GemmAlgo::Default).unwrap();
+        let c = h.gemm_ex(Op::N, Op::N, &a, &b, None, 1.0, 0.0, GemmAlgo::Default).unwrap();
         let truth = dgemm_naive(&a, &b);
         assert!(c.max_norm_diff(&truth) < 1e-4); // f32-level error only
     }
@@ -205,14 +259,86 @@ mod tests {
         let b = uniform_matrix(&mut rng, 32, 32, -1.0, 1.0);
         let mut h = CublasHandle::new();
         h.set_math_mode(MathMode::TensorOp);
-        let c_tc = h.gemm_ex(&a, &b, None, 1.0, 0.0, GemmAlgo::Default).unwrap();
+        let c_tc = h.gemm_ex(Op::N, Op::N, &a, &b, None, 1.0, 0.0, GemmAlgo::Default).unwrap();
         let c_f32 = CublasHandle::new()
-            .gemm_ex(&a, &b, None, 1.0, 0.0, GemmAlgo::Default)
+            .gemm_ex(Op::N, Op::N, &a, &b, None, 1.0, 0.0, GemmAlgo::Default)
             .unwrap();
         // Tensor-Core result must differ (f16 input rounding) ...
         assert!(c_tc.max_norm_diff(&c_f32) > 1e-4);
         // ... and equal the mixed oracle exactly
         assert_eq!(c_tc, mixed_gemm(&a, &b, None, 1.0, 0.0));
+    }
+
+    #[test]
+    fn trans_ops_match_materialized_transposes_bitwise() {
+        // the paper call signature's transa/transb axis: every op combo
+        // must equal the N/N call over materialized transposes, bit for
+        // bit, in both math modes
+        let mut rng = Rng::new(10);
+        let a = uniform_matrix(&mut rng, 24, 17, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 17, 20, -1.0, 1.0);
+        let (at, bt) = (a.transpose(), b.transpose());
+        for mode in [MathMode::Default, MathMode::TensorOp] {
+            let mut h = CublasHandle::new();
+            h.set_math_mode(mode);
+            let want = h.gemm_ex(Op::N, Op::N, &a, &b, None, 1.0, 0.0, GemmAlgo::Default).unwrap();
+            for (ta, tb, sa, sb) in [
+                (Op::T, Op::N, &at, &b),
+                (Op::N, Op::T, &a, &bt),
+                (Op::T, Op::T, &at, &bt),
+            ] {
+                let got = h.gemm_ex(ta, tb, sa, sb, None, 1.0, 0.0, GemmAlgo::Default).unwrap();
+                assert_eq!(got, want, "{mode:?} {ta:?}/{tb:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn trans_op_dimension_check_uses_consumed_dims() {
+        // A stored 17x24 consumed as Aᵀ (24x17) chains with B 17x20;
+        // the same call without the op must be rejected
+        let mut rng = Rng::new(11);
+        let at = uniform_matrix(&mut rng, 17, 24, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 17, 20, -1.0, 1.0);
+        let h = CublasHandle::new();
+        assert!(h.gemm_ex(Op::T, Op::N, &at, &b, None, 1.0, 0.0, GemmAlgo::Default).is_ok());
+        assert!(matches!(
+            h.gemm_ex(Op::N, Op::N, &at, &b, None, 1.0, 0.0, GemmAlgo::Default),
+            Err(CublasError::InvalidValue(_))
+        ));
+    }
+
+    #[test]
+    fn strided_batched_matches_vec_batched_and_respects_footnote_1() {
+        let mut rng = Rng::new(12);
+        let a = uniform_batch(&mut rng, 4, 16, -1.0, 1.0);
+        let b = uniform_batch(&mut rng, 4, 16, -1.0, 1.0);
+        let abuf: Vec<f32> = a.iter().flat_map(|m| m.as_slice().iter().copied()).collect();
+        let bbuf: Vec<f32> = b.iter().flat_map(|m| m.as_slice().iter().copied()).collect();
+        let lay = MatLayout::new(16, 16);
+        let sa = StridedBatch::new(&abuf, lay, 256, 4);
+        let sb = StridedBatch::new(&bbuf, lay, 256, 4);
+        // default math: same bits as the Vec<Matrix> batched call
+        let h = CublasHandle::new();
+        assert_eq!(
+            h.gemm_strided_batched(Op::N, Op::N, &sa, &sb).unwrap(),
+            h.gemm_batched(&a, &b).unwrap()
+        );
+        // footnote 1 applies to the strided call too
+        let mut h = CublasHandle::new();
+        h.set_math_mode(MathMode::TensorOp);
+        assert!(matches!(
+            h.gemm_strided_batched(Op::N, Op::N, &sa, &sb),
+            Err(CublasError::NotSupported(_))
+        ));
+        h.allow_post_9_1_128 = true;
+        let got = h.gemm_strided_batched(Op::N, Op::N, &sa, &sb).unwrap();
+        assert_eq!(got, h.gemm_batched(&a, &b).unwrap());
+        // per-entry transb over a strided batch storing Bᵀ entries
+        let bt: Vec<Matrix> = b.iter().map(|m| m.transpose()).collect();
+        let btbuf: Vec<f32> = bt.iter().flat_map(|m| m.as_slice().iter().copied()).collect();
+        let sbt = StridedBatch::new(&btbuf, lay, 256, 4);
+        assert_eq!(h.gemm_strided_batched(Op::N, Op::T, &sa, &sbt).unwrap(), got);
     }
 
     #[test]
@@ -224,15 +350,15 @@ mod tests {
         let mut h = CublasHandle::new();
         h.set_math_mode(MathMode::TensorOp);
         let e_plain = h
-            .gemm_ex(&a, &b, None, 1.0, 0.0, GemmAlgo::Default)
+            .gemm_ex(Op::N, Op::N, &a, &b, None, 1.0, 0.0, GemmAlgo::Default)
             .unwrap()
             .max_norm_diff(&truth);
         let e_ra = h
-            .gemm_ex(&a, &b, None, 1.0, 0.0, GemmAlgo::RefinedTensorOpA)
+            .gemm_ex(Op::N, Op::N, &a, &b, None, 1.0, 0.0, GemmAlgo::RefinedTensorOpA)
             .unwrap()
             .max_norm_diff(&truth);
         let e_rab = h
-            .gemm_ex(&a, &b, None, 1.0, 0.0, GemmAlgo::RefinedTensorOpAB)
+            .gemm_ex(Op::N, Op::N, &a, &b, None, 1.0, 0.0, GemmAlgo::RefinedTensorOpAB)
             .unwrap()
             .max_norm_diff(&truth);
         assert!(e_plain > e_ra && e_ra > e_rab);
@@ -242,7 +368,7 @@ mod tests {
     fn refined_requires_tensor_math() {
         let h = CublasHandle::new(); // default math
         let a = Matrix::eye(16);
-        let err = h.gemm_ex(&a, &a, None, 1.0, 0.0, GemmAlgo::RefinedTensorOpA);
+        let err = h.gemm_ex(Op::N, Op::N, &a, &a, None, 1.0, 0.0, GemmAlgo::RefinedTensorOpA);
         assert!(matches!(err, Err(CublasError::NotSupported(_))));
     }
 
@@ -267,6 +393,8 @@ mod tests {
     fn dimension_error() {
         let h = CublasHandle::new();
         let e = h.gemm_ex(
+            Op::N,
+            Op::N,
             &Matrix::zeros(4, 5),
             &Matrix::zeros(6, 4),
             None,

@@ -12,7 +12,7 @@
 //! performance".
 
 use crate::gemm::plan::{GemmDesc, Precision};
-use crate::gemm::Matrix;
+use crate::gemm::{MatRef, Matrix};
 use crate::tcemu::FRAGMENT_DIM;
 
 /// A threadblock tile policy: the C tile each "thread block" owns and the
@@ -97,8 +97,18 @@ impl CutlassGemm {
     /// lives on in the simulator (`sim::kernels`), which models the
     /// staged-panel traffic per shape.
     pub fn run(&self, a: &Matrix, b: &Matrix) -> Matrix {
-        let (m, k) = a.shape();
-        let (k2, n) = b.shape();
+        self.run_views(&MatRef::from(a), &MatRef::from(b))
+    }
+
+    /// [`CutlassGemm::run`] over borrowed layout views — real CUTLASS
+    /// parameterizes its device `Gemm` by operand *layouts*
+    /// (`RowMajor`/`ColumnMajor` template arguments), and this is that
+    /// axis on the host: a transposed or row-strided
+    /// [`crate::gemm::MatRef`] feeds the plan directly, absorbed at pack
+    /// time with no materialized copy.
+    pub fn run_views(&self, a: &MatRef<'_>, b: &MatRef<'_>) -> Matrix {
+        let (m, k) = a.logical_shape();
+        let (k2, n) = b.logical_shape();
         assert_eq!(k, k2, "inner dimension mismatch");
         assert!(
             m % FRAGMENT_DIM == 0 && n % FRAGMENT_DIM == 0 && k % FRAGMENT_DIM == 0,
@@ -106,7 +116,7 @@ impl CutlassGemm {
         );
         GemmDesc::new(m, k, n)
             .precision(Precision::Mixed)
-            .plan(a, b)
+            .plan_views(a, b)
             .and_then(|p| p.execute())
             .unwrap_or_else(|e| panic!("{e}"))
     }
@@ -139,6 +149,19 @@ mod tests {
             let c = CutlassGemm::new(*p).run(&a, &b);
             assert_eq!(c, base, "policy {p:?}");
         }
+    }
+
+    #[test]
+    fn view_layouts_match_dense_run_bitwise() {
+        // the layout template-argument axis: a col-major operand is a
+        // transposed view of its row-major transpose, zero-copy
+        let mut rng = Rng::new(5);
+        let a = uniform_matrix(&mut rng, 64, 32, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 32, 48, -1.0, 1.0);
+        let g = CutlassGemm::new(TilePolicy::DEFAULT);
+        let want = g.run(&a, &b);
+        let at = a.transpose();
+        assert_eq!(g.run_views(&at.view().transposed(), &b.view()), want);
     }
 
     #[test]

@@ -27,4 +27,4 @@ pub mod wmma;
 
 pub use cublas::{CublasHandle, GemmAlgo, MathMode};
 pub use cutlass::{CutlassGemm, TilePolicy};
-pub use wmma::{wmma_batched_gemm, wmma_tensor_op, wmma_tiled_gemm};
+pub use wmma::{wmma_batched_gemm, wmma_tensor_op, wmma_tiled_gemm, wmma_tiled_gemm_views};

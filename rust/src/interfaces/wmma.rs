@@ -17,7 +17,7 @@
 //! which is why its simulated performance model is HBM-bound.
 
 use crate::gemm::plan::{GemmDesc, Precision};
-use crate::gemm::Matrix;
+use crate::gemm::{MatRef, Matrix};
 use crate::tcemu::{mma_sync, AccumFragment, Fragment, Layout, FRAGMENT_DIM};
 
 /// Listing 1: D = A x B for one 16x16 tile computed by "one warp".
@@ -47,8 +47,18 @@ pub fn wmma_tensor_op(d: &mut [f32], a: &[f32], b: &[f32], ld: usize, layout: La
 /// bitwise identical to iterating `mma_sync` per tile (asserted against
 /// the oracle in the tests below).
 pub fn wmma_tiled_gemm(a: &Matrix, b: &Matrix) -> Matrix {
-    let (m, k) = a.shape();
-    let (k2, n) = b.shape();
+    wmma_tiled_gemm_views(&MatRef::from(a), &MatRef::from(b))
+}
+
+/// [`wmma_tiled_gemm`] over borrowed layout views
+/// ([`crate::gemm::MatRef`]) — WMMA's `load_matrix_sync` takes a raw
+/// pointer + leading dimension + layout on device, and this is the same
+/// surface on the host: a transposed or row-strided operand loads
+/// straight from its buffer (the plan's pack stage plays the role of the
+/// fragment load, absorbing op and stride for free).
+pub fn wmma_tiled_gemm_views(a: &MatRef<'_>, b: &MatRef<'_>) -> Matrix {
+    let (m, k) = a.logical_shape();
+    let (k2, n) = b.logical_shape();
     assert_eq!(k, k2, "inner dimension mismatch");
     assert!(
         m % FRAGMENT_DIM == 0 && n % FRAGMENT_DIM == 0 && k % FRAGMENT_DIM == 0,
@@ -56,7 +66,7 @@ pub fn wmma_tiled_gemm(a: &Matrix, b: &Matrix) -> Matrix {
     );
     GemmDesc::new(m, k, n)
         .precision(Precision::Mixed)
-        .plan(a, b)
+        .plan_views(a, b)
         .and_then(|p| p.execute())
         .unwrap_or_else(|e| panic!("{e}"))
 }
@@ -129,6 +139,18 @@ mod tests {
         let got = wmma_tiled_gemm(&a, &b);
         let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn tiled_gemm_views_absorb_transpose_zero_copy() {
+        // the view passthrough: a transposed view of Aᵀ is A, with no
+        // materialized copy, and the product matches the dense call
+        let mut rng = Rng::new(6);
+        let a = uniform_matrix(&mut rng, 32, 48, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 48, 16, -1.0, 1.0);
+        let at = a.transpose();
+        let got = wmma_tiled_gemm_views(&at.view().transposed(), &b.view());
+        assert_eq!(got, wmma_tiled_gemm(&a, &b));
     }
 
     #[test]

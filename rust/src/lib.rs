@@ -10,8 +10,9 @@
 //! * **Plan layer** — [`gemm::plan`], the crate's **single GEMM entry
 //!   point**, modeled on the descriptor-based cuBLAS surface the paper
 //!   found fastest and most reusable (§IV): a
-//!   [`gemm::GemmDesc`] (dims, [`gemm::Precision`], alpha/beta epilogue,
-//!   batch count, worker count) validates into an immutable
+//!   [`gemm::GemmDesc`] (dims, [`gemm::Precision`], transpose
+//!   [`gemm::Op`]s, alpha/beta epilogue, batch count, worker count)
+//!   validates into an immutable
 //!   [`gemm::GemmPlan`] owning pre-packed operand panels, with
 //!   `execute`/`execute_into`/`execute_batched` and operand swapping
 //!   (`set_a`/`set_b`) for the refine chains' 2–4 products and the
@@ -21,6 +22,17 @@
 //!   `mixed_gemm`, `hgemm`, `batched_*`, the three interface layers,
 //!   `refine_gemm`, the coordinator lanes) is a thin wrapper over a
 //!   plan.
+//! * **Layout/view layer** — the operand surface of the plan API
+//!   (cuBLAS `transa/transb + lda/ldb` + `cublasGemmStridedBatched`,
+//!   §IV): a [`gemm::MatLayout`] descriptor plus borrowed
+//!   [`gemm::MatRef`]/[`gemm::MatMut`] views over raw `&[f32]` (a
+//!   [`gemm::Matrix`] converts losslessly via [`gemm::Matrix::view`])
+//!   and a zero-copy [`gemm::StridedBatch`] of equally-spaced entries
+//!   in one buffer.  Transposition and row strides are absorbed by the
+//!   engine's pack stage in the copy it already pays, so `Op::T`
+//!   operands, strided operands and strided batches are all bitwise
+//!   equal to — and never slower than — the materialized copies they
+//!   replace.
 //! * **Kernel engine** — [`gemm::engine`], the packed multithreaded GEMM
 //!   core underneath the plan layer (pack -> cache-blocked `kc`/`mc`
 //!   loop nest -> 8x8 register-blocked microkernel -> deterministic
@@ -54,7 +66,9 @@
 //!   requests no artifact covers — refined or not — ride a bucketed
 //!   engine lane: un-padded `(edge, precision mode)` buckets executed
 //!   on the service's mode-keyed cached plans (refined buckets batch
-//!   their §V Eq. 1–3 chains on the engine pool), so CPU fallback is
+//!   their §V Eq. 1–3 chains on the engine pool), gathered as borrowed
+//!   views with zero per-entry clones (observable through the
+//!   `engine_view_bytes` metric), so CPU fallback is
 //!   non-square traffic only.
 //!
 //! ## Guides

@@ -216,6 +216,10 @@ fn square_non_tile_requests_ride_engine_lane_with_zero_fallbacks() {
     assert_eq!(snap.engine_batched, 24, "{}", snap.report());
     assert_eq!(snap.engine_refined, 0, "unrefined traffic: {}", snap.report());
     assert!(snap.engine_flushes >= 3, "three edges -> at least three buckets: {}", snap.report());
+    // every operand byte reached the engine by borrow (zero per-entry
+    // clones on the bucketed lane): 24 requests x 2 operands x n^2 f32s
+    let want_bytes: u64 = (0..24usize).map(|i| [24u64, 48, 33][i % 3].pow(2) * 2 * 4).sum();
+    assert_eq!(snap.engine_view_bytes, want_bytes, "{}", snap.report());
     assert_eq!(snap.responses, 24);
     c.shutdown();
 }
@@ -249,6 +253,7 @@ fn refined_square_requests_ride_engine_lane_with_zero_fallbacks() {
     assert_eq!(snap.fallback, 0, "refined square must never fall back: {}", snap.report());
     assert_eq!(snap.engine_batched, 18, "{}", snap.report());
     assert_eq!(snap.engine_refined, 18, "{}", snap.report());
+    assert!(snap.engine_view_bytes > 0, "refined buckets gather by view too: {}", snap.report());
     assert_eq!(snap.responses, 18);
     c.shutdown();
 }
@@ -339,6 +344,7 @@ fn non_square_requests_still_fall_back_without_artifacts() {
     let snap = c.metrics().snapshot();
     assert_eq!(snap.fallback, 1);
     assert_eq!(snap.engine_batched, 0);
+    assert_eq!(snap.engine_view_bytes, 0);
     c.shutdown();
 }
 

@@ -10,7 +10,7 @@ use tensoremu::gemm::engine::{self, PoolMode};
 use tensoremu::gemm::plan::{GemmDesc, GemmPlan, PlanError, Precision};
 use tensoremu::gemm::{
     batched_hgemm_scalar, batched_mixed_gemm_scalar, batched_sgemm_scalar, hgemm_scalar,
-    mixed_gemm_scalar, sgemm_naive, Matrix,
+    mixed_gemm_scalar, sgemm_naive, MatLayout, MatRef, Matrix, Op, StridedBatch,
 };
 use tensoremu::precision::RefineMode;
 use tensoremu::workload::{uniform_matrix, Rng};
@@ -230,7 +230,7 @@ fn legacy_wrappers_equal_plans_bitwise() {
     let mut h = CublasHandle::new();
     h.set_math_mode(MathMode::TensorOp);
     assert_eq!(
-        h.gemm_ex(&a, &b, None, 1.0, 0.0, GemmAlgo::RefinedTensorOpA).unwrap(),
+        h.gemm_ex(Op::N, Op::N, &a, &b, None, 1.0, 0.0, GemmAlgo::RefinedTensorOpA).unwrap(),
         oracle(Precision::Refined(RefineMode::RefineA), &a, &b)
     );
     assert_eq!(
@@ -485,6 +485,273 @@ fn warm_pool_plan_reuse_interleaved_shapes_stable() {
         }
     }
     engine::set_pool_mode(ambient);
+}
+
+// ---------------------------------------------------------------------------
+// Layout/view sweeps: every view/op/stride path must be bitwise equal to
+// the materialized-copy reference it replaces.
+
+const OPS: &[(Op, Op)] = &[(Op::N, Op::N), (Op::N, Op::T), (Op::T, Op::N), (Op::T, Op::T)];
+
+/// The stored operand a caller hands a plan so that `op(stored)` is the
+/// logical operand `l` — the materializing copy the view API avoids.
+fn stored_for(l: &Matrix, op: Op) -> Matrix {
+    match op {
+        Op::N => l.clone(),
+        Op::T => l.transpose(),
+    }
+}
+
+/// Embed `m` into a buffer with `row_stride = cols + pad`, NaN in the
+/// gaps: a correct strided pack can never touch them (a leaked NaN
+/// poisons every comparison below).
+fn strided_copy(m: &Matrix, pad: usize) -> (Vec<f32>, MatLayout) {
+    let (r, c) = m.shape();
+    let stride = c + pad;
+    let len = if r == 0 { 0 } else { (r - 1) * stride + c };
+    let mut buf = vec![f32::NAN; len];
+    for i in 0..r {
+        buf[i * stride..i * stride + c].copy_from_slice(m.row(i));
+    }
+    (buf, MatLayout::strided(r, c, stride))
+}
+
+/// One contiguous buffer holding a whole batch back to back.
+fn contiguous(ms: &[Matrix]) -> Vec<f32> {
+    ms.iter().flat_map(|m| m.as_slice().iter().copied()).collect()
+}
+
+#[test]
+fn op_combinations_match_materialized_transpose_oracles() {
+    // {N,T} x {N,T} on every precision: a plan over stored (possibly
+    // transposed) operands must equal the scalar oracle over the
+    // materialized logical operands, bit for bit, at every worker count
+    // and pool mode
+    let _g = lock_mode();
+    let ambient = engine::pool_mode();
+    let mut rng = Rng::new(120);
+    let (m, k, n) = (13, 17, 9);
+    let (la, lb) = pair(&mut rng, m, k, n);
+    for &prec in ALL_PRECISIONS {
+        let want = oracle(prec, &la, &lb);
+        for &(oa, ob) in OPS {
+            let sa = stored_for(&la, oa);
+            let sb = stored_for(&lb, ob);
+            for pm in [PoolMode::Scoped, PoolMode::Persistent] {
+                engine::set_pool_mode(pm);
+                for &t in THREADS {
+                    let plan = GemmDesc::new(m, k, n)
+                        .precision(prec)
+                        .op_a(oa)
+                        .op_b(ob)
+                        .threads(t)
+                        .plan(&sa, &sb)
+                        .unwrap();
+                    assert_eq!(
+                        plan.execute().unwrap(),
+                        want,
+                        "{prec:?} {oa:?}/{ob:?} {pm:?} t={t}"
+                    );
+                }
+            }
+        }
+    }
+    engine::set_pool_mode(ambient);
+}
+
+#[test]
+fn strided_views_match_dense_plans_bitwise() {
+    // non-unit row strides with NaN gap columns: the packed panels (and
+    // therefore the products) must be bitwise identical to the dense
+    // operands, proving the gaps are never read
+    let mut rng = Rng::new(121);
+    let (a, b) = pair(&mut rng, 19, 23, 14);
+    let (abuf, al) = strided_copy(&a, 5);
+    let (bbuf, bl) = strided_copy(&b, 2);
+    for &prec in ALL_PRECISIONS {
+        let want = oracle(prec, &a, &b);
+        let plan = GemmDesc::new(19, 23, 14)
+            .precision(prec)
+            .plan_views(&MatRef::new(&abuf, al), &MatRef::new(&bbuf, bl))
+            .unwrap();
+        assert_eq!(plan.execute().unwrap(), want, "{prec:?}");
+    }
+}
+
+#[test]
+fn transposed_strided_view_equals_materialized_transpose() {
+    // view-level op over a strided buffer: store Aᵀ strided, view it
+    // with the op flipped so the logical operand is A again
+    let mut rng = Rng::new(122);
+    let a = uniform_matrix(&mut rng, 12, 21, -1.0, 1.0);
+    let at = a.transpose();
+    let (buf, lay) = strided_copy(&at, 3);
+    let v = MatRef::new(&buf, lay).transposed();
+    assert_eq!(v.logical_shape(), (12, 21));
+    assert_eq!(v.to_matrix(), a);
+    let b = uniform_matrix(&mut rng, 21, 8, -1.0, 1.0);
+    let plan = GemmDesc::new(12, 21, 8).plan_views(&v, &b.view()).unwrap();
+    assert_eq!(plan.execute().unwrap(), mixed_gemm_scalar(&a, &b, None, 1.0, 0.0));
+}
+
+#[test]
+fn view_operand_swap_matches_fresh_plan() {
+    // set_b_view on a warm plan (A's panels cached) == a freshly built
+    // materialized plan, for a dense view, a transposed view and a
+    // strided view
+    let mut rng = Rng::new(125);
+    let a = uniform_matrix(&mut rng, 15, 18, -1.0, 1.0);
+    for &prec in &[Precision::F32, Precision::Mixed, Precision::Refined(RefineMode::RefineAB)] {
+        let b0 = uniform_matrix(&mut rng, 18, 11, -1.0, 1.0);
+        let mut plan = GemmDesc::new(15, 18, 11).precision(prec).plan(&a, &b0).unwrap();
+        let b = uniform_matrix(&mut rng, 18, 11, -1.0, 1.0);
+        let want = oracle(prec, &a, &b);
+        plan.set_b_view(&b.view()).unwrap();
+        assert_eq!(plan.execute().unwrap(), want, "{prec:?} dense view");
+        let bt = b.transpose();
+        plan.set_b_view(&bt.view().transposed()).unwrap();
+        assert_eq!(plan.execute().unwrap(), want, "{prec:?} transposed view");
+        let (bbuf, bl) = strided_copy(&b, 4);
+        plan.set_b_view(&MatRef::new(&bbuf, bl)).unwrap();
+        assert_eq!(plan.execute().unwrap(), want, "{prec:?} strided view");
+        // and set_a_view keeps B warm symmetrically
+        let a2 = uniform_matrix(&mut rng, 15, 18, -1.0, 1.0);
+        let (abuf, alay) = strided_copy(&a2, 2);
+        plan.set_a_view(&MatRef::new(&abuf, alay)).unwrap();
+        assert_eq!(plan.execute().unwrap(), oracle(prec, &a2, &b), "{prec:?} set_a_view");
+    }
+}
+
+#[test]
+fn strided_batch_matches_vec_batch_across_threads_and_pools() {
+    // the cublasGemmStridedBatched shape: one contiguous buffer per
+    // operand must produce the same bits as the Vec<Matrix> batch and
+    // the per-entry scalar oracles, at every worker count and pool mode
+    let _g = lock_mode();
+    let ambient = engine::pool_mode();
+    let mut rng = Rng::new(123);
+    let (n, count) = (16usize, 6usize);
+    let a: Vec<Matrix> = (0..count).map(|_| uniform_matrix(&mut rng, n, n, -1.0, 1.0)).collect();
+    let b: Vec<Matrix> = (0..count).map(|_| uniform_matrix(&mut rng, n, n, -1.0, 1.0)).collect();
+    let (abuf, bbuf) = (contiguous(&a), contiguous(&b));
+    let lay = MatLayout::new(n, n);
+    for &prec in &[
+        Precision::F32,
+        Precision::Mixed,
+        Precision::F16,
+        Precision::Refined(RefineMode::RefineA),
+        Precision::Refined(RefineMode::RefineAB),
+    ] {
+        for pm in [PoolMode::Scoped, PoolMode::Persistent] {
+            engine::set_pool_mode(pm);
+            for &t in THREADS {
+                let plan = GemmDesc::any_shape().precision(prec).threads(t).build().unwrap();
+                let sa = StridedBatch::new(&abuf, lay, n * n, count);
+                let sb = StridedBatch::new(&bbuf, lay, n * n, count);
+                let strided = plan.execute_strided_batched(&sa, &sb).unwrap();
+                assert_eq!(
+                    strided,
+                    plan.execute_batched(&a, &b).unwrap(),
+                    "{prec:?} {pm:?} t={t}"
+                );
+                for i in 0..count {
+                    assert_eq!(strided[i], oracle(prec, &a[i], &b[i]), "{prec:?} entry {i}");
+                }
+            }
+        }
+    }
+    engine::set_pool_mode(ambient);
+}
+
+#[test]
+fn strided_batch_padding_broadcast_and_ops() {
+    let mut rng = Rng::new(124);
+    let n = 8usize;
+    let a: Vec<Matrix> = (0..3).map(|_| uniform_matrix(&mut rng, n, n, -1.0, 1.0)).collect();
+    // batch_stride > entry footprint: NaN inter-entry padding is never
+    // read
+    let stride = n * n + 7;
+    let mut abuf = vec![f32::NAN; 2 * stride + n * n];
+    for (i, m) in a.iter().enumerate() {
+        abuf[i * stride..i * stride + n * n].copy_from_slice(m.as_slice());
+    }
+    let sa = StridedBatch::new(&abuf, MatLayout::new(n, n), stride, 3);
+    // batch_stride == 0 broadcasts one stored B across every entry (the
+    // cublasGemmStridedBatched strideB = 0 idiom)
+    let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+    let sb = StridedBatch::new(b.as_slice(), MatLayout::new(n, n), 0, 3);
+    let plan = GemmDesc::any_shape().build().unwrap();
+    let got = plan.execute_strided_batched(&sa, &sb).unwrap();
+    for i in 0..3 {
+        assert_eq!(got[i], mixed_gemm_scalar(&a[i], &b, None, 1.0, 0.0), "entry {i}");
+    }
+    // descriptor op over a strided batch: entries stored as Bᵀ, op_b = T
+    let bt = b.transpose();
+    let sbt = StridedBatch::new(bt.as_slice(), MatLayout::new(n, n), 0, 3);
+    let tplan = GemmDesc::any_shape().op_b(Op::T).build().unwrap();
+    assert_eq!(tplan.execute_strided_batched(&sa, &sbt).unwrap(), got);
+}
+
+#[test]
+fn batched_views_equal_owned_batches_bitwise() {
+    // the engine lane's exact call shape: execute_batched_views over
+    // borrowed views == execute_batched over the owned batch
+    let mut rng = Rng::new(126);
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    for &(m, k, n) in &[(16, 16, 16), (5, 7, 3), (24, 8, 24)] {
+        let (x, y) = pair(&mut rng, m, k, n);
+        a.push(x);
+        b.push(y);
+    }
+    for &prec in &[Precision::Mixed, Precision::Refined(RefineMode::RefineAB)] {
+        let plan = GemmDesc::any_shape().precision(prec).build().unwrap();
+        let av: Vec<MatRef<'_>> = a.iter().map(Matrix::view).collect();
+        let bv: Vec<MatRef<'_>> = b.iter().map(Matrix::view).collect();
+        assert_eq!(
+            plan.execute_batched_views(&av, &bv).unwrap(),
+            plan.execute_batched(&a, &b).unwrap(),
+            "{prec:?}"
+        );
+    }
+}
+
+#[test]
+fn op_descriptors_reject_wrong_stored_shapes() {
+    // op_a = T wants the stored (k, m) shape, and says so in the error
+    let mut p = GemmDesc::new(4, 5, 3).op_a(Op::T).build().unwrap();
+    assert_eq!(
+        p.set_a(&Matrix::zeros(4, 5)).err().unwrap(),
+        PlanError::OperandShape { side: "A", want: (5, 4), got: (4, 5) }
+    );
+    assert!(p.set_a(&Matrix::zeros(5, 4)).is_ok());
+    // op_b = T wants stored (n, k)
+    let mut p = GemmDesc::new(4, 5, 3).op_b(Op::T).build().unwrap();
+    assert_eq!(
+        p.set_b(&Matrix::zeros(5, 3)).err().unwrap(),
+        PlanError::OperandShape { side: "B", want: (3, 5), got: (5, 3) }
+    );
+    assert!(p.set_b(&Matrix::zeros(3, 5)).is_ok());
+    // plan() inner-dim precheck honours the ops: consumed A is 4x5,
+    // consumed B is 6x3
+    assert_eq!(
+        GemmDesc::new(4, 5, 3)
+            .op_a(Op::T)
+            .op_b(Op::T)
+            .plan(&Matrix::zeros(5, 4), &Matrix::zeros(3, 6))
+            .err()
+            .unwrap(),
+        PlanError::InnerDim { a_cols: 5, b_rows: 6 }
+    );
+    // pinned batched entries are validated in stored form too
+    let plan = GemmDesc::new(2, 2, 2).op_a(Op::T).build().unwrap();
+    let good = vec![Matrix::zeros(2, 2)];
+    let bad = vec![Matrix::zeros(2, 3)];
+    assert!(plan.execute_batched(&good, &good).is_ok());
+    assert_eq!(
+        plan.execute_batched(&bad, &good).err().unwrap(),
+        PlanError::BatchEntry { index: 0, a: (2, 3), b: (2, 2) }
+    );
 }
 
 #[test]
