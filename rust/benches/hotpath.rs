@@ -390,7 +390,11 @@ fn l3_benches(manifest: Manifest, rng: &mut Rng) {
     let r = bench("l3/batcher_push_flush_1024", 100, || {
         let mut b = Batcher::new(
             16,
-            BatcherConfig { max_batch: 1024, max_wait: Duration::from_secs(1) },
+            BatcherConfig {
+                max_batch: 1024,
+                max_wait: Duration::from_secs(1),
+                ..Default::default()
+            },
         );
         for i in 0..1024u64 {
             b.push(GemmRequest::new(i, Matrix::eye(16), Matrix::eye(16)));
@@ -405,7 +409,11 @@ fn l3_benches(manifest: Manifest, rng: &mut Rng) {
     let r = bench("l3/batcher_flush_buckets_3x256", 100, || {
         let mut b = Batcher::new(
             16,
-            BatcherConfig { max_batch: 1024, max_wait: Duration::from_secs(1) },
+            BatcherConfig {
+                max_batch: 1024,
+                max_wait: Duration::from_secs(1),
+                ..Default::default()
+            },
         );
         for i in 0..768u64 {
             let n = [8usize, 16, 32][(i % 3) as usize];

@@ -25,7 +25,11 @@ fn main() -> anyhow::Result<()> {
     let rate: f64 = std::env::var("E2E_RATE").ok().and_then(|s| s.parse().ok()).unwrap_or(20_000.0);
 
     let coord = Coordinator::start(CoordinatorConfig {
-        batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_millis(1) },
+        batcher: BatcherConfig {
+            max_batch: 1024,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
         ..Default::default()
     })?;
 

@@ -29,7 +29,11 @@ fn main() -> anyhow::Result<()> {
     let (ops, fields) = spectral_element_workload(&mut rng, mix);
 
     let coord = Coordinator::start(CoordinatorConfig {
-        batcher: BatcherConfig { max_batch: 1024, max_wait: Duration::from_millis(1) },
+        batcher: BatcherConfig {
+            max_batch: 1024,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
         ..Default::default()
     })?;
 

@@ -2,9 +2,10 @@
 //! equivalent of the paper's hand-written batched WMMA kernel, §IV-B).
 //!
 //! Requests accumulate in one FIFO queue; a flush happens when the queue
-//! reaches the largest batched artifact's capacity or the oldest request
-//! has waited `max_wait`.  Two flush flavours serve the two execution
-//! lanes:
+//! reaches the largest batched artifact's capacity, the oldest request
+//! has waited `max_wait`, or the most urgent queued deadline comes
+//! within `deadline_slack` of now ([`FlushTrigger`] names which).  Two
+//! flush flavours serve the two execution lanes:
 //!
 //! * [`Batcher::flush`] — the **artifact lane**: drains the bucket of the
 //!   oldest request's shape and pads it with zero matrices up to the
@@ -26,6 +27,12 @@
 //!   feeding the service's `engine_view_bytes` metric so the win stays
 //!   observable.
 //!
+//! Overload safety hooks: [`Batcher::shed_expired`] removes entries
+//! whose deadline already passed (the dispatcher replies
+//! `DeadlineExceeded` for each), and [`Batcher::drain_ids`] empties the
+//! queue on shutdown so every queued request can be answered
+//! `ShuttingDown` instead of having its reply channel dropped.
+//!
 //! The batcher accepts any *square* request; `tile` names the primary
 //! edge the artifact lane was compiled for (the router only routes that
 //! edge to the batcher today, other edges ride the engine lane).
@@ -45,12 +52,35 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// Flush when the oldest queued request is older than this.
     pub max_wait: Duration,
+    /// Flush early when the most urgent queued deadline is within this
+    /// margin of now — the headroom the flush + execution needs to land
+    /// the response before the client's deadline.  Entries without a
+    /// deadline never trigger this.
+    pub deadline_slack: Duration,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 1024, max_wait: Duration::from_millis(2) }
+        BatcherConfig {
+            max_batch: 1024,
+            max_wait: Duration::from_millis(2),
+            deadline_slack: Duration::from_millis(1),
+        }
     }
+}
+
+/// Why a flush fired (capacity, deadline urgency, or the age timer) —
+/// deadline-triggered flushes are the "flush early" events the metrics
+/// report per lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushTrigger {
+    /// The queue reached `max_batch`.
+    Capacity,
+    /// The oldest entry aged past `max_wait`.
+    Age,
+    /// A queued deadline came within `deadline_slack` of now before
+    /// either other trigger fired.
+    Deadline,
 }
 
 /// One queued entry.
@@ -66,6 +96,10 @@ struct Pending {
     a: Matrix,
     b: Matrix,
     enqueued: Instant,
+    /// Completion deadline, if the request carries one.
+    deadline: Option<Instant>,
+    /// Test-only fault-injection marker (see `GemmRequest::poison`).
+    poison: bool,
 }
 
 /// A flushed batch ready for the batched artifact.
@@ -82,6 +116,9 @@ pub struct FlushedBatch {
     pub a: Vec<Matrix>,
     /// B-side matrices, padded likewise.
     pub b: Vec<Matrix>,
+    /// True if any entry is a test-only poison request (the worker
+    /// panics, exercising the catch_unwind isolation path).
+    pub poison: bool,
 }
 
 impl FlushedBatch {
@@ -108,11 +145,21 @@ pub struct ShapeBucket {
     pub enqueued: Vec<Instant>,
     pub a: Vec<Matrix>,
     pub b: Vec<Matrix>,
+    /// True if any entry is a test-only poison request.
+    pub poison: bool,
 }
 
 impl ShapeBucket {
     fn empty(n: usize, mode: RefineMode) -> ShapeBucket {
-        ShapeBucket { n, mode, ids: Vec::new(), enqueued: Vec::new(), a: Vec::new(), b: Vec::new() }
+        ShapeBucket {
+            n,
+            mode,
+            ids: Vec::new(),
+            enqueued: Vec::new(),
+            a: Vec::new(),
+            b: Vec::new(),
+            poison: false,
+        }
     }
 
     fn push(&mut self, p: Pending) {
@@ -120,6 +167,7 @@ impl ShapeBucket {
         self.enqueued.push(p.enqueued);
         self.a.push(p.a);
         self.b.push(p.b);
+        self.poison |= p.poison;
     }
 
     pub fn len(&self) -> usize {
@@ -194,22 +242,79 @@ impl Batcher {
             a: req.a,
             b: req.b,
             enqueued: Instant::now(),
+            deadline: req.deadline,
+            poison: req.poison,
         });
     }
 
-    /// Should the queue flush now?
-    pub fn should_flush(&self, now: Instant) -> bool {
+    /// Which trigger (if any) calls for a flush right now.  Capacity is
+    /// checked first; then the age timer; a deadline-urgency flush is
+    /// only attributed when it fires *before* either regular trigger
+    /// would (that is what makes it "early").
+    pub fn flush_due(&self, now: Instant) -> Option<FlushTrigger> {
         if self.queue.is_empty() {
-            return false;
+            return None;
         }
-        self.queue.len() >= self.cfg.max_batch
-            || now.duration_since(self.queue[0].enqueued) >= self.cfg.max_wait
+        if self.queue.len() >= self.cfg.max_batch {
+            return Some(FlushTrigger::Capacity);
+        }
+        if now.duration_since(self.queue[0].enqueued) >= self.cfg.max_wait {
+            return Some(FlushTrigger::Age);
+        }
+        let urgent = self
+            .queue
+            .iter()
+            .filter_map(|p| p.deadline)
+            .any(|d| d.saturating_duration_since(now) <= self.cfg.deadline_slack);
+        urgent.then_some(FlushTrigger::Deadline)
     }
 
-    /// Time until the age-based flush fires (None if queue is empty).
+    /// Should the queue flush now?  (Any-trigger view of [`Batcher::flush_due`].)
+    pub fn should_flush(&self, now: Instant) -> bool {
+        self.flush_due(now).is_some()
+    }
+
+    /// Time until the next timer-driven flush fires — the sooner of the
+    /// age-based timer and the most urgent deadline's slack point (None
+    /// if the queue is empty).
     pub fn time_to_flush(&self, now: Instant) -> Option<Duration> {
         let oldest = self.queue.first()?.enqueued;
-        Some(self.cfg.max_wait.saturating_sub(now.duration_since(oldest)))
+        let age_based = self.cfg.max_wait.saturating_sub(now.duration_since(oldest));
+        let deadline_based = self
+            .queue
+            .iter()
+            .filter_map(|p| p.deadline)
+            .min()
+            .map(|d| d.saturating_duration_since(now).saturating_sub(self.cfg.deadline_slack));
+        Some(match deadline_based {
+            Some(db) => age_based.min(db),
+            None => age_based,
+        })
+    }
+
+    /// Remove every queued entry whose deadline has already passed and
+    /// return their ids, FIFO order — the dispatcher answers each with
+    /// `CoordinatorError::DeadlineExceeded` instead of executing work
+    /// the client has stopped waiting for.
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<RequestId> {
+        let mut shed = Vec::new();
+        self.queue.retain(|p| {
+            if p.deadline.is_some_and(|d| now >= d) {
+                shed.push(p.id);
+                false
+            } else {
+                true
+            }
+        });
+        shed
+    }
+
+    /// Empty the queue entirely and return all queued ids, FIFO order —
+    /// the shutdown path, where every queued request is answered
+    /// `CoordinatorError::ShuttingDown` rather than having its reply
+    /// channel dropped.
+    pub fn drain_ids(&mut self) -> Vec<RequestId> {
+        self.queue.drain(..).map(|p| p.id).collect()
     }
 
     /// Drain up to `max_batch` entries of the `(n, mode)` bucket,
@@ -240,12 +345,12 @@ impl Batcher {
         let (n, mode) = self.queue.first().map(|p| (p.n, p.mode))?;
         let bucket = self.drain_bucket(n, mode);
         let padded = pad_to(bucket.len()).max(bucket.len());
-        let ShapeBucket { n, ids, enqueued, mut a, mut b, .. } = bucket;
+        let ShapeBucket { n, ids, enqueued, mut a, mut b, poison, .. } = bucket;
         while a.len() < padded {
             a.push(Matrix::zeros(n, n));
             b.push(Matrix::zeros(n, n));
         }
-        Some(FlushedBatch { n, ids, enqueued, a, b })
+        Some(FlushedBatch { n, ids, enqueued, a, b, poison })
     }
 
     /// Engine-lane flush: drain the *whole* queue into per-`(edge, mode)`
@@ -285,7 +390,11 @@ mod tests {
     fn batcher(max_batch: usize, max_wait_ms: u64) -> Batcher {
         Batcher::new(
             16,
-            BatcherConfig { max_batch, max_wait: Duration::from_millis(max_wait_ms) },
+            BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(max_wait_ms),
+                ..Default::default()
+            },
         )
     }
 
@@ -298,6 +407,7 @@ mod tests {
         assert!(!b.should_flush(Instant::now()));
         b.push(req(3));
         assert!(b.should_flush(Instant::now()));
+        assert_eq!(b.flush_due(Instant::now()), Some(FlushTrigger::Capacity));
     }
 
     #[test]
@@ -305,6 +415,7 @@ mod tests {
         let mut b = batcher(1000, 0);
         b.push(req(0));
         assert!(b.should_flush(Instant::now()));
+        assert_eq!(b.flush_due(Instant::now()), Some(FlushTrigger::Age));
     }
 
     #[test]
@@ -312,6 +423,99 @@ mod tests {
         let b = batcher(1, 0);
         assert!(!b.should_flush(Instant::now()));
         assert!(b.time_to_flush(Instant::now()).is_none());
+        assert_eq!(b.flush_due(Instant::now()), None);
+    }
+
+    #[test]
+    fn deadline_triggers_early_flush() {
+        // deadline (now + 60s) is inside the generous slack (120s), so
+        // the flush fires immediately as Deadline — no sleeping, no
+        // expiry risk, and the age timer (1000s) is nowhere near firing
+        let mut b = Batcher::new(
+            16,
+            BatcherConfig {
+                max_batch: 1000,
+                max_wait: Duration::from_secs(1000),
+                deadline_slack: Duration::from_secs(120),
+            },
+        );
+        b.push(req(0).with_deadline(Instant::now() + Duration::from_secs(60)));
+        assert_eq!(b.flush_due(Instant::now()), Some(FlushTrigger::Deadline));
+    }
+
+    #[test]
+    fn distant_deadline_does_not_trigger() {
+        let mut b = Batcher::new(
+            16,
+            BatcherConfig {
+                max_batch: 1000,
+                max_wait: Duration::from_secs(1000),
+                deadline_slack: Duration::from_millis(1),
+            },
+        );
+        b.push(req(0).with_deadline(Instant::now() + Duration::from_secs(3600)));
+        assert_eq!(b.flush_due(Instant::now()), None);
+    }
+
+    #[test]
+    fn time_to_flush_takes_deadline_minimum() {
+        let now = Instant::now();
+        let mut b = Batcher::new(
+            16,
+            BatcherConfig {
+                max_batch: 1000,
+                max_wait: Duration::from_secs(1000),
+                deadline_slack: Duration::from_secs(1),
+            },
+        );
+        b.push(req(0).with_deadline(now + Duration::from_secs(10)));
+        // slack point is ~9s out; the age timer is ~1000s out
+        let t = b.time_to_flush(Instant::now()).unwrap();
+        assert!(t <= Duration::from_secs(9), "time_to_flush {t:?}");
+    }
+
+    #[test]
+    fn shed_expired_removes_only_expired() {
+        let now = Instant::now();
+        let mut b = batcher(1000, 1000);
+        b.push(req(0).with_deadline(now - Duration::from_secs(1)));
+        b.push(req(1));
+        b.push(req(2).with_deadline(now + Duration::from_secs(3600)));
+        let shed = b.shed_expired(now);
+        assert_eq!(shed, vec![0]);
+        assert_eq!(b.queue_len(), 2);
+        // idempotent once the expired entries are gone
+        assert!(b.shed_expired(now).is_empty());
+    }
+
+    #[test]
+    fn drain_ids_empties_queue_in_fifo_order() {
+        let mut b = batcher(1000, 1000);
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        assert_eq!(b.drain_ids(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(b.queue_len(), 0);
+        assert!(b.drain_ids().is_empty());
+    }
+
+    #[test]
+    fn poison_marks_flushed_batch_and_bucket() {
+        let mut b = batcher(100, 0);
+        b.push(req(0));
+        b.push(req(1).with_poison());
+        let f = b.flush(|n| n).unwrap();
+        assert!(f.poison);
+        let mut b = batcher(100, 0);
+        b.push(req(0));
+        let f = b.flush(|n| n).unwrap();
+        assert!(!f.poison);
+        let mut b = batcher(100, 0);
+        b.push(req_n(0, 8));
+        b.push(req_n(1, 16).with_poison());
+        let buckets = b.flush_buckets();
+        assert!(!buckets[0].poison);
+        assert!(buckets[1].poison);
     }
 
     #[test]

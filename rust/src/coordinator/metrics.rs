@@ -1,8 +1,13 @@
 //! Service metrics: counters + latency accounting, lock-free on the hot
 //! path (atomics), with an explicit snapshot type for reporting.
+//!
+//! The overload-safety counters satisfy the accounting identity
+//! `requests == responses + shed + deadline_exceeded + errors` once the
+//! service drains: every admitted request resolves to exactly one of a
+//! response, a typed shed, a deadline shed, or a typed error reply.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
 use std::time::Duration;
 
 /// Shared metrics sink.
@@ -20,6 +25,11 @@ pub struct Metrics {
     flushes: AtomicU64,
     padded_slots: AtomicU64,
     errors: AtomicU64,
+    shed: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    max_queue_depth: AtomicU64,
+    flush_early_artifact: AtomicU64,
+    flush_early_engine: AtomicU64,
     /// end-to-end latencies in nanoseconds (guarded; sampled at response)
     latencies_ns: Mutex<Vec<u64>>,
 }
@@ -48,7 +58,21 @@ pub struct MetricsSnapshot {
     pub flushes: u64,
     pub padded_slots: u64,
     pub errors: u64,
+    /// Requests rejected at admission (bounded intake queue full).
+    pub shed: u64,
+    /// Requests shed because their deadline expired before execution.
+    pub deadline_exceeded: u64,
+    /// High-water mark of the intake queue depth (admitted, not yet
+    /// dispatched to a worker).
+    pub max_queue_depth: u64,
+    /// Artifact-lane flushes triggered early by an approaching deadline
+    /// (instead of capacity or the age timer).
+    pub flush_early_artifact: u64,
+    /// Engine-lane bucket flushes triggered early by an approaching
+    /// deadline.
+    pub flush_early_engine: u64,
     pub p50: Duration,
+    pub p95: Duration,
     pub p99: Duration,
     pub max: Duration,
 }
@@ -63,7 +87,10 @@ impl Metrics {
         if served_batched {
             self.batched.fetch_add(1, Ordering::Relaxed);
         }
-        self.latencies_ns.lock().unwrap().push(latency.as_nanos() as u64);
+        self.latencies_ns
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(latency.as_nanos() as u64);
     }
 
     pub fn on_direct(&self) {
@@ -97,8 +124,37 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Admission control rejected a request (intake queue at cap).
+    pub fn on_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was shed because its deadline expired before execution.
+    pub fn on_deadline_exceeded(&self) {
+        self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an observed intake queue depth; keeps the high-water mark.
+    pub fn observe_queue_depth(&self, depth: usize) {
+        self.max_queue_depth.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// An artifact-lane flush fired early because of a nearing deadline.
+    pub fn on_flush_early_artifact(&self) {
+        self.flush_early_artifact.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An engine-lane flush fired early because of a nearing deadline.
+    pub fn on_flush_early_engine(&self) {
+        self.flush_early_engine.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut lat = self.latencies_ns.lock().unwrap().clone();
+        let mut lat = self
+            .latencies_ns
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .clone();
         lat.sort_unstable();
         let pick = |p: f64| -> Duration {
             if lat.is_empty() {
@@ -120,7 +176,13 @@ impl Metrics {
             flushes: self.flushes.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            max_queue_depth: self.max_queue_depth.load(Ordering::Relaxed),
+            flush_early_artifact: self.flush_early_artifact.load(Ordering::Relaxed),
+            flush_early_engine: self.flush_early_engine.load(Ordering::Relaxed),
             p50: pick(0.50),
+            p95: pick(0.95),
             p99: pick(0.99),
             max: pick(1.0),
         }
@@ -133,7 +195,8 @@ impl MetricsSnapshot {
         format!(
             "req={} resp={} batched={} direct={} fallback={} engine_batched={} \
              engine_refined={} engine_flushes={} engine_view_bytes={} flushes={} pad={} err={} \
-             p50={:?} p99={:?} max={:?}",
+             shed={} deadline={} max_depth={} early_art={} early_eng={} \
+             p50={:?} p95={:?} p99={:?} max={:?}",
             self.requests,
             self.responses,
             self.batched,
@@ -146,7 +209,13 @@ impl MetricsSnapshot {
             self.flushes,
             self.padded_slots,
             self.errors,
+            self.shed,
+            self.deadline_exceeded,
+            self.max_queue_depth,
+            self.flush_early_artifact,
+            self.flush_early_engine,
             self.p50,
+            self.p95,
             self.p99,
             self.max
         )
@@ -179,6 +248,8 @@ mod tests {
         assert_eq!(s.engine_view_bytes, 128);
         assert_eq!(s.padded_slots, 3);
         assert_eq!(s.errors, 1);
+        assert_eq!(s.shed, 0);
+        assert_eq!(s.deadline_exceeded, 0);
         assert!(s.report().contains("engine_batched=5"));
         assert!(s.report().contains("engine_refined=2"));
         assert!(s.report().contains("engine_view_bytes=128"));
@@ -191,7 +262,8 @@ mod tests {
             m.on_response(Duration::from_millis(i), false);
         }
         let s = m.snapshot();
-        assert!(s.p50 <= s.p99);
+        assert!(s.p50 <= s.p95);
+        assert!(s.p95 <= s.p99);
         assert!(s.p99 <= s.max);
         assert_eq!(s.max, Duration::from_millis(100));
     }
@@ -200,6 +272,37 @@ mod tests {
     fn empty_latency_percentiles_zero() {
         let s = Metrics::default().snapshot();
         assert_eq!(s.p50, Duration::ZERO);
+        assert_eq!(s.p95, Duration::ZERO);
         assert!(!s.report().is_empty());
+    }
+
+    #[test]
+    fn overload_counters_accumulate() {
+        let m = Metrics::default();
+        m.on_shed();
+        m.on_shed();
+        m.on_deadline_exceeded();
+        m.observe_queue_depth(3);
+        m.observe_queue_depth(9);
+        m.observe_queue_depth(5);
+        m.on_flush_early_artifact();
+        m.on_flush_early_engine();
+        m.on_flush_early_engine();
+        let s = m.snapshot();
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.deadline_exceeded, 1);
+        assert_eq!(s.max_queue_depth, 9);
+        assert_eq!(s.flush_early_artifact, 1);
+        assert_eq!(s.flush_early_engine, 2);
+        assert!(s.report().contains("shed=2"));
+        assert!(s.report().contains("max_depth=9"));
+    }
+
+    #[test]
+    fn queue_depth_is_high_water_mark() {
+        let m = Metrics::default();
+        m.observe_queue_depth(7);
+        m.observe_queue_depth(2);
+        assert_eq!(m.snapshot().max_queue_depth, 7);
     }
 }

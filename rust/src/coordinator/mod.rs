@@ -23,6 +23,15 @@
 //! same-shape buckets executed on the service's cached per-edge
 //! [`crate::gemm::plan::GemmPlan`]s, so they are batched and
 //! plan-amortized instead of falling back one request at a time.
+//!
+//! The service is **overload-safe**: admission is bounded
+//! ([`CoordinatorConfig::queue_cap`] → [`CoordinatorError::Shed`]),
+//! per-request deadlines are enforced and drive early flushes
+//! ([`GemmRequest::deadline`], [`BatcherConfig::deadline_slack`]),
+//! worker panics become typed [`CoordinatorError::Internal`] replies,
+//! and every submitted request receives exactly one reply — see
+//! `docs/SERVING.md` ([`crate::docs::serving`]) and the
+//! [`crate::workload::replay()`] harness that measures it.
 
 pub mod batcher;
 pub mod metrics;
@@ -31,9 +40,9 @@ pub mod request;
 pub mod router;
 pub mod service;
 
-pub use batcher::{Batcher, BatcherConfig, FlushedBatch, ShapeBucket};
+pub use batcher::{Batcher, BatcherConfig, FlushTrigger, FlushedBatch, ShapeBucket};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use policy::{PolicyConfig, PrecisionPolicy};
-pub use request::{GemmRequest, GemmResponse, RequestId};
+pub use request::{CoordinatorError, CoordinatorResult, GemmRequest, GemmResponse, RequestId};
 pub use router::{Route, Router};
 pub use service::{Coordinator, CoordinatorConfig};

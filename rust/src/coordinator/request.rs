@@ -1,12 +1,85 @@
-//! Request/response types of the GEMM service.
+//! Request/response types of the GEMM service, and the typed errors a
+//! request can come back with.
+//!
+//! Every submitted request receives **exactly one** reply on its channel:
+//! either a [`GemmResponse`] or a [`CoordinatorError`] naming why the
+//! service did not (or could not) serve it.  The error taxonomy is the
+//! overload-safety contract: admission control sheds with
+//! [`CoordinatorError::Shed`], expired deadlines shed with
+//! [`CoordinatorError::DeadlineExceeded`], worker panics are converted to
+//! [`CoordinatorError::Internal`] instead of dropping the reply channel,
+//! and shutdown delivers [`CoordinatorError::ShuttingDown`] to everything
+//! still queued.  See `docs/SERVING.md` ([`crate::docs::serving`]) for
+//! the full semantics table.
 
-use std::time::Duration;
+use std::fmt;
+use std::time::{Duration, Instant};
 
 use crate::gemm::Matrix;
 use crate::precision::RefineMode;
 
 /// Monotonic request identifier.
 pub type RequestId = u64;
+
+/// Why the coordinator did not return a [`GemmResponse`].
+///
+/// Every variant is a *delivered* reply — the service never answers a
+/// request by dropping its channel.  Cheap to clone (batch-level
+/// failures fan one error out to every request that rode the batch).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CoordinatorError {
+    /// Admission control rejected the request immediately: the bounded
+    /// intake queue was already holding `queue_depth` requests (the
+    /// configured cap).  The request was never enqueued; retry later or
+    /// shed load upstream.
+    Shed {
+        /// Queue depth observed at rejection time (== the configured cap).
+        queue_depth: usize,
+    },
+    /// The request's [`GemmRequest::deadline`] expired before execution
+    /// started (on arrival at the dispatcher or while waiting in a
+    /// batcher queue), so the service shed it instead of doing work whose
+    /// result the client no longer wants.  Also returned by
+    /// [`crate::coordinator::Coordinator::gemm_deadline`] when the reply
+    /// does not arrive within the caller's timeout.
+    DeadlineExceeded,
+    /// A worker thread panicked (or an internal invariant failed) while
+    /// serving the request; the panic was caught and converted into this
+    /// reply so the client never hangs.  The payload is the panic/invariant
+    /// message.
+    Internal(String),
+    /// Execution failed in the artifact/executor layer (e.g. a PJRT run
+    /// error, or no batched artifact large enough for a flush).
+    Exec(String),
+    /// The service began shutting down before the request reached a
+    /// worker; it was not served.
+    ShuttingDown,
+    /// The dispatcher is gone (reply channel disconnected) — the service
+    /// was shut down or its thread died.  Mapped from a bare
+    /// `RecvError` by the blocking conveniences so callers always see a
+    /// typed error.
+    ServiceDown,
+}
+
+impl fmt::Display for CoordinatorError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CoordinatorError::Shed { queue_depth } => {
+                write!(f, "shed: intake queue full ({queue_depth} requests queued)")
+            }
+            CoordinatorError::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
+            CoordinatorError::Internal(msg) => write!(f, "internal service error: {msg}"),
+            CoordinatorError::Exec(msg) => write!(f, "execution failed: {msg}"),
+            CoordinatorError::ShuttingDown => write!(f, "service shutting down"),
+            CoordinatorError::ServiceDown => write!(f, "service down (dispatcher gone)"),
+        }
+    }
+}
+
+impl std::error::Error for CoordinatorError {}
+
+/// What a submitted request resolves to: a response or a typed error.
+pub type CoordinatorResult = Result<GemmResponse, CoordinatorError>;
 
 /// A GEMM request: C = A x B on the emulated Tensor Cores.
 #[derive(Clone, Debug)]
@@ -21,11 +94,32 @@ pub struct GemmRequest {
     /// Magnitude hint for the policy's error model: entries are in
     /// U[-scale, scale] (defaults to 1.0, the paper's protocol).
     pub scale: f32,
+    /// Optional completion deadline.  The dispatcher sheds the request
+    /// with [`CoordinatorError::DeadlineExceeded`] instead of executing
+    /// it once this instant passes, and the batchers flush a queue early
+    /// when its most urgent entry nears its deadline (see
+    /// [`crate::coordinator::BatcherConfig::deadline_slack`]).
+    pub deadline: Option<Instant>,
+    /// Test-only fault injection: a poisoned request panics the worker
+    /// that picks it up, exercising the catch_unwind -> typed
+    /// [`CoordinatorError::Internal`] isolation path.  Never set this in
+    /// real traffic.
+    #[doc(hidden)]
+    pub poison: bool,
 }
 
 impl GemmRequest {
     pub fn new(id: RequestId, a: Matrix, b: Matrix) -> GemmRequest {
-        GemmRequest { id, a, b, mode: None, error_budget: None, scale: 1.0 }
+        GemmRequest {
+            id,
+            a,
+            b,
+            mode: None,
+            error_budget: None,
+            scale: 1.0,
+            deadline: None,
+            poison: false,
+        }
     }
 
     pub fn with_mode(mut self, mode: RefineMode) -> Self {
@@ -40,6 +134,26 @@ impl GemmRequest {
 
     pub fn with_scale(mut self, scale: f32) -> Self {
         self.scale = scale;
+        self
+    }
+
+    /// Attach an absolute completion deadline (tests inject explicit
+    /// [`Instant`]s; services typically pass `Instant::now() + slo`).
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Convenience: deadline = now + `budget`.
+    pub fn with_deadline_in(self, budget: Duration) -> Self {
+        self.with_deadline(Instant::now() + budget)
+    }
+
+    /// Test-only: mark this request so the worker serving it panics (the
+    /// fault-injection probe behind the reply-totality tests).
+    #[doc(hidden)]
+    pub fn with_poison(mut self) -> Self {
+        self.poison = true;
         self
     }
 
@@ -98,12 +212,48 @@ mod tests {
 
     #[test]
     fn builder_chains() {
+        let deadline = Instant::now();
         let r = GemmRequest::new(3, Matrix::zeros(4, 4), Matrix::zeros(4, 4))
             .with_mode(RefineMode::RefineAB)
             .with_error_budget(1e-3)
-            .with_scale(16.0);
+            .with_scale(16.0)
+            .with_deadline(deadline);
         assert_eq!(r.mode, Some(RefineMode::RefineAB));
         assert_eq!(r.error_budget, Some(1e-3));
         assert_eq!(r.scale, 16.0);
+        assert_eq!(r.deadline, Some(deadline));
+        assert!(!r.poison);
+    }
+
+    #[test]
+    fn deadline_defaults_absent() {
+        let r = GemmRequest::new(4, Matrix::zeros(4, 4), Matrix::zeros(4, 4));
+        assert_eq!(r.deadline, None);
+        let r = r.with_deadline_in(Duration::from_secs(60));
+        assert!(r.deadline.expect("deadline set") > Instant::now());
+    }
+
+    #[test]
+    fn poison_builder_marks_request() {
+        let r = GemmRequest::new(5, Matrix::zeros(4, 4), Matrix::zeros(4, 4)).with_poison();
+        assert!(r.poison);
+    }
+
+    #[test]
+    fn error_display_is_informative() {
+        assert!(CoordinatorError::Shed { queue_depth: 7 }.to_string().contains('7'));
+        assert!(CoordinatorError::DeadlineExceeded.to_string().contains("deadline"));
+        assert!(CoordinatorError::Internal("boom".into()).to_string().contains("boom"));
+        assert!(CoordinatorError::Exec("pjrt".into()).to_string().contains("pjrt"));
+        assert!(CoordinatorError::ShuttingDown.to_string().contains("shutting down"));
+        assert!(CoordinatorError::ServiceDown.to_string().contains("down"));
+    }
+
+    #[test]
+    fn error_is_std_error() {
+        // anyhow interop (examples use `coord.gemm_with(...)?` in
+        // anyhow::Result mains) requires the std Error impl
+        fn assert_err<E: std::error::Error + Send + Sync + 'static>() {}
+        assert_err::<CoordinatorError>();
     }
 }

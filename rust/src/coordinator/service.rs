@@ -38,9 +38,36 @@
 //!   (non-square only, now that refined square traffic rides the engine
 //!   lane) runs one-shot through the cuBLAS-style handle, which itself
 //!   executes as a plan.
+//!
+//! # Overload safety
+//!
+//! The service is overload-safe end to end (`docs/SERVING.md`,
+//! [`crate::docs::serving`]):
+//!
+//! * **Admission control** — intake is bounded by
+//!   [`CoordinatorConfig::queue_cap`]: a submit against a full queue is
+//!   rejected *immediately* with [`CoordinatorError::Shed`] on the reply
+//!   channel (the dispatcher never sees it), so queue depth — and
+//!   therefore queueing delay — is bounded under any offered load.
+//! * **Deadlines** — a request carrying [`GemmRequest::deadline`] is
+//!   shed with [`CoordinatorError::DeadlineExceeded`] if it expires
+//!   before execution (checked at dispatch and while queued in either
+//!   batcher), and both batchers flush early when their most urgent
+//!   deadline comes within [`BatcherConfig::deadline_slack`] of now.
+//! * **Fault isolation** — every worker runs its compute under
+//!   `catch_unwind`; a panic becomes a typed
+//!   [`CoordinatorError::Internal`] reply instead of a dropped channel.
+//!   The dispatcher itself has no panic path per request: plan-build
+//!   failures in the engine lane fan out as typed errors to the bucket.
+//! * **Reply totality** — every submitted request receives exactly one
+//!   reply.  Shutdown delivers [`CoordinatorError::ShuttingDown`] to
+//!   everything still queued (batcher entries and channel backlog);
+//!   in-flight workers complete normally.
 
+use std::any::Any;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -54,10 +81,12 @@ use crate::interfaces::{CublasHandle, GemmAlgo, MathMode};
 use crate::precision::RefineMode;
 use crate::runtime::{ExecutorHandle, ExecutorServer, Manifest, TensorData};
 
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::{Batcher, BatcherConfig, FlushTrigger};
 use super::metrics::Metrics;
 use super::policy::{PolicyConfig, PrecisionPolicy};
-use super::request::{GemmRequest, GemmResponse, RequestId, ServedBy};
+use super::request::{
+    CoordinatorError, CoordinatorResult, GemmRequest, GemmResponse, RequestId, ServedBy,
+};
 use super::router::{Route, Router};
 
 /// Coordinator tuning.
@@ -72,6 +101,12 @@ pub struct CoordinatorConfig {
     /// one shared engine, 2% large requests drove batch p50 from ~80 ms
     /// to ~600 ms).  Costs one extra engine (compiled-executable cache).
     pub dedicated_direct_lane: bool,
+    /// Admission-control bound: the maximum number of requests admitted
+    /// but not yet handed to a worker (intake channel + batcher queues).
+    /// A submit against a full queue is rejected immediately with
+    /// [`CoordinatorError::Shed`] — the overload valve that keeps
+    /// queueing delay bounded instead of growing without limit.
+    pub queue_cap: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -81,6 +116,7 @@ impl Default for CoordinatorConfig {
             batcher: BatcherConfig::default(),
             policy: PolicyConfig::default(),
             dedicated_direct_lane: true,
+            queue_cap: 4096,
         }
     }
 }
@@ -88,7 +124,7 @@ impl Default for CoordinatorConfig {
 struct Submission {
     req: GemmRequest,
     submitted: Instant,
-    reply: Sender<Result<GemmResponse>>,
+    reply: Sender<CoordinatorResult>,
 }
 
 enum Event {
@@ -102,6 +138,10 @@ pub struct Coordinator {
     dispatcher: Option<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    /// Admitted-but-not-yet-worked requests (shared with the dispatcher,
+    /// which decrements as work leaves the queues).
+    depth: Arc<AtomicUsize>,
+    queue_cap: usize,
     // keep the executor threads alive for the service's lifetime
     _executor: ExecutorServer,
     _direct_executor: Option<ExecutorServer>,
@@ -125,51 +165,94 @@ impl Coordinator {
         } else {
             None
         };
-        let direct_handle = direct_executor.as_ref().map(|e| e.handle()).unwrap_or_else(|| handle.clone());
+        let direct_handle =
+            direct_executor.as_ref().map(|e| e.handle()).unwrap_or_else(|| handle.clone());
         let metrics = Arc::new(Metrics::default());
+        let depth = Arc::new(AtomicUsize::new(0));
         let (tx, rx) = channel::<Event>();
         let m2 = metrics.clone();
+        let d2 = depth.clone();
         let dispatcher = std::thread::Builder::new()
             .name("coordinator".into())
-            .spawn(move || dispatcher_loop(cfg, manifest, handle, direct_handle, m2, rx))
+            .spawn(move || dispatcher_loop(cfg, manifest, handle, direct_handle, m2, d2, rx))
             .context("spawning dispatcher")?;
         Ok(Coordinator {
             events: tx,
             dispatcher: Some(dispatcher),
             metrics,
             next_id: AtomicU64::new(1),
+            depth,
+            queue_cap: cfg.queue_cap,
             _executor: executor,
             _direct_executor: direct_executor,
         })
     }
 
-    /// Submit a request; returns the response channel.
-    pub fn submit(&self, mut req: GemmRequest) -> Receiver<Result<GemmResponse>> {
+    /// Submit a request; returns the response channel.  Every submission
+    /// resolves to exactly one [`CoordinatorResult`] on that channel:
+    /// admission rejections ([`CoordinatorError::Shed`]) and
+    /// shutdown rejections ([`CoordinatorError::ShuttingDown`]) are
+    /// delivered immediately, before the request ever reaches the
+    /// dispatcher.
+    pub fn submit(&self, mut req: GemmRequest) -> Receiver<CoordinatorResult> {
         if req.id == 0 {
             req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         }
         self.metrics.on_request();
         let (tx, rx) = channel();
-        let sub = Submission { req, submitted: Instant::now(), reply: tx };
-        // a failed send means shutdown: the receiver will see a closed
-        // channel and surface an error on recv
-        let _ = self.events.send(Event::Submit(sub));
+        // admission control: reserve a queue slot or shed right here
+        let prev = self.depth.fetch_add(1, Ordering::Relaxed);
+        if prev >= self.queue_cap {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            self.metrics.on_shed();
+            let _ = tx.send(Err(CoordinatorError::Shed { queue_depth: prev }));
+            return rx;
+        }
+        self.metrics.observe_queue_depth(prev + 1);
+        let sub = Submission { req, submitted: Instant::now(), reply: tx.clone() };
+        if self.events.send(Event::Submit(sub)).is_err() {
+            // dispatcher is gone: answer here instead of hanging the client
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            self.metrics.on_error();
+            let _ = tx.send(Err(CoordinatorError::ShuttingDown));
+        }
         rx
     }
 
     /// Blocking convenience: submit and wait.
-    pub fn gemm(&self, a: Matrix, b: Matrix) -> Result<GemmResponse> {
-        let req = GemmRequest::new(0, a, b);
-        self.submit(req).recv().context("coordinator gone")?
+    pub fn gemm(&self, a: Matrix, b: Matrix) -> CoordinatorResult {
+        self.gemm_with(GemmRequest::new(0, a, b))
     }
 
-    /// Blocking convenience with full request control.
-    pub fn gemm_with(&self, req: GemmRequest) -> Result<GemmResponse> {
-        self.submit(req).recv().context("coordinator gone")?
+    /// Blocking convenience with full request control.  A disconnected
+    /// reply channel (dispatcher died or service shut down) maps to
+    /// [`CoordinatorError::ServiceDown`] instead of blocking forever.
+    pub fn gemm_with(&self, req: GemmRequest) -> CoordinatorResult {
+        self.submit(req).recv().unwrap_or(Err(CoordinatorError::ServiceDown))
+    }
+
+    /// Blocking convenience with a reply timeout: waits at most
+    /// `timeout` for the response, mapping a timeout to
+    /// [`CoordinatorError::DeadlineExceeded`] and a disconnected channel
+    /// to [`CoordinatorError::ServiceDown`].  (This bounds the *wait*;
+    /// to have the service itself shed the work when it can no longer
+    /// finish in time, also set [`GemmRequest::deadline`].)
+    pub fn gemm_deadline(&self, req: GemmRequest, timeout: Duration) -> CoordinatorResult {
+        match self.submit(req).recv_timeout(timeout) {
+            Ok(result) => result,
+            Err(RecvTimeoutError::Timeout) => Err(CoordinatorError::DeadlineExceeded),
+            Err(RecvTimeoutError::Disconnected) => Err(CoordinatorError::ServiceDown),
+        }
     }
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Current admitted-but-not-yet-worked queue depth (intake channel +
+    /// batcher queues).  Bounded by [`CoordinatorConfig::queue_cap`].
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
     }
 
     /// Pre-compile the artifacts the service will dispatch to (batched
@@ -197,7 +280,11 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Graceful shutdown: drains the queue, stops the threads.
+    /// Graceful shutdown: stops the dispatcher.  Work already handed to
+    /// a worker completes and its reply is delivered; everything still
+    /// queued (batcher entries, channel backlog) is answered
+    /// [`CoordinatorError::ShuttingDown`] — no reply channel is ever
+    /// dropped unanswered.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
@@ -217,7 +304,7 @@ impl Drop for Coordinator {
 }
 
 struct PendingReply {
-    reply: Sender<Result<GemmResponse>>,
+    reply: Sender<CoordinatorResult>,
     submitted: Instant,
 }
 
@@ -241,31 +328,60 @@ impl PlanCache {
     }
 
     /// The cached plan for the `(edge, mode)` bucket key (built on first
-    /// request).
-    fn for_bucket(&mut self, n: usize, mode: RefineMode) -> Arc<GemmPlan> {
-        self.plans
-            .entry((n, mode))
-            .or_insert_with(|| {
-                let precision = match mode {
-                    RefineMode::None => Precision::Mixed,
-                    refined => Precision::Refined(refined),
-                };
-                let plan = GemmDesc::square(n)
-                    .precision(precision)
-                    .build()
-                    .expect("square engine-lane plan descriptors are always valid");
-                Arc::new(plan)
-            })
-            .clone()
+    /// request).  A descriptor the planner rejects becomes a typed error
+    /// for the bucket's requests — never a dispatcher panic: the
+    /// dispatcher must outlive any single bad request.
+    fn for_bucket(
+        &mut self,
+        n: usize,
+        mode: RefineMode,
+    ) -> Result<Arc<GemmPlan>, CoordinatorError> {
+        if let Some(plan) = self.plans.get(&(n, mode)) {
+            return Ok(plan.clone());
+        }
+        let precision = match mode {
+            RefineMode::None => Precision::Mixed,
+            refined => Precision::Refined(refined),
+        };
+        let plan = GemmDesc::square(n).precision(precision).build().map_err(|e| {
+            CoordinatorError::Internal(format!("engine plan build failed (n={n}, {mode:?}): {e}"))
+        })?;
+        let plan = Arc::new(plan);
+        self.plans.insert((n, mode), plan.clone());
+        Ok(plan)
     }
 }
 
+/// Render a caught panic payload into the `Internal` error message.
+fn panic_message(payload: Box<dyn Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+/// Deliver a typed error reply, counting it under the matching metric
+/// (sheds and deadline sheds are not service errors).
+fn deliver_err(reply: &Sender<CoordinatorResult>, metrics: &Metrics, err: CoordinatorError) {
+    match err {
+        CoordinatorError::Shed { .. } => metrics.on_shed(),
+        CoordinatorError::DeadlineExceeded => metrics.on_deadline_exceeded(),
+        _ => metrics.on_error(),
+    }
+    let _ = reply.send(Err(err));
+}
+
+#[allow(clippy::too_many_arguments)]
 fn dispatcher_loop(
     cfg: CoordinatorConfig,
     manifest: Manifest,
     executor: ExecutorHandle,
     direct_executor: ExecutorHandle,
     metrics: Arc<Metrics>,
+    depth: Arc<AtomicUsize>,
     rx: Receiver<Event>,
 ) {
     let router = Router::new(manifest.clone(), cfg.tile, PrecisionPolicy::new(cfg.policy));
@@ -275,21 +391,30 @@ fn dispatcher_loop(
     let mut engine_batcher = Batcher::new(cfg.tile, cfg.batcher);
     let mut plans = PlanCache::new();
     let mut pending: HashMap<RequestId, PendingReply> = HashMap::new();
-    let mut shutting_down = false;
 
     loop {
-        // flush if due, then wait for the next event or the flush deadline
+        // shed expired deadlines first so they never ride a flush,
+        // then flush if due, then wait for the next event or timer
         let now = Instant::now();
-        if batcher.should_flush(now) {
-            flush_batch(&mut batcher, &manifest, &executor, &metrics, &mut pending);
+        for id in batcher.shed_expired(now).into_iter().chain(engine_batcher.shed_expired(now)) {
+            depth.fetch_sub(1, Ordering::Relaxed);
+            if let Some(p) = pending.remove(&id) {
+                deliver_err(&p.reply, &metrics, CoordinatorError::DeadlineExceeded);
+            }
+        }
+        if let Some(trigger) = batcher.flush_due(now) {
+            if trigger == FlushTrigger::Deadline {
+                metrics.on_flush_early_artifact();
+            }
+            flush_batch(&mut batcher, &manifest, &executor, &metrics, &depth, &mut pending);
             continue;
         }
-        if engine_batcher.should_flush(now) {
-            flush_engine_buckets(&mut engine_batcher, &mut plans, &metrics, &mut pending);
+        if let Some(trigger) = engine_batcher.flush_due(now) {
+            if trigger == FlushTrigger::Deadline {
+                metrics.on_flush_early_engine();
+            }
+            flush_engine_buckets(&mut engine_batcher, &mut plans, &metrics, &depth, &mut pending);
             continue;
-        }
-        if shutting_down && batcher.queue_len() == 0 && engine_batcher.queue_len() == 0 {
-            break;
         }
         let timeout = [batcher.time_to_flush(now), engine_batcher.time_to_flush(now)]
             .into_iter()
@@ -299,6 +424,12 @@ fn dispatcher_loop(
             .min(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
             Ok(Event::Submit(sub)) => {
+                if sub.req.deadline.is_some_and(|d| Instant::now() >= d) {
+                    // already expired on arrival: shed instead of executing
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    deliver_err(&sub.reply, &metrics, CoordinatorError::DeadlineExceeded);
+                    continue;
+                }
                 dispatch_one(
                     sub,
                     &router,
@@ -306,12 +437,48 @@ fn dispatcher_loop(
                     &mut engine_batcher,
                     &direct_executor,
                     &metrics,
+                    &depth,
                     &mut pending,
                 );
             }
-            Ok(Event::Shutdown) => shutting_down = true,
+            Ok(Event::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                shed_on_shutdown(
+                    &mut batcher,
+                    &mut engine_batcher,
+                    &rx,
+                    &metrics,
+                    &depth,
+                    &mut pending,
+                );
+                break;
+            }
             Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => shutting_down = true,
+        }
+    }
+}
+
+/// Shutdown: everything still queued — batcher entries and the channel
+/// backlog — is answered [`CoordinatorError::ShuttingDown`].  Work
+/// already handed to a worker is untouched (its reply arrives when the
+/// worker finishes).  After this, dropping `rx` cannot orphan anyone.
+fn shed_on_shutdown(
+    batcher: &mut Batcher,
+    engine_batcher: &mut Batcher,
+    rx: &Receiver<Event>,
+    metrics: &Arc<Metrics>,
+    depth: &Arc<AtomicUsize>,
+    pending: &mut HashMap<RequestId, PendingReply>,
+) {
+    for id in batcher.drain_ids().into_iter().chain(engine_batcher.drain_ids()) {
+        depth.fetch_sub(1, Ordering::Relaxed);
+        if let Some(p) = pending.remove(&id) {
+            deliver_err(&p.reply, metrics, CoordinatorError::ShuttingDown);
+        }
+    }
+    while let Ok(ev) = rx.try_recv() {
+        if let Event::Submit(sub) = ev {
+            depth.fetch_sub(1, Ordering::Relaxed);
+            deliver_err(&sub.reply, metrics, CoordinatorError::ShuttingDown);
         }
     }
 }
@@ -325,6 +492,7 @@ fn effective_batcher_cfg(cfg: CoordinatorConfig, manifest: &Manifest) -> Batcher
     BatcherConfig { max_batch: cfg.batcher.max_batch.min(cap), ..cfg.batcher }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn dispatch_one(
     sub: Submission,
     router: &Router,
@@ -332,6 +500,7 @@ fn dispatch_one(
     engine_batcher: &mut Batcher,
     executor: &ExecutorHandle,
     metrics: &Arc<Metrics>,
+    depth: &Arc<AtomicUsize>,
     pending: &mut HashMap<RequestId, PendingReply>,
 ) {
     match router.route(&sub.req) {
@@ -351,52 +520,74 @@ fn dispatch_one(
         }
         Route::Direct { artifact, mode } => {
             metrics.on_direct();
+            // the request leaves the queue for a worker: release its slot
+            depth.fetch_sub(1, Ordering::Relaxed);
             let executor = executor.clone();
             let metrics = metrics.clone();
             std::thread::spawn(move || {
                 let queued = sub.submitted.elapsed();
                 let t0 = Instant::now();
-                let result = executor
-                    .run(
-                        &artifact,
-                        vec![TensorData::from_matrix(&sub.req.a), TensorData::from_matrix(&sub.req.b)],
-                    )
-                    .and_then(TensorData::into_matrix)
-                    .map(|c| GemmResponse {
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    if sub.req.poison {
+                        panic!("poison request {} (test fault injection)", sub.req.id);
+                    }
+                    executor
+                        .run(
+                            &artifact,
+                            vec![
+                                TensorData::from_matrix(&sub.req.a),
+                                TensorData::from_matrix(&sub.req.b),
+                            ],
+                        )
+                        .and_then(TensorData::into_matrix)
+                }));
+                let result = match outcome {
+                    Ok(Ok(c)) => Ok(GemmResponse {
                         id: sub.req.id,
                         c,
                         mode,
                         served_by: ServedBy::TensorCore,
                         queued,
                         exec: t0.elapsed(),
-                    });
+                    }),
+                    Ok(Err(e)) => Err(CoordinatorError::Exec(format!("{e:#}"))),
+                    Err(p) => Err(CoordinatorError::Internal(panic_message(p))),
+                };
                 finish(result, &sub.reply, &metrics, sub.submitted, false);
             });
         }
         Route::CpuFallback { mode } => {
             metrics.on_fallback();
+            depth.fetch_sub(1, Ordering::Relaxed);
             let metrics = metrics.clone();
             std::thread::spawn(move || {
                 let queued = sub.submitted.elapsed();
                 let t0 = Instant::now();
-                let mut h = CublasHandle::new();
-                h.set_math_mode(MathMode::TensorOp);
-                let algo = match mode {
-                    RefineMode::None => GemmAlgo::Default,
-                    RefineMode::RefineA => GemmAlgo::RefinedTensorOpA,
-                    RefineMode::RefineAB => GemmAlgo::RefinedTensorOpAB,
-                };
-                let result = h
-                    .gemm_ex(Op::N, Op::N, &sub.req.a, &sub.req.b, None, 1.0, 0.0, algo)
-                    .map_err(|e| anyhow::anyhow!("cpu fallback: {e}"))
-                    .map(|c| GemmResponse {
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    if sub.req.poison {
+                        panic!("poison request {} (test fault injection)", sub.req.id);
+                    }
+                    let mut h = CublasHandle::new();
+                    h.set_math_mode(MathMode::TensorOp);
+                    let algo = match mode {
+                        RefineMode::None => GemmAlgo::Default,
+                        RefineMode::RefineA => GemmAlgo::RefinedTensorOpA,
+                        RefineMode::RefineAB => GemmAlgo::RefinedTensorOpAB,
+                    };
+                    h.gemm_ex(Op::N, Op::N, &sub.req.a, &sub.req.b, None, 1.0, 0.0, algo)
+                }));
+                let result = match outcome {
+                    Ok(Ok(c)) => Ok(GemmResponse {
                         id: sub.req.id,
                         c,
                         mode,
                         served_by: ServedBy::CpuFallback,
                         queued,
                         exec: t0.elapsed(),
-                    });
+                    }),
+                    Ok(Err(e)) => Err(CoordinatorError::Exec(format!("cpu fallback: {e}"))),
+                    Err(p) => Err(CoordinatorError::Internal(panic_message(p))),
+                };
                 finish(result, &sub.reply, &metrics, sub.submitted, false);
             });
         }
@@ -408,6 +599,7 @@ fn flush_batch(
     manifest: &Manifest,
     executor: &ExecutorHandle,
     metrics: &Arc<Metrics>,
+    depth: &Arc<AtomicUsize>,
     pending: &mut HashMap<RequestId, PendingReply>,
 ) {
     let tile = batcher.tile();
@@ -418,20 +610,34 @@ fn flush_batch(
             .unwrap_or(len)
     };
     let Some(flushed) = batcher.flush(pad_to) else { return };
+    // the flushed entries leave the queue (served or failed): free slots
+    depth.fetch_sub(flushed.real_len(), Ordering::Relaxed);
     // the artifact lane is compiled for `tile`-edge entries only; the
-    // router guarantees it, this catches any future caller that doesn't
-    assert_eq!(flushed.n, tile, "artifact lane flushed a non-tile bucket");
+    // router guarantees it — a mismatch is a typed error for the batch,
+    // never a dispatcher panic
+    if flushed.n != tile {
+        let err = CoordinatorError::Internal(format!(
+            "artifact lane flushed a non-tile bucket (n={}, tile={tile})",
+            flushed.n
+        ));
+        for id in &flushed.ids {
+            if let Some(p) = pending.remove(id) {
+                deliver_err(&p.reply, metrics, err.clone());
+            }
+        }
+        return;
+    }
     metrics.on_flush(flushed.real_len(), flushed.padded_len());
 
     let Some(meta) = manifest.batched_at_least(flushed.padded_len(), tile) else {
         // no artifact large enough even after padding — fail the batch
+        let err = CoordinatorError::Exec(format!(
+            "no batched artifact for {} requests",
+            flushed.padded_len()
+        ));
         for id in &flushed.ids {
             if let Some(p) = pending.remove(id) {
-                let _ = p.reply.send(Err(anyhow::anyhow!(
-                    "no batched artifact for {} requests",
-                    flushed.padded_len()
-                )));
-                metrics.on_error();
+                deliver_err(&p.reply, metrics, err.clone());
             }
         }
         return;
@@ -447,15 +653,21 @@ fn flush_batch(
         .collect();
     let a = flushed.a;
     let b = flushed.b;
+    let poison = flushed.poison;
     std::thread::spawn(move || {
         let t0 = Instant::now();
-        let result = TensorData::from_batch(&a)
-            .and_then(|ta| Ok((ta, TensorData::from_batch(&b)?)))
-            .and_then(|(ta, tb)| executor.run(&artifact, vec![ta, tb]))
-            .and_then(TensorData::into_batch);
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if poison {
+                panic!("poison batch (test fault injection)");
+            }
+            TensorData::from_batch(&a)
+                .and_then(|ta| Ok((ta, TensorData::from_batch(&b)?)))
+                .and_then(|(ta, tb)| executor.run(&artifact, vec![ta, tb]))
+                .and_then(TensorData::into_batch)
+        }));
         let exec = t0.elapsed();
-        match result {
-            Ok(outs) => {
+        let err = match outcome {
+            Ok(Ok(outs)) if outs.len() >= replies.len() => {
                 for (i, (id, enq, reply)) in replies.into_iter().enumerate() {
                     if let Some(p) = reply {
                         let resp = GemmResponse {
@@ -469,14 +681,19 @@ fn flush_batch(
                         finish(Ok(resp), &p.reply, &metrics, p.submitted, true);
                     }
                 }
+                return;
             }
-            Err(e) => {
-                for (_, _, reply) in replies {
-                    if let Some(p) = reply {
-                        let _ = p.reply.send(Err(anyhow::anyhow!("batch failed: {e:#}")));
-                        metrics.on_error();
-                    }
-                }
+            Ok(Ok(outs)) => CoordinatorError::Internal(format!(
+                "batched artifact returned {} outputs for {} requests",
+                outs.len(),
+                replies.len()
+            )),
+            Ok(Err(e)) => CoordinatorError::Exec(format!("batch failed: {e:#}")),
+            Err(p) => CoordinatorError::Internal(panic_message(p)),
+        };
+        for (_, _, reply) in replies {
+            if let Some(p) = reply {
+                deliver_err(&p.reply, &metrics, err.clone());
             }
         }
     });
@@ -498,11 +715,26 @@ fn flush_engine_buckets(
     batcher: &mut Batcher,
     plans: &mut PlanCache,
     metrics: &Arc<Metrics>,
+    depth: &Arc<AtomicUsize>,
     pending: &mut HashMap<RequestId, PendingReply>,
 ) {
     for bucket in batcher.flush_buckets() {
         let mode = bucket.mode;
-        let plan = plans.for_bucket(bucket.n, mode);
+        // the bucket's entries leave the queue now (served or failed)
+        depth.fetch_sub(bucket.len(), Ordering::Relaxed);
+        let plan = match plans.for_bucket(bucket.n, mode) {
+            Ok(plan) => plan,
+            Err(e) => {
+                // plan build failed: a typed error for this bucket only —
+                // the dispatcher (and every other bucket) carries on
+                for id in &bucket.ids {
+                    if let Some(p) = pending.remove(id) {
+                        deliver_err(&p.reply, metrics, e.clone());
+                    }
+                }
+                continue;
+            }
+        };
         metrics.on_engine_flush(bucket.len(), mode != RefineMode::None, bucket.view_bytes());
         let replies: Vec<(RequestId, Instant, Option<PendingReply>)> = bucket
             .ids
@@ -515,11 +747,16 @@ fn flush_engine_buckets(
             let t0 = Instant::now();
             // zero-copy gather: the views borrow the bucket's storage
             // for the duration of the batched execution
-            let (av, bv) = bucket.view_pairs();
-            let result = plan.execute_batched_views(&av, &bv);
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                if bucket.poison {
+                    panic!("poison bucket (test fault injection)");
+                }
+                let (av, bv) = bucket.view_pairs();
+                plan.execute_batched_views(&av, &bv)
+            }));
             let exec = t0.elapsed();
-            match result {
-                Ok(outs) => {
+            let err = match outcome {
+                Ok(Ok(outs)) if outs.len() >= replies.len() => {
                     // replies and outs are index-aligned by construction;
                     // move each output into its response (no copy)
                     for ((id, enq, reply), out) in replies.into_iter().zip(outs) {
@@ -535,14 +772,19 @@ fn flush_engine_buckets(
                             finish(Ok(resp), &p.reply, &metrics, p.submitted, false);
                         }
                     }
+                    return;
                 }
-                Err(e) => {
-                    for (_, _, reply) in replies {
-                        if let Some(p) = reply {
-                            let _ = p.reply.send(Err(anyhow::anyhow!("engine bucket failed: {e}")));
-                            metrics.on_error();
-                        }
-                    }
+                Ok(Ok(outs)) => CoordinatorError::Internal(format!(
+                    "engine bucket returned {} outputs for {} requests",
+                    outs.len(),
+                    replies.len()
+                )),
+                Ok(Err(e)) => CoordinatorError::Exec(format!("engine bucket failed: {e}")),
+                Err(p) => CoordinatorError::Internal(panic_message(p)),
+            };
+            for (_, _, reply) in replies {
+                if let Some(p) = reply {
+                    deliver_err(&p.reply, &metrics, err.clone());
                 }
             }
         });
@@ -550,8 +792,8 @@ fn flush_engine_buckets(
 }
 
 fn finish(
-    result: Result<GemmResponse>,
-    reply: &Sender<Result<GemmResponse>>,
+    result: CoordinatorResult,
+    reply: &Sender<CoordinatorResult>,
     metrics: &Arc<Metrics>,
     submitted: Instant,
     batched: bool,
@@ -561,9 +803,6 @@ fn finish(
             metrics.on_response(submitted.elapsed(), batched);
             let _ = reply.send(Ok(resp));
         }
-        Err(e) => {
-            metrics.on_error();
-            let _ = reply.send(Err(e));
-        }
+        Err(e) => deliver_err(reply, metrics, e),
     }
 }

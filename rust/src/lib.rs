@@ -83,6 +83,9 @@
 //!   migration table, with runnable before/after examples.
 //! * [`docs::benchmarks`] — the `BENCH_hotpath.json` schema, smoke vs
 //!   full runs, and the ROADMAP acceptance bar.
+//! * [`docs::serving`] — the coordinator's overload contract: admission
+//!   control, deadlines, typed shedding, reply-delivery totality, the
+//!   open-loop replay harness, and the `BENCH_serving.json` schema.
 //!
 //! Quickstart: `make artifacts && cargo run --release --example quickstart`
 //! (from `rust/`).
@@ -102,6 +105,9 @@ pub mod docs {
 
     #[doc = include_str!("../../docs/BENCHMARKS.md")]
     pub mod benchmarks {}
+
+    #[doc = include_str!("../../docs/SERVING.md")]
+    pub mod serving {}
 }
 
 pub mod figures;

@@ -7,20 +7,25 @@
 //! repro figures --headline           the §VII headline-number table
 //! repro figures --ablation <name>    tiling | shmem | range | pipeline | kahan | cluster
 //! repro serve --requests N [...]     run the GEMM service on a trace
+//! repro serve-replay [...]           open-loop burst replay -> BENCH_serving.json
 //! ```
+
+use std::collections::BTreeMap;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use tensoremu::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, GemmRequest};
 use tensoremu::figures;
 use tensoremu::gemm::mixed_gemm;
-use tensoremu::runtime::{Engine, Manifest};
+use tensoremu::runtime::{Engine, ExecutorServer, Manifest};
 use tensoremu::sim::VoltaConfig;
 use tensoremu::util::cli::Args;
-use tensoremu::workload::{uniform_matrix, RequestTrace, Rng, TraceSpec};
+use tensoremu::util::json::Json;
+use tensoremu::workload::{replay, uniform_matrix, ReplayConfig, RequestTrace, Rng, TraceSpec};
 
 fn main() {
-    let args = Args::from_env(&["headline", "large", "verbose"]);
+    let args = Args::from_env(&["headline", "large", "verbose", "engine-only", "expect-shed"]);
     let cmd = args.positional(0).unwrap_or("info").to_string();
     let code = match run(&cmd, &args) {
         Ok(()) => 0,
@@ -38,7 +43,10 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "check" => check(),
         "figures" => figures_cmd(args),
         "serve" => serve(args),
-        other => anyhow::bail!("unknown command {other:?} (try info|check|figures|serve)"),
+        "serve-replay" => serve_replay(args),
+        other => {
+            anyhow::bail!("unknown command {other:?} (try info|check|figures|serve|serve-replay)")
+        }
     }
 }
 
@@ -144,7 +152,8 @@ fn serve(args: &Args) -> Result<()> {
     let coord = Coordinator::start(CoordinatorConfig {
         batcher: BatcherConfig {
             max_batch: 1024,
-            max_wait: std::time::Duration::from_micros(max_wait_us),
+            max_wait: Duration::from_micros(max_wait_us),
+            ..Default::default()
         },
         ..Default::default()
     })?;
@@ -184,5 +193,102 @@ fn serve(args: &Args) -> Result<()> {
     println!("done: {ok}/{count} ok in {wall:.2?} ({:.0} resp/s)", ok as f64 / wall.as_secs_f64());
     println!("{}", snap.report());
     coord.shutdown();
+    Ok(())
+}
+
+/// Open-loop trace replay through the coordinator: a bursty arrival
+/// stream submitted on schedule regardless of completion, reported as
+/// the `BENCH_serving.json` schema (latency percentiles, throughput,
+/// shed rate, max queue depth).  `--engine-only` injects an empty
+/// manifest so the replay runs without built artifacts (every square
+/// request rides the bucketed engine lane) — the CI smoke leg's mode.
+fn serve_replay(args: &Args) -> Result<()> {
+    let count: usize = args.opt_parse("requests").unwrap_or(2000);
+    let rate: f64 = args.opt_parse("rate").unwrap_or(20_000.0);
+    let bursts: usize = args.opt_parse("bursts").unwrap_or(2);
+    let burst_factor: f64 = args.opt_parse("burst-factor").unwrap_or(10.0);
+    let time_scale: f64 = args.opt_parse("time-scale").unwrap_or(0.0);
+    let queue_cap: usize = args.opt_parse("queue-cap").unwrap_or(256);
+    let max_wait_us: u64 = args.opt_parse("max-wait-us").unwrap_or(2000);
+    let deadline_ms: Option<u64> = args.opt_parse("deadline-ms");
+    let tile: usize = args.opt_parse("tile").unwrap_or(16);
+    let engine_only = args.flag("engine-only");
+
+    let cfg = CoordinatorConfig {
+        tile,
+        queue_cap,
+        batcher: BatcherConfig {
+            max_wait: Duration::from_micros(max_wait_us),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let coord = if engine_only {
+        let manifest = Manifest { dir: "unbuilt".into(), artifacts: Vec::new() };
+        Coordinator::start_with(cfg, ExecutorServer::start(manifest)?)?
+    } else {
+        let c = Coordinator::start(cfg)?;
+        c.warmup()?; // pre-compile artifacts off the serving path (§Perf)
+        c
+    };
+
+    let mut rng = Rng::new(11);
+    let spec = TraceSpec { rate, count, tile, ..Default::default() };
+    let trace = RequestTrace::generate_with_bursts(&mut rng, spec, bursts, burst_factor);
+    let replay_cfg = ReplayConfig {
+        time_scale,
+        deadline: deadline_ms.map(Duration::from_millis),
+        ..Default::default()
+    };
+    println!(
+        "replaying {count} requests (base ~{rate:.0} req/s, {bursts} bursts x{burst_factor:.0}, \
+         time_scale {time_scale}, queue_cap {queue_cap})..."
+    );
+    let report = replay(&coord, &trace, &replay_cfg);
+    println!("{}", report.summary());
+    println!("{}", coord.metrics().snapshot().report());
+
+    let mut workload = BTreeMap::new();
+    workload.insert("requests".to_string(), Json::Num(count as f64));
+    workload.insert("rate_rps".to_string(), Json::Num(rate));
+    workload.insert("bursts".to_string(), Json::Num(bursts as f64));
+    workload.insert("burst_factor".to_string(), Json::Num(burst_factor));
+    workload.insert("tile".to_string(), Json::Num(tile as f64));
+    workload.insert("time_scale".to_string(), Json::Num(time_scale));
+    workload.insert(
+        "deadline_ms".to_string(),
+        deadline_ms.map_or(Json::Null, |d| Json::Num(d as f64)),
+    );
+    let mut service = BTreeMap::new();
+    service.insert("queue_cap".to_string(), Json::Num(queue_cap as f64));
+    service.insert("max_wait_us".to_string(), Json::Num(max_wait_us as f64));
+    service.insert("engine_only".to_string(), Json::Bool(engine_only));
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("serving".to_string()));
+    top.insert("schema".to_string(), Json::Str("bench.serving.v1".to_string()));
+    top.insert("workload".to_string(), Json::Obj(workload));
+    top.insert("coordinator".to_string(), Json::Obj(service));
+    top.insert("results".to_string(), report.to_json());
+    let doc = Json::Obj(top);
+    if let Some(out) = args.opt("out") {
+        std::fs::write(out, format!("{doc}\n")).with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+    }
+
+    coord.shutdown();
+    anyhow::ensure!(
+        report.totality_holds(),
+        "reply totality violated: {} of {} requests unaccounted (lost={})",
+        report.requests - report.replies(),
+        report.requests,
+        report.lost
+    );
+    if args.flag("expect-shed") {
+        anyhow::ensure!(
+            report.shed > 0,
+            "expected admission-control sheds under burst, saw none ({})",
+            report.summary()
+        );
+    }
     Ok(())
 }

@@ -4,7 +4,12 @@
 //! * [`gen`] — deterministic PRNG + uniform matrix generators (the
 //!   paper's U[-1,1] and ±16 protocols).
 //! * [`trace`] — request traces for the coordinator benches: batched
-//!   small-GEMM arrival streams with configurable size mix and rates.
+//!   small-GEMM arrival streams with configurable size mix and rates
+//!   (Poisson and bursty overload shapes).
+//! * [`replay`](mod@replay) — the open-loop serving harness: replays a trace
+//!   through a running coordinator on schedule regardless of
+//!   completion, reporting latency percentiles, throughput, shed rate
+//!   and max queue depth (the `BENCH_serving.json` numbers).
 //! * [`spectral`] — Nek5000-style spectral-element GEMM mixes and the
 //!   FMM-FFT small-matrix shape (the paper's two named applications).
 //!
@@ -15,9 +20,11 @@
 //! `tests/engine.rs` meaningful.
 
 pub mod gen;
+pub mod replay;
 pub mod spectral;
 pub mod trace;
 
 pub use gen::{uniform_batch, uniform_matrix, Rng};
+pub use replay::{replay, ReplayConfig, ReplayReport};
 pub use spectral::{fmm_fft_workload, spectral_element_workload, SpectralElementMix};
 pub use trace::{RequestTrace, TraceEvent, TraceSpec};

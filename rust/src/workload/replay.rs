@@ -1,0 +1,314 @@
+//! Open-loop trace replay: drive a [`RequestTrace`] through a running
+//! [`Coordinator`] with arrivals on schedule *regardless of completion*,
+//! and report what the service did under that offered load.
+//!
+//! Open-loop is the honest way to measure a service under overload
+//! (closed-loop clients self-throttle and hide queueing collapse): the
+//! harness submits each trace event at `t0 + at * time_scale` whether or
+//! not earlier requests finished, then collects every reply afterwards.
+//! Per-request latency is taken from the service's own accounting
+//! (`queued + exec` on the response), so collection order does not skew
+//! the percentiles.
+//!
+//! The report's accounting identity is the reply-totality contract:
+//! `requests == responses + shed + deadline_exceeded + errors + lost`,
+//! and `lost` (replies that never arrived within
+//! [`ReplayConfig::lost_after`]) must be zero for a correct service —
+//! the CI smoke leg asserts exactly that while driving a burst at well
+//! above the sustainable rate (see `docs/SERVING.md`).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Coordinator, CoordinatorError, GemmRequest};
+use crate::gemm::Matrix;
+use crate::util::json::Json;
+
+use super::gen::{uniform_matrix, Rng};
+use super::trace::RequestTrace;
+
+/// Replay tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplayConfig {
+    /// Multiplier on trace arrival times: 1.0 replays in real time,
+    /// 0.5 at double speed, 0.0 submits the whole trace as one maximal
+    /// burst (no sleeping at all — the pure admission-control stress).
+    pub time_scale: f64,
+    /// Per-request completion budget attached as
+    /// [`GemmRequest::deadline`] at submit time (None = no deadlines).
+    pub deadline: Option<Duration>,
+    /// How long to wait for each outstanding reply during collection
+    /// before declaring it lost.  A correct service never loses a
+    /// reply; this bounds the harness, it does not pace the service.
+    pub lost_after: Duration,
+    /// Seed for operand generation (one operand pair per distinct edge).
+    pub seed: u64,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            time_scale: 1.0,
+            deadline: None,
+            lost_after: Duration::from_secs(30),
+            seed: 7,
+        }
+    }
+}
+
+/// What the service did under the replayed load.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    /// Requests submitted (== trace length).
+    pub requests: usize,
+    /// Successful responses.
+    pub responses: usize,
+    /// Typed admission-control rejections ([`CoordinatorError::Shed`]).
+    pub shed: usize,
+    /// Typed deadline sheds ([`CoordinatorError::DeadlineExceeded`]).
+    pub deadline_exceeded: usize,
+    /// Other typed errors (`Internal` / `Exec` / `ShuttingDown` / ...).
+    pub errors: usize,
+    /// Replies that never arrived within `lost_after` — zero for a
+    /// correct service (the reply-totality contract).
+    pub lost: usize,
+    /// Wall time from first submit to last reply collected.
+    pub wall: Duration,
+    /// Service-side latency percentiles over successful responses
+    /// (`queued + exec` per response).
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+    /// High-water intake queue depth the service observed (bounded by
+    /// `CoordinatorConfig::queue_cap`).
+    pub max_queue_depth: u64,
+}
+
+impl ReplayReport {
+    /// Replies of any kind actually delivered.
+    pub fn replies(&self) -> usize {
+        self.responses + self.shed + self.deadline_exceeded + self.errors
+    }
+
+    /// Does `requests == responses + shed + deadline_exceeded + errors`
+    /// with nothing lost?  The reply-totality acceptance bar.
+    pub fn totality_holds(&self) -> bool {
+        self.lost == 0 && self.replies() == self.requests
+    }
+
+    /// Successful responses per wall second.
+    pub fn throughput_rps(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s <= 0.0 {
+            return 0.0;
+        }
+        self.responses as f64 / s
+    }
+
+    /// Fraction of requests shed by admission control.
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.shed as f64 / self.requests as f64
+    }
+
+    /// The `results` object of the `BENCH_serving.json` schema.
+    pub fn to_json(&self) -> Json {
+        let mut latency = std::collections::BTreeMap::new();
+        latency.insert("p50".to_string(), Json::Num(self.p50.as_secs_f64()));
+        latency.insert("p95".to_string(), Json::Num(self.p95.as_secs_f64()));
+        latency.insert("p99".to_string(), Json::Num(self.p99.as_secs_f64()));
+        latency.insert("max".to_string(), Json::Num(self.max.as_secs_f64()));
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("requests".to_string(), Json::Num(self.requests as f64));
+        m.insert("responses".to_string(), Json::Num(self.responses as f64));
+        m.insert("shed".to_string(), Json::Num(self.shed as f64));
+        m.insert(
+            "deadline_exceeded".to_string(),
+            Json::Num(self.deadline_exceeded as f64),
+        );
+        m.insert("errors".to_string(), Json::Num(self.errors as f64));
+        m.insert("lost".to_string(), Json::Num(self.lost as f64));
+        m.insert("shed_rate".to_string(), Json::Num(self.shed_rate()));
+        m.insert("throughput_rps".to_string(), Json::Num(self.throughput_rps()));
+        m.insert("wall_s".to_string(), Json::Num(self.wall.as_secs_f64()));
+        m.insert("latency_s".to_string(), Json::Obj(latency));
+        m.insert(
+            "max_queue_depth".to_string(),
+            Json::Num(self.max_queue_depth as f64),
+        );
+        Json::Obj(m)
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} responses={} shed={} deadline={} errors={} lost={} \
+             shed_rate={:.3} throughput={:.0}/s max_depth={} p50={:?} p95={:?} p99={:?}",
+            self.requests,
+            self.responses,
+            self.shed,
+            self.deadline_exceeded,
+            self.errors,
+            self.lost,
+            self.shed_rate(),
+            self.throughput_rps(),
+            self.max_queue_depth,
+            self.p50,
+            self.p95,
+            self.p99,
+        )
+    }
+}
+
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = ((p * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+/// Replay `trace` open-loop through `coord`.
+///
+/// Submission: each event fires at `t0 + at * time_scale` (a
+/// `time_scale` of 0.0 submits everything back-to-back); the harness
+/// never waits for a reply before submitting the next event.
+/// Collection: after the last submit, every reply channel is drained
+/// with a `lost_after` timeout — a missing reply is counted as `lost`,
+/// never silently skipped.
+pub fn replay(coord: &Coordinator, trace: &RequestTrace, cfg: &ReplayConfig) -> ReplayReport {
+    // one operand pair per distinct edge, generated up front so the
+    // submit loop pays clone cost only (arrival schedule stays honest)
+    let mut rng = Rng::new(cfg.seed);
+    let mut operands: HashMap<usize, (Matrix, Matrix)> = HashMap::new();
+    for ev in &trace.events {
+        operands.entry(ev.n).or_insert_with(|| {
+            (
+                uniform_matrix(&mut rng, ev.n, ev.n, -ev.scale, ev.scale),
+                uniform_matrix(&mut rng, ev.n, ev.n, -ev.scale, ev.scale),
+            )
+        });
+    }
+
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(trace.events.len());
+    for ev in &trace.events {
+        if cfg.time_scale > 0.0 {
+            let due = t0 + Duration::from_secs_f64(ev.at * cfg.time_scale);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        let (a, b) = operands[&ev.n].clone();
+        let mut req = GemmRequest::new(0, a, b).with_scale(ev.scale);
+        if let Some(budget) = cfg.deadline {
+            req = req.with_deadline(Instant::now() + budget);
+        }
+        rxs.push(coord.submit(req));
+    }
+
+    let mut latencies = Vec::new();
+    let (mut responses, mut shed, mut deadline_exceeded, mut errors, mut lost) = (0, 0, 0, 0, 0);
+    for rx in rxs {
+        match rx.recv_timeout(cfg.lost_after) {
+            Ok(Ok(resp)) => {
+                responses += 1;
+                latencies.push(resp.queued + resp.exec);
+            }
+            Ok(Err(CoordinatorError::Shed { .. })) => shed += 1,
+            Ok(Err(CoordinatorError::DeadlineExceeded)) => deadline_exceeded += 1,
+            Ok(Err(_)) => errors += 1,
+            Err(_) => lost += 1,
+        }
+    }
+    let wall = t0.elapsed();
+    latencies.sort_unstable();
+    ReplayReport {
+        requests: trace.events.len(),
+        responses,
+        shed,
+        deadline_exceeded,
+        errors,
+        lost,
+        wall,
+        p50: percentile(&latencies, 0.50),
+        p95: percentile(&latencies, 0.95),
+        p99: percentile(&latencies, 0.99),
+        max: percentile(&latencies, 1.0),
+        max_queue_depth: coord.metrics().snapshot().max_queue_depth,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::runtime::{ExecutorServer, Manifest};
+    use crate::workload::TraceSpec;
+
+    fn engine_only_coordinator(cfg: CoordinatorConfig) -> Coordinator {
+        // no artifacts: every square request rides the engine lane
+        let manifest = Manifest { dir: std::path::PathBuf::from("unbuilt"), artifacts: Vec::new() };
+        let server = ExecutorServer::start(manifest).unwrap();
+        Coordinator::start_with(cfg, server).unwrap()
+    }
+
+    #[test]
+    fn percentile_handles_empty_and_orders() {
+        assert_eq!(percentile(&[], 0.5), Duration::ZERO);
+        let v: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        assert!(percentile(&v, 0.5) <= percentile(&v, 0.95));
+        assert_eq!(percentile(&v, 1.0), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn report_accounting_identities() {
+        let r = ReplayReport {
+            requests: 10,
+            responses: 6,
+            shed: 2,
+            deadline_exceeded: 1,
+            errors: 1,
+            lost: 0,
+            wall: Duration::from_secs(2),
+            p50: Duration::ZERO,
+            p95: Duration::ZERO,
+            p99: Duration::ZERO,
+            max: Duration::ZERO,
+            max_queue_depth: 4,
+        };
+        assert!(r.totality_holds());
+        assert_eq!(r.replies(), 10);
+        assert_eq!(r.shed_rate(), 0.2);
+        assert_eq!(r.throughput_rps(), 3.0);
+        let j = r.to_json();
+        assert_eq!(j.get("responses").and_then(Json::as_usize), Some(6));
+        assert_eq!(j.get("max_queue_depth").and_then(Json::as_usize), Some(4));
+        assert!(j.get("latency_s").and_then(|l| l.get("p95")).is_some());
+        assert!(r.summary().contains("shed=2"));
+        let broken = ReplayReport { lost: 1, responses: 5, ..r };
+        assert!(!broken.totality_holds());
+    }
+
+    #[test]
+    fn replay_burst_delivers_every_reply() {
+        // maximal burst (time_scale 0) through an engine-only service:
+        // every request resolves — no reply is ever lost
+        let coord = engine_only_coordinator(CoordinatorConfig::default());
+        let mut rng = Rng::new(11);
+        let trace = RequestTrace::generate(
+            &mut rng,
+            TraceSpec { count: 64, tile: 8, ..Default::default() },
+        );
+        let cfg = ReplayConfig { time_scale: 0.0, ..Default::default() };
+        let report = replay(&coord, &trace, &cfg);
+        assert_eq!(report.requests, 64);
+        assert!(report.totality_holds(), "{}", report.summary());
+        assert_eq!(report.responses + report.shed, 64);
+        assert!(report.max_queue_depth >= 1);
+    }
+}

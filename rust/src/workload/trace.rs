@@ -73,6 +73,39 @@ impl RequestTrace {
         RequestTrace { events, spec_rate: spec.rate }
     }
 
+    /// Generate a bursty Poisson trace: the request stream alternates
+    /// between `bursts` calm segments at `spec.rate` and `bursts` burst
+    /// segments at `spec.rate * burst_factor` (each segment holds
+    /// `count / (2 * bursts)` requests, remainder in the final
+    /// segment).  This is the overload shape the serving harness
+    /// ([`crate::workload::replay()`]) uses to exercise admission control:
+    /// sustained bursts well above the drain rate with recovery windows
+    /// between them.
+    pub fn generate_with_bursts(
+        rng: &mut Rng,
+        spec: TraceSpec,
+        bursts: usize,
+        burst_factor: f64,
+    ) -> RequestTrace {
+        let segments = (2 * bursts.max(1)).min(spec.count.max(1));
+        let seg_len = (spec.count / segments).max(1);
+        let mut events = Vec::with_capacity(spec.count);
+        let mut t = 0.0;
+        for seq in 0..spec.count {
+            let seg = (seq / seg_len).min(segments - 1);
+            let rate = if seg % 2 == 1 { spec.rate * burst_factor } else { spec.rate };
+            t += rng.exp(rate);
+            let large = (rng.uniform01() as f64) < spec.large_fraction;
+            events.push(TraceEvent {
+                at: t,
+                n: if large { spec.large_n } else { spec.tile },
+                scale: spec.scale,
+                seq,
+            });
+        }
+        RequestTrace { events, spec_rate: spec.rate }
+    }
+
     /// Duration from first to last arrival.
     pub fn duration(&self) -> f64 {
         match (self.events.first(), self.events.last()) {
@@ -121,6 +154,36 @@ mod tests {
         let large = t.events.iter().filter(|e| e.n == spec.large_n).count();
         let frac = large as f64 / t.events.len() as f64;
         assert!((frac - 0.3).abs() < 0.03, "frac {frac}");
+    }
+
+    #[test]
+    fn bursty_trace_alternates_rates() {
+        let mut rng = Rng::new(5);
+        let spec = TraceSpec { rate: 1000.0, count: 4000, ..Default::default() };
+        let t = RequestTrace::generate_with_bursts(&mut rng, spec, 2, 50.0);
+        assert_eq!(t.events.len(), 4000);
+        assert!(t.events.windows(2).all(|w| w[0].at <= w[1].at));
+        // 4 segments of 1000: calm, burst, calm, burst — each burst
+        // segment spans far less wall time than each calm segment
+        let span = |lo: usize, hi: usize| t.events[hi - 1].at - t.events[lo].at;
+        let calm = span(0, 1000) + span(2000, 3000);
+        let burst = span(1000, 2000) + span(3000, 4000);
+        assert!(burst < calm / 10.0, "burst {burst} vs calm {calm}");
+    }
+
+    #[test]
+    fn bursty_trace_handles_degenerate_counts() {
+        let mut rng = Rng::new(6);
+        let spec = TraceSpec { count: 3, ..Default::default() };
+        let t = RequestTrace::generate_with_bursts(&mut rng, spec, 5, 10.0);
+        assert_eq!(t.events.len(), 3);
+        let t = RequestTrace::generate_with_bursts(
+            &mut rng,
+            TraceSpec { count: 0, ..Default::default() },
+            0,
+            10.0,
+        );
+        assert!(t.events.is_empty());
     }
 
     #[test]

@@ -4,10 +4,12 @@
 //! can serve anything there, which is exactly the regime the cached-plan
 //! bucketed engine lane exists for — so they run everywhere.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use tensoremu::coordinator::request::ServedBy;
-use tensoremu::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, GemmRequest};
+use tensoremu::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, CoordinatorError, GemmRequest,
+};
 use tensoremu::gemm::{mixed_gemm, Matrix};
 use tensoremu::precision::{refine_gemm, RefineMode};
 use tensoremu::runtime::{is_artifacts_missing, ExecutorServer, Manifest};
@@ -16,11 +18,8 @@ use tensoremu::workload::{uniform_matrix, Rng};
 /// Skips (returns None) when the PJRT artifacts are not built — the
 /// coordinator cannot start without a manifest.  Only that case skips;
 /// any other startup failure panics so regressions stay visible.
-fn coordinator() -> Option<Coordinator> {
-    match Coordinator::start(CoordinatorConfig {
-        batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(3) },
-        ..Default::default()
-    }) {
+fn coordinator_cfg(cfg: CoordinatorConfig) -> Option<Coordinator> {
+    match Coordinator::start(cfg) {
         Ok(c) => Some(c),
         Err(e) if is_artifacts_missing(&e) => {
             eprintln!("skipping: artifacts not built (run `make artifacts`)");
@@ -28,6 +27,17 @@ fn coordinator() -> Option<Coordinator> {
         }
         Err(e) => panic!("coordinator startup failed (not a missing build): {e:#}"),
     }
+}
+
+fn coordinator() -> Option<Coordinator> {
+    coordinator_cfg(CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(3),
+            ..Default::default()
+        },
+        ..Default::default()
+    })
 }
 
 #[test]
@@ -175,17 +185,37 @@ fn latency_accounting_present() {
 /// direct artifacts — every square request must ride the bucketed
 /// engine lane, and only non-square requests may fall back.  Needs no
 /// built artifacts, so it runs on every machine.
-fn engine_only_coordinator() -> Coordinator {
+fn engine_only_coordinator_cfg(cfg: CoordinatorConfig) -> Coordinator {
     let manifest = Manifest { dir: std::path::PathBuf::from("unbuilt"), artifacts: Vec::new() };
     let executor = ExecutorServer::start(manifest).expect("executor over empty manifest");
-    Coordinator::start_with(
-        CoordinatorConfig {
-            batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) },
+    Coordinator::start_with(cfg, executor).expect("coordinator over empty manifest")
+}
+
+fn engine_only_coordinator() -> Coordinator {
+    engine_only_coordinator_cfg(CoordinatorConfig {
+        batcher: BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
             ..Default::default()
         },
-        executor,
-    )
-    .expect("coordinator over empty manifest")
+        ..Default::default()
+    })
+}
+
+/// A config whose batchers can never flush on their own during a test
+/// (huge timers, huge capacity): whatever is admitted stays queued until
+/// shutdown — the deterministic, sleep-free setup for the shed and
+/// shutdown totality sweeps.
+fn never_flush_cfg(queue_cap: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        queue_cap,
+        batcher: BatcherConfig {
+            max_batch: 100_000,
+            max_wait: Duration::from_secs(100_000),
+            deadline_slack: Duration::from_millis(1),
+        },
+        ..Default::default()
+    }
 }
 
 #[test]
@@ -345,6 +375,230 @@ fn non_square_requests_still_fall_back_without_artifacts() {
     assert_eq!(snap.fallback, 1);
     assert_eq!(snap.engine_batched, 0);
     assert_eq!(snap.engine_view_bytes, 0);
+    c.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Reply-delivery totality sweep: every submitted request gets exactly one
+// reply — success or typed error, never a hung channel — across
+// shed-under-burst, shutdown-while-pending, and worker panic injection,
+// on both the engine-batcher and artifact lanes.  No test below relies
+// on sleeps for correctness: deadlines are explicit `Instant`s, and the
+// shed/shutdown tests use batcher timers too large to ever fire.
+// ---------------------------------------------------------------------------
+
+/// Submit `count` square `n`-edge requests as one tight burst against a
+/// coordinator capped at `cap`, then collect every reply after shutdown.
+/// Returns (ok, shed, shutdown) counts; panics on any other reply kind
+/// or a missing one.
+fn burst_and_collect(c: Coordinator, cap: usize, count: usize, n: usize) -> (usize, usize, usize) {
+    let mut rng = Rng::new(21);
+    let a = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+    let rxs: Vec<_> =
+        (0..count).map(|_| c.submit(GemmRequest::new(0, a.clone(), b.clone()))).collect();
+    let high_water = c.metrics().snapshot().max_queue_depth;
+    c.shutdown();
+    let (mut ok, mut shed, mut shutdown) = (0, 0, 0);
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)).expect("reply must be delivered") {
+            Ok(_) => ok += 1,
+            Err(CoordinatorError::Shed { queue_depth }) => {
+                assert!(queue_depth >= cap, "shed at depth {queue_depth} below cap {cap}");
+                shed += 1;
+            }
+            Err(CoordinatorError::ShuttingDown) => shutdown += 1,
+            Err(e) => panic!("unexpected reply {e}"),
+        }
+    }
+    assert_eq!(ok + shed + shutdown, count, "exactly one reply per request");
+    assert!(high_water <= cap as u64, "queue bounded by cap: max depth {high_water}");
+    (ok, shed, shutdown)
+}
+
+#[test]
+fn shed_under_burst_bounds_queue_engine_lane() {
+    // 64 requests against a cap of 8 with batchers that can never flush:
+    // exactly 8 admitted (answered ShuttingDown at shutdown), 56 shed
+    // with the typed admission error — and the queue never exceeds 8
+    let c = engine_only_coordinator_cfg(never_flush_cfg(8));
+    let (ok, shed, shutdown) = burst_and_collect(c, 8, 64, 16);
+    assert_eq!(shed, 56, "ok={ok} shed={shed} shutdown={shutdown}");
+    assert_eq!(ok + shutdown, 8);
+}
+
+#[test]
+fn shed_under_burst_bounds_queue_artifact_lane() {
+    // the same contract on the artifact lane.  The service clamps
+    // max_batch to the real artifact's batch capacity, so capacity
+    // flushes may drain admitted work mid-burst — the exact shed count
+    // is not deterministic here, but the bound, the totality, and the
+    // presence of typed sheds are.
+    let Some(c) = coordinator_cfg(never_flush_cfg(8)) else { return };
+    let (ok, shed, shutdown) = burst_and_collect(c, 8, 64, 16);
+    assert!(shed >= 1, "ok={ok} shed={shed} shutdown={shutdown}");
+}
+
+#[test]
+fn shutdown_while_pending_delivers_shutting_down() {
+    // queued-but-unflushed work is answered ShuttingDown — channels are
+    // never dropped unanswered
+    let c = engine_only_coordinator_cfg(never_flush_cfg(4096));
+    let mut rng = Rng::new(22);
+    let a = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let rxs: Vec<_> =
+        (0..5).map(|_| c.submit(GemmRequest::new(0, a.clone(), b.clone()))).collect();
+    c.shutdown();
+    for rx in rxs {
+        let reply = rx.recv_timeout(Duration::from_secs(30)).expect("reply must be delivered");
+        assert_eq!(reply.unwrap_err(), CoordinatorError::ShuttingDown);
+    }
+}
+
+#[test]
+fn worker_panic_becomes_typed_internal_engine_lane() {
+    // a poisoned request panics its engine-lane worker: the panic comes
+    // back as a typed Internal reply, the cohort in *other* buckets is
+    // untouched, and the service keeps serving afterwards
+    let c = engine_only_coordinator();
+    let mut rng = Rng::new(23);
+    let pa = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let pb = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let ha = uniform_matrix(&mut rng, 33, 33, -1.0, 1.0);
+    let hb = uniform_matrix(&mut rng, 33, 33, -1.0, 1.0);
+    let rx_poison = c.submit(GemmRequest::new(0, pa, pb).with_poison());
+    let rx_healthy = c.submit(GemmRequest::new(0, ha.clone(), hb.clone()));
+    let poisoned = rx_poison.recv_timeout(Duration::from_secs(30)).unwrap();
+    match poisoned {
+        Err(CoordinatorError::Internal(msg)) => assert!(msg.contains("poison"), "{msg}"),
+        other => panic!("expected Internal, got {other:?}"),
+    }
+    let healthy = rx_healthy.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+    assert_eq!(healthy.c, mixed_gemm(&ha, &hb, None, 1.0, 0.0));
+    // the dispatcher survived the worker panic: the service still serves
+    let again = c.gemm(ha.clone(), hb.clone()).unwrap();
+    assert_eq!(again.c, mixed_gemm(&ha, &hb, None, 1.0, 0.0));
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.errors, 1, "{}", snap.report());
+    c.shutdown();
+}
+
+#[test]
+fn worker_panic_becomes_typed_internal_fallback_lane() {
+    // same isolation on the CPU-fallback lane (non-square request)
+    let c = engine_only_coordinator();
+    let mut rng = Rng::new(24);
+    let a = uniform_matrix(&mut rng, 48, 80, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 80, 32, -1.0, 1.0);
+    let reply = c.gemm_with(GemmRequest::new(0, a.clone(), b.clone()).with_poison());
+    match reply {
+        Err(CoordinatorError::Internal(msg)) => assert!(msg.contains("poison"), "{msg}"),
+        other => panic!("expected Internal, got {other:?}"),
+    }
+    // service alive: the same shape unpoisoned is served
+    assert!(c.gemm(a, b).is_ok());
+    c.shutdown();
+}
+
+#[test]
+fn worker_panic_fans_out_typed_internal_artifact_lane() {
+    // a poisoned entry riding an artifact-lane batch panics the flush
+    // worker: every request on that batch gets a typed Internal reply
+    // (never a hung channel), and the service keeps serving
+    let Some(c) = coordinator() else { return };
+    let mut rng = Rng::new(25);
+    let a = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+    let mut rxs = Vec::new();
+    for i in 0..24 {
+        let req = GemmRequest::new(0, a.clone(), b.clone());
+        rxs.push(c.submit(if i == 7 { req.with_poison() } else { req }));
+    }
+    let (mut ok, mut internal) = (0, 0);
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)).expect("reply must be delivered") {
+            Ok(_) => ok += 1,
+            Err(CoordinatorError::Internal(_)) => internal += 1,
+            Err(e) => panic!("unexpected reply {e}"),
+        }
+    }
+    assert_eq!(ok + internal, 24, "exactly one reply per request");
+    assert!(internal >= 1, "the poisoned batch must fail typed (ok={ok})");
+    assert!(c.gemm(a, b).is_ok(), "service must survive the poisoned batch");
+    c.shutdown();
+}
+
+#[test]
+fn expired_deadline_is_shed_at_dispatch() {
+    // a request arriving with its deadline already behind `now` is shed
+    // with the typed error instead of executed — deadline injected as an
+    // explicit past Instant, no sleeping anywhere
+    let c = engine_only_coordinator_cfg(never_flush_cfg(4096));
+    let mut rng = Rng::new(26);
+    let a = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let expired = Instant::now() - Duration::from_secs(1);
+    let reply = c.gemm_with(GemmRequest::new(0, a, b).with_deadline(expired));
+    assert_eq!(reply.unwrap_err(), CoordinatorError::DeadlineExceeded);
+    let snap = c.metrics().snapshot();
+    assert_eq!(snap.deadline_exceeded, 1, "{}", snap.report());
+    assert_eq!(snap.errors, 0, "deadline sheds are not service errors: {}", snap.report());
+    c.shutdown();
+}
+
+#[test]
+fn near_deadline_triggers_early_flush_engine_lane() {
+    // age timer far away (100000s), deadline 60s out, slack 120s: the
+    // only trigger that can serve this request is the deadline-urgency
+    // flush — and it must fire immediately, not in 100000s
+    let mut cfg = never_flush_cfg(4096);
+    cfg.batcher.deadline_slack = Duration::from_secs(120);
+    let c = engine_only_coordinator_cfg(cfg);
+    let mut rng = Rng::new(27);
+    let a = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let resp = c
+        .gemm_with(GemmRequest::new(0, a.clone(), b.clone()).with_deadline(deadline))
+        .unwrap();
+    assert_eq!(resp.served_by, ServedBy::BatchedEngine);
+    assert_eq!(resp.c, mixed_gemm(&a, &b, None, 1.0, 0.0));
+    let snap = c.metrics().snapshot();
+    assert!(snap.flush_early_engine >= 1, "{}", snap.report());
+    c.shutdown();
+}
+
+#[test]
+fn near_deadline_triggers_early_flush_artifact_lane() {
+    // the artifact-lane twin of the early-flush test
+    let mut cfg = never_flush_cfg(4096);
+    cfg.batcher.deadline_slack = Duration::from_secs(120);
+    let Some(c) = coordinator_cfg(cfg) else { return };
+    let mut rng = Rng::new(28);
+    let a = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let resp = c
+        .gemm_with(GemmRequest::new(0, a.clone(), b.clone()).with_deadline(deadline))
+        .unwrap();
+    assert_eq!(resp.served_by, ServedBy::BatchedTensorCore);
+    let snap = c.metrics().snapshot();
+    assert!(snap.flush_early_artifact >= 1, "{}", snap.report());
+    c.shutdown();
+}
+
+#[test]
+fn gemm_deadline_maps_timeout_to_typed_error() {
+    // batchers can never flush, so the reply cannot arrive: the caller's
+    // timeout must come back as the typed DeadlineExceeded (the request
+    // itself is later answered ShuttingDown on drop — still one reply)
+    let c = engine_only_coordinator_cfg(never_flush_cfg(4096));
+    let mut rng = Rng::new(29);
+    let a = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let reply = c.gemm_deadline(GemmRequest::new(0, a, b), Duration::from_millis(100));
+    assert_eq!(reply.unwrap_err(), CoordinatorError::DeadlineExceeded);
     c.shutdown();
 }
 
