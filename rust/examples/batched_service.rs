@@ -108,7 +108,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let wall = t0.elapsed();
-    let snap = coord.metrics().snapshot();
+    let snap = coord.metrics_snapshot();
 
     println!("\n--- E2E report ---");
     println!("served        : {ok}/{requests} in {wall:.2?}");

@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         worst_rel = worst_rel.max(err / truth.max_abs().max(1e-20));
     }
     let wall = t0.elapsed();
-    let snap = coord.metrics().snapshot();
+    let snap = coord.metrics_snapshot();
     println!(
         "applied operator in {wall:.2?} ({:.0} GEMMs/s)",
         mix.gemm_count() as f64 / wall.as_secs_f64()

@@ -33,9 +33,12 @@
 //! queue on shutdown so every queued request can be answered
 //! `ShuttingDown` instead of having its reply channel dropped.
 //!
-//! The batcher accepts any *square* request; `tile` names the primary
-//! edge the artifact lane was compiled for (the router only routes that
-//! edge to the batcher today, other edges ride the engine lane).
+//! The batcher accepts any *square* request (a non-square request is
+//! handed back by [`Batcher::push_mode`] as `Err(req)` so the caller
+//! can shed it typed — never a panic on the dispatcher thread); `tile`
+//! names the primary edge the artifact lane was compiled for (the
+//! router only routes that edge to the batcher today, other edges ride
+//! the engine lane).
 
 use std::time::{Duration, Instant};
 
@@ -223,18 +226,27 @@ impl Batcher {
     }
 
     /// Enqueue an unrefined square request of any edge (the artifact
-    /// lane's shape).  Panics on non-square shapes (the router only
-    /// batches square requests).
-    pub fn push(&mut self, req: GemmRequest) {
-        self.push_mode(req, RefineMode::None);
+    /// lane's shape).  A non-square request is handed back as
+    /// `Err(req)` — see [`Batcher::push_mode`].
+    pub fn push(&mut self, req: GemmRequest) -> Result<(), GemmRequest> {
+        self.push_mode(req, RefineMode::None)
     }
 
     /// Enqueue a square request under the precision mode the router
     /// resolved for it — the engine lane's entry point.  The mode joins
     /// the edge as the bucket key, so a refined request can never be
     /// flushed into an unrefined bucket (or vice versa).
-    pub fn push_mode(&mut self, req: GemmRequest, mode: RefineMode) {
-        let n = req.square_n().expect("batcher requires square requests");
+    ///
+    /// The batcher only holds square requests (both lanes bucket by a
+    /// square edge); a non-square request reaching it is a routing
+    /// invariant violation, and is returned as `Err(req)` — intact, so
+    /// the dispatcher can shed it with a typed error — instead of
+    /// panicking the dispatcher thread that every other queued request
+    /// depends on.
+    pub fn push_mode(&mut self, req: GemmRequest, mode: RefineMode) -> Result<(), GemmRequest> {
+        let Some(n) = req.square_n() else {
+            return Err(req);
+        };
         self.queue.push(Pending {
             id: req.id,
             n,
@@ -245,6 +257,7 @@ impl Batcher {
             deadline: req.deadline,
             poison: req.poison,
         });
+        Ok(())
     }
 
     /// Which trigger (if any) calls for a flush right now.  Capacity is
@@ -402,10 +415,10 @@ mod tests {
     fn flushes_at_capacity() {
         let mut b = batcher(4, 1000);
         for i in 0..3 {
-            b.push(req(i));
+            b.push(req(i)).unwrap();
         }
         assert!(!b.should_flush(Instant::now()));
-        b.push(req(3));
+        b.push(req(3)).unwrap();
         assert!(b.should_flush(Instant::now()));
         assert_eq!(b.flush_due(Instant::now()), Some(FlushTrigger::Capacity));
     }
@@ -413,7 +426,7 @@ mod tests {
     #[test]
     fn flushes_on_age() {
         let mut b = batcher(1000, 0);
-        b.push(req(0));
+        b.push(req(0)).unwrap();
         assert!(b.should_flush(Instant::now()));
         assert_eq!(b.flush_due(Instant::now()), Some(FlushTrigger::Age));
     }
@@ -439,7 +452,7 @@ mod tests {
                 deadline_slack: Duration::from_secs(120),
             },
         );
-        b.push(req(0).with_deadline(Instant::now() + Duration::from_secs(60)));
+        b.push(req(0).with_deadline(Instant::now() + Duration::from_secs(60))).unwrap();
         assert_eq!(b.flush_due(Instant::now()), Some(FlushTrigger::Deadline));
     }
 
@@ -453,7 +466,7 @@ mod tests {
                 deadline_slack: Duration::from_millis(1),
             },
         );
-        b.push(req(0).with_deadline(Instant::now() + Duration::from_secs(3600)));
+        b.push(req(0).with_deadline(Instant::now() + Duration::from_secs(3600))).unwrap();
         assert_eq!(b.flush_due(Instant::now()), None);
     }
 
@@ -468,7 +481,7 @@ mod tests {
                 deadline_slack: Duration::from_secs(1),
             },
         );
-        b.push(req(0).with_deadline(now + Duration::from_secs(10)));
+        b.push(req(0).with_deadline(now + Duration::from_secs(10))).unwrap();
         // slack point is ~9s out; the age timer is ~1000s out
         let t = b.time_to_flush(Instant::now()).unwrap();
         assert!(t <= Duration::from_secs(9), "time_to_flush {t:?}");
@@ -478,9 +491,9 @@ mod tests {
     fn shed_expired_removes_only_expired() {
         let now = Instant::now();
         let mut b = batcher(1000, 1000);
-        b.push(req(0).with_deadline(now - Duration::from_secs(1)));
-        b.push(req(1));
-        b.push(req(2).with_deadline(now + Duration::from_secs(3600)));
+        b.push(req(0).with_deadline(now - Duration::from_secs(1))).unwrap();
+        b.push(req(1)).unwrap();
+        b.push(req(2).with_deadline(now + Duration::from_secs(3600))).unwrap();
         let shed = b.shed_expired(now);
         assert_eq!(shed, vec![0]);
         assert_eq!(b.queue_len(), 2);
@@ -492,7 +505,7 @@ mod tests {
     fn drain_ids_empties_queue_in_fifo_order() {
         let mut b = batcher(1000, 1000);
         for i in 0..5 {
-            b.push(req(i));
+            b.push(req(i)).unwrap();
         }
         assert_eq!(b.drain_ids(), vec![0, 1, 2, 3, 4]);
         assert_eq!(b.queue_len(), 0);
@@ -502,17 +515,17 @@ mod tests {
     #[test]
     fn poison_marks_flushed_batch_and_bucket() {
         let mut b = batcher(100, 0);
-        b.push(req(0));
-        b.push(req(1).with_poison());
+        b.push(req(0)).unwrap();
+        b.push(req(1).with_poison()).unwrap();
         let f = b.flush(|n| n).unwrap();
         assert!(f.poison);
         let mut b = batcher(100, 0);
-        b.push(req(0));
+        b.push(req(0)).unwrap();
         let f = b.flush(|n| n).unwrap();
         assert!(!f.poison);
         let mut b = batcher(100, 0);
-        b.push(req_n(0, 8));
-        b.push(req_n(1, 16).with_poison());
+        b.push(req_n(0, 8)).unwrap();
+        b.push(req_n(1, 16).with_poison()).unwrap();
         let buckets = b.flush_buckets();
         assert!(!buckets[0].poison);
         assert!(buckets[1].poison);
@@ -522,7 +535,7 @@ mod tests {
     fn padding_behaviour() {
         let mut b = batcher(100, 0);
         for i in 0..5 {
-            b.push(req(i));
+            b.push(req(i)).unwrap();
         }
         let f = b.flush(|n| n.next_power_of_two().max(8)).unwrap();
         assert_eq!(f.real_len(), 5);
@@ -537,7 +550,7 @@ mod tests {
     fn flush_respects_max_batch() {
         let mut b = batcher(3, 0);
         for i in 0..7 {
-            b.push(req(i));
+            b.push(req(i)).unwrap();
         }
         let f = b.flush(|n| n).unwrap();
         assert_eq!(f.real_len(), 3);
@@ -545,20 +558,30 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "square")]
-    fn rejects_non_square() {
+    fn returns_non_square_to_caller_intact() {
+        // the no-dispatcher-panic contract: a routing mistake hands the
+        // request back (matrices and all) instead of killing the thread
         let mut b = batcher(4, 1);
-        b.push(GemmRequest::new(0, Matrix::zeros(8, 4), Matrix::zeros(4, 8)));
+        let rejected = b
+            .push(GemmRequest::new(7, Matrix::zeros(8, 4), Matrix::zeros(4, 8)))
+            .expect_err("non-square must be returned, not queued");
+        assert_eq!(rejected.id, 7);
+        assert_eq!(rejected.a.shape(), (8, 4));
+        assert_eq!(rejected.b.shape(), (4, 8));
+        assert_eq!(b.queue_len(), 0);
+        // the batcher still works after a rejection
+        b.push(req(8)).unwrap();
+        assert_eq!(b.queue_len(), 1);
     }
 
     #[test]
     fn mixed_shapes_flush_oldest_bucket_first() {
         let mut b = batcher(100, 0);
-        b.push(req_n(0, 16));
-        b.push(req_n(1, 32));
-        b.push(req_n(2, 16));
-        b.push(req_n(3, 32));
-        b.push(req_n(4, 16));
+        b.push(req_n(0, 16)).unwrap();
+        b.push(req_n(1, 32)).unwrap();
+        b.push(req_n(2, 16)).unwrap();
+        b.push(req_n(3, 32)).unwrap();
+        b.push(req_n(4, 16)).unwrap();
         // artifact-lane flush takes the oldest request's bucket (16s)...
         let f = b.flush(|n| n).unwrap();
         assert_eq!(f.ids, vec![0, 2, 4]);
@@ -577,7 +600,7 @@ mod tests {
     fn bucketed_flush_groups_by_shape_unpadded() {
         let mut b = batcher(100, 0);
         for (i, n) in [16usize, 8, 16, 32, 8, 16].iter().enumerate() {
-            b.push(req_n(i as RequestId, *n));
+            b.push(req_n(i as RequestId, *n)).unwrap();
         }
         let buckets = b.flush_buckets();
         assert_eq!(b.queue_len(), 0);
@@ -597,11 +620,11 @@ mod tests {
         // the mode-keying contract: mixed and refined requests of one
         // edge flush as separate buckets, FIFO within each
         let mut b = batcher(100, 0);
-        b.push_mode(req_n(0, 16), RefineMode::None);
-        b.push_mode(req_n(1, 16), RefineMode::RefineAB);
-        b.push_mode(req_n(2, 16), RefineMode::None);
-        b.push_mode(req_n(3, 16), RefineMode::RefineA);
-        b.push_mode(req_n(4, 16), RefineMode::RefineAB);
+        b.push_mode(req_n(0, 16), RefineMode::None).unwrap();
+        b.push_mode(req_n(1, 16), RefineMode::RefineAB).unwrap();
+        b.push_mode(req_n(2, 16), RefineMode::None).unwrap();
+        b.push_mode(req_n(3, 16), RefineMode::RefineA).unwrap();
+        b.push_mode(req_n(4, 16), RefineMode::RefineAB).unwrap();
         let buckets = b.flush_buckets();
         assert_eq!(buckets.len(), 3);
         assert!(buckets.iter().all(|bk| bk.n == 16));
@@ -618,9 +641,9 @@ mod tests {
         // flush() is keyed on (edge, mode) of the oldest entry: a
         // refined entry of the same edge must stay queued
         let mut b = batcher(100, 0);
-        b.push_mode(req_n(0, 16), RefineMode::None);
-        b.push_mode(req_n(1, 16), RefineMode::RefineA);
-        b.push_mode(req_n(2, 16), RefineMode::None);
+        b.push_mode(req_n(0, 16), RefineMode::None).unwrap();
+        b.push_mode(req_n(1, 16), RefineMode::RefineA).unwrap();
+        b.push_mode(req_n(2, 16), RefineMode::None).unwrap();
         let f = b.flush(|n| n).unwrap();
         assert_eq!(f.ids, vec![0, 2]);
         assert_eq!(b.queue_len(), 1);
@@ -631,7 +654,7 @@ mod tests {
     #[test]
     fn plain_push_is_unrefined() {
         let mut b = batcher(100, 0);
-        b.push(req(0));
+        b.push(req(0)).unwrap();
         let buckets = b.flush_buckets();
         assert_eq!(buckets.len(), 1);
         assert_eq!(buckets[0].mode, RefineMode::None);
@@ -646,7 +669,8 @@ mod tests {
                 i,
                 uniform_matrix(&mut rng, 8, 8, -1.0, 1.0),
                 uniform_matrix(&mut rng, 8, 8, -1.0, 1.0),
-            ));
+            ))
+            .unwrap();
         }
         let buckets = b.flush_buckets();
         let bucket = &buckets[0];
@@ -673,7 +697,8 @@ mod tests {
                 i,
                 uniform_matrix(&mut rng, n, n, -1.0, 1.0),
                 uniform_matrix(&mut rng, n, n, -1.0, 1.0),
-            ));
+            ))
+            .unwrap();
         }
         for bucket in b.flush_buckets() {
             let got = batched_mixed_gemm(&bucket.a, &bucket.b);

@@ -5,6 +5,16 @@
 //! `requests == responses + shed + deadline_exceeded + errors` once the
 //! service drains: every admitted request resolves to exactly one of a
 //! response, a typed shed, a deadline shed, or a typed error reply.
+//!
+//! Under the sharded intake each shard owns one `Metrics` (no
+//! cross-shard contention on the hot path) and
+//! [`Metrics::merged_snapshot`] produces the exact combined view:
+//! counters sum, the high-water marks take the max — every shard
+//! observes the shared *global* depth counter, so the max over shards
+//! is the global high-water — and percentiles are computed over the
+//! union of the shards' latency samples (percentiles of per-shard
+//! percentiles would be wrong).  The accounting identity holds on the
+//! merged view because it holds per shard and every term is a sum.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, PoisonError};
@@ -28,6 +38,7 @@ pub struct Metrics {
     shed: AtomicU64,
     deadline_exceeded: AtomicU64,
     max_queue_depth: AtomicU64,
+    fallback_inflight: AtomicU64,
     flush_early_artifact: AtomicU64,
     flush_early_engine: AtomicU64,
     /// end-to-end latencies in nanoseconds (guarded; sampled at response)
@@ -35,7 +46,7 @@ pub struct Metrics {
 }
 
 /// Point-in-time view.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub responses: u64,
@@ -65,6 +76,11 @@ pub struct MetricsSnapshot {
     /// High-water mark of the intake queue depth (admitted, not yet
     /// dispatched to a worker).
     pub max_queue_depth: u64,
+    /// High-water mark of concurrent one-shot worker threads on the
+    /// direct/CPU-fallback lanes — bounded by
+    /// [`crate::coordinator::CoordinatorConfig::max_fallback_threads`],
+    /// and this metric is how the bound stays observable.
+    pub fallback_inflight: u64,
     /// Artifact-lane flushes triggered early by an approaching deadline
     /// (instead of capacity or the age timer).
     pub flush_early_artifact: u64,
@@ -139,6 +155,12 @@ impl Metrics {
         self.max_queue_depth.fetch_max(depth as u64, Ordering::Relaxed);
     }
 
+    /// Record an observed fallback-gate inflight worker count; keeps
+    /// the high-water mark.
+    pub fn observe_fallback_inflight(&self, inflight: usize) {
+        self.fallback_inflight.fetch_max(inflight as u64, Ordering::Relaxed);
+    }
+
     /// An artifact-lane flush fired early because of a nearing deadline.
     pub fn on_flush_early_artifact(&self) {
         self.flush_early_artifact.fetch_add(1, Ordering::Relaxed);
@@ -150,43 +172,60 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut lat = self
-            .latencies_ns
-            .lock()
-            .unwrap_or_else(PoisonError::into_inner)
-            .clone();
-        lat.sort_unstable();
-        let pick = |p: f64| -> Duration {
-            if lat.is_empty() {
-                return Duration::ZERO;
-            }
-            let idx = ((p * (lat.len() - 1) as f64).round() as usize).min(lat.len() - 1);
-            Duration::from_nanos(lat[idx])
-        };
-        MetricsSnapshot {
-            requests: self.requests.load(Ordering::Relaxed),
-            responses: self.responses.load(Ordering::Relaxed),
-            batched: self.batched.load(Ordering::Relaxed),
-            direct: self.direct.load(Ordering::Relaxed),
-            fallback: self.fallback.load(Ordering::Relaxed),
-            engine_batched: self.engine_batched.load(Ordering::Relaxed),
-            engine_refined: self.engine_refined.load(Ordering::Relaxed),
-            engine_flushes: self.engine_flushes.load(Ordering::Relaxed),
-            engine_view_bytes: self.engine_view_bytes.load(Ordering::Relaxed),
-            flushes: self.flushes.load(Ordering::Relaxed),
-            padded_slots: self.padded_slots.load(Ordering::Relaxed),
-            errors: self.errors.load(Ordering::Relaxed),
-            shed: self.shed.load(Ordering::Relaxed),
-            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
-            max_queue_depth: self.max_queue_depth.load(Ordering::Relaxed),
-            flush_early_artifact: self.flush_early_artifact.load(Ordering::Relaxed),
-            flush_early_engine: self.flush_early_engine.load(Ordering::Relaxed),
-            p50: pick(0.50),
-            p95: pick(0.95),
-            p99: pick(0.99),
-            max: pick(1.0),
-        }
+        Metrics::merged_snapshot(std::iter::once(self))
     }
+
+    /// Exact aggregate snapshot over a set of per-shard metrics (the
+    /// combined view of a sharded service; a single `Metrics` merges to
+    /// its own snapshot).  Counters sum across shards; the high-water
+    /// marks (`max_queue_depth`, `fallback_inflight`) take the max —
+    /// each shard observed the shared global counter, so the max over
+    /// shards *is* the global high-water; and `p50`/`p95`/`p99`/`max`
+    /// are computed over the **union** of the shards' latency samples,
+    /// never over per-shard percentiles.
+    pub fn merged_snapshot<'a, I: IntoIterator<Item = &'a Metrics>>(shards: I) -> MetricsSnapshot {
+        let mut s = MetricsSnapshot::default();
+        let mut lat: Vec<u64> = Vec::new();
+        for m in shards {
+            s.requests += m.requests.load(Ordering::Relaxed);
+            s.responses += m.responses.load(Ordering::Relaxed);
+            s.batched += m.batched.load(Ordering::Relaxed);
+            s.direct += m.direct.load(Ordering::Relaxed);
+            s.fallback += m.fallback.load(Ordering::Relaxed);
+            s.engine_batched += m.engine_batched.load(Ordering::Relaxed);
+            s.engine_refined += m.engine_refined.load(Ordering::Relaxed);
+            s.engine_flushes += m.engine_flushes.load(Ordering::Relaxed);
+            s.engine_view_bytes += m.engine_view_bytes.load(Ordering::Relaxed);
+            s.flushes += m.flushes.load(Ordering::Relaxed);
+            s.padded_slots += m.padded_slots.load(Ordering::Relaxed);
+            s.errors += m.errors.load(Ordering::Relaxed);
+            s.shed += m.shed.load(Ordering::Relaxed);
+            s.deadline_exceeded += m.deadline_exceeded.load(Ordering::Relaxed);
+            s.max_queue_depth = s.max_queue_depth.max(m.max_queue_depth.load(Ordering::Relaxed));
+            s.fallback_inflight =
+                s.fallback_inflight.max(m.fallback_inflight.load(Ordering::Relaxed));
+            s.flush_early_artifact += m.flush_early_artifact.load(Ordering::Relaxed);
+            s.flush_early_engine += m.flush_early_engine.load(Ordering::Relaxed);
+            lat.extend_from_slice(&m.latencies_ns.lock().unwrap_or_else(PoisonError::into_inner));
+        }
+        (s.p50, s.p95, s.p99, s.max) = percentile_set(&mut lat);
+        s
+    }
+}
+
+/// `(p50, p95, p99, max)` over a sample set (sorted in place; all zero
+/// when empty) — the one percentile definition both the per-shard
+/// snapshot and the merged view use.
+fn percentile_set(lat: &mut [u64]) -> (Duration, Duration, Duration, Duration) {
+    lat.sort_unstable();
+    let pick = |p: f64| -> Duration {
+        if lat.is_empty() {
+            return Duration::ZERO;
+        }
+        let idx = ((p * (lat.len() - 1) as f64).round() as usize).min(lat.len() - 1);
+        Duration::from_nanos(lat[idx])
+    };
+    (pick(0.50), pick(0.95), pick(0.99), pick(1.0))
 }
 
 impl MetricsSnapshot {
@@ -195,7 +234,7 @@ impl MetricsSnapshot {
         format!(
             "req={} resp={} batched={} direct={} fallback={} engine_batched={} \
              engine_refined={} engine_flushes={} engine_view_bytes={} flushes={} pad={} err={} \
-             shed={} deadline={} max_depth={} early_art={} early_eng={} \
+             shed={} deadline={} max_depth={} fallback_inflight={} early_art={} early_eng={} \
              p50={:?} p95={:?} p99={:?} max={:?}",
             self.requests,
             self.responses,
@@ -212,6 +251,7 @@ impl MetricsSnapshot {
             self.shed,
             self.deadline_exceeded,
             self.max_queue_depth,
+            self.fallback_inflight,
             self.flush_early_artifact,
             self.flush_early_engine,
             self.p50,
@@ -304,5 +344,81 @@ mod tests {
         m.observe_queue_depth(7);
         m.observe_queue_depth(2);
         assert_eq!(m.snapshot().max_queue_depth, 7);
+    }
+
+    #[test]
+    fn fallback_inflight_is_high_water_mark() {
+        let m = Metrics::default();
+        m.observe_fallback_inflight(3);
+        m.observe_fallback_inflight(1);
+        let s = m.snapshot();
+        assert_eq!(s.fallback_inflight, 3);
+        assert!(s.report().contains("fallback_inflight=3"));
+    }
+
+    #[test]
+    fn merged_snapshot_sums_counters_and_maxes_high_waters() {
+        let a = Metrics::default();
+        let b = Metrics::default();
+        a.on_request();
+        a.on_request();
+        a.on_shed();
+        a.observe_queue_depth(5);
+        a.observe_fallback_inflight(2);
+        b.on_request();
+        b.on_deadline_exceeded();
+        b.on_error();
+        b.observe_queue_depth(9);
+        b.observe_fallback_inflight(1);
+        let s = Metrics::merged_snapshot([&a, &b]);
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.deadline_exceeded, 1);
+        assert_eq!(s.errors, 1);
+        // high-water marks take the max, not the sum: both shards watch
+        // the one global depth counter
+        assert_eq!(s.max_queue_depth, 9);
+        assert_eq!(s.fallback_inflight, 2);
+    }
+
+    #[test]
+    fn merged_percentiles_use_the_union_of_samples() {
+        // shard a holds the slow tail, shard b the fast bulk: the
+        // merged max/p50 must come from the union, not from averaging
+        // or summing per-shard percentiles
+        let a = Metrics::default();
+        let b = Metrics::default();
+        a.on_response(Duration::from_millis(100), false);
+        for i in 1..=9u64 {
+            b.on_response(Duration::from_millis(i), false);
+        }
+        let s = Metrics::merged_snapshot([&a, &b]);
+        assert_eq!(s.responses, 10);
+        assert_eq!(s.max, Duration::from_millis(100));
+        assert!(s.p50 <= Duration::from_millis(9), "p50 {:?}", s.p50);
+        assert!(s.p50 >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn merged_snapshot_of_one_equals_snapshot() {
+        let m = Metrics::default();
+        m.on_request();
+        m.on_response(Duration::from_millis(3), true);
+        m.observe_queue_depth(4);
+        let lone = m.snapshot();
+        let merged = Metrics::merged_snapshot(std::iter::once(&m));
+        assert_eq!(lone.requests, merged.requests);
+        assert_eq!(lone.responses, merged.responses);
+        assert_eq!(lone.max_queue_depth, merged.max_queue_depth);
+        assert_eq!(lone.p50, merged.p50);
+        assert_eq!(lone.max, merged.max);
+    }
+
+    #[test]
+    fn merged_snapshot_of_none_is_zero() {
+        let s = Metrics::merged_snapshot(std::iter::empty::<&Metrics>());
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p50, Duration::ZERO);
+        assert_eq!(s.max, Duration::ZERO);
     }
 }

@@ -16,13 +16,23 @@
 //!
 //! [`router`] classifies requests (tile-batchable vs artifact-direct vs
 //! square-bucketable vs CPU fallback), [`service`] wires router +
-//! batchers + policy over the PJRT [`crate::runtime::executor`] with a
-//! threaded event loop (the offline image has no async runtime — see
+//! batchers + policy over the PJRT [`crate::runtime::executor`] with
+//! threaded event loops (the offline image has no async runtime — see
 //! Cargo.toml), and [`metrics`] counts everything.  Square requests no
 //! artifact can serve ride the **bucketed engine lane**: un-padded
 //! same-shape buckets executed on the service's cached per-edge
 //! [`crate::gemm::plan::GemmPlan`]s, so they are batched and
 //! plan-amortized instead of falling back one request at a time.
+//!
+//! Intake is **sharded** ([`CoordinatorConfig::shards`], default one
+//! shard per core): each shard runs its own submission channel,
+//! dispatcher loop, and batcher pair, with requests routed by a stable
+//! hash of their `(edge, precision mode)` bucket key so every request
+//! of one key lands on one shard and bucket density survives sharding.
+//! The engine worker pool stays process-global, the admission bound is
+//! one shared counter across shards, and
+//! [`Coordinator::metrics_snapshot`](service::Coordinator::metrics_snapshot)
+//! aggregates the per-shard [`Metrics`] exactly.
 //!
 //! The service is **overload-safe**: admission is bounded
 //! ([`CoordinatorConfig::queue_cap`] → [`CoordinatorError::Shed`]),

@@ -1,43 +1,71 @@
-//! The coordinator service: a threaded event loop wiring router, dynamic
-//! batcher, precision policy and the PJRT executor into a GEMM server.
+//! The coordinator service: sharded intake feeding router, dynamic
+//! batchers, precision policy and the PJRT executor as a GEMM server.
 //!
 //! Architecture (no async runtime in the offline image — Cargo.toml):
 //!
 //! ```text
-//!  clients --Submission--> [dispatcher thread] --route--+--> batcher --flush--+
-//!                                                       |                     v
-//!                                                       |        [worker thread per job]
-//!                                                       +--direct/fallback--> |
-//!                                                                             v
-//!                                                        [pjrt-executor thread (Engine)]
+//!  clients --submit()--[stable (edge, mode) hash]--+
+//!      |                                           |
+//!      v                                           v
+//!  [shard 0 dispatcher] ... [shard N-1 dispatcher]     (N = cores)
+//!   route + 2 batchers       route + 2 batchers
+//!      |        \               |        \
+//!      |         +--flush-------+---------+--> [bounded one-shot workers]
+//!      |                        |                      |
+//!      +------------------------+----------------------+
+//!                               v
+//!         one process-global engine pool + pjrt-executor thread
 //! ```
 //!
-//! The dispatcher never blocks on execution: direct jobs and batch
-//! flushes run on short-lived worker threads that submit to the executor
-//! thread and deliver responses; the dispatcher keeps batching while
-//! earlier work executes.
+//! **Sharded intake (PR 7).**  PR 6 drained every request through one
+//! dispatcher thread on one mpsc channel, which made intake — not the
+//! engine pool — the throughput ceiling.  Intake is now split across
+//! [`CoordinatorConfig::shards`] shards (default: one per core), each
+//! with its own submission channel, dispatcher loop, and pair of
+//! batchers (artifact + engine lanes).  Requests are routed by a
+//! *stable* FNV-1a hash of their bucket key `(edge, precision mode)`
+//! (non-square requests hash their full `m x k x n` shape), so a given
+//! bucket key always lands on the same shard and bucket density — the
+//! batching win of both lanes — survives sharding; refined keys keep
+//! their mode in the hash, so refined and unrefined traffic of one edge
+//! still never mix.  What is *not* sharded:
 //!
-//! Two host-engine lanes exist below the artifact lanes:
+//! * the **engine worker pool** ([`crate::gemm::engine`]) stays
+//!   process-global — shards contend for compute, not for intake;
+//! * the **admission bound**: all shards share one atomic queue-depth
+//!   counter, so `queue_cap` bounds the *service*, not each shard, and
+//!   the PR 6 invariant (`max_queue_depth <= queue_cap`, typed
+//!   [`CoordinatorError::Shed`]) holds globally;
+//! * the **metrics identity**: each shard records into its own
+//!   [`Metrics`] (no cross-shard cache-line ping-pong on the hot path),
+//!   and [`Coordinator::metrics_snapshot`] aggregates them exactly —
+//!   counters sum, high-waters take the max, percentiles are computed
+//!   over the union of samples.
+//!
+//! The dispatcher never blocks on execution: batch flushes run on
+//! worker threads that submit to the executor/engine and deliver
+//! responses; the dispatcher keeps batching while earlier work
+//! executes.  Two host-engine lanes exist below the artifact lanes:
 //!
 //! * the **bucketed engine lane** (`Route::EngineBatch`): square
 //!   requests with no artifact — refined or not — accumulate in their
-//!   own dynamic batcher and flush as un-padded per-`(edge, mode)`
-//!   buckets ([`Batcher::flush_buckets`]) onto the dispatcher's
-//!   `PlanCache` — one cached [`GemmPlan`] per bucket key, built once,
-//!   executed (`execute_batched_views`, a zero-clone borrowed-view
-//!   gather counted by the `engine_view_bytes` metric) for every
-//!   subsequent bucket of that key; refined keys batch their per-entry
-//!   Eq. 1–3 chains on the
-//!   engine pool.  The throughput win of this lane is the *bucketing*
-//!   (one pool dispatch per bucket instead of one thread per request);
-//!   the cached plan contributes the validated descriptor and a uniform
-//!   execution configuration per key — batched execution packs per
-//!   entry inside the engine, so per-operand panel reuse does not apply
-//!   here;
+//!   shard's dynamic batcher and flush as un-padded per-`(edge, mode)`
+//!   buckets ([`Batcher::flush_buckets`]) onto the shard's `PlanCache`
+//!   — one cached [`GemmPlan`] per bucket key, built once, executed
+//!   (`execute_batched_views`, a zero-clone borrowed-view gather
+//!   counted by the `engine_view_bytes` metric) for every subsequent
+//!   bucket of that key; refined keys batch their per-entry Eq. 1–3
+//!   chains on the engine pool.  Key-hash routing means a key's plan is
+//!   cached on exactly one shard — sharding multiplies intake without
+//!   duplicating plan builds;
 //! * the **CPU fallback lane** (`Route::CpuFallback`): anything left
-//!   (non-square only, now that refined square traffic rides the engine
-//!   lane) runs one-shot through the cuBLAS-style handle, which itself
-//!   executes as a plan.
+//!   (non-square only) runs one-shot through the cuBLAS-style handle.
+//!   One-shot work (this lane and `Route::Direct`) no longer spawns an
+//!   unbounded thread per request: a process-wide [`FallbackGate`] caps
+//!   concurrent one-shot workers at
+//!   [`CoordinatorConfig::max_fallback_threads`] and queues the rest,
+//!   with the `fallback_inflight` high-water metric making the bound
+//!   observable.
 //!
 //! # Overload safety
 //!
@@ -45,10 +73,11 @@
 //! [`crate::docs::serving`]):
 //!
 //! * **Admission control** — intake is bounded by
-//!   [`CoordinatorConfig::queue_cap`]: a submit against a full queue is
-//!   rejected *immediately* with [`CoordinatorError::Shed`] on the reply
-//!   channel (the dispatcher never sees it), so queue depth — and
-//!   therefore queueing delay — is bounded under any offered load.
+//!   [`CoordinatorConfig::queue_cap`] across *all* shards: a submit
+//!   against a full queue is rejected *immediately* with
+//!   [`CoordinatorError::Shed`] on the reply channel (no dispatcher
+//!   ever sees it), so queue depth — and therefore queueing delay — is
+//!   bounded under any offered load.
 //! * **Deadlines** — a request carrying [`GemmRequest::deadline`] is
 //!   shed with [`CoordinatorError::DeadlineExceeded`] if it expires
 //!   before execution (checked at dispatch and while queued in either
@@ -57,19 +86,22 @@
 //! * **Fault isolation** — every worker runs its compute under
 //!   `catch_unwind`; a panic becomes a typed
 //!   [`CoordinatorError::Internal`] reply instead of a dropped channel.
-//!   The dispatcher itself has no panic path per request: plan-build
-//!   failures in the engine lane fan out as typed errors to the bucket.
+//!   The dispatchers themselves have no panic path per request:
+//!   plan-build failures fan out as typed errors to the bucket, and a
+//!   non-square request that reaches a batcher (a routing-invariant
+//!   violation) is returned by [`Batcher::push_mode`] and shed typed
+//!   instead of killing the shard.
 //! * **Reply totality** — every submitted request receives exactly one
 //!   reply.  Shutdown delivers [`CoordinatorError::ShuttingDown`] to
-//!   everything still queued (batcher entries and channel backlog);
-//!   in-flight workers complete normally.
+//!   everything still queued on every shard (batcher entries and
+//!   channel backlog); in-flight workers complete normally.
 
 use std::any::Any;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -82,7 +114,7 @@ use crate::precision::RefineMode;
 use crate::runtime::{ExecutorHandle, ExecutorServer, Manifest, TensorData};
 
 use super::batcher::{Batcher, BatcherConfig, FlushTrigger};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, MetricsSnapshot};
 use super::policy::{PolicyConfig, PrecisionPolicy};
 use super::request::{
     CoordinatorError, CoordinatorResult, GemmRequest, GemmResponse, RequestId, ServedBy,
@@ -102,11 +134,25 @@ pub struct CoordinatorConfig {
     /// to ~600 ms).  Costs one extra engine (compiled-executable cache).
     pub dedicated_direct_lane: bool,
     /// Admission-control bound: the maximum number of requests admitted
-    /// but not yet handed to a worker (intake channel + batcher queues).
-    /// A submit against a full queue is rejected immediately with
+    /// but not yet handed to a worker (intake channels + batcher
+    /// queues), counted across **all shards** by one shared atomic.  A
+    /// submit against a full queue is rejected immediately with
     /// [`CoordinatorError::Shed`] — the overload valve that keeps
     /// queueing delay bounded instead of growing without limit.
     pub queue_cap: usize,
+    /// Number of intake shards — per-core submission channels, each
+    /// with its own dispatcher thread and pair of batchers, all feeding
+    /// the one process-global engine pool.  `0` (the default) resolves
+    /// to one shard per core; `1` reproduces the PR 6 single-dispatcher
+    /// service exactly.
+    pub shards: usize,
+    /// Cap on concurrent one-shot worker threads across the direct and
+    /// CPU-fallback lanes (shared by all shards).  Work past the cap
+    /// queues inside the gate and runs on the next worker that frees
+    /// up, so an overload of odd-shaped requests cannot amplify into
+    /// unbounded thread creation; the `fallback_inflight` high-water
+    /// metric records how close the gate came to the cap.
+    pub max_fallback_threads: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -117,6 +163,8 @@ impl Default for CoordinatorConfig {
             policy: PolicyConfig::default(),
             dedicated_direct_lane: true,
             queue_cap: 4096,
+            shards: 0,
+            max_fallback_threads: 8,
         }
     }
 }
@@ -132,14 +180,27 @@ enum Event {
     Shutdown,
 }
 
-/// The running service.
-pub struct Coordinator {
+/// One intake shard: its submission channel and dispatcher thread.
+struct Shard {
     events: Sender<Event>,
     dispatcher: Option<JoinHandle<()>>,
-    metrics: Arc<Metrics>,
+}
+
+/// The running service.
+pub struct Coordinator {
+    shards: Vec<Shard>,
+    /// Per-shard metrics, index-aligned with `shards` (aggregated
+    /// exactly by [`Coordinator::metrics_snapshot`]).
+    metrics: Vec<Arc<Metrics>>,
+    /// Front-end copy of the precision policy: the shard hash needs the
+    /// resolved `(edge, mode)` bucket key at submit time, and the
+    /// policy's choice is deterministic, so resolving it here and again
+    /// in the shard's router always agrees.
+    policy: PrecisionPolicy,
     next_id: AtomicU64,
-    /// Admitted-but-not-yet-worked requests (shared with the dispatcher,
-    /// which decrements as work leaves the queues).
+    /// Admitted-but-not-yet-worked requests across all shards (shared
+    /// with every dispatcher, which decrements as work leaves its
+    /// queues) — the one counter that makes `queue_cap` a global bound.
     depth: Arc<AtomicUsize>,
     queue_cap: usize,
     // keep the executor threads alive for the service's lifetime
@@ -167,19 +228,34 @@ impl Coordinator {
         };
         let direct_handle =
             direct_executor.as_ref().map(|e| e.handle()).unwrap_or_else(|| handle.clone());
-        let metrics = Arc::new(Metrics::default());
+        let n_shards = resolve_shards(cfg.shards);
         let depth = Arc::new(AtomicUsize::new(0));
-        let (tx, rx) = channel::<Event>();
-        let m2 = metrics.clone();
-        let d2 = depth.clone();
-        let dispatcher = std::thread::Builder::new()
-            .name("coordinator".into())
-            .spawn(move || dispatcher_loop(cfg, manifest, handle, direct_handle, m2, d2, rx))
-            .context("spawning dispatcher")?;
+        let gate = Arc::new(FallbackGate::new(cfg.max_fallback_threads));
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut metrics = Vec::with_capacity(n_shards);
+        for i in 0..n_shards {
+            let shard_metrics = Arc::new(Metrics::default());
+            let (tx, rx) = channel::<Event>();
+            let ctx = ShardCtx {
+                cfg,
+                manifest: manifest.clone(),
+                executor: handle.clone(),
+                direct: direct_handle.clone(),
+                metrics: shard_metrics.clone(),
+                depth: depth.clone(),
+                gate: gate.clone(),
+            };
+            let dispatcher = std::thread::Builder::new()
+                .name(format!("coordinator-{i}"))
+                .spawn(move || dispatcher_loop(ctx, rx))
+                .context("spawning dispatcher shard")?;
+            shards.push(Shard { events: tx, dispatcher: Some(dispatcher) });
+            metrics.push(shard_metrics);
+        }
         Ok(Coordinator {
-            events: tx,
-            dispatcher: Some(dispatcher),
+            shards,
             metrics,
+            policy: PrecisionPolicy::new(cfg.policy),
             next_id: AtomicU64::new(1),
             depth,
             queue_cap: cfg.queue_cap,
@@ -192,28 +268,34 @@ impl Coordinator {
     /// resolves to exactly one [`CoordinatorResult`] on that channel:
     /// admission rejections ([`CoordinatorError::Shed`]) and
     /// shutdown rejections ([`CoordinatorError::ShuttingDown`]) are
-    /// delivered immediately, before the request ever reaches the
-    /// dispatcher.
+    /// delivered immediately, before the request ever reaches a
+    /// dispatcher.  The request is routed to its shard by the stable
+    /// hash of its `(edge, precision mode)` bucket key, so every
+    /// request of one key shares one shard's batcher — and one bucket.
     pub fn submit(&self, mut req: GemmRequest) -> Receiver<CoordinatorResult> {
         if req.id == 0 {
             req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         }
-        self.metrics.on_request();
+        let mode = self.policy.choose(&req);
+        let shard = shard_for(&req, mode, self.shards.len());
+        let metrics = &self.metrics[shard];
+        metrics.on_request();
         let (tx, rx) = channel();
-        // admission control: reserve a queue slot or shed right here
+        // admission control: reserve a slot in the global queue budget
+        // (shared by all shards) or shed right here
         let prev = self.depth.fetch_add(1, Ordering::Relaxed);
         if prev >= self.queue_cap {
             self.depth.fetch_sub(1, Ordering::Relaxed);
-            self.metrics.on_shed();
+            metrics.on_shed();
             let _ = tx.send(Err(CoordinatorError::Shed { queue_depth: prev }));
             return rx;
         }
-        self.metrics.observe_queue_depth(prev + 1);
+        metrics.observe_queue_depth(prev + 1);
         let sub = Submission { req, submitted: Instant::now(), reply: tx.clone() };
-        if self.events.send(Event::Submit(sub)).is_err() {
+        if self.shards[shard].events.send(Event::Submit(sub)).is_err() {
             // dispatcher is gone: answer here instead of hanging the client
             self.depth.fetch_sub(1, Ordering::Relaxed);
-            self.metrics.on_error();
+            metrics.on_error();
             let _ = tx.send(Err(CoordinatorError::ShuttingDown));
         }
         rx
@@ -245,12 +327,34 @@ impl Coordinator {
         }
     }
 
-    pub fn metrics(&self) -> &Metrics {
-        &self.metrics
+    /// Combined service metrics: exact aggregation across all intake
+    /// shards.  Counters sum, the high-water marks (`max_queue_depth`,
+    /// `fallback_inflight`) take the max — every shard observes the one
+    /// *global* depth counter, so the max over shards is the global
+    /// high-water — and latency percentiles are computed over the union
+    /// of the shards' samples.  The accounting identity
+    /// `requests == responses + shed + deadline_exceeded + errors`
+    /// holds on this view exactly as it did for the single-dispatcher
+    /// service.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        Metrics::merged_snapshot(self.metrics.iter().map(Arc::as_ref))
     }
 
-    /// Current admitted-but-not-yet-worked queue depth (intake channel +
-    /// batcher queues).  Bounded by [`CoordinatorConfig::queue_cap`].
+    /// Per-shard metric snapshots, index == shard id (the
+    /// `bench.serving.v2` `per_shard` rows).
+    pub fn shard_snapshots(&self) -> Vec<MetricsSnapshot> {
+        self.metrics.iter().map(|m| m.snapshot()).collect()
+    }
+
+    /// Number of intake shards this service is running (the resolved
+    /// value of [`CoordinatorConfig::shards`]).
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Current admitted-but-not-yet-worked queue depth across all
+    /// shards (intake channels + batcher queues).  Bounded by
+    /// [`CoordinatorConfig::queue_cap`].
     pub fn queue_depth(&self) -> usize {
         self.depth.load(Ordering::Relaxed)
     }
@@ -280,19 +384,24 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Graceful shutdown: stops the dispatcher.  Work already handed to
-    /// a worker completes and its reply is delivered; everything still
-    /// queued (batcher entries, channel backlog) is answered
-    /// [`CoordinatorError::ShuttingDown`] — no reply channel is ever
-    /// dropped unanswered.
+    /// Graceful shutdown: stops every shard's dispatcher.  Work already
+    /// handed to a worker completes and its reply is delivered;
+    /// everything still queued on any shard (batcher entries, channel
+    /// backlog) is answered [`CoordinatorError::ShuttingDown`] — no
+    /// reply channel is ever dropped unanswered.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
 
     fn shutdown_inner(&mut self) {
-        let _ = self.events.send(Event::Shutdown);
-        if let Some(d) = self.dispatcher.take() {
-            let _ = d.join();
+        // signal every shard first, then join: shards drain in parallel
+        for s in &self.shards {
+            let _ = s.events.send(Event::Shutdown);
+        }
+        for s in &mut self.shards {
+            if let Some(d) = s.dispatcher.take() {
+                let _ = d.join();
+            }
         }
     }
 }
@@ -300,6 +409,132 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.shutdown_inner();
+    }
+}
+
+/// Resolve the configured shard count (`0` = one shard per core).
+fn resolve_shards(configured: usize) -> usize {
+    if configured > 0 {
+        return configured;
+    }
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+/// The stable routing hash: FNV-1a over the request's bucket key.
+/// Square requests reduce to `(edge, edge, edge, mode)` — exactly the
+/// `(edge, mode)` key both batcher lanes bucket by — so every request
+/// of one bucket key lands on the same shard and bucket density
+/// survives sharding; refined keys carry their mode in the hash, so a
+/// refined stream of some edge stays co-located (and apart from the
+/// unrefined stream of that edge) no matter the shard count.
+/// Non-square requests hash their full `m x k x n` shape.
+fn shard_for(req: &GemmRequest, mode: RefineMode, shards: usize) -> usize {
+    if shards <= 1 {
+        return 0;
+    }
+    let (m, k) = req.a.shape();
+    let (_, n) = req.b.shape();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for word in [m as u64, k as u64, n as u64, mode as u64] {
+        for byte in word.to_le_bytes() {
+            h ^= u64::from(byte);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    (h % shards as u64) as usize
+}
+
+/// Everything one intake shard's dispatcher works with: the immutable
+/// wiring (config, manifest, executor handles) plus the shared service
+/// state (global depth counter, fallback gate) and the shard's own
+/// metrics sink.
+struct ShardCtx {
+    cfg: CoordinatorConfig,
+    manifest: Manifest,
+    /// Batch-lane executor (shared across shards).
+    executor: ExecutorHandle,
+    /// Direct-lane executor (the dedicated engine when configured).
+    direct: ExecutorHandle,
+    metrics: Arc<Metrics>,
+    depth: Arc<AtomicUsize>,
+    gate: Arc<FallbackGate>,
+}
+
+/// A one-shot unit of work for the bounded direct/fallback lanes.
+type FallbackJob = Box<dyn FnOnce() + Send>;
+
+/// Caps the one-shot worker threads of the direct and CPU-fallback
+/// lanes: at most `cap` concurrent threads; jobs past the cap queue
+/// FIFO and run on the next worker that frees up.  Admission control
+/// bounds *intake* upstream; this gate bounds *execution concurrency*,
+/// so a burst of odd-shaped requests cannot amplify into thousands of
+/// short-lived threads.  The permit hand-off (acquire, queue, release)
+/// all happens under one lock, so a job can never be queued while no
+/// worker remains to take it.
+struct FallbackGate {
+    cap: usize,
+    state: Mutex<GateState>,
+}
+
+struct GateState {
+    inflight: usize,
+    queued: VecDeque<FallbackJob>,
+}
+
+impl FallbackGate {
+    fn new(cap: usize) -> FallbackGate {
+        FallbackGate {
+            cap: cap.max(1),
+            state: Mutex::new(GateState { inflight: 0, queued: VecDeque::new() }),
+        }
+    }
+
+    /// Run `job` on a bounded worker thread — spawning one if under the
+    /// cap, queueing the job otherwise.  Returns the inflight worker
+    /// count observed, which feeds the `fallback_inflight` high-water
+    /// metric (never exceeds the cap, by construction).
+    fn run(self: &Arc<Self>, job: FallbackJob) -> usize {
+        let (spawn_job, inflight) = {
+            let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+            if st.inflight >= self.cap {
+                st.queued.push_back(job);
+                (None, st.inflight)
+            } else {
+                st.inflight += 1;
+                (Some(job), st.inflight)
+            }
+        };
+        if let Some(job) = spawn_job {
+            let gate = self.clone();
+            std::thread::spawn(move || gate.work(job));
+        }
+        inflight
+    }
+
+    /// Worker body: run the job, then keep draining queued jobs,
+    /// releasing the permit only under the same lock that admits new
+    /// jobs (no strand window between "queue looked empty" and "permit
+    /// released").
+    fn work(self: Arc<Self>, first: FallbackJob) {
+        let mut job = first;
+        loop {
+            // the lanes wrap their compute in catch_unwind already;
+            // this outer guard keeps a panicking job from leaking the
+            // gate permit (which would shrink the cap forever)
+            let _ = catch_unwind(AssertUnwindSafe(job));
+            let next = {
+                let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+                let popped = st.queued.pop_front();
+                if popped.is_none() {
+                    st.inflight -= 1;
+                }
+                popped
+            };
+            match next {
+                Some(j) => job = j,
+                None => return,
+            }
+        }
     }
 }
 
@@ -317,7 +552,9 @@ struct PendingReply {
 /// validated descriptor and execution configuration for its key
 /// (batched execution packs per entry inside the engine, so this cache
 /// is about a stable, validated route per key — the speed of the lane
-/// comes from bucketing onto the pool).
+/// comes from bucketing onto the pool).  Key-hash shard routing means
+/// each key builds its plan on exactly one shard: shard caches
+/// partition the key space instead of duplicating it.
 struct PlanCache {
     plans: HashMap<(usize, RefineMode), Arc<GemmPlan>>,
 }
@@ -374,21 +611,17 @@ fn deliver_err(reply: &Sender<CoordinatorResult>, metrics: &Metrics, err: Coordi
     let _ = reply.send(Err(err));
 }
 
-#[allow(clippy::too_many_arguments)]
-fn dispatcher_loop(
-    cfg: CoordinatorConfig,
-    manifest: Manifest,
-    executor: ExecutorHandle,
-    direct_executor: ExecutorHandle,
-    metrics: Arc<Metrics>,
-    depth: Arc<AtomicUsize>,
-    rx: Receiver<Event>,
-) {
-    let router = Router::new(manifest.clone(), cfg.tile, PrecisionPolicy::new(cfg.policy));
-    let mut batcher = Batcher::new(cfg.tile, effective_batcher_cfg(cfg, &manifest));
+/// One shard's dispatcher loop — the PR 6 single-dispatcher event loop,
+/// now instantiated once per shard over shard-local batchers and a
+/// shard-local plan cache, with the shared admission counter and
+/// fallback gate threaded through `ctx`.
+fn dispatcher_loop(ctx: ShardCtx, rx: Receiver<Event>) {
+    let router =
+        Router::new(ctx.manifest.clone(), ctx.cfg.tile, PrecisionPolicy::new(ctx.cfg.policy));
+    let mut batcher = Batcher::new(ctx.cfg.tile, effective_batcher_cfg(ctx.cfg, &ctx.manifest));
     // second batcher for the engine lane: square artifact-less requests
     // bucket here and execute on cached plans (never padded, never PJRT)
-    let mut engine_batcher = Batcher::new(cfg.tile, cfg.batcher);
+    let mut engine_batcher = Batcher::new(ctx.cfg.tile, ctx.cfg.batcher);
     let mut plans = PlanCache::new();
     let mut pending: HashMap<RequestId, PendingReply> = HashMap::new();
 
@@ -397,23 +630,23 @@ fn dispatcher_loop(
         // then flush if due, then wait for the next event or timer
         let now = Instant::now();
         for id in batcher.shed_expired(now).into_iter().chain(engine_batcher.shed_expired(now)) {
-            depth.fetch_sub(1, Ordering::Relaxed);
+            ctx.depth.fetch_sub(1, Ordering::Relaxed);
             if let Some(p) = pending.remove(&id) {
-                deliver_err(&p.reply, &metrics, CoordinatorError::DeadlineExceeded);
+                deliver_err(&p.reply, &ctx.metrics, CoordinatorError::DeadlineExceeded);
             }
         }
         if let Some(trigger) = batcher.flush_due(now) {
             if trigger == FlushTrigger::Deadline {
-                metrics.on_flush_early_artifact();
+                ctx.metrics.on_flush_early_artifact();
             }
-            flush_batch(&mut batcher, &manifest, &executor, &metrics, &depth, &mut pending);
+            flush_batch(&ctx, &mut batcher, &mut pending);
             continue;
         }
         if let Some(trigger) = engine_batcher.flush_due(now) {
             if trigger == FlushTrigger::Deadline {
-                metrics.on_flush_early_engine();
+                ctx.metrics.on_flush_early_engine();
             }
-            flush_engine_buckets(&mut engine_batcher, &mut plans, &metrics, &depth, &mut pending);
+            flush_engine_buckets(&ctx, &mut engine_batcher, &mut plans, &mut pending);
             continue;
         }
         let timeout = [batcher.time_to_flush(now), engine_batcher.time_to_flush(now)]
@@ -426,30 +659,14 @@ fn dispatcher_loop(
             Ok(Event::Submit(sub)) => {
                 if sub.req.deadline.is_some_and(|d| Instant::now() >= d) {
                     // already expired on arrival: shed instead of executing
-                    depth.fetch_sub(1, Ordering::Relaxed);
-                    deliver_err(&sub.reply, &metrics, CoordinatorError::DeadlineExceeded);
+                    ctx.depth.fetch_sub(1, Ordering::Relaxed);
+                    deliver_err(&sub.reply, &ctx.metrics, CoordinatorError::DeadlineExceeded);
                     continue;
                 }
-                dispatch_one(
-                    sub,
-                    &router,
-                    &mut batcher,
-                    &mut engine_batcher,
-                    &direct_executor,
-                    &metrics,
-                    &depth,
-                    &mut pending,
-                );
+                dispatch_one(&ctx, sub, &router, &mut batcher, &mut engine_batcher, &mut pending);
             }
             Ok(Event::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
-                shed_on_shutdown(
-                    &mut batcher,
-                    &mut engine_batcher,
-                    &rx,
-                    &metrics,
-                    &depth,
-                    &mut pending,
-                );
+                shed_on_shutdown(&ctx, &mut batcher, &mut engine_batcher, &rx, &mut pending);
                 break;
             }
             Err(RecvTimeoutError::Timeout) => {}
@@ -457,28 +674,28 @@ fn dispatcher_loop(
     }
 }
 
-/// Shutdown: everything still queued — batcher entries and the channel
-/// backlog — is answered [`CoordinatorError::ShuttingDown`].  Work
-/// already handed to a worker is untouched (its reply arrives when the
-/// worker finishes).  After this, dropping `rx` cannot orphan anyone.
+/// Shutdown: everything still queued on this shard — batcher entries
+/// and the channel backlog — is answered
+/// [`CoordinatorError::ShuttingDown`].  Work already handed to a worker
+/// is untouched (its reply arrives when the worker finishes).  After
+/// this, dropping `rx` cannot orphan anyone.
 fn shed_on_shutdown(
+    ctx: &ShardCtx,
     batcher: &mut Batcher,
     engine_batcher: &mut Batcher,
     rx: &Receiver<Event>,
-    metrics: &Arc<Metrics>,
-    depth: &Arc<AtomicUsize>,
     pending: &mut HashMap<RequestId, PendingReply>,
 ) {
     for id in batcher.drain_ids().into_iter().chain(engine_batcher.drain_ids()) {
-        depth.fetch_sub(1, Ordering::Relaxed);
+        ctx.depth.fetch_sub(1, Ordering::Relaxed);
         if let Some(p) = pending.remove(&id) {
-            deliver_err(&p.reply, metrics, CoordinatorError::ShuttingDown);
+            deliver_err(&p.reply, &ctx.metrics, CoordinatorError::ShuttingDown);
         }
     }
     while let Ok(ev) = rx.try_recv() {
         if let Event::Submit(sub) = ev {
-            depth.fetch_sub(1, Ordering::Relaxed);
-            deliver_err(&sub.reply, metrics, CoordinatorError::ShuttingDown);
+            ctx.depth.fetch_sub(1, Ordering::Relaxed);
+            deliver_err(&sub.reply, &ctx.metrics, CoordinatorError::ShuttingDown);
         }
     }
 }
@@ -492,39 +709,65 @@ fn effective_batcher_cfg(cfg: CoordinatorConfig, manifest: &Manifest) -> Batcher
     BatcherConfig { max_batch: cfg.batcher.max_batch.min(cap), ..cfg.batcher }
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Enqueue a routed submission on a batcher lane, registering the reply
+/// under `pending` — or, if the batcher returns the request (non-square
+/// work that should never have been routed here), shed it with a typed
+/// [`CoordinatorError::Internal`] instead of panicking the dispatcher.
+fn enqueue_batched(
+    ctx: &ShardCtx,
+    sub: Submission,
+    mode: Option<RefineMode>,
+    batcher: &mut Batcher,
+    pending: &mut HashMap<RequestId, PendingReply>,
+) {
+    let Submission { req, submitted, reply } = sub;
+    let id = req.id;
+    let pushed = match mode {
+        Some(mode) => batcher.push_mode(req, mode),
+        None => batcher.push(req),
+    };
+    match pushed {
+        Ok(()) => {
+            pending.insert(id, PendingReply { reply, submitted });
+        }
+        Err(req) => {
+            // routing invariant violated: the batcher handed the
+            // request back instead of panicking — shed it typed and
+            // keep the dispatcher (and every queued request) alive
+            ctx.depth.fetch_sub(1, Ordering::Relaxed);
+            let (m, k) = req.a.shape();
+            let (_, n) = req.b.shape();
+            deliver_err(
+                &reply,
+                &ctx.metrics,
+                CoordinatorError::Internal(format!(
+                    "non-square request {id} ({m}x{k}x{n}) routed to a batcher"
+                )),
+            );
+        }
+    }
+}
+
 fn dispatch_one(
+    ctx: &ShardCtx,
     sub: Submission,
     router: &Router,
     batcher: &mut Batcher,
     engine_batcher: &mut Batcher,
-    executor: &ExecutorHandle,
-    metrics: &Arc<Metrics>,
-    depth: &Arc<AtomicUsize>,
     pending: &mut HashMap<RequestId, PendingReply>,
 ) {
     match router.route(&sub.req) {
-        Route::Batch { .. } => {
-            pending.insert(
-                sub.req.id,
-                PendingReply { reply: sub.reply, submitted: sub.submitted },
-            );
-            batcher.push(sub.req);
-        }
+        Route::Batch { .. } => enqueue_batched(ctx, sub, None, batcher, pending),
         Route::EngineBatch { mode, .. } => {
-            pending.insert(
-                sub.req.id,
-                PendingReply { reply: sub.reply, submitted: sub.submitted },
-            );
-            engine_batcher.push_mode(sub.req, mode);
+            enqueue_batched(ctx, sub, Some(mode), engine_batcher, pending)
         }
         Route::Direct { artifact, mode } => {
-            metrics.on_direct();
+            ctx.metrics.on_direct();
             // the request leaves the queue for a worker: release its slot
-            depth.fetch_sub(1, Ordering::Relaxed);
-            let executor = executor.clone();
-            let metrics = metrics.clone();
-            std::thread::spawn(move || {
+            ctx.depth.fetch_sub(1, Ordering::Relaxed);
+            let executor = ctx.direct.clone();
+            let metrics = ctx.metrics.clone();
+            let inflight = ctx.gate.run(Box::new(move || {
                 let queued = sub.submitted.elapsed();
                 let t0 = Instant::now();
                 let outcome = catch_unwind(AssertUnwindSafe(|| {
@@ -554,13 +797,14 @@ fn dispatch_one(
                     Err(p) => Err(CoordinatorError::Internal(panic_message(p))),
                 };
                 finish(result, &sub.reply, &metrics, sub.submitted, false);
-            });
+            }));
+            ctx.metrics.observe_fallback_inflight(inflight);
         }
         Route::CpuFallback { mode } => {
-            metrics.on_fallback();
-            depth.fetch_sub(1, Ordering::Relaxed);
-            let metrics = metrics.clone();
-            std::thread::spawn(move || {
+            ctx.metrics.on_fallback();
+            ctx.depth.fetch_sub(1, Ordering::Relaxed);
+            let metrics = ctx.metrics.clone();
+            let inflight = ctx.gate.run(Box::new(move || {
                 let queued = sub.submitted.elapsed();
                 let t0 = Instant::now();
                 let outcome = catch_unwind(AssertUnwindSafe(|| {
@@ -589,29 +833,27 @@ fn dispatch_one(
                     Err(p) => Err(CoordinatorError::Internal(panic_message(p))),
                 };
                 finish(result, &sub.reply, &metrics, sub.submitted, false);
-            });
+            }));
+            ctx.metrics.observe_fallback_inflight(inflight);
         }
     }
 }
 
 fn flush_batch(
+    ctx: &ShardCtx,
     batcher: &mut Batcher,
-    manifest: &Manifest,
-    executor: &ExecutorHandle,
-    metrics: &Arc<Metrics>,
-    depth: &Arc<AtomicUsize>,
     pending: &mut HashMap<RequestId, PendingReply>,
 ) {
     let tile = batcher.tile();
     let pad_to = |len: usize| -> usize {
-        manifest
+        ctx.manifest
             .batched_at_least(len, tile)
             .and_then(|m| m.batch)
             .unwrap_or(len)
     };
     let Some(flushed) = batcher.flush(pad_to) else { return };
     // the flushed entries leave the queue (served or failed): free slots
-    depth.fetch_sub(flushed.real_len(), Ordering::Relaxed);
+    ctx.depth.fetch_sub(flushed.real_len(), Ordering::Relaxed);
     // the artifact lane is compiled for `tile`-edge entries only; the
     // router guarantees it — a mismatch is a typed error for the batch,
     // never a dispatcher panic
@@ -622,14 +864,14 @@ fn flush_batch(
         ));
         for id in &flushed.ids {
             if let Some(p) = pending.remove(id) {
-                deliver_err(&p.reply, metrics, err.clone());
+                deliver_err(&p.reply, &ctx.metrics, err.clone());
             }
         }
         return;
     }
-    metrics.on_flush(flushed.real_len(), flushed.padded_len());
+    ctx.metrics.on_flush(flushed.real_len(), flushed.padded_len());
 
-    let Some(meta) = manifest.batched_at_least(flushed.padded_len(), tile) else {
+    let Some(meta) = ctx.manifest.batched_at_least(flushed.padded_len(), tile) else {
         // no artifact large enough even after padding — fail the batch
         let err = CoordinatorError::Exec(format!(
             "no batched artifact for {} requests",
@@ -637,14 +879,14 @@ fn flush_batch(
         ));
         for id in &flushed.ids {
             if let Some(p) = pending.remove(id) {
-                deliver_err(&p.reply, metrics, err.clone());
+                deliver_err(&p.reply, &ctx.metrics, err.clone());
             }
         }
         return;
     };
     let artifact = meta.name.clone();
-    let executor = executor.clone();
-    let metrics = metrics.clone();
+    let executor = ctx.executor.clone();
+    let metrics = ctx.metrics.clone();
     let replies: Vec<(RequestId, Instant, Option<PendingReply>)> = flushed
         .ids
         .iter()
@@ -712,16 +954,15 @@ fn flush_batch(
 /// batching); the plan rides into the thread as an `Arc`, so a hot key
 /// can have several buckets in flight against one plan.
 fn flush_engine_buckets(
+    ctx: &ShardCtx,
     batcher: &mut Batcher,
     plans: &mut PlanCache,
-    metrics: &Arc<Metrics>,
-    depth: &Arc<AtomicUsize>,
     pending: &mut HashMap<RequestId, PendingReply>,
 ) {
     for bucket in batcher.flush_buckets() {
         let mode = bucket.mode;
         // the bucket's entries leave the queue now (served or failed)
-        depth.fetch_sub(bucket.len(), Ordering::Relaxed);
+        ctx.depth.fetch_sub(bucket.len(), Ordering::Relaxed);
         let plan = match plans.for_bucket(bucket.n, mode) {
             Ok(plan) => plan,
             Err(e) => {
@@ -729,20 +970,20 @@ fn flush_engine_buckets(
                 // the dispatcher (and every other bucket) carries on
                 for id in &bucket.ids {
                     if let Some(p) = pending.remove(id) {
-                        deliver_err(&p.reply, metrics, e.clone());
+                        deliver_err(&p.reply, &ctx.metrics, e.clone());
                     }
                 }
                 continue;
             }
         };
-        metrics.on_engine_flush(bucket.len(), mode != RefineMode::None, bucket.view_bytes());
+        ctx.metrics.on_engine_flush(bucket.len(), mode != RefineMode::None, bucket.view_bytes());
         let replies: Vec<(RequestId, Instant, Option<PendingReply>)> = bucket
             .ids
             .iter()
             .zip(&bucket.enqueued)
             .map(|(id, enq)| (*id, *enq, pending.remove(id)))
             .collect();
-        let metrics = metrics.clone();
+        let metrics = ctx.metrics.clone();
         std::thread::spawn(move || {
             let t0 = Instant::now();
             // zero-copy gather: the views borrow the bucket's storage
@@ -794,7 +1035,7 @@ fn flush_engine_buckets(
 fn finish(
     result: CoordinatorResult,
     reply: &Sender<CoordinatorResult>,
-    metrics: &Arc<Metrics>,
+    metrics: &Metrics,
     submitted: Instant,
     batched: bool,
 ) {
@@ -804,5 +1045,117 @@ fn finish(
             let _ = reply.send(Ok(resp));
         }
         Err(e) => deliver_err(reply, metrics, e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn req(rows_a: usize, cols_a: usize, rows_b: usize, cols_b: usize) -> GemmRequest {
+        GemmRequest::new(0, Matrix::zeros(rows_a, cols_a), Matrix::zeros(rows_b, cols_b))
+    }
+
+    #[test]
+    fn shard_routing_is_stable_per_bucket_key() {
+        // the co-bucketing contract: every request of one (edge, mode)
+        // key lands on one shard, deterministically, at any shard count
+        for shards in [2usize, 3, 4, 8, 16] {
+            for n in [8usize, 16, 24, 33, 100, 512] {
+                for mode in [RefineMode::None, RefineMode::RefineA, RefineMode::RefineAB] {
+                    let first = shard_for(&req(n, n, n, n), mode, shards);
+                    assert!(first < shards);
+                    for _ in 0..4 {
+                        assert_eq!(shard_for(&req(n, n, n, n), mode, shards), first);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_routing_separates_modes_from_keys_not_randomly() {
+        // the hash keys on the full (edge, mode) pair: with enough keys
+        // every shard of a 4-way service receives traffic (FNV-1a is a
+        // reasonable spreader over small integer keys)
+        let shards = 4;
+        let mut hit = vec![false; shards];
+        for n in 4..128usize {
+            for mode in [RefineMode::None, RefineMode::RefineA, RefineMode::RefineAB] {
+                hit[shard_for(&req(n, n, n, n), mode, shards)] = true;
+            }
+        }
+        assert!(hit.iter().all(|h| *h), "some shard never selected: {hit:?}");
+    }
+
+    #[test]
+    fn single_shard_routes_everything_to_zero() {
+        assert_eq!(shard_for(&req(16, 16, 16, 16), RefineMode::None, 1), 0);
+        assert_eq!(shard_for(&req(48, 80, 80, 32), RefineMode::RefineAB, 1), 0);
+    }
+
+    #[test]
+    fn non_square_requests_route_by_full_shape() {
+        // a non-square request has a stable shard too (the fallback
+        // lane is sharded by full shape + mode)
+        let shards = 8;
+        let first = shard_for(&req(48, 80, 80, 32), RefineMode::None, shards);
+        for _ in 0..4 {
+            assert_eq!(shard_for(&req(48, 80, 80, 32), RefineMode::None, shards), first);
+        }
+    }
+
+    #[test]
+    fn resolve_shards_zero_is_auto() {
+        assert!(resolve_shards(0) >= 1);
+        assert_eq!(resolve_shards(1), 1);
+        assert_eq!(resolve_shards(7), 7);
+    }
+
+    /// Spin until `done` reaches `want` (the gate runs detached threads;
+    /// tests bound the wait instead of sleeping a fixed amount).
+    fn wait_for(done: &AtomicUsize, want: usize) {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while done.load(Ordering::SeqCst) < want {
+            assert!(Instant::now() < deadline, "gate jobs did not finish");
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn fallback_gate_caps_concurrency_and_drains_every_job() {
+        let gate = Arc::new(FallbackGate::new(2));
+        let running = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..32 {
+            let (running, peak, done) = (running.clone(), peak.clone(), done.clone());
+            let observed = gate.run(Box::new(move || {
+                let now = running.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                running.fetch_sub(1, Ordering::SeqCst);
+                done.fetch_add(1, Ordering::SeqCst);
+            }));
+            assert!(observed <= 2, "observed inflight {observed} above cap");
+        }
+        wait_for(&done, 32);
+        assert!(peak.load(Ordering::SeqCst) <= 2, "cap violated: {}", peak.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn fallback_gate_survives_panicking_jobs() {
+        // a panicking job must not leak its permit: with cap 1, a panic
+        // followed by 3 normal jobs still drains everything
+        let gate = Arc::new(FallbackGate::new(1));
+        let done = Arc::new(AtomicUsize::new(0));
+        gate.run(Box::new(|| panic!("gate test panic")));
+        for _ in 0..3 {
+            let done = done.clone();
+            gate.run(Box::new(move || {
+                done.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        wait_for(&done, 3);
     }
 }

@@ -8,6 +8,7 @@
 //! repro figures --ablation <name>    tiling | shmem | range | pipeline | kahan | cluster
 //! repro serve --requests N [...]     run the GEMM service on a trace
 //! repro serve-replay [...]           open-loop burst replay -> BENCH_serving.json
+//!                                    (--shards N --submitters M: sharded intake)
 //! ```
 
 use std::collections::BTreeMap;
@@ -189,7 +190,7 @@ fn serve(args: &Args) -> Result<()> {
         }
     }
     let wall = t0.elapsed();
-    let snap = coord.metrics().snapshot();
+    let snap = coord.metrics_snapshot();
     println!("done: {ok}/{count} ok in {wall:.2?} ({:.0} resp/s)", ok as f64 / wall.as_secs_f64());
     println!("{}", snap.report());
     coord.shutdown();
@@ -199,9 +200,14 @@ fn serve(args: &Args) -> Result<()> {
 /// Open-loop trace replay through the coordinator: a bursty arrival
 /// stream submitted on schedule regardless of completion, reported as
 /// the `BENCH_serving.json` schema (latency percentiles, throughput,
-/// shed rate, max queue depth).  `--engine-only` injects an empty
-/// manifest so the replay runs without built artifacts (every square
-/// request rides the bucketed engine lane) — the CI smoke leg's mode.
+/// shed rate, max queue depth, per-shard rows).  `--engine-only`
+/// injects an empty manifest so the replay runs without built artifacts
+/// (every square request rides the bucketed engine lane) — the CI smoke
+/// legs' mode.  `--shards N` sizes the sharded intake (0 = one shard
+/// per core; default 1 for a stable baseline) and `--submitters M`
+/// drives the trace from M concurrent open-loop threads (default:
+/// one per shard), so a multi-shard service is actually offered more
+/// load than one submit loop can push.
 fn serve_replay(args: &Args) -> Result<()> {
     let count: usize = args.opt_parse("requests").unwrap_or(2000);
     let rate: f64 = args.opt_parse("rate").unwrap_or(20_000.0);
@@ -212,11 +218,13 @@ fn serve_replay(args: &Args) -> Result<()> {
     let max_wait_us: u64 = args.opt_parse("max-wait-us").unwrap_or(2000);
     let deadline_ms: Option<u64> = args.opt_parse("deadline-ms");
     let tile: usize = args.opt_parse("tile").unwrap_or(16);
+    let shards: usize = args.opt_parse("shards").unwrap_or(1);
     let engine_only = args.flag("engine-only");
 
     let cfg = CoordinatorConfig {
         tile,
         queue_cap,
+        shards,
         batcher: BatcherConfig {
             max_wait: Duration::from_micros(max_wait_us),
             ..Default::default()
@@ -232,21 +240,28 @@ fn serve_replay(args: &Args) -> Result<()> {
         c
     };
 
+    // resolved only now: --shards 0 means one per core, and the
+    // submitter default tracks the *resolved* shard count
+    let resolved_shards = coord.shards();
+    let submitters: usize = args.opt_parse("submitters").unwrap_or(resolved_shards.max(1));
+
     let mut rng = Rng::new(11);
     let spec = TraceSpec { rate, count, tile, ..Default::default() };
     let trace = RequestTrace::generate_with_bursts(&mut rng, spec, bursts, burst_factor);
     let replay_cfg = ReplayConfig {
         time_scale,
         deadline: deadline_ms.map(Duration::from_millis),
+        submitters,
         ..Default::default()
     };
     println!(
         "replaying {count} requests (base ~{rate:.0} req/s, {bursts} bursts x{burst_factor:.0}, \
-         time_scale {time_scale}, queue_cap {queue_cap})..."
+         time_scale {time_scale}, queue_cap {queue_cap}, {resolved_shards} shards, \
+         {submitters} submitters)..."
     );
     let report = replay(&coord, &trace, &replay_cfg);
     println!("{}", report.summary());
-    println!("{}", coord.metrics().snapshot().report());
+    println!("{}", coord.metrics_snapshot().report());
 
     let mut workload = BTreeMap::new();
     workload.insert("requests".to_string(), Json::Num(count as f64));
@@ -259,13 +274,15 @@ fn serve_replay(args: &Args) -> Result<()> {
         "deadline_ms".to_string(),
         deadline_ms.map_or(Json::Null, |d| Json::Num(d as f64)),
     );
+    workload.insert("submitters".to_string(), Json::Num(submitters as f64));
     let mut service = BTreeMap::new();
     service.insert("queue_cap".to_string(), Json::Num(queue_cap as f64));
     service.insert("max_wait_us".to_string(), Json::Num(max_wait_us as f64));
     service.insert("engine_only".to_string(), Json::Bool(engine_only));
+    service.insert("shards".to_string(), Json::Num(resolved_shards as f64));
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("serving".to_string()));
-    top.insert("schema".to_string(), Json::Str("bench.serving.v1".to_string()));
+    top.insert("schema".to_string(), Json::Str("bench.serving.v2".to_string()));
     top.insert("workload".to_string(), Json::Obj(workload));
     top.insert("coordinator".to_string(), Json::Obj(service));
     top.insert("results".to_string(), report.to_json());

@@ -25,6 +25,6 @@ pub mod spectral;
 pub mod trace;
 
 pub use gen::{uniform_batch, uniform_matrix, Rng};
-pub use replay::{replay, ReplayConfig, ReplayReport};
+pub use replay::{replay, ReplayConfig, ReplayReport, ShardRow};
 pub use spectral::{fmm_fft_workload, spectral_element_workload, SpectralElementMix};
 pub use trace::{RequestTrace, TraceEvent, TraceSpec};

@@ -5,7 +5,10 @@
 //! Open-loop is the honest way to measure a service under overload
 //! (closed-loop clients self-throttle and hide queueing collapse): the
 //! harness submits each trace event at `t0 + at * time_scale` whether or
-//! not earlier requests finished, then collects every reply afterwards.
+//! not earlier requests finished — from [`ReplayConfig::submitters`]
+//! concurrent threads over interleaved slices of the trace, so a
+//! sharded service can actually be offered more load than one submit
+//! loop can push — then collects every reply afterwards.
 //! Per-request latency is taken from the service's own accounting
 //! (`queued + exec` on the response), so collection order does not skew
 //! the percentiles.
@@ -43,6 +46,15 @@ pub struct ReplayConfig {
     pub lost_after: Duration,
     /// Seed for operand generation (one operand pair per distinct edge).
     pub seed: u64,
+    /// Concurrent open-loop submitter threads (min 1).  One submitter
+    /// serializes every `submit` call, which caps the *offered* rate at
+    /// what a single thread can push — the exact ceiling sharded intake
+    /// exists to lift — so a multi-shard measurement should drive at
+    /// least as many submitters as shards.  Submitter `w` owns the
+    /// interleaved events `w, w + submitters, w + 2*submitters, ...`,
+    /// so every thread sees the same arrival-time distribution and the
+    /// trace's schedule is preserved under any submitter count.
+    pub submitters: usize,
 }
 
 impl Default for ReplayConfig {
@@ -52,7 +64,55 @@ impl Default for ReplayConfig {
             deadline: None,
             lost_after: Duration::from_secs(30),
             seed: 7,
+            submitters: 1,
         }
+    }
+}
+
+/// One intake shard's slice of a replay — the `results.per_shard` rows
+/// of the `bench.serving.v2` schema, taken from
+/// [`Coordinator::shard_snapshots`] after collection.  `requests` sums
+/// to the trace length across rows (every request routes to exactly one
+/// shard); `max_queue_depth` is the *global* depth that shard observed
+/// at its own submits (all shards share one admission counter), so each
+/// row's value — not just their max — is bounded by `queue_cap`.
+#[derive(Clone, Debug)]
+pub struct ShardRow {
+    /// Shard index (position in [`Coordinator::shard_snapshots`]).
+    pub shard: usize,
+    pub requests: u64,
+    pub responses: u64,
+    pub shed: u64,
+    pub deadline_exceeded: u64,
+    pub errors: u64,
+    /// Engine-lane bucket flushes this shard drained.
+    pub engine_flushes: u64,
+    /// Requests this shard served through the bucketed engine lane.
+    pub engine_batched: u64,
+    /// Global queue depth high-water observed at this shard's submits.
+    pub max_queue_depth: u64,
+}
+
+impl ShardRow {
+    /// One row of the `results.per_shard` array.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("shard".to_string(), Json::Num(self.shard as f64));
+        m.insert("requests".to_string(), Json::Num(self.requests as f64));
+        m.insert("responses".to_string(), Json::Num(self.responses as f64));
+        m.insert("shed".to_string(), Json::Num(self.shed as f64));
+        m.insert(
+            "deadline_exceeded".to_string(),
+            Json::Num(self.deadline_exceeded as f64),
+        );
+        m.insert("errors".to_string(), Json::Num(self.errors as f64));
+        m.insert("engine_flushes".to_string(), Json::Num(self.engine_flushes as f64));
+        m.insert("engine_batched".to_string(), Json::Num(self.engine_batched as f64));
+        m.insert(
+            "max_queue_depth".to_string(),
+            Json::Num(self.max_queue_depth as f64),
+        );
+        Json::Obj(m)
     }
 }
 
@@ -81,8 +141,11 @@ pub struct ReplayReport {
     pub p99: Duration,
     pub max: Duration,
     /// High-water intake queue depth the service observed (bounded by
-    /// `CoordinatorConfig::queue_cap`).
+    /// `CoordinatorConfig::queue_cap`), global across shards.
     pub max_queue_depth: u64,
+    /// Per-shard accounting rows (one per intake shard, index ==
+    /// shard id) — the single-shard vs multi-shard comparison surface.
+    pub per_shard: Vec<ShardRow>,
 }
 
 impl ReplayReport {
@@ -139,6 +202,10 @@ impl ReplayReport {
             "max_queue_depth".to_string(),
             Json::Num(self.max_queue_depth as f64),
         );
+        m.insert(
+            "per_shard".to_string(),
+            Json::Arr(self.per_shard.iter().map(ShardRow::to_json).collect()),
+        );
         Json::Obj(m)
     }
 
@@ -146,7 +213,7 @@ impl ReplayReport {
     pub fn summary(&self) -> String {
         format!(
             "requests={} responses={} shed={} deadline={} errors={} lost={} \
-             shed_rate={:.3} throughput={:.0}/s max_depth={} p50={:?} p95={:?} p99={:?}",
+             shed_rate={:.3} throughput={:.0}/s max_depth={} shards={} p50={:?} p95={:?} p99={:?}",
             self.requests,
             self.responses,
             self.shed,
@@ -156,6 +223,7 @@ impl ReplayReport {
             self.shed_rate(),
             self.throughput_rps(),
             self.max_queue_depth,
+            self.per_shard.len(),
             self.p50,
             self.p95,
             self.p99,
@@ -174,11 +242,12 @@ fn percentile(sorted: &[Duration], p: f64) -> Duration {
 /// Replay `trace` open-loop through `coord`.
 ///
 /// Submission: each event fires at `t0 + at * time_scale` (a
-/// `time_scale` of 0.0 submits everything back-to-back); the harness
-/// never waits for a reply before submitting the next event.
-/// Collection: after the last submit, every reply channel is drained
-/// with a `lost_after` timeout — a missing reply is counted as `lost`,
-/// never silently skipped.
+/// `time_scale` of 0.0 submits everything back-to-back), from
+/// [`ReplayConfig::submitters`] concurrent threads over interleaved
+/// slices of the trace; the harness never waits for a reply before
+/// submitting the next event.  Collection: after the last submit, every
+/// reply channel is drained with a `lost_after` timeout — a missing
+/// reply is counted as `lost`, never silently skipped.
 pub fn replay(coord: &Coordinator, trace: &RequestTrace, cfg: &ReplayConfig) -> ReplayReport {
     // one operand pair per distinct edge, generated up front so the
     // submit loop pays clone cost only (arrival schedule stays honest)
@@ -193,23 +262,41 @@ pub fn replay(coord: &Coordinator, trace: &RequestTrace, cfg: &ReplayConfig) -> 
         });
     }
 
+    let submitters = cfg.submitters.max(1);
     let t0 = Instant::now();
+    // submitter w owns events w, w + submitters, w + 2*submitters, ...
+    // (interleaved, not chunked: every thread sees the same arrival
+    // distribution, so the offered schedule survives the split)
     let mut rxs = Vec::with_capacity(trace.events.len());
-    for ev in &trace.events {
-        if cfg.time_scale > 0.0 {
-            let due = t0 + Duration::from_secs_f64(ev.at * cfg.time_scale);
-            let now = Instant::now();
-            if due > now {
-                std::thread::sleep(due - now);
-            }
+    std::thread::scope(|scope| {
+        let operands = &operands;
+        let handles: Vec<_> = (0..submitters)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    for ev in trace.events.iter().skip(w).step_by(submitters) {
+                        if cfg.time_scale > 0.0 {
+                            let due = t0 + Duration::from_secs_f64(ev.at * cfg.time_scale);
+                            let now = Instant::now();
+                            if due > now {
+                                std::thread::sleep(due - now);
+                            }
+                        }
+                        let (a, b) = operands[&ev.n].clone();
+                        let mut req = GemmRequest::new(0, a, b).with_scale(ev.scale);
+                        if let Some(budget) = cfg.deadline {
+                            req = req.with_deadline(Instant::now() + budget);
+                        }
+                        out.push(coord.submit(req));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            rxs.extend(h.join().expect("submitter thread panicked"));
         }
-        let (a, b) = operands[&ev.n].clone();
-        let mut req = GemmRequest::new(0, a, b).with_scale(ev.scale);
-        if let Some(budget) = cfg.deadline {
-            req = req.with_deadline(Instant::now() + budget);
-        }
-        rxs.push(coord.submit(req));
-    }
+    });
 
     let mut latencies = Vec::new();
     let (mut responses, mut shed, mut deadline_exceeded, mut errors, mut lost) = (0, 0, 0, 0, 0);
@@ -227,6 +314,22 @@ pub fn replay(coord: &Coordinator, trace: &RequestTrace, cfg: &ReplayConfig) -> 
     }
     let wall = t0.elapsed();
     latencies.sort_unstable();
+    let per_shard = coord
+        .shard_snapshots()
+        .iter()
+        .enumerate()
+        .map(|(shard, s)| ShardRow {
+            shard,
+            requests: s.requests,
+            responses: s.responses,
+            shed: s.shed,
+            deadline_exceeded: s.deadline_exceeded,
+            errors: s.errors,
+            engine_flushes: s.engine_flushes,
+            engine_batched: s.engine_batched,
+            max_queue_depth: s.max_queue_depth,
+        })
+        .collect();
     ReplayReport {
         requests: trace.events.len(),
         responses,
@@ -239,7 +342,8 @@ pub fn replay(coord: &Coordinator, trace: &RequestTrace, cfg: &ReplayConfig) -> 
         p95: percentile(&latencies, 0.95),
         p99: percentile(&latencies, 0.99),
         max: percentile(&latencies, 1.0),
-        max_queue_depth: coord.metrics().snapshot().max_queue_depth,
+        max_queue_depth: coord.metrics_snapshot().max_queue_depth,
+        per_shard,
     }
 }
 
@@ -280,6 +384,17 @@ mod tests {
             p99: Duration::ZERO,
             max: Duration::ZERO,
             max_queue_depth: 4,
+            per_shard: vec![ShardRow {
+                shard: 0,
+                requests: 10,
+                responses: 6,
+                shed: 2,
+                deadline_exceeded: 1,
+                errors: 1,
+                engine_flushes: 3,
+                engine_batched: 6,
+                max_queue_depth: 4,
+            }],
         };
         assert!(r.totality_holds());
         assert_eq!(r.replies(), 10);
@@ -289,7 +404,17 @@ mod tests {
         assert_eq!(j.get("responses").and_then(Json::as_usize), Some(6));
         assert_eq!(j.get("max_queue_depth").and_then(Json::as_usize), Some(4));
         assert!(j.get("latency_s").and_then(|l| l.get("p95")).is_some());
+        // per_shard serializes as one row per shard, with the row's
+        // shard id and counters intact
+        let row = j
+            .get("per_shard")
+            .and_then(Json::as_arr)
+            .and_then(<[Json]>::first)
+            .expect("per_shard[0]");
+        assert_eq!(row.get("shard").and_then(Json::as_usize), Some(0));
+        assert_eq!(row.get("engine_flushes").and_then(Json::as_usize), Some(3));
         assert!(r.summary().contains("shed=2"));
+        assert!(r.summary().contains("shards=1"));
         let broken = ReplayReport { lost: 1, responses: 5, ..r };
         assert!(!broken.totality_holds());
     }
@@ -310,5 +435,47 @@ mod tests {
         assert!(report.totality_holds(), "{}", report.summary());
         assert_eq!(report.responses + report.shed, 64);
         assert!(report.max_queue_depth >= 1);
+        assert_eq!(report.per_shard.len(), coord.shards());
+    }
+
+    #[test]
+    fn sharded_replay_with_concurrent_submitters_accounts_exactly() {
+        // 4 shards, 4 submitter threads, mixed edges: totality holds
+        // globally, every request appears on exactly one shard row, and
+        // every row's observed depth respects the global cap
+        let coord = engine_only_coordinator(CoordinatorConfig {
+            shards: 4,
+            ..Default::default()
+        });
+        let mut rng = Rng::new(13);
+        let trace = RequestTrace::generate(
+            &mut rng,
+            TraceSpec {
+                count: 96,
+                tile: 8,
+                large_fraction: 0.25,
+                large_n: 24,
+                ..Default::default()
+            },
+        );
+        let cfg = ReplayConfig { time_scale: 0.0, submitters: 4, ..Default::default() };
+        let report = replay(&coord, &trace, &cfg);
+        assert_eq!(report.requests, 96);
+        assert!(report.totality_holds(), "{}", report.summary());
+        assert_eq!(report.per_shard.len(), 4);
+        let shard_requests: u64 = report.per_shard.iter().map(|s| s.requests).sum();
+        assert_eq!(shard_requests, 96, "every request routes to exactly one shard");
+        for row in &report.per_shard {
+            assert!(
+                row.max_queue_depth <= 4096,
+                "shard {} observed depth {} above the global cap",
+                row.shard,
+                row.max_queue_depth
+            );
+        }
+        // two edges in the trace → at most two shards carry traffic,
+        // and the (edge, mode) hash keeps each edge on one shard
+        let busy = report.per_shard.iter().filter(|s| s.requests > 0).count();
+        assert!(busy <= 2, "2 bucket keys spread over {busy} shards");
     }
 }

@@ -73,7 +73,7 @@ fn batches_tile_requests_together() {
         let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
         assert!(resp.c.max_norm_diff(&want) < 1e-4);
     }
-    let snap = c.metrics().snapshot();
+    let snap = c.metrics_snapshot();
     assert_eq!(snap.responses, 40);
     assert_eq!(snap.batched, 40);
     assert!(snap.flushes >= 1, "expected at least one flush");
@@ -125,7 +125,7 @@ fn odd_shapes_served_by_cpu_fallback() {
     assert_eq!(resp.served_by, ServedBy::CpuFallback);
     let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
     assert!(resp.c.max_norm_diff(&want) < 1e-5);
-    assert_eq!(c.metrics().snapshot().fallback, 1);
+    assert_eq!(c.metrics_snapshot().fallback, 1);
     c.shutdown();
 }
 
@@ -150,7 +150,7 @@ fn mixed_traffic_all_served_correctly() {
         let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap().unwrap();
         assert!(resp.c.max_norm_diff(&want) < 1e-4);
     }
-    let snap = c.metrics().snapshot();
+    let snap = c.metrics_snapshot();
     assert_eq!(snap.responses, 30);
     assert!(snap.batched == 10 && snap.direct == 20, "{}", snap.report());
     c.shutdown();
@@ -176,7 +176,7 @@ fn latency_accounting_present() {
     let b = uniform_matrix(&mut rng, 64, 64, -1.0, 1.0);
     let resp = c.gemm(a, b).unwrap();
     assert!(resp.exec > Duration::ZERO);
-    let snap = c.metrics().snapshot();
+    let snap = c.metrics_snapshot();
     assert!(snap.p50 > Duration::ZERO);
     c.shutdown();
 }
@@ -241,7 +241,7 @@ fn square_non_tile_requests_ride_engine_lane_with_zero_fallbacks() {
         // the engine lane is the host engine: bitwise equal to the oracle
         assert_eq!(resp.c, want);
     }
-    let snap = c.metrics().snapshot();
+    let snap = c.metrics_snapshot();
     assert_eq!(snap.fallback, 0, "square requests must never fall back: {}", snap.report());
     assert_eq!(snap.engine_batched, 24, "{}", snap.report());
     assert_eq!(snap.engine_refined, 0, "unrefined traffic: {}", snap.report());
@@ -279,7 +279,7 @@ fn refined_square_requests_ride_engine_lane_with_zero_fallbacks() {
         // the engine lane is the host engine: bitwise equal to the chain
         assert_eq!(resp.c, want);
     }
-    let snap = c.metrics().snapshot();
+    let snap = c.metrics_snapshot();
     assert_eq!(snap.fallback, 0, "refined square must never fall back: {}", snap.report());
     assert_eq!(snap.engine_batched, 18, "{}", snap.report());
     assert_eq!(snap.engine_refined, 18, "{}", snap.report());
@@ -321,7 +321,7 @@ fn mixed_and_refined_same_edge_bucket_separately() {
         };
         assert_eq!(resp.c, want, "mode {mode:?}");
     }
-    let snap = c.metrics().snapshot();
+    let snap = c.metrics_snapshot();
     assert_eq!(snap.fallback, 0, "{}", snap.report());
     assert_eq!(snap.engine_batched, 16, "{}", snap.report());
     assert_eq!(snap.engine_refined, 8, "{}", snap.report());
@@ -351,7 +351,7 @@ fn engine_lane_buckets_requests_instead_of_serving_singly() {
     for rx in rxs {
         rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
     }
-    let snap = c.metrics().snapshot();
+    let snap = c.metrics_snapshot();
     assert_eq!(snap.engine_batched, 16);
     assert!(
         snap.engine_flushes < 16,
@@ -371,7 +371,7 @@ fn non_square_requests_still_fall_back_without_artifacts() {
     let resp = c.gemm(a, b).unwrap();
     assert_eq!(resp.served_by, ServedBy::CpuFallback);
     assert_eq!(resp.c, want);
-    let snap = c.metrics().snapshot();
+    let snap = c.metrics_snapshot();
     assert_eq!(snap.fallback, 1);
     assert_eq!(snap.engine_batched, 0);
     assert_eq!(snap.engine_view_bytes, 0);
@@ -397,7 +397,7 @@ fn burst_and_collect(c: Coordinator, cap: usize, count: usize, n: usize) -> (usi
     let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
     let rxs: Vec<_> =
         (0..count).map(|_| c.submit(GemmRequest::new(0, a.clone(), b.clone()))).collect();
-    let high_water = c.metrics().snapshot().max_queue_depth;
+    let high_water = c.metrics_snapshot().max_queue_depth;
     c.shutdown();
     let (mut ok, mut shed, mut shutdown) = (0, 0, 0);
     for rx in rxs {
@@ -479,7 +479,7 @@ fn worker_panic_becomes_typed_internal_engine_lane() {
     // the dispatcher survived the worker panic: the service still serves
     let again = c.gemm(ha.clone(), hb.clone()).unwrap();
     assert_eq!(again.c, mixed_gemm(&ha, &hb, None, 1.0, 0.0));
-    let snap = c.metrics().snapshot();
+    let snap = c.metrics_snapshot();
     assert_eq!(snap.errors, 1, "{}", snap.report());
     c.shutdown();
 }
@@ -541,7 +541,7 @@ fn expired_deadline_is_shed_at_dispatch() {
     let expired = Instant::now() - Duration::from_secs(1);
     let reply = c.gemm_with(GemmRequest::new(0, a, b).with_deadline(expired));
     assert_eq!(reply.unwrap_err(), CoordinatorError::DeadlineExceeded);
-    let snap = c.metrics().snapshot();
+    let snap = c.metrics_snapshot();
     assert_eq!(snap.deadline_exceeded, 1, "{}", snap.report());
     assert_eq!(snap.errors, 0, "deadline sheds are not service errors: {}", snap.report());
     c.shutdown();
@@ -564,7 +564,7 @@ fn near_deadline_triggers_early_flush_engine_lane() {
         .unwrap();
     assert_eq!(resp.served_by, ServedBy::BatchedEngine);
     assert_eq!(resp.c, mixed_gemm(&a, &b, None, 1.0, 0.0));
-    let snap = c.metrics().snapshot();
+    let snap = c.metrics_snapshot();
     assert!(snap.flush_early_engine >= 1, "{}", snap.report());
     c.shutdown();
 }
@@ -583,7 +583,7 @@ fn near_deadline_triggers_early_flush_artifact_lane() {
         .gemm_with(GemmRequest::new(0, a.clone(), b.clone()).with_deadline(deadline))
         .unwrap();
     assert_eq!(resp.served_by, ServedBy::BatchedTensorCore);
-    let snap = c.metrics().snapshot();
+    let snap = c.metrics_snapshot();
     assert!(snap.flush_early_artifact >= 1, "{}", snap.report());
     c.shutdown();
 }
@@ -599,6 +599,243 @@ fn gemm_deadline_maps_timeout_to_typed_error() {
     let b = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
     let reply = c.gemm_deadline(GemmRequest::new(0, a, b), Duration::from_millis(100));
     assert_eq!(reply.unwrap_err(), CoordinatorError::DeadlineExceeded);
+    c.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Sharded-intake invariants: the global admission bound, reply totality
+// and fault isolation must hold with shards > 1 exactly as they did for
+// the single-dispatcher service, same-key requests must co-bucket on one
+// shard, and shards = 1 must be behaviorally identical to the
+// pre-sharding coordinator.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coordinator_is_sync_for_concurrent_submitters() {
+    // the replay harness drives one &Coordinator from many scoped
+    // threads — compile-time guarantee that stays possible
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Coordinator>();
+}
+
+#[test]
+fn default_shards_resolve_to_at_least_one() {
+    let c = engine_only_coordinator();
+    assert!(c.shards() >= 1, "shards: 0 must resolve to one shard per core");
+    c.shutdown();
+}
+
+#[test]
+fn concurrent_multi_shard_burst_bounds_global_queue_exactly() {
+    // 4 submitter threads x 16 requests over 8 distinct edges against a
+    // global cap of 8, batchers that can never flush: admission is one
+    // shared counter, so exactly 8 requests are admitted (answered
+    // ShuttingDown) and exactly 56 shed — no matter how threads and
+    // shards interleave — and no shard ever observes a depth above 8
+    let c = engine_only_coordinator_cfg(CoordinatorConfig { shards: 4, ..never_flush_cfg(8) });
+    assert_eq!(c.shards(), 4);
+    let mut rng = Rng::new(31);
+    let edges = [8usize, 16, 24, 33, 40, 48, 56, 64];
+    let operands: Vec<(Matrix, Matrix)> = edges
+        .iter()
+        .map(|&n| {
+            (uniform_matrix(&mut rng, n, n, -1.0, 1.0), uniform_matrix(&mut rng, n, n, -1.0, 1.0))
+        })
+        .collect();
+    let mut rxs = Vec::new();
+    std::thread::scope(|s| {
+        let (c, operands) = (&c, &operands);
+        let handles: Vec<_> = (0..4)
+            .map(|w| {
+                s.spawn(move || {
+                    (0..16)
+                        .map(|i| {
+                            let (a, b) = operands[(w * 16 + i) % operands.len()].clone();
+                            c.submit(GemmRequest::new(0, a, b))
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            rxs.extend(h.join().expect("submitter thread panicked"));
+        }
+    });
+    // snapshots before shutdown consumes the coordinator: all submits
+    // (and their shed accounting) completed when the scope joined
+    let merged = c.metrics_snapshot();
+    let per_shard = c.shard_snapshots();
+    c.shutdown();
+    let (mut ok, mut shed, mut shutdown) = (0, 0, 0);
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)).expect("reply must be delivered") {
+            Ok(_) => ok += 1,
+            Err(CoordinatorError::Shed { queue_depth }) => {
+                assert!(queue_depth >= 8, "shed at depth {queue_depth} below the global cap");
+                shed += 1;
+            }
+            Err(CoordinatorError::ShuttingDown) => shutdown += 1,
+            Err(e) => panic!("unexpected reply {e}"),
+        }
+    }
+    assert_eq!(shed, 56, "ok={ok} shutdown={shutdown}");
+    assert_eq!(ok + shutdown, 8);
+    assert!(merged.max_queue_depth <= 8, "global bound violated: {}", merged.report());
+    assert!(per_shard.iter().all(|s| s.max_queue_depth <= 8), "a shard saw depth above cap");
+    // exact aggregation: the merged view is the sum of the rows
+    assert_eq!(per_shard.iter().map(|s| s.requests).sum::<u64>(), 64);
+    assert_eq!(per_shard.iter().map(|s| s.shed).sum::<u64>(), 56);
+    assert_eq!(merged.requests, 64, "{}", merged.report());
+    assert_eq!(merged.shed, 56, "{}", merged.report());
+}
+
+#[test]
+fn same_key_requests_co_bucket_on_one_shard() {
+    // 16 requests of one (edge, mode) key through a 4-shard service:
+    // the stable routing hash must land every one on the same shard —
+    // and, on that shard, they must batch instead of serving singly
+    // (the bucket-density property sharding exists to preserve)
+    let c = engine_only_coordinator_cfg(CoordinatorConfig {
+        shards: 4,
+        batcher: BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    let mut rng = Rng::new(32);
+    let inputs: Vec<(Matrix, Matrix)> = (0..16)
+        .map(|_| {
+            let a = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+            let b = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+            (a, b)
+        })
+        .collect();
+    let mut rxs = Vec::new();
+    for (a, b) in inputs {
+        rxs.push(c.submit(GemmRequest::new(0, a, b)));
+    }
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert_eq!(resp.served_by, ServedBy::BatchedEngine);
+    }
+    let per_shard = c.shard_snapshots();
+    let busy: Vec<usize> =
+        (0..per_shard.len()).filter(|&i| per_shard[i].requests > 0).collect();
+    assert_eq!(busy.len(), 1, "one bucket key spread over shards {busy:?}");
+    let s = &per_shard[busy[0]];
+    assert_eq!(s.requests, 16);
+    assert_eq!(s.engine_batched, 16, "{}", s.report());
+    assert!(s.engine_flushes < 16, "co-bucketed burst must batch: {}", s.report());
+    c.shutdown();
+}
+
+#[test]
+fn sharded_shutdown_while_pending_answers_every_shard() {
+    // pending work spread over several shards' batchers: shutdown must
+    // answer ShuttingDown on every shard — no channel on any shard is
+    // dropped unanswered
+    let c = engine_only_coordinator_cfg(CoordinatorConfig { shards: 4, ..never_flush_cfg(4096) });
+    let mut rng = Rng::new(33);
+    let mut rxs = Vec::new();
+    for &n in &[16usize, 24, 33, 48] {
+        let a = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        for _ in 0..3 {
+            rxs.push(c.submit(GemmRequest::new(0, a.clone(), b.clone())));
+        }
+    }
+    c.shutdown();
+    for rx in rxs {
+        let reply = rx.recv_timeout(Duration::from_secs(30)).expect("reply must be delivered");
+        assert_eq!(reply.unwrap_err(), CoordinatorError::ShuttingDown);
+    }
+}
+
+#[test]
+fn sharded_worker_panic_stays_isolated() {
+    // a poisoned bucket on one shard panics its worker: the poison
+    // comes back typed, traffic on other keys (other shards) is
+    // untouched, and the whole service keeps serving afterwards
+    let c = engine_only_coordinator_cfg(CoordinatorConfig { shards: 4, ..Default::default() });
+    let mut rng = Rng::new(34);
+    let pa = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let pb = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let ha = uniform_matrix(&mut rng, 33, 33, -1.0, 1.0);
+    let hb = uniform_matrix(&mut rng, 33, 33, -1.0, 1.0);
+    let rx_poison = c.submit(GemmRequest::new(0, pa, pb).with_poison());
+    let rx_healthy = c.submit(GemmRequest::new(0, ha.clone(), hb.clone()));
+    match rx_poison.recv_timeout(Duration::from_secs(30)).unwrap() {
+        Err(CoordinatorError::Internal(msg)) => assert!(msg.contains("poison"), "{msg}"),
+        other => panic!("expected Internal, got {other:?}"),
+    }
+    let healthy = rx_healthy.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+    assert_eq!(healthy.c, mixed_gemm(&ha, &hb, None, 1.0, 0.0));
+    let again = c.gemm(ha.clone(), hb.clone()).unwrap();
+    assert_eq!(again.c, mixed_gemm(&ha, &hb, None, 1.0, 0.0));
+    let snap = c.metrics_snapshot();
+    assert_eq!(snap.errors, 1, "{}", snap.report());
+    c.shutdown();
+}
+
+#[test]
+fn single_shard_matches_single_dispatcher_behavior() {
+    // shards = 1 is the PR 6 coordinator: the same never-flush burst
+    // produces the same exact counts (8 admitted, 56 shed), and the
+    // merged metrics view IS the one shard's view
+    let c = engine_only_coordinator_cfg(CoordinatorConfig { shards: 1, ..never_flush_cfg(8) });
+    assert_eq!(c.shards(), 1);
+    let mut rng = Rng::new(35);
+    let a = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+    let rxs: Vec<_> =
+        (0..64).map(|_| c.submit(GemmRequest::new(0, a.clone(), b.clone()))).collect();
+    let merged = c.metrics_snapshot();
+    let per_shard = c.shard_snapshots();
+    assert_eq!(per_shard.len(), 1);
+    assert_eq!(merged.requests, per_shard[0].requests);
+    assert_eq!(merged.shed, per_shard[0].shed);
+    assert_eq!(merged.max_queue_depth, per_shard[0].max_queue_depth);
+    c.shutdown();
+    let (mut ok, mut shed, mut shutdown) = (0, 0, 0);
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)).expect("reply must be delivered") {
+            Ok(_) => ok += 1,
+            Err(CoordinatorError::Shed { .. }) => shed += 1,
+            Err(CoordinatorError::ShuttingDown) => shutdown += 1,
+            Err(e) => panic!("unexpected reply {e}"),
+        }
+    }
+    assert_eq!(shed, 56, "ok={ok} shutdown={shutdown}");
+    assert_eq!(ok + shutdown, 8);
+    assert!(merged.max_queue_depth <= 8);
+}
+
+#[test]
+fn fallback_threads_bounded_with_high_water_metric() {
+    // cap the one-shot lanes at a single worker: a burst of 6 odd-shaped
+    // requests is still served completely (jobs past the cap queue in
+    // the gate and drain in turn), and the high-water metric shows the
+    // bound was respected exactly
+    let c = engine_only_coordinator_cfg(CoordinatorConfig {
+        max_fallback_threads: 1,
+        ..Default::default()
+    });
+    let mut rng = Rng::new(36);
+    let a = uniform_matrix(&mut rng, 48, 80, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 80, 32, -1.0, 1.0);
+    let want = mixed_gemm(&a, &b, None, 1.0, 0.0);
+    let rxs: Vec<_> =
+        (0..6).map(|_| c.submit(GemmRequest::new(0, a.clone(), b.clone()))).collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert_eq!(resp.served_by, ServedBy::CpuFallback);
+        assert_eq!(resp.c, want);
+    }
+    let snap = c.metrics_snapshot();
+    assert_eq!(snap.fallback, 6, "{}", snap.report());
+    assert_eq!(snap.fallback_inflight, 1, "cap 1 -> high-water exactly 1: {}", snap.report());
     c.shutdown();
 }
 
