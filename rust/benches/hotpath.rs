@@ -37,10 +37,12 @@
 use std::time::Duration;
 
 use tensoremu::coordinator::{Batcher, BatcherConfig, GemmRequest, PrecisionPolicy, Router};
+use tensoremu::formats::Scale;
 use tensoremu::gemm::engine::{self, PackedHalfA, PackedHalfB, PoolMode};
 use tensoremu::gemm::{
-    batched_mixed_gemm, batched_mixed_gemm_scalar, hgemm_scalar, mixed_gemm, mixed_gemm_scalar,
-    GemmDesc, MatLayout, Matrix, Precision, StridedBatch,
+    batched_mixed_gemm, batched_mixed_gemm_scalar, bf16_gemm_scalar, fp8_gemm_scalar,
+    hgemm_scalar, int8_gemm_scalar, mixed_gemm, mixed_gemm_scalar, tf32_gemm_scalar, GemmDesc,
+    MatLayout, Matrix, Precision, StridedBatch,
 };
 use tensoremu::precision::{batched_refine_gemm, refine_gemm, RefineMode};
 use tensoremu::runtime::{Engine, Manifest, TensorData};
@@ -145,6 +147,42 @@ fn main() {
     });
     println!("{}", fast.report());
     comparisons.push(Comparison { name: hg_name, scalar, engine: fast });
+
+    // -- format zoo: each new format precision's engine path (pack-time
+    //    quantization on the pool) vs its serial scalar oracle, one row
+    //    per format in the baseline schema — additive rows, the existing
+    //    schema keys are untouched
+    let nf = if smoke { 64 } else { 256 };
+    let fa = uniform_matrix(&mut rng, nf, nf, -1.0, 1.0);
+    let fb = uniform_matrix(&mut rng, nf, nf, -1.0, 1.0);
+    let scale = Scale::default();
+    let fmt_cases: [(&'static str, &'static str, Precision); 4] = [
+        ("bf16_256", "bf16_64", Precision::Bf16),
+        ("tf32_256", "tf32_64", Precision::Tf32),
+        ("fp8e4m3_256", "fp8e4m3_64", Precision::Fp8E4M3),
+        ("int8_256", "int8_64", Precision::Int8 { scale }),
+    ];
+    for (full_name, smoke_name, prec) in fmt_cases {
+        let name = if smoke { smoke_name } else { full_name };
+        let scalar = bench_config(&format!("gemm/{name}_scalar"), 3, 0, 30_000, || {
+            std::hint::black_box(match prec {
+                Precision::Bf16 => bf16_gemm_scalar(&fa, &fb, None, 1.0, 0.0),
+                Precision::Tf32 => tf32_gemm_scalar(&fa, &fb, None, 1.0, 0.0),
+                Precision::Fp8E4M3 => fp8_gemm_scalar(&fa, &fb, None, 1.0, 0.0),
+                Precision::Int8 { scale } => {
+                    int8_gemm_scalar(&fa, &fb, None, 1.0, 0.0, scale.get())
+                }
+                other => unreachable!("format sweep only: {other:?}"),
+            });
+        });
+        println!("{}", scalar.report());
+        let plan = GemmDesc::square(nf).precision(prec).plan(&fa, &fb).unwrap();
+        let fast = bench_config(&format!("gemm/{name}_engine"), 30, 300, 10_000, || {
+            std::hint::black_box(plan.execute().unwrap());
+        });
+        println!("{}", fast.report());
+        comparisons.push(Comparison { name, scalar, engine: fast });
+    }
 
     // -- batched refined chains (the §IV-B batched shape at §V
     //    precision): a loop of per-entry refine_gemm singles vs one

@@ -45,7 +45,7 @@ use std::time::{Duration, Instant};
 use crate::gemm::{MatRef, Matrix};
 use crate::precision::RefineMode;
 
-use super::request::{GemmRequest, RequestId};
+use super::request::{GemmRequest, PrecisionMode, RequestId};
 
 /// Batcher tuning.
 #[derive(Clone, Copy, Debug)]
@@ -95,7 +95,7 @@ struct Pending {
     /// half of the bucket key): entries of the same edge but different
     /// modes never share a bucket, because they execute on different
     /// cached plans.
-    mode: RefineMode,
+    mode: PrecisionMode,
     a: Matrix,
     b: Matrix,
     enqueued: Instant,
@@ -141,9 +141,10 @@ impl FlushedBatch {
 pub struct ShapeBucket {
     /// Square edge shared by every entry in this bucket.
     pub n: usize,
-    /// Precision mode shared by every entry in this bucket (mixed and
-    /// refined requests of the same edge never share a bucket).
-    pub mode: RefineMode,
+    /// Precision mode shared by every entry in this bucket (mixed,
+    /// refined and format-mode requests of the same edge never share a
+    /// bucket).
+    pub mode: PrecisionMode,
     pub ids: Vec<RequestId>,
     pub enqueued: Vec<Instant>,
     pub a: Vec<Matrix>,
@@ -153,7 +154,7 @@ pub struct ShapeBucket {
 }
 
 impl ShapeBucket {
-    fn empty(n: usize, mode: RefineMode) -> ShapeBucket {
+    fn empty(n: usize, mode: PrecisionMode) -> ShapeBucket {
         ShapeBucket {
             n,
             mode,
@@ -243,14 +244,18 @@ impl Batcher {
     /// the dispatcher can shed it with a typed error — instead of
     /// panicking the dispatcher thread that every other queued request
     /// depends on.
-    pub fn push_mode(&mut self, req: GemmRequest, mode: RefineMode) -> Result<(), GemmRequest> {
+    pub fn push_mode(
+        &mut self,
+        req: GemmRequest,
+        mode: impl Into<PrecisionMode>,
+    ) -> Result<(), GemmRequest> {
         let Some(n) = req.square_n() else {
             return Err(req);
         };
         self.queue.push(Pending {
             id: req.id,
             n,
-            mode,
+            mode: mode.into(),
             a: req.a,
             b: req.b,
             enqueued: Instant::now(),
@@ -333,7 +338,7 @@ impl Batcher {
     /// Drain up to `max_batch` entries of the `(n, mode)` bucket,
     /// preserving FIFO order within the bucket; other shapes and modes
     /// stay queued.
-    fn drain_bucket(&mut self, n: usize, mode: RefineMode) -> ShapeBucket {
+    fn drain_bucket(&mut self, n: usize, mode: PrecisionMode) -> ShapeBucket {
         let cap = self.cfg.max_batch;
         let mut bucket = ShapeBucket::empty(n, mode);
         let mut kept = Vec::with_capacity(self.queue.len());
@@ -634,6 +639,33 @@ mod tests {
         assert_eq!(buckets[1].ids, vec![1, 4]);
         assert_eq!(buckets[2].mode, RefineMode::RefineA);
         assert_eq!(buckets[2].ids, vec![3]);
+    }
+
+    #[test]
+    fn same_edge_format_and_mixed_requests_never_share_a_bucket() {
+        use crate::formats::Scale;
+        // the format-extension contract (ISSUE satellite): a Bf16
+        // request of an edge must never flush into the Mixed bucket of
+        // that same edge, and differently-scaled Int8 traffic buckets
+        // separately too
+        let mut b = batcher(100, 0);
+        b.push_mode(req_n(0, 16), RefineMode::None).unwrap();
+        b.push_mode(req_n(1, 16), PrecisionMode::Bf16).unwrap();
+        b.push_mode(req_n(2, 16), RefineMode::None).unwrap();
+        b.push_mode(req_n(3, 16), PrecisionMode::Int8(Scale::new(0.25))).unwrap();
+        b.push_mode(req_n(4, 16), PrecisionMode::Bf16).unwrap();
+        b.push_mode(req_n(5, 16), PrecisionMode::Int8(Scale::new(0.5))).unwrap();
+        let buckets = b.flush_buckets();
+        assert_eq!(buckets.len(), 4);
+        assert!(buckets.iter().all(|bk| bk.n == 16));
+        assert_eq!(buckets[0].mode, RefineMode::None);
+        assert_eq!(buckets[0].ids, vec![0, 2]);
+        assert_eq!(buckets[1].mode, PrecisionMode::Bf16);
+        assert_eq!(buckets[1].ids, vec![1, 4]);
+        assert_eq!(buckets[2].mode, PrecisionMode::Int8(Scale::new(0.25)));
+        assert_eq!(buckets[2].ids, vec![3]);
+        assert_eq!(buckets[3].mode, PrecisionMode::Int8(Scale::new(0.5)));
+        assert_eq!(buckets[3].ids, vec![5]);
     }
 
     #[test]

@@ -217,11 +217,14 @@ impl Metrics {
 /// when empty) — the one percentile definition both the per-shard
 /// snapshot and the merged view use.
 fn percentile_set(lat: &mut [u64]) -> (Duration, Duration, Duration, Duration) {
+    // the no-samples case first, as its own path: a merged snapshot of
+    // shards that counted requests/sheds but never recorded a response
+    // has an empty union, and `len() - 1` below would underflow on it
+    if lat.is_empty() {
+        return (Duration::ZERO, Duration::ZERO, Duration::ZERO, Duration::ZERO);
+    }
     lat.sort_unstable();
     let pick = |p: f64| -> Duration {
-        if lat.is_empty() {
-            return Duration::ZERO;
-        }
         let idx = ((p * (lat.len() - 1) as f64).round() as usize).min(lat.len() - 1);
         Duration::from_nanos(lat[idx])
     };
@@ -412,6 +415,31 @@ mod tests {
         assert_eq!(lone.max_queue_depth, merged.max_queue_depth);
         assert_eq!(lone.p50, merged.p50);
         assert_eq!(lone.max, merged.max);
+    }
+
+    #[test]
+    fn merged_snapshot_of_all_empty_shards_is_zero() {
+        // the sharded-overload shape: every shard saw traffic (requests
+        // counted, some shed at admission) but none recorded a single
+        // response, so the latency union is empty — percentiles must
+        // come back zero, not index into the empty union
+        let a = Metrics::default();
+        let b = Metrics::default();
+        let c = Metrics::default();
+        a.on_request();
+        a.on_shed();
+        b.on_request();
+        b.on_deadline_exceeded();
+        c.on_request();
+        let s = Metrics::merged_snapshot([&a, &b, &c]);
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.responses, 0);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.deadline_exceeded, 1);
+        assert_eq!(s.p50, Duration::ZERO);
+        assert_eq!(s.p95, Duration::ZERO);
+        assert_eq!(s.p99, Duration::ZERO);
+        assert_eq!(s.max, Duration::ZERO);
     }
 
     #[test]

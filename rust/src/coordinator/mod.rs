@@ -53,6 +53,8 @@ pub mod service;
 pub use batcher::{Batcher, BatcherConfig, FlushTrigger, FlushedBatch, ShapeBucket};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use policy::{PolicyConfig, PrecisionPolicy};
-pub use request::{CoordinatorError, CoordinatorResult, GemmRequest, GemmResponse, RequestId};
+pub use request::{
+    CoordinatorError, CoordinatorResult, GemmRequest, GemmResponse, PrecisionMode, RequestId,
+};
 pub use router::{Route, Router};
 pub use service::{Coordinator, CoordinatorConfig};

@@ -8,7 +8,7 @@
 use crate::precision::bounds::{mixed_gemm_error_rms_estimate, refined_gemm_error_bound};
 use crate::precision::RefineMode;
 
-use super::request::GemmRequest;
+use super::request::{GemmRequest, PrecisionMode};
 
 /// Which error model drives the policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -62,23 +62,26 @@ impl PrecisionPolicy {
     }
 
     /// Choose the cheapest mode meeting the request's budget; requests
-    /// with an explicit mode keep it; no budget means no refinement.
-    pub fn choose(&self, req: &GemmRequest) -> RefineMode {
+    /// with an explicit mode (refinement ladder *or* storage format)
+    /// keep it verbatim; no budget means no refinement.  The budget
+    /// search walks only the f16 refinement ladder — format modes are
+    /// opt-in by construction, never policy-chosen.
+    pub fn choose(&self, req: &GemmRequest) -> PrecisionMode {
         if let Some(mode) = req.mode {
             return mode;
         }
         let Some(budget) = req.error_budget else {
-            return RefineMode::None;
+            return RefineMode::None.into();
         };
         let k = req.a.cols();
         let m_out = req.a.rows().max(req.b.cols());
         for mode in RefineMode::ALL {
             if self.predicted_error(k, m_out, req.scale, mode) <= budget {
-                return mode;
+                return mode.into();
             }
         }
         // even RefineAB misses the budget: serve the best we have
-        RefineMode::RefineAB
+        RefineMode::RefineAB.into()
     }
 }
 
@@ -98,6 +101,15 @@ mod tests {
         let p = PrecisionPolicy::default();
         let r = req(256, Some(1e-9), 1.0).with_mode(RefineMode::None);
         assert_eq!(p.choose(&r), RefineMode::None);
+    }
+
+    #[test]
+    fn explicit_format_mode_passes_through_verbatim() {
+        // format modes are opt-in: the policy never overrides them, even
+        // when an error budget is also present
+        let p = PrecisionPolicy::default();
+        let r = req(256, Some(1e-9), 1.0).with_mode(PrecisionMode::Bf16);
+        assert_eq!(p.choose(&r), PrecisionMode::Bf16);
     }
 
     #[test]
@@ -149,8 +161,8 @@ mod tests {
         let budget = Some(0.05);
         // worst-case refines at a budget the RMS model still accepts
         let r = req(2048, budget, 1.0);
-        let m_rms = rms.choose(&r);
-        let m_wc = wc.choose(&r);
+        let m_rms = rms.choose(&r).refine().expect("policy-chosen modes are refinement modes");
+        let m_wc = wc.choose(&r).refine().expect("policy-chosen modes are refinement modes");
         assert!(m_wc.gemm_count() >= m_rms.gemm_count());
     }
 }

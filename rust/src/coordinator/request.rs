@@ -15,11 +15,111 @@
 use std::fmt;
 use std::time::{Duration, Instant};
 
+use crate::formats::Scale;
+use crate::gemm::plan::Precision;
 use crate::gemm::Matrix;
 use crate::precision::RefineMode;
 
 /// Monotonic request identifier.
 pub type RequestId = u64;
+
+/// The full precision dial a request can ask the service for: the f16
+/// refinement ladder (paper §V) *or* one of the generation storage
+/// formats from [`crate::formats`] (BF16 / TF32 / FP8-E4M3 / symmetric
+/// INT8).  `RefineMode` values convert losslessly via `Into`, so
+/// `req.with_mode(RefineMode::RefineAB)` keeps compiling, and the
+/// `PartialEq<RefineMode>` impls keep `resp.mode == RefineMode::None`
+/// comparisons working (a format variant never equals a refine mode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PrecisionMode {
+    /// The classic f16 path: `Refined(RefineMode::None)` is the plain
+    /// mixed-precision mode, the others are Eq. 2 / Eq. 3 refinement.
+    Refined(RefineMode),
+    /// BF16 storage (Ampere): f32-range exponent, 7-bit significand.
+    Bf16,
+    /// TF32 storage (Ampere): f32 with the significand cut to 10 bits.
+    Tf32,
+    /// FP8 E4M3 storage (Hopper): saturating, ±448 max finite.
+    Fp8E4M3,
+    /// Symmetric per-matrix INT8 quantization (Turing) at this scale.
+    Int8(Scale),
+}
+
+impl PrecisionMode {
+    /// Stable 64-bit key for shard/bucket hashing.  The `Refined` keys
+    /// equal the pre-format-era `RefineMode as u64` discriminants
+    /// (0/1/2), so shard assignment of existing traffic is unchanged by
+    /// the enum extension; format keys start above the refine range and
+    /// fold the INT8 scale bits in so differently-scaled INT8 traffic
+    /// buckets separately.
+    pub fn key_u64(self) -> u64 {
+        match self {
+            PrecisionMode::Refined(m) => m as u64,
+            PrecisionMode::Bf16 => 3,
+            PrecisionMode::Tf32 => 4,
+            PrecisionMode::Fp8E4M3 => 5,
+            PrecisionMode::Int8(s) => 6 | (u64::from(s.bits()) << 8),
+        }
+    }
+
+    /// The plan-layer [`Precision`] this mode executes at on the engine
+    /// lane (and on the one-shot CPU fallback).
+    pub fn plan_precision(self) -> Precision {
+        match self {
+            PrecisionMode::Refined(RefineMode::None) => Precision::Mixed,
+            PrecisionMode::Refined(m) => Precision::Refined(m),
+            PrecisionMode::Bf16 => Precision::Bf16,
+            PrecisionMode::Tf32 => Precision::Tf32,
+            PrecisionMode::Fp8E4M3 => Precision::Fp8E4M3,
+            PrecisionMode::Int8(scale) => Precision::Int8 { scale },
+        }
+    }
+
+    /// The refinement mode, if this is a refinement-ladder mode (format
+    /// modes return `None` — they have no artifact/refine path).
+    pub fn refine(self) -> Option<RefineMode> {
+        match self {
+            PrecisionMode::Refined(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// True only for the *actively refined* f16 modes (RefineA /
+    /// RefineAB) — the flag the metrics layer counts refined flushes by.
+    pub fn is_refined(self) -> bool {
+        matches!(self, PrecisionMode::Refined(m) if m != RefineMode::None)
+    }
+}
+
+impl From<RefineMode> for PrecisionMode {
+    fn from(m: RefineMode) -> PrecisionMode {
+        PrecisionMode::Refined(m)
+    }
+}
+
+impl PartialEq<RefineMode> for PrecisionMode {
+    fn eq(&self, other: &RefineMode) -> bool {
+        matches!(self, PrecisionMode::Refined(m) if m == other)
+    }
+}
+
+impl PartialEq<PrecisionMode> for RefineMode {
+    fn eq(&self, other: &PrecisionMode) -> bool {
+        other == self
+    }
+}
+
+impl fmt::Display for PrecisionMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PrecisionMode::Refined(m) => write!(f, "{m}"),
+            PrecisionMode::Bf16 => write!(f, "bf16"),
+            PrecisionMode::Tf32 => write!(f, "tf32"),
+            PrecisionMode::Fp8E4M3 => write!(f, "fp8e4m3"),
+            PrecisionMode::Int8(s) => write!(f, "int8(scale={s})"),
+        }
+    }
+}
 
 /// Why the coordinator did not return a [`GemmResponse`].
 ///
@@ -87,8 +187,9 @@ pub struct GemmRequest {
     pub id: RequestId,
     pub a: Matrix,
     pub b: Matrix,
-    /// Explicit refinement mode; `None` lets the precision policy choose.
-    pub mode: Option<RefineMode>,
+    /// Explicit precision mode (refinement ladder or storage format);
+    /// `None` lets the precision policy choose.
+    pub mode: Option<PrecisionMode>,
     /// Max acceptable ‖e‖_Max vs the f32 result.  `None` = cheapest mode.
     pub error_budget: Option<f32>,
     /// Magnitude hint for the policy's error model: entries are in
@@ -122,8 +223,8 @@ impl GemmRequest {
         }
     }
 
-    pub fn with_mode(mut self, mode: RefineMode) -> Self {
-        self.mode = Some(mode);
+    pub fn with_mode(mut self, mode: impl Into<PrecisionMode>) -> Self {
+        self.mode = Some(mode.into());
         self
     }
 
@@ -189,8 +290,8 @@ pub enum ServedBy {
 pub struct GemmResponse {
     pub id: RequestId,
     pub c: Matrix,
-    /// Refinement mode actually applied.
-    pub mode: RefineMode,
+    /// Precision mode actually applied.
+    pub mode: PrecisionMode,
     pub served_by: ServedBy,
     /// Time spent queued (incl. batching delay).
     pub queued: Duration,
@@ -218,7 +319,7 @@ mod tests {
             .with_error_budget(1e-3)
             .with_scale(16.0)
             .with_deadline(deadline);
-        assert_eq!(r.mode, Some(RefineMode::RefineAB));
+        assert_eq!(r.mode, Some(RefineMode::RefineAB.into()));
         assert_eq!(r.error_budget, Some(1e-3));
         assert_eq!(r.scale, 16.0);
         assert_eq!(r.deadline, Some(deadline));
@@ -237,6 +338,54 @@ mod tests {
     fn poison_builder_marks_request() {
         let r = GemmRequest::new(5, Matrix::zeros(4, 4), Matrix::zeros(4, 4)).with_poison();
         assert!(r.poison);
+    }
+
+    #[test]
+    fn precision_mode_keys_preserve_refine_discriminants() {
+        // shard_for folds key_u64 into its FNV hash; the Refined keys
+        // must stay exactly the pre-format RefineMode discriminants so
+        // the enum extension never re-shards existing traffic.
+        assert_eq!(PrecisionMode::from(RefineMode::None).key_u64(), 0);
+        assert_eq!(PrecisionMode::from(RefineMode::RefineA).key_u64(), 1);
+        assert_eq!(PrecisionMode::from(RefineMode::RefineAB).key_u64(), 2);
+        let mut keys = vec![
+            PrecisionMode::Bf16.key_u64(),
+            PrecisionMode::Tf32.key_u64(),
+            PrecisionMode::Fp8E4M3.key_u64(),
+            PrecisionMode::Int8(Scale::default()).key_u64(),
+            PrecisionMode::Int8(Scale::new(0.25)).key_u64(),
+        ];
+        keys.extend([0, 1, 2]);
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 8, "all mode keys must be distinct");
+    }
+
+    #[test]
+    fn precision_mode_compares_against_refine_modes() {
+        assert_eq!(PrecisionMode::Refined(RefineMode::RefineA), RefineMode::RefineA);
+        assert_eq!(RefineMode::None, PrecisionMode::Refined(RefineMode::None));
+        assert_ne!(PrecisionMode::Bf16, RefineMode::None);
+        assert!(PrecisionMode::Refined(RefineMode::RefineAB).is_refined());
+        assert!(!PrecisionMode::Refined(RefineMode::None).is_refined());
+        assert!(!PrecisionMode::Fp8E4M3.is_refined());
+        assert_eq!(PrecisionMode::Tf32.refine(), None);
+        assert_eq!(PrecisionMode::from(RefineMode::RefineA).refine(), Some(RefineMode::RefineA));
+    }
+
+    #[test]
+    fn precision_mode_maps_to_plan_precision() {
+        use crate::gemm::plan::Precision;
+        assert_eq!(PrecisionMode::Refined(RefineMode::None).plan_precision(), Precision::Mixed);
+        assert_eq!(
+            PrecisionMode::Refined(RefineMode::RefineAB).plan_precision(),
+            Precision::Refined(RefineMode::RefineAB)
+        );
+        assert_eq!(PrecisionMode::Bf16.plan_precision(), Precision::Bf16);
+        assert_eq!(PrecisionMode::Tf32.plan_precision(), Precision::Tf32);
+        assert_eq!(PrecisionMode::Fp8E4M3.plan_precision(), Precision::Fp8E4M3);
+        let s = Scale::new(0.5);
+        assert_eq!(PrecisionMode::Int8(s).plan_precision(), Precision::Int8 { scale: s });
     }
 
     #[test]

@@ -25,7 +25,7 @@ use crate::precision::RefineMode;
 use crate::runtime::Manifest;
 
 use super::policy::PrecisionPolicy;
-use super::request::GemmRequest;
+use super::request::{GemmRequest, PrecisionMode};
 
 /// Where a request should execute.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -36,13 +36,14 @@ pub enum Route {
     /// Square with no artifact, at any precision mode: join the engine
     /// lane's `(edge, mode)` bucket, executed on the service's cached
     /// plan for that key (refined modes run per-entry Eq. 1–3 chains on
-    /// the engine pool).
-    EngineBatch { n: usize, mode: RefineMode },
-    /// Run the named artifact directly.
-    Direct { artifact: String, mode: RefineMode },
+    /// the engine pool; format modes quantize at pack time).
+    EngineBatch { n: usize, mode: PrecisionMode },
+    /// Run the named artifact directly.  Artifacts exist only for the
+    /// refinement ladder, so `mode.refine()` is always `Some` here.
+    Direct { artifact: String, mode: PrecisionMode },
     /// Nothing else fits (non-square): emulate on the host, one request
     /// at a time.
-    CpuFallback { mode: RefineMode },
+    CpuFallback { mode: PrecisionMode },
 }
 
 /// The router: manifest-driven request classification.
@@ -74,8 +75,13 @@ impl Router {
             {
                 return Route::Batch { tile: self.tile };
             }
-            if let Some(meta) = self.manifest.gemm_for_mode(mode, n) {
-                return Route::Direct { artifact: meta.name.clone(), mode };
+            // dedicated artifacts exist only for the refinement ladder;
+            // format modes (bf16/tf32/fp8/int8) skip straight to the
+            // engine lane
+            if let Some(rm) = mode.refine() {
+                if let Some(meta) = self.manifest.gemm_for_mode(rm, n) {
+                    return Route::Direct { artifact: meta.name.clone(), mode };
+                }
             }
             // square but artifact-less: the bucketed engine lane serves
             // every mode through a mode-keyed cached plan instead of
@@ -133,7 +139,20 @@ mod tests {
         // square with no matching artifact: bucketed engine lane, not
         // per-request CPU fallback (the PR 2 open item)
         let req = GemmRequest::new(4, Matrix::zeros(100, 100), Matrix::zeros(100, 100));
-        assert_eq!(r.route(&req), Route::EngineBatch { n: 100, mode: RefineMode::None });
+        assert_eq!(r.route(&req), Route::EngineBatch { n: 100, mode: RefineMode::None.into() });
+    }
+
+    #[test]
+    fn format_mode_squares_ride_engine_lane_at_every_edge() {
+        let Some(r) = router() else { return };
+        // format modes never route Direct — even at an edge where a
+        // mixed-precision artifact exists, the format request buckets on
+        // the engine lane at its own (edge, mode) key
+        for n in [100usize, 256] {
+            let req = GemmRequest::new(8, Matrix::zeros(n, n), Matrix::zeros(n, n))
+                .with_mode(PrecisionMode::Bf16);
+            assert_eq!(r.route(&req), Route::EngineBatch { n, mode: PrecisionMode::Bf16 });
+        }
     }
 
     #[test]
@@ -144,7 +163,7 @@ mod tests {
         // PR 3 open item)
         let req = GemmRequest::new(7, Matrix::zeros(100, 100), Matrix::zeros(100, 100))
             .with_mode(RefineMode::RefineAB);
-        assert_eq!(r.route(&req), Route::EngineBatch { n: 100, mode: RefineMode::RefineAB });
+        assert_eq!(r.route(&req), Route::EngineBatch { n: 100, mode: RefineMode::RefineAB.into() });
     }
 
     #[test]

@@ -117,7 +117,8 @@ use super::batcher::{Batcher, BatcherConfig, FlushTrigger};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::policy::{PolicyConfig, PrecisionPolicy};
 use super::request::{
-    CoordinatorError, CoordinatorResult, GemmRequest, GemmResponse, RequestId, ServedBy,
+    CoordinatorError, CoordinatorResult, GemmRequest, GemmResponse, PrecisionMode, RequestId,
+    ServedBy,
 };
 use super::router::{Route, Router};
 
@@ -427,15 +428,18 @@ fn resolve_shards(configured: usize) -> usize {
 /// survives sharding; refined keys carry their mode in the hash, so a
 /// refined stream of some edge stays co-located (and apart from the
 /// unrefined stream of that edge) no matter the shard count.
-/// Non-square requests hash their full `m x k x n` shape.
-fn shard_for(req: &GemmRequest, mode: RefineMode, shards: usize) -> usize {
+/// Non-square requests hash their full `m x k x n` shape.  The mode
+/// enters through [`PrecisionMode::key_u64`], whose `Refined` keys equal
+/// the pre-format `RefineMode` discriminants — extending the enum with
+/// the storage formats did not re-shard any existing traffic.
+fn shard_for(req: &GemmRequest, mode: PrecisionMode, shards: usize) -> usize {
     if shards <= 1 {
         return 0;
     }
     let (m, k) = req.a.shape();
     let (_, n) = req.b.shape();
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for word in [m as u64, k as u64, n as u64, mode as u64] {
+    for word in [m as u64, k as u64, n as u64, mode.key_u64()] {
         for byte in word.to_le_bytes() {
             h ^= u64::from(byte);
             h = h.wrapping_mul(0x0000_0100_0000_01b3);
@@ -548,7 +552,9 @@ struct PendingReply {
 /// (via `Arc`) with the worker threads that execute its buckets.
 /// Unrefined keys cache a mixed-precision plan; refined keys cache a
 /// [`Precision::Refined`] plan whose batched execution runs per-entry
-/// Eq. 1–3 chains on the engine pool.  The cached plan carries the
+/// Eq. 1–3 chains on the engine pool; format keys (bf16/tf32/fp8/int8)
+/// cache a plan at their format's pack-time-rounding precision.  The
+/// cached plan carries the
 /// validated descriptor and execution configuration for its key
 /// (batched execution packs per entry inside the engine, so this cache
 /// is about a stable, validated route per key — the speed of the lane
@@ -556,7 +562,7 @@ struct PendingReply {
 /// each key builds its plan on exactly one shard: shard caches
 /// partition the key space instead of duplicating it.
 struct PlanCache {
-    plans: HashMap<(usize, RefineMode), Arc<GemmPlan>>,
+    plans: HashMap<(usize, PrecisionMode), Arc<GemmPlan>>,
 }
 
 impl PlanCache {
@@ -571,15 +577,12 @@ impl PlanCache {
     fn for_bucket(
         &mut self,
         n: usize,
-        mode: RefineMode,
+        mode: PrecisionMode,
     ) -> Result<Arc<GemmPlan>, CoordinatorError> {
         if let Some(plan) = self.plans.get(&(n, mode)) {
             return Ok(plan.clone());
         }
-        let precision = match mode {
-            RefineMode::None => Precision::Mixed,
-            refined => Precision::Refined(refined),
-        };
+        let precision = mode.plan_precision();
         let plan = GemmDesc::square(n).precision(precision).build().map_err(|e| {
             CoordinatorError::Internal(format!("engine plan build failed (n={n}, {mode:?}): {e}"))
         })?;
@@ -716,7 +719,7 @@ fn effective_batcher_cfg(cfg: CoordinatorConfig, manifest: &Manifest) -> Batcher
 fn enqueue_batched(
     ctx: &ShardCtx,
     sub: Submission,
-    mode: Option<RefineMode>,
+    mode: Option<PrecisionMode>,
     batcher: &mut Batcher,
     pending: &mut HashMap<RequestId, PendingReply>,
 ) {
@@ -811,14 +814,32 @@ fn dispatch_one(
                     if sub.req.poison {
                         panic!("poison request {} (test fault injection)", sub.req.id);
                     }
-                    let mut h = CublasHandle::new();
-                    h.set_math_mode(MathMode::TensorOp);
-                    let algo = match mode {
-                        RefineMode::None => GemmAlgo::Default,
-                        RefineMode::RefineA => GemmAlgo::RefinedTensorOpA,
-                        RefineMode::RefineAB => GemmAlgo::RefinedTensorOpAB,
-                    };
-                    h.gemm_ex(Op::N, Op::N, &sub.req.a, &sub.req.b, None, 1.0, 0.0, algo)
+                    match mode.refine() {
+                        Some(rm) => {
+                            // refinement ladder: the cuBLAS-style handle
+                            // carries the mode as a GemmAlgo
+                            let mut h = CublasHandle::new();
+                            h.set_math_mode(MathMode::TensorOp);
+                            let algo = match rm {
+                                RefineMode::None => GemmAlgo::Default,
+                                RefineMode::RefineA => GemmAlgo::RefinedTensorOpA,
+                                RefineMode::RefineAB => GemmAlgo::RefinedTensorOpAB,
+                            };
+                            h.gemm_ex(Op::N, Op::N, &sub.req.a, &sub.req.b, None, 1.0, 0.0, algo)
+                                .map_err(|e| format!("{e}"))
+                        }
+                        None => {
+                            // format mode: a one-shot plan at the
+                            // format's pack-time-rounding precision
+                            let (m, k) = sub.req.a.shape();
+                            let (_, n) = sub.req.b.shape();
+                            GemmDesc::new(m, k, n)
+                                .precision(mode.plan_precision())
+                                .plan(&sub.req.a, &sub.req.b)
+                                .and_then(|p| p.execute())
+                                .map_err(|e| format!("{e}"))
+                        }
+                    }
                 }));
                 let result = match outcome {
                     Ok(Ok(c)) => Ok(GemmResponse {
@@ -915,7 +936,7 @@ fn flush_batch(
                         let resp = GemmResponse {
                             id,
                             c: outs[i].clone(),
-                            mode: RefineMode::None,
+                            mode: RefineMode::None.into(),
                             served_by: ServedBy::BatchedTensorCore,
                             queued: t0.duration_since(enq),
                             exec,
@@ -976,7 +997,10 @@ fn flush_engine_buckets(
                 continue;
             }
         };
-        ctx.metrics.on_engine_flush(bucket.len(), mode != RefineMode::None, bucket.view_bytes());
+        // `is_refined`, not `!= RefineMode::None`: a format-mode bucket
+        // (bf16/tf32/fp8/int8) is *not* a refined flush — only the
+        // RefineA/RefineAB ladder counts toward the refined metric
+        ctx.metrics.on_engine_flush(bucket.len(), mode.is_refined(), bucket.view_bytes());
         let replies: Vec<(RequestId, Instant, Option<PendingReply>)> = bucket
             .ids
             .iter()
@@ -1063,7 +1087,15 @@ mod tests {
         // key lands on one shard, deterministically, at any shard count
         for shards in [2usize, 3, 4, 8, 16] {
             for n in [8usize, 16, 24, 33, 100, 512] {
-                for mode in [RefineMode::None, RefineMode::RefineA, RefineMode::RefineAB] {
+                for mode in [
+                    PrecisionMode::from(RefineMode::None),
+                    RefineMode::RefineA.into(),
+                    RefineMode::RefineAB.into(),
+                    PrecisionMode::Bf16,
+                    PrecisionMode::Tf32,
+                    PrecisionMode::Fp8E4M3,
+                    PrecisionMode::Int8(crate::formats::Scale::default()),
+                ] {
                     let first = shard_for(&req(n, n, n, n), mode, shards);
                     assert!(first < shards);
                     for _ in 0..4 {
@@ -1083,7 +1115,7 @@ mod tests {
         let mut hit = vec![false; shards];
         for n in 4..128usize {
             for mode in [RefineMode::None, RefineMode::RefineA, RefineMode::RefineAB] {
-                hit[shard_for(&req(n, n, n, n), mode, shards)] = true;
+                hit[shard_for(&req(n, n, n, n), mode.into(), shards)] = true;
             }
         }
         assert!(hit.iter().all(|h| *h), "some shard never selected: {hit:?}");
@@ -1091,8 +1123,56 @@ mod tests {
 
     #[test]
     fn single_shard_routes_everything_to_zero() {
-        assert_eq!(shard_for(&req(16, 16, 16, 16), RefineMode::None, 1), 0);
-        assert_eq!(shard_for(&req(48, 80, 80, 32), RefineMode::RefineAB, 1), 0);
+        assert_eq!(shard_for(&req(16, 16, 16, 16), RefineMode::None.into(), 1), 0);
+        assert_eq!(shard_for(&req(48, 80, 80, 32), RefineMode::RefineAB.into(), 1), 0);
+    }
+
+    #[test]
+    fn shard_assignment_of_refined_traffic_survives_the_format_extension() {
+        // key_u64 pins the Refined hash words to the pre-format
+        // discriminants; re-derive the old `mode as u64` hash here and
+        // assert shard_for still produces it for refined traffic
+        fn old_shard(m: usize, k: usize, n: usize, mode_word: u64, shards: usize) -> usize {
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            for word in [m as u64, k as u64, n as u64, mode_word] {
+                for byte in word.to_le_bytes() {
+                    h ^= u64::from(byte);
+                    h = h.wrapping_mul(0x0000_0100_0000_01b3);
+                }
+            }
+            (h % shards as u64) as usize
+        }
+        for shards in [2usize, 4, 8] {
+            for n in [16usize, 33, 100, 512] {
+                for (word, mode) in
+                    [RefineMode::None, RefineMode::RefineA, RefineMode::RefineAB].iter().enumerate()
+                {
+                    assert_eq!(
+                        shard_for(&req(n, n, n, n), (*mode).into(), shards),
+                        old_shard(n, n, n, word as u64, shards),
+                        "n={n} mode={mode:?} shards={shards}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn format_modes_hash_apart_from_refine_modes() {
+        // a Bf16 stream of an edge must be able to land apart from the
+        // Mixed stream of that edge: their key words differ, so over a
+        // spread of edges the shard assignments cannot all coincide
+        let shards = 8;
+        let mut differs = false;
+        for n in 4..64usize {
+            let mixed = shard_for(&req(n, n, n, n), RefineMode::None.into(), shards);
+            let bf16 = shard_for(&req(n, n, n, n), PrecisionMode::Bf16, shards);
+            if mixed != bf16 {
+                differs = true;
+                break;
+            }
+        }
+        assert!(differs, "bf16 and mixed shard assignment identical across all edges");
     }
 
     #[test]
@@ -1100,9 +1180,9 @@ mod tests {
         // a non-square request has a stable shard too (the fallback
         // lane is sharded by full shape + mode)
         let shards = 8;
-        let first = shard_for(&req(48, 80, 80, 32), RefineMode::None, shards);
+        let first = shard_for(&req(48, 80, 80, 32), RefineMode::None.into(), shards);
         for _ in 0..4 {
-            assert_eq!(shard_for(&req(48, 80, 80, 32), RefineMode::None, shards), first);
+            assert_eq!(shard_for(&req(48, 80, 80, 32), RefineMode::None.into(), shards), first);
         }
     }
 

@@ -1,0 +1,79 @@
+//! bfloat16 (1 sign / 8 exponent / 7 significand) scalar conversion
+//! oracle — Ampere's drop-in f32-range input format.
+//!
+//! bf16 is the top 16 bits of an f32, so widening is a shift and
+//! rounding is round-to-nearest-even on the dropped 16 bits.  The
+//! exponent range matches f32 exactly: no subnormal edge cases beyond
+//! f32's own, overflow rounds to the infinity the f32 carries.
+
+/// Relative rounding unit: `2^-7`.
+pub const BF16_EPSILON: f32 = 0.007_812_5;
+
+/// Largest finite bf16 value: `(2 - 2^-7) * 2^127`.
+pub const BF16_MAX: f32 = 3.389_531_4e38;
+
+/// Round an f32 to the nearest bf16 bit pattern (ties to even).
+/// NaN quietens to a canonical payload (sign + quiet bit) so the
+/// result is never an accidental infinity.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // round to nearest even on the dropped low 16 bits: carry
+    // propagation through the exponent handles overflow-to-inf
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x7FFF + lsb) >> 16) as u16
+}
+
+/// Widen a bf16 bit pattern to f32 (exact: bf16 ⊂ f32).
+pub fn bf16_to_f32(bits: u16) -> f32 {
+    f32::from_bits(u32::from(bits) << 16)
+}
+
+/// Round-trip quantization: the value the emulated Ampere BF16 MAC
+/// consumes for input `x`.
+pub fn bf16_quantize(x: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_pass_through() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1.5, -3.25, 256.0] {
+            assert_eq!(bf16_quantize(x), x, "{x} is a bf16 grid point");
+        }
+        assert_eq!(bf16_to_f32(f32_to_bf16(-0.0)).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // 1 + 2^-8 is exactly halfway between 1 and 1 + 2^-7: ties to
+        // even keeps the even significand (1.0)
+        let tie = 1.0 + 2f32.powi(-8);
+        assert_eq!(bf16_quantize(tie), 1.0);
+        // 1 + 3*2^-8 is halfway between 1 + 2^-7 and 1 + 2^-6: the even
+        // neighbor is 1 + 2^-6
+        let tie_up = 1.0 + 3.0 * 2f32.powi(-8);
+        assert_eq!(bf16_quantize(tie_up), 1.0 + 2f32.powi(-6));
+    }
+
+    #[test]
+    fn specials_and_overflow() {
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // rounding past the largest finite bf16 overflows to infinity
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MAX)), f32::INFINITY);
+        assert_eq!(bf16_quantize(BF16_MAX), BF16_MAX);
+    }
+
+    #[test]
+    fn constants_match_the_bit_patterns() {
+        assert_eq!(BF16_MAX, bf16_to_f32(0x7F7F));
+        assert_eq!(BF16_EPSILON, 2f32.powi(-7));
+    }
+}

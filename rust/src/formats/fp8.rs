@@ -1,0 +1,156 @@
+//! FP8 E4M3 (1 sign / 4 exponent / 3 significand, bias 7) scalar
+//! conversion oracle — Hopper's 8-bit Tensor Core input.
+//!
+//! E4M3 follows the OCP FP8 spec NVIDIA implements: it has **no
+//! infinities** — the exponent-all-ones / significand-all-ones point
+//! (`0x7F` / `0xFF`) is NaN, every other exponent-all-ones pattern is
+//! finite, so the largest finite value is `S.1111.110 = 448` and
+//! out-of-range values *saturate* to ±448 instead of overflowing.
+//! Subnormals (step `2^-9`) extend the range down to ±2^-9.
+
+/// Relative rounding unit: `2^-3`.
+pub const FP8_EPSILON: f32 = 0.125;
+
+/// Largest finite E4M3 value (`0x7E`): `(2 - 2^-2) * 2^8 = 448`.
+pub const FP8_MAX: f32 = 448.0;
+
+const NAN_BITS: u8 = 0x7F;
+const MAX_BITS: u8 = 0x7E;
+
+/// Round an f32 to the nearest E4M3 bit pattern (ties to even,
+/// saturating at ±448, flushing below the smallest subnormal to
+/// signed zero).  NaN maps to the format's only NaN pattern, keeping
+/// the sign.
+pub fn f32_to_fp8(x: f32) -> u8 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 24) & 0x80) as u8;
+    let exp32 = (bits >> 23) & 0xFF;
+    let sig32 = bits & 0x7F_FFFF;
+    if exp32 == 0xFF {
+        // NaN stays NaN; infinity saturates (E4M3 has no infinity)
+        return if sig32 != 0 { sign | NAN_BITS } else { sign | MAX_BITS };
+    }
+    let e = exp32 as i32 - 127;
+    if e > 8 {
+        return sign | MAX_BITS;
+    }
+    if e >= -6 {
+        // normal E4M3 range: keep 3 of the 23 significand bits
+        let sig3 = sig32 >> 20;
+        let rest = sig32 & 0xF_FFFF;
+        let mut v = (((e + 7) as u32) << 3) | sig3;
+        if rest > 0x8_0000 || (rest == 0x8_0000 && v & 1 == 1) {
+            v += 1;
+        }
+        // rounding up out of S.1111.110 lands on the NaN slot: saturate
+        if v >= u32::from(NAN_BITS) {
+            v = u32::from(MAX_BITS);
+        }
+        return sign | v as u8;
+    }
+    if e >= -10 && exp32 != 0 {
+        // E4M3 subnormals: magnitude sig3 * 2^-9, sig3 in 1..=7; a
+        // round-up to 8 lands exactly on the smallest normal (2^-6)
+        let full_sig = 0x80_0000 | sig32;
+        let shift = (20 + (-6 - e)) as u32;
+        let mut sig3 = full_sig >> shift;
+        let rest = full_sig & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        if rest > halfway || (rest == halfway && sig3 & 1 == 1) {
+            sig3 += 1;
+        }
+        return sign | sig3 as u8;
+    }
+    // below half the smallest subnormal (f32 subnormals included):
+    // round to signed zero
+    sign
+}
+
+/// Widen an E4M3 bit pattern to f32 (exact: every E4M3 value is an
+/// f32 grid point).  The NaN patterns widen to a quiet NaN carrying
+/// the sign bit, so the round-trip preserves all 256 patterns.
+pub fn fp8_to_f32(bits: u8) -> f32 {
+    let sign = u32::from(bits & 0x80) << 24;
+    let exp = (bits >> 3) & 0xF;
+    let sig = u32::from(bits & 0x7);
+    if exp == 0xF && sig == 0x7 {
+        return f32::from_bits(sign | 0x7FC0_0000);
+    }
+    if exp == 0 {
+        // subnormal: sig * 2^-9 (exact in f32; sign applied by negation
+        // so the zero patterns widen to signed zeros)
+        let mag = sig as f32 * 0.001_953_125;
+        return if sign != 0 { -mag } else { mag };
+    }
+    let exp32 = (u32::from(exp) as i32 - 7 + 127) as u32;
+    f32::from_bits(sign | (exp32 << 23) | (sig << 20))
+}
+
+/// Round-trip quantization: the value the emulated Hopper FP8 MAC
+/// consumes for input `x`.
+pub fn fp8_quantize(x: f32) -> f32 {
+    fp8_to_f32(f32_to_fp8(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_pass_through() {
+        for x in [0.0f32, 1.0, -1.0, 0.5, 448.0, -448.0, 1.125, 240.0] {
+            assert_eq!(fp8_quantize(x), x, "{x} is an e4m3 grid point");
+        }
+        assert_eq!(fp8_quantize(-0.0).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn subnormals_are_exact_grid_points() {
+        // subnormal grid: k * 2^-9 for k = 1..7
+        for k in 1..=7u32 {
+            let x = k as f32 * 2f32.powi(-9);
+            assert_eq!(fp8_quantize(x), x);
+            assert_eq!(fp8_quantize(-x), -x);
+        }
+        // half the smallest subnormal ties to even (zero)
+        assert_eq!(fp8_quantize(2f32.powi(-10)), 0.0);
+        // anything below flushes to signed zero
+        assert_eq!(fp8_quantize(2f32.powi(-40)), 0.0);
+        assert_eq!(fp8_quantize(-2f32.powi(-40)).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn saturation_replaces_overflow() {
+        assert_eq!(fp8_quantize(1e9), FP8_MAX);
+        assert_eq!(fp8_quantize(-1e9), -FP8_MAX);
+        assert_eq!(fp8_quantize(f32::INFINITY), FP8_MAX);
+        assert_eq!(fp8_quantize(f32::NEG_INFINITY), -FP8_MAX);
+        // 464 is halfway between 448 and the (nonexistent) 480: the
+        // round-up lands on the NaN slot and must saturate instead
+        assert_eq!(fp8_quantize(464.0), FP8_MAX);
+        assert_eq!(fp8_quantize(500.0), FP8_MAX);
+    }
+
+    #[test]
+    fn nan_is_the_only_special() {
+        assert_eq!(f32_to_fp8(f32::NAN), NAN_BITS);
+        assert!(fp8_to_f32(NAN_BITS).is_nan());
+        assert!(fp8_to_f32(0xFF).is_nan());
+        assert!(fp8_to_f32(0xFF).is_sign_negative());
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // 1 + 2^-4 is halfway between 1 and 1.125: even (1.0) wins
+        assert_eq!(fp8_quantize(1.0 + 2f32.powi(-4)), 1.0);
+        // 1.125 + 3*2^-4 → halfway between 1.25 and 1.375? use a clean
+        // case: 1.1875 is halfway between 1.125 and 1.25 → 1.25 (even)
+        assert_eq!(fp8_quantize(1.1875), 1.25);
+    }
+
+    #[test]
+    fn constants_match_the_bit_patterns() {
+        assert_eq!(FP8_MAX, fp8_to_f32(MAX_BITS));
+        assert_eq!(FP8_EPSILON, 2f32.powi(-3));
+    }
+}

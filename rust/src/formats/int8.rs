@@ -1,0 +1,76 @@
+//! Symmetric INT8 scalar quantization oracle — Turing's 8-bit integer
+//! Tensor Core input.
+//!
+//! The quantizer is the standard symmetric per-matrix scheme:
+//! `q = clamp(round(x / scale), -127, 127)` with round half away from
+//! zero (`f32::round`), consumed as `q * scale`.  The grid is
+//! symmetric (−128 is never produced), saturating at ±127·scale.  The
+//! hardware accumulates products in i32; for the magnitudes the engine
+//! emulates (|q| ≤ 127, so each product ≤ 16 129·scale²) an f32
+//! accumulation chain of the *descaled* products matches the module's
+//! shared MAC contract — see [`crate::formats`] docs.
+
+/// The saturation magnitude of the symmetric grid.
+pub const INT8_QMAX: i32 = 127;
+
+/// Quantize an f32 onto the symmetric int8 grid at `scale` (round
+/// half away from zero, saturating at ±127).  NaN quantizes to 0.
+pub fn f32_to_int8(x: f32, scale: f32) -> i8 {
+    let q = (x / scale).round();
+    if q.is_nan() {
+        return 0;
+    }
+    q.clamp(-(INT8_QMAX as f32), INT8_QMAX as f32) as i8
+}
+
+/// Widen a quantized value back to f32: `q * scale` (exact whenever
+/// `q * scale` is representable, which holds for every power-of-two
+/// scale and all |q| ≤ 127).
+pub fn int8_to_f32(q: i8, scale: f32) -> f32 {
+    f32::from(q) * scale
+}
+
+/// Round-trip quantization: the value the emulated Turing INT8 MAC
+/// consumes for input `x`.
+pub fn int8_quantize(x: f32, scale: f32) -> f32 {
+    int8_to_f32(f32_to_int8(x, scale), scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_points_pass_through() {
+        let scale = 0.25;
+        for q in -127i32..=127 {
+            let x = q as f32 * scale;
+            assert_eq!(f32_to_int8(x, scale), q as i8);
+            assert_eq!(int8_quantize(x, scale), x);
+        }
+    }
+
+    #[test]
+    fn saturates_symmetrically() {
+        assert_eq!(f32_to_int8(1e9, 0.5), 127);
+        assert_eq!(f32_to_int8(-1e9, 0.5), -127);
+        assert_eq!(f32_to_int8(f32::INFINITY, 0.5), 127);
+        assert_eq!(f32_to_int8(f32::NEG_INFINITY, 0.5), -127);
+        // -128 is never produced: the grid is symmetric
+        assert_eq!(f32_to_int8(-64.0, 0.5), -127);
+    }
+
+    #[test]
+    fn rounds_half_away_from_zero() {
+        assert_eq!(f32_to_int8(0.5, 1.0), 1);
+        assert_eq!(f32_to_int8(-0.5, 1.0), -1);
+        assert_eq!(f32_to_int8(1.5, 1.0), 2);
+        assert_eq!(f32_to_int8(0.49, 1.0), 0);
+    }
+
+    #[test]
+    fn nan_quantizes_to_zero() {
+        assert_eq!(f32_to_int8(f32::NAN, 1.0), 0);
+        assert_eq!(int8_quantize(f32::NAN, 1.0), 0.0);
+    }
+}

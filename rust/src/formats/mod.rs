@@ -1,0 +1,450 @@
+//! Multi-generation Tensor Core number formats behind one trait.
+//!
+//! The paper (§III) models Volta's contract only: fp16 inputs, exact
+//! products, fp32 accumulation.  Later generations kept the *shape* of
+//! that contract and swapped the input format — Turing added INT8,
+//! Ampere added BF16 and TF32, Hopper added FP8 — which is exactly the
+//! axis "Dissecting Tensor Cores via Microbenchmarks" (arXiv
+//! 2206.02874) characterizes and the SMT formalization of three Tensor
+//! Core generations (arXiv 2502.15999) pins down.  This module makes
+//! "a Tensor Core input format" a first-class value:
+//!
+//! * [`TcFormat`] — the per-format contract: a storage bit pattern
+//!   ([`TcFormat::Bits`]), the round-to-nearest-even (saturating where
+//!   the format demands it) conversion [`TcFormat::round_from_f32`],
+//!   the exact widening [`TcFormat::widen_to_f32`], and the ULP
+//!   geometry ([`TcFormat::half_ulp_at`]) the
+//!   [`crate::precision::rounded_gemm_error_bound`] model consumes.
+//! * [`F16`], [`Bf16`], [`Tf32`], [`Fp8E4M3`], [`Int8`] — the five
+//!   instances, each with generation metadata ([`FormatMeta`],
+//!   [`Generation`]) for the docs table and the cross-generation
+//!   error figure (`repro figures --ablation formats`).
+//! * Free scalar conversion oracles per format (`f32_to_bf16`,
+//!   `bf16_to_f32`, `bf16_quantize`, …) mirroring
+//!   [`crate::halfprec::f32_to_f16`] — these are the bit-exact
+//!   reference implementations the exhaustive sweep tests in
+//!   `tests/formats.rs` pin down, and the functions the engine's
+//!   pack-time rounding calls on the hot path.
+//!
+//! **The shared MAC contract.**  Every format here is emulated the
+//! same way the f16 path has been since PR 1: operands are rounded
+//! *once* (at pack time, in the copy the pack already pays), products
+//! are exact, and accumulation is an f32 chain in ascending k with
+//! separate mul and add (never FMA).  That matches the WMMA contracts
+//! across generations — the accumulator is fp32 (or int32 widened
+//! exactly into f32 for INT8's |q| ≤ 127 range) — and keeps the
+//! bitwise plan == oracle property format-independent.  The all-f16
+//! accumulator path is *not* a [`TcFormat`]; it stays the separate
+//! `Precision::F16` mode.
+
+mod bf16;
+mod fp8;
+mod int8;
+mod tf32;
+
+pub use bf16::{bf16_quantize, bf16_to_f32, f32_to_bf16, BF16_EPSILON, BF16_MAX};
+pub use fp8::{f32_to_fp8, fp8_quantize, fp8_to_f32, FP8_EPSILON, FP8_MAX};
+pub use int8::{f32_to_int8, int8_quantize, int8_to_f32, INT8_QMAX};
+pub use tf32::{f32_to_tf32, tf32_quantize, tf32_to_f32, TF32_EPSILON, TF32_MAX};
+
+use crate::halfprec::{self, f16_to_f32, f32_to_f16, Half};
+
+/// The Tensor Core hardware generation that introduced a format's
+/// GEMM path — the figure and docs tables group by this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Generation {
+    /// V100: fp16 inputs, fp32 accumulate (the paper's subject).
+    Volta,
+    /// T4/RTX: int8 inputs, int32 accumulate.
+    Turing,
+    /// A100: bf16 and tf32 inputs, fp32 accumulate.
+    Ampere,
+    /// H100: fp8 (E4M3/E5M2) inputs, fp32 accumulate.
+    Hopper,
+}
+
+impl std::fmt::Display for Generation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Generation::Volta => "Volta",
+            Generation::Turing => "Turing",
+            Generation::Ampere => "Ampere",
+            Generation::Hopper => "Hopper",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Static description of a format: storage geometry, generation, and
+/// the numeric constants the docs table and the cross-generation error
+/// figure report side by side.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FormatMeta {
+    /// Short lowercase name ("f16", "bf16", "tf32", "fp8e4m3", "int8").
+    pub name: &'static str,
+    /// Storage bits per element (tf32 stores 19 significant bits but
+    /// occupies an f32 lane; this field reports the *significant*
+    /// width: 1 + exp_bits + sig_bits).
+    pub bits: u32,
+    /// Exponent field width (0 for int8).
+    pub exp_bits: u32,
+    /// Stored significand bits (fraction field; excludes the hidden
+    /// bit).  For int8 this is the 7 magnitude bits.
+    pub sig_bits: u32,
+    /// Hardware generation that introduced the format's GEMM path.
+    pub generation: Generation,
+    /// Relative rounding unit: `2^-sig_bits` — the half-spacing of
+    /// representable values at unit magnitude (for int8, the half-step
+    /// relative to the ±127 grid at unit scale).
+    pub epsilon: f32,
+    /// Largest finite representable magnitude at unit scale.
+    pub max_finite: f32,
+    /// Accumulator of the emulated MAC contract (always f32 here: the
+    /// int8 path's i32 accumulation is exact in f32 for the k ranges
+    /// the engine emulates, so one contract covers every generation).
+    pub accumulator: &'static str,
+}
+
+/// Symmetric per-matrix quantization scale for [`Int8`], stored as f32
+/// bits so every descriptor that embeds it (`Precision::Int8`,
+/// `PrecisionMode::Int8`, `InputPrecision::Int8Scaled`) keeps its
+/// `Eq + Hash` derives — scales are compared and hashed bitwise, which
+/// is exactly the bucket/plan-cache identity the coordinator needs.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Scale(u32);
+
+impl Scale {
+    /// Wrap a scale value (the f32 is stored bit-exactly).
+    pub fn new(scale: f32) -> Scale {
+        Scale(scale.to_bits())
+    }
+
+    /// The scale as f32.
+    pub fn get(self) -> f32 {
+        f32::from_bits(self.0)
+    }
+
+    /// The raw bit pattern (the coordinator's bucket-key word).
+    pub fn bits(self) -> u32 {
+        self.0
+    }
+
+    /// The scale mapping uniform inputs on `[-s, s]` onto the full
+    /// ±127 grid: `s / 127`.
+    pub fn for_range(s: f32) -> Scale {
+        Scale::new(s / int8::INT8_QMAX as f32)
+    }
+
+    /// A plan-valid scale is finite and strictly positive.
+    pub fn is_valid(self) -> bool {
+        let v = self.get();
+        v.is_finite() && v > 0.0
+    }
+}
+
+impl Default for Scale {
+    /// The unit-range scale `1/127` (full-grid quantization of
+    /// `[-1, 1]` inputs — the repo's standard test distribution).
+    fn default() -> Scale {
+        Scale::for_range(1.0)
+    }
+}
+
+impl From<f32> for Scale {
+    fn from(scale: f32) -> Scale {
+        Scale::new(scale)
+    }
+}
+
+impl std::fmt::Debug for Scale {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Scale({})", self.get())
+    }
+}
+
+impl std::fmt::Display for Scale {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.get())
+    }
+}
+
+/// One Tensor Core input format: conversion, widening, and the ULP
+/// geometry of its grid.  The exact-product / f32-accumulator half of
+/// the contract is shared by every implementor (module docs) — what a
+/// format defines is *where its grid points are*.
+pub trait TcFormat {
+    /// Storage bit pattern of one rounded element.
+    type Bits: Copy + Eq + std::fmt::Debug;
+
+    /// Round-to-nearest-even conversion from f32 — the bit-exact
+    /// scalar conversion oracle (saturating for formats with no
+    /// infinity, like [`Fp8E4M3`] and [`Int8`]).
+    fn round_from_f32(&self, x: f32) -> Self::Bits;
+
+    /// Exact widening back to f32 (every grid point of every format
+    /// here is exactly representable in f32).
+    fn widen_to_f32(&self, bits: Self::Bits) -> f32;
+
+    /// The value the emulated MAC consumes: round, then widen.  This
+    /// is the function the engine's pack-time rounding applies once
+    /// per element.
+    fn quantize(&self, x: f32) -> f32 {
+        self.widen_to_f32(self.round_from_f32(x))
+    }
+
+    /// Storage geometry, generation, and numeric constants.
+    fn meta(&self) -> FormatMeta;
+
+    /// Half the grid spacing at magnitude `at` — the worst-case
+    /// absolute rounding error for an input of that magnitude, the
+    /// `d` parameter of
+    /// [`crate::precision::rounded_gemm_error_bound`].
+    fn half_ulp_at(&self, at: f32) -> f32;
+}
+
+/// Half the ULP of a binary float format with `sig_bits` stored
+/// significand bits, at magnitude `at` (normal range).
+fn float_half_ulp_at(at: f32, sig_bits: u32) -> f32 {
+    let e = ((at.abs().to_bits() >> 23) as i32) - 127;
+    2f32.powi(e - sig_bits as i32 - 1)
+}
+
+/// Volta fp16 (IEEE binary16): the paper's input format.  Conversion
+/// is the existing [`crate::halfprec`] oracle — `halfprec` *is* the
+/// `F16` instance, re-exported there for back-compat.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct F16;
+
+impl TcFormat for F16 {
+    type Bits = Half;
+
+    fn round_from_f32(&self, x: f32) -> Half {
+        f32_to_f16(x)
+    }
+
+    fn widen_to_f32(&self, bits: Half) -> f32 {
+        f16_to_f32(bits)
+    }
+
+    fn meta(&self) -> FormatMeta {
+        FormatMeta {
+            name: "f16",
+            bits: 16,
+            exp_bits: 5,
+            sig_bits: 10,
+            generation: Generation::Volta,
+            epsilon: halfprec::F16_EPSILON,
+            max_finite: halfprec::F16_MAX,
+            accumulator: "f32",
+        }
+    }
+
+    fn half_ulp_at(&self, at: f32) -> f32 {
+        halfprec::ulp_at(at) / 2.0
+    }
+}
+
+/// Ampere bfloat16 (1/8/7): f32's exponent range at 7 significand
+/// bits.  Oracle: [`f32_to_bf16`] / [`bf16_to_f32`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Bf16;
+
+impl TcFormat for Bf16 {
+    type Bits = u16;
+
+    fn round_from_f32(&self, x: f32) -> u16 {
+        f32_to_bf16(x)
+    }
+
+    fn widen_to_f32(&self, bits: u16) -> f32 {
+        bf16_to_f32(bits)
+    }
+
+    fn meta(&self) -> FormatMeta {
+        FormatMeta {
+            name: "bf16",
+            bits: 16,
+            exp_bits: 8,
+            sig_bits: 7,
+            generation: Generation::Ampere,
+            epsilon: BF16_EPSILON,
+            max_finite: BF16_MAX,
+            accumulator: "f32",
+        }
+    }
+
+    fn half_ulp_at(&self, at: f32) -> f32 {
+        float_half_ulp_at(at, 7)
+    }
+}
+
+/// Ampere TF32 (1/8/10): f32 with the significand rounded to 10 bits
+/// — 19 significant bits in an f32 lane.  Oracle: [`f32_to_tf32`] /
+/// [`tf32_to_f32`] (the bit pattern is the rounded f32 itself).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Tf32;
+
+impl TcFormat for Tf32 {
+    type Bits = u32;
+
+    fn round_from_f32(&self, x: f32) -> u32 {
+        f32_to_tf32(x)
+    }
+
+    fn widen_to_f32(&self, bits: u32) -> f32 {
+        tf32_to_f32(bits)
+    }
+
+    fn meta(&self) -> FormatMeta {
+        FormatMeta {
+            name: "tf32",
+            bits: 19,
+            exp_bits: 8,
+            sig_bits: 10,
+            generation: Generation::Ampere,
+            epsilon: TF32_EPSILON,
+            max_finite: TF32_MAX,
+            accumulator: "f32",
+        }
+    }
+
+    fn half_ulp_at(&self, at: f32) -> f32 {
+        float_half_ulp_at(at, 10)
+    }
+}
+
+/// Hopper FP8 E4M3 (1/4/3): max finite 448, no infinities (the 0x7F
+/// mantissa-all-ones exponent-all-ones point is NaN; overflow
+/// saturates).  Oracle: [`f32_to_fp8`] / [`fp8_to_f32`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Fp8E4M3;
+
+impl TcFormat for Fp8E4M3 {
+    type Bits = u8;
+
+    fn round_from_f32(&self, x: f32) -> u8 {
+        f32_to_fp8(x)
+    }
+
+    fn widen_to_f32(&self, bits: u8) -> f32 {
+        fp8_to_f32(bits)
+    }
+
+    fn meta(&self) -> FormatMeta {
+        FormatMeta {
+            name: "fp8e4m3",
+            bits: 8,
+            exp_bits: 4,
+            sig_bits: 3,
+            generation: Generation::Hopper,
+            epsilon: FP8_EPSILON,
+            max_finite: FP8_MAX,
+            accumulator: "f32",
+        }
+    }
+
+    fn half_ulp_at(&self, at: f32) -> f32 {
+        float_half_ulp_at(at, 3)
+    }
+}
+
+/// Turing INT8 with a symmetric per-matrix scale: values quantize to
+/// `clamp(round(x / scale), -127, 127)` (saturating, round half away
+/// from zero — the standard CPU quantizer) and are consumed as
+/// `q * scale`.  Oracle: [`f32_to_int8`] / [`int8_to_f32`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Int8 {
+    /// The symmetric quantization scale (grid step).
+    pub scale: Scale,
+}
+
+impl TcFormat for Int8 {
+    type Bits = i8;
+
+    fn round_from_f32(&self, x: f32) -> i8 {
+        f32_to_int8(x, self.scale.get())
+    }
+
+    fn widen_to_f32(&self, bits: i8) -> f32 {
+        int8_to_f32(bits, self.scale.get())
+    }
+
+    fn meta(&self) -> FormatMeta {
+        FormatMeta {
+            name: "int8",
+            bits: 8,
+            exp_bits: 0,
+            sig_bits: 7,
+            generation: Generation::Turing,
+            epsilon: 0.5 / int8::INT8_QMAX as f32,
+            max_finite: int8::INT8_QMAX as f32,
+            accumulator: "f32",
+        }
+    }
+
+    /// The int8 grid is uniform: half a step is `scale / 2`
+    /// everywhere (magnitude-independent).
+    fn half_ulp_at(&self, _at: f32) -> f32 {
+        self.scale.get() / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metas_report_the_generation_zoo() {
+        assert_eq!(F16.meta().generation, Generation::Volta);
+        assert_eq!(Int8::default().meta().generation, Generation::Turing);
+        assert_eq!(Bf16.meta().generation, Generation::Ampere);
+        assert_eq!(Tf32.meta().generation, Generation::Ampere);
+        assert_eq!(Fp8E4M3.meta().generation, Generation::Hopper);
+        for meta in [F16.meta(), Bf16.meta(), Tf32.meta(), Fp8E4M3.meta()] {
+            assert_eq!(meta.bits, 1 + meta.exp_bits + meta.sig_bits);
+            assert_eq!(meta.epsilon, 2f32.powi(-(meta.sig_bits as i32)));
+            assert_eq!(meta.accumulator, "f32");
+        }
+    }
+
+    #[test]
+    fn quantize_composes_round_and_widen() {
+        let x = 0.333_333_34_f32;
+        assert_eq!(F16.quantize(x), f16_to_f32(f32_to_f16(x)));
+        assert_eq!(Bf16.quantize(x), bf16_to_f32(f32_to_bf16(x)));
+        assert_eq!(Tf32.quantize(x), tf32_to_f32(f32_to_tf32(x)));
+        assert_eq!(Fp8E4M3.quantize(x), fp8_to_f32(f32_to_fp8(x)));
+        let i8f = Int8 { scale: Scale::new(0.25) };
+        assert_eq!(i8f.quantize(x), int8_to_f32(f32_to_int8(x, 0.25), 0.25));
+    }
+
+    #[test]
+    fn half_ulp_matches_epsilon_at_unit_magnitude() {
+        // at x in [1, 2) the absolute half-ULP is epsilon/2 * 2^0
+        for (d, eps) in [
+            (F16.half_ulp_at(1.0), F16.meta().epsilon),
+            (Bf16.half_ulp_at(1.0), Bf16.meta().epsilon),
+            (Tf32.half_ulp_at(1.0), Tf32.meta().epsilon),
+            (Fp8E4M3.half_ulp_at(1.0), Fp8E4M3.meta().epsilon),
+        ] {
+            assert_eq!(d, eps / 2.0);
+        }
+        let i8f = Int8 { scale: Scale::new(0.5) };
+        assert_eq!(i8f.half_ulp_at(1.0), 0.25);
+        assert_eq!(i8f.half_ulp_at(100.0), 0.25);
+    }
+
+    #[test]
+    fn scale_is_bitwise_identity() {
+        assert_eq!(Scale::new(0.25), Scale::from(0.25));
+        assert_eq!(Scale::new(0.25).get(), 0.25);
+        assert_eq!(Scale::new(0.25).bits(), 0.25f32.to_bits());
+        assert_eq!(Scale::for_range(127.0).get(), 1.0);
+        assert_eq!(Scale::default(), Scale::for_range(1.0));
+        assert!(Scale::new(0.25).is_valid());
+        assert!(!Scale::new(0.0).is_valid());
+        assert!(!Scale::new(-1.0).is_valid());
+        assert!(!Scale::new(f32::NAN).is_valid());
+        assert!(!Scale::new(f32::INFINITY).is_valid());
+    }
+}

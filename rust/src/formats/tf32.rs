@@ -1,0 +1,83 @@
+//! TF32 (1 sign / 8 exponent / 10 significand) scalar conversion
+//! oracle — Ampere's "f32 with f16's mantissa" Tensor Core input.
+//!
+//! TF32 lives inside an f32 lane: rounding keeps the top 10 of the 23
+//! significand bits (round to nearest even) and widening is the
+//! identity on the bit pattern.  The "bits" of a TF32 value are the
+//! rounded f32's bits, always with the low 13 bits zero (except NaN's
+//! canonical payload).
+
+/// Relative rounding unit: `2^-10` (same significand as f16 — TF32
+/// trades none of f16's precision, only extends the exponent range).
+pub const TF32_EPSILON: f32 = 0.000_976_562_5;
+
+/// Largest finite TF32 value: `(2 - 2^-10) * 2^127`.
+pub const TF32_MAX: f32 = 3.401_162_1e38;
+
+/// Round an f32 to the nearest TF32 (ties to even), returning the
+/// rounded f32's bit pattern (low 13 bits zero).  NaN quietens to a
+/// canonical payload; overflow carries to infinity.
+pub fn f32_to_tf32(x: f32) -> u32 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return (bits & 0x8000_0000) | 0x7FC0_0000;
+    }
+    let lsb = (bits >> 13) & 1;
+    bits.wrapping_add(0xFFF + lsb) & !0x1FFF
+}
+
+/// Widen a TF32 bit pattern to f32 (the identity: TF32 ⊂ f32).
+pub fn tf32_to_f32(bits: u32) -> f32 {
+    f32::from_bits(bits)
+}
+
+/// Round-trip quantization: the value the emulated Ampere TF32 MAC
+/// consumes for input `x`.
+pub fn tf32_quantize(x: f32) -> f32 {
+    tf32_to_f32(f32_to_tf32(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_pass_through() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 1024.0, 1.0009765625] {
+            assert_eq!(tf32_quantize(x), x, "{x} is a tf32 grid point");
+        }
+        assert_eq!(tf32_quantize(-0.0).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // 1 + 2^-11 is halfway between 1 and 1 + 2^-10: even wins
+        assert_eq!(tf32_quantize(1.0 + 2f32.powi(-11)), 1.0);
+        let tie_up = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(tf32_quantize(tie_up), 1.0 + 2f32.powi(-9));
+    }
+
+    #[test]
+    fn rounding_is_idempotent() {
+        for x in [0.1f32, 0.333_333_34, 1e-20, 7.77e30, -123.456] {
+            let once = f32_to_tf32(x);
+            assert_eq!(f32_to_tf32(tf32_to_f32(once)), once);
+            assert_eq!(once & 0x1FFF, 0, "low 13 bits clear");
+        }
+    }
+
+    #[test]
+    fn specials_and_overflow() {
+        assert_eq!(tf32_quantize(f32::INFINITY), f32::INFINITY);
+        assert_eq!(tf32_quantize(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(tf32_quantize(f32::NAN).is_nan());
+        assert_eq!(tf32_quantize(f32::MAX), f32::INFINITY);
+        assert_eq!(tf32_quantize(TF32_MAX), TF32_MAX);
+    }
+
+    #[test]
+    fn constants_match_the_bit_patterns() {
+        assert_eq!(TF32_MAX, tf32_to_f32(0x7F7F_E000));
+        assert_eq!(TF32_EPSILON, 2f32.powi(-10));
+    }
+}

@@ -34,6 +34,15 @@ pub fn batched_hgemm(a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
     plan::oneshot_batched(Precision::F16, a, b, 0)
 }
 
+/// Batched GEMM at any descriptor precision — the generalization the
+/// generation formats ([`crate::formats`]) ride: `batched_gemm_at(
+/// Precision::Bf16, …)` is to [`batched_mixed_gemm`] what the BF16
+/// grid is to the f16 grid.  Plan-backed like every wrapper here;
+/// entries equal a loop of single plans at `precision` bit for bit.
+pub fn batched_gemm_at(precision: Precision, a: &[Matrix], b: &[Matrix]) -> Vec<Matrix> {
+    plan::oneshot_batched(precision, a, b, 0)
+}
+
 /// Strided batched sgemm over one contiguous buffer per operand — the
 /// `cublasGemmStridedBatched` call shape (§IV-B).  Entries are gathered
 /// as borrowed views (zero copies, zero per-entry allocations); the
@@ -112,6 +121,25 @@ mod tests {
         assert_eq!(batched_mixed_gemm(&a, &b), batched_mixed_gemm_scalar(&a, &b));
         assert_eq!(batched_sgemm(&a, &b), batched_sgemm_scalar(&a, &b));
         assert_eq!(batched_hgemm(&a, &b), batched_hgemm_scalar(&a, &b));
+    }
+
+    #[test]
+    fn batched_at_format_precisions_matches_format_oracles() {
+        use super::super::mixed::{bf16_gemm_scalar, fp8_gemm_scalar, tf32_gemm_scalar};
+        let a = batch(16, 6, 13);
+        let b = batch(16, 6, 14);
+        type Oracle = fn(&Matrix, &Matrix, Option<&Matrix>, f32, f32) -> Matrix;
+        let cases: [(Precision, Oracle); 3] = [
+            (Precision::Bf16, bf16_gemm_scalar),
+            (Precision::Tf32, tf32_gemm_scalar),
+            (Precision::Fp8E4M3, fp8_gemm_scalar),
+        ];
+        for (prec, oracle) in cases {
+            let got = batched_gemm_at(prec, &a, &b);
+            for i in 0..a.len() {
+                assert_eq!(got[i], oracle(&a[i], &b[i], None, 1.0, 0.0), "{prec:?} entry {i}");
+            }
+        }
     }
 
     #[test]

@@ -205,6 +205,22 @@ pub fn batched_mixed_gemm_views(a: &[MatRef<'_>], b: &[MatRef<'_>], threads: usi
     batched_gemm_views(a, b, InputPrecision::F16Rounded, threads)
 }
 
+/// Batched GEMM at an arbitrary pack-time input rounding — the
+/// execution substrate of the generation-format precisions
+/// (`Precision::{Bf16, Tf32, Fp8E4M3, Int8}` batched plans land here).
+/// Same worker distribution and packed-buffer reuse as
+/// [`batched_sgemm_views`]; only the per-element rounding the pack
+/// applies differs, so every format inherits the engine's bitwise
+/// thread/pool-mode invariance unchanged.
+pub fn batched_rounded_gemm_views(
+    a: &[MatRef<'_>],
+    b: &[MatRef<'_>],
+    prec: InputPrecision,
+    threads: usize,
+) -> Vec<Matrix> {
+    batched_gemm_views(a, b, prec, threads)
+}
+
 /// Batched CUDA-core hgemm, entries distributed over the pool; each
 /// worker reuses one pair of packed-f16 buffers across its entries.
 pub fn batched_hgemm(a: &[Matrix], b: &[Matrix], threads: usize) -> Vec<Matrix> {

@@ -28,12 +28,17 @@
 //! the read addresses change.  A dense `Op::N` view packs to bitwise
 //! identical panels as the `Matrix` it was borrowed from.
 
+use crate::formats::{bf16_quantize, fp8_quantize, int8_quantize, tf32_quantize, Scale};
 use crate::gemm::{MatRef, Matrix};
 use crate::halfprec::{f16_to_f32, f32_to_f16, Half};
 
 use super::micro::{div_up, MR, NR};
 
-/// Input rounding applied at pack time.
+/// Input rounding applied at pack time.  Every variant beyond `Full`
+/// rounds each element exactly once, in the copy the pack already
+/// pays — the generation formats ([`crate::formats`]) plug in here,
+/// which is why a new input format costs no new kernels: the packed
+/// panels stay f32 and the blocked engine below is format-blind.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum InputPrecision {
     /// Keep f32 inputs exactly (the CUDA-core sgemm semantics).
@@ -41,6 +46,17 @@ pub enum InputPrecision {
     /// Round once to binary16 and widen back (the Tensor Core input
     /// contract of §III; identical to what the scalar oracle applies).
     F16Rounded,
+    /// Round once to bfloat16 (Ampere; [`crate::formats::Bf16`]).
+    Bf16Rounded,
+    /// Round once to TF32 — 10-bit significand inside the f32 lane
+    /// (Ampere; [`crate::formats::Tf32`]).
+    Tf32Rounded,
+    /// Round once to FP8 E4M3, saturating at ±448 (Hopper;
+    /// [`crate::formats::Fp8E4M3`]).
+    Fp8Rounded,
+    /// Symmetric int8 quantization at the given scale: consume
+    /// `clamp(round(x/s), ±127) * s` (Turing; [`crate::formats::Int8`]).
+    Int8Scaled(Scale),
 }
 
 #[inline]
@@ -48,6 +64,10 @@ fn convert(x: f32, prec: InputPrecision) -> f32 {
     match prec {
         InputPrecision::Full => x,
         InputPrecision::F16Rounded => f16_to_f32(f32_to_f16(x)),
+        InputPrecision::Bf16Rounded => bf16_quantize(x),
+        InputPrecision::Tf32Rounded => tf32_quantize(x),
+        InputPrecision::Fp8Rounded => fp8_quantize(x),
+        InputPrecision::Int8Scaled(s) => int8_quantize(x, s.get()),
     }
 }
 

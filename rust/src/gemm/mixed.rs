@@ -20,6 +20,7 @@
 //! against bit for bit (`tests/engine.rs`, `tests/plan.rs`) and the
 //! baselines the hot-path benches compare throughput against.
 
+use crate::formats::{bf16_quantize, fp8_quantize, int8_quantize, tf32_quantize};
 use crate::halfprec::{f16_to_f32, f32_to_f16, half_add, half_mul, Half};
 
 use super::plan::{self, GemmDesc, Precision};
@@ -69,20 +70,38 @@ pub fn mixed_gemm_scalar(
     alpha: f32,
     beta: f32,
 ) -> Matrix {
+    rounded_gemm_scalar(a, b, c, alpha, beta, |x| f16_to_f32(f32_to_f16(x)))
+}
+
+/// The shared scalar-oracle body of every pack-time-rounded precision:
+/// quantize each input once through `q`, take exact products, keep one
+/// f32 accumulator per element in ascending k, apply the plan layer's
+/// cuBLAS epilogue rule (`beta == 0` never reads C).
+/// [`mixed_gemm_scalar`] is this template at the f16 round-trip; the
+/// generation-format oracles below instantiate it at their own grids —
+/// one loop definition, so the oracles cannot drift apart.
+fn rounded_gemm_scalar(
+    a: &Matrix,
+    b: &Matrix,
+    c: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+    q: impl Fn(f32) -> f32,
+) -> Matrix {
     let (m, k) = a.shape();
     let (k2, n) = b.shape();
     assert_eq!(k, k2, "inner dimension mismatch");
 
     // Round inputs once (the paper's untimed conversion step).
-    let ah: Vec<f32> = a.as_slice().iter().map(|&x| f16_to_f32(f32_to_f16(x))).collect();
-    let bh: Vec<f32> = b.as_slice().iter().map(|&x| f16_to_f32(f32_to_f16(x))).collect();
+    let ah: Vec<f32> = a.as_slice().iter().map(|&x| q(x)).collect();
+    let bh: Vec<f32> = b.as_slice().iter().map(|&x| q(x)).collect();
 
     let mut out = Matrix::zeros(m, n);
     for i in 0..m {
         for j in 0..n {
             let mut acc = 0f32; // the FP32 accumulator fragment
             for p in 0..k {
-                // f16 x f16 product is exact in f32
+                // quantized x quantized product is exact in f32
                 acc += ah[i * k + p] * bh[p * n + j];
             }
             let cval = if beta == 0.0 { 0.0 } else { c.map_or(0.0, |c| c[(i, j)]) };
@@ -90,6 +109,58 @@ pub fn mixed_gemm_scalar(
         }
     }
     out
+}
+
+/// Scalar oracle of the Ampere BF16 path (`Precision::Bf16`): inputs
+/// rounded once to bfloat16, exact products, f32 accumulation.
+pub fn bf16_gemm_scalar(
+    a: &Matrix,
+    b: &Matrix,
+    c: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+) -> Matrix {
+    rounded_gemm_scalar(a, b, c, alpha, beta, bf16_quantize)
+}
+
+/// Scalar oracle of the Ampere TF32 path (`Precision::Tf32`): inputs
+/// rounded once to a 10-bit significand, exact products, f32
+/// accumulation.
+pub fn tf32_gemm_scalar(
+    a: &Matrix,
+    b: &Matrix,
+    c: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+) -> Matrix {
+    rounded_gemm_scalar(a, b, c, alpha, beta, tf32_quantize)
+}
+
+/// Scalar oracle of the Hopper FP8 E4M3 path (`Precision::Fp8E4M3`):
+/// inputs rounded once to E4M3 (saturating at ±448), exact products,
+/// f32 accumulation.
+pub fn fp8_gemm_scalar(
+    a: &Matrix,
+    b: &Matrix,
+    c: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+) -> Matrix {
+    rounded_gemm_scalar(a, b, c, alpha, beta, fp8_quantize)
+}
+
+/// Scalar oracle of the Turing INT8 path (`Precision::Int8`): inputs
+/// quantized once onto the symmetric int8 grid at `scale`, exact
+/// products of the de-scaled values, f32 accumulation.
+pub fn int8_gemm_scalar(
+    a: &Matrix,
+    b: &Matrix,
+    c: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+    scale: f32,
+) -> Matrix {
+    rounded_gemm_scalar(a, b, c, alpha, beta, |x| int8_quantize(x, scale))
 }
 
 /// The serial reference implementation of [`hgemm`] (per-call operand
@@ -201,6 +272,34 @@ mod tests {
         mixed_gemm_accumulate(&a, &b, &mut c);
         let twice = mixed_gemm(&a, &b, None, 2.0, 0.0);
         assert!(c.max_norm_diff(&twice) < 1e-5);
+    }
+
+    #[test]
+    fn format_oracles_order_by_significand_width() {
+        // the per-format error vs f64 truth must order by input grid
+        // coarseness: tf32 (10 sig bits) ≈ f16 < bf16 (7) < fp8 (3) —
+        // the cross-generation story the formats figure tabulates
+        let n = 96;
+        let a = rand_matrix(n, n, 61, 1.0);
+        let b = rand_matrix(n, n, 62, 1.0);
+        let truth = dgemm_naive(&a, &b);
+        let e_tf32 = tf32_gemm_scalar(&a, &b, None, 1.0, 0.0).max_norm_diff(&truth);
+        let e_bf16 = bf16_gemm_scalar(&a, &b, None, 1.0, 0.0).max_norm_diff(&truth);
+        let e_fp8 = fp8_gemm_scalar(&a, &b, None, 1.0, 0.0).max_norm_diff(&truth);
+        assert!(e_tf32 < e_bf16, "tf32 {e_tf32} vs bf16 {e_bf16}");
+        assert!(e_bf16 < e_fp8, "bf16 {e_bf16} vs fp8 {e_fp8}");
+    }
+
+    #[test]
+    fn int8_oracle_is_exact_on_grid_inputs() {
+        // inputs already on the int8 grid survive quantization, products
+        // and f32 accumulation exactly for these magnitudes
+        let scale = 0.25f32;
+        let a = Matrix::from_fn(8, 8, |i, j| (((i * 5 + j) % 11) as f32 - 5.0) * scale);
+        let b = Matrix::from_fn(8, 8, |i, j| (((i + 3 * j) % 9) as f32 - 4.0) * scale);
+        let got = int8_gemm_scalar(&a, &b, None, 1.0, 0.0, scale);
+        let want = sgemm_naive(&a, &b, None, 1.0, 0.0);
+        assert_eq!(got, want);
     }
 
     #[test]

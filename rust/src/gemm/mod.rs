@@ -43,12 +43,16 @@ mod naive;
 pub mod plan;
 
 pub use batched::{
-    batched_hgemm, batched_hgemm_scalar, batched_mixed_gemm, batched_mixed_gemm_scalar,
-    batched_mixed_gemm_strided, batched_sgemm, batched_sgemm_scalar, batched_sgemm_strided,
+    batched_gemm_at, batched_hgemm, batched_hgemm_scalar, batched_mixed_gemm,
+    batched_mixed_gemm_scalar, batched_mixed_gemm_strided, batched_sgemm, batched_sgemm_scalar,
+    batched_sgemm_strided,
 };
 pub use blocked::sgemm_blocked;
 pub use layout::{MatLayout, MatMut, MatRef, Op, StridedBatch};
 pub use matrix::Matrix;
-pub use mixed::{hgemm, hgemm_scalar, mixed_gemm, mixed_gemm_accumulate, mixed_gemm_scalar};
+pub use mixed::{
+    bf16_gemm_scalar, fp8_gemm_scalar, hgemm, hgemm_scalar, int8_gemm_scalar, mixed_gemm,
+    mixed_gemm_accumulate, mixed_gemm_scalar, tf32_gemm_scalar,
+};
 pub use naive::{dgemm_naive, sgemm_naive};
 pub use plan::{GemmDesc, GemmPlan, PlanError, Precision};

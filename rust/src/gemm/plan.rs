@@ -67,6 +67,7 @@
 //! the legacy summation order exactly: residual products first, partials
 //! accumulated into one f32 matrix in ascending refinement order.
 
+use crate::formats::Scale;
 use crate::gemm::engine::{
     self, InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB, PoolMode,
 };
@@ -74,14 +75,18 @@ use crate::gemm::{MatMut, MatRef, Matrix, Op, StridedBatch};
 use crate::precision::RefineMode;
 
 /// The numerical mode a plan executes under — the paper's precision axis
-/// as a descriptor field.
+/// as a descriptor field, extended across the Tensor Core generations by
+/// the [`crate::formats`] subsystem (every format variant rounds its
+/// inputs once at pack time, takes exact products, and accumulates in
+/// f32 — the same contract shape as [`Precision::Mixed`], on a
+/// different input grid).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Precision {
     /// Full f32 inputs, f32 accumulation (CUDA-core sgemm semantics);
     /// oracle: [`crate::gemm::sgemm_naive`].
     F32,
     /// Inputs rounded to binary16 once at pack time, exact products, f32
-    /// accumulation (the §III Tensor Core contract); oracle:
+    /// accumulation (the §III Volta Tensor Core contract); oracle:
     /// [`crate::gemm::mixed_gemm_scalar`].
     Mixed,
     /// All-f16 arithmetic (CUDA-core hgemm); oracle:
@@ -91,6 +96,23 @@ pub enum Precision {
     /// partial products with exact f32 chaining.
     /// `Refined(RefineMode::None)` is identical to [`Precision::Mixed`].
     Refined(RefineMode),
+    /// Inputs rounded to bfloat16 (Ampere BF16 path); oracle:
+    /// [`crate::gemm::bf16_gemm_scalar`].
+    Bf16,
+    /// Inputs rounded to TF32 — 10-bit significand, f32 exponent range
+    /// (Ampere TF32 path); oracle: [`crate::gemm::tf32_gemm_scalar`].
+    Tf32,
+    /// Inputs rounded to FP8 E4M3, saturating at ±448 (Hopper FP8
+    /// path); oracle: [`crate::gemm::fp8_gemm_scalar`].
+    Fp8E4M3,
+    /// Inputs quantized onto the symmetric int8 grid at `scale`
+    /// (Turing INT8 path; [`GemmDesc::build`] rejects non-finite or
+    /// non-positive scales with [`PlanError::InvalidScale`]); oracle:
+    /// [`crate::gemm::int8_gemm_scalar`].
+    Int8 {
+        /// Symmetric per-matrix quantization scale.
+        scale: Scale,
+    },
 }
 
 /// Typed rejection from descriptor validation or plan execution.
@@ -119,6 +141,9 @@ pub enum PlanError {
     CBatchLength { want: usize, got: usize },
     /// `execute_into` received an output of the wrong shape.
     OutputShape { want: (usize, usize), got: (usize, usize) },
+    /// A [`Precision::Int8`] descriptor carries a scale that is not
+    /// finite and strictly positive.
+    InvalidScale { scale: Scale },
 }
 
 impl std::fmt::Display for PlanError {
@@ -159,6 +184,9 @@ impl std::fmt::Display for PlanError {
             }
             PlanError::OutputShape { want, got } => {
                 write!(f, "output shape mismatch: want {want:?}, got {got:?}")
+            }
+            PlanError::InvalidScale { scale } => {
+                write!(f, "int8 scale must be finite and positive, got {scale}")
             }
         }
     }
@@ -327,11 +355,18 @@ impl GemmDesc {
 
     /// Validate the descriptor into an operand-less plan (operands are
     /// supplied later via [`GemmPlan::set_a`] / [`GemmPlan::set_b`], or
-    /// per call for batched execution).  Every descriptor combination
-    /// currently validates — transpose ops, batched refined plans and
-    /// batched alpha/beta epilogues included — but the `Result` stays so
-    /// future engine gaps surface as typed errors, not panics.
+    /// per call for batched execution).  The one value-level rejection
+    /// is [`PlanError::InvalidScale`]: a [`Precision::Int8`] descriptor
+    /// must carry a finite, strictly positive scale (a NaN/zero/negative
+    /// scale would quantize every operand to garbage silently).  All
+    /// other combinations — transpose ops, batched refined plans,
+    /// batched alpha/beta epilogues, every format precision — validate.
     pub fn build(self) -> Result<GemmPlan, PlanError> {
+        if let Precision::Int8 { scale } = self.precision {
+            if !scale.is_valid() {
+                return Err(PlanError::InvalidScale { scale });
+            }
+        }
         let pool = self.pool.unwrap_or_else(engine::pool_mode);
         Ok(GemmPlan { desc: self, pool, a: OperandA::Unset, b: OperandB::Unset })
     }
@@ -409,6 +444,21 @@ enum OperandB {
     Rounded(PackedB),
     Half(PackedHalfB),
     Split { hi: PackedB, lo: PackedB },
+}
+
+/// The pack-time rounding of a generation-format precision
+/// (`Bf16`/`Tf32`/`Fp8E4M3`/`Int8` — the modes that store f32 panels
+/// and differ only in where their input grid points are; see
+/// [`crate::formats`]).  `None` for the precisions with their own
+/// operand representations (`F32`, `Mixed`/refined, `F16`).
+fn format_rounding(p: Precision) -> Option<InputPrecision> {
+    match p {
+        Precision::Bf16 => Some(InputPrecision::Bf16Rounded),
+        Precision::Tf32 => Some(InputPrecision::Tf32Rounded),
+        Precision::Fp8E4M3 => Some(InputPrecision::Fp8Rounded),
+        Precision::Int8 { scale } => Some(InputPrecision::Int8Scaled(scale)),
+        _ => None,
+    }
 }
 
 /// Does this refinement mode split the left operand?
@@ -516,6 +566,16 @@ impl GemmPlan {
                     }
                 }
             }
+            // generation formats: round once at pack time into the same
+            // Rounded slot the mixed path uses — the engine below is
+            // format-blind (see crate::formats module docs)
+            p => {
+                let prec = format_rounding(p).expect("non-format precisions matched above");
+                match &mut self.a {
+                    OperandA::Rounded(pk) => pk.repack_view(&v, prec),
+                    slot => *slot = OperandA::Rounded(PackedA::pack_view(&v, prec)),
+                }
+            }
         }
         Ok(())
     }
@@ -574,6 +634,15 @@ impl GemmPlan {
                             *slot = OperandB::Rounded(packed)
                         }
                     }
+                }
+            }
+            // generation formats: same Rounded slot as the mixed path,
+            // different pack-time grid (see set_a_view)
+            p => {
+                let prec = format_rounding(p).expect("non-format precisions matched above");
+                match &mut self.b {
+                    OperandB::Rounded(pk) => pk.repack_view(&v, prec),
+                    slot => *slot = OperandB::Rounded(PackedB::pack_view(&v, prec)),
                 }
             }
         }
@@ -792,6 +861,10 @@ impl GemmPlan {
             }
             Precision::F16 => engine::batched_hgemm_views(&ae, &be, t),
             Precision::Refined(mode) => engine::batched_refined_gemm_views(&ae, &be, mode, t),
+            p => {
+                let prec = format_rounding(p).expect("non-format precisions matched above");
+                engine::batched_rounded_gemm_views(&ae, &be, prec, t)
+            }
         };
         let beta = self.desc.beta;
         Ok(raw
@@ -1160,12 +1233,33 @@ mod tests {
             Precision::Mixed,
             Precision::F16,
             Precision::Refined(RefineMode::RefineAB),
+            Precision::Bf16,
+            Precision::Tf32,
+            Precision::Fp8E4M3,
+            Precision::Int8 { scale: Scale::default() },
         ] {
             let p = GemmDesc::square(8).precision(prec).epilogue(1.5, 0.0).plan(&a, &b).unwrap();
             let got = p.execute_with(Some(&nan_c)).unwrap();
             assert_eq!(got, p.execute().unwrap(), "{prec:?}");
             assert!(got.as_slice().iter().all(|v| v.is_finite()), "{prec:?} leaked NaN");
         }
+    }
+
+    #[test]
+    fn int8_descriptor_validates_its_scale() {
+        for bad in [0.0f32, -0.25, f32::NAN, f32::INFINITY] {
+            let scale = Scale::new(bad);
+            let err = GemmDesc::square(8)
+                .precision(Precision::Int8 { scale })
+                .build()
+                .err()
+                .expect("invalid scale must be rejected at build time");
+            assert_eq!(err, PlanError::InvalidScale { scale });
+        }
+        assert!(GemmDesc::square(8)
+            .precision(Precision::Int8 { scale: Scale::new(0.25) })
+            .build()
+            .is_ok());
     }
 
     #[test]

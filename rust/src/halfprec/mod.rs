@@ -22,3 +22,10 @@ pub use bits::{
 };
 pub use convert::{f16_to_f32, f32_to_f16, Half};
 pub use residual::{residual_f16, split_residual, ResidualSplit};
+
+/// This module *is* the Volta entry of the multi-generation format
+/// zoo: [`crate::formats::F16`] wraps these conversions behind the
+/// [`crate::formats::TcFormat`] trait, re-exported here so historical
+/// `halfprec`-centric call sites find the trait instance where the
+/// format lives.
+pub use crate::formats::F16;

@@ -6,7 +6,12 @@
 //!
 //! * **Numerics** — bit-exact software emulation of the Volta Tensor Core
 //!   mixed-precision contract ([`halfprec`], [`gemm`], [`tcemu`]) plus the
-//!   paper's precision-refinement technique ([`precision`]).
+//!   paper's precision-refinement technique ([`precision`]) and the
+//!   multi-generation input-format zoo ([`formats`]): BF16/TF32
+//!   (Ampere), FP8 E4M3 (Hopper) and symmetric INT8 (Turing) behind
+//!   one [`formats::TcFormat`] trait, each with a bit-exact scalar
+//!   conversion oracle and a [`gemm::Precision`] descriptor variant
+//!   that rounds at pack time exactly like the f16 path.
 //! * **Plan layer** — [`gemm::plan`], the crate's **single GEMM entry
 //!   point**, modeled on the descriptor-based cuBLAS surface the paper
 //!   found fastest and most reusable (§IV): a
@@ -111,6 +116,7 @@ pub mod docs {
 }
 
 pub mod figures;
+pub mod formats;
 pub mod gemm;
 pub mod halfprec;
 pub mod interfaces;

@@ -5,10 +5,13 @@
 //! repro check                        run the cross-layer numerics check
 //! repro figures [--fig 6|7|8|9]      regenerate the paper's figures
 //! repro figures --headline           the §VII headline-number table
-//! repro figures --ablation <name>    tiling | shmem | range | pipeline | kahan | cluster
+//! repro figures --ablation <name>    tiling | shmem | range | pipeline | kahan |
+//!                                    cluster | formats
 //! repro serve --requests N [...]     run the GEMM service on a trace
 //! repro serve-replay [...]           open-loop burst replay -> BENCH_serving.json
-//!                                    (--shards N --submitters M: sharded intake)
+//!                                    (--shards N --submitters M: sharded intake;
+//!                                     --mode bf16|tf32|fp8e4m3|int8|refine_a|
+//!                                     refine_ab pins every request's precision)
 //! ```
 
 use std::collections::BTreeMap;
@@ -16,8 +19,11 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use tensoremu::coordinator::{BatcherConfig, Coordinator, CoordinatorConfig, GemmRequest};
+use tensoremu::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, GemmRequest, PrecisionMode,
+};
 use tensoremu::figures;
+use tensoremu::formats::Scale;
 use tensoremu::gemm::mixed_gemm;
 use tensoremu::runtime::{Engine, ExecutorServer, Manifest};
 use tensoremu::sim::VoltaConfig;
@@ -120,6 +126,7 @@ fn figures_cmd(args: &Args) -> Result<()> {
             }
             "kahan" => println!("{}", figures::ablations::kahan_study(42)),
             "cluster" => println!("{}", figures::ablations::cluster_study()),
+            "formats" => println!("{}", figures::ablations::format_generation_study(42)),
             other => anyhow::bail!("unknown ablation {other:?}"),
         }
         return Ok(());
@@ -220,6 +227,10 @@ fn serve_replay(args: &Args) -> Result<()> {
     let tile: usize = args.opt_parse("tile").unwrap_or(16);
     let shards: usize = args.opt_parse("shards").unwrap_or(1);
     let engine_only = args.flag("engine-only");
+    let mode = match args.opt("mode") {
+        None | Some("policy") => None,
+        Some(name) => Some(parse_mode(name, args)?),
+    };
 
     let cfg = CoordinatorConfig {
         tile,
@@ -251,6 +262,7 @@ fn serve_replay(args: &Args) -> Result<()> {
     let replay_cfg = ReplayConfig {
         time_scale,
         deadline: deadline_ms.map(Duration::from_millis),
+        mode,
         submitters,
         ..Default::default()
     };
@@ -275,6 +287,10 @@ fn serve_replay(args: &Args) -> Result<()> {
         deadline_ms.map_or(Json::Null, |d| Json::Num(d as f64)),
     );
     workload.insert("submitters".to_string(), Json::Num(submitters as f64));
+    workload.insert(
+        "mode".to_string(),
+        mode.map_or(Json::Str("policy".to_string()), |m| Json::Str(m.to_string())),
+    );
     let mut service = BTreeMap::new();
     service.insert("queue_cap".to_string(), Json::Num(queue_cap as f64));
     service.insert("max_wait_us".to_string(), Json::Num(max_wait_us as f64));
@@ -308,4 +324,31 @@ fn serve_replay(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Parse a `--mode` name into an explicit precision mode.  `int8` reads
+/// its symmetric per-matrix scale from `--int8-scale` (default: the
+/// `Scale::for_range(1.0)` calibration for inputs drawn from [-1, 1],
+/// which is what the replay traces generate).
+fn parse_mode(name: &str, args: &Args) -> Result<PrecisionMode> {
+    use tensoremu::precision::RefineMode;
+    Ok(match name {
+        "none" => RefineMode::None.into(),
+        "refine_a" => RefineMode::RefineA.into(),
+        "refine_ab" => RefineMode::RefineAB.into(),
+        "bf16" => PrecisionMode::Bf16,
+        "tf32" => PrecisionMode::Tf32,
+        "fp8" | "fp8e4m3" => PrecisionMode::Fp8E4M3,
+        "int8" => {
+            let scale = match args.opt_parse::<f32>("int8-scale") {
+                Some(s) => Scale::new(s),
+                None => Scale::for_range(1.0),
+            };
+            anyhow::ensure!(scale.is_valid(), "--int8-scale must be finite and positive");
+            PrecisionMode::Int8(scale)
+        }
+        other => anyhow::bail!(
+            "unknown mode {other:?} (try policy|none|refine_a|refine_ab|bf16|tf32|fp8e4m3|int8)"
+        ),
+    })
 }

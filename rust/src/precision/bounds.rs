@@ -17,14 +17,23 @@ pub fn f16_half_ulp(scale: f32) -> f32 {
 }
 
 /// Deterministic worst-case bound on ‖e‖_Max for an N-term inner product
-/// with inputs bounded by `scale` (paper's input model: U[-scale, scale]).
-pub fn mixed_gemm_error_bound(n: usize, scale: f32) -> f32 {
-    let d = f16_half_ulp(scale);
+/// whose inputs are bounded by `scale` and rounded with absolute error
+/// at most `d` per element — the generic form of the f16 model that
+/// every storage format in [`crate::formats`] instantiates by plugging
+/// in its own half-ulp (e.g. `s·2⁻⁸` for BF16, `s·2⁻⁴` for FP8-E4M3,
+/// `scale/2` for symmetric INT8).
+pub fn rounded_gemm_error_bound(n: usize, scale: f32, d: f32) -> f32 {
     // |Σ δa·b| ≤ N·d·s, same for a·δb, plus the quadratic term N·d².
     let nf = n as f32;
     2.0 * nf * d * scale + nf * d * d
         // f32 accumulation worst case: N * eps_f32 * N * s² (loose)
         + nf * f32::EPSILON * nf * scale * scale
+}
+
+/// Deterministic worst-case bound on ‖e‖_Max for an N-term inner product
+/// with inputs bounded by `scale` (paper's input model: U[-scale, scale]).
+pub fn mixed_gemm_error_bound(n: usize, scale: f32) -> f32 {
+    rounded_gemm_error_bound(n, scale, f16_half_ulp(scale))
 }
 
 /// RMS (probabilistic) estimate of ‖e‖_Max for iid U[-s, s] inputs:
@@ -88,6 +97,19 @@ mod tests {
         let b16 = mixed_gemm_error_bound(1024, 16.0);
         let ratio = b16 / b1;
         assert!(ratio > 200.0 && ratio < 300.0, "ratio {ratio}"); // ~256
+    }
+
+    #[test]
+    fn generic_bound_orders_the_format_generations() {
+        use crate::formats::{Bf16, Fp8E4M3, TcFormat, Tf32};
+        let (n, s) = (1024usize, 1.5f32);
+        let b_f16 = mixed_gemm_error_bound(n, s);
+        let b_tf32 = rounded_gemm_error_bound(n, s, Tf32.half_ulp_at(s));
+        let b_bf16 = rounded_gemm_error_bound(n, s, Bf16.half_ulp_at(s));
+        let b_fp8 = rounded_gemm_error_bound(n, s, Fp8E4M3.half_ulp_at(s));
+        // ten significand bits each: tf32 shares f16's input-rounding model
+        assert_eq!(b_tf32, b_f16);
+        assert!(b_fp8 > b_bf16 && b_bf16 > b_f16, "{b_fp8} {b_bf16} {b_f16}");
     }
 
     #[test]

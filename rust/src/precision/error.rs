@@ -9,6 +9,20 @@ pub fn max_norm_error(c_test: &Matrix, c_ref: &Matrix) -> f32 {
     c_test.max_norm_diff(c_ref)
 }
 
+/// Root-mean-square entry error — the probabilistic companion to
+/// [`max_norm_error`] used by the cross-generation format study
+/// (`figures::ablations`): RMS washes out the max-norm's single-entry
+/// tail and tracks each format's significand width directly.
+pub fn rms_error(c_test: &Matrix, c_ref: &Matrix) -> f32 {
+    assert_eq!(c_test.shape(), c_ref.shape(), "shape mismatch");
+    let mut sum_sq = 0f64;
+    for (t, r) in c_test.as_slice().iter().zip(c_ref.as_slice()) {
+        let e = (t - r) as f64;
+        sum_sq += e * e;
+    }
+    (sum_sq / c_test.as_slice().len().max(1) as f64).sqrt() as f32
+}
+
 /// Full error characterization of a computed matrix against a reference.
 #[derive(Clone, Copy, Debug)]
 pub struct ErrorReport {
@@ -70,6 +84,17 @@ mod tests {
         assert!((r.mean_abs - 0.125).abs() < 1e-7);
         assert!((r.frobenius - 0.5).abs() < 1e-7);
         assert!((r.max_rel - 0.5 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rms_is_frobenius_over_root_count() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut b = a.clone();
+        b[(0, 1)] = 2.5;
+        b[(1, 1)] = 3.0;
+        let r = error_report(&b, &a);
+        let rms = rms_error(&b, &a);
+        assert!((rms - r.frobenius / 2.0).abs() < 1e-7, "rms {rms} frob {}", r.frobenius);
     }
 
     #[test]

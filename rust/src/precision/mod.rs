@@ -16,6 +16,6 @@ pub mod error;
 pub mod kahan;
 pub mod refine;
 
-pub use bounds::{mixed_gemm_error_bound, refined_gemm_error_bound};
-pub use error::{error_report, max_norm_error, ErrorReport};
+pub use bounds::{mixed_gemm_error_bound, refined_gemm_error_bound, rounded_gemm_error_bound};
+pub use error::{error_report, max_norm_error, rms_error, ErrorReport};
 pub use refine::{batched_refine_gemm, refine_gemm, RefineMode};

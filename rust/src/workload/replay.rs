@@ -23,7 +23,7 @@
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{Coordinator, CoordinatorError, GemmRequest};
+use crate::coordinator::{Coordinator, CoordinatorError, GemmRequest, PrecisionMode};
 use crate::gemm::Matrix;
 use crate::util::json::Json;
 
@@ -46,6 +46,14 @@ pub struct ReplayConfig {
     pub lost_after: Duration,
     /// Seed for operand generation (one operand pair per distinct edge).
     pub seed: u64,
+    /// Explicit precision mode stamped on every replayed request
+    /// (`--mode` on the serve-replay CLI): `None` leaves mode choice to
+    /// the service's precision policy, exactly as before; `Some` pins
+    /// every request to one mode — the knob that drives a whole replay
+    /// through a storage format (bf16/tf32/fp8/int8) or a refinement
+    /// level and lets the serving figures compare them under identical
+    /// load.
+    pub mode: Option<PrecisionMode>,
     /// Concurrent open-loop submitter threads (min 1).  One submitter
     /// serializes every `submit` call, which caps the *offered* rate at
     /// what a single thread can push — the exact ceiling sharded intake
@@ -64,6 +72,7 @@ impl Default for ReplayConfig {
             deadline: None,
             lost_after: Duration::from_secs(30),
             seed: 7,
+            mode: None,
             submitters: 1,
         }
     }
@@ -284,6 +293,9 @@ pub fn replay(coord: &Coordinator, trace: &RequestTrace, cfg: &ReplayConfig) -> 
                         }
                         let (a, b) = operands[&ev.n].clone();
                         let mut req = GemmRequest::new(0, a, b).with_scale(ev.scale);
+                        if let Some(mode) = cfg.mode {
+                            req = req.with_mode(mode);
+                        }
                         if let Some(budget) = cfg.deadline {
                             req = req.with_deadline(Instant::now() + budget);
                         }

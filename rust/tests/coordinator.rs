@@ -8,9 +8,12 @@ use std::time::{Duration, Instant};
 
 use tensoremu::coordinator::request::ServedBy;
 use tensoremu::coordinator::{
-    BatcherConfig, Coordinator, CoordinatorConfig, CoordinatorError, GemmRequest,
+    BatcherConfig, Coordinator, CoordinatorConfig, CoordinatorError, GemmRequest, PrecisionMode,
 };
-use tensoremu::gemm::{mixed_gemm, Matrix};
+use tensoremu::formats::Scale;
+use tensoremu::gemm::{
+    bf16_gemm_scalar, fp8_gemm_scalar, int8_gemm_scalar, mixed_gemm, tf32_gemm_scalar, Matrix,
+};
 use tensoremu::precision::{refine_gemm, RefineMode};
 use tensoremu::runtime::{is_artifacts_missing, ExecutorServer, Manifest};
 use tensoremu::workload::{uniform_matrix, Rng};
@@ -285,6 +288,54 @@ fn refined_square_requests_ride_engine_lane_with_zero_fallbacks() {
     assert_eq!(snap.engine_refined, 18, "{}", snap.report());
     assert!(snap.engine_view_bytes > 0, "refined buckets gather by view too: {}", snap.report());
     assert_eq!(snap.responses, 18);
+    c.shutdown();
+}
+
+#[test]
+fn format_mode_squares_ride_engine_lane_with_zero_fallbacks() {
+    // the acceptance check for this PR's tentpole: square requests at
+    // every new format mode, submitted to an artifact-free coordinator,
+    // are served by the batched engine lane (CPU-fallback counter stays
+    // 0) and come back bitwise equal to each format's scalar oracle
+    let c = engine_only_coordinator();
+    let scale = Scale::new(0.25);
+    let modes: [PrecisionMode; 4] = [
+        PrecisionMode::Bf16,
+        PrecisionMode::Tf32,
+        PrecisionMode::Fp8E4M3,
+        PrecisionMode::Int8(scale),
+    ];
+    let oracle = |mode: PrecisionMode, a: &Matrix, b: &Matrix| match mode {
+        PrecisionMode::Bf16 => bf16_gemm_scalar(a, b, None, 1.0, 0.0),
+        PrecisionMode::Tf32 => tf32_gemm_scalar(a, b, None, 1.0, 0.0),
+        PrecisionMode::Fp8E4M3 => fp8_gemm_scalar(a, b, None, 1.0, 0.0),
+        PrecisionMode::Int8(s) => int8_gemm_scalar(a, b, None, 1.0, 0.0, s.get()),
+        PrecisionMode::Refined(_) => unreachable!("format-only sweep"),
+    };
+    let mut rng = Rng::new(16);
+    let mut rxs = Vec::new();
+    let mut wants = Vec::new();
+    for i in 0..24u64 {
+        let n = [24usize, 33][(i % 2) as usize];
+        let mode = modes[(i % 4) as usize];
+        let a = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        wants.push((mode, oracle(mode, &a, &b)));
+        rxs.push(c.submit(GemmRequest::new(0, a, b).with_mode(mode)));
+    }
+    for (rx, (mode, want)) in rxs.into_iter().zip(wants) {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert_eq!(resp.served_by, ServedBy::BatchedEngine, "mode {mode}");
+        assert_eq!(resp.mode, mode);
+        // the engine lane quantizes at pack time: bitwise oracle match
+        assert_eq!(resp.c, want, "mode {mode}");
+    }
+    let snap = c.metrics_snapshot();
+    assert_eq!(snap.fallback, 0, "format squares must never fall back: {}", snap.report());
+    assert_eq!(snap.engine_batched, 24, "{}", snap.report());
+    assert_eq!(snap.engine_refined, 0, "format buckets are not refined: {}", snap.report());
+    assert!(snap.engine_flushes >= 8, "8 (edge, mode) keys: {}", snap.report());
+    assert_eq!(snap.responses, 24);
     c.shutdown();
 }
 

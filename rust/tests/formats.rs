@@ -1,0 +1,269 @@
+//! Format-oracle conversion suite: exhaustive bit-pattern sweeps for
+//! every Tensor Core input format's scalar conversion oracle, plus the
+//! plan-vs-oracle bitwise contract for the format precisions at every
+//! worker count and pool mode.  The f16 sweep is the template: each
+//! format's widen → round composition must be the identity on every
+//! storage pattern (NaNs quieten canonically), so pack-time rounding is
+//! idempotent and the emulated MAC consumes exact grid points.
+
+use tensoremu::formats::{
+    bf16_quantize, bf16_to_f32, f32_to_bf16, f32_to_fp8, f32_to_int8, f32_to_tf32, fp8_quantize,
+    fp8_to_f32, int8_quantize, int8_to_f32, tf32_quantize, tf32_to_f32, Bf16, Fp8E4M3, Int8,
+    Scale, TcFormat, Tf32, FP8_MAX, INT8_QMAX, TF32_MAX,
+};
+use tensoremu::gemm::engine::{self, PoolMode};
+use tensoremu::gemm::plan::{GemmDesc, Precision};
+use tensoremu::gemm::{
+    bf16_gemm_scalar, fp8_gemm_scalar, int8_gemm_scalar, tf32_gemm_scalar, Matrix,
+};
+use tensoremu::halfprec::{f16_to_f32, f32_to_f16, Half, F16, F16_MIN_POSITIVE_NORMAL};
+use tensoremu::workload::{uniform_matrix, Rng};
+
+const THREADS: &[usize] = &[1, 2, 8];
+
+/// Serializes the tests that flip the process-global pool mode (same
+/// rationale as tests/engine.rs — the mode is per-process state).
+static MODE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock_mode() -> std::sync::MutexGuard<'static, ()> {
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Satellite: exhaustive conversion sweeps.
+
+#[test]
+fn f16_exhaustive_all_65536_bit_patterns() {
+    // every binary16 storage pattern: widen must classify correctly and
+    // round(widen(p)) must return p exactly (NaNs quieten to the
+    // canonical sign | 0x7E00 payload)
+    for p in 0..=u16::MAX {
+        let h = Half(p);
+        let x = f16_to_f32(h);
+        let r = f32_to_f16(x);
+        let sign = p & 0x8000;
+        let exp = p & 0x7C00;
+        let sig = p & 0x03FF;
+        if exp == 0x7C00 && sig != 0 {
+            // NaN: stays NaN with the sign, payload canonicalized
+            assert!(x.is_nan(), "{p:#06x} widened to {x}");
+            assert_eq!(x.is_sign_negative(), sign != 0, "{p:#06x} NaN sign");
+            assert_eq!(r, Half(sign | 0x7E00), "{p:#06x} NaN round-trip");
+        } else {
+            // finite and infinite patterns round-trip bit-exactly
+            assert_eq!(r, h, "{p:#06x} round-trip");
+            assert_eq!(x.is_infinite(), exp == 0x7C00, "{p:#06x} class");
+            assert_eq!(x.is_sign_negative(), sign != 0, "{p:#06x} sign (x={x})");
+            if exp == 0 && sig != 0 {
+                // subnormals widen below the smallest normal, never to 0
+                assert!(x != 0.0 && x.abs() < F16_MIN_POSITIVE_NORMAL, "{p:#06x} subnormal");
+            }
+            if exp == 0 && sig == 0 {
+                assert_eq!(x.to_bits(), u32::from(sign) << 16, "{p:#06x} signed zero");
+            }
+            // the trait instance is the same oracle
+            assert_eq!(F16.round_from_f32(x), h, "{p:#06x} trait");
+            assert_eq!(F16.widen_to_f32(h).to_bits(), x.to_bits(), "{p:#06x} trait widen");
+        }
+    }
+}
+
+#[test]
+fn bf16_exhaustive_all_65536_bit_patterns() {
+    // bf16 is the top half of an f32: widening must be exactly the
+    // 16-bit shift, and round(widen(p)) must return p (NaNs gain the
+    // quiet bit, nothing else moves)
+    for p in 0..=u16::MAX {
+        let x = bf16_to_f32(p);
+        assert_eq!(x.to_bits(), u32::from(p) << 16, "{p:#06x} widen is the shift");
+        let r = f32_to_bf16(x);
+        let exp = p & 0x7F80;
+        let sig = p & 0x007F;
+        if exp == 0x7F80 && sig != 0 {
+            assert!(x.is_nan(), "{p:#06x}");
+            assert_eq!(r, p | 0x0040, "{p:#06x} NaN quietens in place");
+        } else {
+            assert_eq!(r, p, "{p:#06x} round-trip");
+        }
+        assert_eq!(Bf16.round_from_f32(x), r, "{p:#06x} trait");
+    }
+}
+
+#[test]
+fn fp8_exhaustive_all_256_bit_patterns() {
+    // all 256 E4M3 patterns round-trip exactly — including both NaN
+    // patterns (sign-preserving) and both signed zeros
+    for p in 0..=u8::MAX {
+        let x = fp8_to_f32(p);
+        let r = f32_to_fp8(x);
+        assert_eq!(r, p, "{p:#04x} round-trip");
+        if p & 0x7F == 0x7F {
+            assert!(x.is_nan(), "{p:#04x}");
+            assert_eq!(x.is_sign_negative(), p & 0x80 != 0, "{p:#04x} NaN sign");
+        } else {
+            assert!(x.is_finite(), "{p:#04x}: E4M3 has no infinities");
+            assert!(x.abs() <= FP8_MAX, "{p:#04x} within ±448");
+        }
+        if p & 0x7F == 0 {
+            assert_eq!(x.to_bits(), u32::from(p) << 24, "{p:#04x} signed zero");
+        }
+        assert_eq!(Fp8E4M3.round_from_f32(x), r, "{p:#04x} trait");
+    }
+}
+
+#[test]
+fn tf32_quantization_is_idempotent_with_canonical_specials() {
+    // tf32 has 2^32 storage patterns, so sweep a dense random sample
+    // plus every special instead: quantize must be idempotent, clear
+    // the low 13 bits, and canonicalize NaN
+    let mut rng = Rng::new(77);
+    for _ in 0..100_000 {
+        let x = f32::from_bits(rng.next_u64() as u32);
+        if x.is_nan() {
+            continue; // covered below
+        }
+        let q = tf32_quantize(x);
+        assert_eq!(tf32_quantize(q).to_bits(), q.to_bits(), "{x} idempotent");
+        if q.is_finite() {
+            assert_eq!(q.to_bits() & 0x1FFF, 0, "{x} low bits cleared");
+        }
+    }
+    assert_eq!(f32_to_tf32(f32::NAN), 0x7FC0_0000);
+    assert_eq!(f32_to_tf32(-f32::NAN), 0xFFC0_0000);
+    assert_eq!(tf32_quantize(f32::INFINITY), f32::INFINITY);
+    assert_eq!(tf32_quantize(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    assert_eq!(tf32_quantize(TF32_MAX), TF32_MAX);
+    assert_eq!(tf32_quantize(f32::MAX), f32::INFINITY, "overflow carries to inf");
+    assert_eq!(tf32_quantize(-0.0).to_bits(), (-0.0f32).to_bits());
+    assert_eq!(Tf32.round_from_f32(1.5), f32_to_tf32(1.5));
+    assert_eq!(tf32_to_f32(f32_to_tf32(1.5)), 1.5);
+}
+
+#[test]
+fn int8_exhaustive_grid_roundtrip_and_saturation() {
+    // every representable grid point round-trips at several scales; the
+    // quantizer saturates (never wraps, never emits -128) and flushes
+    // NaN to zero
+    for scale in [1.0f32 / 127.0, 0.25, 1.0, 3.5] {
+        for q in -INT8_QMAX..=INT8_QMAX {
+            let q = q as i8;
+            let x = int8_to_f32(q, scale);
+            assert_eq!(f32_to_int8(x, scale), q, "q={q} scale={scale}");
+            assert_eq!(int8_quantize(x, scale), x, "q={q} scale={scale} idempotent");
+        }
+        assert_eq!(f32_to_int8(1e9, scale), 127, "scale={scale} saturates up");
+        assert_eq!(f32_to_int8(-1e9, scale), -127, "scale={scale} saturates down");
+        assert_eq!(f32_to_int8(f32::INFINITY, scale), 127);
+        assert_eq!(f32_to_int8(f32::NEG_INFINITY, scale), -127);
+        assert_eq!(f32_to_int8(f32::NAN, scale), 0, "NaN flushes to zero");
+    }
+    let fmt = Int8 { scale: Scale::new(0.5) };
+    assert_eq!(fmt.round_from_f32(1.2), 2);
+    assert_eq!(fmt.widen_to_f32(2), 1.0);
+}
+
+// ---------------------------------------------------------------------------
+// Plan-vs-oracle: the format precisions join the bitwise contract.
+
+type Oracle = fn(&Matrix, &Matrix) -> Matrix;
+
+fn format_cases() -> Vec<(Precision, Oracle)> {
+    fn bf16(a: &Matrix, b: &Matrix) -> Matrix {
+        bf16_gemm_scalar(a, b, None, 1.0, 0.0)
+    }
+    fn tf32(a: &Matrix, b: &Matrix) -> Matrix {
+        tf32_gemm_scalar(a, b, None, 1.0, 0.0)
+    }
+    fn fp8(a: &Matrix, b: &Matrix) -> Matrix {
+        fp8_gemm_scalar(a, b, None, 1.0, 0.0)
+    }
+    fn int8_default(a: &Matrix, b: &Matrix) -> Matrix {
+        int8_gemm_scalar(a, b, None, 1.0, 0.0, Scale::default().get())
+    }
+    fn int8_quarter(a: &Matrix, b: &Matrix) -> Matrix {
+        int8_gemm_scalar(a, b, None, 1.0, 0.0, 0.25)
+    }
+    vec![
+        (Precision::Bf16, bf16 as Oracle),
+        (Precision::Tf32, tf32),
+        (Precision::Fp8E4M3, fp8),
+        (Precision::Int8 { scale: Scale::default() }, int8_default),
+        (Precision::Int8 { scale: Scale::new(0.25) }, int8_quarter),
+    ]
+}
+
+#[test]
+fn format_plans_equal_scalar_oracles_for_every_thread_count_and_pool_mode() {
+    // the acceptance sweep: {format precision} x {1,2,8} threads x
+    // {scoped, persistent} pool, plan bits == oracle bits
+    let _g = lock_mode();
+    let ambient = engine::pool_mode();
+    let mut rng = Rng::new(130);
+    let a = uniform_matrix(&mut rng, 34, 29, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 29, 27, -1.0, 1.0);
+    for (prec, oracle) in format_cases() {
+        let want = oracle(&a, &b);
+        for mode in [PoolMode::Scoped, PoolMode::Persistent] {
+            engine::set_pool_mode(mode);
+            for &t in THREADS {
+                let plan = GemmDesc::new(34, 29, 27)
+                    .precision(prec)
+                    .threads(t)
+                    .pool_hint(mode)
+                    .plan(&a, &b)
+                    .unwrap();
+                assert_eq!(plan.execute().unwrap(), want, "{prec:?} {mode:?} t={t}");
+            }
+        }
+    }
+    engine::set_pool_mode(ambient);
+}
+
+#[test]
+fn batched_format_plans_equal_per_entry_oracles_across_threads_and_pools() {
+    // the engine lane's call shape for format buckets: batched format
+    // plans are per-entry bitwise equal to the scalar oracles at every
+    // worker count and pool mode
+    let _g = lock_mode();
+    let ambient = engine::pool_mode();
+    let mut rng = Rng::new(131);
+    let shapes = [(16usize, 16usize, 16usize), (5, 7, 3), (33, 20, 12), (1, 1, 1)];
+    let a: Vec<Matrix> =
+        shapes.iter().map(|&(m, k, _)| uniform_matrix(&mut rng, m, k, -1.0, 1.0)).collect();
+    let b: Vec<Matrix> =
+        shapes.iter().map(|&(_, k, n)| uniform_matrix(&mut rng, k, n, -1.0, 1.0)).collect();
+    for (prec, oracle) in format_cases() {
+        let want: Vec<Matrix> = a.iter().zip(&b).map(|(x, y)| oracle(x, y)).collect();
+        for pm in [PoolMode::Scoped, PoolMode::Persistent] {
+            engine::set_pool_mode(pm);
+            for &t in THREADS {
+                let plan = GemmDesc::any_shape().precision(prec).threads(t).build().unwrap();
+                assert_eq!(plan.execute_batched(&a, &b).unwrap(), want, "{prec:?} {pm:?} t={t}");
+            }
+        }
+    }
+    engine::set_pool_mode(ambient);
+}
+
+#[test]
+fn quantize_helpers_and_trait_instances_agree_on_random_inputs() {
+    // one contract, two spellings: the free quantize helpers and the
+    // TcFormat instances must agree bit for bit on arbitrary inputs
+    let mut rng = Rng::new(132);
+    let i8f = Int8 { scale: Scale::new(0.03) };
+    for _ in 0..10_000 {
+        let x = f32::from_bits(rng.next_u64() as u32);
+        if x.is_nan() {
+            continue;
+        }
+        assert_eq!(Bf16.quantize(x).to_bits(), bf16_quantize(x).to_bits(), "bf16 {x}");
+        assert_eq!(Tf32.quantize(x).to_bits(), tf32_quantize(x).to_bits(), "tf32 {x}");
+        assert_eq!(Fp8E4M3.quantize(x).to_bits(), fp8_quantize(x).to_bits(), "fp8 {x}");
+        assert_eq!(i8f.quantize(x).to_bits(), int8_quantize(x, 0.03).to_bits(), "int8 {x}");
+        assert_eq!(
+            F16.quantize(x).to_bits(),
+            f16_to_f32(f32_to_f16(x)).to_bits(),
+            "f16 {x}"
+        );
+    }
+}
