@@ -9,7 +9,9 @@
 //! the Eq. 3 chains over the pool — the refined engine-lane shape),
 //! plus a strided-batched comparison (zero-copy `StridedBatch` views vs
 //! the per-call `Vec<Matrix>` gather the pre-view API forced — the
-//! `cublasGemmStridedBatched` axis of ISSUE 5).
+//! `cublasGemmStridedBatched` axis of ISSUE 5), plus the 2:4 sparse
+//! lane against the dense engine over the same pruned operand (bitwise
+//! equal outputs; the sparse microkernel skips half of A's FLOPs).
 //!
 //! Part 2 — **persistent vs scoped pool** on repeated small GEMMs: the
 //! per-call latency axis (a scoped fork-join pays thread spawns on every
@@ -42,7 +44,7 @@ use tensoremu::gemm::engine::{self, PackedHalfA, PackedHalfB, PoolMode};
 use tensoremu::gemm::{
     batched_mixed_gemm, batched_mixed_gemm_scalar, bf16_gemm_scalar, fp8_gemm_scalar,
     hgemm_scalar, int8_gemm_scalar, mixed_gemm, mixed_gemm_scalar, tf32_gemm_scalar, GemmDesc,
-    MatLayout, Matrix, Precision, StridedBatch,
+    MatLayout, Matrix, Precision, Sparsity, StridedBatch,
 };
 use tensoremu::precision::{batched_refine_gemm, refine_gemm, RefineMode};
 use tensoremu::runtime::{Engine, Manifest, TensorData};
@@ -183,6 +185,35 @@ fn main() {
         println!("{}", fast.report());
         comparisons.push(Comparison { name, scalar, engine: fast });
     }
+
+    // -- 2:4 sparse lane vs the dense engine over the same pruned
+    //    operand: both plans produce bitwise-identical results (the
+    //    sparse microkernel walks the metadata and skips the pruned
+    //    half of A's FLOPs), so the row measures the pure lane
+    //    speedup.  The "scalar" column here is the dense f32 plan
+    //    over the materialized pruned A — additive row, existing
+    //    schema keys untouched.
+    let nsp = if smoke { 64 } else { 256 };
+    let sp_name: &'static str = if smoke { "sparse24_64" } else { "sparse24_256" };
+    let spa = uniform_matrix(&mut rng, nsp, nsp, -1.0, 1.0);
+    let spb = uniform_matrix(&mut rng, nsp, nsp, -1.0, 1.0);
+    let pruned = engine::sparse24_prune(&spa);
+    let dense_plan =
+        GemmDesc::square(nsp).precision(Precision::F32).plan(&pruned, &spb).unwrap();
+    let scalar = bench_config("gemm/sparse24_dense_engine_pruned", 30, 300, 10_000, || {
+        std::hint::black_box(dense_plan.execute().unwrap());
+    });
+    println!("{}", scalar.report());
+    let sparse_plan = GemmDesc::square(nsp)
+        .precision(Precision::F32)
+        .sparsity(Sparsity::Sparse24)
+        .plan(&spa, &spb)
+        .unwrap();
+    let fast = bench_config("gemm/sparse24_engine", 30, 300, 10_000, || {
+        std::hint::black_box(sparse_plan.execute().unwrap());
+    });
+    println!("{}", fast.report());
+    comparisons.push(Comparison { name: sp_name, scalar, engine: fast });
 
     // -- batched refined chains (the §IV-B batched shape at §V
     //    precision): a loop of per-entry refine_gemm singles vs one
@@ -328,7 +359,8 @@ fn main() {
          kernels; persistent > scoped on repeated small GEMMs; \
          (ISSUE 3) cached plans > one-shot wrappers on repeated/refined GEMMs; \
          (ISSUE 4) batched refined plan > per-entry refine_gemm loop; \
-         (ISSUE 5) zero-copy strided views >= per-call Vec<Matrix> gather"
+         (ISSUE 5) zero-copy strided views >= per-call Vec<Matrix> gather; \
+         (ISSUE 9) sparse24 engine >= 1.0x the dense engine on the same pruned operand"
     );
 
     write_baseline(&comparisons, &pool_cmp, &plan_cmp, &refine_cmp, initial_mode, smoke);

@@ -17,9 +17,10 @@
 //!   ([`crate::gemm::batched_mixed_gemm`],
 //!   [`crate::precision::batched_refine_gemm`]) accept heterogeneous
 //!   per-entry shapes, so no padding work is ever computed there — and
-//!   because the mode is part of the key, refined and unrefined
-//!   requests of the same edge flush as separate buckets onto their own
-//!   cached plans ([`Batcher::push_mode`]).  A bucket hands its
+//!   because the mode is part of the key, every [`PrecisionMode`] of
+//!   one edge (refined or unrefined, each storage format, the 2:4
+//!   `sparse24` key) flushes as its own bucket onto its own cached
+//!   plan ([`Batcher::push_mode`]).  A bucket hands its
 //!   operands to the engine as borrowed views
 //!   ([`ShapeBucket::view_pairs`] →
 //!   [`crate::gemm::GemmPlan::execute_batched_views`]): zero per-entry
@@ -235,8 +236,14 @@ impl Batcher {
 
     /// Enqueue a square request under the precision mode the router
     /// resolved for it — the engine lane's entry point.  The mode joins
-    /// the edge as the bucket key, so a refined request can never be
-    /// flushed into an unrefined bucket (or vice versa).
+    /// the edge as the bucket key across the whole
+    /// [`PrecisionMode`] family — refinement ladder, storage formats
+    /// (bf16/tf32/fp8/int8, int8 per scale), and the 2:4 `sparse24`
+    /// key — so requests of the same edge but different modes can never
+    /// be flushed into each other's buckets (a sparse request never
+    /// co-buckets with a dense one, a refined never with an unrefined,
+    /// and so on): each bucket executes on exactly the cached plan its
+    /// mode built.
     ///
     /// The batcher only holds square requests (both lanes bucket by a
     /// square edge); a non-square request reaching it is a routing
@@ -666,6 +673,28 @@ mod tests {
         assert_eq!(buckets[2].ids, vec![3]);
         assert_eq!(buckets[3].mode, PrecisionMode::Int8(Scale::new(0.5)));
         assert_eq!(buckets[3].ids, vec![5]);
+    }
+
+    #[test]
+    fn same_edge_sparse_and_dense_requests_never_share_a_bucket() {
+        // the sparsity-lane contract (ISSUE satellite): a sparse24
+        // request of an edge must never flush into any dense bucket of
+        // that same edge — mixing would prune the dense half's A
+        let mut b = batcher(100, 0);
+        b.push_mode(req_n(0, 16), RefineMode::None).unwrap();
+        b.push_mode(req_n(1, 16), PrecisionMode::Sparse24).unwrap();
+        b.push_mode(req_n(2, 16), RefineMode::None).unwrap();
+        b.push_mode(req_n(3, 16), PrecisionMode::Bf16).unwrap();
+        b.push_mode(req_n(4, 16), PrecisionMode::Sparse24).unwrap();
+        let buckets = b.flush_buckets();
+        assert_eq!(buckets.len(), 3);
+        assert!(buckets.iter().all(|bk| bk.n == 16));
+        assert_eq!(buckets[0].mode, RefineMode::None);
+        assert_eq!(buckets[0].ids, vec![0, 2]);
+        assert_eq!(buckets[1].mode, PrecisionMode::Sparse24);
+        assert_eq!(buckets[1].ids, vec![1, 4]);
+        assert_eq!(buckets[2].mode, PrecisionMode::Bf16);
+        assert_eq!(buckets[2].ids, vec![3]);
     }
 
     #[test]

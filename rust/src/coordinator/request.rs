@@ -16,7 +16,7 @@ use std::fmt;
 use std::time::{Duration, Instant};
 
 use crate::formats::Scale;
-use crate::gemm::plan::Precision;
+use crate::gemm::plan::{Precision, Sparsity};
 use crate::gemm::Matrix;
 use crate::precision::RefineMode;
 
@@ -43,6 +43,10 @@ pub enum PrecisionMode {
     Fp8E4M3,
     /// Symmetric per-matrix INT8 quantization (Turing) at this scale.
     Int8(Scale),
+    /// 2:4 structured sparsity (Ampere's sparse Tensor Core): A pruned
+    /// to two kept lanes per 4-wide k-group at pack time and executed
+    /// on the sparse engine kernel at f32 input precision.
+    Sparse24,
 }
 
 impl PrecisionMode {
@@ -59,6 +63,8 @@ impl PrecisionMode {
             PrecisionMode::Tf32 => 4,
             PrecisionMode::Fp8E4M3 => 5,
             PrecisionMode::Int8(s) => 6 | (u64::from(s.bits()) << 8),
+            // low byte 7 can never collide with an Int8 key (low byte 6)
+            PrecisionMode::Sparse24 => 7,
         }
     }
 
@@ -72,6 +78,17 @@ impl PrecisionMode {
             PrecisionMode::Tf32 => Precision::Tf32,
             PrecisionMode::Fp8E4M3 => Precision::Fp8E4M3,
             PrecisionMode::Int8(scale) => Precision::Int8 { scale },
+            PrecisionMode::Sparse24 => Precision::F32,
+        }
+    }
+
+    /// The plan-layer [`Sparsity`] this mode executes under: the sparse
+    /// key prunes A at pack time on the engine lane (and on the one-shot
+    /// CPU fallback); every other mode is dense.
+    pub fn plan_sparsity(self) -> Sparsity {
+        match self {
+            PrecisionMode::Sparse24 => Sparsity::Sparse24,
+            _ => Sparsity::Dense,
         }
     }
 
@@ -117,6 +134,7 @@ impl fmt::Display for PrecisionMode {
             PrecisionMode::Tf32 => write!(f, "tf32"),
             PrecisionMode::Fp8E4M3 => write!(f, "fp8e4m3"),
             PrecisionMode::Int8(s) => write!(f, "int8(scale={s})"),
+            PrecisionMode::Sparse24 => write!(f, "sparse24"),
         }
     }
 }
@@ -354,11 +372,12 @@ mod tests {
             PrecisionMode::Fp8E4M3.key_u64(),
             PrecisionMode::Int8(Scale::default()).key_u64(),
             PrecisionMode::Int8(Scale::new(0.25)).key_u64(),
+            PrecisionMode::Sparse24.key_u64(),
         ];
         keys.extend([0, 1, 2]);
         keys.sort_unstable();
         keys.dedup();
-        assert_eq!(keys.len(), 8, "all mode keys must be distinct");
+        assert_eq!(keys.len(), 9, "all mode keys must be distinct");
     }
 
     #[test]
@@ -386,6 +405,14 @@ mod tests {
         assert_eq!(PrecisionMode::Fp8E4M3.plan_precision(), Precision::Fp8E4M3);
         let s = Scale::new(0.5);
         assert_eq!(PrecisionMode::Int8(s).plan_precision(), Precision::Int8 { scale: s });
+        // the sparse key executes at f32 input precision with a pruned A;
+        // every other mode stays dense
+        assert_eq!(PrecisionMode::Sparse24.plan_precision(), Precision::F32);
+        assert_eq!(PrecisionMode::Sparse24.plan_sparsity(), Sparsity::Sparse24);
+        assert_eq!(PrecisionMode::Bf16.plan_sparsity(), Sparsity::Dense);
+        assert_eq!(PrecisionMode::Refined(RefineMode::None).plan_sparsity(), Sparsity::Dense);
+        assert!(!PrecisionMode::Sparse24.is_refined());
+        assert_eq!(PrecisionMode::Sparse24.refine(), None);
     }
 
     #[test]

@@ -553,7 +553,9 @@ struct PendingReply {
 /// Unrefined keys cache a mixed-precision plan; refined keys cache a
 /// [`Precision::Refined`] plan whose batched execution runs per-entry
 /// Eq. 1–3 chains on the engine pool; format keys (bf16/tf32/fp8/int8)
-/// cache a plan at their format's pack-time-rounding precision.  The
+/// cache a plan at their format's pack-time-rounding precision; the
+/// sparse24 key caches an f32 plan with `Sparsity::Sparse24`, so its
+/// buckets ride the metadata-walking sparse kernel.  The
 /// cached plan carries the
 /// validated descriptor and execution configuration for its key
 /// (batched execution packs per entry inside the engine, so this cache
@@ -583,9 +585,15 @@ impl PlanCache {
             return Ok(plan.clone());
         }
         let precision = mode.plan_precision();
-        let plan = GemmDesc::square(n).precision(precision).build().map_err(|e| {
-            CoordinatorError::Internal(format!("engine plan build failed (n={n}, {mode:?}): {e}"))
-        })?;
+        let plan = GemmDesc::square(n)
+            .precision(precision)
+            .sparsity(mode.plan_sparsity())
+            .build()
+            .map_err(|e| {
+                CoordinatorError::Internal(format!(
+                    "engine plan build failed (n={n}, {mode:?}): {e}"
+                ))
+            })?;
         let plan = Arc::new(plan);
         self.plans.insert((n, mode), plan.clone());
         Ok(plan)
@@ -829,12 +837,15 @@ fn dispatch_one(
                                 .map_err(|e| format!("{e}"))
                         }
                         None => {
-                            // format mode: a one-shot plan at the
-                            // format's pack-time-rounding precision
+                            // format/sparse mode: a one-shot plan at the
+                            // mode's plan precision (sparse24 prunes A at
+                            // pack time here too, so non-square sparse
+                            // requests keep the lane's exact numerics)
                             let (m, k) = sub.req.a.shape();
                             let (_, n) = sub.req.b.shape();
                             GemmDesc::new(m, k, n)
                                 .precision(mode.plan_precision())
+                                .sparsity(mode.plan_sparsity())
                                 .plan(&sub.req.a, &sub.req.b)
                                 .and_then(|p| p.execute())
                                 .map_err(|e| format!("{e}"))
@@ -1095,6 +1106,7 @@ mod tests {
                     PrecisionMode::Tf32,
                     PrecisionMode::Fp8E4M3,
                     PrecisionMode::Int8(crate::formats::Scale::default()),
+                    PrecisionMode::Sparse24,
                 ] {
                     let first = shard_for(&req(n, n, n, n), mode, shards);
                     assert!(first < shards);

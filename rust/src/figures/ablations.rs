@@ -216,6 +216,66 @@ pub fn format_generation_study(seed: u64) -> String {
     out
 }
 
+/// 2:4 structured-sparsity study: what pruning a dense operand to the
+/// sparse Tensor Core's 2:4 pattern costs in accuracy.  Dense and
+/// sparse24 plans run over the same U[-1, 1] operands at f32 and
+/// f16-rounded input precision; errors are measured against the f64
+/// truth of the *dense* product, so the sparse rows show the pruning
+/// loss itself (the "vs dense" column isolates it from input rounding).
+/// This is the honest cuBLAS-footnote-style framing: the 2x FLOP
+/// reduction is free only for matrices that are already 2:4 — on dense
+/// random inputs the dropped half of A is the dominant error term.
+pub fn sparsity_study(seed: u64) -> String {
+    use crate::gemm::engine::Sparse24;
+    use crate::gemm::{GemmDesc, Precision, Sparsity};
+    let n = 256;
+    let mut rng = Rng::new(seed);
+    let a = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+    let truth = dgemm_naive(&a, &b);
+    let run = |prec: Precision, sp: Sparsity| {
+        GemmDesc::new(n, n, n)
+            .precision(prec)
+            .sparsity(sp)
+            .plan(&a, &b)
+            .expect("valid sparse descriptor")
+            .execute()
+            .expect("plan executes")
+    };
+    let mut rows = Vec::new();
+    for (label, prec) in [("f32", Precision::F32), ("f16 in", Precision::Mixed)] {
+        let dense = run(prec, Sparsity::Dense);
+        let sparse = run(prec, Sparsity::Sparse24);
+        rows.push(vec![
+            format!("dense    {label}"),
+            "1.0x".into(),
+            format!("{:.3e}", max_norm_error(&dense, &truth)),
+            format!("{:.3e}", rms_error(&dense, &truth)),
+            "-".into(),
+        ]);
+        rows.push(vec![
+            format!("sparse24 {label}"),
+            "0.5x".into(),
+            format!("{:.3e}", max_norm_error(&sparse, &truth)),
+            format!("{:.3e}", rms_error(&sparse, &truth)),
+            format!("{:.3e}", sparse.max_norm_diff(&dense)),
+        ]);
+    }
+    let ratio = Sparse24::compress(&a).storage_ratio();
+    let mut out = super::render_table(
+        &format!("Sparsity ablation @ N={n}, U[-1, 1] inputs (error vs dense f64 truth)"),
+        &["lane", "FLOPs", "||e||_Max", "RMS", "vs dense"],
+        &rows,
+    );
+    out.push_str(&format!(
+        "2:4 compressed A stores {:.0}% of dense bytes (values + 2-bit metadata);\n\
+         pruning keeps the top-2 |.| lanes per 4-wide k-group, so on random dense\n\
+         inputs the dropped mass — not input rounding — sets the error floor\n",
+        ratio * 100.0
+    ));
+    out
+}
+
 /// Cluster projection (§I's DGX-1 / Summit aspirations as numbers):
 /// aggregate peaks and the strong-scaling efficiency of one node.
 pub fn cluster_study() -> String {

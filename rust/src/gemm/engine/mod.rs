@@ -35,6 +35,12 @@
 //! the output buffer, which is bit-exact), so every output element still
 //! sees one ascending-k f32 chain and blocking cannot move a single bit.
 //!
+//! The 2:4 structured-sparsity lane ([`sparse_gemm_packed`] over a
+//! [`SparseA`] operand) runs the identical nest with a metadata-walking
+//! microkernel that multiplies only the kept lanes — ~2x fewer flops,
+//! bitwise equal to the dense engine over the materialized pruned
+//! operand (see the `sparse` module docs for the signed-zero argument).
+//!
 //! Numerics contract (verified bit-for-bit against the scalar oracles in
 //! `tests/engine.rs`): inputs optionally rounded to binary16 once,
 //! products exact in f32, accumulation in f32 in a fixed k-ascending
@@ -48,9 +54,14 @@
 mod micro;
 mod pack;
 mod pool;
+mod sparse;
 
-pub use pack::{InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB};
+pub use pack::{
+    sparse24_check, sparse24_prune, InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB,
+    Sparse24, Sparse24Violation, SparseA,
+};
 pub(crate) use pack::split_f16_view;
+pub use sparse::{batched_sparse_gemm_views, sparse_gemm_packed, sparse_gemm_packed_into};
 pub use pool::{
     default_threads, idle_workers, parse_pool_mode, parse_threads, pool_mode, set_pool_mode,
     spawned_workers, PoolMode,

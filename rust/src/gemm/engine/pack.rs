@@ -278,6 +278,299 @@ impl PackedB {
     }
 }
 
+/// Greedy top-2-by-magnitude lane selection for one 2:4 k-group of
+/// width `w` (1..=4): returns the kept lane pair `(i0, i1)` with
+/// `i0 < i1`, or `(0, 0)` for a width-1 tail group (which keeps its
+/// single lane).  The deterministic tie rule — the one the sparse
+/// scalar oracle and the property tests pin down — is that only a
+/// *strictly* greater magnitude displaces an incumbent, so equal
+/// magnitudes keep the earlier lane.  Kept values may be zero: an
+/// all-zero group still keeps `min(2, w)` lanes, whose `±0.0`
+/// products are inert in the chain.
+fn sparse24_keep(at: impl Fn(usize) -> f32, w: usize) -> (usize, usize) {
+    debug_assert!((1..=4).contains(&w));
+    if w == 1 {
+        return (0, 0);
+    }
+    let mut best = 0usize;
+    for l in 1..w {
+        if at(l).abs() > at(best).abs() {
+            best = l;
+        }
+    }
+    let mut second = if best == 0 { 1 } else { 0 };
+    for l in second + 1..w {
+        if l != best && at(l).abs() > at(second).abs() {
+            second = l;
+        }
+    }
+    if best < second {
+        (best, second)
+    } else {
+        (second, best)
+    }
+}
+
+/// Encode one group's kept lane pair as the 2-bit-per-lane metadata
+/// byte: bits 0–1 hold `i0`, bits 2–3 hold `i1`.  `i0 < i1` means two
+/// kept slots; `i0 == i1` (only ever `(0, 0)`, a width-1 tail) means
+/// one.  The byte is self-describing — decoders never need the group
+/// width to know how many value slots are real.
+#[inline]
+fn sparse24_meta_byte(i0: usize, i1: usize) -> u8 {
+    (i0 | (i1 << 2)) as u8
+}
+
+/// Decode a metadata byte back to its kept lane pair (see
+/// [`sparse24_meta_byte`]).
+#[inline]
+pub(crate) fn sparse24_meta_lanes(m: u8) -> (usize, usize) {
+    ((m & 3) as usize, ((m >> 2) & 3) as usize)
+}
+
+/// Typed report of a 2:4 structural violation: `row`'s k-group `group`
+/// (lanes `4 * group ..`) holds `nonzeros > 2` nonzero entries.  The
+/// plan layer wraps this into
+/// [`crate::gemm::PlanError::Sparse24Violation`] when a caller asserts
+/// an operand is already 2:4 (`Sparsity::Sparse24Strict`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Sparse24Violation {
+    /// Row of the offending group.
+    pub row: usize,
+    /// 4-wide k-group index within the row (`k in [4*group, 4*group+4)`).
+    pub group: usize,
+    /// Nonzero count observed in the group (always `> 2`).
+    pub nonzeros: usize,
+}
+
+/// Check that every 4-wide row group of `a` holds at most 2 nonzero
+/// entries — the precondition a `Sparsity::Sparse24Strict` caller
+/// asserts.  Signed zeros count as zero.  Returns the first violation
+/// in row-major group order.
+pub fn sparse24_check(a: &MatRef<'_>) -> Result<(), Sparse24Violation> {
+    let (m, k) = a.logical_shape();
+    for i in 0..m {
+        for g in 0..div_up(k, 4) {
+            let w = (k - g * 4).min(4);
+            let nonzeros = (0..w).filter(|&l| a.get(i, g * 4 + l) != 0.0).count();
+            if nonzeros > 2 {
+                return Err(Sparse24Violation { row: i, group: g, nonzeros });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Materialize the 2:4-pruned image of `a`: per row, each 4-wide
+/// k-group keeps its greedy top-2-by-magnitude lanes (raw f32 values,
+/// tie rule of [`sparse24_keep`]) and zeroes the rest.  This is the
+/// matrix the sparse lane's *dense cross-oracle* runs over: a sparse
+/// plan is bitwise equal to a dense plan of the same precision over
+/// `sparse24_prune(a)`, because pruning precedes the precision's
+/// pack-time rounding in both paths and a skipped lane is bitwise
+/// identical to an added `±0.0` product (an f32 accumulator that is
+/// not `-0.0` is unchanged by a signed zero, and a chain starting at
+/// `+0.0` can never reach `-0.0` by addition).
+pub fn sparse24_prune(a: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let mut out = Matrix::zeros(m, k);
+    for i in 0..m {
+        for g in 0..div_up(k, 4) {
+            let base = g * 4;
+            let w = (k - base).min(4);
+            let (i0, i1) = sparse24_keep(|l| a[(i, base + l)], w);
+            out[(i, base + i0)] = a[(i, base + i0)];
+            out[(i, base + i1)] = a[(i, base + i1)];
+        }
+    }
+    out
+}
+
+/// The compressed 2:4 representation of a matrix — the storage format
+/// of Ampere's sparse Tensor Core operand: per row and 4-wide k-group,
+/// two kept values plus one metadata byte naming their lanes
+/// ([`sparse24_meta_byte`]).  A width-1 tail group stores its single
+/// lane as `i0 == i1 == 0` with an unread `0.0` pad in the second
+/// value slot, so `k % 4 != 0` round-trips exactly.
+/// `decompress(compress(a))` equals [`sparse24_prune`]`(a)` bit for
+/// bit (`tests/sparse.rs` sweeps the codec exhaustively).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sparse24 {
+    m: usize,
+    k: usize,
+    values: Vec<f32>,
+    meta: Vec<u8>,
+}
+
+impl Sparse24 {
+    /// Compress by greedy top-2-magnitude pruning (see [`sparse24_prune`]).
+    pub fn compress(a: &Matrix) -> Sparse24 {
+        let (m, k) = a.shape();
+        let groups = div_up(k, 4);
+        let mut values = Vec::with_capacity(m * groups * 2);
+        let mut meta = Vec::with_capacity(m * groups);
+        for i in 0..m {
+            for g in 0..groups {
+                let base = g * 4;
+                let w = (k - base).min(4);
+                let (i0, i1) = sparse24_keep(|l| a[(i, base + l)], w);
+                values.push(a[(i, base + i0)]);
+                values.push(if i1 > i0 { a[(i, base + i1)] } else { 0.0 });
+                meta.push(sparse24_meta_byte(i0, i1));
+            }
+        }
+        Sparse24 { m, k, values, meta }
+    }
+
+    /// Logical shape `(m, k)` of the uncompressed operand.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.k)
+    }
+
+    /// Compressed values, two slots per `(row, group)` in row-major
+    /// group order.
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Metadata bytes, one per `(row, group)` in row-major group order.
+    pub fn meta(&self) -> &[u8] {
+        &self.meta
+    }
+
+    /// Storage ratio vs the dense operand (values + metadata bytes over
+    /// `m * k` f32 bytes) — ~0.5625 for `k % 4 == 0`, the Ampere ratio.
+    pub fn storage_ratio(&self) -> f64 {
+        if self.m * self.k == 0 {
+            return 0.0;
+        }
+        let dense = (self.m * self.k * std::mem::size_of::<f32>()) as f64;
+        (self.values.len() * std::mem::size_of::<f32>() + self.meta.len()) as f64 / dense
+    }
+
+    /// Expand back to the (pruned) dense matrix — bitwise
+    /// [`sparse24_prune`] of the compressed operand.
+    pub fn decompress(&self) -> Matrix {
+        let groups = div_up(self.k, 4);
+        let mut out = Matrix::zeros(self.m, self.k);
+        for i in 0..self.m {
+            for g in 0..groups {
+                let (i0, i1) = sparse24_meta_lanes(self.meta[i * groups + g]);
+                out[(i, g * 4 + i0)] = self.values[(i * groups + g) * 2];
+                if i1 > i0 {
+                    out[(i, g * 4 + i1)] = self.values[(i * groups + g) * 2 + 1];
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A pruned to 2:4 and packed as `ceil(m/MR)` row panels for the
+/// sparse engine kernel: per panel, each k-group contributes `2 * MR`
+/// value slots (slot-major: the `MR` first-kept values, then the `MR`
+/// second-kept values) and `MR` metadata bytes, group-ascending — so a
+/// `kc` group sub-range of a panel is contiguous in both arrays, like
+/// the dense [`PackedA::panel_block`].
+///
+/// Pruning selects lanes on the **raw** f32 values; the precision's
+/// pack-time rounding is applied to the kept values as they are
+/// written — the same prune-then-quantize order a dense plan over the
+/// materialized [`sparse24_prune`] image applies, which is what makes
+/// the dense cross-oracle bitwise.  Padding rows of the last partial
+/// panel encode a canonical all-zero group (`(0, 1)` or a width-1
+/// `(0, 0)`), whose products land in accumulator rows that are
+/// discarded at store time.
+#[derive(Clone, Debug, Default)]
+pub struct SparseA {
+    pub(crate) m: usize,
+    pub(crate) k: usize,
+    /// Number of 4-wide k-groups: `ceil(k / 4)`.
+    pub(crate) groups: usize,
+    pub(crate) values: Vec<f32>,
+    pub(crate) meta: Vec<u8>,
+}
+
+impl SparseA {
+    /// Prune and pack a fresh copy of `a`.
+    pub fn pack(a: &Matrix, prec: InputPrecision) -> SparseA {
+        SparseA::pack_view(&MatRef::from(a), prec)
+    }
+
+    /// Re-prune and re-pack in place, reusing the allocations.
+    pub fn repack(&mut self, a: &Matrix, prec: InputPrecision) {
+        self.repack_view(&MatRef::from(a), prec);
+    }
+
+    /// Prune and pack a borrowed view (op and row stride absorbed, see
+    /// [`PackedA::pack_view`]).
+    pub fn pack_view(a: &MatRef<'_>, prec: InputPrecision) -> SparseA {
+        let mut p = SparseA::default();
+        p.repack_view(a, prec);
+        p
+    }
+
+    /// Re-prune and re-pack a borrowed view in place.
+    pub fn repack_view(&mut self, a: &MatRef<'_>, prec: InputPrecision) {
+        let (m, k) = a.logical_shape();
+        self.m = m;
+        self.k = k;
+        self.groups = div_up(k, 4);
+        let panels = div_up(m, MR);
+        self.values.clear();
+        self.values.reserve(panels * self.groups * 2 * MR);
+        self.meta.clear();
+        self.meta.reserve(panels * self.groups * MR);
+        for pi in 0..panels {
+            let row0 = pi * MR;
+            for g in 0..self.groups {
+                let base = g * 4;
+                let w = (k - base).min(4);
+                let mut v = [[0f32; MR]; 2];
+                let mut mb = [0u8; MR];
+                for r in 0..MR {
+                    let i = row0 + r;
+                    let (i0, i1) = if i < m {
+                        sparse24_keep(|l| a.get(i, base + l), w)
+                    } else {
+                        // padded row: canonical zero group
+                        (0, if w > 1 { 1 } else { 0 })
+                    };
+                    if i < m {
+                        v[0][r] = convert(a.get(i, base + i0), prec);
+                        if i1 > i0 {
+                            v[1][r] = convert(a.get(i, base + i1), prec);
+                        }
+                    }
+                    mb[r] = sparse24_meta_byte(i0, i1);
+                }
+                self.values.extend_from_slice(&v[0]);
+                self.values.extend_from_slice(&v[1]);
+                self.meta.extend_from_slice(&mb);
+            }
+        }
+    }
+
+    /// Shape of the packed operand as (rows, k).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.m, self.k)
+    }
+
+    /// Group sub-range `[g0, g1)` of panel `pi`'s value slots —
+    /// contiguous, `2 * MR` values per group.
+    pub(crate) fn value_block(&self, pi: usize, g0: usize, g1: usize) -> &[f32] {
+        let base = pi * self.groups * 2 * MR;
+        &self.values[base + g0 * 2 * MR..base + g1 * 2 * MR]
+    }
+
+    /// Group sub-range `[g0, g1)` of panel `pi`'s metadata — contiguous,
+    /// `MR` bytes per group.
+    pub(crate) fn meta_block(&self, pi: usize, g0: usize, g1: usize) -> &[u8] {
+        let base = pi * self.groups * MR;
+        &self.meta[base + g0 * MR..base + g1 * MR]
+    }
+}
+
 /// A converted to binary16 once, stored row-major — the pre-packed left
 /// operand of [`super::hgemm_packed`] (CUDA-core half semantics).
 #[derive(Clone, Debug, Default)]
@@ -549,5 +842,98 @@ mod tests {
         assert_eq!(p.col(1)[1].to_f32(), 4.0);
         let a = PackedHalfA::pack(&b);
         assert_eq!(a.row(1)[0].to_f32(), 3.0);
+    }
+
+    #[test]
+    fn sparse24_keep_selects_top2_with_earlier_tie() {
+        let g = [1.0f32, -3.0, 2.0, -3.0];
+        // |-3| at lanes 1 and 3: the tie gives the earlier lane the first
+        // slot, and lane 3 still out-magnitudes 2.0 for the second
+        assert_eq!(sparse24_keep(|l| g[l], 4), (1, 3));
+        let t = [2.0f32, -1.0, 1.0, -2.0];
+        // first slot: |2| tie -> lane 0; second: |-1| vs |1| vs |-2| -> lane 3;
+        // then the |±1| tie in a 3-way field keeps the earlier lane
+        assert_eq!(sparse24_keep(|l| t[l], 4), (0, 3));
+        let u = [0.0f32, 1.0, -1.0, 0.5];
+        assert_eq!(sparse24_keep(|l| u[l], 4), (1, 2)); // |±1| tie: earlier lane wins slot 1, the later still takes slot 2
+        let z = [0.0f32, 0.0, 0.0, 0.0];
+        assert_eq!(sparse24_keep(|l| z[l], 4), (0, 1)); // all-zero keeps the earliest pair
+        assert_eq!(sparse24_keep(|l| g[l], 2), (0, 1)); // width-2 tail keeps both
+        assert_eq!(sparse24_keep(|l| g[l], 1), (0, 0)); // width-1 tail keeps its lane
+    }
+
+    #[test]
+    fn sparse24_prune_zeroes_exactly_the_dropped_lanes() {
+        let a = Matrix::from_fn(2, 6, |i, j| ((i * 6 + j) as f32) - 5.0);
+        // row 0: [-5,-4,-3,-2 | -1,0] -> keep {-5,-4} and both tail lanes
+        let p = sparse24_prune(&a);
+        assert_eq!(
+            (0..6).map(|j| p[(0, j)]).collect::<Vec<_>>(),
+            vec![-5.0, -4.0, 0.0, 0.0, -1.0, 0.0]
+        );
+        for i in 0..2 {
+            for g in 0..2 {
+                let w = (6 - g * 4).min(4);
+                let nz = (0..w).filter(|&l| p[(i, g * 4 + l)] != 0.0).count();
+                assert!(nz <= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse24_check_reports_first_violation() {
+        let mut a = Matrix::zeros(3, 8);
+        a[(1, 4)] = 1.0;
+        a[(1, 5)] = 2.0;
+        a[(1, 6)] = 3.0;
+        let err = sparse24_check(&a.view()).unwrap_err();
+        assert_eq!(err, Sparse24Violation { row: 1, group: 1, nonzeros: 3 });
+        assert!(sparse24_check(&sparse24_prune(&a).view()).is_ok());
+    }
+
+    #[test]
+    fn sparse24_codec_round_trips_the_pruned_matrix() {
+        let a = Matrix::from_fn(5, 11, |i, j| ((i * 17 + j * 3) % 13) as f32 - 6.0);
+        let c = Sparse24::compress(&a);
+        assert_eq!(c.shape(), (5, 11));
+        assert_eq!(c.decompress(), sparse24_prune(&a));
+        // k = 12 storage ratio is the Ampere 9/16
+        let sq = Sparse24::compress(&Matrix::from_fn(4, 12, |i, j| (i + j) as f32));
+        assert!((sq.storage_ratio() - 0.5625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_a_panels_hold_converted_kept_values_and_meta() {
+        let a = Matrix::from_fn(3, 6, |i, j| (i * 6 + j) as f32 + 0.5);
+        let p = SparseA::pack(&a, InputPrecision::Full);
+        assert_eq!(p.shape(), (3, 6));
+        assert_eq!(p.groups, 2);
+        // row 0 group 0: [0.5, 1.5, 2.5, 3.5] keeps lanes 2, 3
+        let v = p.value_block(0, 0, 2);
+        let mb = p.meta_block(0, 0, 2);
+        assert_eq!(sparse24_meta_lanes(mb[0]), (2, 3));
+        assert_eq!(v[0], 2.5); // slot 0, row 0
+        assert_eq!(v[MR], 3.5); // slot 1, row 0
+        // group 1 is a width-2 tail: keeps lanes 0, 1
+        assert_eq!(sparse24_meta_lanes(mb[MR]), (0, 1));
+        assert_eq!(v[2 * MR], 4.5);
+        // padded rows encode the canonical zero group
+        assert_eq!(sparse24_meta_lanes(mb[3]), (0, 1));
+        assert_eq!(v[3], 0.0);
+        // f16 rounding applies to kept values only after raw-value pruning
+        let h = SparseA::pack(&a, InputPrecision::F16Rounded);
+        let hv = h.value_block(0, 0, 1);
+        assert_eq!(hv[0], f16_to_f32(f32_to_f16(2.5)));
+    }
+
+    #[test]
+    fn sparse_a_repack_reuses_and_resizes() {
+        let mut p = SparseA::pack(&m(9, 8), InputPrecision::Full);
+        assert_eq!(p.values.len(), 2 * 2 * 2 * MR); // 2 panels, 2 groups, 2 slots
+        p.repack(&m(2, 5), InputPrecision::Full);
+        assert_eq!(p.shape(), (2, 5));
+        assert_eq!(p.groups, 2);
+        assert_eq!(p.values.len(), 2 * 2 * MR);
+        assert_eq!(p.meta.len(), 2 * MR);
     }
 }

@@ -1,0 +1,294 @@
+//! The 2:4 structured-sparsity execution lane: a microkernel variant
+//! that walks the [`SparseA`] metadata and multiplies only the kept
+//! lanes — the FLOP-reduction contract of Ampere/Hopper's sparse
+//! Tensor Core (2 nonzeros per 4-wide k-group plus 2-bit lane
+//! metadata, ~2x math throughput).
+//!
+//! Numerics contract: skipping a pruned lane is **bitwise identical**
+//! to the dense kernel multiplying it.  A pruned lane's packed value
+//! is `+0.0`, its product is `±0.0`, and adding a signed zero to an
+//! f32 accumulator changes nothing unless the accumulator is `-0.0` —
+//! which a k-ascending chain starting at `+0.0` can never become
+//! (round-to-nearest-even addition only produces `-0.0` from
+//! `(-0.0) + (-0.0)`, unreachable by induction) — for finite operands.
+//! So for finite inputs a sparse plan equals a dense plan over the
+//! materialized [`super::pack::sparse24_prune`] image bit for bit, at
+//! every thread count and pool mode; `tests/sparse.rs` asserts exactly
+//! that cross-oracle, alongside the serial
+//! [`crate::gemm::sparse24_gemm_scalar`] oracle.
+//!
+//! The loop nest below is the same BLIS-style hierarchy as
+//! [`super::gemm_packed_into`] (kc blocks outermost, C-resident
+//! accumulator tile across kc blocks), with `KC % 4 == 0` keeping
+//! every kc block aligned to 2:4 group boundaries.
+
+use crate::gemm::{MatRef, Matrix};
+
+use super::micro::{div_up, MR, NR};
+use super::pack::{sparse24_meta_lanes, InputPrecision, PackedB, SparseA};
+use super::pool::{parallel_units, resolve_threads};
+use super::{batch_flops, KC, MC, SERIAL_FLOPS};
+
+// kc blocks must start on 2:4 group boundaries so a panel's group
+// sub-range maps 1:1 onto the dense B block rows
+const _: () = assert!(KC % 4 == 0, "KC must preserve 2:4 group alignment");
+
+/// The sparse microkernel: accumulate one `MR x NR` tile from the kept
+/// lanes of a group sub-range.  `vals`/`meta` are a [`SparseA`] panel
+/// block (`2 * MR` values and `MR` metadata bytes per group) and
+/// `bblock` the matching dense B panel block (`NR` columns per local k
+/// row).  Groups ascend, and within a group the metadata stores its
+/// kept lanes ascending, so every output element sees the same
+/// k-ascending chain as the dense kernel restricted to the kept lanes
+/// — which is the whole chain, bitwise, because the skipped products
+/// are inert signed zeros (see the module docs).
+fn sparse_microkernel(vals: &[f32], meta: &[u8], bblock: &[f32], acc: &mut [f32; MR * NR]) {
+    let groups = meta.len() / MR;
+    debug_assert_eq!(vals.len(), groups * 2 * MR);
+    for g in 0..groups {
+        let v0 = &vals[g * 2 * MR..g * 2 * MR + MR];
+        let v1 = &vals[g * 2 * MR + MR..g * 2 * MR + 2 * MR];
+        let mrow = &meta[g * MR..g * MR + MR];
+        for r in 0..MR {
+            let (i0, i1) = sparse24_meta_lanes(mrow[r]);
+            let accrow = &mut acc[r * NR..r * NR + NR];
+            let b0 = &bblock[(g * 4 + i0) * NR..(g * 4 + i0) * NR + NR];
+            let a0 = v0[r];
+            for (o, &bv) in accrow.iter_mut().zip(b0) {
+                *o += a0 * bv;
+            }
+            // i1 == i0 marks a single-slot (width-1 tail) group
+            if i1 > i0 {
+                let b1 = &bblock[(g * 4 + i1) * NR..(g * 4 + i1) * NR + NR];
+                let a1 = v1[r];
+                for (o, &bv) in accrow.iter_mut().zip(b1) {
+                    *o += a1 * bv;
+                }
+            }
+        }
+    }
+}
+
+/// C = alpha * prune24(A) x B + beta * C over a pre-pruned packed A —
+/// the sparse twin of [`super::gemm_packed`].
+pub fn sparse_gemm_packed(
+    sa: &SparseA,
+    pb: &PackedB,
+    c: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+    threads: usize,
+) -> Matrix {
+    let mut out = Matrix::zeros(sa.m, pb.n);
+    sparse_gemm_packed_into(&mut out, sa, pb, c, alpha, beta, threads);
+    out
+}
+
+/// The sparse packed-panel core: compute into a preallocated output —
+/// the sparse twin of [`super::gemm_packed_into`], identical nest and
+/// epilogue, with the A panel block swapped for the metadata walk.
+pub fn sparse_gemm_packed_into(
+    out: &mut Matrix,
+    sa: &SparseA,
+    pb: &PackedB,
+    cprev: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+    threads: usize,
+) {
+    let (m, k) = (sa.m, sa.k);
+    let n = pb.n;
+    assert_eq!(k, pb.k, "inner dimension mismatch");
+    assert_eq!(out.shape(), (m, n), "output shape mismatch");
+    if let Some(c) = cprev {
+        assert_eq!(c.shape(), (m, n), "C shape mismatch");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    // the kept-lane walk does ~half the dense flops, so auto mode's
+    // serial cutoff sees the reduced work
+    let t = resolve_threads(threads, m * n * k / 2, SERIAL_FLOPS);
+    let panels = div_up(m, MR);
+    let elems_at = |u: usize| (u * MR).min(m) * n;
+    let nb = div_up(n, NR);
+    // k = 0 still needs one (empty) pass so the epilogue runs
+    let kblocks = div_up(k, KC).max(1);
+    let mc_panels = MC / MR;
+    let ov = out.as_mut_slice();
+    parallel_units(ov, panels, elems_at, t, |p0, p1, chunk| {
+        let base = p0 * MR * n;
+        for kb in 0..kblocks {
+            let k0 = kb * KC;
+            let k1 = (k0 + KC).min(k);
+            // KC % 4 == 0 keeps kc blocks group-aligned, so the group
+            // sub-range [g0, g1) covers exactly the local B rows
+            let g0 = k0 / 4;
+            let g1 = div_up(k1, 4);
+            let first = kb == 0;
+            let last = kb + 1 == kblocks;
+            let mut ic = p0;
+            while ic < p1 {
+                let ic_end = (ic + mc_panels).min(p1);
+                for pj in 0..nb {
+                    let col0 = pj * NR;
+                    let vc = NR.min(n - col0);
+                    let bblock = pb.panel_block(pj, k0, k1);
+                    for pi in ic..ic_end {
+                        let row0 = pi * MR;
+                        let vr = MR.min(m - row0);
+                        let mut acc = [0f32; MR * NR];
+                        if !first {
+                            for r in 0..vr {
+                                let o0 = row0 * n - base + r * n + col0;
+                                acc[r * NR..r * NR + vc].copy_from_slice(&chunk[o0..o0 + vc]);
+                            }
+                        }
+                        sparse_microkernel(
+                            sa.value_block(pi, g0, g1),
+                            sa.meta_block(pi, g0, g1),
+                            bblock,
+                            &mut acc,
+                        );
+                        if last {
+                            for r in 0..vr {
+                                let o0 = row0 * n - base + r * n + col0;
+                                let orow = &mut chunk[o0..o0 + vc];
+                                for (ci, o) in orow.iter_mut().enumerate() {
+                                    let cval = cprev.map_or(0.0, |c| c[(row0 + r, col0 + ci)]);
+                                    *o = alpha * acc[r * NR + ci] + beta * cval;
+                                }
+                            }
+                        } else {
+                            for r in 0..vr {
+                                let o0 = row0 * n - base + r * n + col0;
+                                chunk[o0..o0 + vc].copy_from_slice(&acc[r * NR..r * NR + vc]);
+                            }
+                        }
+                    }
+                }
+                ic = ic_end;
+            }
+        }
+    });
+}
+
+/// Batched sparse GEMM over borrowed views: `out[i] = prune24(a[i]) x
+/// b[i]` at the pack-time rounding `prec`, entries distributed over
+/// the pool with per-worker pack-buffer reuse — the sparse twin of
+/// [`super::batched_rounded_gemm_views`], and the coordinator engine
+/// lane's execution substrate for `PrecisionMode::Sparse24` buckets.
+pub fn batched_sparse_gemm_views(
+    a: &[MatRef<'_>],
+    b: &[MatRef<'_>],
+    prec: InputPrecision,
+    threads: usize,
+) -> Vec<Matrix> {
+    assert_eq!(a.len(), b.len(), "batch length mismatch");
+    let mut out: Vec<Matrix> = (0..a.len()).map(|_| Matrix::zeros(0, 0)).collect();
+    let t = resolve_threads(threads, batch_flops(a, b) / 2, SERIAL_FLOPS);
+    parallel_units(&mut out, a.len(), |u| u, t, |e0, e1, chunk| {
+        // per-worker pack buffers, reused across the worker's entries
+        let mut sa = SparseA::default();
+        let mut pb = PackedB::default();
+        for e in e0..e1 {
+            assert_eq!(a[e].logical_shape().1, b[e].logical_shape().0, "inner dimension mismatch");
+            sa.repack_view(&a[e], prec);
+            pb.repack_view(&b[e], prec);
+            chunk[e - e0] = sparse_gemm_packed(&sa, &pb, None, 1.0, 0.0, 1);
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pack::{sparse24_prune, PackedA};
+    use super::super::{gemm_packed, view_vec};
+    use super::*;
+    use crate::workload::{uniform_matrix, Rng};
+
+    fn sparse_vs_dense_pruned(m: usize, k: usize, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = uniform_matrix(&mut rng, m, k, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, k, n, -1.0, 1.0);
+        let c = uniform_matrix(&mut rng, m, n, -1.0, 1.0);
+        let sa = SparseA::pack(&a, InputPrecision::Full);
+        let da = PackedA::pack(&sparse24_prune(&a), InputPrecision::Full);
+        let pb = PackedB::pack(&b, InputPrecision::Full);
+        for t in [1, 2, 8] {
+            assert_eq!(
+                sparse_gemm_packed(&sa, &pb, Some(&c), 0.5, 2.0, t),
+                gemm_packed(&da, &pb, Some(&c), 0.5, 2.0, 1),
+                "({m},{k},{n}) t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_matches_dense_over_pruned_bitwise() {
+        // k values hit group tails of width 1, 2, 3 and multi-kc-block
+        // extents; (150, 20, 30) spans two mc blocks
+        for (i, &(m, k, n)) in
+            [(1, 1, 1), (5, 7, 3), (16, 16, 16), (70, 33, 81), (5, 600, 9), (150, 20, 30)]
+                .iter()
+                .enumerate()
+        {
+            sparse_vs_dense_pruned(m, k, n, 20 + i as u64);
+        }
+    }
+
+    #[test]
+    fn sparse_into_reuses_output() {
+        let mut rng = Rng::new(30);
+        let a = uniform_matrix(&mut rng, 12, 10, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 10, 12, -1.0, 1.0);
+        let sa = SparseA::pack(&a, InputPrecision::Full);
+        let pb = PackedB::pack(&b, InputPrecision::Full);
+        let want = sparse_gemm_packed(&sa, &pb, None, 1.0, 0.0, 2);
+        let mut out = Matrix::zeros(12, 12);
+        sparse_gemm_packed_into(&mut out, &sa, &pb, None, 1.0, 0.0, 2);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn sparse_empty_shapes() {
+        let sa = SparseA::pack(&Matrix::zeros(0, 4), InputPrecision::Full);
+        let pb = PackedB::pack(&Matrix::zeros(4, 3), InputPrecision::Full);
+        assert_eq!(sparse_gemm_packed(&sa, &pb, None, 1.0, 0.0, 2).shape(), (0, 3));
+        // k = 0: pure epilogue
+        let sa = SparseA::pack(&Matrix::zeros(3, 0), InputPrecision::Full);
+        let pb = PackedB::pack(&Matrix::zeros(0, 2), InputPrecision::Full);
+        assert_eq!(sparse_gemm_packed(&sa, &pb, None, 1.0, 0.0, 2), Matrix::zeros(3, 2));
+        assert_eq!(batched_sparse_gemm_views(&[], &[], InputPrecision::Full, 4).len(), 0);
+    }
+
+    #[test]
+    fn batched_sparse_entries_match_singles() {
+        let mut rng = Rng::new(31);
+        let a: Vec<Matrix> = (0..6).map(|_| uniform_matrix(&mut rng, 17, 13, -1.0, 1.0)).collect();
+        let b: Vec<Matrix> = (0..6).map(|_| uniform_matrix(&mut rng, 13, 9, -1.0, 1.0)).collect();
+        let got = batched_sparse_gemm_views(&view_vec(&a), &view_vec(&b), InputPrecision::Full, 4);
+        for i in 0..6 {
+            let sa = SparseA::pack(&a[i], InputPrecision::Full);
+            let pb = PackedB::pack(&b[i], InputPrecision::Full);
+            assert_eq!(got[i], sparse_gemm_packed(&sa, &pb, None, 1.0, 0.0, 1), "entry {i}");
+        }
+    }
+
+    #[test]
+    fn sparse_f16_rounding_rides_the_pack() {
+        // prune on raw values, then round kept values: equals dense
+        // mixed path over the materialized pruned matrix
+        let mut rng = Rng::new(32);
+        let a = uniform_matrix(&mut rng, 9, 21, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 21, 7, -1.0, 1.0);
+        let sa = SparseA::pack(&a, InputPrecision::F16Rounded);
+        let da = PackedA::pack(&sparse24_prune(&a), InputPrecision::F16Rounded);
+        let pb = PackedB::pack(&b, InputPrecision::F16Rounded);
+        assert_eq!(
+            sparse_gemm_packed(&sa, &pb, None, 1.0, 0.0, 2),
+            gemm_packed(&da, &pb, None, 1.0, 0.0, 2)
+        );
+    }
+}

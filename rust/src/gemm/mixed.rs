@@ -163,6 +163,71 @@ pub fn int8_gemm_scalar(
     rounded_gemm_scalar(a, b, c, alpha, beta, |x| int8_quantize(x, scale))
 }
 
+/// Serial oracle of the 2:4 structured-sparsity lane
+/// ([`crate::gemm::Sparsity::Sparse24`] at [`Precision::F32`]): per
+/// row of A, every 4-wide k-group keeps its greedy top-2-by-magnitude
+/// lanes — only a *strictly* greater magnitude displaces an incumbent,
+/// so equal magnitudes keep the earlier lane, and a width-`w` tail
+/// group keeps `min(2, w)` lanes — and the accumulation runs over the
+/// kept lanes only, k ascending, one f32 accumulator per element.
+/// That is exactly the chain the sparse engine executes, and (for
+/// finite inputs) bitwise equal to [`crate::gemm::sgemm_naive`] over
+/// the materialized [`crate::gemm::engine::sparse24_prune`] image: the
+/// skipped products are signed zeros, which are inert in a k-ascending
+/// f32 chain that starts at `+0.0`.  The lane selection here is an
+/// independent re-statement of the pack-time pruning rule — the
+/// cross-validation `tests/sparse.rs` leans on.
+pub fn sparse24_gemm_scalar(
+    a: &Matrix,
+    b: &Matrix,
+    c: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+) -> Matrix {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "inner dimension mismatch");
+
+    let mut out = Matrix::zeros(m, n);
+    let mut keep = vec![false; k];
+    for i in 0..m {
+        keep.iter_mut().for_each(|s| *s = false);
+        let mut base = 0;
+        while base < k {
+            let w = (k - base).min(4);
+            // greedy top-2 by magnitude; ties keep the earlier lane
+            let mut i0 = 0;
+            for l in 1..w {
+                if a[(i, base + l)].abs() > a[(i, base + i0)].abs() {
+                    i0 = l;
+                }
+            }
+            keep[base + i0] = true;
+            if w > 1 {
+                let mut i1 = if i0 == 0 { 1 } else { 0 };
+                for l in i1 + 1..w {
+                    if l != i0 && a[(i, base + l)].abs() > a[(i, base + i1)].abs() {
+                        i1 = l;
+                    }
+                }
+                keep[base + i1] = true;
+            }
+            base += 4;
+        }
+        for j in 0..n {
+            let mut acc = 0f32;
+            for p in 0..k {
+                if keep[p] {
+                    acc += a[(i, p)] * b[(p, j)];
+                }
+            }
+            let cval = if beta == 0.0 { 0.0 } else { c.map_or(0.0, |c| c[(i, j)]) };
+            out[(i, j)] = alpha * acc + beta * cval;
+        }
+    }
+    out
+}
+
 /// The serial reference implementation of [`hgemm`] (per-call operand
 /// conversion, all-f16 arithmetic, k ascending).  Engine oracle and
 /// scalar bench baseline.
@@ -300,6 +365,26 @@ mod tests {
         let got = int8_gemm_scalar(&a, &b, None, 1.0, 0.0, scale);
         let want = sgemm_naive(&a, &b, None, 1.0, 0.0);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn sparse24_oracle_equals_sgemm_over_pruned() {
+        use crate::gemm::engine::sparse24_prune;
+        // independent lane selection vs pack-time pruning: the oracle's
+        // kept-lane chain must equal the naive f32 chain over the
+        // materialized pruned matrix, bit for bit (skipped products are
+        // inert signed zeros)
+        let a = rand_matrix(9, 14, 71, 1.0);
+        let b = rand_matrix(14, 6, 72, 1.0);
+        let c = rand_matrix(9, 6, 73, 1.0);
+        assert_eq!(
+            sparse24_gemm_scalar(&a, &b, Some(&c), 1.5, -0.5),
+            sgemm_naive(&sparse24_prune(&a), &b, Some(&c), 1.5, -0.5)
+        );
+        // beta == 0 never reads C (the shared cuBLAS epilogue rule)
+        let nanc = Matrix::from_fn(9, 6, |_, _| f32::NAN);
+        let got = sparse24_gemm_scalar(&a, &b, Some(&nanc), 1.0, 0.0);
+        assert!(got.as_slice().iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -17,7 +17,9 @@
 //! ## Shape of the API
 //!
 //! [`GemmDesc`] is the immutable problem description: dimensions,
-//! [`Precision`], the transpose [`Op`]s `op_a`/`op_b` (the cuBLAS
+//! [`Precision`], the left operand's structured-[`Sparsity`] mode (the
+//! 2:4 sparse Tensor Core lane — prune at pack, skip at execute, gated
+//! per precision), the transpose [`Op`]s `op_a`/`op_b` (the cuBLAS
 //! `transa`/`transb` axis — the descriptor's dims stay the *logical*
 //! `m, k, n`, and a `T` op means the corresponding operand is handed
 //! over in stored/transposed form), the `alpha`/`beta` epilogue, an
@@ -69,7 +71,7 @@
 
 use crate::formats::Scale;
 use crate::gemm::engine::{
-    self, InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB, PoolMode,
+    self, InputPrecision, PackedA, PackedB, PackedHalfA, PackedHalfB, PoolMode, SparseA,
 };
 use crate::gemm::{MatMut, MatRef, Matrix, Op, StridedBatch};
 use crate::precision::RefineMode;
@@ -115,6 +117,32 @@ pub enum Precision {
     },
 }
 
+/// The structured-sparsity mode of a plan's left operand — the
+/// Ampere/Hopper 2:4 sparse Tensor Core contract (2 nonzeros per
+/// 4-wide k-group plus 2-bit lane metadata, ~2x math throughput) as a
+/// descriptor field.  Composes with every engine-backed [`Precision`]
+/// (F32 / Mixed / the generation formats) and with the transpose
+/// [`Op`]s; [`Precision::F16`] and the actively refined modes have no
+/// 2:4 operand representation and are rejected typed at
+/// [`GemmDesc::build`] — the cuBLAS footnote-1 pattern of an
+/// unsupported mode combination, documented in `docs/PRECISION.md`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Sparsity {
+    /// Dense A (the default): every lane packs and multiplies.
+    Dense,
+    /// Prune A to 2:4 at pack time — per 4-wide k-group, keep the
+    /// greedy top-2-by-magnitude lanes (only a strictly greater
+    /// magnitude displaces, so ties keep the earlier lane) — store the
+    /// kept values plus 2-bit metadata, and skip the pruned lanes in
+    /// the kernel.  Oracle: [`crate::gemm::sparse24_gemm_scalar`].
+    Sparse24,
+    /// Like [`Sparsity::Sparse24`], but the caller asserts A is
+    /// *already* 2:4: any row group with more than 2 nonzeros is a
+    /// typed [`PlanError::Sparse24Violation`] at `set_a`/pack time
+    /// instead of a silent prune.
+    Sparse24Strict,
+}
+
 /// Typed rejection from descriptor validation or plan execution.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlanError {
@@ -144,6 +172,15 @@ pub enum PlanError {
     /// A [`Precision::Int8`] descriptor carries a scale that is not
     /// finite and strictly positive.
     InvalidScale { scale: Scale },
+    /// A [`Sparsity::Sparse24Strict`] plan was handed an A whose `row`'s
+    /// 4-wide k-group `group` holds `nonzeros > 2` nonzero entries.
+    Sparse24Violation { row: usize, group: usize, nonzeros: usize },
+    /// The descriptor combines structured sparsity with a precision
+    /// whose operands have no 2:4 sparse representation
+    /// ([`Precision::F16`] binary16 storage, actively refined split
+    /// panels) — rejected typed at build time, never silently
+    /// densified (the cuBLAS footnote-1 gating pattern).
+    SparsePrecision { precision: Precision },
 }
 
 impl std::fmt::Display for PlanError {
@@ -188,6 +225,18 @@ impl std::fmt::Display for PlanError {
             PlanError::InvalidScale { scale } => {
                 write!(f, "int8 scale must be finite and positive, got {scale}")
             }
+            PlanError::Sparse24Violation { row, group, nonzeros } => {
+                write!(
+                    f,
+                    "2:4 sparsity violation: row {row}, k-group {group} holds {nonzeros} nonzeros (strict mode allows at most 2)"
+                )
+            }
+            PlanError::SparsePrecision { precision } => {
+                write!(
+                    f,
+                    "structured sparsity is not supported at {precision:?}: f16 storage and actively refined split panels have no 2:4 representation"
+                )
+            }
         }
     }
 }
@@ -218,6 +267,7 @@ impl std::error::Error for PlanError {}
 pub struct GemmDesc {
     dims: Option<(usize, usize, usize)>,
     precision: Precision,
+    sparsity: Sparsity,
     op_a: Op,
     op_b: Op,
     alpha: f32,
@@ -237,6 +287,7 @@ impl GemmDesc {
         GemmDesc {
             dims: Some((m, k, n)),
             precision: Precision::Mixed,
+            sparsity: Sparsity::Dense,
             op_a: Op::N,
             op_b: Op::N,
             alpha: 1.0,
@@ -264,6 +315,24 @@ impl GemmDesc {
     pub fn precision(mut self, p: Precision) -> GemmDesc {
         self.precision = p;
         self
+    }
+
+    /// Select the left operand's structured-sparsity mode (default
+    /// [`Sparsity::Dense`]).  Sparse modes prune A to 2:4 at pack time
+    /// and execute on the metadata-walking sparse kernel — ~2x fewer
+    /// flops, bitwise equal to the dense engine over the materialized
+    /// pruned operand.  Composes with the engine-backed precisions and
+    /// the transpose ops; [`Precision::F16`] and actively refined modes
+    /// are rejected at [`GemmDesc::build`] with
+    /// [`PlanError::SparsePrecision`].
+    pub fn sparsity(mut self, s: Sparsity) -> GemmDesc {
+        self.sparsity = s;
+        self
+    }
+
+    /// The left operand's structured-sparsity mode.
+    pub fn sparsity_mode(&self) -> Sparsity {
+        self.sparsity
     }
 
     /// Transpose op on the left operand (cuBLAS `transa`): under
@@ -355,17 +424,25 @@ impl GemmDesc {
 
     /// Validate the descriptor into an operand-less plan (operands are
     /// supplied later via [`GemmPlan::set_a`] / [`GemmPlan::set_b`], or
-    /// per call for batched execution).  The one value-level rejection
-    /// is [`PlanError::InvalidScale`]: a [`Precision::Int8`] descriptor
+    /// per call for batched execution).  Two rejections live here:
+    /// [`PlanError::InvalidScale`] — a [`Precision::Int8`] descriptor
     /// must carry a finite, strictly positive scale (a NaN/zero/negative
-    /// scale would quantize every operand to garbage silently).  All
-    /// other combinations — transpose ops, batched refined plans,
-    /// batched alpha/beta epilogues, every format precision — validate.
+    /// scale would quantize every operand to garbage silently) — and
+    /// [`PlanError::SparsePrecision`] — a non-dense [`Sparsity`] on a
+    /// precision without a 2:4 operand representation ([`Precision::F16`]
+    /// or an actively refined mode).  All other combinations — transpose
+    /// ops, batched refined plans, batched alpha/beta epilogues, every
+    /// format precision — validate.
     pub fn build(self) -> Result<GemmPlan, PlanError> {
         if let Precision::Int8 { scale } = self.precision {
             if !scale.is_valid() {
                 return Err(PlanError::InvalidScale { scale });
             }
+        }
+        // footnote-1-style gating: a sparse A needs plain f32 panels to
+        // prune into, which f16 storage and active refinement lack
+        if self.sparsity != Sparsity::Dense && engine_rounding(self.precision).is_none() {
+            return Err(PlanError::SparsePrecision { precision: self.precision });
         }
         let pool = self.pool.unwrap_or_else(engine::pool_mode);
         Ok(GemmPlan { desc: self, pool, a: OperandA::Unset, b: OperandB::Unset })
@@ -435,6 +512,9 @@ enum OperandA {
     /// Refined modes that recover A's rounding error: the rounded matrix
     /// and its rounded residual, both packed once.
     Split { hi: PackedA, lo: PackedA },
+    /// Non-dense [`Sparsity`]: 2:4-pruned panels (kept values at the
+    /// plan precision's pack-time rounding, plus lane metadata).
+    Sparse(SparseA),
 }
 
 /// Packed right operand (see [`OperandA`]).
@@ -458,6 +538,24 @@ fn format_rounding(p: Precision) -> Option<InputPrecision> {
         Precision::Fp8E4M3 => Some(InputPrecision::Fp8Rounded),
         Precision::Int8 { scale } => Some(InputPrecision::Int8Scaled(scale)),
         _ => None,
+    }
+}
+
+/// The pack-time rounding of every precision whose operands are plain
+/// f32 panels the engine consumes directly — the precisions a 2:4
+/// sparse A composes with.  `None` exactly for the modes
+/// [`GemmDesc::build`] rejects under a non-dense [`Sparsity`]:
+/// [`Precision::F16`] (binary16 storage) and the actively refined
+/// modes (split panels); `Refined(None)` is the plain mixed path and
+/// composes.
+fn engine_rounding(p: Precision) -> Option<InputPrecision> {
+    match p {
+        Precision::F32 => Some(InputPrecision::Full),
+        Precision::Mixed | Precision::Refined(RefineMode::None) => {
+            Some(InputPrecision::F16Rounded)
+        }
+        Precision::F16 | Precision::Refined(_) => None,
+        p => format_rounding(p),
     }
 }
 
@@ -535,6 +633,26 @@ impl GemmPlan {
             return Err(PlanError::OperandShape { side: "A", want, got: a.logical_shape() });
         }
         let v = apply_op(a, self.desc.op_a);
+        if self.desc.sparsity != Sparsity::Dense {
+            // build() already vetted the combination; prune-then-round
+            // at the precision's pack-time grid
+            let prec = engine_rounding(self.desc.precision)
+                .expect("sparse descriptors validate their precision at build time");
+            if self.desc.sparsity == Sparsity::Sparse24Strict {
+                if let Err(e) = engine::sparse24_check(&v) {
+                    return Err(PlanError::Sparse24Violation {
+                        row: e.row,
+                        group: e.group,
+                        nonzeros: e.nonzeros,
+                    });
+                }
+            }
+            match &mut self.a {
+                OperandA::Sparse(p) => p.repack_view(&v, prec),
+                slot => *slot = OperandA::Sparse(SparseA::pack_view(&v, prec)),
+            }
+            return Ok(());
+        }
         match self.desc.precision {
             Precision::F32 => match &mut self.a {
                 OperandA::Full(p) => p.repack_view(&v, InputPrecision::Full),
@@ -674,6 +792,12 @@ impl GemmPlan {
             | (OperandA::Rounded(pa), OperandB::Rounded(pb)) => {
                 Ok(engine::gemm_packed(pa, pb, ceff, alpha, beta, t))
             }
+            // sparse A runs the metadata-walking kernel over whichever
+            // f32 panel slot the precision packed B into
+            (OperandA::Sparse(sa), OperandB::Full(pb))
+            | (OperandA::Sparse(sa), OperandB::Rounded(pb)) => {
+                Ok(engine::sparse_gemm_packed(sa, pb, ceff, alpha, beta, t))
+            }
             (OperandA::Half(pa), OperandB::Half(pb)) => {
                 Ok(self.epilogue(engine::hgemm_packed(pa, pb, t), ceff))
             }
@@ -705,6 +829,20 @@ impl GemmPlan {
                 engine::gemm_packed_into(
                     out,
                     pa,
+                    pb,
+                    ceff,
+                    self.desc.alpha,
+                    self.desc.beta,
+                    self.desc.threads,
+                );
+                Ok(())
+            }
+            (OperandA::Sparse(sa), OperandB::Full(pb))
+            | (OperandA::Sparse(sa), OperandB::Rounded(pb)) => {
+                let ceff = if self.desc.beta == 0.0 { None } else { c };
+                engine::sparse_gemm_packed_into(
+                    out,
+                    sa,
                     pb,
                     ceff,
                     self.desc.alpha,
@@ -854,16 +992,36 @@ impl GemmPlan {
         let ae: Vec<MatRef<'_>> = a.iter().map(|v| apply_op(v, op_a)).collect();
         let be: Vec<MatRef<'_>> = b.iter().map(|v| apply_op(v, op_b)).collect();
         let t = self.desc.threads;
-        let raw = match self.desc.precision {
-            Precision::F32 => engine::batched_sgemm_views(&ae, &be, t),
-            Precision::Mixed | Precision::Refined(RefineMode::None) => {
-                engine::batched_mixed_gemm_views(&ae, &be, t)
+        let raw = if self.desc.sparsity != Sparsity::Dense {
+            let prec = engine_rounding(self.desc.precision)
+                .expect("sparse descriptors validate their precision at build time");
+            if self.desc.sparsity == Sparsity::Sparse24Strict {
+                // strict pre-validation of every entry (on the consumed,
+                // op-composed A — the matrix the pruning sees) before any
+                // work is dispatched
+                for v in &ae {
+                    if let Err(e) = engine::sparse24_check(v) {
+                        return Err(PlanError::Sparse24Violation {
+                            row: e.row,
+                            group: e.group,
+                            nonzeros: e.nonzeros,
+                        });
+                    }
+                }
             }
-            Precision::F16 => engine::batched_hgemm_views(&ae, &be, t),
-            Precision::Refined(mode) => engine::batched_refined_gemm_views(&ae, &be, mode, t),
-            p => {
-                let prec = format_rounding(p).expect("non-format precisions matched above");
-                engine::batched_rounded_gemm_views(&ae, &be, prec, t)
+            engine::batched_sparse_gemm_views(&ae, &be, prec, t)
+        } else {
+            match self.desc.precision {
+                Precision::F32 => engine::batched_sgemm_views(&ae, &be, t),
+                Precision::Mixed | Precision::Refined(RefineMode::None) => {
+                    engine::batched_mixed_gemm_views(&ae, &be, t)
+                }
+                Precision::F16 => engine::batched_hgemm_views(&ae, &be, t),
+                Precision::Refined(mode) => engine::batched_refined_gemm_views(&ae, &be, mode, t),
+                p => {
+                    let prec = format_rounding(p).expect("non-format precisions matched above");
+                    engine::batched_rounded_gemm_views(&ae, &be, prec, t)
+                }
             }
         };
         let beta = self.desc.beta;
@@ -1260,6 +1418,82 @@ mod tests {
             .precision(Precision::Int8 { scale: Scale::new(0.25) })
             .build()
             .is_ok());
+    }
+
+    #[test]
+    fn sparse_descriptor_gates_unsupported_precisions() {
+        // footnote-1-style gating: no 2:4 representation for f16 storage
+        // or actively refined split panels — typed error, never a silent
+        // dense fallback
+        for prec in [
+            Precision::F16,
+            Precision::Refined(RefineMode::RefineA),
+            Precision::Refined(RefineMode::RefineAB),
+        ] {
+            let err = GemmDesc::square(8)
+                .precision(prec)
+                .sparsity(Sparsity::Sparse24)
+                .build()
+                .err()
+                .expect("sparse + unsupported precision must be rejected at build time");
+            assert_eq!(err, PlanError::SparsePrecision { precision: prec });
+            assert!(err.to_string().contains("structured sparsity"));
+        }
+        // every engine-backed precision composes
+        for prec in [
+            Precision::F32,
+            Precision::Mixed,
+            Precision::Refined(RefineMode::None),
+            Precision::Bf16,
+            Precision::Tf32,
+            Precision::Fp8E4M3,
+            Precision::Int8 { scale: Scale::default() },
+        ] {
+            for s in [Sparsity::Sparse24, Sparsity::Sparse24Strict] {
+                assert!(
+                    GemmDesc::square(8).precision(prec).sparsity(s).build().is_ok(),
+                    "{prec:?} x {s:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_plan_matches_scalar_oracle() {
+        use crate::gemm::sparse24_gemm_scalar;
+        let mut rng = Rng::new(47);
+        let a = uniform_matrix(&mut rng, 13, 18, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 18, 9, -1.0, 1.0);
+        let c = uniform_matrix(&mut rng, 13, 9, -1.0, 1.0);
+        let p = GemmDesc::new(13, 18, 9)
+            .precision(Precision::F32)
+            .sparsity(Sparsity::Sparse24)
+            .epilogue(0.5, 2.0)
+            .plan(&a, &b)
+            .unwrap();
+        assert_eq!(
+            p.execute_with(Some(&c)).unwrap(),
+            sparse24_gemm_scalar(&a, &b, Some(&c), 0.5, 2.0)
+        );
+        assert_eq!(p.desc().sparsity_mode(), Sparsity::Sparse24);
+    }
+
+    #[test]
+    fn strict_sparse_set_a_reports_violations_typed() {
+        let mut dense = Matrix::zeros(4, 8);
+        for j in 0..4 {
+            dense[(2, 4 + j)] = (j + 1) as f32;
+        }
+        let mut p = GemmDesc::new(4, 8, 4)
+            .precision(Precision::F32)
+            .sparsity(Sparsity::Sparse24Strict)
+            .build()
+            .unwrap();
+        let err = p.set_a(&dense).err().unwrap();
+        assert_eq!(err, PlanError::Sparse24Violation { row: 2, group: 1, nonzeros: 4 });
+        assert!(err.to_string().contains("2:4 sparsity violation"));
+        // the pruned image of the same matrix is accepted
+        assert!(p.set_a(&engine::sparse24_prune(&dense)).is_ok());
     }
 
     #[test]

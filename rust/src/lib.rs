@@ -11,7 +11,14 @@
 //!   (Ampere), FP8 E4M3 (Hopper) and symmetric INT8 (Turing) behind
 //!   one [`formats::TcFormat`] trait, each with a bit-exact scalar
 //!   conversion oracle and a [`gemm::Precision`] descriptor variant
-//!   that rounds at pack time exactly like the f16 path.
+//!   that rounds at pack time exactly like the f16 path.  The 2:4
+//!   structured-sparsity lane (Ampere's sparse Tensor Core) rides the
+//!   same pack-time discipline: [`gemm::Sparsity`] on the descriptor
+//!   prunes A to its top-2 |.| lanes per 4-wide k-group into a
+//!   compressed [`gemm::engine::Sparse24`] panel (values + 2-bit
+//!   metadata), and the sparse microkernel skips the pruned lanes —
+//!   bitwise equal to the dense engine over the pruned image, proven
+//!   by a double-oracle harness (`tests/sparse.rs`).
 //! * **Plan layer** — [`gemm::plan`], the crate's **single GEMM entry
 //!   point**, modeled on the descriptor-based cuBLAS surface the paper
 //!   found fastest and most reusable (§IV): a

@@ -6,12 +6,13 @@
 //! repro figures [--fig 6|7|8|9]      regenerate the paper's figures
 //! repro figures --headline           the §VII headline-number table
 //! repro figures --ablation <name>    tiling | shmem | range | pipeline | kahan |
-//!                                    cluster | formats
+//!                                    cluster | formats | sparsity
 //! repro serve --requests N [...]     run the GEMM service on a trace
 //! repro serve-replay [...]           open-loop burst replay -> BENCH_serving.json
 //!                                    (--shards N --submitters M: sharded intake;
-//!                                     --mode bf16|tf32|fp8e4m3|int8|refine_a|
-//!                                     refine_ab pins every request's precision)
+//!                                     --mode bf16|tf32|fp8e4m3|int8|sparse24|
+//!                                     refine_a|refine_ab pins every request's
+//!                                     precision; --sparse = --mode sparse24)
 //! ```
 
 use std::collections::BTreeMap;
@@ -32,7 +33,8 @@ use tensoremu::util::json::Json;
 use tensoremu::workload::{replay, uniform_matrix, ReplayConfig, RequestTrace, Rng, TraceSpec};
 
 fn main() {
-    let args = Args::from_env(&["headline", "large", "verbose", "engine-only", "expect-shed"]);
+    let args =
+        Args::from_env(&["headline", "large", "verbose", "engine-only", "expect-shed", "sparse"]);
     let cmd = args.positional(0).unwrap_or("info").to_string();
     let code = match run(&cmd, &args) {
         Ok(()) => 0,
@@ -127,6 +129,7 @@ fn figures_cmd(args: &Args) -> Result<()> {
             "kahan" => println!("{}", figures::ablations::kahan_study(42)),
             "cluster" => println!("{}", figures::ablations::cluster_study()),
             "formats" => println!("{}", figures::ablations::format_generation_study(42)),
+            "sparsity" => println!("{}", figures::ablations::sparsity_study(42)),
             other => anyhow::bail!("unknown ablation {other:?}"),
         }
         return Ok(());
@@ -227,9 +230,15 @@ fn serve_replay(args: &Args) -> Result<()> {
     let tile: usize = args.opt_parse("tile").unwrap_or(16);
     let shards: usize = args.opt_parse("shards").unwrap_or(1);
     let engine_only = args.flag("engine-only");
-    let mode = match args.opt("mode") {
-        None | Some("policy") => None,
-        Some(name) => Some(parse_mode(name, args)?),
+    // `--sparse` is shorthand for `--mode sparse24`: every request rides
+    // the 2:4 structured-sparsity engine lane.
+    let mode = if args.flag("sparse") {
+        Some(PrecisionMode::Sparse24)
+    } else {
+        match args.opt("mode") {
+            None | Some("policy") => None,
+            Some(name) => Some(parse_mode(name, args)?),
+        }
     };
 
     let cfg = CoordinatorConfig {
@@ -347,8 +356,10 @@ fn parse_mode(name: &str, args: &Args) -> Result<PrecisionMode> {
             anyhow::ensure!(scale.is_valid(), "--int8-scale must be finite and positive");
             PrecisionMode::Int8(scale)
         }
+        "sparse24" => PrecisionMode::Sparse24,
         other => anyhow::bail!(
-            "unknown mode {other:?} (try policy|none|refine_a|refine_ab|bf16|tf32|fp8e4m3|int8)"
+            "unknown mode {other:?} \
+             (try policy|none|refine_a|refine_ab|bf16|tf32|fp8e4m3|int8|sparse24)"
         ),
     })
 }

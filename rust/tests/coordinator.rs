@@ -12,7 +12,8 @@ use tensoremu::coordinator::{
 };
 use tensoremu::formats::Scale;
 use tensoremu::gemm::{
-    bf16_gemm_scalar, fp8_gemm_scalar, int8_gemm_scalar, mixed_gemm, tf32_gemm_scalar, Matrix,
+    bf16_gemm_scalar, fp8_gemm_scalar, int8_gemm_scalar, mixed_gemm, sparse24_gemm_scalar,
+    tf32_gemm_scalar, Matrix,
 };
 use tensoremu::precision::{refine_gemm, RefineMode};
 use tensoremu::runtime::{is_artifacts_missing, ExecutorServer, Manifest};
@@ -310,7 +311,7 @@ fn format_mode_squares_ride_engine_lane_with_zero_fallbacks() {
         PrecisionMode::Tf32 => tf32_gemm_scalar(a, b, None, 1.0, 0.0),
         PrecisionMode::Fp8E4M3 => fp8_gemm_scalar(a, b, None, 1.0, 0.0),
         PrecisionMode::Int8(s) => int8_gemm_scalar(a, b, None, 1.0, 0.0, s.get()),
-        PrecisionMode::Refined(_) => unreachable!("format-only sweep"),
+        PrecisionMode::Refined(_) | PrecisionMode::Sparse24 => unreachable!("format-only sweep"),
     };
     let mut rng = Rng::new(16);
     let mut rxs = Vec::new();
@@ -336,6 +337,83 @@ fn format_mode_squares_ride_engine_lane_with_zero_fallbacks() {
     assert_eq!(snap.engine_refined, 0, "format buckets are not refined: {}", snap.report());
     assert!(snap.engine_flushes >= 8, "8 (edge, mode) keys: {}", snap.report());
     assert_eq!(snap.responses, 24);
+    c.shutdown();
+}
+
+#[test]
+fn sparse_mode_squares_ride_engine_lane_with_zero_fallbacks() {
+    // the sparse lane's acceptance check: a burst of sparse24 square
+    // requests over an injected empty manifest buckets on the batched
+    // engine lane — CPU-fallback counter pinned at exactly zero — and
+    // every reply is bitwise equal to the serial sparse oracle
+    let c = engine_only_coordinator();
+    let mut rng = Rng::new(17);
+    let mut rxs = Vec::new();
+    let mut wants = Vec::new();
+    for i in 0..16u64 {
+        let n = [24usize, 33][(i % 2) as usize];
+        let a = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        wants.push(sparse24_gemm_scalar(&a, &b, None, 1.0, 0.0));
+        rxs.push(c.submit(GemmRequest::new(0, a, b).with_mode(PrecisionMode::Sparse24)));
+    }
+    for (rx, want) in rxs.into_iter().zip(wants) {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert_eq!(resp.served_by, ServedBy::BatchedEngine);
+        assert_eq!(resp.mode, PrecisionMode::Sparse24);
+        // the engine lane prunes at pack time: bitwise oracle match
+        assert_eq!(resp.c, want);
+    }
+    let snap = c.metrics_snapshot();
+    assert_eq!(snap.fallback, 0, "sparse squares must never fall back: {}", snap.report());
+    assert_eq!(snap.engine_batched, 16, "{}", snap.report());
+    assert_eq!(snap.engine_refined, 0, "sparse buckets are not refined: {}", snap.report());
+    assert!(snap.engine_flushes >= 2, "two (edge, sparse24) keys: {}", snap.report());
+    assert_eq!(snap.responses, 16);
+    c.shutdown();
+}
+
+#[test]
+fn sparse_and_dense_same_edge_bucket_separately() {
+    // mode-aware bucketing at service level: one tight same-edge burst,
+    // half dense / half sparse24 — every response must come back at its
+    // own mode (same-bucket mixing would prune the dense half), each
+    // bitwise equal to its own oracle
+    let c = engine_only_coordinator();
+    let mut rng = Rng::new(18);
+    let inputs: Vec<(Matrix, Matrix, bool)> = (0..16)
+        .map(|i| {
+            (
+                uniform_matrix(&mut rng, 24, 24, -1.0, 1.0),
+                uniform_matrix(&mut rng, 24, 24, -1.0, 1.0),
+                i % 2 == 1,
+            )
+        })
+        .collect();
+    let mut rxs = Vec::new();
+    for (a, b, sparse) in &inputs {
+        let mut req = GemmRequest::new(0, a.clone(), b.clone());
+        if *sparse {
+            req = req.with_mode(PrecisionMode::Sparse24);
+        }
+        rxs.push(c.submit(req));
+    }
+    for (rx, (a, b, sparse)) in rxs.into_iter().zip(&inputs) {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert_eq!(resp.served_by, ServedBy::BatchedEngine);
+        let want = if *sparse {
+            assert_eq!(resp.mode, PrecisionMode::Sparse24);
+            sparse24_gemm_scalar(a, b, None, 1.0, 0.0)
+        } else {
+            assert_eq!(resp.mode, RefineMode::None);
+            mixed_gemm(a, b, None, 1.0, 0.0)
+        };
+        assert_eq!(resp.c, want, "sparse={sparse}");
+    }
+    let snap = c.metrics_snapshot();
+    assert_eq!(snap.fallback, 0, "{}", snap.report());
+    assert_eq!(snap.engine_batched, 16, "{}", snap.report());
+    assert!(snap.engine_flushes >= 2, "modes must never share a bucket: {}", snap.report());
     c.shutdown();
 }
 

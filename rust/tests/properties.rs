@@ -3,6 +3,7 @@
 //! proptest; failures print a replayable seed).
 
 use tensoremu::ensure_prop;
+use tensoremu::gemm::engine::{sparse24_check, sparse24_prune, Sparse24};
 use tensoremu::gemm::{batched_mixed_gemm, dgemm_naive, mixed_gemm, sgemm_blocked, sgemm_naive, Matrix};
 use tensoremu::halfprec::{f16_to_f32, f32_to_f16, split_residual, ulp_at, Half};
 use tensoremu::interfaces::{wmma_tiled_gemm, CutlassGemm, TilePolicy};
@@ -215,6 +216,88 @@ fn prop_overflow_saturates_to_infinity_not_garbage() {
         let b = Matrix::eye(n);
         let c = mixed_gemm(&a, &b, None, 1.0, 0.0);
         ensure_prop!(c[(0, 0)].is_infinite(), "expected inf, got {}", c[(0, 0)]);
+        Ok(())
+    });
+}
+
+/// Dims for the sparsity properties: small odd shapes so `k % 4` hits
+/// every tail width, not just the group-aligned case.
+fn rand_sparse_dims(rng: &mut Rng) -> (usize, usize) {
+    (1 + rng.below(24), 1 + rng.below(40))
+}
+
+#[test]
+fn prop_sparse24_prune_keeps_at_most_two_per_group() {
+    forall(100, |rng| {
+        let (m, k) = rand_sparse_dims(rng);
+        let a = uniform_matrix(rng, m, k, -4.0, 4.0);
+        let p = sparse24_prune(&a);
+        ensure_prop!(
+            sparse24_check(&(&p).into()).is_ok(),
+            "pruned image fails the 2:4 structural check at ({m},{k})"
+        );
+        for i in 0..m {
+            for g in 0..(k + 3) / 4 {
+                let w = (k - g * 4).min(4);
+                let nz = (0..w).filter(|&l| p[(i, g * 4 + l)] != 0.0).count();
+                ensure_prop!(nz <= 2, "row {i} group {g}: {nz} nonzeros survive pruning");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse24_kept_lanes_are_the_top2_by_magnitude() {
+    // The deterministic tie rule: equal magnitudes keep the *earlier*
+    // lane.  So every dropped lane is either strictly smaller in
+    // magnitude than the weakest kept lane, or ties a kept lane that
+    // sits at a strictly earlier index.  Values are snapped to a
+    // coarse grid so magnitude ties actually occur.
+    forall(100, |rng| {
+        let (m, k) = rand_sparse_dims(rng);
+        let raw = uniform_matrix(rng, m, k, -2.0, 2.0);
+        let a = Matrix::from_fn(m, k, |i, j| (raw[(i, j)] * 4.0).round() / 4.0);
+        let s = Sparse24::compress(&a);
+        let groups = (k + 3) / 4;
+        for i in 0..m {
+            for g in 0..groups {
+                let w = (k - g * 4).min(4);
+                let mb = s.meta()[i * groups + g];
+                let (i0, i1) = ((mb & 3) as usize, ((mb >> 2) & 3) as usize);
+                ensure_prop!(i0 < w && i1 < w, "meta names lane outside width-{w} group");
+                let weakest = a[(i, g * 4 + i1)].abs().min(a[(i, g * 4 + i0)].abs());
+                for l in 0..w {
+                    if l == i0 || l == i1 {
+                        continue;
+                    }
+                    let dropped = a[(i, g * 4 + l)].abs();
+                    let tied_earlier = [i0, i1]
+                        .iter()
+                        .any(|&c| a[(i, g * 4 + c)].abs() == dropped && c < l);
+                    ensure_prop!(
+                        dropped < weakest || tied_earlier,
+                        "row {i} group {g}: dropped lane {l} (|{dropped}|) beats kept \
+                         pair ({i0},{i1}) with weakest |{weakest}|"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse24_codec_roundtrips_the_pruned_matrix() {
+    forall(100, |rng| {
+        let (m, k) = rand_sparse_dims(rng);
+        let a = uniform_matrix(rng, m, k, -8.0, 8.0);
+        let s = Sparse24::compress(&a);
+        ensure_prop!(s.shape() == (m, k), "compressed shape mismatch");
+        ensure_prop!(
+            s.decompress() == sparse24_prune(&a),
+            "decompress(compress(a)) != prune(a) at ({m},{k})"
+        );
         Ok(())
     });
 }

@@ -1,0 +1,435 @@
+//! 2:4 structured-sparsity suite: exhaustive metadata-codec sweeps
+//! (every C(4,2) = 6 keep-pattern crossed with signed / zero /
+//! subnormal value classes, plus every `k % 4` tail width), and the
+//! sparse lane's double-oracle acceptance contract — a sparse plan is
+//! bitwise equal to the serial [`sparse24_gemm_scalar`] oracle AND to
+//! a dense plan of the same precision over the materialized
+//! [`sparse24_prune`] image, at every worker count and pool mode,
+//! single and batched, with strict-mode violations surfacing as typed
+//! errors.  Same template as tests/formats.rs.
+
+use tensoremu::gemm::engine::{self, PoolMode, Sparse24};
+use tensoremu::gemm::engine::{sparse24_check, sparse24_prune};
+use tensoremu::gemm::{
+    sparse24_gemm_scalar, GemmDesc, MatLayout, Matrix, Op, PlanError, Precision, Sparsity,
+    StridedBatch,
+};
+use tensoremu::precision::RefineMode;
+use tensoremu::workload::{uniform_matrix, Rng};
+
+const THREADS: &[usize] = &[1, 2, 8];
+
+/// Serializes the tests that flip the process-global pool mode (same
+/// rationale as tests/engine.rs — the mode is per-process state).
+static MODE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock_mode() -> std::sync::MutexGuard<'static, ()> {
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Bit-exact view of a matrix: `Matrix` equality uses f32 `==`, which
+/// conflates `±0.0` — the codec contract is stronger.
+fn bits(m: &Matrix) -> Vec<u32> {
+    m.as_slice().iter().map(|v| v.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Satellite: exhaustive metadata-codec sweep.
+
+#[test]
+fn meta_codec_exhaustive_keep_patterns_times_value_classes() {
+    // every C(4,2) = 6 keep-pattern x every (kept value class)^2:
+    // the dropped lanes stay at zero so selection is forced onto the
+    // pattern, and compress must store the raw kept bits with the
+    // `i0 | i1 << 2` metadata byte, decompressing to exactly the
+    // pruned image
+    let classes: [f32; 5] = [
+        1.5,                       // normal
+        -2.25,                     // negative normal
+        f32::MIN_POSITIVE / 2.0,   // subnormal
+        f32::from_bits(1),         // smallest subnormal
+        -f32::MIN_POSITIVE,        // negative smallest normal
+    ];
+    let patterns = [(0usize, 1usize), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)];
+    for &(i0, i1) in &patterns {
+        for &v0 in &classes {
+            for &v1 in &classes {
+                let mut row = [0.0f32; 4];
+                row[i0] = v0;
+                row[i1] = v1;
+                let a = Matrix::from_fn(1, 4, |_, j| row[j]);
+                let s = Sparse24::compress(&a);
+                assert_eq!(s.shape(), (1, 4));
+                assert_eq!(
+                    s.meta(),
+                    &[(i0 | (i1 << 2)) as u8],
+                    "pattern ({i0},{i1}) meta byte"
+                );
+                assert_eq!(
+                    [s.values()[0].to_bits(), s.values()[1].to_bits()],
+                    [v0.to_bits(), v1.to_bits()],
+                    "pattern ({i0},{i1}) kept values ({v0}, {v1})"
+                );
+                let p = sparse24_prune(&a);
+                assert_eq!(bits(&s.decompress()), bits(&p), "({i0},{i1}) round-trip");
+                assert_eq!(bits(&p), bits(&a), "zeros-elsewhere input is its own prune");
+            }
+        }
+    }
+}
+
+#[test]
+fn signed_zero_groups_encode_canonically_and_round_trip_bitwise() {
+    // all 16 ±0 sign patterns over a width-4 group: pruning keeps the
+    // canonical (0, 1) lane pair with its raw signed-zero bits, and
+    // the codec preserves them exactly (f32 == would conflate ±0.0)
+    for pat in 0..16u32 {
+        let a = Matrix::from_fn(1, 4, |_, j| if pat & (1 << j) != 0 { -0.0 } else { 0.0 });
+        let s = Sparse24::compress(&a);
+        assert_eq!(s.meta(), &[0b0100u8], "pattern {pat:#06b}: canonical (0,1) lane pair");
+        assert_eq!(
+            [s.values()[0].to_bits(), s.values()[1].to_bits()],
+            [a[(0, 0)].to_bits(), a[(0, 1)].to_bits()],
+            "pattern {pat:#06b}: kept signed-zero bits"
+        );
+        assert_eq!(bits(&s.decompress()), bits(&sparse24_prune(&a)), "pattern {pat:#06b}");
+        // a dropped -0.0 decompresses as +0.0 — pruned means zeroed
+        for l in 2..4 {
+            assert_eq!(s.decompress()[(0, l)].to_bits(), 0.0f32.to_bits(), "lane {l} cleared");
+        }
+    }
+}
+
+#[test]
+fn tail_groups_round_trip_for_every_k_mod_4() {
+    // k not divisible by 4: the last group is 1-, 2- or 3-wide.  A
+    // width-1 tail encodes the self-describing (0, 0) single-slot
+    // byte; wider tails never name a lane outside the group.  The
+    // codec round-trips the pruned image exactly at every width.
+    let mut rng = Rng::new(9);
+    for k in 1..=11usize {
+        for m in [1usize, 3, 8] {
+            let a = uniform_matrix(&mut rng, m, k, -2.0, 2.0);
+            let s = Sparse24::compress(&a);
+            let groups = (k + 3) / 4;
+            assert_eq!(s.meta().len(), m * groups);
+            assert_eq!(s.values().len(), m * groups * 2);
+            assert_eq!(bits(&s.decompress()), bits(&sparse24_prune(&a)), "m={m} k={k}");
+            for (g, &mb) in s.meta().iter().enumerate() {
+                let w = (k - (g % groups) * 4).min(4);
+                let (i0, i1) = ((mb & 3) as usize, ((mb >> 2) & 3) as usize);
+                assert!(i0 < w && i1 < w, "m={m} k={k}: meta {mb:#04x} escapes width {w}");
+                if w == 1 {
+                    assert_eq!((i0, i1), (0, 0), "width-1 tail is the single-slot byte");
+                    assert_eq!(
+                        s.values()[g * 2 + 1].to_bits(),
+                        0.0f32.to_bits(),
+                        "width-1 pad slot is +0.0"
+                    );
+                } else {
+                    assert!(i0 < i1, "two-slot groups order their lanes");
+                }
+            }
+        }
+    }
+    // width-1 tail keeps its only lane even when it is zero
+    let a = Matrix::from_fn(2, 5, |i, j| if j == 4 { 0.0 } else { (i + j + 1) as f32 });
+    assert_eq!(bits(&Sparse24::compress(&a).decompress()), bits(&sparse24_prune(&a)));
+}
+
+// ---------------------------------------------------------------------------
+// Tentpole acceptance: the double-oracle sweep.
+
+#[test]
+fn sparse_plans_match_both_oracles_across_threads_and_pools() {
+    // the acceptance sweep: sparse plan == serial sparse oracle ==
+    // dense plan over the materialized pruned A, bit for bit, at
+    // {1,2,8} threads x {scoped, persistent} pools
+    let _g = lock_mode();
+    let ambient = engine::pool_mode();
+    let mut rng = Rng::new(140);
+    for (m, k, n) in [(1usize, 1usize, 1usize), (5, 7, 3), (16, 16, 16), (70, 33, 81), (5, 600, 9)]
+    {
+        let a = uniform_matrix(&mut rng, m, k, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, k, n, -1.0, 1.0);
+        let pruned = sparse24_prune(&a);
+        let oracle = sparse24_gemm_scalar(&a, &b, None, 1.0, 0.0);
+        for mode in [PoolMode::Scoped, PoolMode::Persistent] {
+            engine::set_pool_mode(mode);
+            for &t in THREADS {
+                let sparse = GemmDesc::new(m, k, n)
+                    .precision(Precision::F32)
+                    .sparsity(Sparsity::Sparse24)
+                    .threads(t)
+                    .pool_hint(mode)
+                    .plan(&a, &b)
+                    .unwrap();
+                let got = sparse.execute().unwrap();
+                assert_eq!(bits(&got), bits(&oracle), "({m},{k},{n}) {mode:?} t={t} oracle");
+                let dense = GemmDesc::new(m, k, n)
+                    .precision(Precision::F32)
+                    .threads(t)
+                    .plan(&pruned, &b)
+                    .unwrap();
+                assert_eq!(
+                    bits(&got),
+                    bits(&dense.execute().unwrap()),
+                    "({m},{k},{n}) {mode:?} t={t} dense cross-oracle"
+                );
+            }
+        }
+    }
+    engine::set_pool_mode(ambient);
+}
+
+#[test]
+fn sparse_plans_cross_dense_oracle_at_every_engine_backed_precision() {
+    // prune-then-quantize ordering: at every precision a sparse A
+    // composes with, the sparse plan equals the dense plan of the
+    // same precision over the raw pruned image — rounding applies to
+    // the kept values, after selection on raw magnitudes
+    let mut rng = Rng::new(141);
+    let a = uniform_matrix(&mut rng, 18, 21, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 21, 13, -1.0, 1.0);
+    let pruned = sparse24_prune(&a);
+    let precisions = [
+        Precision::F32,
+        Precision::Mixed,
+        Precision::Refined(RefineMode::None),
+        Precision::Bf16,
+        Precision::Tf32,
+        Precision::Fp8E4M3,
+    ];
+    for prec in precisions {
+        let sparse = GemmDesc::new(18, 21, 13)
+            .precision(prec)
+            .sparsity(Sparsity::Sparse24)
+            .plan(&a, &b)
+            .unwrap();
+        let dense = GemmDesc::new(18, 21, 13).precision(prec).plan(&pruned, &b).unwrap();
+        assert_eq!(
+            bits(&sparse.execute().unwrap()),
+            bits(&dense.execute().unwrap()),
+            "{prec:?}"
+        );
+    }
+}
+
+#[test]
+fn batched_sparse_plans_match_oracles_across_threads_and_pools() {
+    // the engine lane's call shape: heterogeneous sparse batches are
+    // per-entry bitwise equal to the serial oracle and to the dense
+    // batch over pruned entries, at every worker count and pool mode
+    let _g = lock_mode();
+    let ambient = engine::pool_mode();
+    let mut rng = Rng::new(142);
+    let shapes = [(16usize, 16usize, 16usize), (5, 7, 3), (33, 20, 12), (1, 1, 1)];
+    let a: Vec<Matrix> =
+        shapes.iter().map(|&(m, k, _)| uniform_matrix(&mut rng, m, k, -1.0, 1.0)).collect();
+    let b: Vec<Matrix> =
+        shapes.iter().map(|&(_, k, n)| uniform_matrix(&mut rng, k, n, -1.0, 1.0)).collect();
+    let want: Vec<Matrix> =
+        a.iter().zip(&b).map(|(x, y)| sparse24_gemm_scalar(x, y, None, 1.0, 0.0)).collect();
+    let pruned: Vec<Matrix> = a.iter().map(sparse24_prune).collect();
+    for pm in [PoolMode::Scoped, PoolMode::Persistent] {
+        engine::set_pool_mode(pm);
+        for &t in THREADS {
+            let plan = GemmDesc::any_shape()
+                .precision(Precision::F32)
+                .sparsity(Sparsity::Sparse24)
+                .threads(t)
+                .build()
+                .unwrap();
+            let got = plan.execute_batched(&a, &b).unwrap();
+            let dense = GemmDesc::any_shape().precision(Precision::F32).threads(t).build().unwrap();
+            let cross = dense.execute_batched(&pruned, &b).unwrap();
+            for i in 0..shapes.len() {
+                assert_eq!(bits(&got[i]), bits(&want[i]), "entry {i} {pm:?} t={t} oracle");
+                assert_eq!(bits(&got[i]), bits(&cross[i]), "entry {i} {pm:?} t={t} cross");
+            }
+        }
+    }
+    engine::set_pool_mode(ambient);
+}
+
+// ---------------------------------------------------------------------------
+// Descriptor surface: views, strides, transposes, repack, epilogue.
+
+#[test]
+fn strided_batches_ride_the_sparse_lane_bitwise() {
+    // one contiguous buffer per operand side, zero-copy strided views:
+    // bitwise identical to the owned Vec<Matrix> sparse batch
+    let mut rng = Rng::new(143);
+    let (count, edge) = (6usize, 12usize);
+    let entry = edge * edge;
+    let abuf: Vec<f32> = (0..count * entry).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let bbuf: Vec<f32> = (0..count * entry).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let lay = MatLayout::new(edge, edge);
+    let plan = GemmDesc::any_shape()
+        .precision(Precision::F32)
+        .sparsity(Sparsity::Sparse24)
+        .build()
+        .unwrap();
+    let sa = StridedBatch::new(&abuf, lay, entry, count);
+    let sb = StridedBatch::new(&bbuf, lay, entry, count);
+    let strided = plan.execute_strided_batched(&sa, &sb).unwrap();
+    let av: Vec<Matrix> = (0..count)
+        .map(|i| Matrix::from_vec(edge, edge, abuf[i * entry..(i + 1) * entry].to_vec()))
+        .collect();
+    let bv: Vec<Matrix> = (0..count)
+        .map(|i| Matrix::from_vec(edge, edge, bbuf[i * entry..(i + 1) * entry].to_vec()))
+        .collect();
+    let owned = plan.execute_batched(&av, &bv).unwrap();
+    for i in 0..count {
+        assert_eq!(bits(&strided[i]), bits(&owned[i]), "entry {i}");
+        assert_eq!(
+            bits(&strided[i]),
+            bits(&sparse24_gemm_scalar(&av[i], &bv[i], None, 1.0, 0.0)),
+            "entry {i} oracle"
+        );
+    }
+}
+
+#[test]
+fn transpose_op_composes_with_sparsity_on_the_consumed_matrix() {
+    // under Op::T the pruning sees the *consumed* m x k matrix, not
+    // the stored k x m buffer — same as the oracle over A^T
+    let mut rng = Rng::new(144);
+    let a_stored = uniform_matrix(&mut rng, 9, 14, -1.0, 1.0); // stored k x m
+    let b = uniform_matrix(&mut rng, 9, 11, -1.0, 1.0);
+    let plan = GemmDesc::new(14, 9, 11)
+        .precision(Precision::F32)
+        .sparsity(Sparsity::Sparse24)
+        .op_a(Op::T)
+        .plan(&a_stored, &b)
+        .unwrap();
+    let want = sparse24_gemm_scalar(&a_stored.transpose(), &b, None, 1.0, 0.0);
+    assert_eq!(bits(&plan.execute().unwrap()), bits(&want));
+}
+
+#[test]
+fn set_a_repacks_the_sparse_panels_in_place() {
+    let mut rng = Rng::new(145);
+    let a1 = uniform_matrix(&mut rng, 13, 18, -1.0, 1.0);
+    let a2 = uniform_matrix(&mut rng, 13, 18, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 18, 7, -1.0, 1.0);
+    let mut plan = GemmDesc::new(13, 18, 7)
+        .precision(Precision::F32)
+        .sparsity(Sparsity::Sparse24)
+        .plan(&a1, &b)
+        .unwrap();
+    assert_eq!(
+        bits(&plan.execute().unwrap()),
+        bits(&sparse24_gemm_scalar(&a1, &b, None, 1.0, 0.0))
+    );
+    plan.set_a(&a2).unwrap(); // B's packed panels stay warm
+    assert_eq!(
+        bits(&plan.execute().unwrap()),
+        bits(&sparse24_gemm_scalar(&a2, &b, None, 1.0, 0.0))
+    );
+}
+
+#[test]
+fn epilogue_and_execute_into_match_the_oracle() {
+    let mut rng = Rng::new(146);
+    let a = uniform_matrix(&mut rng, 10, 12, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 12, 8, -1.0, 1.0);
+    let c = uniform_matrix(&mut rng, 10, 8, -1.0, 1.0);
+    let plan = GemmDesc::new(10, 12, 8)
+        .precision(Precision::F32)
+        .sparsity(Sparsity::Sparse24)
+        .epilogue(0.5, 2.0)
+        .plan(&a, &b)
+        .unwrap();
+    let want = sparse24_gemm_scalar(&a, &b, Some(&c), 0.5, 2.0);
+    assert_eq!(bits(&plan.execute_with(Some(&c)).unwrap()), bits(&want));
+    let mut out = Matrix::zeros(10, 8);
+    plan.execute_into(&mut out, Some(&c)).unwrap();
+    assert_eq!(bits(&out), bits(&want), "execute_into writes the same bits");
+    // beta == 0 never reads C (cuBLAS semantics): a NaN C cannot leak
+    let nan_c = Matrix::from_fn(10, 8, |_, _| f32::NAN);
+    let plan0 = GemmDesc::new(10, 12, 8)
+        .precision(Precision::F32)
+        .sparsity(Sparsity::Sparse24)
+        .epilogue(0.5, 0.0)
+        .plan(&a, &b)
+        .unwrap();
+    let got = plan0.execute_with(Some(&nan_c)).unwrap();
+    assert!(got.as_slice().iter().all(|v| v.is_finite()), "NaN C leaked through beta=0");
+    assert_eq!(bits(&got), bits(&sparse24_gemm_scalar(&a, &b, None, 0.5, 0.0)));
+}
+
+// ---------------------------------------------------------------------------
+// Gating and strict mode.
+
+#[test]
+fn sparse_gating_rejects_unbacked_precisions_with_typed_errors() {
+    // footnote-1-style gating: sparsity composes only with precisions
+    // whose operands are plain f32 panels
+    for prec in [
+        Precision::F16,
+        Precision::Refined(RefineMode::RefineA),
+        Precision::Refined(RefineMode::RefineAB),
+    ] {
+        for sp in [Sparsity::Sparse24, Sparsity::Sparse24Strict] {
+            match GemmDesc::square(8).precision(prec).sparsity(sp).build() {
+                Err(PlanError::SparsePrecision { precision }) => assert_eq!(precision, prec),
+                other => panic!(
+                    "{prec:?}/{sp:?}: expected SparsePrecision, got {got:?}",
+                    got = other.err()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn strict_mode_reports_the_first_violation_and_accepts_pruned_images() {
+    let mut rng = Rng::new(147);
+    let mut a = sparse24_prune(&uniform_matrix(&mut rng, 6, 12, -1.0, 1.0));
+    let b = uniform_matrix(&mut rng, 12, 5, -1.0, 1.0);
+    // pruned image passes the strict gate and equals the lenient plan
+    assert!(sparse24_check(&(&a).into()).is_ok());
+    let strict = GemmDesc::new(6, 12, 5)
+        .precision(Precision::F32)
+        .sparsity(Sparsity::Sparse24Strict)
+        .plan(&a, &b)
+        .unwrap();
+    assert_eq!(
+        bits(&strict.execute().unwrap()),
+        bits(&sparse24_gemm_scalar(&a, &b, None, 1.0, 0.0))
+    );
+    // now break row 2, group 1 (lanes 4..8) with a third/fourth nonzero
+    for l in 4..8 {
+        a[(2, l)] = 1.0 + l as f32;
+    }
+    match GemmDesc::new(6, 12, 5)
+        .precision(Precision::F32)
+        .sparsity(Sparsity::Sparse24Strict)
+        .plan(&a, &b)
+    {
+        Err(PlanError::Sparse24Violation { row, group, nonzeros }) => {
+            assert_eq!((row, group), (2, 1));
+            assert_eq!(nonzeros, 4);
+        }
+        other => panic!("expected Sparse24Violation, got {:?}", other.err()),
+    }
+    // batched strict pre-validates every entry before dispatch
+    let good = sparse24_prune(&uniform_matrix(&mut rng, 6, 12, -1.0, 1.0));
+    let plan = GemmDesc::any_shape()
+        .precision(Precision::F32)
+        .sparsity(Sparsity::Sparse24Strict)
+        .build()
+        .unwrap();
+    let batch_a = vec![good.clone(), a.clone()];
+    let batch_b = vec![b.clone(), b.clone()];
+    match plan.execute_batched(&batch_a, &batch_b) {
+        Err(PlanError::Sparse24Violation { row, group, nonzeros }) => {
+            assert_eq!((row, group, nonzeros), (2, 1, 4));
+        }
+        other => panic!("expected batched Sparse24Violation, got {:?}", other.err()),
+    }
+    // and the all-good batch executes
+    let out = plan.execute_batched(&vec![good.clone()], &vec![b.clone()]).unwrap();
+    assert_eq!(bits(&out[0]), bits(&sparse24_gemm_scalar(&good, &b, None, 1.0, 0.0)));
+}
