@@ -42,6 +42,15 @@
 //! and every submitted request receives exactly one reply — see
 //! `docs/SERVING.md` ([`crate::docs::serving`]) and the
 //! [`crate::workload::replay()`] harness that measures it.
+//!
+//! The service is **observable** stage by stage: start it with
+//! [`CoordinatorConfig::trace`] and every sampled request's lifecycle
+//! (`admit → queued → bucketed → flush → pack → exec → epilogue →
+//! reply`, plus the shed/deadline/error/shutdown terminals) is recorded
+//! into the bounded per-shard rings of a [`crate::obs::TraceSink`] —
+//! exportable as a Chrome/Perfetto trace or aggregated into a
+//! per-stage latency breakdown, with replies bitwise identical whether
+//! tracing is on or off.
 
 pub mod batcher;
 pub mod metrics;

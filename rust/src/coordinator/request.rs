@@ -41,6 +41,9 @@ pub enum PrecisionMode {
     Tf32,
     /// FP8 E4M3 storage (Hopper): saturating, ±448 max finite.
     Fp8E4M3,
+    /// FP8 E5M2 storage (Hopper): binary16-range exponent, 2-bit
+    /// significand, real ±∞/NaN (overflow rounds to infinity).
+    Fp8E5M2,
     /// Symmetric per-matrix INT8 quantization (Turing) at this scale.
     Int8(Scale),
     /// 2:4 structured sparsity (Ampere's sparse Tensor Core): A pruned
@@ -63,8 +66,9 @@ impl PrecisionMode {
             PrecisionMode::Tf32 => 4,
             PrecisionMode::Fp8E4M3 => 5,
             PrecisionMode::Int8(s) => 6 | (u64::from(s.bits()) << 8),
-            // low byte 7 can never collide with an Int8 key (low byte 6)
+            // low bytes 7/8 can never collide with an Int8 key (low byte 6)
             PrecisionMode::Sparse24 => 7,
+            PrecisionMode::Fp8E5M2 => 8,
         }
     }
 
@@ -77,6 +81,7 @@ impl PrecisionMode {
             PrecisionMode::Bf16 => Precision::Bf16,
             PrecisionMode::Tf32 => Precision::Tf32,
             PrecisionMode::Fp8E4M3 => Precision::Fp8E4M3,
+            PrecisionMode::Fp8E5M2 => Precision::Fp8E5M2,
             PrecisionMode::Int8(scale) => Precision::Int8 { scale },
             PrecisionMode::Sparse24 => Precision::F32,
         }
@@ -133,6 +138,7 @@ impl fmt::Display for PrecisionMode {
             PrecisionMode::Bf16 => write!(f, "bf16"),
             PrecisionMode::Tf32 => write!(f, "tf32"),
             PrecisionMode::Fp8E4M3 => write!(f, "fp8e4m3"),
+            PrecisionMode::Fp8E5M2 => write!(f, "fp8e5m2"),
             PrecisionMode::Int8(s) => write!(f, "int8(scale={s})"),
             PrecisionMode::Sparse24 => write!(f, "sparse24"),
         }
@@ -370,6 +376,7 @@ mod tests {
             PrecisionMode::Bf16.key_u64(),
             PrecisionMode::Tf32.key_u64(),
             PrecisionMode::Fp8E4M3.key_u64(),
+            PrecisionMode::Fp8E5M2.key_u64(),
             PrecisionMode::Int8(Scale::default()).key_u64(),
             PrecisionMode::Int8(Scale::new(0.25)).key_u64(),
             PrecisionMode::Sparse24.key_u64(),
@@ -377,7 +384,7 @@ mod tests {
         keys.extend([0, 1, 2]);
         keys.sort_unstable();
         keys.dedup();
-        assert_eq!(keys.len(), 9, "all mode keys must be distinct");
+        assert_eq!(keys.len(), 10, "all mode keys must be distinct");
     }
 
     #[test]
@@ -403,6 +410,7 @@ mod tests {
         assert_eq!(PrecisionMode::Bf16.plan_precision(), Precision::Bf16);
         assert_eq!(PrecisionMode::Tf32.plan_precision(), Precision::Tf32);
         assert_eq!(PrecisionMode::Fp8E4M3.plan_precision(), Precision::Fp8E4M3);
+        assert_eq!(PrecisionMode::Fp8E5M2.plan_precision(), Precision::Fp8E5M2);
         let s = Scale::new(0.5);
         assert_eq!(PrecisionMode::Int8(s).plan_precision(), Precision::Int8 { scale: s });
         // the sparse key executes at f32 input precision with a pruned A;

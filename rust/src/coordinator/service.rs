@@ -154,6 +154,14 @@ pub struct CoordinatorConfig {
     /// unbounded thread creation; the `fallback_inflight` high-water
     /// metric records how close the gate came to the cap.
     pub max_fallback_threads: usize,
+    /// Request-lifecycle tracing ([`crate::obs`]): `Some` allocates one
+    /// bounded [`crate::obs::TraceSink`] ring per shard and threads a
+    /// [`crate::obs::TraceHandle`] through every dispatcher, worker and
+    /// cached plan.  Emission is additionally gated by the process-global
+    /// sampler ([`crate::obs::set_sampling`]) — with sampling at `0`
+    /// every emission site costs one relaxed atomic load, and with it on,
+    /// tracing is observation-only: replies stay bitwise identical.
+    pub trace: Option<crate::obs::TraceConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -166,6 +174,7 @@ impl Default for CoordinatorConfig {
             queue_cap: 4096,
             shards: 0,
             max_fallback_threads: 8,
+            trace: None,
         }
     }
 }
@@ -204,6 +213,9 @@ pub struct Coordinator {
     /// queues) — the one counter that makes `queue_cap` a global bound.
     depth: Arc<AtomicUsize>,
     queue_cap: usize,
+    /// The trace sink, when [`CoordinatorConfig::trace`] is set — one
+    /// bounded ring per shard; exported via [`Coordinator::trace_sink`].
+    trace: Option<Arc<crate::obs::TraceSink>>,
     // keep the executor threads alive for the service's lifetime
     _executor: ExecutorServer,
     _direct_executor: Option<ExecutorServer>,
@@ -232,6 +244,9 @@ impl Coordinator {
         let n_shards = resolve_shards(cfg.shards);
         let depth = Arc::new(AtomicUsize::new(0));
         let gate = Arc::new(FallbackGate::new(cfg.max_fallback_threads));
+        let trace = cfg
+            .trace
+            .map(|tc| Arc::new(crate::obs::TraceSink::for_shards(n_shards, tc.capacity)));
         let mut shards = Vec::with_capacity(n_shards);
         let mut metrics = Vec::with_capacity(n_shards);
         for i in 0..n_shards {
@@ -245,6 +260,9 @@ impl Coordinator {
                 metrics: shard_metrics.clone(),
                 depth: depth.clone(),
                 gate: gate.clone(),
+                trace: trace
+                    .as_ref()
+                    .map(|s| crate::obs::TraceHandle::new(Arc::clone(s), i as u32)),
             };
             let dispatcher = std::thread::Builder::new()
                 .name(format!("coordinator-{i}"))
@@ -260,9 +278,38 @@ impl Coordinator {
             next_id: AtomicU64::new(1),
             depth,
             queue_cap: cfg.queue_cap,
+            trace,
             _executor: executor,
             _direct_executor: direct_executor,
         })
+    }
+
+    /// The trace sink, when the service was started with
+    /// [`CoordinatorConfig::trace`] — drain it with
+    /// [`crate::obs::TraceSink::events`], aggregate with
+    /// [`crate::obs::TraceSink::breakdown`], or export with
+    /// [`crate::obs::TraceSink::chrome_json`].
+    pub fn trace_sink(&self) -> Option<Arc<crate::obs::TraceSink>> {
+        self.trace.clone()
+    }
+
+    /// Emit a request-scoped instant event from the front end (submit
+    /// path), subject to the global sampler.  The disabled path is one
+    /// relaxed load inside [`crate::obs::sample`].
+    fn trace_instant(&self, shard: usize, id: RequestId, stage: crate::obs::Stage) {
+        let Some(sink) = &self.trace else { return };
+        if !crate::obs::sample(id) {
+            return;
+        }
+        sink.push(crate::obs::TraceEvent {
+            id,
+            stage,
+            detail: "",
+            shard: shard as u32,
+            worker: crate::obs::worker_track(),
+            start_us: sink.now_us(),
+            dur_us: 0,
+        });
     }
 
     /// Submit a request; returns the response channel.  Every submission
@@ -281,6 +328,10 @@ impl Coordinator {
         let shard = shard_for(&req, mode, self.shards.len());
         let metrics = &self.metrics[shard];
         metrics.on_request();
+        // admit marker before the admission decision, mirroring
+        // on_request: admits count sheds too, so the span accounting
+        // identity (admits == terminals) matches the metrics identity
+        self.trace_instant(shard, req.id, crate::obs::Stage::Admit);
         let (tx, rx) = channel();
         // admission control: reserve a slot in the global queue budget
         // (shared by all shards) or shed right here
@@ -288,15 +339,18 @@ impl Coordinator {
         if prev >= self.queue_cap {
             self.depth.fetch_sub(1, Ordering::Relaxed);
             metrics.on_shed();
+            self.trace_instant(shard, req.id, crate::obs::Stage::Shed);
             let _ = tx.send(Err(CoordinatorError::Shed { queue_depth: prev }));
             return rx;
         }
         metrics.observe_queue_depth(prev + 1);
+        let id = req.id;
         let sub = Submission { req, submitted: Instant::now(), reply: tx.clone() };
         if self.shards[shard].events.send(Event::Submit(sub)).is_err() {
             // dispatcher is gone: answer here instead of hanging the client
             self.depth.fetch_sub(1, Ordering::Relaxed);
             metrics.on_error();
+            self.trace_instant(shard, id, crate::obs::Stage::Shutdown);
             let _ = tx.send(Err(CoordinatorError::ShuttingDown));
         }
         rx
@@ -462,6 +516,9 @@ struct ShardCtx {
     metrics: Arc<Metrics>,
     depth: Arc<AtomicUsize>,
     gate: Arc<FallbackGate>,
+    /// This shard's trace handle (when the service traces); cloned into
+    /// flush workers and attached to cached plans.
+    trace: Option<crate::obs::TraceHandle>,
 }
 
 /// A one-shot unit of work for the bounded direct/fallback lanes.
@@ -575,17 +632,20 @@ impl PlanCache {
     /// The cached plan for the `(edge, mode)` bucket key (built on first
     /// request).  A descriptor the planner rejects becomes a typed error
     /// for the bucket's requests — never a dispatcher panic: the
-    /// dispatcher must outlive any single bad request.
+    /// dispatcher must outlive any single bad request.  When the service
+    /// traces, the shard's handle is attached before the plan is shared,
+    /// so its pack/exec/epilogue spans land on the shard's track.
     fn for_bucket(
         &mut self,
         n: usize,
         mode: PrecisionMode,
+        trace: Option<&crate::obs::TraceHandle>,
     ) -> Result<Arc<GemmPlan>, CoordinatorError> {
         if let Some(plan) = self.plans.get(&(n, mode)) {
             return Ok(plan.clone());
         }
         let precision = mode.plan_precision();
-        let plan = GemmDesc::square(n)
+        let mut plan = GemmDesc::square(n)
             .precision(precision)
             .sparsity(mode.plan_sparsity())
             .build()
@@ -594,6 +654,9 @@ impl PlanCache {
                     "engine plan build failed (n={n}, {mode:?}): {e}"
                 ))
             })?;
+        if let Some(t) = trace {
+            plan.set_trace(t.clone());
+        }
         let plan = Arc::new(plan);
         self.plans.insert((n, mode), plan.clone());
         Ok(plan)
@@ -612,12 +675,30 @@ fn panic_message(payload: Box<dyn Any + Send>) -> String {
 }
 
 /// Deliver a typed error reply, counting it under the matching metric
-/// (sheds and deadline sheds are not service errors).
-fn deliver_err(reply: &Sender<CoordinatorResult>, metrics: &Metrics, err: CoordinatorError) {
+/// (sheds and deadline sheds are not service errors) and emitting the
+/// matching terminal trace stage — every error funnel records exactly
+/// one terminal event per request, which is what makes the span
+/// totality identity (admits == terminals) hold under tracing.
+fn deliver_err(
+    reply: &Sender<CoordinatorResult>,
+    metrics: &Metrics,
+    err: CoordinatorError,
+    trace: Option<&crate::obs::TraceHandle>,
+    id: RequestId,
+) {
     match err {
         CoordinatorError::Shed { .. } => metrics.on_shed(),
         CoordinatorError::DeadlineExceeded => metrics.on_deadline_exceeded(),
         _ => metrics.on_error(),
+    }
+    if let Some(t) = trace {
+        let stage = match err {
+            CoordinatorError::Shed { .. } => crate::obs::Stage::Shed,
+            CoordinatorError::DeadlineExceeded => crate::obs::Stage::Deadline,
+            CoordinatorError::ShuttingDown => crate::obs::Stage::Shutdown,
+            _ => crate::obs::Stage::Error,
+        };
+        t.instant(id, stage, "");
     }
     let _ = reply.send(Err(err));
 }
@@ -643,21 +724,33 @@ fn dispatcher_loop(ctx: ShardCtx, rx: Receiver<Event>) {
         for id in batcher.shed_expired(now).into_iter().chain(engine_batcher.shed_expired(now)) {
             ctx.depth.fetch_sub(1, Ordering::Relaxed);
             if let Some(p) = pending.remove(&id) {
-                deliver_err(&p.reply, &ctx.metrics, CoordinatorError::DeadlineExceeded);
+                deliver_err(
+                    &p.reply,
+                    &ctx.metrics,
+                    CoordinatorError::DeadlineExceeded,
+                    ctx.trace.as_ref(),
+                    id,
+                );
             }
         }
         if let Some(trigger) = batcher.flush_due(now) {
             if trigger == FlushTrigger::Deadline {
                 ctx.metrics.on_flush_early_artifact();
             }
-            flush_batch(&ctx, &mut batcher, &mut pending);
+            flush_batch(&ctx, &mut batcher, &mut pending, trigger_name(trigger));
             continue;
         }
         if let Some(trigger) = engine_batcher.flush_due(now) {
             if trigger == FlushTrigger::Deadline {
                 ctx.metrics.on_flush_early_engine();
             }
-            flush_engine_buckets(&ctx, &mut engine_batcher, &mut plans, &mut pending);
+            flush_engine_buckets(
+                &ctx,
+                &mut engine_batcher,
+                &mut plans,
+                &mut pending,
+                trigger_name(trigger),
+            );
             continue;
         }
         let timeout = [batcher.time_to_flush(now), engine_batcher.time_to_flush(now)]
@@ -671,7 +764,13 @@ fn dispatcher_loop(ctx: ShardCtx, rx: Receiver<Event>) {
                 if sub.req.deadline.is_some_and(|d| Instant::now() >= d) {
                     // already expired on arrival: shed instead of executing
                     ctx.depth.fetch_sub(1, Ordering::Relaxed);
-                    deliver_err(&sub.reply, &ctx.metrics, CoordinatorError::DeadlineExceeded);
+                    deliver_err(
+                        &sub.reply,
+                        &ctx.metrics,
+                        CoordinatorError::DeadlineExceeded,
+                        ctx.trace.as_ref(),
+                        sub.req.id,
+                    );
                     continue;
                 }
                 dispatch_one(&ctx, sub, &router, &mut batcher, &mut engine_batcher, &mut pending);
@@ -700,14 +799,35 @@ fn shed_on_shutdown(
     for id in batcher.drain_ids().into_iter().chain(engine_batcher.drain_ids()) {
         ctx.depth.fetch_sub(1, Ordering::Relaxed);
         if let Some(p) = pending.remove(&id) {
-            deliver_err(&p.reply, &ctx.metrics, CoordinatorError::ShuttingDown);
+            deliver_err(
+                &p.reply,
+                &ctx.metrics,
+                CoordinatorError::ShuttingDown,
+                ctx.trace.as_ref(),
+                id,
+            );
         }
     }
     while let Ok(ev) = rx.try_recv() {
         if let Event::Submit(sub) = ev {
             ctx.depth.fetch_sub(1, Ordering::Relaxed);
-            deliver_err(&sub.reply, &ctx.metrics, CoordinatorError::ShuttingDown);
+            deliver_err(
+                &sub.reply,
+                &ctx.metrics,
+                CoordinatorError::ShuttingDown,
+                ctx.trace.as_ref(),
+                sub.req.id,
+            );
         }
+    }
+}
+
+/// The flush trigger's trace-span detail string.
+fn trigger_name(trigger: FlushTrigger) -> &'static str {
+    match trigger {
+        FlushTrigger::Capacity => "capacity",
+        FlushTrigger::Age => "age",
+        FlushTrigger::Deadline => "deadline",
     }
 }
 
@@ -733,12 +853,16 @@ fn enqueue_batched(
 ) {
     let Submission { req, submitted, reply } = sub;
     let id = req.id;
+    let lane = if mode.is_some() { "engine" } else { "artifact" };
     let pushed = match mode {
         Some(mode) => batcher.push_mode(req, mode),
         None => batcher.push(req),
     };
     match pushed {
         Ok(()) => {
+            if let Some(t) = &ctx.trace {
+                t.instant(id, crate::obs::Stage::Bucketed, lane);
+            }
             pending.insert(id, PendingReply { reply, submitted });
         }
         Err(req) => {
@@ -754,6 +878,8 @@ fn enqueue_batched(
                 CoordinatorError::Internal(format!(
                     "non-square request {id} ({m}x{k}x{n}) routed to a batcher"
                 )),
+                ctx.trace.as_ref(),
+                id,
             );
         }
     }
@@ -767,17 +893,33 @@ fn dispatch_one(
     engine_batcher: &mut Batcher,
     pending: &mut HashMap<RequestId, PendingReply>,
 ) {
-    match router.route(&sub.req) {
+    let route = router.route(&sub.req);
+    // the intake-channel wait ends here: record it as the queued span
+    // (batcher residency, for batched routes, shows up inside reply)
+    if let Some(t) = &ctx.trace {
+        let lane = match &route {
+            Route::Batch { .. } => "artifact",
+            Route::EngineBatch { .. } => "engine",
+            Route::Direct { .. } => "direct",
+            Route::CpuFallback { .. } => "fallback",
+        };
+        t.span_since(sub.req.id, crate::obs::Stage::Queued, lane, sub.submitted);
+    }
+    match route {
         Route::Batch { .. } => enqueue_batched(ctx, sub, None, batcher, pending),
         Route::EngineBatch { mode, .. } => {
             enqueue_batched(ctx, sub, Some(mode), engine_batcher, pending)
         }
         Route::Direct { artifact, mode } => {
             ctx.metrics.on_direct();
+            if let Some(t) = &ctx.trace {
+                t.instant(sub.req.id, crate::obs::Stage::Direct, "");
+            }
             // the request leaves the queue for a worker: release its slot
             ctx.depth.fetch_sub(1, Ordering::Relaxed);
             let executor = ctx.direct.clone();
             let metrics = ctx.metrics.clone();
+            let trace = ctx.trace.clone();
             let inflight = ctx.gate.run(Box::new(move || {
                 let queued = sub.submitted.elapsed();
                 let t0 = Instant::now();
@@ -795,6 +937,9 @@ fn dispatch_one(
                         )
                         .and_then(TensorData::into_matrix)
                 }));
+                if let Some(t) = &trace {
+                    t.span_since(sub.req.id, crate::obs::Stage::Exec, "direct", t0);
+                }
                 let result = match outcome {
                     Ok(Ok(c)) => Ok(GemmResponse {
                         id: sub.req.id,
@@ -807,14 +952,18 @@ fn dispatch_one(
                     Ok(Err(e)) => Err(CoordinatorError::Exec(format!("{e:#}"))),
                     Err(p) => Err(CoordinatorError::Internal(panic_message(p))),
                 };
-                finish(result, &sub.reply, &metrics, sub.submitted, false);
+                finish(result, &sub.reply, &metrics, sub.submitted, false, trace.as_ref(), sub.req.id);
             }));
             ctx.metrics.observe_fallback_inflight(inflight);
         }
         Route::CpuFallback { mode } => {
             ctx.metrics.on_fallback();
+            if let Some(t) = &ctx.trace {
+                t.instant(sub.req.id, crate::obs::Stage::Fallback, "");
+            }
             ctx.depth.fetch_sub(1, Ordering::Relaxed);
             let metrics = ctx.metrics.clone();
+            let trace = ctx.trace.clone();
             let inflight = ctx.gate.run(Box::new(move || {
                 let queued = sub.submitted.elapsed();
                 let t0 = Instant::now();
@@ -852,6 +1001,9 @@ fn dispatch_one(
                         }
                     }
                 }));
+                if let Some(t) = &trace {
+                    t.span_since(sub.req.id, crate::obs::Stage::Exec, "cpu", t0);
+                }
                 let result = match outcome {
                     Ok(Ok(c)) => Ok(GemmResponse {
                         id: sub.req.id,
@@ -864,7 +1016,7 @@ fn dispatch_one(
                     Ok(Err(e)) => Err(CoordinatorError::Exec(format!("cpu fallback: {e}"))),
                     Err(p) => Err(CoordinatorError::Internal(panic_message(p))),
                 };
-                finish(result, &sub.reply, &metrics, sub.submitted, false);
+                finish(result, &sub.reply, &metrics, sub.submitted, false, trace.as_ref(), sub.req.id);
             }));
             ctx.metrics.observe_fallback_inflight(inflight);
         }
@@ -875,6 +1027,7 @@ fn flush_batch(
     ctx: &ShardCtx,
     batcher: &mut Batcher,
     pending: &mut HashMap<RequestId, PendingReply>,
+    trigger: &'static str,
 ) {
     let tile = batcher.tile();
     let pad_to = |len: usize| -> usize {
@@ -896,7 +1049,7 @@ fn flush_batch(
         ));
         for id in &flushed.ids {
             if let Some(p) = pending.remove(id) {
-                deliver_err(&p.reply, &ctx.metrics, err.clone());
+                deliver_err(&p.reply, &ctx.metrics, err.clone(), ctx.trace.as_ref(), *id);
             }
         }
         return;
@@ -911,7 +1064,7 @@ fn flush_batch(
         ));
         for id in &flushed.ids {
             if let Some(p) = pending.remove(id) {
-                deliver_err(&p.reply, &ctx.metrics, err.clone());
+                deliver_err(&p.reply, &ctx.metrics, err.clone(), ctx.trace.as_ref(), *id);
             }
         }
         return;
@@ -928,6 +1081,7 @@ fn flush_batch(
     let a = flushed.a;
     let b = flushed.b;
     let poison = flushed.poison;
+    let trace = ctx.trace.clone();
     std::thread::spawn(move || {
         let t0 = Instant::now();
         let outcome = catch_unwind(AssertUnwindSafe(|| {
@@ -940,6 +1094,11 @@ fn flush_batch(
                 .and_then(TensorData::into_batch)
         }));
         let exec = t0.elapsed();
+        // one flush span for the whole batch (id 0: batch-scoped, so
+        // it is recorded whenever tracing is on, at any sample rate)
+        if let Some(t) = &trace {
+            t.span_since(0, crate::obs::Stage::Flush, trigger, t0);
+        }
         let err = match outcome {
             Ok(Ok(outs)) if outs.len() >= replies.len() => {
                 for (i, (id, enq, reply)) in replies.into_iter().enumerate() {
@@ -952,7 +1111,7 @@ fn flush_batch(
                             queued: t0.duration_since(enq),
                             exec,
                         };
-                        finish(Ok(resp), &p.reply, &metrics, p.submitted, true);
+                        finish(Ok(resp), &p.reply, &metrics, p.submitted, true, trace.as_ref(), id);
                     }
                 }
                 return;
@@ -965,9 +1124,9 @@ fn flush_batch(
             Ok(Err(e)) => CoordinatorError::Exec(format!("batch failed: {e:#}")),
             Err(p) => CoordinatorError::Internal(panic_message(p)),
         };
-        for (_, _, reply) in replies {
+        for (id, _, reply) in replies {
             if let Some(p) = reply {
-                deliver_err(&p.reply, &metrics, err.clone());
+                deliver_err(&p.reply, &metrics, err.clone(), trace.as_ref(), id);
             }
         }
     });
@@ -990,19 +1149,20 @@ fn flush_engine_buckets(
     batcher: &mut Batcher,
     plans: &mut PlanCache,
     pending: &mut HashMap<RequestId, PendingReply>,
+    trigger: &'static str,
 ) {
     for bucket in batcher.flush_buckets() {
         let mode = bucket.mode;
         // the bucket's entries leave the queue now (served or failed)
         ctx.depth.fetch_sub(bucket.len(), Ordering::Relaxed);
-        let plan = match plans.for_bucket(bucket.n, mode) {
+        let plan = match plans.for_bucket(bucket.n, mode, ctx.trace.as_ref()) {
             Ok(plan) => plan,
             Err(e) => {
                 // plan build failed: a typed error for this bucket only —
                 // the dispatcher (and every other bucket) carries on
                 for id in &bucket.ids {
                     if let Some(p) = pending.remove(id) {
-                        deliver_err(&p.reply, &ctx.metrics, e.clone());
+                        deliver_err(&p.reply, &ctx.metrics, e.clone(), ctx.trace.as_ref(), *id);
                     }
                 }
                 continue;
@@ -1019,6 +1179,7 @@ fn flush_engine_buckets(
             .map(|(id, enq)| (*id, *enq, pending.remove(id)))
             .collect();
         let metrics = ctx.metrics.clone();
+        let trace = ctx.trace.clone();
         std::thread::spawn(move || {
             let t0 = Instant::now();
             // zero-copy gather: the views borrow the bucket's storage
@@ -1031,6 +1192,12 @@ fn flush_engine_buckets(
                 plan.execute_batched_views(&av, &bv)
             }));
             let exec = t0.elapsed();
+            // one flush span per bucket (id 0: bucket-scoped); the
+            // plan's own pack/exec/epilogue spans nest inside it on
+            // this worker's track
+            if let Some(t) = &trace {
+                t.span_since(0, crate::obs::Stage::Flush, trigger, t0);
+            }
             let err = match outcome {
                 Ok(Ok(outs)) if outs.len() >= replies.len() => {
                     // replies and outs are index-aligned by construction;
@@ -1045,7 +1212,15 @@ fn flush_engine_buckets(
                                 queued: t0.duration_since(enq),
                                 exec,
                             };
-                            finish(Ok(resp), &p.reply, &metrics, p.submitted, false);
+                            finish(
+                                Ok(resp),
+                                &p.reply,
+                                &metrics,
+                                p.submitted,
+                                false,
+                                trace.as_ref(),
+                                id,
+                            );
                         }
                     }
                     return;
@@ -1058,9 +1233,9 @@ fn flush_engine_buckets(
                 Ok(Err(e)) => CoordinatorError::Exec(format!("engine bucket failed: {e}")),
                 Err(p) => CoordinatorError::Internal(panic_message(p)),
             };
-            for (_, _, reply) in replies {
+            for (id, _, reply) in replies {
                 if let Some(p) = reply {
-                    deliver_err(&p.reply, &metrics, err.clone());
+                    deliver_err(&p.reply, &metrics, err.clone(), trace.as_ref(), id);
                 }
             }
         });
@@ -1073,13 +1248,21 @@ fn finish(
     metrics: &Metrics,
     submitted: Instant,
     batched: bool,
+    trace: Option<&crate::obs::TraceHandle>,
+    id: RequestId,
 ) {
     match result {
         Ok(resp) => {
             metrics.on_response(submitted.elapsed(), batched);
+            if let Some(t) = trace {
+                // the reply span is the end-to-end latency: submit to
+                // delivery (the terminal event of a served request)
+                let detail = if batched { "batched" } else { "oneshot" };
+                t.span_since(id, crate::obs::Stage::Reply, detail, submitted);
+            }
             let _ = reply.send(Ok(resp));
         }
-        Err(e) => deliver_err(reply, metrics, e),
+        Err(e) => deliver_err(reply, metrics, e, trace, id),
     }
 }
 

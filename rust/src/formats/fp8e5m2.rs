@@ -1,0 +1,173 @@
+//! FP8 E5M2 (1 sign / 5 exponent / 2 significand, bias 15) scalar
+//! conversion oracle — Hopper's *wide-range* 8-bit Tensor Core input.
+//!
+//! E5M2 is the other half of the OCP FP8 pair NVIDIA implements, and
+//! unlike its E4M3 sibling it keeps **full IEEE special semantics**:
+//! exponent-all-ones with zero significand is ±∞ (`0x7C` / `0xFC`),
+//! the three nonzero-significand patterns beside it are NaNs, and
+//! out-of-range values *overflow to infinity* under round-nearest-even
+//! instead of saturating.  The trade is precision for range: 2
+//! significand bits (epsilon `2^-2`) but binary16's exponent span —
+//! the largest finite value is `S.11110.11 = 57344` and subnormals
+//! (step `2^-16`) reach down to ±2^-16.
+
+/// Relative rounding unit: `2^-2`.
+pub const FP8E5M2_EPSILON: f32 = 0.25;
+
+/// Largest finite E5M2 value (`0x7B`): `(2 - 2^-1) * 2^15 = 57344`.
+pub const FP8E5M2_MAX: f32 = 57_344.0;
+
+const INF_BITS: u8 = 0x7C;
+const NAN_BITS: u8 = 0x7E;
+const MAX_BITS: u8 = 0x7B;
+
+/// Round an f32 to the nearest E5M2 bit pattern (ties to even,
+/// overflowing to ±∞, flushing below half the smallest subnormal to
+/// signed zero).  NaN maps to the canonical quiet-NaN pattern keeping
+/// the sign; ±∞ passes through exactly.
+pub fn f32_to_fp8e5m2(x: f32) -> u8 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 24) & 0x80) as u8;
+    let exp32 = (bits >> 23) & 0xFF;
+    let sig32 = bits & 0x7F_FFFF;
+    if exp32 == 0xFF {
+        // NaN stays NaN; infinity is representable and passes through
+        return if sig32 != 0 { sign | NAN_BITS } else { sign | INF_BITS };
+    }
+    let e = exp32 as i32 - 127;
+    if e > 15 {
+        // beyond the exponent range entirely: overflow to infinity
+        return sign | INF_BITS;
+    }
+    if e >= -14 {
+        // normal E5M2 range: keep 2 of the 23 significand bits
+        let sig2 = sig32 >> 21;
+        let rest = sig32 & 0x1F_FFFF;
+        let mut v = (((e + 15) as u32) << 2) | sig2;
+        if rest > 0x10_0000 || (rest == 0x10_0000 && v & 1 == 1) {
+            v += 1;
+        }
+        // rounding up out of S.11110.11 lands exactly on the infinity
+        // slot — that IS the IEEE overflow-to-∞ behavior, keep it
+        return sign | v as u8;
+    }
+    if e >= -17 && exp32 != 0 {
+        // E5M2 subnormals: magnitude sig2 * 2^-16, sig2 in 1..=3; a
+        // round-up to 4 lands exactly on the smallest normal (2^-14)
+        let full_sig = 0x80_0000 | sig32;
+        let shift = (21 + (-14 - e)) as u32;
+        let mut sig2 = full_sig >> shift;
+        let rest = full_sig & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        if rest > halfway || (rest == halfway && sig2 & 1 == 1) {
+            sig2 += 1;
+        }
+        return sign | sig2 as u8;
+    }
+    // below half the smallest subnormal (f32 subnormals included):
+    // round to signed zero
+    sign
+}
+
+/// Widen an E5M2 bit pattern to f32 (exact: every finite E5M2 value is
+/// an f32 grid point).  Infinities widen to f32 infinities, the NaN
+/// patterns widen to a quiet NaN carrying the sign bit, so the
+/// round-trip preserves all 256 patterns.
+pub fn fp8e5m2_to_f32(bits: u8) -> f32 {
+    let sign = u32::from(bits & 0x80) << 24;
+    let exp = (bits >> 2) & 0x1F;
+    let sig = u32::from(bits & 0x3);
+    if exp == 0x1F {
+        return if sig != 0 {
+            f32::from_bits(sign | 0x7FC0_0000)
+        } else {
+            f32::from_bits(sign | 0x7F80_0000)
+        };
+    }
+    if exp == 0 {
+        // subnormal: sig * 2^-16 (exact in f32; sign applied by negation
+        // so the zero patterns widen to signed zeros)
+        let mag = sig as f32 / 65_536.0;
+        return if sign != 0 { -mag } else { mag };
+    }
+    let exp32 = (u32::from(exp) as i32 - 15 + 127) as u32;
+    f32::from_bits(sign | (exp32 << 23) | (sig << 21))
+}
+
+/// Round-trip quantization: the value the emulated Hopper FP8 MAC
+/// consumes for input `x` on the wide-range E5M2 path.
+pub fn fp8e5m2_quantize(x: f32) -> f32 {
+    fp8e5m2_to_f32(f32_to_fp8e5m2(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_pass_through() {
+        for x in [0.0f32, 1.0, -1.0, 0.5, 57_344.0, -57_344.0, 1.25, 49_152.0, 2f32.powi(-14)] {
+            assert_eq!(fp8e5m2_quantize(x), x, "{x} is an e5m2 grid point");
+        }
+        assert_eq!(fp8e5m2_quantize(-0.0).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn subnormals_are_exact_grid_points() {
+        // subnormal grid: k * 2^-16 for k = 1..3
+        for k in 1..=3u32 {
+            let x = k as f32 * 2f32.powi(-16);
+            assert_eq!(fp8e5m2_quantize(x), x);
+            assert_eq!(fp8e5m2_quantize(-x), -x);
+        }
+        // half the smallest subnormal ties to even (zero)
+        assert_eq!(fp8e5m2_quantize(2f32.powi(-17)), 0.0);
+        // anything below flushes to signed zero
+        assert_eq!(fp8e5m2_quantize(2f32.powi(-40)), 0.0);
+        assert_eq!(fp8e5m2_quantize(-2f32.powi(-40)).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn overflow_goes_to_infinity_not_saturation() {
+        assert_eq!(fp8e5m2_quantize(1e9), f32::INFINITY);
+        assert_eq!(fp8e5m2_quantize(-1e9), f32::NEG_INFINITY);
+        assert_eq!(fp8e5m2_quantize(f32::INFINITY), f32::INFINITY);
+        assert_eq!(fp8e5m2_quantize(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        // 61440 is halfway between 57344 and the (nonexistent) 65536:
+        // RNE rounds the odd max-finite pattern up, i.e. to infinity
+        assert_eq!(fp8e5m2_quantize(61_440.0), f32::INFINITY);
+        // just below the halfway point still rounds down to max finite
+        assert_eq!(fp8e5m2_quantize(61_439.0), FP8E5M2_MAX);
+        assert_eq!(fp8e5m2_quantize(-61_439.0), -FP8E5M2_MAX);
+    }
+
+    #[test]
+    fn nan_and_infinity_specials() {
+        assert_eq!(f32_to_fp8e5m2(f32::NAN), NAN_BITS);
+        assert_eq!(f32_to_fp8e5m2(f32::INFINITY), INF_BITS);
+        assert_eq!(f32_to_fp8e5m2(f32::NEG_INFINITY), 0x80 | INF_BITS);
+        assert_eq!(fp8e5m2_to_f32(INF_BITS), f32::INFINITY);
+        assert_eq!(fp8e5m2_to_f32(0xFC), f32::NEG_INFINITY);
+        // all three nonzero-significand all-ones-exponent patterns are NaN
+        for nan in [0x7D, 0x7E, 0x7F, 0xFD, 0xFE, 0xFFu8] {
+            assert!(fp8e5m2_to_f32(nan).is_nan(), "{nan:#04x} is a NaN pattern");
+        }
+        assert!(fp8e5m2_to_f32(0xFE).is_sign_negative());
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // 1 + 2^-3 is halfway between 1 and 1.25: even (1.0) wins
+        assert_eq!(fp8e5m2_quantize(1.0 + 2f32.powi(-3)), 1.0);
+        // 1.375 is halfway between 1.25 and 1.5 → 1.5 (even)
+        assert_eq!(fp8e5m2_quantize(1.375), 1.5);
+    }
+
+    #[test]
+    fn constants_match_the_bit_patterns() {
+        assert_eq!(FP8E5M2_MAX, fp8e5m2_to_f32(MAX_BITS));
+        assert_eq!(FP8E5M2_EPSILON, 2f32.powi(-2));
+        // smallest normal sits right above the subnormal grid
+        assert_eq!(fp8e5m2_to_f32(0x04), 2f32.powi(-14));
+    }
+}

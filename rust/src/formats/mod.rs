@@ -15,8 +15,8 @@
 //!   the exact widening [`TcFormat::widen_to_f32`], and the ULP
 //!   geometry ([`TcFormat::half_ulp_at`]) the
 //!   [`crate::precision::rounded_gemm_error_bound`] model consumes.
-//! * [`F16`], [`Bf16`], [`Tf32`], [`Fp8E4M3`], [`Int8`] — the five
-//!   instances, each with generation metadata ([`FormatMeta`],
+//! * [`F16`], [`Bf16`], [`Tf32`], [`Fp8E4M3`], [`Fp8E5M2`], [`Int8`]
+//!   — the six instances, each with generation metadata ([`FormatMeta`],
 //!   [`Generation`]) for the docs table and the cross-generation
 //!   error figure (`repro figures --ablation formats`).
 //! * Free scalar conversion oracles per format (`f32_to_bf16`,
@@ -39,11 +39,15 @@
 
 mod bf16;
 mod fp8;
+mod fp8e5m2;
 mod int8;
 mod tf32;
 
 pub use bf16::{bf16_quantize, bf16_to_f32, f32_to_bf16, BF16_EPSILON, BF16_MAX};
 pub use fp8::{f32_to_fp8, fp8_quantize, fp8_to_f32, FP8_EPSILON, FP8_MAX};
+pub use fp8e5m2::{
+    f32_to_fp8e5m2, fp8e5m2_quantize, fp8e5m2_to_f32, FP8E5M2_EPSILON, FP8E5M2_MAX,
+};
 pub use int8::{f32_to_int8, int8_quantize, int8_to_f32, INT8_QMAX};
 pub use tf32::{f32_to_tf32, tf32_quantize, tf32_to_f32, TF32_EPSILON, TF32_MAX};
 
@@ -348,6 +352,42 @@ impl TcFormat for Fp8E4M3 {
     }
 }
 
+/// Hopper FP8 E5M2 (1/5/2): binary16's exponent range at 2 significand
+/// bits, with real ±∞/NaN semantics — overflow rounds to infinity
+/// instead of saturating, unlike [`Fp8E4M3`].  Max finite 57344.
+/// Oracle: [`f32_to_fp8e5m2`] / [`fp8e5m2_to_f32`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Fp8E5M2;
+
+impl TcFormat for Fp8E5M2 {
+    type Bits = u8;
+
+    fn round_from_f32(&self, x: f32) -> u8 {
+        f32_to_fp8e5m2(x)
+    }
+
+    fn widen_to_f32(&self, bits: u8) -> f32 {
+        fp8e5m2_to_f32(bits)
+    }
+
+    fn meta(&self) -> FormatMeta {
+        FormatMeta {
+            name: "fp8e5m2",
+            bits: 8,
+            exp_bits: 5,
+            sig_bits: 2,
+            generation: Generation::Hopper,
+            epsilon: FP8E5M2_EPSILON,
+            max_finite: FP8E5M2_MAX,
+            accumulator: "f32",
+        }
+    }
+
+    fn half_ulp_at(&self, at: f32) -> f32 {
+        float_half_ulp_at(at, 2)
+    }
+}
+
 /// Turing INT8 with a symmetric per-matrix scale: values quantize to
 /// `clamp(round(x / scale), -127, 127)` (saturating, round half away
 /// from zero — the standard CPU quantizer) and are consumed as
@@ -400,7 +440,8 @@ mod tests {
         assert_eq!(Bf16.meta().generation, Generation::Ampere);
         assert_eq!(Tf32.meta().generation, Generation::Ampere);
         assert_eq!(Fp8E4M3.meta().generation, Generation::Hopper);
-        for meta in [F16.meta(), Bf16.meta(), Tf32.meta(), Fp8E4M3.meta()] {
+        assert_eq!(Fp8E5M2.meta().generation, Generation::Hopper);
+        for meta in [F16.meta(), Bf16.meta(), Tf32.meta(), Fp8E4M3.meta(), Fp8E5M2.meta()] {
             assert_eq!(meta.bits, 1 + meta.exp_bits + meta.sig_bits);
             assert_eq!(meta.epsilon, 2f32.powi(-(meta.sig_bits as i32)));
             assert_eq!(meta.accumulator, "f32");
@@ -414,6 +455,7 @@ mod tests {
         assert_eq!(Bf16.quantize(x), bf16_to_f32(f32_to_bf16(x)));
         assert_eq!(Tf32.quantize(x), tf32_to_f32(f32_to_tf32(x)));
         assert_eq!(Fp8E4M3.quantize(x), fp8_to_f32(f32_to_fp8(x)));
+        assert_eq!(Fp8E5M2.quantize(x), fp8e5m2_to_f32(f32_to_fp8e5m2(x)));
         let i8f = Int8 { scale: Scale::new(0.25) };
         assert_eq!(i8f.quantize(x), int8_to_f32(f32_to_int8(x, 0.25), 0.25));
     }
@@ -426,6 +468,7 @@ mod tests {
             (Bf16.half_ulp_at(1.0), Bf16.meta().epsilon),
             (Tf32.half_ulp_at(1.0), Tf32.meta().epsilon),
             (Fp8E4M3.half_ulp_at(1.0), Fp8E4M3.meta().epsilon),
+            (Fp8E5M2.half_ulp_at(1.0), Fp8E5M2.meta().epsilon),
         ] {
             assert_eq!(d, eps / 2.0);
         }

@@ -28,7 +28,7 @@
 //! the read addresses change.  A dense `Op::N` view packs to bitwise
 //! identical panels as the `Matrix` it was borrowed from.
 
-use crate::formats::{bf16_quantize, fp8_quantize, int8_quantize, tf32_quantize, Scale};
+use crate::formats::{bf16_quantize, fp8_quantize, fp8e5m2_quantize, int8_quantize, tf32_quantize, Scale};
 use crate::gemm::{MatRef, Matrix};
 use crate::halfprec::{f16_to_f32, f32_to_f16, Half};
 
@@ -54,6 +54,9 @@ pub enum InputPrecision {
     /// Round once to FP8 E4M3, saturating at ±448 (Hopper;
     /// [`crate::formats::Fp8E4M3`]).
     Fp8Rounded,
+    /// Round once to FP8 E5M2, overflowing to ±∞ (Hopper;
+    /// [`crate::formats::Fp8E5M2`]).
+    Fp8E5M2Rounded,
     /// Symmetric int8 quantization at the given scale: consume
     /// `clamp(round(x/s), ±127) * s` (Turing; [`crate::formats::Int8`]).
     Int8Scaled(Scale),
@@ -67,6 +70,7 @@ fn convert(x: f32, prec: InputPrecision) -> f32 {
         InputPrecision::Bf16Rounded => bf16_quantize(x),
         InputPrecision::Tf32Rounded => tf32_quantize(x),
         InputPrecision::Fp8Rounded => fp8_quantize(x),
+        InputPrecision::Fp8E5M2Rounded => fp8e5m2_quantize(x),
         InputPrecision::Int8Scaled(s) => int8_quantize(x, s.get()),
     }
 }

@@ -20,7 +20,7 @@
 //! against bit for bit (`tests/engine.rs`, `tests/plan.rs`) and the
 //! baselines the hot-path benches compare throughput against.
 
-use crate::formats::{bf16_quantize, fp8_quantize, int8_quantize, tf32_quantize};
+use crate::formats::{bf16_quantize, fp8_quantize, fp8e5m2_quantize, int8_quantize, tf32_quantize};
 use crate::halfprec::{f16_to_f32, f32_to_f16, half_add, half_mul, Half};
 
 use super::plan::{self, GemmDesc, Precision};
@@ -147,6 +147,19 @@ pub fn fp8_gemm_scalar(
     beta: f32,
 ) -> Matrix {
     rounded_gemm_scalar(a, b, c, alpha, beta, fp8_quantize)
+}
+
+/// Scalar oracle of the Hopper FP8 E5M2 path (`Precision::Fp8E5M2`):
+/// inputs rounded once to E5M2 (overflowing to ±∞, real NaN), exact
+/// products, f32 accumulation.
+pub fn fp8e5m2_gemm_scalar(
+    a: &Matrix,
+    b: &Matrix,
+    c: Option<&Matrix>,
+    alpha: f32,
+    beta: f32,
+) -> Matrix {
+    rounded_gemm_scalar(a, b, c, alpha, beta, fp8e5m2_quantize)
 }
 
 /// Scalar oracle of the Turing INT8 path (`Precision::Int8`): inputs
@@ -351,8 +364,11 @@ mod tests {
         let e_tf32 = tf32_gemm_scalar(&a, &b, None, 1.0, 0.0).max_norm_diff(&truth);
         let e_bf16 = bf16_gemm_scalar(&a, &b, None, 1.0, 0.0).max_norm_diff(&truth);
         let e_fp8 = fp8_gemm_scalar(&a, &b, None, 1.0, 0.0).max_norm_diff(&truth);
+        let e_fp8e5m2 = fp8e5m2_gemm_scalar(&a, &b, None, 1.0, 0.0).max_norm_diff(&truth);
         assert!(e_tf32 < e_bf16, "tf32 {e_tf32} vs bf16 {e_bf16}");
         assert!(e_bf16 < e_fp8, "bf16 {e_bf16} vs fp8 {e_fp8}");
+        // on [-1,1] inputs E5M2's 2 significand bits lose to E4M3's 3
+        assert!(e_fp8 < e_fp8e5m2, "fp8e4m3 {e_fp8} vs fp8e5m2 {e_fp8e5m2}");
     }
 
     #[test]

@@ -51,8 +51,8 @@ pub use blocked::sgemm_blocked;
 pub use layout::{MatLayout, MatMut, MatRef, Op, StridedBatch};
 pub use matrix::Matrix;
 pub use mixed::{
-    bf16_gemm_scalar, fp8_gemm_scalar, hgemm, hgemm_scalar, int8_gemm_scalar, mixed_gemm,
-    mixed_gemm_accumulate, mixed_gemm_scalar, sparse24_gemm_scalar, tf32_gemm_scalar,
+    bf16_gemm_scalar, fp8_gemm_scalar, fp8e5m2_gemm_scalar, hgemm, hgemm_scalar, int8_gemm_scalar,
+    mixed_gemm, mixed_gemm_accumulate, mixed_gemm_scalar, sparse24_gemm_scalar, tf32_gemm_scalar,
 };
 pub use naive::{dgemm_naive, sgemm_naive};
 pub use plan::{GemmDesc, GemmPlan, PlanError, Precision, Sparsity};

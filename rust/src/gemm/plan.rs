@@ -107,6 +107,10 @@ pub enum Precision {
     /// Inputs rounded to FP8 E4M3, saturating at ±448 (Hopper FP8
     /// path); oracle: [`crate::gemm::fp8_gemm_scalar`].
     Fp8E4M3,
+    /// Inputs rounded to FP8 E5M2 — binary16's exponent range, 2
+    /// significand bits, real ±∞/NaN (the Hopper FP8 wide-range path);
+    /// oracle: [`crate::gemm::fp8e5m2_gemm_scalar`].
+    Fp8E5M2,
     /// Inputs quantized onto the symmetric int8 grid at `scale`
     /// (Turing INT8 path; [`GemmDesc::build`] rejects non-finite or
     /// non-positive scales with [`PlanError::InvalidScale`]); oracle:
@@ -445,7 +449,7 @@ impl GemmDesc {
             return Err(PlanError::SparsePrecision { precision: self.precision });
         }
         let pool = self.pool.unwrap_or_else(engine::pool_mode);
-        Ok(GemmPlan { desc: self, pool, a: OperandA::Unset, b: OperandB::Unset })
+        Ok(GemmPlan { desc: self, pool, a: OperandA::Unset, b: OperandB::Unset, trace: None })
     }
 
     /// Validate and pack both operands: the one-shot construction every
@@ -527,15 +531,16 @@ enum OperandB {
 }
 
 /// The pack-time rounding of a generation-format precision
-/// (`Bf16`/`Tf32`/`Fp8E4M3`/`Int8` — the modes that store f32 panels
-/// and differ only in where their input grid points are; see
-/// [`crate::formats`]).  `None` for the precisions with their own
+/// (`Bf16`/`Tf32`/`Fp8E4M3`/`Fp8E5M2`/`Int8` — the modes that store
+/// f32 panels and differ only in where their input grid points are;
+/// see [`crate::formats`]).  `None` for the precisions with their own
 /// operand representations (`F32`, `Mixed`/refined, `F16`).
 fn format_rounding(p: Precision) -> Option<InputPrecision> {
     match p {
         Precision::Bf16 => Some(InputPrecision::Bf16Rounded),
         Precision::Tf32 => Some(InputPrecision::Tf32Rounded),
         Precision::Fp8E4M3 => Some(InputPrecision::Fp8Rounded),
+        Precision::Fp8E5M2 => Some(InputPrecision::Fp8E5M2Rounded),
         Precision::Int8 { scale } => Some(InputPrecision::Int8Scaled(scale)),
         _ => None,
     }
@@ -577,12 +582,62 @@ pub struct GemmPlan {
     pool: PoolMode,
     a: OperandA,
     b: OperandB,
+    trace: Option<crate::obs::TraceHandle>,
+}
+
+/// The [`crate::obs`] detail string for a precision's exec spans.
+fn precision_name(p: Precision) -> &'static str {
+    match p {
+        Precision::F32 => "f32",
+        Precision::Mixed => "mixed",
+        Precision::F16 => "f16",
+        Precision::Refined(RefineMode::None) => "refined_none",
+        Precision::Refined(RefineMode::RefineA) => "refine_a",
+        Precision::Refined(RefineMode::RefineAB) => "refine_ab",
+        Precision::Bf16 => "bf16",
+        Precision::Tf32 => "tf32",
+        Precision::Fp8E4M3 => "fp8e4m3",
+        Precision::Fp8E5M2 => "fp8e5m2",
+        Precision::Int8 { .. } => "int8",
+    }
 }
 
 impl GemmPlan {
     /// The descriptor this plan was validated from.
     pub fn desc(&self) -> &GemmDesc {
         &self.desc
+    }
+
+    /// Attach a lifecycle-trace handle: subsequent `set_a`/`set_b`
+    /// packs emit `pack` spans and `execute*` calls emit
+    /// `exec`/`epilogue` spans on the handle's shard track (see
+    /// [`crate::obs`]).  Observation-only — results are bitwise
+    /// unchanged, and with tracing globally disabled the cost is one
+    /// relaxed atomic load per call.
+    pub fn set_trace(&mut self, trace: crate::obs::TraceHandle) {
+        self.trace = Some(trace);
+    }
+
+    /// Span start for the attached trace handle, `None` when tracing
+    /// is off or no handle is attached (the one-relaxed-load fast
+    /// path).
+    fn trace_start(&self) -> Option<std::time::Instant> {
+        match &self.trace {
+            Some(t) if t.enabled() => Some(std::time::Instant::now()),
+            _ => None,
+        }
+    }
+
+    /// Close a span opened by [`GemmPlan::trace_start`].
+    fn trace_span(
+        &self,
+        stage: crate::obs::Stage,
+        detail: &'static str,
+        start: Option<std::time::Instant>,
+    ) {
+        if let (Some(s), Some(tr)) = (start, self.trace.as_ref()) {
+            tr.span_since(0, stage, detail, s);
+        }
     }
 
     /// The pool mode recorded at build time (the descriptor's
@@ -632,6 +687,7 @@ impl GemmPlan {
         if a.logical_shape() != want {
             return Err(PlanError::OperandShape { side: "A", want, got: a.logical_shape() });
         }
+        let t0 = self.trace_start();
         let v = apply_op(a, self.desc.op_a);
         if self.desc.sparsity != Sparsity::Dense {
             // build() already vetted the combination; prune-then-round
@@ -651,6 +707,7 @@ impl GemmPlan {
                 OperandA::Sparse(p) => p.repack_view(&v, prec),
                 slot => *slot = OperandA::Sparse(SparseA::pack_view(&v, prec)),
             }
+            self.trace_span(crate::obs::Stage::Pack, "a", t0);
             return Ok(());
         }
         match self.desc.precision {
@@ -695,6 +752,7 @@ impl GemmPlan {
                 }
             }
         }
+        self.trace_span(crate::obs::Stage::Pack, "a", t0);
         Ok(())
     }
 
@@ -712,6 +770,7 @@ impl GemmPlan {
         if b.logical_shape() != want {
             return Err(PlanError::OperandShape { side: "B", want, got: b.logical_shape() });
         }
+        let t0 = self.trace_start();
         let v = apply_op(b, self.desc.op_b);
         match self.desc.precision {
             Precision::F32 => match &mut self.b {
@@ -764,6 +823,7 @@ impl GemmPlan {
                 }
             }
         }
+        self.trace_span(crate::obs::Stage::Pack, "b", t0);
         Ok(())
     }
 
@@ -785,7 +845,8 @@ impl GemmPlan {
         }
         let ceff = if self.desc.beta == 0.0 { None } else { c };
         let (alpha, beta, t) = (self.desc.alpha, self.desc.beta, self.desc.threads);
-        match (&self.a, &self.b) {
+        let t0 = self.trace_start();
+        let out = match (&self.a, &self.b) {
             (OperandA::Unset, _) => Err(PlanError::OperandMissing { side: "A" }),
             (_, OperandB::Unset) => Err(PlanError::OperandMissing { side: "B" }),
             (OperandA::Full(pa), OperandB::Full(pb))
@@ -805,7 +866,13 @@ impl GemmPlan {
                 Ok(self.epilogue(self.refined_sum(t), ceff))
             }
             _ => unreachable!("operand variants always agree with the plan precision"),
+        };
+        // single-GEMM epilogues are fused into the kernel (or the
+        // epilogue() call above), so one exec span covers both
+        if out.is_ok() {
+            self.trace_span(crate::obs::Stage::Exec, precision_name(self.desc.precision), t0);
         }
+        out
     }
 
     /// Execute into a caller-provided output buffer (shape-checked); the
@@ -992,6 +1059,7 @@ impl GemmPlan {
         let ae: Vec<MatRef<'_>> = a.iter().map(|v| apply_op(v, op_a)).collect();
         let be: Vec<MatRef<'_>> = b.iter().map(|v| apply_op(v, op_b)).collect();
         let t = self.desc.threads;
+        let t0 = self.trace_start();
         let raw = if self.desc.sparsity != Sparsity::Dense {
             let prec = engine_rounding(self.desc.precision)
                 .expect("sparse descriptors validate their precision at build time");
@@ -1024,15 +1092,19 @@ impl GemmPlan {
                 }
             }
         };
+        self.trace_span(crate::obs::Stage::Exec, precision_name(self.desc.precision), t0);
+        let te = self.trace_start();
         let beta = self.desc.beta;
-        Ok(raw
+        let out: Vec<Matrix> = raw
             .into_iter()
             .enumerate()
             .map(|(i, prod)| {
                 let ce = if beta == 0.0 { None } else { c.map(|cs| &cs[i]) };
                 self.epilogue(prod, ce)
             })
-            .collect())
+            .collect();
+        self.trace_span(crate::obs::Stage::Epilogue, "batched", te);
+        Ok(out)
     }
 
     /// Strided batched execution — the `cublasGemmStridedBatched` call
@@ -1394,6 +1466,7 @@ mod tests {
             Precision::Bf16,
             Precision::Tf32,
             Precision::Fp8E4M3,
+            Precision::Fp8E5M2,
             Precision::Int8 { scale: Scale::default() },
         ] {
             let p = GemmDesc::square(8).precision(prec).epilogue(1.5, 0.0).plan(&a, &b).unwrap();
@@ -1447,6 +1520,7 @@ mod tests {
             Precision::Bf16,
             Precision::Tf32,
             Precision::Fp8E4M3,
+            Precision::Fp8E5M2,
             Precision::Int8 { scale: Scale::default() },
         ] {
             for s in [Sparsity::Sparse24, Sparsity::Sparse24Strict] {

@@ -81,7 +81,12 @@
 //!   their §V Eq. 1–3 chains on the engine pool), gathered as borrowed
 //!   views with zero per-entry clones (observable through the
 //!   `engine_view_bytes` metric), so CPU fallback is
-//!   non-square traffic only.
+//!   non-square traffic only.  The [`obs`] subsystem traces the full
+//!   request lifecycle (`admit → queued → bucketed → flush → pack →
+//!   exec → epilogue → reply`) into per-shard bounded rings behind a
+//!   1-in-N sampler, exporting Perfetto-loadable Chrome traces and a
+//!   per-stage latency breakdown — observation-only, so every reply
+//!   stays bitwise identical with tracing on or off.
 //!
 //! ## Guides
 //!
@@ -97,7 +102,9 @@
 //!   full runs, and the ROADMAP acceptance bar.
 //! * [`docs::serving`] — the coordinator's overload contract: admission
 //!   control, deadlines, typed shedding, reply-delivery totality, the
-//!   open-loop replay harness, and the `BENCH_serving.json` schema.
+//!   open-loop replay harness, the request-lifecycle tracing contract
+//!   (sampling, bounded rings, Perfetto export), and the
+//!   `BENCH_serving.json` schema.
 //!
 //! Quickstart: `make artifacts && cargo run --release --example quickstart`
 //! (from `rust/`).
@@ -127,6 +134,7 @@ pub mod formats;
 pub mod gemm;
 pub mod halfprec;
 pub mod interfaces;
+pub mod obs;
 pub mod precision;
 pub mod runtime;
 pub mod sim;

@@ -10,9 +10,13 @@
 //! repro serve --requests N [...]     run the GEMM service on a trace
 //! repro serve-replay [...]           open-loop burst replay -> BENCH_serving.json
 //!                                    (--shards N --submitters M: sharded intake;
-//!                                     --mode bf16|tf32|fp8e4m3|int8|sparse24|
-//!                                     refine_a|refine_ab pins every request's
-//!                                     precision; --sparse = --mode sparse24)
+//!                                     --mode bf16|tf32|fp8e4m3|fp8e5m2|int8|
+//!                                     sparse24|refine_a|refine_ab pins every
+//!                                     request's precision; --sparse = --mode
+//!                                     sparse24; --trace out.json exports a
+//!                                     Chrome/Perfetto trace, --summary prints
+//!                                     the per-stage latency breakdown,
+//!                                     --trace-sample N records 1-in-N requests)
 //! ```
 
 use std::collections::BTreeMap;
@@ -33,8 +37,15 @@ use tensoremu::util::json::Json;
 use tensoremu::workload::{replay, uniform_matrix, ReplayConfig, RequestTrace, Rng, TraceSpec};
 
 fn main() {
-    let args =
-        Args::from_env(&["headline", "large", "verbose", "engine-only", "expect-shed", "sparse"]);
+    let args = Args::from_env(&[
+        "headline",
+        "large",
+        "verbose",
+        "engine-only",
+        "expect-shed",
+        "sparse",
+        "summary",
+    ]);
     let cmd = args.positional(0).unwrap_or("info").to_string();
     let code = match run(&cmd, &args) {
         Ok(()) => 0,
@@ -241,6 +252,19 @@ fn serve_replay(args: &Args) -> Result<()> {
         }
     };
 
+    // tracing: `--trace out.json` exports Chrome trace-event JSON,
+    // `--summary` prints the per-stage breakdown; either turns the
+    // sink on.  `--trace-sample N` records 1-in-N requests (default 1:
+    // capture everything, which is what the accounting checks need).
+    let trace_out = args.opt("trace");
+    let summary = args.flag("summary");
+    let tracing = trace_out.is_some() || summary;
+    let trace_sample: usize = args.opt_parse("trace-sample").unwrap_or(1);
+    if tracing {
+        anyhow::ensure!(trace_sample >= 1, "--trace-sample must be >= 1");
+        tensoremu::obs::set_sampling(trace_sample);
+    }
+
     let cfg = CoordinatorConfig {
         tile,
         queue_cap,
@@ -249,6 +273,7 @@ fn serve_replay(args: &Args) -> Result<()> {
             max_wait: Duration::from_micros(max_wait_us),
             ..Default::default()
         },
+        trace: tracing.then(tensoremu::obs::TraceConfig::default),
         ..Default::default()
     };
     let coord = if engine_only {
@@ -284,6 +309,44 @@ fn serve_replay(args: &Args) -> Result<()> {
     println!("{}", report.summary());
     println!("{}", coord.metrics_snapshot().report());
 
+    // drain the trace sink before shutdown: per-stage breakdown (the
+    // additive bench.serving.v3 fields + --summary table) and the
+    // Chrome/Perfetto export (--trace out.json)
+    let sink = coord.trace_sink();
+    let breakdown = sink.as_ref().map(|s| s.breakdown());
+    if summary {
+        let b = breakdown.as_ref().expect("--summary turned the sink on");
+        println!("\nper-stage breakdown (sampled 1-in-{trace_sample}):");
+        println!("{}", b.render());
+    }
+    if let Some(path) = trace_out {
+        let s = sink.as_ref().expect("--trace turned the sink on");
+        let doc = s.chrome_json();
+        // the export must be loadable: re-parse what we serialize and
+        // check the accounting block matches the sink exactly
+        let text = format!("{doc}");
+        let parsed = Json::parse(&text).context("chrome trace JSON round-trip")?;
+        let n_events = parsed
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .map_or(0, <[Json]>::len);
+        anyhow::ensure!(n_events > 0, "trace export contains no events");
+        let accounted = parsed
+            .get("tensoremu")
+            .and_then(|t| t.get("events"))
+            .and_then(Json::as_usize);
+        anyhow::ensure!(
+            accounted == Some(s.events().len()),
+            "trace accounting block disagrees with the sink ({accounted:?} vs {})",
+            s.events().len()
+        );
+        std::fs::write(path, format!("{text}\n")).with_context(|| format!("writing {path}"))?;
+        println!(
+            "wrote {path} ({n_events} trace events, {} dropped; load in Perfetto / chrome://tracing)",
+            s.dropped()
+        );
+    }
+
     let mut workload = BTreeMap::new();
     workload.insert("requests".to_string(), Json::Num(count as f64));
     workload.insert("rate_rps".to_string(), Json::Num(rate));
@@ -307,10 +370,34 @@ fn serve_replay(args: &Args) -> Result<()> {
     service.insert("shards".to_string(), Json::Num(resolved_shards as f64));
     let mut top = BTreeMap::new();
     top.insert("bench".to_string(), Json::Str("serving".to_string()));
-    top.insert("schema".to_string(), Json::Str("bench.serving.v2".to_string()));
+    // v3 = v2 + the additive observability fields below (`stages`,
+    // `trace`); every v2 key is unchanged
+    top.insert("schema".to_string(), Json::Str("bench.serving.v3".to_string()));
     top.insert("workload".to_string(), Json::Obj(workload));
     top.insert("coordinator".to_string(), Json::Obj(service));
     top.insert("results".to_string(), report.to_json());
+    // bench.serving.v3: per-stage latency percentiles merged across
+    // shards, plus the sink's exact sampling/drop accounting (Null when
+    // the replay ran untraced)
+    top.insert(
+        "stages".to_string(),
+        breakdown.as_ref().map_or(Json::Null, tensoremu::obs::StageBreakdown::to_json),
+    );
+    top.insert(
+        "trace".to_string(),
+        sink.as_ref().map_or(Json::Null, |s| {
+            let mut t = BTreeMap::new();
+            t.insert("sampling".to_string(), Json::Num(trace_sample as f64));
+            t.insert("events".to_string(), Json::Num(s.events().len() as f64));
+            t.insert(
+                "dropped".to_string(),
+                Json::Arr(
+                    s.dropped_per_shard().iter().map(|&d| Json::Num(d as f64)).collect(),
+                ),
+            );
+            Json::Obj(t)
+        }),
+    );
     let doc = Json::Obj(top);
     if let Some(out) = args.opt("out") {
         std::fs::write(out, format!("{doc}\n")).with_context(|| format!("writing {out}"))?;
@@ -348,6 +435,7 @@ fn parse_mode(name: &str, args: &Args) -> Result<PrecisionMode> {
         "bf16" => PrecisionMode::Bf16,
         "tf32" => PrecisionMode::Tf32,
         "fp8" | "fp8e4m3" => PrecisionMode::Fp8E4M3,
+        "fp8e5m2" => PrecisionMode::Fp8E5M2,
         "int8" => {
             let scale = match args.opt_parse::<f32>("int8-scale") {
                 Some(s) => Scale::new(s),
@@ -359,7 +447,7 @@ fn parse_mode(name: &str, args: &Args) -> Result<PrecisionMode> {
         "sparse24" => PrecisionMode::Sparse24,
         other => anyhow::bail!(
             "unknown mode {other:?} \
-             (try policy|none|refine_a|refine_ab|bf16|tf32|fp8e4m3|int8|sparse24)"
+             (try policy|none|refine_a|refine_ab|bf16|tf32|fp8e4m3|fp8e5m2|int8|sparse24)"
         ),
     })
 }

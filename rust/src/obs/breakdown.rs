@@ -1,0 +1,181 @@
+//! Per-stage latency aggregation: the `--summary` table and the
+//! `bench.serving.v3` stage fields.
+
+use super::{Stage, TraceEvent};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One stage's aggregate row: event count and latency percentiles in
+/// microseconds.  Instant events contribute zero-length samples, so a
+/// stage that only ever emits instants reports zero percentiles but a
+/// meaningful count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StageRow {
+    pub stage: Stage,
+    pub count: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+}
+
+/// Per-stage latency histogram summary over a trace: p50/p95/p99 per
+/// stage, computed over the **union** of samples across every shard
+/// and worker — the same merge semantics as
+/// [`Metrics::merged_snapshot`](crate::coordinator::Metrics::merged_snapshot)
+/// (union percentiles, not averages of per-shard percentiles, which
+/// would be statistically meaningless).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageBreakdown {
+    /// One row per stage that recorded at least one event, in
+    /// lifecycle order ([`Stage::ALL`]).
+    pub rows: Vec<StageRow>,
+    /// Total retained events the rows summarize.
+    pub events: u64,
+    /// Events lost to ring overflow (visible here so a truncated
+    /// trace can never masquerade as a complete one).
+    pub dropped: u64,
+}
+
+/// The percentile-pick rule shared with the serving metrics: nearest
+/// rank over the sorted union, `idx = round(p * (len-1))`.
+fn pick(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((p * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+impl StageBreakdown {
+    /// Aggregate a flat event list (already merged across shards —
+    /// [`TraceSink::events`](super::TraceSink::events) is the usual
+    /// source) plus the sink's overflow count.
+    pub fn from_events(events: &[TraceEvent], dropped: u64) -> StageBreakdown {
+        let mut by_stage: BTreeMap<Stage, Vec<u64>> = BTreeMap::new();
+        for ev in events {
+            by_stage.entry(ev.stage).or_default().push(ev.dur_us);
+        }
+        let mut rows = Vec::new();
+        for stage in Stage::ALL {
+            let Some(durs) = by_stage.get_mut(&stage) else { continue };
+            durs.sort_unstable();
+            rows.push(StageRow {
+                stage,
+                count: durs.len() as u64,
+                p50_us: pick(durs, 0.50),
+                p95_us: pick(durs, 0.95),
+                p99_us: pick(durs, 0.99),
+            });
+        }
+        StageBreakdown { rows, events: events.len() as u64, dropped }
+    }
+
+    /// The row for `stage`, if it recorded any events.
+    pub fn row(&self, stage: Stage) -> Option<&StageRow> {
+        self.rows.iter().find(|r| r.stage == stage)
+    }
+
+    /// Render as an aligned text table (the `serve-replay --summary`
+    /// output): stage, count, p50/p95/p99 in microseconds, plus a
+    /// footer with the totals and the drop count.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<10} {:>8} {:>10} {:>10} {:>10}\n",
+            "stage", "count", "p50(us)", "p95(us)", "p99(us)"
+        ));
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{:<10} {:>8} {:>10} {:>10} {:>10}\n",
+                r.stage.name(),
+                r.count,
+                r.p50_us,
+                r.p95_us,
+                r.p99_us
+            ));
+        }
+        out.push_str(&format!("events: {}  dropped: {}\n", self.events, self.dropped));
+        out
+    }
+
+    /// The additive `bench.serving.v3` representation: stage rows plus
+    /// the event/drop totals.
+    pub fn to_json(&self) -> Json {
+        let mut top = BTreeMap::new();
+        top.insert("events".to_string(), Json::Num(self.events as f64));
+        top.insert("dropped".to_string(), Json::Num(self.dropped as f64));
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("stage".to_string(), Json::Str(r.stage.name().to_string()));
+                o.insert("count".to_string(), Json::Num(r.count as f64));
+                o.insert("p50_us".to_string(), Json::Num(r.p50_us as f64));
+                o.insert("p95_us".to_string(), Json::Num(r.p95_us as f64));
+                o.insert("p99_us".to_string(), Json::Num(r.p99_us as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        top.insert("stages".to_string(), Json::Arr(rows));
+        Json::Obj(top)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(stage: Stage, dur_us: u64) -> TraceEvent {
+        TraceEvent { id: 0, stage, detail: "", shard: 0, worker: 0, start_us: 0, dur_us }
+    }
+
+    #[test]
+    fn empty_trace_has_no_rows() {
+        let b = StageBreakdown::from_events(&[], 0);
+        assert!(b.rows.is_empty());
+        assert_eq!(b.events, 0);
+        assert!(b.render().contains("events: 0  dropped: 0"));
+    }
+
+    #[test]
+    fn percentiles_follow_the_metrics_pick_rule() {
+        // 1..=100us: idx(p50) = round(0.5*99) = 50 -> 51us; p95 -> 95us; p99 -> 99us
+        let events: Vec<TraceEvent> = (1..=100).map(|d| ev(Stage::Exec, d)).collect();
+        let b = StageBreakdown::from_events(&events, 0);
+        let r = b.row(Stage::Exec).expect("exec row");
+        assert_eq!((r.count, r.p50_us, r.p95_us, r.p99_us), (100, 51, 95, 99));
+    }
+
+    #[test]
+    fn rows_come_out_in_lifecycle_order() {
+        let events = [ev(Stage::Reply, 5), ev(Stage::Admit, 0), ev(Stage::Exec, 3)];
+        let b = StageBreakdown::from_events(&events, 2);
+        let order: Vec<Stage> = b.rows.iter().map(|r| r.stage).collect();
+        assert_eq!(order, [Stage::Admit, Stage::Exec, Stage::Reply]);
+        assert_eq!(b.dropped, 2);
+    }
+
+    #[test]
+    fn json_shape_is_stable_and_parseable() {
+        let b = StageBreakdown::from_events(&[ev(Stage::Reply, 7)], 1);
+        let text = b.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&text).expect("round-trips");
+        assert_eq!(parsed.get("dropped").and_then(Json::as_usize), Some(1));
+        let stages = parsed.get("stages").and_then(Json::as_arr).expect("stages arr");
+        assert_eq!(stages.len(), 1);
+        assert_eq!(stages[0].get("stage").and_then(Json::as_str), Some("reply"));
+        assert_eq!(stages[0].get("p50_us").and_then(Json::as_usize), Some(7));
+    }
+
+    #[test]
+    fn render_aligns_columns() {
+        let b = StageBreakdown::from_events(&[ev(Stage::Admit, 0), ev(Stage::Reply, 12)], 0);
+        let table = b.render();
+        let lines: Vec<&str> = table.lines().collect();
+        assert_eq!(lines.len(), 4, "header + 2 rows + footer");
+        assert!(lines[0].starts_with("stage"));
+        // every data line is the same width as the header line
+        assert!(lines[1..3].iter().all(|l| l.len() == lines[0].len()));
+    }
+}

@@ -1,0 +1,145 @@
+//! Chrome trace-event JSON export (the format `chrome://tracing` and
+//! [Perfetto](https://ui.perfetto.dev) load directly).
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+
+use super::TraceEvent;
+use crate::util::json::Json;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Render events as a Chrome trace-event document: one *process* track
+/// per intake shard (`pid` = shard, named `shard-N`) and one *thread*
+/// track per worker within it (`tid` = worker, named `worker-N`), so a
+/// flush worker's flush → pack → exec → epilogue spans stack on its own
+/// lane in Perfetto.  Spans are `"X"` (complete) events in microseconds
+/// on the sink's epoch timeline; instants are `"i"` thread-scoped
+/// events.  The non-standard top-level `tensoremu` block carries the
+/// exact per-shard `dropped` counts and the sampling rate, so a
+/// truncated or sampled trace is always labeled as such (viewers ignore
+/// unknown top-level keys).
+pub fn chrome_trace(events: &[TraceEvent], dropped_per_shard: &[u64], sampling: usize) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+
+    // metadata: name every shard process and worker thread once
+    let shards: BTreeSet<u32> = events.iter().map(|e| e.shard).collect();
+    for shard in &shards {
+        out.push(obj(vec![
+            ("ph", Json::Str("M".to_string())),
+            ("name", Json::Str("process_name".to_string())),
+            ("pid", Json::Num(*shard as f64)),
+            ("args", obj(vec![("name", Json::Str(format!("shard-{shard}")))])),
+        ]));
+    }
+    let tracks: BTreeSet<(u32, u32)> = events.iter().map(|e| (e.shard, e.worker)).collect();
+    for (shard, worker) in &tracks {
+        out.push(obj(vec![
+            ("ph", Json::Str("M".to_string())),
+            ("name", Json::Str("thread_name".to_string())),
+            ("pid", Json::Num(*shard as f64)),
+            ("tid", Json::Num(*worker as f64)),
+            ("args", obj(vec![("name", Json::Str(format!("worker-{worker}")))])),
+        ]));
+    }
+
+    for ev in events {
+        let mut pairs = vec![
+            ("name", Json::Str(ev.stage.name().to_string())),
+            ("cat", Json::Str("tensoremu".to_string())),
+            ("pid", Json::Num(ev.shard as f64)),
+            ("tid", Json::Num(ev.worker as f64)),
+            ("ts", Json::Num(ev.start_us as f64)),
+            (
+                "args",
+                obj(vec![
+                    ("id", Json::Num(ev.id as f64)),
+                    ("detail", Json::Str(ev.detail.to_string())),
+                ]),
+            ),
+        ];
+        if ev.dur_us > 0 {
+            pairs.push(("ph", Json::Str("X".to_string())));
+            pairs.push(("dur", Json::Num(ev.dur_us as f64)));
+        } else {
+            pairs.push(("ph", Json::Str("i".to_string())));
+            pairs.push(("s", Json::Str("t".to_string())));
+        }
+        out.push(obj(pairs));
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(out));
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    top.insert(
+        "tensoremu".to_string(),
+        obj(vec![
+            ("events", Json::Num(events.len() as f64)),
+            (
+                "dropped",
+                Json::Arr(dropped_per_shard.iter().map(|d| Json::Num(*d as f64)).collect()),
+            ),
+            ("sampling", Json::Num(sampling as f64)),
+        ]),
+    );
+    Json::Obj(top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Stage;
+    use super::*;
+
+    fn ev(stage: Stage, shard: u32, worker: u32, dur_us: u64) -> TraceEvent {
+        TraceEvent { id: 3, stage, detail: "cap", shard, worker, start_us: 10, dur_us }
+    }
+
+    #[test]
+    fn export_parses_with_our_own_json() {
+        let doc = chrome_trace(
+            &[ev(Stage::Flush, 0, 1, 50), ev(Stage::Admit, 1, 2, 0)],
+            &[4, 0],
+            2,
+        );
+        let parsed = Json::parse(&doc.to_string()).expect("chrome export is valid JSON");
+        let evs = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        // 2 process_name + 2 thread_name + 2 data events
+        assert_eq!(evs.len(), 6);
+        let meta = parsed.get("tensoremu").expect("accounting block");
+        assert_eq!(meta.get("sampling").and_then(Json::as_usize), Some(2));
+        let dropped = meta.get("dropped").and_then(Json::as_arr).unwrap();
+        assert_eq!(dropped[0].as_usize(), Some(4));
+    }
+
+    #[test]
+    fn spans_are_complete_events_and_instants_are_instants() {
+        let doc = chrome_trace(&[ev(Stage::Exec, 0, 0, 7), ev(Stage::Shed, 0, 0, 0)], &[0], 1);
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let evs = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let span = evs.iter().find(|e| e.get("name").and_then(Json::as_str) == Some("exec"));
+        let span = span.expect("exec span present");
+        assert_eq!(span.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(span.get("dur").and_then(Json::as_usize), Some(7));
+        let inst = evs.iter().find(|e| e.get("name").and_then(Json::as_str) == Some("shed"));
+        let inst = inst.expect("shed instant present");
+        assert_eq!(inst.get("ph").and_then(Json::as_str), Some("i"));
+        assert!(inst.get("dur").is_none());
+    }
+
+    #[test]
+    fn tracks_key_on_shard_and_worker() {
+        let doc = chrome_trace(&[ev(Stage::Exec, 2, 9, 1)], &[0, 0, 0], 1);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let data = evs.iter().find(|e| e.get("cat").is_some()).expect("data event");
+        assert_eq!(data.get("pid").and_then(Json::as_usize), Some(2));
+        assert_eq!(data.get("tid").and_then(Json::as_usize), Some(9));
+        let named = evs.iter().any(|e| {
+            e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str) == Some("shard-2")
+        });
+        assert!(named, "shard process is named for the viewer");
+    }
+}

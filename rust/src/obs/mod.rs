@@ -1,0 +1,391 @@
+//! Request-lifecycle tracing and per-stage profiling — the serving
+//! stack's observability layer.
+//!
+//! The paper's performance story (§IV, Figs. 4–7) is a *breakdown*
+//! story: where cycles go across pack, MMA and epilogue.  The serving
+//! stack (PRs 6–7) measured only aggregate counters and end-to-end
+//! percentiles, so a slow replay was undiagnosable — queueing,
+//! bucketing, packing and kernel time were indistinguishable.  This
+//! module adds the stage-level instrumentation that turns throughput
+//! numbers into explanations, the way "Dissecting Tensor Cores via
+//! Microbenchmarks" (arXiv 2206.02874) does for the real hardware.
+//!
+//! ## Pieces
+//!
+//! * [`TraceSink`] — per-shard bounded ring buffers of [`TraceEvent`]s
+//!   with monotonic timestamps from a single [`std::time::Instant`]
+//!   epoch.  Overflow increments a visible `dropped` counter per shard
+//!   (never silently truncates, never blocks the hot path).
+//! * [`Stage`] — the span vocabulary covering the full request life:
+//!   `admit → queued → bucketed → flush{trigger} → pack → exec →
+//!   epilogue → reply`, plus the direct/fallback route markers and the
+//!   shed/deadline/error/shutdown terminals.
+//! * A **process-global enable flag + 1-in-N sampler**
+//!   ([`set_sampling`] / [`sampling`]): with tracing disabled the hot
+//!   path pays exactly one relaxed atomic load per emission site.
+//!   Request-scoped events sample by request id (`id % N == 0`), so at
+//!   `N = 1` every admitted request is captured.
+//! * Exporters — [`chrome_trace`] renders the Chrome trace-event JSON
+//!   Perfetto loads (`pid` = intake shard, `tid` = worker track), and
+//!   [`StageBreakdown`] aggregates per-stage latency percentiles
+//!   merged across shards over the **union** of samples, exactly like
+//!   [`Metrics::merged_snapshot`](crate::coordinator::Metrics::merged_snapshot).
+//!
+//! ## The overhead and numerics contract
+//!
+//! Tracing is observation-only: no span emission reads or writes an
+//! operand, a packed panel or a result, so every reply is **bitwise
+//! identical** with tracing on or off, at every worker count and pool
+//! mode (`tests/obs.rs` pins this).  Span accounting obeys the PR 6
+//! totality identity: with nothing dropped, admit events equal
+//! terminal events (`reply + shed + deadline + error + shutdown`), and
+//! ring overflow is accounted exactly by the `dropped` counters.
+//!
+//! Like [`Metrics`](crate::coordinator::Metrics), the sink is
+//! poison-tolerant: a worker that panics mid-span cannot wedge export
+//! (`PoisonError::into_inner` everywhere a ring lock is taken).
+
+mod breakdown;
+mod chrome;
+mod sink;
+
+pub use breakdown::{StageBreakdown, StageRow};
+pub use chrome::chrome_trace;
+pub use sink::{TraceConfig, TraceSink};
+
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One stage of the request lifecycle — the span vocabulary.  Ordered
+/// by lifecycle position; the breakdown table reports rows in this
+/// order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Stage {
+    /// A request entered `submit` (emitted before the admission
+    /// decision, so admits count sheds too — the totality identity's
+    /// left-hand side).
+    Admit,
+    /// Time from enqueue to dispatch/flush on an intake queue or
+    /// batcher (span; the queueing-delay component of latency).
+    Queued,
+    /// The dispatcher routed the request into a shape/mode bucket or
+    /// batch slot (instant; detail names the lane).
+    Bucketed,
+    /// A batch or bucket flushed and executed (span over the worker's
+    /// whole execution; detail names the trigger: capacity, age,
+    /// deadline, shutdown).
+    Flush,
+    /// Operand packing (plan `set_a`/`set_b`; detail names the side).
+    Pack,
+    /// Kernel execution (plan `execute*`; detail names the precision).
+    Exec,
+    /// The per-entry epilogue post-pass of a batched execution.
+    Epilogue,
+    /// A reply was delivered (span from submit to delivery — the
+    /// end-to-end latency; terminal).
+    Reply,
+    /// The request routed to the dedicated-artifact direct lane
+    /// (instant route marker).
+    Direct,
+    /// The request routed to the one-shot CPU fallback lane (instant
+    /// route marker).
+    Fallback,
+    /// Admission control rejected the request (terminal).
+    Shed,
+    /// The deadline expired before execution (terminal).
+    Deadline,
+    /// A typed error reply — worker panic or execution failure
+    /// (terminal).
+    Error,
+    /// The service shut down before the request ran (terminal).
+    Shutdown,
+    /// Harness-side span (the replay driver's submit/collect windows).
+    Harness,
+}
+
+impl Stage {
+    /// Every stage, in lifecycle order.
+    pub const ALL: [Stage; 15] = [
+        Stage::Admit,
+        Stage::Queued,
+        Stage::Bucketed,
+        Stage::Flush,
+        Stage::Pack,
+        Stage::Exec,
+        Stage::Epilogue,
+        Stage::Reply,
+        Stage::Direct,
+        Stage::Fallback,
+        Stage::Shed,
+        Stage::Deadline,
+        Stage::Error,
+        Stage::Shutdown,
+        Stage::Harness,
+    ];
+
+    /// Short lowercase name (the Chrome-trace event name and the
+    /// breakdown table's row label).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admit => "admit",
+            Stage::Queued => "queued",
+            Stage::Bucketed => "bucketed",
+            Stage::Flush => "flush",
+            Stage::Pack => "pack",
+            Stage::Exec => "exec",
+            Stage::Epilogue => "epilogue",
+            Stage::Reply => "reply",
+            Stage::Direct => "direct",
+            Stage::Fallback => "fallback",
+            Stage::Shed => "shed",
+            Stage::Deadline => "deadline",
+            Stage::Error => "error",
+            Stage::Shutdown => "shutdown",
+            Stage::Harness => "harness",
+        }
+    }
+
+    /// Is this a terminal stage — one of the exactly-one-reply
+    /// outcomes the totality identity counts?
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            Stage::Reply | Stage::Shed | Stage::Deadline | Stage::Error | Stage::Shutdown
+        )
+    }
+}
+
+impl std::fmt::Display for Stage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One recorded span or instant event.  Timestamps are microseconds
+/// since the owning sink's epoch; `dur_us == 0` marks an instant
+/// event.  `detail` is a `&'static str` so emission never allocates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Request id for request-scoped events; 0 for plan/batch/harness
+    /// spans with no single owning request.
+    pub id: u64,
+    pub stage: Stage,
+    /// Free-form qualifier: the flush trigger, the routed lane, the
+    /// precision name, the packed side.
+    pub detail: &'static str,
+    /// Intake shard (the Chrome-trace `pid` track).
+    pub shard: u32,
+    /// Worker track within the shard (the Chrome-trace `tid`; see
+    /// [`worker_track`]).
+    pub worker: u32,
+    /// Start, in microseconds since the sink epoch.
+    pub start_us: u64,
+    /// Span duration in microseconds (0 = instant event).
+    pub dur_us: u64,
+}
+
+/// Process-global sampling knob: `0` disables tracing entirely, `N >= 1`
+/// records request-scoped events for every N-th request id.  The
+/// disabled fast path is one relaxed load of this value.
+static SAMPLE_N: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the global sampling rate: `0` = tracing off (the default),
+/// `1` = capture everything, `N` = 1-in-N request sampling.
+pub fn set_sampling(n: usize) {
+    SAMPLE_N.store(n, Ordering::Relaxed);
+}
+
+/// The current global sampling rate (`0` = off).
+pub fn sampling() -> usize {
+    SAMPLE_N.load(Ordering::Relaxed)
+}
+
+/// Is tracing globally enabled?  One relaxed atomic load — the entire
+/// cost of a disabled emission site.
+pub fn tracing_enabled() -> bool {
+    sampling() > 0
+}
+
+/// Should a request-scoped event for `id` be recorded under the current
+/// sampling rate?
+pub fn sample(id: u64) -> bool {
+    match sampling() {
+        0 => false,
+        n => id % n as u64 == 0,
+    }
+}
+
+static NEXT_WORKER: AtomicU32 = AtomicU32::new(0);
+
+thread_local! {
+    static WORKER_TRACK: std::cell::Cell<Option<u32>> = const { std::cell::Cell::new(None) };
+}
+
+/// The calling thread's stable worker-track id, assigned lazily from a
+/// process-global counter.  Every emission from one OS thread lands on
+/// one `tid` track in the Chrome export, so a flush worker's flush /
+/// pack / exec / epilogue spans nest visually on its own lane.
+pub fn worker_track() -> u32 {
+    WORKER_TRACK.with(|w| match w.get() {
+        Some(id) => id,
+        None => {
+            let id = NEXT_WORKER.fetch_add(1, Ordering::Relaxed);
+            w.set(Some(id));
+            id
+        }
+    })
+}
+
+/// A shard-scoped handle to a [`TraceSink`] — what the coordinator
+/// threads through its dispatchers, workers and cached plans.  Cloning
+/// is an `Arc` bump.
+#[derive(Clone, Debug)]
+pub struct TraceHandle {
+    sink: Arc<TraceSink>,
+    shard: u32,
+}
+
+impl TraceHandle {
+    pub fn new(sink: Arc<TraceSink>, shard: u32) -> TraceHandle {
+        TraceHandle { sink, shard }
+    }
+
+    /// The underlying sink.
+    pub fn sink(&self) -> &Arc<TraceSink> {
+        &self.sink
+    }
+
+    /// The shard this handle stamps on its events.
+    pub fn shard(&self) -> u32 {
+        self.shard
+    }
+
+    /// One relaxed load: is tracing globally on?
+    pub fn enabled(&self) -> bool {
+        tracing_enabled()
+    }
+
+    /// Record an instant event for request `id` (subject to sampling).
+    pub fn instant(&self, id: u64, stage: Stage, detail: &'static str) {
+        if !sample(id) {
+            return;
+        }
+        self.sink.push(TraceEvent {
+            id,
+            stage,
+            detail,
+            shard: self.shard,
+            worker: worker_track(),
+            start_us: self.sink.now_us(),
+            dur_us: 0,
+        });
+    }
+
+    /// Record a span that started at `start` and ends now (subject to
+    /// sampling).
+    pub fn span_since(&self, id: u64, stage: Stage, detail: &'static str, start: Instant) {
+        if !sample(id) {
+            return;
+        }
+        let dur_us = start.elapsed().as_micros() as u64;
+        let start_us = self.sink.us_at(start);
+        self.sink.push(TraceEvent {
+            id,
+            stage,
+            detail,
+            shard: self.shard,
+            worker: worker_track(),
+            start_us,
+            dur_us,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    // global-sampling tests serialize on one lock (the knob is
+    // process-global); PoisonError::into_inner keeps a failed test
+    // from wedging the rest
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn stage_names_and_terminals() {
+        assert_eq!(Stage::Admit.name(), "admit");
+        assert_eq!(Stage::Flush.to_string(), "flush");
+        assert_eq!(Stage::ALL.len(), 15);
+        let terminals: Vec<Stage> = Stage::ALL.iter().copied().filter(|s| s.is_terminal()).collect();
+        assert_eq!(
+            terminals,
+            [Stage::Reply, Stage::Shed, Stage::Deadline, Stage::Error, Stage::Shutdown]
+        );
+        // every name is distinct (the breakdown keys rows by it)
+        let mut names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Stage::ALL.len());
+    }
+
+    #[test]
+    fn sampler_gates_by_id() {
+        let _g = LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        set_sampling(0);
+        assert!(!tracing_enabled());
+        assert!(!sample(0));
+        assert!(!sample(7));
+        set_sampling(1);
+        assert!(tracing_enabled());
+        assert!(sample(0) && sample(1) && sample(u64::MAX));
+        set_sampling(4);
+        assert!(sample(0) && sample(8));
+        assert!(!sample(1) && !sample(7));
+        set_sampling(0);
+    }
+
+    #[test]
+    fn worker_tracks_are_stable_per_thread_and_distinct_across() {
+        let here = worker_track();
+        assert_eq!(worker_track(), here, "same thread, same track");
+        let there = std::thread::spawn(worker_track).join().unwrap();
+        assert_ne!(here, there, "different threads get different tracks");
+    }
+
+    #[test]
+    fn handle_respects_sampling() {
+        let _g = LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let sink = Arc::new(TraceSink::for_shards(2, 16));
+        let h = TraceHandle::new(Arc::clone(&sink), 1);
+        set_sampling(0);
+        h.instant(1, Stage::Admit, "");
+        assert!(sink.events().is_empty(), "disabled sink records nothing");
+        set_sampling(2);
+        h.instant(1, Stage::Admit, "");
+        h.instant(2, Stage::Admit, "");
+        set_sampling(0);
+        let evs = sink.events();
+        assert_eq!(evs.len(), 1, "1-in-2 sampling keeps even ids only");
+        assert_eq!(evs[0].id, 2);
+        assert_eq!(evs[0].shard, 1);
+        assert_eq!(evs[0].dur_us, 0);
+    }
+
+    #[test]
+    fn span_since_measures_a_duration() {
+        let _g = LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let sink = Arc::new(TraceSink::for_shards(1, 16));
+        let h = TraceHandle::new(Arc::clone(&sink), 0);
+        set_sampling(1);
+        let start = Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        h.span_since(5, Stage::Exec, "mixed", start);
+        set_sampling(0);
+        let evs = sink.events();
+        assert_eq!(evs.len(), 1);
+        assert!(evs[0].dur_us >= 1_000, "slept 2ms, recorded {}us", evs[0].dur_us);
+        assert_eq!(evs[0].stage, Stage::Exec);
+        assert_eq!(evs[0].detail, "mixed");
+    }
+}

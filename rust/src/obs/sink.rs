@@ -1,0 +1,241 @@
+//! The bounded, sharded trace sink.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+use std::time::Instant;
+
+use super::TraceEvent;
+
+/// Configuration for the coordinator's trace sink (carried on
+/// `CoordinatorConfig::trace`; `None` there means no sink is built at
+/// all).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Ring capacity **per shard**, in events.  Overflow increments
+    /// the shard's `dropped` counter instead of blocking or silently
+    /// truncating.
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> TraceConfig {
+        TraceConfig { capacity: 65_536 }
+    }
+}
+
+/// One shard's bounded ring: a capacity-bounded event vector plus an
+/// exact overflow counter.  First-`capacity` retention (not
+/// last-writer-wins) keeps the accounting trivially exact:
+/// `pushes == kept + dropped`.
+#[derive(Debug)]
+struct Ring {
+    events: Mutex<Vec<TraceEvent>>,
+    dropped: AtomicU64,
+}
+
+/// Per-shard bounded ring buffers of [`TraceEvent`]s sharing a single
+/// monotonic [`Instant`] epoch, so timestamps from every shard and
+/// worker live on one comparable timeline.
+///
+/// * **Bounded** — each shard keeps at most `capacity` events; an
+///   overflowing push increments that shard's visible `dropped`
+///   counter and returns.  The hot path never blocks on a full ring
+///   and never reallocates past the bound.
+/// * **Poison-tolerant** — every ring lock is taken with
+///   [`PoisonError::into_inner`], exactly like
+///   [`Metrics`](crate::coordinator::Metrics): a worker that panics
+///   while holding a ring lock cannot wedge later pushes or export.
+#[derive(Debug)]
+pub struct TraceSink {
+    epoch: Instant,
+    capacity: usize,
+    rings: Vec<Ring>,
+}
+
+impl TraceSink {
+    /// Build a sink with one ring per intake shard (`shards` is
+    /// clamped to at least 1) of `capacity` events each.
+    pub fn for_shards(shards: usize, capacity: usize) -> TraceSink {
+        let shards = shards.max(1);
+        let capacity = capacity.max(1);
+        TraceSink {
+            epoch: Instant::now(),
+            capacity,
+            rings: (0..shards)
+                .map(|_| Ring { events: Mutex::new(Vec::new()), dropped: AtomicU64::new(0) })
+                .collect(),
+        }
+    }
+
+    /// Number of per-shard rings.
+    pub fn shards(&self) -> usize {
+        self.rings.len()
+    }
+
+    /// Per-shard ring capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Microseconds elapsed on the sink's epoch timeline, now.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Microseconds at which `t` sits on the epoch timeline (0 for
+    /// instants predating the sink).
+    pub fn us_at(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Record one event into its shard's ring (`ev.shard` modulo the
+    /// ring count).  On a full ring the event is counted in `dropped`
+    /// and discarded — the caller never blocks.
+    pub fn push(&self, ev: TraceEvent) {
+        let ring = &self.rings[ev.shard as usize % self.rings.len()];
+        let mut events = ring.events.lock().unwrap_or_else(PoisonError::into_inner);
+        if events.len() < self.capacity {
+            events.push(ev);
+        } else {
+            ring.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// All retained events across every shard, sorted by start time
+    /// (ties broken by shard then worker, for deterministic export).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut all: Vec<TraceEvent> = Vec::new();
+        for ring in &self.rings {
+            let events = ring.events.lock().unwrap_or_else(PoisonError::into_inner);
+            all.extend_from_slice(&events);
+        }
+        all.sort_by_key(|e| (e.start_us, e.shard, e.worker, e.id));
+        all
+    }
+
+    /// The retained events of one shard's ring, in arrival order.
+    pub fn shard_events(&self, shard: usize) -> Vec<TraceEvent> {
+        let ring = &self.rings[shard % self.rings.len()];
+        ring.events.lock().unwrap_or_else(PoisonError::into_inner).clone()
+    }
+
+    /// Total events dropped to ring overflow, across all shards.
+    pub fn dropped(&self) -> u64 {
+        self.rings.iter().map(|r| r.dropped.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Per-shard overflow counts (index = shard).
+    pub fn dropped_per_shard(&self) -> Vec<u64> {
+        self.rings.iter().map(|r| r.dropped.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Discard all retained events and reset the drop counters (the
+    /// replay harness clears warmup noise before the measured window).
+    pub fn clear(&self) {
+        for ring in &self.rings {
+            ring.events.lock().unwrap_or_else(PoisonError::into_inner).clear();
+            ring.dropped.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Aggregate the retained events into a per-stage latency
+    /// breakdown (see [`StageBreakdown`](super::StageBreakdown)).
+    pub fn breakdown(&self) -> super::StageBreakdown {
+        super::StageBreakdown::from_events(&self.events(), self.dropped())
+    }
+
+    /// Render the retained events as Chrome trace-event JSON (see
+    /// [`chrome_trace`](super::chrome_trace)).
+    pub fn chrome_json(&self) -> crate::util::json::Json {
+        super::chrome_trace(&self.events(), &self.dropped_per_shard(), super::sampling())
+    }
+
+    /// Test hook: poison every ring mutex by panicking while holding
+    /// it, simulating a worker that dies mid-span.  Export and pushes
+    /// must keep working afterwards.
+    #[doc(hidden)]
+    pub fn poison_rings_for_test(&self) {
+        for ring in &self.rings {
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _guard = ring.events.lock().unwrap_or_else(PoisonError::into_inner);
+                panic!("obs: deliberate ring poison (test hook)");
+            }));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Stage;
+    use super::*;
+
+    fn ev(id: u64, shard: u32) -> TraceEvent {
+        TraceEvent {
+            id,
+            stage: Stage::Admit,
+            detail: "",
+            shard,
+            worker: 0,
+            start_us: id,
+            dur_us: 0,
+        }
+    }
+
+    #[test]
+    fn overflow_drop_accounting_is_exact() {
+        let sink = TraceSink::for_shards(1, 4);
+        for i in 0..20 {
+            sink.push(ev(i, 0));
+        }
+        assert_eq!(sink.events().len(), 4, "ring keeps exactly capacity");
+        assert_eq!(sink.dropped(), 16, "pushes == kept + dropped");
+        sink.clear();
+        assert!(sink.events().is_empty());
+        assert_eq!(sink.dropped(), 0);
+    }
+
+    #[test]
+    fn shards_are_independent_rings() {
+        let sink = TraceSink::for_shards(2, 2);
+        for i in 0..5 {
+            sink.push(ev(i, 0));
+        }
+        sink.push(ev(100, 1));
+        assert_eq!(sink.shard_events(0).len(), 2);
+        assert_eq!(sink.shard_events(1).len(), 1);
+        assert_eq!(sink.dropped_per_shard(), vec![3, 0]);
+        // events() merges sorted by start time across shards
+        let all = sink.events();
+        assert_eq!(all.len(), 3);
+        assert!(all.windows(2).all(|w| w[0].start_us <= w[1].start_us));
+    }
+
+    #[test]
+    fn out_of_range_shard_wraps_instead_of_panicking() {
+        let sink = TraceSink::for_shards(2, 8);
+        sink.push(ev(0, 7)); // 7 % 2 == 1
+        assert_eq!(sink.shard_events(1).len(), 1);
+    }
+
+    #[test]
+    fn poisoned_rings_still_push_and_export() {
+        let sink = TraceSink::for_shards(2, 8);
+        sink.push(ev(1, 0));
+        sink.poison_rings_for_test();
+        sink.push(ev(2, 1));
+        let all = sink.events();
+        assert_eq!(all.len(), 2, "poison may not wedge push or export");
+        assert_eq!(sink.dropped(), 0);
+        let json = sink.chrome_json().to_string();
+        assert!(json.contains("traceEvents"));
+    }
+
+    #[test]
+    fn epoch_timeline_is_monotonic() {
+        let sink = TraceSink::for_shards(1, 8);
+        let a = sink.now_us();
+        let b = sink.now_us();
+        assert!(b >= a);
+        assert_eq!(sink.us_at(sink.epoch - std::time::Duration::from_secs(1)), 0);
+    }
+}

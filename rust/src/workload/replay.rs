@@ -272,6 +272,10 @@ pub fn replay(coord: &Coordinator, trace: &RequestTrace, cfg: &ReplayConfig) -> 
     }
 
     let submitters = cfg.submitters.max(1);
+    // harness-side spans (stage `harness`, details `submit`/`collect`)
+    // bracket the service's own request spans in the trace, so a slow
+    // replay is attributable to the driver vs the service at a glance
+    let harness = coord.trace_sink().map(|s| crate::obs::TraceHandle::new(s, 0));
     let t0 = Instant::now();
     // submitter w owns events w, w + submitters, w + 2*submitters, ...
     // (interleaved, not chunked: every thread sees the same arrival
@@ -309,7 +313,11 @@ pub fn replay(coord: &Coordinator, trace: &RequestTrace, cfg: &ReplayConfig) -> 
             rxs.extend(h.join().expect("submitter thread panicked"));
         }
     });
+    if let Some(t) = &harness {
+        t.span_since(0, crate::obs::Stage::Harness, "submit", t0);
+    }
 
+    let collect_start = Instant::now();
     let mut latencies = Vec::new();
     let (mut responses, mut shed, mut deadline_exceeded, mut errors, mut lost) = (0, 0, 0, 0, 0);
     for rx in rxs {
@@ -323,6 +331,9 @@ pub fn replay(coord: &Coordinator, trace: &RequestTrace, cfg: &ReplayConfig) -> 
             Ok(Err(_)) => errors += 1,
             Err(_) => lost += 1,
         }
+    }
+    if let Some(t) = &harness {
+        t.span_since(0, crate::obs::Stage::Harness, "collect", collect_start);
     }
     let wall = t0.elapsed();
     latencies.sort_unstable();

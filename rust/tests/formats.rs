@@ -7,14 +7,16 @@
 //! idempotent and the emulated MAC consumes exact grid points.
 
 use tensoremu::formats::{
-    bf16_quantize, bf16_to_f32, f32_to_bf16, f32_to_fp8, f32_to_int8, f32_to_tf32, fp8_quantize,
-    fp8_to_f32, int8_quantize, int8_to_f32, tf32_quantize, tf32_to_f32, Bf16, Fp8E4M3, Int8,
-    Scale, TcFormat, Tf32, FP8_MAX, INT8_QMAX, TF32_MAX,
+    bf16_quantize, bf16_to_f32, f32_to_bf16, f32_to_fp8, f32_to_fp8e5m2, f32_to_int8, f32_to_tf32,
+    fp8_quantize, fp8_to_f32, fp8e5m2_quantize, fp8e5m2_to_f32, int8_quantize, int8_to_f32,
+    tf32_quantize, tf32_to_f32, Bf16, Fp8E4M3, Fp8E5M2, Int8, Scale, TcFormat, Tf32, FP8E5M2_MAX,
+    FP8_MAX, INT8_QMAX, TF32_MAX,
 };
 use tensoremu::gemm::engine::{self, PoolMode};
 use tensoremu::gemm::plan::{GemmDesc, Precision};
 use tensoremu::gemm::{
-    bf16_gemm_scalar, fp8_gemm_scalar, int8_gemm_scalar, tf32_gemm_scalar, Matrix,
+    bf16_gemm_scalar, fp8_gemm_scalar, fp8e5m2_gemm_scalar, int8_gemm_scalar, tf32_gemm_scalar,
+    Matrix,
 };
 use tensoremu::halfprec::{f16_to_f32, f32_to_f16, Half, F16, F16_MIN_POSITIVE_NORMAL};
 use tensoremu::workload::{uniform_matrix, Rng};
@@ -112,6 +114,39 @@ fn fp8_exhaustive_all_256_bit_patterns() {
 }
 
 #[test]
+fn fp8e5m2_exhaustive_all_256_bit_patterns() {
+    // all 256 E5M2 patterns round-trip exactly — unlike E4M3 this
+    // format has real ±∞ (0x7C/0xFC) and three NaN significands per
+    // sign, which quieten to the canonical sign | 0x7E pattern
+    for p in 0..=u8::MAX {
+        let x = fp8e5m2_to_f32(p);
+        let r = f32_to_fp8e5m2(x);
+        let sign = p & 0x80;
+        let exp = p & 0x7C;
+        let sig = p & 0x03;
+        if exp == 0x7C && sig != 0 {
+            assert!(x.is_nan(), "{p:#04x} widened to {x}");
+            assert_eq!(x.is_sign_negative(), sign != 0, "{p:#04x} NaN sign");
+            assert_eq!(r, sign | 0x7E, "{p:#04x} NaN canonicalizes");
+        } else {
+            assert_eq!(r, p, "{p:#04x} round-trip");
+            assert_eq!(x.is_infinite(), exp == 0x7C, "{p:#04x} class");
+            if exp != 0x7C {
+                assert!(x.abs() <= FP8E5M2_MAX, "{p:#04x} within ±57344");
+            }
+        }
+        if p & 0x7F == 0 {
+            assert_eq!(x.to_bits(), u32::from(p) << 24, "{p:#04x} signed zero");
+        }
+        if exp == 0 && sig != 0 {
+            // subnormals sit on the 2^-16 grid below the 2^-14 normal floor
+            assert_eq!(x, f32::from(sig) * if sign != 0 { -1.0 } else { 1.0 } / 65_536.0);
+        }
+        assert_eq!(Fp8E5M2.round_from_f32(x), r, "{p:#04x} trait");
+    }
+}
+
+#[test]
 fn tf32_quantization_is_idempotent_with_canonical_specials() {
     // tf32 has 2^32 storage patterns, so sweep a dense random sample
     // plus every special instead: quantize must be idempotent, clear
@@ -177,6 +212,9 @@ fn format_cases() -> Vec<(Precision, Oracle)> {
     fn fp8(a: &Matrix, b: &Matrix) -> Matrix {
         fp8_gemm_scalar(a, b, None, 1.0, 0.0)
     }
+    fn fp8e5m2(a: &Matrix, b: &Matrix) -> Matrix {
+        fp8e5m2_gemm_scalar(a, b, None, 1.0, 0.0)
+    }
     fn int8_default(a: &Matrix, b: &Matrix) -> Matrix {
         int8_gemm_scalar(a, b, None, 1.0, 0.0, Scale::default().get())
     }
@@ -187,6 +225,7 @@ fn format_cases() -> Vec<(Precision, Oracle)> {
         (Precision::Bf16, bf16 as Oracle),
         (Precision::Tf32, tf32),
         (Precision::Fp8E4M3, fp8),
+        (Precision::Fp8E5M2, fp8e5m2),
         (Precision::Int8 { scale: Scale::default() }, int8_default),
         (Precision::Int8 { scale: Scale::new(0.25) }, int8_quarter),
     ]
@@ -259,6 +298,11 @@ fn quantize_helpers_and_trait_instances_agree_on_random_inputs() {
         assert_eq!(Bf16.quantize(x).to_bits(), bf16_quantize(x).to_bits(), "bf16 {x}");
         assert_eq!(Tf32.quantize(x).to_bits(), tf32_quantize(x).to_bits(), "tf32 {x}");
         assert_eq!(Fp8E4M3.quantize(x).to_bits(), fp8_quantize(x).to_bits(), "fp8 {x}");
+        assert_eq!(
+            Fp8E5M2.quantize(x).to_bits(),
+            fp8e5m2_quantize(x).to_bits(),
+            "fp8e5m2 {x}"
+        );
         assert_eq!(i8f.quantize(x).to_bits(), int8_quantize(x, 0.03).to_bits(), "int8 {x}");
         assert_eq!(
             F16.quantize(x).to_bits(),

@@ -1,0 +1,370 @@
+//! Observability contract suite: the request-lifecycle tracing
+//! subsystem against a live coordinator.
+//!
+//! The contracts pinned here:
+//!
+//! * **Exact overflow accounting** — a full ring drops events into a
+//!   visible counter, never silently: `kept + dropped == pushes`.
+//! * **Capture totality** — at sample rate 1 every admitted request
+//!   records exactly one `admit` and exactly one terminal event
+//!   (`reply`/`shed`/`deadline`/`error`/`shutdown`), under burst,
+//!   shed, poison panic and shutdown — the PR 6 reply-totality
+//!   identity restated over spans.
+//! * **Observation only** — tracing on vs off leaves every reply
+//!   bitwise identical, at every pool mode.
+//! * **Export validity** — the Chrome trace JSON re-parses with
+//!   `util::json` and its accounting block matches the sink.
+//! * **Poison tolerance** — panicking a worker mid-span (simulated via
+//!   the `#[doc(hidden)]` ring poisoner) cannot wedge recording or
+//!   export, mirroring the `Metrics` poison contract.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tensoremu::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, CoordinatorError, GemmRequest, PrecisionMode,
+};
+use tensoremu::gemm::engine::{self, PoolMode};
+use tensoremu::gemm::{fp8e5m2_gemm_scalar, mixed_gemm, Matrix};
+use tensoremu::obs::{self, Stage, TraceConfig, TraceEvent, TraceSink};
+use tensoremu::runtime::{ExecutorServer, Manifest};
+use tensoremu::util::json::Json;
+use tensoremu::workload::{uniform_matrix, Rng};
+
+/// Serializes every test here: the sampling knob (and, for the bitwise
+/// sweep, the engine pool mode) is process-global state.
+static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Engine-only service (empty manifest): every square request rides the
+/// bucketed engine lane, so the suite runs without built artifacts.
+fn engine_only(cfg: CoordinatorConfig) -> Coordinator {
+    let manifest = Manifest { dir: std::path::PathBuf::from("unbuilt"), artifacts: Vec::new() };
+    let executor = ExecutorServer::start(manifest).expect("executor over empty manifest");
+    Coordinator::start_with(cfg, executor).expect("coordinator over empty manifest")
+}
+
+fn traced_cfg() -> CoordinatorConfig {
+    CoordinatorConfig { trace: Some(TraceConfig::default()), ..Default::default() }
+}
+
+fn count(events: &[TraceEvent], stage: Stage) -> usize {
+    events.iter().filter(|e| e.stage == stage).count()
+}
+
+fn terminals(events: &[TraceEvent]) -> usize {
+    events.iter().filter(|e| e.stage.is_terminal()).count()
+}
+
+#[test]
+fn ring_overflow_drop_accounting_is_exact() {
+    // no coordinator needed: push straight at a tiny sink and account
+    // every event — kept + dropped == pushes, per shard and in total
+    let sink = TraceSink::for_shards(2, 4);
+    let pushes_per_shard = 11u64;
+    for shard in 0..2u32 {
+        for i in 0..pushes_per_shard {
+            sink.push(TraceEvent {
+                id: i,
+                stage: Stage::Admit,
+                detail: "",
+                shard,
+                worker: 0,
+                start_us: i,
+                dur_us: 0,
+            });
+        }
+    }
+    assert_eq!(sink.events().len(), 8, "2 shards x capacity 4 kept");
+    assert_eq!(sink.dropped(), 2 * (pushes_per_shard - 4));
+    for (shard, d) in sink.dropped_per_shard().iter().enumerate() {
+        assert_eq!(*d, pushes_per_shard - 4, "shard {shard}");
+        assert_eq!(
+            sink.shard_events(shard).len() as u64 + d,
+            pushes_per_shard,
+            "shard {shard}: kept + dropped == pushes"
+        );
+    }
+    // the breakdown and export surface the same exact count
+    assert_eq!(sink.breakdown().dropped, sink.dropped());
+}
+
+#[test]
+fn sample_rate_one_captures_every_admitted_request() {
+    let _g = lock();
+    obs::set_sampling(1);
+    let c = engine_only(traced_cfg());
+    let mut rng = Rng::new(41);
+    let n_requests = 24u64;
+    let mut rxs = Vec::new();
+    for i in 1..=n_requests {
+        let n = [16usize, 24, 33][(i % 3) as usize];
+        let a = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, n, n, -1.0, 1.0);
+        rxs.push(c.submit(GemmRequest::new(i, a, b)));
+    }
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+    }
+    let sink = c.trace_sink().expect("traced service exposes its sink");
+    c.shutdown();
+    obs::set_sampling(0);
+    let events = sink.events();
+    assert_eq!(sink.dropped(), 0, "default capacity must not drop this load");
+    assert_eq!(count(&events, Stage::Admit) as u64, n_requests, "one admit per request");
+    assert_eq!(count(&events, Stage::Reply) as u64, n_requests, "one reply per request");
+    assert_eq!(terminals(&events) as u64, n_requests, "admits == terminals");
+    // the engine lane leaves its whole pipeline in the trace
+    assert_eq!(count(&events, Stage::Queued) as u64, n_requests);
+    assert_eq!(count(&events, Stage::Bucketed) as u64, n_requests);
+    assert!(count(&events, Stage::Flush) >= 1, "at least one bucket flushed");
+    assert!(count(&events, Stage::Exec) >= 1, "plan exec spans recorded");
+    assert!(count(&events, Stage::Epilogue) >= 1, "batched epilogue spans recorded");
+    // every request-scoped event carries its request id, and timestamps
+    // are monotonic from one epoch (sorted by construction)
+    for w in events.windows(2) {
+        assert!(w[0].start_us <= w[1].start_us, "events sorted by start");
+    }
+}
+
+#[test]
+fn burst_shed_poison_and_shutdown_keep_span_totality_exact() {
+    let _g = lock();
+    obs::set_sampling(1);
+
+    // phase 1 — deterministic sheds + shutdown sheds: a never-flushing
+    // service with a tiny admission budget.  Whatever is admitted stays
+    // queued (huge batch, huge wait), so every submit past the cap is
+    // shed typed, and shutdown answers the queued remainder.
+    let c = engine_only(CoordinatorConfig {
+        queue_cap: 4,
+        shards: 1,
+        batcher: BatcherConfig {
+            max_batch: 100_000,
+            max_wait: Duration::from_secs(100_000),
+            ..Default::default()
+        },
+        ..traced_cfg()
+    });
+    let mut rng = Rng::new(43);
+    let mut rxs = Vec::new();
+    for i in 1..=12u64 {
+        let a = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+        rxs.push(c.submit(GemmRequest::new(i, a, b)));
+    }
+    let sink = c.trace_sink().unwrap();
+    c.shutdown();
+    let mut outcomes = (0u64, 0u64); // (shed, shutdown)
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+            Err(CoordinatorError::Shed { .. }) => outcomes.0 += 1,
+            Err(CoordinatorError::ShuttingDown) => outcomes.1 += 1,
+            other => panic!("expected shed or shutdown, got {other:?}"),
+        }
+    }
+    assert_eq!(outcomes, (8, 4), "cap 4: 4 queued to shutdown, 8 shed");
+    let events = sink.events();
+    assert_eq!(count(&events, Stage::Admit), 12);
+    assert_eq!(count(&events, Stage::Shed), 8);
+    assert_eq!(count(&events, Stage::Shutdown), 4);
+    assert_eq!(terminals(&events), 12, "admits == terminals under shed + shutdown");
+    assert_eq!(sink.dropped(), 0);
+
+    // phase 2 — poison panic + expired deadline + healthy traffic on a
+    // flushing service: the panic becomes a typed error with an `error`
+    // terminal, the expired request a `deadline` terminal, and healthy
+    // replies stay bitwise equal to the oracle while traced.
+    let c = engine_only(traced_cfg());
+    let pa = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let pb = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let rx_poison = c.submit(GemmRequest::new(100, pa, pb).with_poison());
+    let da = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+    let db = uniform_matrix(&mut rng, 16, 16, -1.0, 1.0);
+    let expired = Instant::now() - Duration::from_secs(1);
+    let rx_dead = c.submit(GemmRequest::new(101, da, db).with_deadline(expired));
+    let ha = uniform_matrix(&mut rng, 33, 33, -1.0, 1.0);
+    let hb = uniform_matrix(&mut rng, 33, 33, -1.0, 1.0);
+    let rx_ok = c.submit(GemmRequest::new(102, ha.clone(), hb.clone()));
+    match rx_poison.recv_timeout(Duration::from_secs(30)).unwrap() {
+        Err(CoordinatorError::Internal(msg)) => assert!(msg.contains("poison"), "{msg}"),
+        other => panic!("expected Internal, got {other:?}"),
+    }
+    assert_eq!(
+        rx_dead.recv_timeout(Duration::from_secs(30)).unwrap().unwrap_err(),
+        CoordinatorError::DeadlineExceeded
+    );
+    let ok = rx_ok.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+    assert_eq!(ok.c, mixed_gemm(&ha, &hb, None, 1.0, 0.0), "traced reply bitwise == oracle");
+    let sink = c.trace_sink().unwrap();
+    c.shutdown();
+    obs::set_sampling(0);
+    let events = sink.events();
+    assert_eq!(count(&events, Stage::Admit), 3);
+    assert_eq!(count(&events, Stage::Error), 1, "poison panic terminal");
+    assert_eq!(count(&events, Stage::Deadline), 1, "expired deadline terminal");
+    assert_eq!(count(&events, Stage::Reply), 1);
+    assert_eq!(terminals(&events), 3, "admits == terminals under panic + deadline");
+}
+
+#[test]
+fn tracing_toggle_keeps_replies_bitwise_identical_across_pool_modes() {
+    // the observation-only contract: the same inputs through an
+    // untraced and a traced service produce bitwise-identical results,
+    // at both pool modes, including the new fp8e5m2 format mode
+    let _g = lock();
+    let ambient = engine::pool_mode();
+    let mut rng = Rng::new(47);
+    let inputs: Vec<(Matrix, Matrix, Option<PrecisionMode>)> = (0..12)
+        .map(|i| {
+            let n = [16usize, 24, 33][i % 3];
+            let mode = match i % 4 {
+                0 => None,
+                1 => Some(PrecisionMode::Bf16),
+                2 => Some(PrecisionMode::Fp8E5M2),
+                _ => Some(PrecisionMode::Tf32),
+            };
+            (
+                uniform_matrix(&mut rng, n, n, -1.0, 1.0),
+                uniform_matrix(&mut rng, n, n, -1.0, 1.0),
+                mode,
+            )
+        })
+        .collect();
+    let run = |cfg: CoordinatorConfig| -> Vec<Matrix> {
+        let c = engine_only(cfg);
+        let rxs: Vec<_> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, (a, b, mode))| {
+                let mut req = GemmRequest::new(i as u64 + 1, a.clone(), b.clone());
+                if let Some(m) = mode {
+                    req = req.with_mode(*m);
+                }
+                c.submit(req)
+            })
+            .collect();
+        let out = rxs
+            .into_iter()
+            .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap().c)
+            .collect();
+        c.shutdown();
+        out
+    };
+    for pm in [PoolMode::Scoped, PoolMode::Persistent] {
+        engine::set_pool_mode(pm);
+        obs::set_sampling(0);
+        let plain = run(CoordinatorConfig::default());
+        obs::set_sampling(1);
+        let traced = run(traced_cfg());
+        obs::set_sampling(0);
+        assert_eq!(plain, traced, "tracing changed a reply bitwise ({pm:?})");
+    }
+    engine::set_pool_mode(ambient);
+    // and the fp8e5m2 lane itself is oracle-exact: spot-check one pair
+    let (a, b, _) = &inputs[2];
+    obs::set_sampling(1);
+    let c = engine_only(traced_cfg());
+    let resp = c
+        .gemm_with(GemmRequest::new(0, a.clone(), b.clone()).with_mode(PrecisionMode::Fp8E5M2))
+        .unwrap();
+    assert_eq!(resp.c, fp8e5m2_gemm_scalar(a, b, None, 1.0, 0.0));
+    c.shutdown();
+    obs::set_sampling(0);
+}
+
+#[test]
+fn chrome_export_parses_with_util_json_and_accounts_exactly() {
+    let _g = lock();
+    obs::set_sampling(1);
+    let c = engine_only(traced_cfg());
+    let mut rng = Rng::new(53);
+    let mut rxs = Vec::new();
+    for i in 1..=8u64 {
+        let a = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+        let b = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+        rxs.push(c.submit(GemmRequest::new(i, a, b)));
+    }
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+    }
+    let sink = c.trace_sink().unwrap();
+    c.shutdown();
+    obs::set_sampling(0);
+    let doc = sink.chrome_json();
+    let parsed = Json::parse(&format!("{doc}")).expect("chrome export re-parses");
+    let arr = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    let data: Vec<&Json> = arr
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) != Some("M"))
+        .collect();
+    let meta = arr.len() - data.len();
+    assert_eq!(data.len(), sink.events().len(), "one data event per recorded event");
+    assert!(meta >= 2, "process/thread name metadata present");
+    for e in &data {
+        assert!(e.get("ts").and_then(Json::as_f64).is_some(), "every event has ts");
+        let ph = e.get("ph").and_then(Json::as_str).unwrap();
+        match ph {
+            "X" => assert!(e.get("dur").and_then(Json::as_f64).is_some(), "span has dur"),
+            "i" => assert_eq!(e.get("s").and_then(Json::as_str), Some("t")),
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    // the non-standard accounting block matches the sink exactly
+    let acct = parsed.get("tensoremu").expect("accounting block");
+    assert_eq!(acct.get("events").and_then(Json::as_usize), Some(sink.events().len()));
+    let dropped = acct.get("dropped").and_then(Json::as_arr).expect("per-shard drops");
+    assert_eq!(dropped.len(), sink.shards());
+    assert!(dropped.iter().all(|d| d.as_f64() == Some(0.0)), "nothing dropped here");
+}
+
+#[test]
+fn poisoned_rings_do_not_wedge_recording_or_export() {
+    let _g = lock();
+    obs::set_sampling(1);
+    // a worker that panics while holding a ring lock poisons the mutex;
+    // recording and every exporter must shrug it off, like Metrics
+    let sink = Arc::new(TraceSink::for_shards(2, 16));
+    sink.push(TraceEvent {
+        id: 1,
+        stage: Stage::Admit,
+        detail: "",
+        shard: 0,
+        worker: 0,
+        start_us: 1,
+        dur_us: 0,
+    });
+    sink.poison_rings_for_test();
+    sink.push(TraceEvent {
+        id: 2,
+        stage: Stage::Reply,
+        detail: "",
+        shard: 0,
+        worker: 0,
+        start_us: 2,
+        dur_us: 5,
+    });
+    let events = sink.events();
+    assert_eq!(events.len(), 2, "pushes before and after the poison both kept");
+    assert!(sink.breakdown().row(Stage::Reply).is_some());
+    assert!(Json::parse(&format!("{}", sink.chrome_json())).is_ok());
+
+    // and end to end: poisoning a live service's rings mid-traffic
+    // cannot wedge later requests or the final export
+    let c = engine_only(traced_cfg());
+    let mut rng = Rng::new(59);
+    let a = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    let b = uniform_matrix(&mut rng, 24, 24, -1.0, 1.0);
+    c.gemm(a.clone(), b.clone()).unwrap();
+    let live = c.trace_sink().unwrap();
+    live.poison_rings_for_test();
+    let resp = c.gemm(a.clone(), b.clone()).unwrap();
+    assert_eq!(resp.c, mixed_gemm(&a, &b, None, 1.0, 0.0));
+    c.shutdown();
+    obs::set_sampling(0);
+    assert!(count(&live.events(), Stage::Reply) >= 2, "replies recorded across the poison");
+    assert!(Json::parse(&format!("{}", live.chrome_json())).is_ok());
+}
